@@ -1,0 +1,123 @@
+//! End-to-end driver: every layer of the system composing on a real
+//! workload.
+//!
+//! 1. **Layer 3 serving path** — a [`kway::coordinator::CacheService`]
+//!    (router + worker pool) over the wait-free KW-WFSC cache serves
+//!    batched get/put requests from concurrent clients replaying the
+//!    `wiki_a` trace model; we report throughput, latency percentiles and
+//!    the measured hit ratio.
+//! 2. **Layers 1–2 analytics path** — the AOT-compiled XLA artifact
+//!    (Pallas set-scan kernels inside a lax.scan cache simulator) replays
+//!    the *same* trace through PJRT and predicts the hit ratio; we check
+//!    the prediction against both the native set simulator and the live
+//!    service measurement.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cache_server
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use kway::coordinator::{CacheService, ServiceConfig};
+use kway::kway::KwWfsc;
+use kway::policy::Policy;
+use kway::runtime::XlaRuntime;
+use kway::sim::xla::{NativeSetSim, XlaSim};
+use kway::trace::paper;
+use kway::Cache;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("KWAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let clients = 4usize;
+    let batch = 32usize;
+
+    // ---- Layers 1–2: load the AOT artifacts and bind the simulator.
+    let rt = XlaRuntime::load(&artifacts)?;
+    let sim = XlaSim::new(&rt, "cache_sim_k8")?;
+    let capacity = sim.capacity(); // 2^11, the paper's small-cache setup
+    println!(
+        "loaded {} artifacts on {} (cache_sim: {} sets x {} ways)",
+        rt.entry_names().len(),
+        rt.platform(),
+        sim.num_sets,
+        sim.ways
+    );
+
+    // The workload: the Wikipedia trace model.
+    let trace = Arc::new(paper::build("wiki_a", 400_000, 42).unwrap());
+    println!("trace={} accesses={} unique={}", trace.name, trace.len(), trace.unique_keys());
+
+    // ---- Offline prediction through PJRT (python is NOT involved).
+    let t0 = Instant::now();
+    let predicted = sim.run(&trace)?;
+    let xla_secs = t0.elapsed().as_secs_f64();
+    let native = NativeSetSim::new(sim.num_sets, sim.ways).run(&trace.keys);
+    println!(
+        "XLA cache_sim: {} hits / {} accesses = {:.4} ({:.2} Mkeys/s); native agrees: {}",
+        predicted.hits,
+        predicted.accesses,
+        predicted.hits as f64 / predicted.accesses as f64,
+        predicted.accesses as f64 / xla_secs / 1e6,
+        predicted.hits == native.hits
+    );
+    assert_eq!(predicted.hits, native.hits, "layer 1/2 vs layer 3 divergence");
+
+    // ---- Layer 3: serve the same trace through the cache service.
+    let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(capacity, sim.ways, Policy::Lru));
+    let service = Arc::new(CacheService::start(cache, ServiceConfig { workers: 2 }));
+    let next = Arc::new(AtomicUsize::new(0));
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let service = service.clone();
+            let trace = trace.clone();
+            let next = next.clone();
+            scope.spawn(move || loop {
+                let start = next.fetch_add(batch, Ordering::Relaxed);
+                if start >= trace.len() {
+                    return;
+                }
+                let end = (start + batch).min(trace.len());
+                let keys: Vec<u64> = trace.keys[start..end].to_vec();
+                let results = service.get_batch(keys.clone());
+                for (key, value) in keys.into_iter().zip(results) {
+                    if value.is_none() {
+                        service.put(key, key);
+                    }
+                }
+            });
+        }
+    });
+    let serve_secs = t0.elapsed().as_secs_f64();
+
+    let m = service.metrics();
+    let measured_ratio = m.ops.hit_ratio();
+    println!(
+        "\nservice: {} requests in {:.2}s = {:.2} Mops/s",
+        trace.len(),
+        serve_secs,
+        trace.len() as f64 / serve_secs / 1e6
+    );
+    println!("{}", m.report());
+
+    // ---- Cross-check: the XLA prediction must match the service's
+    // measured hit ratio (same geometry, same LRU semantics; the service
+    // replays the identical access sequence, modulo client interleaving
+    // which perturbs LRU order only slightly).
+    let predicted_ratio = predicted.hits as f64 / predicted.accesses as f64;
+    println!(
+        "\npredicted (XLA) hit ratio = {predicted_ratio:.4}, measured (service) = {measured_ratio:.4}"
+    );
+    let gap = (predicted_ratio - measured_ratio).abs();
+    assert!(
+        gap < 0.03,
+        "offline prediction and live measurement diverged by {gap:.4}"
+    );
+    println!("end-to-end OK: all three layers agree.");
+    Arc::try_unwrap(service).ok().map(|s| s.shutdown());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Reproduce a hit-ratio figure (Figures 4–13 style): all four subfigure
+//! series on one trace, across cache sizes.
+//!
+//! ```bash
+//! cargo run --release --example hitratio_sweep -- oltp
+//! ```
+
+use kway::sim;
+use kway::trace::paper;
+
+fn main() {
+    let trace_name = std::env::args().nth(1).unwrap_or_else(|| "oltp".into());
+    let len = 400_000;
+    let trace = paper::build(&trace_name, len, 42)
+        .unwrap_or_else(|| panic!("unknown trace model {trace_name:?} (see `kway info`)"));
+    println!(
+        "trace={} accesses={} unique={}",
+        trace.name,
+        trace.len(),
+        trace.unique_keys()
+    );
+
+    let sizes = [512usize, 2048, 8192];
+    let series: [(&str, Vec<sim::Config>); 4] = [
+        ("(a) LRU", sim::lru_series()),
+        ("(b) LFU + TinyLFU admission", sim::lfu_tlfu_series()),
+        ("(c) products", sim::products_series(8)),
+        ("(d) Hyperbolic", sim::hyperbolic_series(false)),
+    ];
+
+    for (title, configs) in series {
+        println!("\n== {title} ==");
+        print!("{:34}", "config\\cache size");
+        for s in sizes {
+            print!(" {s:>8}");
+        }
+        println!();
+        let per_size: Vec<Vec<sim::Row>> =
+            sizes.iter().map(|&s| sim::sweep(&trace, s, &configs, 1)).collect();
+        for (i, cfg) in configs.iter().enumerate() {
+            print!("{:34}", cfg.label());
+            for rows in &per_size {
+                print!(" {:8.4}", rows[i].hit_ratio);
+            }
+            println!();
+        }
+    }
+}

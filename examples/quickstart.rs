@@ -1,0 +1,51 @@
+//! Quickstart: build a k-way cache, use it, and see the paper's point.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use kway::kway::{build, Variant};
+use kway::policy::Policy;
+use kway::sim;
+use kway::trace::paper;
+
+fn main() {
+    // 1. A concurrent 8-way LRU cache with 2^11 entries (the paper's
+    //    small-trace configuration) — wait-free separate-counters variant.
+    let cache = build(Variant::Wfsc, 2048, 8, Policy::Lru);
+    cache.put(1, 100);
+    cache.put(2, 200);
+    assert_eq!(cache.get(1), Some(100));
+    assert_eq!(cache.get(3), None);
+    println!("{}: len={} capacity={}", cache.name(), cache.len(), cache.capacity());
+
+    // 2. Use it from many threads with zero synchronization setup —
+    //    operations on different sets never contend (the paper's §1).
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let cache = &cache;
+            s.spawn(move || {
+                for i in 0..50_000u64 {
+                    let key = t * 1_000_000 + i % 4096;
+                    if cache.get(key).is_none() {
+                        cache.put(key, key);
+                    }
+                }
+            });
+        }
+    });
+    println!("after 200k concurrent ops: len={} (≤ capacity)", cache.len());
+
+    // 3. The headline hit-ratio claim: 8-way ≈ fully associative.
+    let trace = paper::build("oltp", 300_000, 42).unwrap();
+    let configs = [
+        sim::Config::KWay { variant: Variant::Wfsc, ways: 8, policy: Policy::Lru, tlfu: false },
+        sim::Config::FullLru { tlfu: false },
+    ];
+    println!("\nhit ratio on the OLTP model (capacity 2048):");
+    for row in sim::sweep(&trace, 2048, &configs, 1) {
+        println!("  {:12} {:.4}", row.label, row.hit_ratio);
+    }
+    println!("\n→ limited associativity costs almost nothing in hit ratio,");
+    println!("  and each operation is a wait-free scan of one 8-way set.");
+}

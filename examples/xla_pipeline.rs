@@ -1,0 +1,77 @@
+//! The Layers 1–2 pipeline from the rust side: load every AOT artifact,
+//! exercise each kernel family with real inputs, and time them.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_pipeline
+//! ```
+
+use kway::runtime::{lit_i32, to_vec, XlaRuntime};
+use kway::sim::xla::XlaSim;
+use kway::trace::paper;
+use kway::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("KWAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = XlaRuntime::load(&dir)?;
+    println!("platform={} producer={}", rt.platform(), rt.manifest().producer);
+
+    // --- victim_select: batched eviction decisions (Pallas argmin).
+    for name in ["victim_select_lru_k4", "victim_select_lru_k8", "victim_select_lru_k16"] {
+        let spec = rt.manifest().entry(name).unwrap();
+        let (b, k) = (spec.require("batch")? as usize, spec.require("k")? as usize);
+        let mut rng = Rng::new(1);
+        let counters: Vec<i32> = (0..b * k).map(|_| rng.below(1 << 30) as i32).collect();
+        let arg = lit_i32(&counters, &[b as i64, k as i64])?;
+        let t = Instant::now();
+        let iters = 20;
+        let mut out = Vec::new();
+        for _ in 0..iters {
+            out = rt.execute(name, std::slice::from_ref(&arg))?;
+        }
+        let per = t.elapsed().as_secs_f64() / iters as f64;
+        let victims = to_vec::<i32>(&out[0])?;
+        println!(
+            "{name}: {b} sets/batch, {:.1} Msets/s (first victims: {:?})",
+            b as f64 / per / 1e6,
+            &victims[..4]
+        );
+    }
+
+    // --- sketch estimate + update round trip.
+    let spec = rt.manifest().entry("sketch_estimate").unwrap();
+    let (d, w, b) = (
+        spec.require("depth")? as usize,
+        spec.require("width")? as usize,
+        spec.require("batch")? as usize,
+    );
+    let mut rng = Rng::new(2);
+    let rows = vec![0i32; d * w];
+    let idx: Vec<i32> = (0..b * d).map(|_| rng.below(w as u64) as i32).collect();
+    let rows_lit = lit_i32(&rows, &[d as i64, w as i64])?;
+    let idx_lit = lit_i32(&idx, &[b as i64, d as i64])?;
+    let updated = rt.execute("sketch_update", &[rows_lit, idx_lit])?;
+    let est = rt.execute(
+        "sketch_estimate",
+        &[updated.into_iter().next().unwrap(), lit_i32(&idx, &[b as i64, d as i64])?],
+    )?;
+    let estimates = to_vec::<i32>(&est[0])?;
+    let nonzero = estimates.iter().filter(|&&e| e > 0).count();
+    println!("sketch: update+estimate round trip, {nonzero}/{b} keys counted");
+    assert!(nonzero > b / 2, "sketch should count most updated keys");
+
+    // --- the full cache simulator on a trace model.
+    let sim = XlaSim::new(&rt, "cache_sim_k8")?;
+    for trace_name in ["oltp", "wiki_a", "w3"] {
+        let trace = paper::build(trace_name, 4 * sim.chunk, 7).unwrap();
+        let t = Instant::now();
+        let stats = sim.run(&trace)?;
+        println!(
+            "cache_sim[{trace_name}]: hit ratio {:.4} at {:.2} Mkeys/s",
+            stats.hits as f64 / stats.accesses as f64,
+            stats.accesses as f64 / t.elapsed().as_secs_f64() / 1e6
+        );
+    }
+    println!("xla pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO text + manifest.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla_extension 0.5.1
+behind the published ``xla`` rust crate rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and rust/src/runtime/).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, whatever the arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, spec: dict) -> str:
+    lowered = jax.jit(spec["fn"]).lower(*spec["specs"])
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entry names"
+    )
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    entries = model.entry_points()
+    if args.only:
+        wanted = set(args.only.split(","))
+        missing = wanted - entries.keys()
+        if missing:
+            print(f"unknown entries: {sorted(missing)}", file=sys.stderr)
+            return 1
+        entries = {k: v for k, v in entries.items() if k in wanted}
+
+    manifest = {
+        "producer": f"jax {jax.__version__}",
+        "entries": [],
+    }
+    for name, spec in entries.items():
+        text = lower_entry(name, spec)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": spec["kind"],
+                "params": spec["params"],
+            }
+        )
+        print(f"  lowered {name:34s} -> {fname} ({len(text)/1024:.0f} KiB)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer 1 correctness spec).
+
+Every kernel in this package must agree exactly with the corresponding
+function here; ``python/tests/test_kernels.py`` sweeps shapes and values
+with hypothesis. These references are also the executable specification of
+the semantics the rust native simulator mirrors (ties break to the lowest
+way index, empty ways carry counter 0, fingerprint 0 means empty).
+"""
+
+import jax.numpy as jnp
+
+
+def victim_select_ref(counters):
+    """LRU/LFU/FIFO victim: per-set argmin over counters.
+
+    counters: i32[B, K] -> i32[B] (first minimal index wins).
+    """
+    return jnp.argmin(counters, axis=-1).astype(jnp.int32)
+
+
+def victim_select_hyperbolic_ref(counts, t0s, now):
+    """Hyperbolic victim: per-set argmin of count / max(now - t0, 1).
+
+    counts, t0s: i32[B, K]; now: i32 scalar -> i32[B].
+    """
+    age = jnp.maximum(now - t0s, 1).astype(jnp.float32)
+    priority = counts.astype(jnp.float32) / age
+    return jnp.argmin(priority, axis=-1).astype(jnp.int32)
+
+
+def set_probe_ref(fps, probes):
+    """Fingerprint probe: index of the way whose fingerprint matches, or -1.
+
+    fps: i32[B, K]; probes: i32[B] -> i32[B].
+    """
+    match = fps == probes[:, None]
+    idx = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    found = jnp.any(match, axis=-1)
+    return jnp.where(found, idx, jnp.int32(-1))
+
+
+def sketch_estimate_ref(rows, indices):
+    """Count-min estimate: min over depth of rows[d, indices[b, d]].
+
+    rows: i32[D, W]; indices: i32[B, D] -> i32[B].
+    """
+    d = rows.shape[0]
+    gathered = jnp.stack([rows[j][indices[:, j]] for j in range(d)], axis=-1)
+    return jnp.min(gathered, axis=-1).astype(jnp.int32)
+
+
+def set_step_ref(row_fps, row_counters, fp, time, valid):
+    """One sequential cache access against a single set (the scan body of
+    the cache simulator): probe; on hit refresh the counter, on miss
+    replace the victim (min counter; empty ways are 0 and therefore
+    preferred). Returns (new_fps, new_counters, hit).
+
+    row_fps, row_counters: i32[K]; fp, time: i32 scalars; valid: bool.
+    """
+    match = row_fps == fp
+    hit = jnp.any(match) & valid
+    victim = jnp.argmin(row_counters)
+    pos = jnp.where(hit, jnp.argmax(match), victim)
+    new_fps = row_fps.at[pos].set(fp)
+    new_counters = row_counters.at[pos].set(time)
+    new_fps = jnp.where(valid, new_fps, row_fps)
+    new_counters = jnp.where(valid, new_counters, row_counters)
+    return new_fps, new_counters, hit
+
+
+def cache_sim_chunk_ref(fps, counters, time, set_idx, key_fp, valid):
+    """Reference chunk simulator (plain python loop; test-only).
+
+    fps, counters: i32[S, K]; time: i32; set_idx, key_fp, valid: i32[C].
+    Returns (fps, counters, time, hits).
+    """
+    import numpy as np
+
+    fps = np.array(fps)
+    counters = np.array(counters)
+    time = int(time)
+    hits = 0
+    for s, fp, v in zip(np.array(set_idx), np.array(key_fp), np.array(valid)):
+        if not v:
+            continue
+        time += 1
+        row_f = fps[s]
+        row_c = counters[s]
+        matches = np.nonzero(row_f == fp)[0]
+        if len(matches) > 0:
+            row_c[matches[0]] = time
+            hits += 1
+        else:
+            victim = int(np.argmin(row_c))
+            row_f[victim] = fp
+            row_c[victim] = time
+    return fps, counters, time, hits

@@ -1,0 +1,200 @@
+"""Layer-1 Pallas kernels: the set-scan hot spots of the k-way cache.
+
+The paper's §3 observation is that every policy reduces to short
+contiguous scans over a set's fingerprints and counters. On TPU hardware
+those scans map onto the VPU lanes: a set's K ways occupy the minor (lane)
+dimension of a ``[sets_per_block, K]`` VMEM tile, so the probe is a
+lane-wise compare + reduce and victim selection is a lane-wise argmin —
+the vector analogue of the thread-per-set parallelism the paper exploits
+on CPUs (DESIGN.md §Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True``: that makes ``pallas_call``
+trace to portable HLO that the CPU PJRT client (and the rust runtime) can
+execute; on a real TPU the same BlockSpecs drive the Mosaic lowering.
+
+Shapes are static at lowering time; `aot.py` emits one artifact per
+(kernel, K, batch) combination listed in the manifest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows per grid step; 128 keeps a (128, K<=128) i32 tile well under
+# VMEM limits (128*128*4 = 64 KiB) while filling the 8x128 VPU.
+BLOCK_B = 128
+
+
+def _victim_kernel(counters_ref, out_ref):
+    """Per-row argmin over the K (lane) dimension."""
+    out_ref[...] = jnp.argmin(counters_ref[...], axis=-1).astype(jnp.int32)
+
+
+def victim_select(counters):
+    """Victim way per set: i32[B, K] -> i32[B] (LRU/LFU/FIFO semantics:
+    evict the minimal counter, ties to the lowest way)."""
+    b, k = counters.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    return pl.pallas_call(
+        _victim_kernel,
+        grid=(b // BLOCK_B,),
+        in_specs=[pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(counters)
+
+
+def _victim_hyperbolic_kernel(counts_ref, t0s_ref, now_ref, out_ref):
+    """Per-row argmin of count / max(now - t0, 1)."""
+    now = now_ref[0]
+    age = jnp.maximum(now - t0s_ref[...], 1).astype(jnp.float32)
+    priority = counts_ref[...].astype(jnp.float32) / age
+    out_ref[...] = jnp.argmin(priority, axis=-1).astype(jnp.int32)
+
+
+def victim_select_hyperbolic(counts, t0s, now):
+    """Hyperbolic victim way per set: i32[B,K], i32[B,K], i32[] -> i32[B]."""
+    b, k = counts.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    now_arr = jnp.reshape(now.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        _victim_hyperbolic_kernel,
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(counts, t0s, now_arr)
+
+
+def _probe_kernel(fps_ref, probes_ref, out_ref):
+    """Per-row fingerprint match: way index or -1."""
+    match = fps_ref[...] == probes_ref[...][:, None]
+    idx = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    found = jnp.any(match, axis=-1)
+    out_ref[...] = jnp.where(found, idx, jnp.int32(-1))
+
+
+def set_probe(fps, probes):
+    """Probe each set's fingerprints: i32[B,K], i32[B] -> i32[B]."""
+    b, k = fps.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(fps, probes)
+
+
+def _step_kernel(fps_ref, counters_ref, fp_ref, time_ref, valid_ref,
+                 out_fps_ref, out_counters_ref, hit_ref):
+    """One sequential access against one set (the cache_sim scan body):
+    probe the fingerprint lane-vector, refresh on hit, replace the argmin
+    victim on miss. This is the paper's entire per-operation cache logic
+    in one VPU-friendly kernel."""
+    row_f = fps_ref[...]
+    row_c = counters_ref[...]
+    fp = fp_ref[0]
+    time = time_ref[0]
+    valid = valid_ref[0] != 0
+    match = row_f == fp
+    hit = jnp.any(match) & valid
+    victim = jnp.argmin(row_c)
+    pos = jnp.where(hit, jnp.argmax(match), victim)
+    oh = jax.nn.one_hot(pos, row_f.shape[-1], dtype=jnp.bool_)
+    write = oh & valid
+    out_fps_ref[...] = jnp.where(write, fp, row_f)
+    out_counters_ref[...] = jnp.where(write, time, row_c)
+    hit_ref[...] = hit.astype(jnp.int32).reshape(1)
+
+
+def set_step(row_fps, row_counters, fp, time, valid):
+    """Single-set access step: i32[K], i32[K], i32[], i32[], i32[] ->
+    (i32[K], i32[K], i32[1])."""
+    k = row_fps.shape[0]
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(
+        row_fps,
+        row_counters,
+        jnp.reshape(fp, (1,)),
+        jnp.reshape(time, (1,)),
+        jnp.reshape(valid, (1,)),
+    )
+
+
+def _batch_step_kernel(fps_ref, counters_ref, fp_ref, valid_ref, time_ref,
+                       out_fps_ref, out_counters_ref, hits_ref):
+    """One access against EVERY set simultaneously — the set-parallel
+    formulation of the paper's independence argument. Each row of the
+    [sets_per_block, K] tile is one set; the lane dimension holds the K
+    ways; rows proceed in lock-step on the VPU."""
+    fps = fps_ref[...]            # [B, K]
+    counters = counters_ref[...]  # [B, K]
+    fp = fp_ref[...]              # [B]
+    valid = valid_ref[...] != 0   # [B]
+    time = time_ref[0]
+    match = fps == fp[:, None]
+    hit = jnp.any(match, axis=-1) & valid
+    victim = jnp.argmin(counters, axis=-1)
+    pos = jnp.where(hit, jnp.argmax(match, axis=-1).astype(victim.dtype), victim)
+    oh = jax.nn.one_hot(pos, fps.shape[-1], dtype=jnp.bool_)
+    write = oh & valid[:, None]
+    out_fps_ref[...] = jnp.where(write, fp[:, None], fps)
+    out_counters_ref[...] = jnp.where(write, time, counters)
+    hits_ref[...] = hit.astype(jnp.int32)
+
+
+def batch_step(fps, counters, fp, valid, time):
+    """One access per set, across all sets: i32[S,K], i32[S,K], i32[S],
+    i32[S], i32[] -> (i32[S,K], i32[S,K], i32[S] hit-mask)."""
+    s, k = fps.shape
+    block = min(BLOCK_B, s)
+    assert s % block == 0, f"sets {s} must be a multiple of {block}"
+    time_arr = jnp.reshape(time.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        _batch_step_kernel,
+        grid=(s // block,),
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, k), jnp.int32),
+            jax.ShapeDtypeStruct((s, k), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+        ),
+        interpret=True,
+    )(fps, counters, fp, valid, time_arr)
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # pragma: no cover - import-time sanity hook
+    return True

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: TinyLFU count-min sketch estimate.
+
+The admission filter's read path — ``min over D rows of row[d][h_d(key)]``
+— is a gather plus a lane reduction. The batch dimension maps onto the
+grid; each grid step gathers `BLOCK_B × D` counters from the sketch rows
+held in VMEM.
+
+The sketch *update* (saturating increment) stays in Layer 2 (`model.py`)
+as a scatter, where XLA's native scatter lowering is already optimal; the
+estimate is the per-access hot spot the paper cares about.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _estimate_kernel(rows_ref, idx_ref, out_ref):
+    rows = rows_ref[...]            # [D, W]
+    idx = idx_ref[...]              # [BLOCK_B, D]
+    d = rows.shape[0]
+    gathered = jnp.stack([rows[j][idx[:, j]] for j in range(d)], axis=-1)
+    out_ref[...] = jnp.min(gathered, axis=-1).astype(jnp.int32)
+
+
+def estimate(rows, indices):
+    """Count-min estimate: i32[D, W], i32[B, D] -> i32[B].
+
+    The whole sketch (`D × W` i32) rides in VMEM per grid step; with the
+    default W = 8192 and D = 4 that is 128 KiB — within a TPU core's VMEM
+    alongside the index tile.
+    """
+    d, w = rows.shape
+    b, d2 = indices.shape
+    assert d == d2, f"depth mismatch {d} vs {d2}"
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    return pl.pallas_call(
+        _estimate_kernel,
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((d, w), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(rows, indices)
+
+
+def increment(rows, indices, cap=15):
+    """Saturating count-min increment (Layer-2 scatter, not a kernel):
+    i32[D, W], i32[B, D] -> i32[D, W]. Every (row d, column idx[b, d])
+    pair is bumped by the number of occurrences, clipped to `cap`."""
+    d, w = rows.shape
+    b, _ = indices.shape
+
+    def body(j, rows):
+        row = rows[j]
+        bumped = row.at[indices[:, j]].add(1)
+        return rows.at[j].set(jnp.minimum(bumped, cap))
+
+    return jax.lax.fori_loop(0, d, body, rows)

@@ -1,0 +1,192 @@
+"""Layer 2: the set-parallel k-way cache model in JAX.
+
+Three families of entry points, all AOT-lowered by `aot.py`:
+
+* ``victim_select_batch`` / ``victim_select_hyperbolic_batch`` /
+  ``set_probe_batch`` / ``sketch_estimate_batch`` — batched policy
+  evaluation over many independent sets at once (the vectorized form of
+  the paper's "sets are independent" argument); thin wrappers around the
+  Layer-1 Pallas kernels.
+* ``cache_sim_chunk`` — the sequential k-way LRU cache simulator: a
+  ``lax.scan`` over a chunk of accesses, whose body is the Layer-1
+  ``set_step`` kernel (probe + victim-select on one set). State is the
+  full ``[num_sets, K]`` fingerprint/counter pair; the rust runtime
+  carries it between chunks. Semantics match the rust native simulator
+  (`sim::xla::NativeSetSim`) exactly.
+* ``sketch_update_batch`` — TinyLFU sketch maintenance (XLA scatter).
+
+Everything here runs at *build time only*; the rust binary executes the
+lowered HLO through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import set_scan, sketch
+
+
+def victim_select_batch(counters):
+    """i32[B, K] -> i32[B]."""
+    return (set_scan.victim_select(counters),)
+
+
+def victim_select_hyperbolic_batch(counts, t0s, now):
+    """i32[B, K], i32[B, K], i32[] -> i32[B]."""
+    return (set_scan.victim_select_hyperbolic(counts, t0s, now),)
+
+
+def set_probe_batch(fps, probes):
+    """i32[B, K], i32[B] -> i32[B] (way index or -1)."""
+    return (set_scan.set_probe(fps, probes),)
+
+
+def sketch_estimate_batch(rows, indices):
+    """i32[D, W], i32[B, D] -> i32[B]."""
+    return (sketch.estimate(rows, indices),)
+
+
+def sketch_update_batch(rows, indices):
+    """i32[D, W], i32[B, D] -> i32[D, W] (saturating increment)."""
+    return (sketch.increment(rows, indices),)
+
+
+def cache_sim_chunk(fps, counters, time, set_idx, key_fp, valid):
+    """Simulate one chunk of accesses against the k-way LRU state.
+
+    fps, counters: i32[S, K] (fingerprint 0 = empty; counter = last-touch
+    logical time, 0 = never).
+    time: i32 scalar — logical clock carried across chunks.
+    set_idx, key_fp, valid: i32[C] — the chunk (padded tail has valid=0).
+
+    Returns (fps, counters, time, hits): the updated state and the number
+    of hits in the chunk.
+    """
+
+    def step(carry, x):
+        fps, counters, time = carry
+        sidx, fp, valid = x
+        time = time + valid  # padded steps do not advance the clock
+        row_f = jax.lax.dynamic_slice_in_dim(fps, sidx, 1, axis=0)[0]
+        row_c = jax.lax.dynamic_slice_in_dim(counters, sidx, 1, axis=0)[0]
+        new_f, new_c, hit = set_scan.set_step(row_f, row_c, fp, time, valid)
+        fps = jax.lax.dynamic_update_slice_in_dim(fps, new_f[None, :], sidx, axis=0)
+        counters = jax.lax.dynamic_update_slice_in_dim(
+            counters, new_c[None, :], sidx, axis=0
+        )
+        return (fps, counters, time), hit[0]
+
+    (fps, counters, time), hits = jax.lax.scan(
+        step, (fps, counters, time), (set_idx, key_fp, valid)
+    )
+    return (fps, counters, time, jnp.sum(hits).astype(jnp.int32))
+
+
+def cache_sim_setpar(fps, counters, time, probe_fp, valid):
+    """Set-parallel chunk simulator: the paper's "sets are independent"
+    argument, vectorized. The host groups a chunk of accesses by set and
+    hands over a `[L, S]` matrix — column `s` holds set `s`'s accesses in
+    arrival order, padded with `valid = 0`. Each of the `L` scan steps
+    applies ONE access to EVERY set simultaneously via the Layer-1
+    `batch_step` kernel, so the per-step work is a fully vectorized
+    `[S, K]` compare/argmin/update instead of one set's K-element scan.
+
+    Reordering accesses *across* sets cannot change any per-set outcome
+    (hits, evictions, final contents are all per-set functions of the
+    per-set subsequence), so the hit total equals the sequential
+    simulator's — asserted by tests on both the python and rust sides.
+
+    fps, counters: i32[S, K]; time: i32; probe_fp, valid: i32[L, S].
+    Returns (fps, counters, time, hits).
+    """
+
+    def step(carry, x):
+        fps, counters, time = carry
+        fp_row, valid_row = x
+        time = time + 1
+        fps, counters, hit = set_scan.batch_step(fps, counters, fp_row, valid_row, time)
+        return (fps, counters, time), jnp.sum(hit)
+
+    (fps, counters, time), hits = jax.lax.scan(
+        step, (fps, counters, time), (probe_fp, valid)
+    )
+    return (fps, counters, time, jnp.sum(hits).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry used by aot.py and the tests: name -> (fn, specs,
+# kind, params). Shapes are the static configurations shipped in
+# artifacts/; add a line here to ship another variant.
+# ---------------------------------------------------------------------------
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points():
+    b, d, w = 4096, 4, 8192
+    entries = {}
+    for k in (4, 8, 16):
+        entries[f"victim_select_lru_k{k}"] = dict(
+            fn=victim_select_batch,
+            specs=(_i32(b, k),),
+            kind="victim_select",
+            params={"k": k, "batch": b},
+        )
+    entries["victim_select_hyperbolic_k8"] = dict(
+        fn=victim_select_hyperbolic_batch,
+        specs=(_i32(b, 8), _i32(b, 8), _i32()),
+        kind="victim_select_hyperbolic",
+        params={"k": 8, "batch": b},
+    )
+    entries["set_probe_k8"] = dict(
+        fn=set_probe_batch,
+        specs=(_i32(b, 8), _i32(b)),
+        kind="set_probe",
+        params={"k": 8, "batch": b},
+    )
+    entries["sketch_estimate"] = dict(
+        fn=sketch_estimate_batch,
+        specs=(_i32(d, w), _i32(1024, d)),
+        kind="sketch_estimate",
+        params={"depth": d, "width": w, "batch": 1024},
+    )
+    entries["sketch_update"] = dict(
+        fn=sketch_update_batch,
+        specs=(_i32(d, w), _i32(1024, d)),
+        kind="sketch_update",
+        params={"depth": d, "width": w, "batch": 1024},
+    )
+    # The paper's small-trace cache size is 2^11 = 2048 = 256 sets x 8 ways.
+    # The _c8192 variant amortizes the per-execute PJRT dispatch over a 4x
+    # longer chunk (see EXPERIMENTS.md §Perf).
+    for num_sets, k, chunk in ((256, 8, 2048), (256, 8, 8192)):
+        suffix = "" if chunk == 2048 else f"_c{chunk}"
+        entries[f"cache_sim_k{k}{suffix}"] = dict(
+            fn=cache_sim_chunk,
+            specs=(
+                _i32(num_sets, k),
+                _i32(num_sets, k),
+                _i32(),
+                _i32(chunk),
+                _i32(chunk),
+                _i32(chunk),
+            ),
+            kind="cache_sim",
+            params={"k": k, "num_sets": num_sets, "chunk": chunk},
+        )
+    # Set-parallel variant: L steps x S sets per execute (EXPERIMENTS.md
+    # §Perf iteration 2).
+    for num_sets, k, steps in ((256, 8, 64),):
+        entries[f"cache_sim_setpar_k{k}"] = dict(
+            fn=cache_sim_setpar,
+            specs=(
+                _i32(num_sets, k),
+                _i32(num_sets, k),
+                _i32(),
+                _i32(steps, num_sets),
+                _i32(steps, num_sets),
+            ),
+            kind="cache_sim_setpar",
+            params={"k": k, "num_sets": num_sets, "steps": steps},
+        )
+    return entries

@@ -1,0 +1,167 @@
+"""Layer-1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; fixed edge cases cover ties, empty
+ways, saturation and padding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, set_scan, sketch
+
+BLOCK = set_scan.BLOCK_B
+
+
+def i32(a):
+    return jnp.asarray(a, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# victim_select
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    k=st.sampled_from([2, 4, 8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    hi=st.sampled_from([2, 100, 2**30]),
+)
+def test_victim_select_matches_ref(blocks, k, seed, hi):
+    rng = np.random.default_rng(seed)
+    counters = i32(rng.integers(0, hi, (blocks * BLOCK, k)))
+    got = set_scan.victim_select(counters)
+    want = ref.victim_select_ref(counters)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_victim_select_tie_breaks_to_lowest_index():
+    counters = np.full((BLOCK, 8), 7, dtype=np.int32)
+    counters[0] = [9, 3, 3, 9, 9, 9, 9, 9]
+    got = np.array(set_scan.victim_select(i32(counters)))
+    assert got[0] == 1
+    assert (got[1:] == 0).all()
+
+
+def test_victim_select_rejects_misaligned_batch():
+    with pytest.raises(AssertionError):
+        set_scan.victim_select(jnp.zeros((BLOCK + 1, 8), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# hyperbolic victim
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([2, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    now=st.integers(1, 2**20),
+)
+def test_victim_hyperbolic_matches_ref(k, seed, now):
+    rng = np.random.default_rng(seed)
+    counts = i32(rng.integers(1, 1000, (BLOCK, k)))
+    t0s = i32(rng.integers(0, now + 10, (BLOCK, k)))
+    got = set_scan.victim_select_hyperbolic(counts, t0s, jnp.int32(now))
+    want = ref.victim_select_hyperbolic_ref(counts, t0s, jnp.int32(now))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_victim_hyperbolic_prefers_low_rate():
+    counts = np.ones((BLOCK, 4), dtype=np.int32) * 10
+    t0s = np.full((BLOCK, 4), 90, dtype=np.int32)
+    counts[0] = [10, 1, 10, 10]  # way 1: lowest count, same age
+    got = np.array(
+        set_scan.victim_select_hyperbolic(i32(counts), i32(t0s), jnp.int32(100))
+    )
+    assert got[0] == 1
+
+
+# --------------------------------------------------------------------------
+# set_probe
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.sampled_from([2, 4, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    universe=st.sampled_from([3, 50, 2**30]),
+)
+def test_set_probe_matches_ref(k, seed, universe):
+    rng = np.random.default_rng(seed)
+    fps = i32(rng.integers(1, universe + 1, (BLOCK, k)))
+    probes = i32(rng.integers(1, universe + 1, (BLOCK,)))
+    got = set_scan.set_probe(fps, probes)
+    want = ref.set_probe_ref(fps, probes)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_set_probe_miss_is_minus_one():
+    fps = jnp.ones((BLOCK, 8), jnp.int32)
+    probes = jnp.full((BLOCK,), 2, jnp.int32)
+    assert (np.array(set_scan.set_probe(fps, probes)) == -1).all()
+
+
+# --------------------------------------------------------------------------
+# sketch
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.sampled_from([16, 512, 8192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sketch_estimate_matches_ref(w, seed):
+    rng = np.random.default_rng(seed)
+    rows = i32(rng.integers(0, 16, (4, w)))
+    idx = i32(rng.integers(0, w, (BLOCK, 4)))
+    got = sketch.estimate(rows, idx)
+    want = ref.sketch_estimate_ref(rows, idx)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_sketch_increment_saturates_and_accumulates():
+    rows = jnp.zeros((4, 32), jnp.int32)
+    # Same index twice in the batch -> +2; saturation at 15.
+    idx = i32(np.array([[5, 6, 7, 8], [5, 6, 7, 8]]))
+    out = np.array(sketch.increment(rows, idx))
+    assert out[0, 5] == 2 and out[1, 6] == 2 and out[2, 7] == 2 and out[3, 8] == 2
+    assert out.sum() == 8
+    full = jnp.full((4, 32), 15, jnp.int32)
+    out = np.array(sketch.increment(full, idx))
+    assert out.max() == 15
+
+
+# --------------------------------------------------------------------------
+# set_step (the cache_sim scan body)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    valid=st.booleans(),
+)
+def test_set_step_matches_ref(k, seed, valid):
+    rng = np.random.default_rng(seed)
+    row_f = i32(rng.integers(0, 6, (k,)))  # small universe -> hits happen
+    row_c = i32(rng.integers(0, 50, (k,)))
+    fp = jnp.int32(rng.integers(1, 6))
+    time = jnp.int32(51)
+    nf, nc, hit = set_scan.set_step(row_f, row_c, fp, time, jnp.int32(valid))
+    rf, rc, rhit = ref.set_step_ref(row_f, row_c, fp, time, jnp.bool_(valid))
+    np.testing.assert_array_equal(np.array(nf), np.array(rf))
+    np.testing.assert_array_equal(np.array(nc), np.array(rc))
+    assert bool(hit[0]) == bool(rhit)
+
+
+def test_set_step_invalid_is_noop():
+    row_f = i32([1, 2, 3, 4])
+    row_c = i32([10, 20, 30, 40])
+    nf, nc, hit = set_scan.set_step(row_f, row_c, jnp.int32(9), jnp.int32(99), jnp.int32(0))
+    np.testing.assert_array_equal(np.array(nf), np.array(row_f))
+    np.testing.assert_array_equal(np.array(nc), np.array(row_c))
+    assert hit[0] == 0

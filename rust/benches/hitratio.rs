@@ -1,0 +1,79 @@
+//! Regenerates the paper's hit-ratio figures (Figures 4–13).
+//!
+//! For each figure: subfigure (a) LRU, (b) LFU + TinyLFU admission,
+//! (c) products, (d) the figure's extra policy — each as hit ratio vs
+//! cache size with the k-way / sampled / fully-associative series.
+//!
+//! ```bash
+//! cargo bench --bench hitratio                 # full pass
+//! KWAY_BENCH_QUICK=1 cargo bench --bench hitratio
+//! cargo bench --bench hitratio -- --figure fig9
+//! ```
+
+use kway::figures::{quick_mode, ExtraSeries, HITRATIO_FIGURES};
+use kway::sim;
+use kway::trace::paper;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let only = args
+        .iter()
+        .position(|a| a == "--figure")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let quick = quick_mode();
+    let len = if quick { 150_000 } else { 1_000_000 };
+
+    for fig in HITRATIO_FIGURES {
+        if let Some(ref f) = only {
+            if f != fig.id {
+                continue;
+            }
+        }
+        let trace = paper::build(fig.trace, len, 42).expect("trace model");
+        println!(
+            "\n==== {} — trace {} (accesses {}, unique {}) ====",
+            fig.id,
+            fig.trace,
+            trace.len(),
+            trace.unique_keys()
+        );
+        let sizes: Vec<usize> =
+            if quick { vec![fig.sizes[1]] } else { fig.sizes.to_vec() };
+
+        let mut sections: Vec<(&str, Vec<sim::Config>)> = vec![
+            ("(a) LRU", sim::lru_series()),
+            ("(b) LFU+TinyLFU", sim::lfu_tlfu_series()),
+            ("(c) products", sim::products_series(8)),
+        ];
+        match fig.extra {
+            ExtraSeries::Hyperbolic => {
+                sections.push(("(d) Hyperbolic", sim::hyperbolic_series(false)))
+            }
+            ExtraSeries::HyperbolicTlfu => {
+                sections.push(("(d) Hyperbolic+TinyLFU", sim::hyperbolic_series(true)))
+            }
+            ExtraSeries::None => {}
+        }
+
+        for (title, configs) in sections {
+            println!("-- {title} --");
+            print!("{:34}", "config\\size");
+            for s in &sizes {
+                print!(" {s:>8}");
+            }
+            println!();
+            let per_size: Vec<Vec<sim::Row>> = sizes
+                .iter()
+                .map(|&s| sim::sweep(&trace, s, &configs, 1))
+                .collect();
+            for (i, cfg) in configs.iter().enumerate() {
+                print!("{:34}", cfg.label());
+                for rows in &per_size {
+                    print!(" {:8.4}", rows[i].hit_ratio);
+                }
+                println!();
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Microbenchmarks and ablations for the design choices DESIGN.md calls
+//! out:
+//!
+//! * per-op latency (get-hit / get-miss+put) for every implementation;
+//! * the O(K) scan cost vs associativity for WFA (array-of-structs) vs
+//!   WFSC (structure-of-arrays) — the paper's §3 locality argument;
+//! * the KW-LS upgrade path vs the wait-free paths;
+//! * hash function cost (xxh64 vs mix64) and victim-select cost per
+//!   policy — the "one hash vs K PRNG draws" comparison of §1.1.
+//!
+//! ```bash
+//! cargo bench --bench microbench
+//! ```
+
+use kway::fully::Sampled;
+use kway::kway::{KwLs, KwWfa, KwWfsc};
+use kway::policy::Policy;
+use kway::products::{CaffeineLike, GuavaLike};
+use kway::util::clock::Stopwatch;
+use kway::util::hash;
+use kway::util::rng::Rng;
+use kway::Cache;
+
+fn ns_per_op(total_ops: u64, secs: f64) -> f64 {
+    secs * 1e9 / total_ops as f64
+}
+
+fn bench_cache(c: &dyn Cache, label: &str, iters: u64) {
+    let mut rng = Rng::new(7);
+    // Resident working set: half capacity.
+    let resident = (c.capacity() / 2) as u64;
+    for k in 0..resident {
+        c.put(k, k);
+    }
+    // get-hit
+    let sw = Stopwatch::start();
+    let mut sink = 0u64;
+    for _ in 0..iters {
+        let k = rng.below(resident);
+        sink ^= c.get(k).unwrap_or(0);
+    }
+    let hit_ns = ns_per_op(iters, sw.elapsed_secs());
+    // get-miss + put (the miss path)
+    let mut next = 1u64 << 40;
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        if c.get(next).is_none() {
+            c.put(next, next);
+        }
+        next += 1;
+    }
+    let miss_ns = ns_per_op(iters, sw.elapsed_secs());
+    println!("{label:14} get-hit {hit_ns:7.1} ns   miss+put {miss_ns:7.1} ns   (sink {sink})");
+}
+
+fn main() {
+    let quick = kway::figures::quick_mode();
+    let iters: u64 = if quick { 200_000 } else { 1_000_000 };
+    let capacity = 1 << 16;
+
+    println!("== per-op latency (capacity 2^16, 8 ways / sample 8) ==");
+    bench_cache(&KwWfa::new(capacity, 8, Policy::Lru), "KW-WFA", iters);
+    bench_cache(&KwWfsc::new(capacity, 8, Policy::Lru), "KW-WFSC", iters);
+    bench_cache(&KwLs::new(capacity, 8, Policy::Lru), "KW-LS", iters);
+    bench_cache(&Sampled::with_defaults(capacity, 8, Policy::Lru), "sampled", iters);
+    bench_cache(&GuavaLike::new(capacity, 4), "Guava", iters);
+    bench_cache(&CaffeineLike::new(capacity), "Caffeine", iters / 4);
+
+    println!("\n== ablation: scan cost vs associativity (get-hit ns) ==");
+    print!("{:10}", "ways");
+    for ways in [4usize, 8, 16, 32, 64, 128] {
+        print!(" {ways:>8}");
+    }
+    println!();
+    for (name, make) in [
+        ("KW-WFA", Box::new(|w| Box::new(KwWfa::new(1 << 16, w, Policy::Lru)) as Box<dyn Cache>)
+            as Box<dyn Fn(usize) -> Box<dyn Cache>>),
+        ("KW-WFSC", Box::new(|w| Box::new(KwWfsc::new(1 << 16, w, Policy::Lru)) as Box<dyn Cache>)),
+        ("KW-LS", Box::new(|w| Box::new(KwLs::new(1 << 16, w, Policy::Lru)) as Box<dyn Cache>)),
+    ] {
+        print!("{name:10}");
+        for ways in [4usize, 8, 16, 32, 64, 128] {
+            let c = make(ways);
+            let resident = (c.capacity() / 2) as u64;
+            for k in 0..resident {
+                c.put(k, k);
+            }
+            let mut rng = Rng::new(9);
+            let n = iters / 4;
+            let sw = Stopwatch::start();
+            let mut sink = 0u64;
+            for _ in 0..n {
+                sink ^= c.get(rng.below(resident)).unwrap_or(0);
+            }
+            let ns = ns_per_op(n, sw.elapsed_secs());
+            print!(" {:8.1}", ns + (sink & 1) as f64 * 1e-9);
+        }
+        println!();
+    }
+
+    println!("\n== hash & policy primitives ==");
+    {
+        let n = iters * 4;
+        let sw = Stopwatch::start();
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc ^= hash::xxh64_u64(i, 0);
+        }
+        println!("xxh64_u64      {:6.2} ns/hash (acc {acc})", ns_per_op(n, sw.elapsed_secs()));
+        let sw = Stopwatch::start();
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc ^= hash::mix64(i);
+        }
+        println!("mix64          {:6.2} ns/hash (acc {acc})", ns_per_op(n, sw.elapsed_secs()));
+    }
+    {
+        // Victim selection over one 8-way set, per policy.
+        let metas: Vec<u64> = (0..8).map(|i| 1000 - i).collect();
+        let mut rng = Rng::new(11);
+        for policy in Policy::ALL {
+            let n = iters;
+            let sw = Stopwatch::start();
+            let mut acc = 0usize;
+            for t in 0..n {
+                acc ^= policy.select_victim(std::hint::black_box(&metas), t, &mut rng);
+            }
+            std::hint::black_box(acc);
+            println!(
+                "victim_select[{:10}] {:6.2} ns (acc {acc})",
+                policy.name(),
+                ns_per_op(n, sw.elapsed_secs())
+            );
+        }
+    }
+
+    println!("\n== the paper's §1.1 comparison: 1 hash vs K PRNG draws ==");
+    {
+        let n = iters;
+        let sw = Stopwatch::start();
+        let mut acc = 0usize;
+        for i in 0..n {
+            acc ^= hash::set_index(i, 1 << 13); // k-way: one hash per miss
+        }
+        let one_hash = ns_per_op(n, sw.elapsed_secs());
+        let mut rng = Rng::new(13);
+        let sw = Stopwatch::start();
+        let mut acc2 = 0u64;
+        for _ in 0..n {
+            for _ in 0..8 {
+                acc2 ^= rng.below(1 << 16); // sampled: 8 PRNG draws per miss
+            }
+        }
+        let eight_draws = ns_per_op(n, sw.elapsed_secs());
+        println!(
+            "k-way set hash {one_hash:6.2} ns vs sampled 8 PRNG draws {eight_draws:6.2} ns (x{:.1}) (acc {acc} {acc2})",
+            eight_draws / one_hash
+        );
+    }
+}

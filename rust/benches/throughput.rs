@@ -1,0 +1,69 @@
+//! Regenerates the paper's trace-replay throughput figures
+//! (Figures 14–26): Mops/s vs thread count for KW-WFA / KW-WFSC / KW-LS /
+//! sampled / Guava / Caffeine / segmented Caffeine, with the §5.1.2
+//! methodology (warm-up, barrier start, timed run, repeated runs).
+//!
+//! ```bash
+//! cargo bench --bench throughput
+//! KWAY_BENCH_QUICK=1 cargo bench --bench throughput
+//! cargo bench --bench throughput -- --figure fig14
+//! ```
+//!
+//! Single-core container note: the thread sweep oversubscribes one core,
+//! so absolute scaling flattens; the *relative ordering* of the
+//! synchronization designs is the reproducible signal (DESIGN.md
+//! §Substitutions).
+
+use kway::figures::{quick_mode, THROUGHPUT_FIGURES};
+use kway::policy::Policy;
+use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::trace::paper;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let only = args
+        .iter()
+        .position(|a| a == "--figure")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let quick = quick_mode();
+    let threads: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 2, 4, 8] };
+    let duration = Duration::from_millis(if quick { 100 } else { 300 });
+    let repeats = if quick { 2 } else { 3 };
+    let len = if quick { 100_000 } else { 500_000 };
+
+    for fig in THROUGHPUT_FIGURES {
+        if let Some(ref f) = only {
+            if f != fig.id {
+                continue;
+            }
+        }
+        let trace = Arc::new(paper::build(fig.trace, len, 42).expect("trace model"));
+        println!(
+            "\n==== {} — trace {} cache 2^{} ({} in the paper) — Mops/s ====",
+            fig.id,
+            fig.trace,
+            fig.capacity.trailing_zeros(),
+            fig.platform,
+        );
+        print!("{:14}", "impl\\threads");
+        for t in &threads {
+            print!(" {t:>9}");
+        }
+        println!("   hit-ratio");
+        for name in IMPLS {
+            print!("{name:14}");
+            let mut last_hit = 0.0;
+            for &t in &threads {
+                let factory = impl_factory(name, fig.capacity, t, Policy::Lru).unwrap();
+                let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+                let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
+                last_hit = r.hit_ratio;
+                print!(" {:9.2}", r.mops.mean());
+            }
+            println!("   {last_hit:9.3}");
+        }
+    }
+}

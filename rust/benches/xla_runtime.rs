@@ -1,0 +1,74 @@
+//! Benchmarks the Layers 1–2 artifacts through the rust PJRT runtime:
+//! batched victim selection, sketch ops, and the set-parallel cache
+//! simulator — plus the native rust simulator for reference.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench xla_runtime
+//! ```
+
+use kway::runtime::{lit_i32, XlaRuntime};
+use kway::sim::xla::{NativeSetSim, XlaSim};
+use kway::trace::paper;
+use kway::util::clock::Stopwatch;
+use kway::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = kway::figures::quick_mode();
+    let dir = std::env::var("KWAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = XlaRuntime::load(&dir)?;
+    println!("platform={} producer={}", rt.platform(), rt.manifest().producer);
+
+    println!("\n== batched policy evaluation (per executable execute()) ==");
+    for name in [
+        "victim_select_lru_k4",
+        "victim_select_lru_k8",
+        "victim_select_lru_k16",
+        "set_probe_k8",
+    ] {
+        let spec = rt.manifest().entry(name).unwrap();
+        let b = spec.require("batch")? as usize;
+        let k = spec.require("k")? as usize;
+        let mut rng = Rng::new(1);
+        let counters: Vec<i32> = (0..b * k).map(|_| rng.below(1 << 30) as i32).collect();
+        let lit = lit_i32(&counters, &[b as i64, k as i64])?;
+        let args: Vec<xla::Literal> = if name == "set_probe_k8" {
+            let probes: Vec<i32> = (0..b).map(|_| 1 + rng.below(40) as i32).collect();
+            vec![lit, lit_i32(&probes, &[b as i64])?]
+        } else {
+            vec![lit]
+        };
+        let iters = if quick { 5 } else { 30 };
+        let sw = Stopwatch::start();
+        for _ in 0..iters {
+            rt.execute(name, &args)?;
+        }
+        let secs = sw.elapsed_secs() / iters as f64;
+        println!(
+            "{name:28} {:8.2} us/batch  {:8.1} Msets/s",
+            secs * 1e6,
+            b as f64 / secs / 1e6
+        );
+    }
+
+    println!("\n== cache_sim: XLA artifact vs native rust simulator ==");
+    let sim = XlaSim::new(&rt, "cache_sim_k8")?;
+    let len = if quick { 4 * sim.chunk } else { 32 * sim.chunk };
+    for trace_name in ["oltp", "wiki_a"] {
+        let trace = paper::build(trace_name, len, 7).unwrap();
+        let sw = Stopwatch::start();
+        let xla_stats = sim.run(&trace)?;
+        let xla_secs = sw.elapsed_secs();
+        let mut native = NativeSetSim::new(sim.num_sets, sim.ways);
+        let sw = Stopwatch::start();
+        let native_stats = native.run(&trace.keys);
+        let native_secs = sw.elapsed_secs();
+        assert_eq!(xla_stats.hits, native_stats.hits, "backend divergence");
+        println!(
+            "{trace_name:8} XLA {:7.2} Mkeys/s | native {:7.2} Mkeys/s | hits match ({})",
+            xla_stats.accesses as f64 / xla_secs / 1e6,
+            native_stats.accesses as f64 / native_secs / 1e6,
+            xla_stats.hits,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! The cache service coordinator — Layer 3's serving front.
+//!
+//! The paper's artifact is a library; to make it deployable (and to give
+//! the end-to-end example something real to exercise) this module wraps
+//! any [`crate::Cache`] in a small request-routing service in the style of
+//! a vLLM-like router: clients submit get/put requests (singly or in
+//! batches), a router shards them by key hash onto worker threads, and the
+//! workers execute against the shared concurrent cache while recording
+//! latency histograms and hit counters.
+//!
+//! Sharding by key is not needed for correctness (the k-way caches are
+//! already concurrent) — it provides per-key FIFO ordering and models the
+//! deployment the paper targets (§1: storage/database node caches serving
+//! many client threads).
+
+mod service;
+
+pub use service::{drive_clients, CacheService, ServiceConfig, ServiceMetrics};

@@ -1,0 +1,120 @@
+//! The paper's experiment registry: one entry per evaluation figure,
+//! mapping it to the trace model, cache size and series that regenerate
+//! it. The bench binaries (`rust/benches/`) iterate this table; DESIGN.md
+//! §Per-experiment index mirrors it.
+
+/// Which hit-ratio subfigure-(d) series a figure shows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtraSeries {
+    Hyperbolic,
+    HyperbolicTlfu,
+    None,
+}
+
+/// A hit-ratio figure (Figures 4–13): four subfigures on one trace.
+#[derive(Debug, Clone)]
+pub struct HitRatioFigure {
+    pub id: &'static str,
+    pub trace: &'static str,
+    /// Cache sizes for the x-axis sweep.
+    pub sizes: &'static [usize],
+    pub extra: ExtraSeries,
+}
+
+/// All hit-ratio figures.
+pub const HITRATIO_FIGURES: &[HitRatioFigure] = &[
+    HitRatioFigure { id: "fig4", trace: "wiki_a", sizes: &[512, 2048, 8192], extra: ExtraSeries::Hyperbolic },
+    HitRatioFigure { id: "fig5", trace: "p8", sizes: &[1024, 4096, 16384], extra: ExtraSeries::None },
+    HitRatioFigure { id: "fig6", trace: "p12", sizes: &[4096, 16384, 65536], extra: ExtraSeries::Hyperbolic },
+    HitRatioFigure { id: "fig7", trace: "s1", sizes: &[16384, 65536, 262144], extra: ExtraSeries::None },
+    HitRatioFigure { id: "fig8", trace: "s3", sizes: &[16384, 65536, 262144], extra: ExtraSeries::HyperbolicTlfu },
+    HitRatioFigure { id: "fig9", trace: "oltp", sizes: &[512, 2048, 8192], extra: ExtraSeries::None },
+    HitRatioFigure { id: "fig10", trace: "multi2", sizes: &[1024, 4096, 16384], extra: ExtraSeries::None },
+    HitRatioFigure { id: "fig11", trace: "multi3", sizes: &[1024, 4096, 16384], extra: ExtraSeries::None },
+    HitRatioFigure { id: "fig12", trace: "ds1", sizes: &[16384, 65536, 262144], extra: ExtraSeries::Hyperbolic },
+    HitRatioFigure { id: "fig13", trace: "w3", sizes: &[16384, 65536, 262144], extra: ExtraSeries::None },
+];
+
+/// A trace-replay throughput figure (Figures 14–26).
+#[derive(Debug, Clone)]
+pub struct ThroughputFigure {
+    pub id: &'static str,
+    pub trace: &'static str,
+    /// Cache size from the figure caption (2^11 / 2^17 / 2^19).
+    pub capacity: usize,
+    /// Paper run duration in seconds (we scale down; see benches).
+    pub paper_duration_s: u32,
+    /// Which platform the paper ran it on (reporting only).
+    pub platform: &'static str,
+}
+
+/// All trace-replay throughput figures.
+pub const THROUGHPUT_FIGURES: &[ThroughputFigure] = &[
+    ThroughputFigure { id: "fig14", trace: "f1", capacity: 1 << 11, paper_duration_s: 1, platform: "AMD" },
+    ThroughputFigure { id: "fig15", trace: "s3", capacity: 1 << 19, paper_duration_s: 4, platform: "AMD" },
+    ThroughputFigure { id: "fig16", trace: "s1", capacity: 1 << 19, paper_duration_s: 4, platform: "AMD" },
+    ThroughputFigure { id: "fig17", trace: "wiki_a", capacity: 1 << 11, paper_duration_s: 1, platform: "AMD" },
+    ThroughputFigure { id: "fig18", trace: "oltp", capacity: 1 << 11, paper_duration_s: 1, platform: "AMD" },
+    ThroughputFigure { id: "fig19", trace: "f2", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+    ThroughputFigure { id: "fig20", trace: "w3", capacity: 1 << 19, paper_duration_s: 4, platform: "Intel" },
+    ThroughputFigure { id: "fig21", trace: "multi1", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+    ThroughputFigure { id: "fig22", trace: "multi2", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+    ThroughputFigure { id: "fig23", trace: "multi3", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+    ThroughputFigure { id: "fig24", trace: "sprite", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+    ThroughputFigure { id: "fig25", trace: "p12", capacity: 1 << 17, paper_duration_s: 2, platform: "Intel" },
+    ThroughputFigure { id: "fig26", trace: "wiki_b", capacity: 1 << 11, paper_duration_s: 1, platform: "Intel" },
+];
+
+/// A synthetic-mix throughput figure (Figures 27–30).
+#[derive(Debug, Clone)]
+pub struct SyntheticFigure {
+    pub id: &'static str,
+    pub label: &'static str,
+    /// gets per put; None = all-miss (27) / all-hit (28) special cases.
+    pub gets_per_put: Option<u32>,
+    pub all_miss: bool,
+}
+
+/// All synthetic figures (cache size 2^21 in the paper).
+pub const SYNTHETIC_FIGURES: &[SyntheticFigure] = &[
+    SyntheticFigure { id: "fig27", label: "100% miss", gets_per_put: None, all_miss: true },
+    SyntheticFigure { id: "fig28", label: "100% hit", gets_per_put: None, all_miss: false },
+    SyntheticFigure { id: "fig29", label: "95% hit", gets_per_put: Some(19), all_miss: false },
+    SyntheticFigure { id: "fig30", label: "90% hit", gets_per_put: Some(9), all_miss: false },
+];
+
+/// Quick-mode flag shared by every bench: set `KWAY_BENCH_QUICK=1` to run
+/// an abbreviated pass (shorter traces, fewer repeats, fewer threads).
+pub fn quick_mode() -> bool {
+    std::env::var("KWAY_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::paper;
+
+    #[test]
+    fn every_figure_trace_exists() {
+        for f in HITRATIO_FIGURES {
+            assert!(paper::build(f.trace, 1000, 1).is_some(), "{} trace {}", f.id, f.trace);
+        }
+        for f in THROUGHPUT_FIGURES {
+            assert!(paper::build(f.trace, 1000, 1).is_some(), "{} trace {}", f.id, f.trace);
+        }
+    }
+
+    #[test]
+    fn figure_counts_match_paper() {
+        assert_eq!(HITRATIO_FIGURES.len(), 10); // Figures 4-13
+        assert_eq!(THROUGHPUT_FIGURES.len(), 13); // Figures 14-26
+        assert_eq!(SYNTHETIC_FIGURES.len(), 4); // Figures 27-30
+    }
+
+    #[test]
+    fn throughput_capacities_match_captions() {
+        for f in THROUGHPUT_FIGURES {
+            assert_eq!(f.capacity, paper::paper_cache_size(f.trace), "{}", f.id);
+        }
+    }
+}

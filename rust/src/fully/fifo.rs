@@ -1,0 +1,105 @@
+//! Exact fully-associative FIFO: a ring of keys plus a residency set.
+//! Hits do not reorder anything — the defining property of FIFO.
+
+use super::SimVictimPeek;
+use crate::SimCache;
+use std::collections::{HashSet, VecDeque};
+
+/// Exact FIFO cache (single-threaded; simulator baseline).
+pub struct FifoQueue {
+    capacity: usize,
+    queue: VecDeque<u64>,
+    resident: HashSet<u64>,
+}
+
+impl FifoQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            queue: VecDeque::with_capacity(capacity),
+            resident: HashSet::with_capacity(capacity),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+impl SimCache for FifoQueue {
+    fn sim_get(&mut self, key: u64) -> bool {
+        self.resident.contains(&key)
+    }
+
+    fn sim_put(&mut self, key: u64) {
+        if self.resident.contains(&key) {
+            return; // FIFO position unchanged on re-put
+        }
+        if self.resident.len() >= self.capacity {
+            if let Some(victim) = self.queue.pop_front() {
+                self.resident.remove(&victim);
+            }
+        }
+        self.queue.push_back(key);
+        self.resident.insert(key);
+    }
+
+    fn sim_name(&self) -> String {
+        "full-FIFO".into()
+    }
+}
+
+impl SimVictimPeek for FifoQueue {
+    fn sim_peek_victim(&mut self, _key: u64) -> Option<u64> {
+        if self.resident.len() >= self.capacity {
+            self.queue.front().copied()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_in_insertion_order() {
+        let mut c = FifoQueue::new(3);
+        c.sim_put(1);
+        c.sim_put(2);
+        c.sim_put(3);
+        // Hits must not save key 1.
+        for _ in 0..10 {
+            assert!(c.sim_get(1));
+        }
+        c.sim_put(4);
+        assert!(!c.sim_get(1));
+        assert!(c.sim_get(2));
+    }
+
+    #[test]
+    fn re_put_keeps_position() {
+        let mut c = FifoQueue::new(2);
+        c.sim_put(1);
+        c.sim_put(2);
+        c.sim_put(1); // no-op
+        c.sim_put(3); // evicts 1 (still oldest)
+        assert!(!c.sim_get(1));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn peek_is_front() {
+        let mut c = FifoQueue::new(2);
+        c.sim_put(10);
+        assert_eq!(c.sim_peek_victim(0), None);
+        c.sim_put(20);
+        assert_eq!(c.sim_peek_victim(0), Some(10));
+    }
+}

@@ -1,0 +1,181 @@
+//! Fully-associative Hyperbolic caching (Blankstein et al., ATC'17), as
+//! that paper itself makes it practical: each entry carries
+//! `(access count n, insert time t0)` and at eviction the priority
+//! `n / (now − t0)` is computed for a uniform *sample* of resident
+//! entries; the minimum is evicted. `sample >= capacity` gives the exact
+//! (O(n)-scan) variant for small caches.
+
+use super::SimVictimPeek;
+use crate::util::rng::Rng;
+use crate::SimCache;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy)]
+struct Meta {
+    count: u64,
+    t0: u64,
+}
+
+/// Hyperbolic cache with sampled eviction (single-threaded baseline).
+pub struct HyperbolicFull {
+    capacity: usize,
+    sample: usize,
+    keys: Vec<u64>,
+    index: HashMap<u64, usize>,
+    metas: Vec<Meta>,
+    rng: Rng,
+    now: u64,
+}
+
+impl HyperbolicFull {
+    /// `sample = 64` reproduces the original system's default; pass
+    /// `sample >= capacity` for exact hyperbolic caching.
+    pub fn new(capacity: usize, sample: usize, seed: u64) -> Self {
+        assert!(capacity > 0 && sample > 0);
+        Self {
+            capacity,
+            sample,
+            keys: Vec::with_capacity(capacity),
+            index: HashMap::with_capacity(capacity),
+            metas: Vec::with_capacity(capacity),
+            rng: Rng::new(seed),
+            now: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Priority comparison without floats: n_a/age_a < n_b/age_b.
+    fn lower_priority(&self, a: Meta, b: Meta) -> bool {
+        let age_a = self.now.saturating_sub(a.t0).max(1) as u128;
+        let age_b = self.now.saturating_sub(b.t0).max(1) as u128;
+        (a.count as u128) * age_b < (b.count as u128) * age_a
+    }
+
+    fn pick_victim_slot(&mut self) -> usize {
+        let n = self.keys.len();
+        debug_assert!(n > 0);
+        if self.sample >= n {
+            // Exact: full scan.
+            let mut best = 0;
+            for slot in 1..n {
+                if self.lower_priority(self.metas[slot], self.metas[best]) {
+                    best = slot;
+                }
+            }
+            best
+        } else {
+            let mut best = self.rng.index(n);
+            for _ in 1..self.sample {
+                let s = self.rng.index(n);
+                if self.lower_priority(self.metas[s], self.metas[best]) {
+                    best = s;
+                }
+            }
+            best
+        }
+    }
+
+    fn remove_at(&mut self, slot: usize) {
+        let key = self.keys.swap_remove(slot);
+        self.metas.swap_remove(slot);
+        self.index.remove(&key);
+        if slot < self.keys.len() {
+            let moved = self.keys[slot];
+            self.index.insert(moved, slot);
+        }
+    }
+}
+
+impl SimCache for HyperbolicFull {
+    fn sim_get(&mut self, key: u64) -> bool {
+        self.now += 1;
+        if let Some(&slot) = self.index.get(&key) {
+            self.metas[slot].count += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sim_put(&mut self, key: u64) {
+        self.now += 1;
+        if let Some(&slot) = self.index.get(&key) {
+            self.metas[slot].count += 1;
+            return;
+        }
+        if self.keys.len() >= self.capacity {
+            let slot = self.pick_victim_slot();
+            self.remove_at(slot);
+        }
+        self.index.insert(key, self.keys.len());
+        self.keys.push(key);
+        self.metas.push(Meta { count: 1, t0: self.now });
+    }
+
+    fn sim_name(&self) -> String {
+        if self.sample >= self.capacity {
+            "full-Hyperbolic(exact)".into()
+        } else {
+            format!("full-Hyperbolic(s{})", self.sample)
+        }
+    }
+}
+
+impl SimVictimPeek for HyperbolicFull {
+    fn sim_peek_victim(&mut self, _key: u64) -> Option<u64> {
+        if self.keys.len() >= self.capacity {
+            let slot = self.pick_victim_slot();
+            Some(self.keys[slot])
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_mode_evicts_lowest_rate() {
+        let mut c = HyperbolicFull::new(3, usize::MAX, 1);
+        c.sim_put(1); // t0=1
+        c.sim_put(2); // t0=2
+        c.sim_put(3); // t0=3
+        // Heat up 1 and 3.
+        for _ in 0..20 {
+            c.sim_get(1);
+            c.sim_get(3);
+        }
+        c.sim_put(4); // victim must be 2 (count 1, oldest rate)
+        assert!(!c.sim_get(2));
+        assert!(c.sim_get(1) && c.sim_get(3) && c.sim_get(4));
+    }
+
+    #[test]
+    fn sampled_mode_bounded() {
+        let mut c = HyperbolicFull::new(100, 8, 2);
+        for k in 0..10_000u64 {
+            c.sim_put(k);
+        }
+        assert_eq!(c.len(), 100);
+    }
+
+    #[test]
+    fn new_entries_get_grace() {
+        // A fresh entry has age ~1 so its priority (count/age = 1) is
+        // high; a long-resident single-hit entry should lose to it.
+        let mut c = HyperbolicFull::new(2, usize::MAX, 3);
+        c.sim_put(1);
+        for _ in 0..100 {
+            c.sim_get(99); // misses advance the clock
+        }
+        c.sim_put(2);
+        c.sim_put(3); // victim should be 1 (count 1 / age ~102)
+        assert!(!c.sim_get(1));
+        assert!(c.sim_get(2));
+    }
+}

@@ -1,0 +1,142 @@
+//! Exact fully-associative LFU ("Perfect LFU" in the paper's terminology)
+//! with LRU tie-breaking, built on an ordered set of
+//! `(frequency, last-touch, key)` triples. O(log n) per operation — only
+//! the simulator pays this, never the serving hot path.
+
+use super::SimVictimPeek;
+use crate::SimCache;
+use std::collections::{BTreeSet, HashMap};
+
+/// Exact LFU cache (single-threaded; simulator baseline).
+pub struct LfuOrdered {
+    capacity: usize,
+    /// key -> (freq, seq) so the ordered entry can be located for removal.
+    map: HashMap<u64, (u64, u64)>,
+    /// (freq, seq, key), ordered; the minimum is the eviction victim.
+    order: BTreeSet<(u64, u64, u64)>,
+    seq: u64,
+}
+
+impl LfuOrdered {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            map: HashMap::with_capacity(capacity),
+            order: BTreeSet::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn bump(&mut self, key: u64) {
+        let &(freq, seq) = self.map.get(&key).unwrap();
+        self.order.remove(&(freq, seq, key));
+        self.seq += 1;
+        self.map.insert(key, (freq + 1, self.seq));
+        self.order.insert((freq + 1, self.seq, key));
+    }
+
+    fn insert_new(&mut self, key: u64) {
+        if self.map.len() >= self.capacity {
+            let &(freq, seq, victim) = self.order.iter().next().unwrap();
+            self.order.remove(&(freq, seq, victim));
+            self.map.remove(&victim);
+        }
+        self.seq += 1;
+        self.map.insert(key, (1, self.seq));
+        self.order.insert((1, self.seq, key));
+    }
+}
+
+impl SimCache for LfuOrdered {
+    fn sim_get(&mut self, key: u64) -> bool {
+        if self.map.contains_key(&key) {
+            self.bump(key);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sim_put(&mut self, key: u64) {
+        if self.map.contains_key(&key) {
+            self.bump(key);
+        } else {
+            self.insert_new(key);
+        }
+    }
+
+    fn sim_name(&self) -> String {
+        "full-LFU".into()
+    }
+}
+
+impl SimVictimPeek for LfuOrdered {
+    fn sim_peek_victim(&mut self, _key: u64) -> Option<u64> {
+        if self.map.len() >= self.capacity {
+            self.order.iter().next().map(|&(_, _, k)| k)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut c = LfuOrdered::new(3);
+        c.sim_put(1);
+        c.sim_put(2);
+        c.sim_put(3);
+        c.sim_get(1);
+        c.sim_get(1);
+        c.sim_get(2);
+        c.sim_put(4); // victim: 3 (freq 1)
+        assert!(!c.sim_get(3));
+        assert!(c.sim_get(1) && c.sim_get(2) && c.sim_get(4));
+    }
+
+    #[test]
+    fn tie_breaks_towards_older() {
+        let mut c = LfuOrdered::new(2);
+        c.sim_put(1);
+        c.sim_put(2); // both freq 1; 1 is older
+        c.sim_put(3); // evicts 1
+        assert!(!c.sim_get(1));
+        assert!(c.sim_get(2));
+    }
+
+    #[test]
+    fn peek_matches_eviction() {
+        let mut c = LfuOrdered::new(3);
+        for k in 0..3 {
+            c.sim_put(k);
+        }
+        c.sim_get(0);
+        c.sim_get(2);
+        let victim = c.sim_peek_victim(99).unwrap();
+        assert_eq!(victim, 1);
+        c.sim_put(99);
+        assert!(!c.sim_get(1));
+    }
+
+    #[test]
+    fn len_bounded() {
+        let mut c = LfuOrdered::new(10);
+        for k in 0..1000u64 {
+            c.sim_put(k);
+        }
+        assert_eq!(c.len(), 10);
+    }
+}

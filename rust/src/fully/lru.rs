@@ -1,0 +1,229 @@
+//! Exact fully-associative LRU: intrusive doubly-linked list over a slab
+//! plus a key→slot index. This is the paper's "fully associative"
+//! hit-ratio line and the textbook structure whose head-of-list contention
+//! motivates the whole work (§1, §2.4).
+
+use super::SimVictimPeek;
+use crate::SimCache;
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy)]
+struct Node {
+    key: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Exact linked-list LRU cache (single-threaded; simulator baseline).
+pub struct LruList {
+    capacity: usize,
+    map: HashMap<u64, u32>,
+    nodes: Vec<Node>,
+    head: u32,
+    tail: u32,
+    free: Vec<u32>,
+}
+
+impl LruList {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            map: HashMap::with_capacity(capacity),
+            nodes: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let node = self.nodes[idx as usize];
+        match node.prev {
+            NIL => self.head = node.next,
+            p => self.nodes[p as usize].next = node.next,
+        }
+        match node.next {
+            NIL => self.tail = node.prev,
+            n => self.nodes[n as usize].prev = node.prev,
+        }
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        let old_head = self.head;
+        {
+            let node = &mut self.nodes[idx as usize];
+            node.prev = NIL;
+            node.next = old_head;
+        }
+        if old_head != NIL {
+            self.nodes[old_head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn touch(&mut self, idx: u32) {
+        if self.head != idx {
+            self.unlink(idx);
+            self.push_front(idx);
+        }
+    }
+
+    /// The key currently at the LRU position.
+    pub fn lru_key(&self) -> Option<u64> {
+        (self.tail != NIL).then(|| self.nodes[self.tail as usize].key)
+    }
+
+    fn evict_lru(&mut self) -> u32 {
+        let idx = self.tail;
+        debug_assert_ne!(idx, NIL);
+        let key = self.nodes[idx as usize].key;
+        self.unlink(idx);
+        self.map.remove(&key);
+        idx
+    }
+
+    fn insert(&mut self, key: u64) {
+        debug_assert!(!self.map.contains_key(&key));
+        let idx = if self.map.len() >= self.capacity {
+            self.evict_lru()
+        } else if let Some(idx) = self.free.pop() {
+            idx
+        } else {
+            self.nodes.push(Node { key, prev: NIL, next: NIL });
+            (self.nodes.len() - 1) as u32
+        };
+        self.nodes[idx as usize].key = key;
+        self.push_front(idx);
+        self.map.insert(key, idx);
+    }
+}
+
+impl SimCache for LruList {
+    fn sim_get(&mut self, key: u64) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.touch(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sim_put(&mut self, key: u64) {
+        if let Some(&idx) = self.map.get(&key) {
+            self.touch(idx);
+        } else {
+            self.insert(key);
+        }
+    }
+
+    fn sim_name(&self) -> String {
+        "full-LRU".into()
+    }
+}
+
+impl SimVictimPeek for LruList {
+    fn sim_peek_victim(&mut self, _key: u64) -> Option<u64> {
+        if self.map.len() >= self.capacity {
+            self.lru_key()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lru_order() {
+        let mut c = LruList::new(3);
+        c.sim_put(1);
+        c.sim_put(2);
+        c.sim_put(3);
+        assert!(c.sim_get(1)); // order now: 1,3,2 (MRU..LRU)
+        c.sim_put(4); // evicts 2
+        assert!(!c.sim_get(2));
+        assert!(c.sim_get(1));
+        assert!(c.sim_get(3));
+        assert!(c.sim_get(4));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn repeated_put_does_not_duplicate() {
+        let mut c = LruList::new(2);
+        c.sim_put(7);
+        c.sim_put(7);
+        c.sim_put(7);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn peek_matches_actual_eviction() {
+        let mut c = LruList::new(3);
+        for k in 0..3 {
+            c.sim_put(k);
+        }
+        let victim = c.sim_peek_victim(99).unwrap();
+        c.sim_put(99);
+        assert!(!c.sim_get(victim), "peeked victim {victim} must be evicted");
+    }
+
+    #[test]
+    fn capacity_one() {
+        let mut c = LruList::new(1);
+        c.sim_put(1);
+        c.sim_put(2);
+        assert!(!c.sim_get(1));
+        assert!(c.sim_get(2));
+    }
+
+    #[test]
+    fn model_equivalence_property() {
+        // Compare against a naive O(n) vector model of LRU.
+        crate::util::check::check("lru-vs-naive", 20, |rng| {
+            let cap = 1 + rng.index(20);
+            let mut c = LruList::new(cap);
+            let mut model: Vec<u64> = Vec::new(); // front = MRU
+            for _ in 0..1000 {
+                let key = rng.below(60);
+                if rng.chance(0.5) {
+                    let hit = c.sim_get(key);
+                    let mhit = model.contains(&key);
+                    assert_eq!(hit, mhit, "get({key}) mismatch");
+                    if mhit {
+                        model.retain(|&k| k != key);
+                        model.insert(0, key);
+                    }
+                } else {
+                    c.sim_put(key);
+                    if model.contains(&key) {
+                        model.retain(|&k| k != key);
+                    } else if model.len() >= cap {
+                        model.pop();
+                    }
+                    model.insert(0, key);
+                }
+            }
+        });
+    }
+}

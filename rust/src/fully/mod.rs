@@ -1,0 +1,51 @@
+//! Fully-associative and sampled baselines.
+//!
+//! These are the comparison lines of the paper's hit-ratio study
+//! (Figures 4–13) and the "sampled" competitor of the throughput study:
+//!
+//! * [`LruList`] — the classic linked-list LRU ("the `fully associative`
+//!   line stands for a linked-list based fully associative
+//!   implementation", §5.1). Exact.
+//! * [`LfuOrdered`] — exact LFU with LRU tie-breaking (ordered-set based;
+//!   O(log n) per op, which only matters for the simulator, not the hot
+//!   path).
+//! * [`FifoQueue`], [`RandomFull`] — exact FIFO / uniform-random eviction.
+//! * [`HyperbolicFull`] — Hyperbolic caching as the Hyperbolic paper
+//!   itself implements it: priorities are evaluated on a uniform sample at
+//!   eviction time (`sample = 64` by default; exact mode available for
+//!   small caches by setting `sample >= capacity`).
+//! * [`Sampled`] — the Redis-style *concurrent* sampled cache used in the
+//!   throughput figures: segment-locked storage, eviction by sampling
+//!   `sample` random resident entries and evicting the policy minimum.
+//!   This reproduces the cost the paper highlights: one PRNG draw plus one
+//!   random memory access per sampled entry on every miss.
+
+mod fifo;
+mod hyperbolic;
+mod lfu;
+mod lru;
+mod random;
+mod sampled;
+
+pub use fifo::FifoQueue;
+pub use hyperbolic::HyperbolicFull;
+pub use lfu::LfuOrdered;
+pub use lru::LruList;
+pub use random::RandomFull;
+pub use sampled::Sampled;
+
+/// Victim preview for admission policies (TinyLFU): which key would be
+/// evicted if `key` were inserted now and the cache were full? `None`
+/// means "no eviction needed" (free room) — the caller should admit.
+pub trait SimVictimPeek {
+    fn sim_peek_victim(&mut self, key: u64) -> Option<u64>;
+}
+
+/// Every concurrent [`crate::Cache`] supplies a victim preview through its
+/// `peek_victim` method, so it composes with the TinyLFU admission wrapper
+/// the same way the sequential baselines do.
+impl<C: crate::Cache> SimVictimPeek for C {
+    fn sim_peek_victim(&mut self, key: u64) -> Option<u64> {
+        self.peek_victim(key)
+    }
+}

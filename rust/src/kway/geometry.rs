@@ -1,0 +1,132 @@
+//! Cache geometry: capacity → (power-of-two set count, ways), plus the
+//! key→set mapping and the internal key encoding shared by the wait-free
+//! variants.
+
+use crate::util::hash;
+
+/// Geometry of a k-way cache: `num_sets` is always a power of two so the
+/// set index is `hash(key) & (num_sets - 1)`, exactly as in the paper's
+/// Algorithms 2–9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    num_sets: usize,
+    ways: usize,
+}
+
+/// Internal key-word sentinels for the wait-free variants. User keys are
+/// shifted by [`Geometry::encode_key`] so they can never collide with
+/// these.
+pub(crate) const EMPTY: u64 = 0;
+pub(crate) const RESERVED: u64 = 1;
+const KEY_OFFSET: u64 = 2;
+
+impl Geometry {
+    /// Smallest geometry with at least `capacity` slots and exactly `ways`
+    /// ways per set. `capacity` is rounded up so that the set count is a
+    /// power of two (the paper's cache sizes are powers of two, so for the
+    /// evaluation this is exact).
+    pub fn new(capacity: usize, ways: usize) -> Self {
+        assert!(ways >= 1, "need at least one way");
+        assert!(capacity >= ways, "capacity must be >= ways");
+        let num_sets = capacity.div_ceil(ways).next_power_of_two();
+        Self { num_sets, ways }
+    }
+
+    #[inline]
+    pub fn num_sets(&self) -> usize {
+        self.num_sets
+    }
+
+    #[inline]
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Total slots = num_sets × ways.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.num_sets * self.ways
+    }
+
+    /// Set index for a key (xxh64, masked).
+    #[inline]
+    pub fn set_of(&self, key: u64) -> usize {
+        hash::set_index(key, self.num_sets)
+    }
+
+    /// Range of flat slot indices for a set (for SoA layouts).
+    #[inline]
+    pub fn slots_of(&self, set: usize) -> std::ops::Range<usize> {
+        let start = set * self.ways;
+        start..start + self.ways
+    }
+
+    /// Encode a user key into the internal key word (avoids the EMPTY and
+    /// RESERVED sentinels). Keys above `u64::MAX - 2` are not supported.
+    #[inline]
+    pub(crate) fn encode_key(key: u64) -> u64 {
+        debug_assert!(key <= u64::MAX - KEY_OFFSET, "key too large");
+        key + KEY_OFFSET
+    }
+
+    /// Inverse of [`Geometry::encode_key`].
+    #[inline]
+    #[allow(dead_code)]
+    pub(crate) fn decode_key(word: u64) -> u64 {
+        debug_assert!(word >= KEY_OFFSET);
+        word - KEY_OFFSET
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_set_count_to_power_of_two() {
+        let g = Geometry::new(2048, 8);
+        assert_eq!(g.num_sets(), 256);
+        assert_eq!(g.capacity(), 2048);
+        let g = Geometry::new(1000, 8); // 125 sets -> 128
+        assert_eq!(g.num_sets(), 128);
+        assert_eq!(g.capacity(), 1024);
+    }
+
+    #[test]
+    fn set_of_in_range() {
+        let g = Geometry::new(4096, 16);
+        for key in 0..10_000u64 {
+            assert!(g.set_of(key) < g.num_sets());
+        }
+    }
+
+    #[test]
+    fn slots_of_partitions_capacity() {
+        let g = Geometry::new(64, 4);
+        let mut seen = vec![false; g.capacity()];
+        for set in 0..g.num_sets() {
+            for slot in g.slots_of(set) {
+                assert!(!seen[slot]);
+                seen[slot] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn key_encoding_avoids_sentinels() {
+        for key in [0u64, 1, 2, 12345, u64::MAX - 2] {
+            let w = Geometry::encode_key(key);
+            assert_ne!(w, EMPTY);
+            assert_ne!(w, RESERVED);
+            assert_eq!(Geometry::decode_key(w), key);
+        }
+    }
+
+    #[test]
+    fn one_way_cache_is_direct_mapped() {
+        let g = Geometry::new(16, 1);
+        assert_eq!(g.num_sets(), 16);
+        assert_eq!(g.ways(), 1);
+    }
+}

@@ -1,0 +1,302 @@
+//! KW-LS — K-Way cache, Lock per Set (paper Algorithms 7–9).
+//!
+//! Each set carries a [`StampedLock`] and *plain* (non-atomic) entry
+//! storage. Operations take the read lock to scan; to mutate metadata or
+//! contents they attempt the `tryConvertToWriteLock` upgrade exactly as the
+//! paper does — and, exactly as the paper does, they *give up* when the
+//! upgrade fails (Alg. 8 lines 8–10, Alg. 9 lines 8–10): a hit whose
+//! upgrade fails still returns the value but skips the metadata update, and
+//! a put whose upgrade fails drops the insert. Both are benign for a cache
+//! and keep the lock protocol deadlock-free without lock re-acquisition.
+//!
+//! Each set is cache-line padded so sets stay as independent in memory as
+//! they are logically — the paper's independence argument made physical.
+
+use super::geometry::Geometry;
+use super::stamped::StampedLock;
+use super::with_thread_rng;
+use crate::policy::Policy;
+use crate::util::clock::LogicalClock;
+use crate::Cache;
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+
+const EMPTY: u64 = 0;
+
+/// One entry: encoded key word (0 = empty), value, policy metadata.
+#[derive(Clone, Copy, Default)]
+struct Entry {
+    key: u64,
+    value: u64,
+    meta: u64,
+}
+
+/// A set: lock + plain storage.
+struct LsSet {
+    lock: StampedLock,
+    entries: UnsafeCell<Box<[Entry]>>,
+}
+
+// SAFETY: `entries` is only accessed while holding `lock` in the
+// appropriate mode (shared for reads, exclusive for writes).
+unsafe impl Sync for LsSet {}
+unsafe impl Send for LsSet {}
+
+impl LsSet {
+    fn new(ways: usize) -> Self {
+        Self {
+            lock: StampedLock::new(),
+            entries: UnsafeCell::new(vec![Entry::default(); ways].into_boxed_slice()),
+        }
+    }
+}
+
+/// Lock-per-set k-way cache.
+pub struct KwLs {
+    geo: Geometry,
+    policy: Policy,
+    clock: LogicalClock,
+    sets: Box<[CachePadded<LsSet>]>,
+}
+
+impl KwLs {
+    pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
+        assert!(ways <= super::wfa::MAX_WAYS, "ways must be <= {}", super::wfa::MAX_WAYS);
+        let geo = Geometry::new(capacity, ways);
+        let sets = (0..geo.num_sets())
+            .map(|_| CachePadded::new(LsSet::new(geo.ways())))
+            .collect();
+        Self { geo, policy, clock: LogicalClock::new(), sets }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geo
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+}
+
+impl Cache for KwLs {
+    fn get(&self, key: u64) -> Option<u64> {
+        let ik = Geometry::encode_key(key);
+        let now = self.clock.tick();
+        let set = &self.sets[self.geo.set_of(key)];
+        set.lock.read_lock();
+        // SAFETY: read lock held.
+        let entries = unsafe { &*set.entries.get() };
+        for i in 0..entries.len() {
+            if entries[i].key == ik {
+                let value = entries[i].value;
+                if !self.policy.updates_on_hit() {
+                    set.lock.unlock_read();
+                    return Some(value);
+                }
+                // Alg. 8: upgrade to update the counter; on failure return
+                // the value without the metadata update.
+                if set.lock.try_convert_to_write() {
+                    // SAFETY: write lock held.
+                    let entries = unsafe { &mut *set.entries.get() };
+                    entries[i].meta = self.policy.on_hit_meta(entries[i].meta, now);
+                    set.lock.unlock_write();
+                } else {
+                    set.lock.unlock_read();
+                }
+                return Some(value);
+            }
+        }
+        set.lock.unlock_read();
+        None
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        let ik = Geometry::encode_key(key);
+        let now = self.clock.tick();
+        let set = &self.sets[self.geo.set_of(key)];
+        set.lock.read_lock();
+        // SAFETY: read lock held.
+        let entries = unsafe { &*set.entries.get() };
+
+        // Pass 1 (Alg. 9 lines 4–13): overwrite an existing entry.
+        for i in 0..entries.len() {
+            if entries[i].key == ik {
+                if set.lock.try_convert_to_write() {
+                    // SAFETY: write lock held.
+                    let entries = unsafe { &mut *set.entries.get() };
+                    entries[i].value = value;
+                    entries[i].meta = self.policy.on_hit_meta(entries[i].meta, now);
+                    set.lock.unlock_write();
+                } else {
+                    // Paper: give up when the upgrade fails.
+                    set.lock.unlock_read();
+                }
+                return;
+            }
+        }
+
+        // Miss path (Alg. 9 lines 15–27): upgrade, then fill an empty way
+        // or replace the policy victim.
+        if !set.lock.try_convert_to_write() {
+            set.lock.unlock_read();
+            return;
+        }
+        // SAFETY: write lock held.
+        let entries = unsafe { &mut *set.entries.get() };
+        let target = match entries.iter().position(|e| e.key == EMPTY) {
+            Some(i) => i,
+            None => {
+                let mut metas = [0u64; super::wfa::MAX_WAYS];
+                for (i, e) in entries.iter().enumerate() {
+                    metas[i] = e.meta;
+                }
+                with_thread_rng(|rng| {
+                    self.policy.select_victim(&metas[..entries.len()], now, rng)
+                })
+            }
+        };
+        entries[target] =
+            Entry { key: ik, value, meta: self.policy.initial_meta(now) };
+        set.lock.unlock_write();
+    }
+
+    fn capacity(&self) -> usize {
+        self.geo.capacity()
+    }
+
+    fn len(&self) -> usize {
+        let mut n = 0;
+        for set in self.sets.iter() {
+            set.lock.read_lock();
+            // SAFETY: read lock held.
+            let entries = unsafe { &*set.entries.get() };
+            n += entries.iter().filter(|e| e.key != EMPTY).count();
+            set.lock.unlock_read();
+        }
+        n
+    }
+
+    fn name(&self) -> &'static str {
+        "KW-LS"
+    }
+
+    fn peek_victim(&self, key: u64) -> Option<u64> {
+        let set = &self.sets[self.geo.set_of(key)];
+        let now = self.clock.now();
+        set.lock.read_lock();
+        // SAFETY: read lock held.
+        let entries = unsafe { &*set.entries.get() };
+        let result = if entries.iter().any(|e| e.key == EMPTY) {
+            None
+        } else {
+            let mut metas = [0u64; super::wfa::MAX_WAYS];
+            for (i, e) in entries.iter().enumerate() {
+                metas[i] = e.meta;
+            }
+            let vi = with_thread_rng(|rng| {
+                self.policy.select_victim(&metas[..entries.len()], now, rng)
+            });
+            Some(Geometry::decode_key(entries[vi].key))
+        };
+        set.lock.unlock_read();
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use std::sync::Arc;
+
+    #[test]
+    fn put_get_overwrite() {
+        let c = KwLs::new(64, 4, Policy::Lru);
+        assert_eq!(c.get(5), None);
+        c.put(5, 50);
+        assert_eq!(c.get(5), Some(50));
+        c.put(5, 51);
+        assert_eq!(c.get(5), Some(51));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let c = KwLs::new(64, 4, Policy::Hyperbolic);
+        for key in 0..10_000u64 {
+            c.put(key, key);
+        }
+        assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_set() {
+        let c = KwLs::new(4, 4, Policy::Lru);
+        for key in 0..4u64 {
+            c.put(key, key);
+        }
+        c.get(0);
+        c.get(1);
+        c.get(3);
+        c.put(100, 100);
+        assert_eq!(c.get(2), None);
+        assert_eq!(c.get(100), Some(100));
+    }
+
+    #[test]
+    fn all_policies_smoke() {
+        for p in Policy::ALL {
+            let c = KwLs::new(256, 8, p);
+            for key in 0..1000u64 {
+                c.put(key, key ^ 0xABCD);
+                assert_eq!(c.get(key), Some(key ^ 0xABCD), "policy {p:?}");
+            }
+            assert!(c.len() <= c.capacity());
+        }
+    }
+
+    #[test]
+    fn concurrent_put_get_no_phantoms() {
+        let c = Arc::new(KwLs::new(1024, 8, Policy::Lru));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(200 + t);
+                for _ in 0..20_000 {
+                    let key = rng.below(4096);
+                    if rng.chance(0.5) {
+                        c.put(key, key);
+                    } else if let Some(v) = c.get(key) {
+                        assert_eq!(v, key, "phantom value for key {key}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn property_single_thread_model() {
+        // Single-threaded: upgrades always succeed, so KW-LS behaves as an
+        // exact sequential k-way cache against the model.
+        check("ls-model", 20, |rng| {
+            let c = KwLs::new(128, 8, Policy::Lru);
+            let mut model = std::collections::HashMap::new();
+            for _ in 0..2000 {
+                let key = rng.below(512);
+                if rng.chance(0.6) {
+                    let value = rng.next_u64() >> 1;
+                    c.put(key, value);
+                    model.insert(key, value);
+                    assert_eq!(c.get(key), Some(value));
+                } else if let Some(v) = c.get(key) {
+                    assert_eq!(Some(&v), model.get(&key));
+                }
+            }
+        });
+    }
+}

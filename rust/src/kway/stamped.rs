@@ -1,0 +1,158 @@
+//! A StampedLock-alike: one atomic word giving shared read locks, an
+//! exclusive write lock, and — the part KW-LS needs — a *read→write
+//! upgrade* (`try_convert_to_write`), mirroring the
+//! `java.util.concurrent.locks.StampedLock` API used by the paper's
+//! Algorithms 7–9.
+//!
+//! State word: bit 63 = writer, bits 0..63 = reader count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const WRITER: u64 = 1 << 63;
+
+/// A per-set read/write lock with upgrade.
+#[derive(Debug, Default)]
+pub struct StampedLock {
+    state: AtomicU64,
+}
+
+impl StampedLock {
+    pub fn new() -> Self {
+        Self { state: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn spin(iter: &mut u32) {
+        *iter += 1;
+        if *iter % 64 == 0 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Acquire a shared read lock (blocks while a writer holds the lock).
+    #[inline]
+    pub fn read_lock(&self) {
+        let mut it = 0;
+        loop {
+            let s = self.state.load(Ordering::Relaxed);
+            if s & WRITER == 0
+                && self
+                    .state
+                    .compare_exchange_weak(s, s + 1, Ordering::Acquire, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return;
+            }
+            Self::spin(&mut it);
+        }
+    }
+
+    /// Release a shared read lock.
+    #[inline]
+    pub fn unlock_read(&self) {
+        let prev = self.state.fetch_sub(1, Ordering::Release);
+        debug_assert!(prev & !WRITER >= 1, "unlock_read without read_lock");
+    }
+
+    /// Try to upgrade: succeeds only when the caller is the *sole* reader
+    /// and no writer holds the lock (the `tryConvertToWriteLock` semantics
+    /// the paper relies on). On success the caller holds the write lock.
+    #[inline]
+    pub fn try_convert_to_write(&self) -> bool {
+        self.state
+            .compare_exchange(1, WRITER, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Acquire the exclusive write lock.
+    #[inline]
+    pub fn write_lock(&self) {
+        let mut it = 0;
+        loop {
+            if self
+                .state
+                .compare_exchange_weak(0, WRITER, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+            Self::spin(&mut it);
+        }
+    }
+
+    /// Release the write lock.
+    #[inline]
+    pub fn unlock_write(&self) {
+        let prev = self.state.swap(0, Ordering::Release);
+        debug_assert_eq!(prev, WRITER, "unlock_write without write_lock");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn readers_share() {
+        let l = StampedLock::new();
+        l.read_lock();
+        l.read_lock();
+        l.unlock_read();
+        l.unlock_read();
+    }
+
+    #[test]
+    fn upgrade_requires_sole_reader() {
+        let l = StampedLock::new();
+        l.read_lock();
+        l.read_lock();
+        assert!(!l.try_convert_to_write(), "upgrade must fail with two readers");
+        l.unlock_read();
+        assert!(l.try_convert_to_write(), "sole reader upgrades");
+        l.unlock_write();
+    }
+
+    #[test]
+    fn writer_excludes_readers() {
+        let l = Arc::new(StampedLock::new());
+        l.write_lock();
+        let l2 = l.clone();
+        let h = std::thread::spawn(move || {
+            l2.read_lock();
+            l2.unlock_read();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(!h.is_finished(), "reader must wait for the writer");
+        l.unlock_write();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn mutual_exclusion_counter() {
+        // Classic race detector: protected counter increments never lost.
+        struct Shared {
+            lock: StampedLock,
+            counter: std::cell::UnsafeCell<u64>,
+        }
+        unsafe impl Sync for Shared {}
+        let s = Arc::new(Shared { lock: StampedLock::new(), counter: 0.into() });
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    s.lock.write_lock();
+                    unsafe { *s.counter.get() += 1 };
+                    s.lock.unlock_write();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(unsafe { *s.counter.get() }, 40_000);
+    }
+}

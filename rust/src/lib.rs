@@ -1,0 +1,96 @@
+//! # kway — limited-associativity concurrent software caches
+//!
+//! A production-grade reproduction of *"Limited Associativity Makes
+//! Concurrent Software Caches a Breeze"* (Adas, Einziger & Friedman, 2021).
+//!
+//! The crate is organized as three layers:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: k-way
+//!   set-associative concurrent caches ([`kway`]) in three concurrency
+//!   flavours (`KW-WFA`, `KW-WFSC`, `KW-LS`), the fully-associative and
+//!   sampled baselines ([`fully`]), re-implementations of the
+//!   production-grade comparators Guava / Caffeine / segmented Caffeine
+//!   ([`products`]), the TinyLFU admission substrate ([`tinylfu`]), trace
+//!   models ([`trace`]), the hit-ratio simulator ([`sim`]), the
+//!   multi-threaded throughput harness ([`throughput`]) and the cache
+//!   service coordinator ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — a JAX formulation of the
+//!   set-parallel cache simulation and batched policy evaluation, AOT
+//!   lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the scan
+//!   hot-spots (victim selection, set probe, count-min sketch), called from
+//!   layer 2 and validated against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
+//! crate) so the rust binary never invokes python at run time.
+
+pub mod figures;
+pub mod util;
+pub mod policy;
+pub mod kway;
+pub mod fully;
+pub mod tinylfu;
+pub mod products;
+pub mod trace;
+pub mod sim;
+pub mod throughput;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod analysis;
+
+/// Common cache interface shared by every implementation in this crate.
+///
+/// Keys and values are `u64`. Trace-driven cache evaluation (the paper's
+/// methodology, Section 5.1.2) treats values as opaque handles; using a
+/// fixed-width value lets the wait-free variants store whole entries in
+/// plain atomics, which is the rust-idiomatic equivalent of the paper's
+/// Java `AtomicReferenceArray<Node>` (Java leans on the GC for node
+/// reclamation; we lean on fixed-width atomics — see DESIGN.md §Concurrency).
+pub trait Cache: Send + Sync {
+    /// Retrieve `key`'s value, updating the policy metadata on a hit.
+    fn get(&self, key: u64) -> Option<u64>;
+    /// Insert or overwrite `key`, evicting a victim if there is no room.
+    fn put(&self, key: u64, value: u64);
+    /// Maximum number of entries the cache may hold.
+    fn capacity(&self) -> usize;
+    /// Number of entries currently held (approximate under concurrency).
+    fn len(&self) -> usize;
+    /// True when no entries are present.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Human-readable implementation name (used by benches and reports).
+    fn name(&self) -> &'static str;
+    /// Which key would be evicted if `key` were inserted right now?
+    /// `None` = no eviction required (room available) or no preview
+    /// support. Used by the TinyLFU admission wrapper; the preview is
+    /// advisory under concurrency (the actual victim may differ), which is
+    /// fine for an approximate admission filter.
+    fn peek_victim(&self, _key: u64) -> Option<u64> {
+        None
+    }
+}
+
+/// A single-threaded cache simulation interface used by the hit-ratio
+/// simulator. Implementations that are `Cache` get this for free via the
+/// blanket impl; purely sequential baselines (linked-list LRU, O(1) LFU)
+/// implement it directly to avoid paying for synchronization they do not
+/// need.
+pub trait SimCache {
+    fn sim_get(&mut self, key: u64) -> bool;
+    fn sim_put(&mut self, key: u64);
+    fn sim_name(&self) -> String;
+}
+
+impl<C: Cache> SimCache for C {
+    fn sim_get(&mut self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+    fn sim_put(&mut self, key: u64) {
+        self.put(key, key)
+    }
+    fn sim_name(&self) -> String {
+        self.name().to_string()
+    }
+}

@@ -1,0 +1,260 @@
+//! `kway` — launcher for the limited-associativity cache system.
+//!
+//! Subcommands:
+//!   hitratio    hit-ratio sweep on a trace (Figures 4–13 series)
+//!   throughput  multi-threaded trace-replay throughput (Figures 14–26)
+//!   synthetic   synthetic-mix throughput (Figures 27–30)
+//!   serve       run the cache service demo (router + workers + metrics)
+//!   validate    cross-check the XLA artifacts against the native engine
+//!   ballsbins   Theorem 4.1 bound vs Monte-Carlo
+//!   info        list trace models, implementations and artifacts
+
+use anyhow::{anyhow, bail, Result};
+use kway::policy::Policy;
+use kway::sim::{self, Config};
+use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::trace::{loader, paper};
+use kway::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("hitratio") => cmd_hitratio(&args),
+        Some("throughput") => cmd_throughput(&args),
+        Some("synthetic") => cmd_synthetic(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("ballsbins") => cmd_ballsbins(&args),
+        Some("info") => cmd_info(),
+        other => {
+            eprintln!("unknown or missing subcommand {other:?}\n");
+            eprintln!("{}", HELP);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "usage: kway <subcommand> [--options]
+  hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
+  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5]
+  synthetic  --workload miss100|hit100|hit95|hit90 [--capacity 2097152] [--threads ...]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000]
+  validate   [--artifacts artifacts] [--trace oltp]
+  ballsbins  [--trials 500]
+  info";
+
+fn cmd_hitratio(args: &Args) -> Result<()> {
+    let trace_name = args.get_or("trace", "oltp");
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let len = args.get_parsed_or("len", 0usize)?;
+    let len = if len == 0 { paper::default_len(&trace_name) } else { len };
+    let trace = loader::resolve(&trace_name, len, seed)?;
+    let capacity = args.get_parsed_or("capacity", 2048usize)?;
+    let series = args.get_or("series", "lru");
+
+    let mut configs: Vec<Config> = Vec::new();
+    match series.as_str() {
+        "lru" => configs.extend(sim::lru_series()),
+        "lfu" => configs.extend(sim::lfu_tlfu_series()),
+        "products" => configs.extend(sim::products_series(8)),
+        "hyperbolic" => configs.extend(sim::hyperbolic_series(false)),
+        "hyperbolic-tlfu" => configs.extend(sim::hyperbolic_series(true)),
+        "all" => {
+            configs.extend(sim::lru_series());
+            configs.extend(sim::lfu_tlfu_series());
+            configs.extend(sim::products_series(8));
+            configs.extend(sim::hyperbolic_series(false));
+        }
+        other => bail!("unknown series {other:?}"),
+    }
+
+    println!(
+        "# hit-ratio: trace={} len={} unique={} capacity={}",
+        trace.name,
+        trace.len(),
+        trace.unique_keys(),
+        capacity
+    );
+    for row in sim::sweep(&trace, capacity, &configs, seed) {
+        println!("{:32} {:.4}", row.label, row.hit_ratio);
+    }
+    Ok(())
+}
+
+fn parse_threads(args: &Args) -> Result<Vec<usize>> {
+    args.get_list_or("threads", &[1, 2, 4, 8])
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    let trace_name = args.get_or("trace", "f1");
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let len = args.get_parsed_or("len", 0usize)?;
+    let len = if len == 0 { paper::default_len(&trace_name) } else { len };
+    let trace = Arc::new(loader::resolve(&trace_name, len, seed)?);
+    let capacity =
+        args.get_parsed_or("capacity", paper::paper_cache_size(&trace_name))?;
+    let impls: Vec<String> = args.get_list_or("impls", &IMPLS.map(String::from))?;
+    let threads = parse_threads(args)?;
+    let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 500u64)?);
+    let repeats = args.get_parsed_or("repeats", 5usize)?;
+    let policy = Policy::parse(&args.get_or("policy", "lru"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+
+    println!(
+        "# throughput: trace={} capacity={} duration={:?} repeats={} (Mops/s)",
+        trace.name, capacity, duration, repeats
+    );
+    print!("{:14}", "impl\\threads");
+    for t in &threads {
+        print!(" {t:>10}");
+    }
+    println!();
+    for name in &impls {
+        let workload = Workload::TraceReplay(trace.clone());
+        print!("{name:14}");
+        for &t in &threads {
+            let factory = impl_factory(name, capacity, t, policy)
+                .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let r = measure(&*factory, &workload, &cfg);
+            print!(" {:10.2}", r.mops.mean());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_synthetic(args: &Args) -> Result<()> {
+    let which = args.get_or("workload", "miss100");
+    let capacity = args.get_parsed_or("capacity", 1usize << 21)?;
+    let working_set = (capacity / 2) as u64;
+    let workload = match which.as_str() {
+        "miss100" => Workload::AllMiss,
+        "hit100" => Workload::AllHit { working_set },
+        "hit95" => Workload::HitRatio { working_set, gets_per_put: 19 },
+        "hit90" => Workload::HitRatio { working_set, gets_per_put: 9 },
+        other => bail!("unknown workload {other:?} (miss100|hit100|hit95|hit90)"),
+    };
+    let impls: Vec<String> = args.get_list_or("impls", &IMPLS.map(String::from))?;
+    let threads = parse_threads(args)?;
+    let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 500u64)?);
+    let repeats = args.get_parsed_or("repeats", 5usize)?;
+    let seed = args.get_parsed_or("seed", 42u64)?;
+
+    println!(
+        "# synthetic {}: capacity={} duration={:?} repeats={} (Mops/s)",
+        workload.label(),
+        capacity,
+        duration,
+        repeats
+    );
+    print!("{:14}", "impl\\threads");
+    for t in &threads {
+        print!(" {t:>10}");
+    }
+    println!();
+    for name in &impls {
+        print!("{name:14}");
+        for &t in &threads {
+            let factory = impl_factory(name, capacity, t, Policy::Lru)
+                .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let r = measure(&*factory, &workload, &cfg);
+            print!(" {:10.2}", r.mops.mean());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use kway::coordinator::{CacheService, ServiceConfig};
+    use kway::kway::KwWfsc;
+    let capacity = args.get_parsed_or("capacity", 65_536usize)?;
+    let workers = args.get_parsed_or("workers", 4usize)?;
+    let clients = args.get_parsed_or("clients", 8usize)?;
+    let requests = args.get_parsed_or("requests", 20_000usize)?;
+    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
+    println!(
+        "serving: cache={} capacity={} workers={workers} clients={clients} x {requests} reqs",
+        cache.name(),
+        cache.capacity()
+    );
+    let service = CacheService::start(cache, ServiceConfig { workers });
+    let secs = kway::coordinator::drive_clients(&service, clients, requests, (capacity * 4) as u64, 7);
+    let total = (clients * requests) as f64;
+    println!(
+        "done in {secs:.2}s — {:.0} req/s\n{}",
+        total / secs,
+        service.metrics().report()
+    );
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use kway::runtime::XlaRuntime;
+    use kway::sim::xla::{NativeSetSim, XlaSim};
+    let dir = args.get_or("artifacts", "artifacts");
+    let trace_name = args.get_or("trace", "oltp");
+    let rt = XlaRuntime::load(&dir)?;
+    println!("platform: {}; artifacts: {:?}", rt.platform(), rt.entry_names());
+    let sim = XlaSim::new(&rt, "cache_sim_k8")?;
+    let trace = loader::resolve(&trace_name, 4 * sim.chunk, 42)?;
+    let xla = sim.run(&trace)?;
+    let native = NativeSetSim::new(sim.num_sets, sim.ways).run(&trace.keys);
+    println!(
+        "trace={} accesses={} xla_hits={} native_hits={} -> {}",
+        trace.name,
+        xla.accesses,
+        xla.hits,
+        native.hits,
+        if xla.hits == native.hits { "MATCH" } else { "MISMATCH" }
+    );
+    if xla.hits != native.hits {
+        bail!("XLA / native divergence");
+    }
+    Ok(())
+}
+
+fn cmd_ballsbins(args: &Args) -> Result<()> {
+    use kway::analysis::{monte_carlo_overflow, theorem41_bound};
+    let trials = args.get_parsed_or("trials", 500u32)?;
+    println!("# Theorem 4.1: bound vs Monte-Carlo ({} trials)", trials);
+    println!("{:>10} {:>10} {:>6} {:>12} {:>12}", "C", "C'", "k", "bound", "empirical");
+    for (c, cp, k) in [
+        (2048u64, 4096u64, 16u64),
+        (4096, 8192, 32),
+        (4096, 8192, 64),
+        (100_000, 200_000, 64),
+        (1_000_000, 2_000_000, 128),
+    ] {
+        let bound = theorem41_bound(cp, k);
+        let mc = monte_carlo_overflow(c, cp, k, trials, 7);
+        println!("{c:>10} {cp:>10} {k:>6} {bound:>12.3e} {mc:>12.4}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("trace models: {}", paper::ALL.join(", "));
+    println!("implementations: {}", IMPLS.join(", "));
+    println!("policies: lru, lfu, fifo, random, hyperbolic");
+    match kway::runtime::XlaRuntime::load("artifacts") {
+        Ok(rt) => println!("artifacts ({}): {:?}", rt.platform(), rt.entry_names()),
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

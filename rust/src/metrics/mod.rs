@@ -1,0 +1,178 @@
+//! Service metrics: lock-free counters and a log-bucketed latency
+//! histogram (HdrHistogram-style, power-of-2 buckets with linear
+//! sub-buckets) used by the coordinator's request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two bucket (higher = finer percentiles).
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Covers 1ns .. ~2^40 ns (~18 minutes) of latency.
+const BUCKETS: usize = 41;
+
+/// A concurrent log-bucketed histogram of nanosecond latencies.
+pub struct LatencyHistogram {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS * SUB).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn index(nanos: u64) -> usize {
+        let n = nanos.max(1);
+        let bucket = (63 - n.leading_zeros()) as usize; // floor(log2 n)
+        let sub = if bucket as u32 >= SUB_BITS {
+            ((n >> (bucket as u32 - SUB_BITS)) as usize) & (SUB - 1)
+        } else {
+            (n as usize) & (SUB - 1)
+        };
+        (bucket.min(BUCKETS - 1)) * SUB + sub
+    }
+
+    /// Record one latency sample.
+    #[inline]
+    pub fn record(&self, nanos: u64) {
+        self.counts[Self::index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in nanoseconds.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile (upper bound of the containing bucket).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for i in 0..self.counts.len() {
+            seen += self.counts[i].load(Ordering::Relaxed);
+            if seen >= target {
+                let bucket = i / SUB;
+                let sub = i % SUB;
+                let base = 1u64 << bucket;
+                let width = if bucket as u32 >= SUB_BITS {
+                    1u64 << (bucket as u32 - SUB_BITS)
+                } else {
+                    1
+                };
+                return base + (sub as u64 + 1) * width;
+            }
+        }
+        u64::MAX
+    }
+
+    /// Render a short summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}ns p50={} p99={} p99.9={}",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(99.0),
+            self.percentile(99.9),
+        )
+    }
+}
+
+/// Named operation counters for the service.
+#[derive(Default)]
+pub struct OpCounters {
+    pub gets: AtomicU64,
+    pub puts: AtomicU64,
+    pub hits: AtomicU64,
+}
+
+impl OpCounters {
+    pub fn hit_ratio(&self) -> f64 {
+        let g = self.gets.load(Ordering::Relaxed);
+        if g == 0 {
+            0.0
+        } else {
+            self.hits.load(Ordering::Relaxed) as f64 / g as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_ordered_and_bracket_samples() {
+        let h = LatencyHistogram::new();
+        for n in 1..=10_000u64 {
+            h.record(n);
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p99);
+        // p50 of uniform 1..10000 is ~5000; log buckets are coarse, allow 2x.
+        assert!((2_500..=10_500).contains(&p50), "p50={p50}");
+        assert!(p99 >= 9_000, "p99={p99}");
+        assert!((h.mean() - 5000.5).abs() < 100.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for n in 0..10_000u64 {
+                    h.record(n % 1000 + 1);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn op_counters_ratio() {
+        let c = OpCounters::default();
+        c.gets.store(10, Ordering::Relaxed);
+        c.hits.store(4, Ordering::Relaxed);
+        assert!((c.hit_ratio() - 0.4).abs() < 1e-12);
+    }
+}

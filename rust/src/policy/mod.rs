@@ -1,0 +1,257 @@
+//! Eviction policies as *metadata semantics over one counter word per way*.
+//!
+//! The paper's key implementation observation (Section 3) is that with
+//! limited associativity, LRU / LFU / FIFO / Random / Hyperbolic all reduce
+//! to (a) how a per-entry counter is initialized, (b) how it is updated on
+//! a hit, and (c) a scan over at most K counters to pick the victim — no
+//! linked lists, heaps or ghost entries. This module encodes exactly that
+//! contract so every cache implementation (`kway::*`, the sampled
+//! baselines, the XLA-side simulator) shares one definition.
+//!
+//! Metadata packing:
+//! * LRU — the logical timestamp of the last access; victim = min.
+//! * LFU — the access count; victim = min.
+//! * FIFO — the insertion timestamp, never updated on hit; victim = min.
+//! * Random — metadata unused; victim = uniform way.
+//! * Hyperbolic — packs `(count: 24 bits | t0: 40 bits)`; the priority is
+//!   `count / (now - t0)` and the victim is the minimum. Comparison is done
+//!   with u128 cross-multiplication so the hot path stays float-free:
+//!   `n_a/(age_a) < n_b/(age_b)  ⟺  n_a·age_b < n_b·age_a`.
+
+use crate::util::rng::Rng;
+
+/// Bits reserved for the hyperbolic access count (saturating).
+const HYP_COUNT_BITS: u32 = 24;
+const HYP_T0_MASK: u64 = (1 << (64 - HYP_COUNT_BITS)) - 1;
+const HYP_COUNT_MAX: u64 = (1 << HYP_COUNT_BITS) - 1;
+
+/// The five eviction policies of the paper's K-Way implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    Lru,
+    Lfu,
+    Fifo,
+    Random,
+    Hyperbolic,
+}
+
+impl Policy {
+    /// All policies, for sweeps.
+    pub const ALL: [Policy; 5] =
+        [Policy::Lru, Policy::Lfu, Policy::Fifo, Policy::Random, Policy::Hyperbolic];
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(Policy::Lru),
+            "lfu" => Some(Policy::Lfu),
+            "fifo" => Some(Policy::Fifo),
+            "random" | "rand" => Some(Policy::Random),
+            "hyperbolic" | "hyp" => Some(Policy::Hyperbolic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Lru => "lru",
+            Policy::Lfu => "lfu",
+            Policy::Fifo => "fifo",
+            Policy::Random => "random",
+            Policy::Hyperbolic => "hyperbolic",
+        }
+    }
+
+    /// Metadata for a freshly inserted entry at logical time `now`.
+    #[inline]
+    pub fn initial_meta(&self, now: u64) -> u64 {
+        match self {
+            Policy::Lru | Policy::Fifo => now,
+            Policy::Lfu => 1,
+            Policy::Random => 0,
+            Policy::Hyperbolic => pack_hyperbolic(1, now),
+        }
+    }
+
+    /// Metadata after a hit at logical time `now`.
+    #[inline]
+    pub fn on_hit_meta(&self, old: u64, now: u64) -> u64 {
+        match self {
+            Policy::Lru => now,
+            Policy::Lfu => old.saturating_add(1),
+            Policy::Fifo | Policy::Random => old,
+            Policy::Hyperbolic => {
+                let (count, t0) = unpack_hyperbolic(old);
+                pack_hyperbolic((count + 1).min(HYP_COUNT_MAX), t0)
+            }
+        }
+    }
+
+    /// Does a hit need to write metadata back at all?
+    #[inline]
+    pub fn updates_on_hit(&self) -> bool {
+        !matches!(self, Policy::Fifo | Policy::Random)
+    }
+
+    /// True when entry `a` is a better (or equal) eviction victim than `b`.
+    #[inline]
+    pub fn victim_le(&self, a: u64, b: u64, now: u64) -> bool {
+        match self {
+            Policy::Lru | Policy::Lfu | Policy::Fifo => a <= b,
+            Policy::Random => true, // selection is done by the caller's RNG
+            Policy::Hyperbolic => {
+                let (na, t0a) = unpack_hyperbolic(a);
+                let (nb, t0b) = unpack_hyperbolic(b);
+                let age_a = now.saturating_sub(t0a).max(1) as u128;
+                let age_b = now.saturating_sub(t0b).max(1) as u128;
+                // priority_a <= priority_b  ⟺  na/age_a <= nb/age_b
+                (na as u128) * age_b <= (nb as u128) * age_a
+            }
+        }
+    }
+
+    /// Index of the victim among `metas` (all ways occupied). For `Random`
+    /// the choice is uniform via `rng`; for the rest it is the policy
+    /// minimum with ties broken towards the lowest index.
+    #[inline]
+    pub fn select_victim(&self, metas: &[u64], now: u64, rng: &mut Rng) -> usize {
+        debug_assert!(!metas.is_empty());
+        if matches!(self, Policy::Random) {
+            return rng.index(metas.len());
+        }
+        let mut best = 0usize;
+        for (i, &m) in metas.iter().enumerate().skip(1) {
+            if !self.victim_le(metas[best], m, now) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// A frequency estimate used by TinyLFU admission when comparing a
+    /// candidate against the victim this policy picked.
+    #[inline]
+    pub fn victim_freq_hint(&self, meta: u64) -> u64 {
+        match self {
+            Policy::Lfu => meta,
+            Policy::Hyperbolic => unpack_hyperbolic(meta).0,
+            _ => 0,
+        }
+    }
+}
+
+/// Pack (count, t0) into one hyperbolic metadata word.
+#[inline]
+pub fn pack_hyperbolic(count: u64, t0: u64) -> u64 {
+    (count.min(HYP_COUNT_MAX) << (64 - HYP_COUNT_BITS)) | (t0 & HYP_T0_MASK)
+}
+
+/// Unpack a hyperbolic metadata word into (count, t0).
+#[inline]
+pub fn unpack_hyperbolic(meta: u64) -> (u64, u64) {
+    (meta >> (64 - HYP_COUNT_BITS), meta & HYP_T0_MASK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names_round_trip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn lru_victim_is_oldest() {
+        let mut rng = Rng::new(1);
+        let metas = [50, 10, 90, 30];
+        assert_eq!(Policy::Lru.select_victim(&metas, 100, &mut rng), 1);
+    }
+
+    #[test]
+    fn lfu_victim_is_least_frequent() {
+        let mut rng = Rng::new(1);
+        let metas = [5, 3, 3, 9];
+        // Ties break to the lowest index.
+        assert_eq!(Policy::Lfu.select_victim(&metas, 100, &mut rng), 1);
+    }
+
+    #[test]
+    fn fifo_ignores_hits() {
+        let p = Policy::Fifo;
+        let m = p.initial_meta(7);
+        assert_eq!(p.on_hit_meta(m, 99), m);
+        assert!(!p.updates_on_hit());
+    }
+
+    #[test]
+    fn lru_hit_refreshes() {
+        let p = Policy::Lru;
+        assert_eq!(p.on_hit_meta(3, 42), 42);
+        assert!(p.updates_on_hit());
+    }
+
+    #[test]
+    fn lfu_hit_increments_and_saturates() {
+        let p = Policy::Lfu;
+        assert_eq!(p.on_hit_meta(3, 0), 4);
+        assert_eq!(p.on_hit_meta(u64::MAX, 0), u64::MAX);
+    }
+
+    #[test]
+    fn random_uses_rng_uniformly() {
+        let mut rng = Rng::new(3);
+        let metas = [0u64; 8];
+        let mut counts = [0u32; 8];
+        for _ in 0..8000 {
+            counts[Policy::Random.select_victim(&metas, 0, &mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 700 && c < 1300, "non-uniform random victim: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn hyperbolic_pack_unpack() {
+        let m = pack_hyperbolic(123, 456_789);
+        assert_eq!(unpack_hyperbolic(m), (123, 456_789));
+        // Saturation at the 24-bit counter limit.
+        let m = pack_hyperbolic(u64::MAX, 1);
+        assert_eq!(unpack_hyperbolic(m).0, (1 << 24) - 1);
+    }
+
+    #[test]
+    fn hyperbolic_prefers_low_rate() {
+        let mut rng = Rng::new(4);
+        let now = 1000;
+        // Entry 0: 10 accesses over age 100 (rate 0.1)
+        // Entry 1: 2 accesses over age 500  (rate 0.004)  <- victim
+        // Entry 2: 50 accesses over age 100 (rate 0.5)
+        let metas = [
+            pack_hyperbolic(10, 900),
+            pack_hyperbolic(2, 500),
+            pack_hyperbolic(50, 900),
+        ];
+        assert_eq!(Policy::Hyperbolic.select_victim(&metas, now, &mut rng), 1);
+    }
+
+    #[test]
+    fn hyperbolic_hit_bumps_count_not_t0() {
+        let p = Policy::Hyperbolic;
+        let m0 = p.initial_meta(10);
+        let m1 = p.on_hit_meta(m0, 500);
+        let (n, t0) = unpack_hyperbolic(m1);
+        assert_eq!(n, 2);
+        assert_eq!(t0, 10);
+    }
+
+    #[test]
+    fn victim_freq_hint() {
+        assert_eq!(Policy::Lfu.victim_freq_hint(7), 7);
+        assert_eq!(Policy::Hyperbolic.victim_freq_hint(pack_hyperbolic(9, 100)), 9);
+        assert_eq!(Policy::Lru.victim_freq_hint(1234), 0);
+    }
+}

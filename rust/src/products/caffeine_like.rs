@@ -1,0 +1,459 @@
+//! `CaffeineLike` — a re-implementation of the architecture of Caffeine
+//! (Ben Manes' W-TinyLFU cache), faithful to the properties the paper
+//! measures against:
+//!
+//! * **Reads** are cheap map reads; the access is recorded into a lossy
+//!   bounded *read buffer* (events are dropped when the buffer is full,
+//!   exactly like Caffeine) and applied to the policy asynchronously.
+//!   This is why "Caffeine is considerably faster than all alternatives"
+//!   at 100% hit ratio (Figure 28).
+//! * **Writes** insert into the map in the calling thread, then enqueue a
+//!   write event into a *bounded write buffer* drained by **one**
+//!   maintenance thread that runs the W-TinyLFU policy (window LRU →
+//!   TinyLFU admission → probation/protected SLRU). When writers outrun
+//!   the drain thread the write buffer fills and writers stall — the
+//!   single-threaded put bottleneck the paper observes in Figures 14–30.
+//!
+//! The map itself is a `ConcurrentHashMap` stand-in with lock-free reads
+//! and shard-locked writes (`super::shardmap::ShardMap`).
+
+use super::deque::AccessDeque;
+use super::shardmap::ShardMap;
+use crate::tinylfu::FrequencySketch;
+use crate::Cache;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+const SHARDS: usize = 64;
+const READ_BUFFER: usize = 4096;
+const READ_DRAIN_BATCH: usize = 512;
+const WRITE_BUFFER: usize = 4096;
+
+/// Where a key currently lives in the W-TinyLFU policy.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Region {
+    Window,
+    Probation,
+    Protected,
+}
+
+/// Policy state owned exclusively by the maintenance thread.
+struct PolicyState {
+    sketch: FrequencySketch,
+    region: HashMap<u64, Region>,
+    window: AccessDeque,
+    probation: AccessDeque,
+    protected: AccessDeque,
+    window_cap: usize,
+    probation_cap: usize,
+    protected_cap: usize,
+}
+
+impl PolicyState {
+    fn new(capacity: usize) -> Self {
+        // Caffeine defaults: 1% window, 99% main split 20/80
+        // probation/protected.
+        let window_cap = (capacity / 100).max(1);
+        let main = capacity - window_cap;
+        let protected_cap = (main * 4 / 5).max(1);
+        let probation_cap = (main - protected_cap).max(1);
+        Self {
+            sketch: FrequencySketch::new(capacity),
+            region: HashMap::with_capacity(capacity * 2),
+            window: AccessDeque::new(),
+            probation: AccessDeque::new(),
+            protected: AccessDeque::new(),
+            window_cap,
+            probation_cap,
+            protected_cap,
+        }
+    }
+
+    /// Apply one read event.
+    fn on_read(&mut self, key: u64) {
+        self.sketch.record(key);
+        match self.region.get(&key).copied() {
+            Some(Region::Window) => {
+                self.window.touch(key);
+            }
+            Some(Region::Probation) => {
+                // Promote to protected.
+                self.probation.remove(key);
+                self.protected.push_front(key);
+                self.region.insert(key, Region::Protected);
+                while self.protected.len() > self.protected_cap {
+                    if let Some(demoted) = self.protected.pop_back() {
+                        self.probation.push_front(demoted);
+                        self.region.insert(demoted, Region::Probation);
+                    }
+                }
+            }
+            Some(Region::Protected) => {
+                self.protected.touch(key);
+            }
+            None => {}
+        }
+    }
+
+    /// Apply one write (insertion) event; returns keys to evict from the
+    /// backing map.
+    fn on_write(&mut self, key: u64) -> Vec<u64> {
+        self.sketch.record(key);
+        if self.region.contains_key(&key) {
+            // Value update of a resident key: treat as an access.
+            self.on_read(key);
+            return Vec::new();
+        }
+        self.window.push_front(key);
+        self.region.insert(key, Region::Window);
+        let mut evicted = Vec::new();
+        // Overflow the window into the main space through admission.
+        while self.window.len() > self.window_cap {
+            let candidate = match self.window.pop_back() {
+                Some(c) => c,
+                None => break,
+            };
+            if self.probation.len() + self.protected.len()
+                < self.probation_cap + self.protected_cap
+            {
+                self.probation.push_front(candidate);
+                self.region.insert(candidate, Region::Probation);
+                continue;
+            }
+            let victim = match self.probation.back().or_else(|| self.protected.back()) {
+                Some(v) => v,
+                None => {
+                    self.probation.push_front(candidate);
+                    self.region.insert(candidate, Region::Probation);
+                    continue;
+                }
+            };
+            if self.sketch.admit(candidate, victim) {
+                // Candidate replaces the victim.
+                if !self.probation.remove(victim) {
+                    self.protected.remove(victim);
+                }
+                self.region.remove(&victim);
+                evicted.push(victim);
+                self.probation.push_front(candidate);
+                self.region.insert(candidate, Region::Probation);
+            } else {
+                self.region.remove(&candidate);
+                evicted.push(candidate);
+            }
+        }
+        evicted
+    }
+}
+
+/// Shared queues between callers and the maintenance thread.
+struct Buffers {
+    /// Lossy read ring: slots hold key+1 (0 = empty).
+    read_ring: Box<[AtomicU64]>,
+    read_head: AtomicU64,
+    write_queue: Mutex<VecDeque<u64>>,
+    work_ready: Condvar,
+    shutdown: AtomicBool,
+    /// Write events enqueued but not yet applied by the maintenance
+    /// thread; lets callers (tests, the deterministic hit-ratio
+    /// simulator) wait for the policy to catch up.
+    pending_writes: AtomicU64,
+    /// Read events sitting in the ring, not yet applied.
+    pending_reads: AtomicU64,
+}
+
+struct Shared {
+    /// `ConcurrentHashMap` stand-in: lock-free reads, shard-locked writes.
+    map: ShardMap,
+    buffers: Buffers,
+}
+
+/// W-TinyLFU product baseline (Caffeine architecture).
+pub struct CaffeineLike {
+    shared: Arc<Shared>,
+    capacity: usize,
+    drainer: Option<std::thread::JoinHandle<()>>,
+    /// Inline mode: the policy is applied synchronously under a mutex in
+    /// the caller thread instead of via buffers + drain thread. Used by
+    /// the hit-ratio simulator (deterministic and fast); the throughput
+    /// harness always uses the async mode, which is the architecture the
+    /// paper measures.
+    inline_policy: Option<Mutex<PolicyState>>,
+}
+
+impl CaffeineLike {
+    /// Deterministic single-threaded variant for simulation.
+    pub fn new_inline(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        let shared = Arc::new(Shared {
+            map: ShardMap::new(capacity + 64, SHARDS),
+            buffers: Buffers {
+                read_ring: Box::new([]),
+                read_head: AtomicU64::new(0),
+                write_queue: Mutex::new(VecDeque::new()),
+                work_ready: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                pending_writes: AtomicU64::new(0),
+                pending_reads: AtomicU64::new(0),
+            },
+        });
+        Self {
+            shared,
+            capacity,
+            drainer: None,
+            inline_policy: Some(Mutex::new(PolicyState::new(capacity))),
+        }
+    }
+
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        let shared = Arc::new(Shared {
+            map: ShardMap::new(capacity + WRITE_BUFFER + 1024, SHARDS),
+            buffers: Buffers {
+                read_ring: (0..READ_BUFFER).map(|_| AtomicU64::new(0)).collect(),
+                read_head: AtomicU64::new(0),
+                write_queue: Mutex::new(VecDeque::with_capacity(WRITE_BUFFER)),
+                work_ready: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                pending_writes: AtomicU64::new(0),
+                pending_reads: AtomicU64::new(0),
+            },
+        });
+        let drainer = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("caffeine-drain".into())
+                .spawn(move || Self::maintenance_loop(shared, capacity))
+                .expect("spawn maintenance thread")
+        };
+        Self { shared, capacity, drainer: Some(drainer), inline_policy: None }
+    }
+
+    /// The single policy/maintenance thread (Caffeine's async drain).
+    fn maintenance_loop(shared: Arc<Shared>, capacity: usize) {
+        let mut policy = PolicyState::new(capacity);
+        let mut read_cursor = 0usize;
+        loop {
+            // Drain pending write events (bounded batch per iteration).
+            let batch: Vec<u64> = {
+                let mut q = shared.buffers.write_queue.lock().unwrap();
+                if q.is_empty() && shared.buffers.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if q.is_empty() && shared.buffers.pending_reads.load(Ordering::Acquire) == 0 {
+                    // Sleep until work arrives (or shutdown). Reads that
+                    // race in are caught by the timeout.
+                    let (guard, _timeout) = shared
+                        .buffers
+                        .work_ready
+                        .wait_timeout(q, std::time::Duration::from_millis(1))
+                        .unwrap();
+                    q = guard;
+                }
+                q.drain(..).collect()
+            };
+            for key in batch {
+                for victim in policy.on_write(key) {
+                    shared.map.remove(victim);
+                }
+                shared.buffers.pending_writes.fetch_sub(1, Ordering::Release);
+            }
+            // Drain the lossy read ring (bounded batch per iteration —
+            // real Caffeine also samples reads rather than applying every
+            // one; on this single-core testbed the cap keeps the policy
+            // thread from starving the workload threads).
+            for _ in 0..READ_DRAIN_BATCH {
+                let slot = &shared.buffers.read_ring[read_cursor];
+                let v = slot.swap(0, Ordering::Relaxed);
+                read_cursor = (read_cursor + 1) % READ_BUFFER;
+                if v == 0 {
+                    break;
+                }
+                shared.buffers.pending_reads.fetch_sub(1, Ordering::Release);
+                policy.on_read(v - 1);
+            }
+        }
+    }
+
+    /// Block until every write event enqueued so far has been applied by
+    /// the maintenance thread. Used by tests and by the hit-ratio
+    /// simulator, which needs the policy to be deterministic relative to
+    /// the access stream.
+    pub fn drain_sync(&self) {
+        if self.inline_policy.is_some() {
+            return; // inline mode is always caught up
+        }
+        while self.shared.buffers.pending_writes.load(Ordering::Acquire) != 0
+            || self.shared.buffers.pending_reads.load(Ordering::Acquire) != 0
+        {
+            self.shared.buffers.work_ready.notify_one();
+            std::thread::yield_now();
+        }
+    }
+
+    /// Write events not yet applied by the maintenance thread.
+    pub fn pending_writes(&self) -> u64 {
+        self.shared.buffers.pending_writes.load(Ordering::Acquire)
+    }
+
+    /// Record a read event; lossy (dropped when the ring slot is taken).
+    /// Deliberately minimal — one fetch_add and one CAS — because this is
+    /// on the read hot path whose cheapness Figure 28 measures. The
+    /// drainer picks the ring up on its own cadence.
+    #[inline]
+    fn record_read(&self, key: u64) {
+        let head = self.shared.buffers.read_head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.shared.buffers.read_ring[(head as usize) % READ_BUFFER];
+        // Only write into a free slot — otherwise drop, like Caffeine.
+        if slot.compare_exchange(0, key + 1, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+            self.shared.buffers.pending_reads.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for CaffeineLike {
+    fn drop(&mut self) {
+        self.shared.buffers.shutdown.store(true, Ordering::Release);
+        self.shared.buffers.work_ready.notify_all();
+        if let Some(h) = self.drainer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Cache for CaffeineLike {
+    fn get(&self, key: u64) -> Option<u64> {
+        // Lock-free map read (the reason Caffeine dominates Figure 28).
+        let value = self.shared.map.get(key);
+        if value.is_some() {
+            if let Some(policy) = &self.inline_policy {
+                policy.lock().unwrap().on_read(key);
+            } else {
+                self.record_read(key);
+            }
+        }
+        value
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        // Foreground: map insert (shard write lock, brief).
+        self.shared.map.insert(key, value);
+        if let Some(policy) = &self.inline_policy {
+            let mut policy = policy.lock().unwrap();
+            for victim in policy.on_write(key) {
+                self.shared.map.remove(victim);
+            }
+            return;
+        }
+        // Policy work goes through the bounded write buffer; stall when
+        // full (Caffeine applies backpressure the same way).
+        loop {
+            {
+                let mut q = self.shared.buffers.write_queue.lock().unwrap();
+                if q.len() < WRITE_BUFFER {
+                    q.push_back(key);
+                    self.shared.buffers.pending_writes.fetch_add(1, Ordering::Release);
+                    break;
+                }
+            }
+            self.shared.buffers.work_ready.notify_one();
+            std::thread::yield_now();
+        }
+        self.shared.buffers.work_ready.notify_one();
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn len(&self) -> usize {
+        self.shared.map.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "Caffeine-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    fn drain_wait(c: &CaffeineLike) {
+        c.drain_sync();
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = CaffeineLike::new(128);
+        c.put(1, 10);
+        assert_eq!(c.get(1), Some(10));
+        c.put(1, 11);
+        assert_eq!(c.get(1), Some(11));
+    }
+
+    #[test]
+    fn eventually_bounded() {
+        let c = CaffeineLike::new(128);
+        for k in 0..10_000u64 {
+            c.put(k, k);
+        }
+        drain_wait(&c);
+        // Transient overshoot is allowed (async drain); after draining the
+        // resident set must be within capacity plus the in-flight window.
+        assert!(
+            c.len() <= 128 + 64,
+            "len {} far exceeds capacity after drain",
+            c.len()
+        );
+    }
+
+    #[test]
+    fn hot_keys_survive_scan() {
+        let c = CaffeineLike::new(128);
+        // Build frequency for a hot working set.
+        for _ in 0..50 {
+            for k in 0..64u64 {
+                if c.get(k).is_none() {
+                    c.put(k, k);
+                }
+            }
+            drain_wait(&c);
+        }
+        // One-pass scan of cold keys.
+        for k in 10_000..12_000u64 {
+            if c.get(k).is_none() {
+                c.put(k, k);
+            }
+        }
+        drain_wait(&c);
+        let survivors = (0..64u64).filter(|&k| c.get(k).is_some()).count();
+        assert!(survivors >= 32, "W-TinyLFU should protect hot keys, kept {survivors}/64");
+    }
+
+    #[test]
+    fn concurrent_smoke_and_clean_shutdown() {
+        let c = StdArc::new(CaffeineLike::new(1024));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(500 + t);
+                for _ in 0..5_000 {
+                    let key = rng.below(4096);
+                    if rng.chance(0.3) {
+                        c.put(key, key);
+                    } else if let Some(v) = c.get(key) {
+                        assert_eq!(v, key);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Drop joins the maintenance thread; must not hang.
+    }
+}

@@ -1,0 +1,180 @@
+//! An intrusive access-order deque (slab + key index) with explicit
+//! operations — the building block for the Guava-like segments and the
+//! Caffeine-like window/probation/protected regions. Unlike
+//! [`crate::fully::LruList`] it never evicts by itself; region policies
+//! decide when to pop.
+
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy)]
+struct Node {
+    key: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Access-order deque: front = most recently used, back = eviction end.
+#[derive(Default)]
+pub struct AccessDeque {
+    map: HashMap<u64, u32>,
+    nodes: Vec<Node>,
+    head: u32,
+    tail: u32,
+    free: Vec<u32>,
+}
+
+impl AccessDeque {
+    pub fn new() -> Self {
+        Self { map: HashMap::new(), nodes: Vec::new(), head: NIL, tail: NIL, free: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let node = self.nodes[idx as usize];
+        match node.prev {
+            NIL => self.head = node.next,
+            p => self.nodes[p as usize].next = node.next,
+        }
+        match node.next {
+            NIL => self.tail = node.prev,
+            n => self.nodes[n as usize].prev = node.prev,
+        }
+    }
+
+    fn link_front(&mut self, idx: u32) {
+        let old_head = self.head;
+        {
+            let node = &mut self.nodes[idx as usize];
+            node.prev = NIL;
+            node.next = old_head;
+        }
+        if old_head != NIL {
+            self.nodes[old_head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Insert a new key at the MRU end. Panics if already present.
+    pub fn push_front(&mut self, key: u64) {
+        assert!(!self.map.contains_key(&key), "push_front of resident key");
+        let idx = if let Some(idx) = self.free.pop() {
+            self.nodes[idx as usize] = Node { key, prev: NIL, next: NIL };
+            idx
+        } else {
+            self.nodes.push(Node { key, prev: NIL, next: NIL });
+            (self.nodes.len() - 1) as u32
+        };
+        self.link_front(idx);
+        self.map.insert(key, idx);
+    }
+
+    /// Move an existing key to the MRU end; false if absent.
+    pub fn touch(&mut self, key: u64) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            if self.head != idx {
+                self.unlink(idx);
+                self.link_front(idx);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove a specific key; false if absent.
+    pub fn remove(&mut self, key: u64) -> bool {
+        if let Some(idx) = self.map.remove(&key) {
+            self.unlink(idx);
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict from the LRU end.
+    pub fn pop_back(&mut self) -> Option<u64> {
+        if self.tail == NIL {
+            return None;
+        }
+        let idx = self.tail;
+        let key = self.nodes[idx as usize].key;
+        self.unlink(idx);
+        self.map.remove(&key);
+        self.free.push(idx);
+        Some(key)
+    }
+
+    /// Peek the LRU end.
+    pub fn back(&self) -> Option<u64> {
+        (self.tail != NIL).then(|| self.nodes[self.tail as usize].key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_without_touch() {
+        let mut d = AccessDeque::new();
+        for k in 1..=3 {
+            d.push_front(k);
+        }
+        assert_eq!(d.pop_back(), Some(1));
+        assert_eq!(d.pop_back(), Some(2));
+        assert_eq!(d.pop_back(), Some(3));
+        assert_eq!(d.pop_back(), None);
+    }
+
+    #[test]
+    fn touch_moves_to_front() {
+        let mut d = AccessDeque::new();
+        for k in 1..=3 {
+            d.push_front(k);
+        }
+        assert!(d.touch(1));
+        assert_eq!(d.back(), Some(2));
+        assert!(!d.touch(99));
+    }
+
+    #[test]
+    fn remove_and_reuse_slots() {
+        let mut d = AccessDeque::new();
+        for k in 1..=3 {
+            d.push_front(k);
+        }
+        assert!(d.remove(2));
+        assert!(!d.remove(2));
+        assert_eq!(d.len(), 2);
+        d.push_front(4); // reuses the freed slot
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.pop_back(), Some(1));
+        assert_eq!(d.pop_back(), Some(3));
+        assert_eq!(d.pop_back(), Some(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "push_front of resident key")]
+    fn duplicate_push_panics() {
+        let mut d = AccessDeque::new();
+        d.push_front(1);
+        d.push_front(1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Re-implementations of the production comparators from the paper's
+//! evaluation (§5.1): Guava, Caffeine and segmented Caffeine.
+//!
+//! These are *architectural* re-implementations: the Java libraries'
+//! behaviours that the paper's throughput analysis hinges on — Guava's
+//! foreground per-segment eviction, Caffeine's single-threaded write-drain
+//! with lossy read buffers, segmented Caffeine's hash routing — are
+//! reproduced exactly; incidental engineering (weak references, expiry
+//! timers, stats recording) is not.
+
+mod caffeine_like;
+mod shardmap;
+mod deque;
+mod guava_like;
+mod segmented;
+
+pub use caffeine_like::CaffeineLike;
+pub use deque::AccessDeque;
+pub use guava_like::GuavaLike;
+pub use segmented::SegmentedCaffeine;
+pub use shardmap::ShardMap;

@@ -1,0 +1,288 @@
+//! A fixed-capacity concurrent hash map with **lock-free reads** and
+//! shard-locked writes — the stand-in for Java's `ConcurrentHashMap` that
+//! Guava and Caffeine build on. Getting the read path lock-free matters
+//! for reproducing Figures 28–29, where the paper shows Caffeine's bare
+//! map reads beating every scan-based design at 100% hit ratio.
+//!
+//! Open addressing with linear probing; deletes leave tombstones.
+//! Capacity is fixed at construction (bounded caches never grow), sized
+//! with enough slack that the probe chains stay short.
+
+use crate::util::hash;
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+const EMPTY: u64 = 0;
+const TOMBSTONE: u64 = 1;
+const OFFSET: u64 = 2;
+
+struct Shard {
+    /// Serializes writers within the shard; readers never take it.
+    write_lock: Mutex<()>,
+    keys: Box<[AtomicU64]>,
+    values: Box<[AtomicU64]>,
+    len: AtomicUsize,
+    /// Tombstones currently in the table; when they exceed a quarter of
+    /// the slots the next insert purges the shard (rebuild in place).
+    tombs: AtomicUsize,
+    mask: usize,
+}
+
+impl Shard {
+    fn new(slots: usize) -> Self {
+        Self {
+            write_lock: Mutex::new(()),
+            keys: (0..slots).map(|_| AtomicU64::new(EMPTY)).collect(),
+            values: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+            len: AtomicUsize::new(0),
+            tombs: AtomicUsize::new(0),
+            mask: slots - 1,
+        }
+    }
+
+    /// Rebuild the shard without tombstones (caller holds `write_lock`).
+    /// Lock-free readers racing the purge may see a transient false miss
+    /// for a key that is being relocated — acceptable for a cache (a
+    /// false miss is a spurious re-fetch, never a wrong value), and it
+    /// keeps probe chains short under sustained churn, which dominates
+    /// the miss-path cost otherwise.
+    fn purge(&self) {
+        let n = self.mask + 1;
+        let mut live: Vec<(u64, u64)> = Vec::with_capacity(self.len.load(Ordering::Relaxed));
+        for i in 0..n {
+            let k = self.keys[i].load(Ordering::Relaxed);
+            if k >= OFFSET {
+                live.push((k, self.values[i].load(Ordering::Relaxed)));
+            }
+            self.keys[i].store(EMPTY, Ordering::Release);
+        }
+        for (ik, v) in live {
+            let start = (hash::xxh64_u64(ik - OFFSET, 0x5AAD) >> 32) as usize & self.mask;
+            for i in 0..n {
+                let idx = (start + i) & self.mask;
+                if self.keys[idx].load(Ordering::Relaxed) == EMPTY {
+                    self.values[idx].store(v, Ordering::Release);
+                    self.keys[idx].store(ik, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        self.tombs.store(0, Ordering::Release);
+    }
+}
+
+/// Sharded open-addressing concurrent map `u64 -> u64`.
+pub struct ShardMap {
+    shards: Box<[CachePadded<Shard>]>,
+    shard_mask: usize,
+}
+
+impl ShardMap {
+    /// A map that can hold `expected_max` entries across `shards` shards
+    /// (both rounded up to powers of two) with ~2.5x slot slack.
+    pub fn new(expected_max: usize, shards: usize) -> Self {
+        let nshards = shards.next_power_of_two();
+        let slots = ((expected_max * 5 / 2) / nshards + 8).next_power_of_two();
+        Self {
+            shards: (0..nshards).map(|_| CachePadded::new(Shard::new(slots))).collect(),
+            shard_mask: nshards - 1,
+        }
+    }
+
+    #[inline]
+    fn locate(&self, key: u64) -> (&Shard, usize) {
+        let h = hash::xxh64_u64(key, 0x5AAD);
+        let shard = &self.shards[(h as usize) & self.shard_mask];
+        let slot = ((h >> 32) as usize) & shard.mask;
+        (shard, slot)
+    }
+
+    /// Lock-free read.
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let ik = key + OFFSET;
+        let (shard, start) = self.locate(key);
+        let n = shard.mask + 1;
+        for i in 0..n {
+            let idx = (start + i) & shard.mask;
+            let k = shard.keys[idx].load(Ordering::Acquire);
+            if k == ik {
+                let v = shard.values[idx].load(Ordering::Acquire);
+                // Re-validate: a concurrent remove+reuse may have replaced
+                // the slot while we read the value.
+                if shard.keys[idx].load(Ordering::Acquire) == ik {
+                    return Some(v);
+                }
+                // Restart the probe: the chain mutated under us.
+                return self.get(key);
+            }
+            if k == EMPTY {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Insert or overwrite; returns true when the key was newly inserted.
+    pub fn insert(&self, key: u64, value: u64) -> bool {
+        let ik = key + OFFSET;
+        let (shard, start) = self.locate(key);
+        let _guard = shard.write_lock.lock().unwrap();
+        if shard.tombs.load(Ordering::Relaxed) > (shard.mask + 1) / 4 {
+            shard.purge();
+        }
+        let n = shard.mask + 1;
+        let mut tomb: Option<usize> = None;
+        for i in 0..n {
+            let idx = (start + i) & shard.mask;
+            let k = shard.keys[idx].load(Ordering::Relaxed);
+            if k == ik {
+                shard.values[idx].store(value, Ordering::Release);
+                return false;
+            }
+            if k == TOMBSTONE && tomb.is_none() {
+                tomb = Some(idx);
+            }
+            if k == EMPTY {
+                let reused = tomb.is_some();
+                let idx = tomb.unwrap_or(idx);
+                if reused {
+                    shard.tombs.fetch_sub(1, Ordering::Relaxed);
+                }
+                // Publish value before key so lock-free readers that match
+                // the key always see a valid value.
+                shard.values[idx].store(value, Ordering::Release);
+                shard.keys[idx].store(ik, Ordering::Release);
+                shard.len.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        // No EMPTY found; reuse a tombstone if we saw one.
+        if let Some(idx) = tomb {
+            shard.tombs.fetch_sub(1, Ordering::Relaxed);
+            shard.values[idx].store(value, Ordering::Release);
+            shard.keys[idx].store(ik, Ordering::Release);
+            shard.len.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        panic!("ShardMap shard full: sized for fewer entries than inserted");
+    }
+
+    /// Remove; returns true when the key was present.
+    pub fn remove(&self, key: u64) -> bool {
+        let ik = key + OFFSET;
+        let (shard, start) = self.locate(key);
+        let _guard = shard.write_lock.lock().unwrap();
+        let n = shard.mask + 1;
+        for i in 0..n {
+            let idx = (start + i) & shard.mask;
+            let k = shard.keys[idx].load(Ordering::Relaxed);
+            if k == ik {
+                shard.keys[idx].store(TOMBSTONE, Ordering::Release);
+                shard.len.fetch_sub(1, Ordering::Relaxed);
+                shard.tombs.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+            if k == EMPTY {
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Entry count (exact when quiescent).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn insert_get_remove() {
+        let m = ShardMap::new(1024, 4);
+        assert_eq!(m.get(5), None);
+        assert!(m.insert(5, 50));
+        assert!(!m.insert(5, 51)); // overwrite
+        assert_eq!(m.get(5), Some(51));
+        assert!(m.remove(5));
+        assert!(!m.remove(5));
+        assert_eq!(m.get(5), None);
+        assert_eq!(m.len(), 0);
+    }
+
+    #[test]
+    fn tombstone_reuse_keeps_chains_findable() {
+        let m = ShardMap::new(64, 1);
+        for k in 0..32u64 {
+            m.insert(k, k);
+        }
+        for k in (0..32u64).step_by(2) {
+            m.remove(k);
+        }
+        for k in 32..48u64 {
+            m.insert(k, k);
+        }
+        for k in (1..32u64).step_by(2) {
+            assert_eq!(m.get(k), Some(k), "odd key {k} lost after tombstone churn");
+        }
+        for k in 32..48u64 {
+            assert_eq!(m.get(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn key_zero_and_one_supported() {
+        // Internal sentinels must not clash with user keys 0/1.
+        let m = ShardMap::new(16, 1);
+        m.insert(0, 100);
+        m.insert(1, 101);
+        assert_eq!(m.get(0), Some(100));
+        assert_eq!(m.get(1), Some(101));
+    }
+
+    #[test]
+    fn concurrent_readers_during_writes() {
+        let m = Arc::new(ShardMap::new(4096, 8));
+        for k in 0..1024u64 {
+            m.insert(k, k * 2);
+        }
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(t);
+                for _ in 0..50_000 {
+                    let k = rng.below(2048);
+                    if rng.chance(0.2) {
+                        m.insert(k, k * 2);
+                    } else if rng.chance(0.1) {
+                        m.remove(k);
+                    } else if let Some(v) = m.get(k) {
+                        assert_eq!(v, k * 2, "phantom for key {k}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ShardMap shard full")]
+    fn overfull_panics_loudly() {
+        let m = ShardMap::new(4, 1);
+        for k in 0..1000u64 {
+            m.insert(k, k);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (which writes it) and the rust runtime (which reads it).
+//!
+//! Each entry records the artifact file plus the static shapes the module
+//! was lowered with, so the rust side can size its buffers without
+//! re-deriving anything from python.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntrySpec {
+    /// Entry-point name, e.g. `"victim_select_lru_k8"`.
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Kernel family, e.g. `"victim_select"`, `"cache_sim"`, `"sketch"`.
+    pub kind: String,
+    /// Static integer parameters the module was lowered with
+    /// (`k`, `num_sets`, `batch`, `chunk`, ... — keys vary by kind).
+    pub params: Vec<(String, i64)>,
+}
+
+impl EntrySpec {
+    /// Look up a static parameter by name.
+    pub fn param(&self, key: &str) -> Option<i64> {
+        self.params.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    /// Like [`EntrySpec::param`] but an error when missing.
+    pub fn require(&self, key: &str) -> Result<i64> {
+        self.param(key)
+            .ok_or_else(|| anyhow!("entry {} has no param {key:?}", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    /// Version stamp written by aot.py (jax/jaxlib versions).
+    pub producer: String,
+    /// All lowered entry points.
+    pub entries: Vec<EntrySpec>,
+}
+
+impl ArtifactManifest {
+    /// Parse `manifest.json` from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json::parse(text).context("parsing manifest json")?;
+        let obj = root.as_object().ok_or_else(|| anyhow!("manifest root must be an object"))?;
+        let producer = obj
+            .iter()
+            .find(|(k, _)| k == "producer")
+            .and_then(|(_, v)| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let entries_json = obj
+            .iter()
+            .find(|(k, _)| k == "entries")
+            .and_then(|(_, v)| v.as_array())
+            .ok_or_else(|| anyhow!("manifest must have an `entries` array"))?;
+        let mut entries = Vec::new();
+        for e in entries_json {
+            let eo = e.as_object().ok_or_else(|| anyhow!("entry must be an object"))?;
+            let get_str = |key: &str| -> Result<String> {
+                eo.iter()
+                    .find(|(k, _)| k == key)
+                    .and_then(|(_, v)| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("entry missing string field {key:?}"))
+            };
+            let mut params = Vec::new();
+            if let Some(p) = eo.iter().find(|(k, _)| k == "params").map(|(_, v)| v) {
+                let po = p.as_object().ok_or_else(|| anyhow!("params must be an object"))?;
+                for (k, v) in po {
+                    let n = v
+                        .as_i64()
+                        .ok_or_else(|| anyhow!("param {k:?} must be an integer"))?;
+                    params.push((k.clone(), n));
+                }
+            }
+            entries.push(EntrySpec {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                kind: get_str("kind")?,
+                params,
+            });
+        }
+        Ok(Self { producer, entries })
+    }
+
+    /// Find an entry by exact name.
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries of a given kind.
+    pub fn entries_of_kind(&self, kind: &str) -> Vec<&EntrySpec> {
+        self.entries.iter().filter(|e| e.kind == kind).collect()
+    }
+
+    /// Serialize back to JSON (used by tests to round-trip).
+    pub fn to_json(&self) -> String {
+        let mut entries = Vec::new();
+        for e in &self.entries {
+            let params = Json::Object(
+                e.params.iter().map(|(k, v)| (k.clone(), Json::Int(*v))).collect(),
+            );
+            entries.push(Json::Object(vec![
+                ("name".into(), Json::Str(e.name.clone())),
+                ("file".into(), Json::Str(e.file.clone())),
+                ("kind".into(), Json::Str(e.kind.clone())),
+                ("params".into(), params),
+            ]));
+        }
+        Json::Object(vec![
+            ("producer".into(), Json::Str(self.producer.clone())),
+            ("entries".into(), Json::Array(entries)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "producer": "jax 0.8.2",
+        "entries": [
+            {"name": "victim_select_lru_k8", "file": "victim_select_lru_k8.hlo.txt",
+             "kind": "victim_select", "params": {"k": 8, "batch": 4096}},
+            {"name": "cache_sim_k8", "file": "cache_sim_k8.hlo.txt",
+             "kind": "cache_sim", "params": {"k": 8, "num_sets": 1024, "chunk": 4096}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.producer, "jax 0.8.2");
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("victim_select_lru_k8").unwrap();
+        assert_eq!(e.kind, "victim_select");
+        assert_eq!(e.param("k"), Some(8));
+        assert_eq!(e.param("batch"), Some(4096));
+        assert_eq!(e.param("missing"), None);
+        assert!(e.require("missing").is_err());
+    }
+
+    #[test]
+    fn kind_filter() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries_of_kind("cache_sim").len(), 1);
+        assert_eq!(m.entries_of_kind("nope").len(), 0);
+    }
+
+    #[test]
+    fn round_trips() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        let again = ArtifactManifest::parse(&m.to_json()).unwrap();
+        assert_eq!(again.entries, m.entries);
+        assert_eq!(again.producer, m.producer);
+    }
+
+    #[test]
+    fn rejects_bad_root() {
+        assert!(ArtifactManifest::parse("[1,2,3]").is_err());
+        assert!(ArtifactManifest::parse("{}").is_err());
+    }
+}

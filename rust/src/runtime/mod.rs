@@ -1,0 +1,114 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Layer-2 (`python/compile/aot.py`) lowers every jitted entry point to HLO
+//! *text* (the xla_extension 0.5.1 bundled with the `xla` crate rejects
+//! jax>=0.5 serialized protos whose instruction ids exceed `INT_MAX`; the
+//! text parser reassigns ids, so text round-trips cleanly). This module is
+//! the only place that touches PJRT; everything above it deals in plain
+//! slices.
+
+mod manifest;
+
+pub use manifest::{ArtifactManifest, EntrySpec};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the set of compiled executables from `artifacts/`.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: ArtifactManifest,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and eagerly compile every artifact listed in
+    /// `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(Self { client, executables, manifest, dir })
+    }
+
+    /// Directory the artifacts were loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest describing every compiled entry point.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Names of all compiled entry points.
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Execute entry `name` with the given literals; returns the elements of
+    /// the result tuple (aot.py always lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable named {name:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        literal
+            .to_tuple()
+            .with_context(|| format!("decomposing result tuple of {name}"))
+    }
+}
+
+/// Build a rank-n `i32` literal from a flat slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a rank-n `u32` literal from a flat slice.
+pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a rank-n `f32` literal from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an `i32` scalar literal.
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a `Vec<T>` from a literal.
+pub fn to_vec<T: xla::ArrayElement>(lit: &xla::Literal) -> Result<Vec<T>> {
+    Ok(lit.to_vec::<T>()?)
+}

@@ -1,0 +1,368 @@
+//! Hit-ratio simulation: the engine behind the paper's Figures 4–13.
+//!
+//! The methodology follows §5.1.2: for each trace element, perform a
+//! read; on a miss, write the element. [`Config`] enumerates every cache
+//! configuration the figures compare — k-way at associativities
+//! 4…128, sampled eviction at the same sample sizes, the fully
+//! associative policies, the product baselines, each optionally behind
+//! TinyLFU admission — and [`sweep`] produces the figure's series.
+//!
+//! `xla.rs` runs the same k-way simulation through the AOT-compiled
+//! set-parallel XLA artifact (Layers 1–2) and is cross-validated against
+//! the native path in `rust/tests/xla_parity.rs`.
+
+pub mod xla;
+
+use crate::fully::{FifoQueue, HyperbolicFull, LfuOrdered, LruList, RandomFull, Sampled};
+use crate::kway::{KwLs, KwWfa, KwWfsc, Variant};
+use crate::policy::Policy;
+use crate::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
+use crate::tinylfu::TlfuSim;
+use crate::trace::Trace;
+use crate::{Cache, SimCache};
+
+/// Outcome of a simulation run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HitStats {
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl HitStats {
+    pub fn ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Drive one cache over a key sequence with the paper's read-then-write
+/// methodology.
+pub fn run(cache: &mut dyn SimCache, keys: &[u64]) -> HitStats {
+    let mut hits = 0u64;
+    for &key in keys {
+        if cache.sim_get(key) {
+            hits += 1;
+        } else {
+            cache.sim_put(key);
+        }
+    }
+    HitStats { accesses: keys.len() as u64, hits }
+}
+
+/// A cache configuration in the evaluation space.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Config {
+    /// k-way set-associative (any of the three concurrency variants —
+    /// they simulate identically single-threaded; WFSC is the default).
+    KWay { variant: Variant, ways: usize, policy: Policy, tlfu: bool },
+    /// Redis-style sampled eviction.
+    Sampled { sample: usize, policy: Policy, tlfu: bool },
+    /// Exact fully-associative LRU (linked list).
+    FullLru { tlfu: bool },
+    /// Exact fully-associative LFU.
+    FullLfu { tlfu: bool },
+    FullFifo,
+    FullRandom,
+    /// Hyperbolic caching; `sample >= capacity` = exact.
+    FullHyperbolic { sample: usize, tlfu: bool },
+    Guava { segments: usize },
+    Caffeine,
+    SegCaffeine { segments: usize },
+}
+
+impl Config {
+    /// Legend label, matching the paper's figure legends.
+    pub fn label(&self) -> String {
+        fn t(tlfu: bool) -> &'static str {
+            if tlfu {
+                "+TLFU"
+            } else {
+                ""
+            }
+        }
+        match self {
+            Config::KWay { ways, policy, tlfu, .. } => {
+                format!("{}-way {}{}", ways, policy.name(), t(*tlfu))
+            }
+            Config::Sampled { sample, policy, tlfu } => {
+                format!("sampled{} {}{}", sample, policy.name(), t(*tlfu))
+            }
+            Config::FullLru { tlfu } => format!("full lru{}", t(*tlfu)),
+            Config::FullLfu { tlfu } => format!("full lfu{}", t(*tlfu)),
+            Config::FullFifo => "full fifo".into(),
+            Config::FullRandom => "full random".into(),
+            Config::FullHyperbolic { sample, tlfu } => {
+                format!("full hyperbolic(s{}){}", sample, t(*tlfu))
+            }
+            Config::Guava { .. } => "Guava".into(),
+            Config::Caffeine => "Caffeine".into(),
+            Config::SegCaffeine { segments } => format!("segmented Caffeine x{segments}"),
+        }
+    }
+
+    /// Materialize a simulated cache of `capacity` entries.
+    pub fn build(&self, capacity: usize, seed: u64) -> Box<dyn SimCache> {
+        fn wrap<C: SimCache + crate::fully::SimVictimPeek + 'static>(
+            inner: C,
+            capacity: usize,
+            tlfu: bool,
+        ) -> Box<dyn SimCache> {
+            if tlfu {
+                Box::new(TlfuSim::new(inner, capacity))
+            } else {
+                Box::new(inner)
+            }
+        }
+        match *self {
+            Config::KWay { variant, ways, policy, tlfu } => match variant {
+                Variant::Wfa => wrap(KwWfa::new(capacity, ways, policy), capacity, tlfu),
+                Variant::Wfsc => wrap(KwWfsc::new(capacity, ways, policy), capacity, tlfu),
+                Variant::Ls => wrap(KwLs::new(capacity, ways, policy), capacity, tlfu),
+            },
+            Config::Sampled { sample, policy, tlfu } => {
+                // Hit-ratio simulation uses a single segment so sampling is
+                // global, exactly like Redis.
+                wrap(Sampled::new(capacity, sample, policy, 1), capacity, tlfu)
+            }
+            Config::FullLru { tlfu } => wrap(LruList::new(capacity), capacity, tlfu),
+            Config::FullLfu { tlfu } => wrap(LfuOrdered::new(capacity), capacity, tlfu),
+            Config::FullFifo => Box::new(FifoQueue::new(capacity)),
+            Config::FullRandom => Box::new(RandomFull::new(capacity, seed)),
+            Config::FullHyperbolic { sample, tlfu } => {
+                wrap(HyperbolicFull::new(capacity, sample, seed), capacity, tlfu)
+            }
+            Config::Guava { segments } => Box::new(GuavaLike::new(capacity, segments)),
+            Config::Caffeine => Box::new(SyncCaffeine::new(capacity)),
+            Config::SegCaffeine { segments } => {
+                Box::new(SyncSegCaffeine::new(capacity, segments))
+            }
+        }
+    }
+}
+
+/// Caffeine with the maintenance thread synchronized after every write,
+/// making the hit-ratio simulation deterministic with respect to the
+/// access stream (the real library applies policy asynchronously; syncing
+/// gives it its *best-case* hit ratio).
+struct SyncCaffeine {
+    inner: CaffeineLike,
+}
+
+impl SyncCaffeine {
+    fn new(capacity: usize) -> Self {
+        Self { inner: CaffeineLike::new_inline(capacity) }
+    }
+}
+
+impl SimCache for SyncCaffeine {
+    fn sim_get(&mut self, key: u64) -> bool {
+        self.inner.get(key).is_some()
+    }
+    fn sim_put(&mut self, key: u64) {
+        self.inner.put(key, key);
+    }
+    fn sim_name(&self) -> String {
+        "Caffeine(sync)".into()
+    }
+}
+
+struct SyncSegCaffeine {
+    inner: SegmentedCaffeine,
+}
+
+impl SyncSegCaffeine {
+    fn new(capacity: usize, segments: usize) -> Self {
+        Self { inner: SegmentedCaffeine::new_inline(capacity, segments) }
+    }
+}
+
+impl SimCache for SyncSegCaffeine {
+    fn sim_get(&mut self, key: u64) -> bool {
+        self.inner.get(key).is_some()
+    }
+    fn sim_put(&mut self, key: u64) {
+        self.inner.put(key, key);
+    }
+    fn sim_name(&self) -> String {
+        "segmented-Caffeine(sync)".into()
+    }
+}
+
+/// One row of a figure: configuration label and measured hit ratio.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub hit_ratio: f64,
+}
+
+/// Evaluate a set of configurations on one trace at one cache size.
+pub fn sweep(trace: &Trace, capacity: usize, configs: &[Config], seed: u64) -> Vec<Row> {
+    configs
+        .iter()
+        .map(|cfg| {
+            let mut cache = cfg.build(capacity, seed);
+            let stats = run(cache.as_mut(), &trace.keys);
+            Row { label: cfg.label(), hit_ratio: stats.ratio() }
+        })
+        .collect()
+}
+
+/// The associativity / sample-size series the figures sweep.
+pub const WAYS_SERIES: [usize; 6] = [4, 8, 16, 32, 64, 128];
+
+/// The standard series for a hit-ratio subfigure of kind (a): LRU.
+pub fn lru_series() -> Vec<Config> {
+    let mut v: Vec<Config> = WAYS_SERIES
+        .iter()
+        .map(|&ways| Config::KWay { variant: Variant::Wfsc, ways, policy: Policy::Lru, tlfu: false })
+        .collect();
+    v.extend(WAYS_SERIES.iter().map(|&sample| Config::Sampled {
+        sample,
+        policy: Policy::Lru,
+        tlfu: false,
+    }));
+    v.push(Config::FullLru { tlfu: false });
+    v
+}
+
+/// Subfigure (b): LFU eviction with TinyLFU admission.
+pub fn lfu_tlfu_series() -> Vec<Config> {
+    let mut v: Vec<Config> = WAYS_SERIES
+        .iter()
+        .map(|&ways| Config::KWay { variant: Variant::Wfsc, ways, policy: Policy::Lfu, tlfu: true })
+        .collect();
+    v.extend(WAYS_SERIES.iter().map(|&sample| Config::Sampled {
+        sample,
+        policy: Policy::Lfu,
+        tlfu: true,
+    }));
+    v.push(Config::FullLfu { tlfu: true });
+    v
+}
+
+/// Subfigure (c): the product baselines.
+pub fn products_series(threads_hint: usize) -> Vec<Config> {
+    vec![
+        Config::Guava { segments: 4 },
+        Config::Caffeine,
+        Config::SegCaffeine { segments: threads_hint.max(2) },
+    ]
+}
+
+/// Subfigure (d): Hyperbolic caching, optionally behind TinyLFU.
+pub fn hyperbolic_series(tlfu: bool) -> Vec<Config> {
+    let mut v: Vec<Config> = WAYS_SERIES
+        .iter()
+        .map(|&ways| Config::KWay {
+            variant: Variant::Wfsc,
+            ways,
+            policy: Policy::Hyperbolic,
+            tlfu,
+        })
+        .collect();
+    v.extend(WAYS_SERIES.iter().map(|&sample| Config::Sampled {
+        sample,
+        policy: Policy::Hyperbolic,
+        tlfu,
+    }));
+    v.push(Config::FullHyperbolic { sample: 64, tlfu });
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::paper;
+
+    #[test]
+    fn run_counts_hits() {
+        let mut cache = Config::FullLru { tlfu: false }.build(2, 0);
+        let stats = run(cache.as_mut(), &[1, 2, 1, 2, 3, 1]);
+        // 1:miss 2:miss 1:hit 2:hit 3:miss(evicts 1) 1:miss
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.accesses, 6);
+        assert!((stats.ratio() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kway_hit_ratio_close_to_full_lru() {
+        // The paper's core claim (Figures 4–13): 8-way ≈ fully associative.
+        let trace = paper::build("oltp", 200_000, 3).unwrap();
+        let capacity = 4096;
+        let full = {
+            let mut c = Config::FullLru { tlfu: false }.build(capacity, 0);
+            run(c.as_mut(), &trace.keys).ratio()
+        };
+        let kway8 = {
+            let mut c = Config::KWay {
+                variant: Variant::Wfsc,
+                ways: 8,
+                policy: Policy::Lru,
+                tlfu: false,
+            }
+            .build(capacity, 0);
+            run(c.as_mut(), &trace.keys).ratio()
+        };
+        assert!(full > 0.3, "trace too cold for the comparison: {full}");
+        assert!(
+            (full - kway8).abs() < 0.05,
+            "8-way LRU ({kway8:.3}) should be within 5pp of full LRU ({full:.3})"
+        );
+    }
+
+    #[test]
+    fn higher_associativity_monotone_ish() {
+        let trace = paper::build("oltp", 100_000, 4).unwrap();
+        let capacity = 2048;
+        let ratio = |ways| {
+            let mut c = Config::KWay {
+                variant: Variant::Wfsc,
+                ways,
+                policy: Policy::Lru,
+                tlfu: false,
+            }
+            .build(capacity, 0);
+            run(c.as_mut(), &trace.keys).ratio()
+        };
+        let r4 = ratio(4);
+        let r64 = ratio(64);
+        // 64-way must not be *worse* than 4-way by more than noise.
+        assert!(r64 >= r4 - 0.01, "r4={r4:.3} r64={r64:.3}");
+    }
+
+    #[test]
+    fn variants_simulate_identically() {
+        // Single-threaded, same policy/geometry => identical hit counts
+        // for WFSC and LS; WFA too (same scan order).
+        let trace = paper::build("multi1", 50_000, 5).unwrap();
+        let mut results = Vec::new();
+        for variant in Variant::ALL {
+            let mut c = Config::KWay { variant, ways: 8, policy: Policy::Lru, tlfu: false }
+                .build(1024, 0);
+            results.push(run(c.as_mut(), &trace.keys).hits);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn series_shapes() {
+        assert_eq!(lru_series().len(), 13);
+        assert_eq!(lfu_tlfu_series().len(), 13);
+        assert_eq!(products_series(8).len(), 3);
+        assert_eq!(hyperbolic_series(true).len(), 13);
+    }
+
+    #[test]
+    fn sweep_produces_labeled_rows() {
+        let trace = paper::build("sprite", 20_000, 6).unwrap();
+        let rows = sweep(&trace, 512, &products_series(2), 1);
+        assert_eq!(rows.len(), 3);
+        for row in &rows {
+            assert!(row.hit_ratio >= 0.0 && row.hit_ratio <= 1.0, "{row:?}");
+        }
+    }
+}

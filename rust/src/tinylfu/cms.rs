@@ -1,0 +1,196 @@
+//! TinyLFU frequency sketch: a 4-bit count-min sketch with a doorkeeper
+//! Bloom filter and periodic halving ("reset" aging), following
+//! Einziger, Friedman & Manes (ACM ToS 2017) — the admission substrate for
+//! both the paper's "LFU + TinyLFU admission" configuration and the
+//! Caffeine-like product baseline.
+
+use crate::util::hash;
+
+const ROWS: usize = 4;
+const COUNTER_MAX: u64 = 15;
+
+/// 4-bit count-min sketch + doorkeeper with periodic reset.
+pub struct FrequencySketch {
+    /// Each row is `width/16` u64 words, 16 nibble counters per word.
+    rows: Vec<Vec<u64>>,
+    width_mask: u64,
+    /// Doorkeeper bloom filter bits.
+    door: Vec<u64>,
+    door_mask: u64,
+    /// Accesses recorded since the last reset.
+    additions: u64,
+    /// Reset period (the TinyLFU "sample size", W = 10·C by default).
+    sample_size: u64,
+    resets: u64,
+}
+
+impl FrequencySketch {
+    /// Sketch sized for a cache of `capacity` entries: counter width is
+    /// the next power of two ≥ 8·capacity, sample size is 10·capacity.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(16);
+        let width = (8 * capacity).next_power_of_two() as u64;
+        let door_bits = (8 * capacity).next_power_of_two() as u64;
+        Self {
+            rows: (0..ROWS).map(|_| vec![0u64; (width / 16) as usize]).collect(),
+            width_mask: width - 1,
+            door: vec![0u64; (door_bits / 64) as usize],
+            door_mask: door_bits - 1,
+            additions: 0,
+            sample_size: 10 * capacity as u64,
+            resets: 0,
+        }
+    }
+
+    #[inline]
+    fn row_index(&self, key: u64, row: usize) -> (usize, u32) {
+        let h = hash::xxh64_u64(key, 0x1234_5678 + row as u64);
+        let slot = h & self.width_mask;
+        ((slot / 16) as usize, ((slot % 16) * 4) as u32)
+    }
+
+    #[inline]
+    fn door_bit(&self, key: u64, i: u64) -> (usize, u32) {
+        let h = hash::xxh64_u64(key, 0xD00D + i);
+        let bit = h & self.door_mask;
+        ((bit / 64) as usize, (bit % 64) as u32)
+    }
+
+    fn door_contains(&self, key: u64) -> bool {
+        (0..3).all(|i| {
+            let (word, bit) = self.door_bit(key, i);
+            self.door[word] >> bit & 1 == 1
+        })
+    }
+
+    fn door_insert(&mut self, key: u64) {
+        for i in 0..3 {
+            let (word, bit) = self.door_bit(key, i);
+            self.door[word] |= 1 << bit;
+        }
+    }
+
+    /// Record one access. First-time keys only set the doorkeeper; repeat
+    /// keys increment the sketch (saturating 4-bit counters). Every
+    /// `sample_size` records, all counters are halved and the doorkeeper
+    /// cleared — TinyLFU's aging mechanism.
+    pub fn record(&mut self, key: u64) {
+        if !self.door_contains(key) {
+            self.door_insert(key);
+        } else {
+            for row in 0..ROWS {
+                let (word, shift) = self.row_index(key, row);
+                let counter = (self.rows[row][word] >> shift) & 0xF;
+                if counter < COUNTER_MAX {
+                    self.rows[row][word] += 1 << shift;
+                }
+            }
+        }
+        self.additions += 1;
+        if self.additions >= self.sample_size {
+            self.reset();
+        }
+    }
+
+    /// Frequency estimate: sketch minimum plus the doorkeeper bit.
+    pub fn estimate(&self, key: u64) -> u64 {
+        let mut min = u64::MAX;
+        for row in 0..ROWS {
+            let (word, shift) = self.row_index(key, row);
+            min = min.min((self.rows[row][word] >> shift) & 0xF);
+        }
+        min + u64::from(self.door_contains(key))
+    }
+
+    /// Halve every counter and clear the doorkeeper.
+    fn reset(&mut self) {
+        for row in &mut self.rows {
+            for word in row.iter_mut() {
+                // Halve each nibble: shift right then clear the bit that
+                // leaked in from the neighbour nibble.
+                *word = (*word >> 1) & 0x7777_7777_7777_7777;
+            }
+        }
+        self.door.fill(0);
+        self.additions = 0;
+        self.resets += 1;
+    }
+
+    /// Number of resets so far (for tests and ablation reporting).
+    pub fn resets(&self) -> u64 {
+        self.resets
+    }
+
+    /// TinyLFU admission: admit `candidate` only if its estimated
+    /// frequency exceeds the `victim`'s.
+    pub fn admit(&self, candidate: u64, victim: u64) -> bool {
+        self.estimate(candidate) > self.estimate(victim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_track_frequency() {
+        let mut s = FrequencySketch::new(1024);
+        for _ in 0..10 {
+            s.record(42);
+        }
+        s.record(7);
+        assert!(s.estimate(42) >= 8, "hot key underestimated: {}", s.estimate(42));
+        assert!(s.estimate(7) <= 2);
+        assert_eq!(s.estimate(999_999), 0);
+    }
+
+    #[test]
+    fn doorkeeper_absorbs_singletons() {
+        let mut s = FrequencySketch::new(1024);
+        // One-hit wonders only set the doorkeeper; the sketch rows stay 0.
+        for key in 0..100u64 {
+            s.record(key);
+        }
+        for key in 0..100u64 {
+            assert!(s.estimate(key) <= 1);
+        }
+    }
+
+    #[test]
+    fn counters_saturate() {
+        let mut s = FrequencySketch::new(64);
+        // sample_size = 640 for capacity 64; stay below it (500 records).
+        for _ in 0..500 {
+            s.record(1);
+        }
+        assert!(s.estimate(1) <= COUNTER_MAX + 1);
+    }
+
+    #[test]
+    fn reset_halves() {
+        let mut s = FrequencySketch::new(16);
+        // capacity clamps to 16 -> sample = 160.
+        for _ in 0..100 {
+            s.record(5);
+        }
+        let before = s.estimate(5);
+        for i in 0..100u64 {
+            s.record(1000 + i); // push over the sample size
+        }
+        assert!(s.resets() >= 1);
+        let after = s.estimate(5);
+        assert!(after <= before / 2 + 1, "before={before} after={after}");
+    }
+
+    #[test]
+    fn admit_prefers_frequent() {
+        let mut s = FrequencySketch::new(1024);
+        for _ in 0..8 {
+            s.record(100);
+        }
+        s.record(200);
+        assert!(s.admit(100, 200), "frequent candidate must be admitted");
+        assert!(!s.admit(200, 100), "rare candidate must be rejected");
+        assert!(!s.admit(300, 300), "equal frequency is not admitted");
+    }
+}

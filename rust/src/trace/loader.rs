@@ -1,0 +1,164 @@
+//! Trace file loaders, so the *real* evaluation traces can replace the
+//! synthetic models without touching the harness:
+//!
+//! * **ARC format** (Megiddo & Modha's OLTP/DS1/P*/S* distribution):
+//!   whitespace-separated `start_block block_count ignored...` per line;
+//!   each line expands to `block_count` sequential keys.
+//! * **Plain format**: one integer key per line (the common normalized
+//!   form for the Wikipedia / LIRS traces).
+//! * **Binary format**: little-endian u64 keys, no header.
+
+use super::Trace;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// Load an ARC-format trace (`start count ...` lines).
+pub fn load_arc(path: impl AsRef<Path>) -> Result<Trace> {
+    let name = stem(&path);
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut keys = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let start: u64 = it
+            .next()
+            .with_context(|| format!("line {}: missing start block", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad start block", lineno + 1))?;
+        let count: u64 = match it.next() {
+            Some(c) => c.parse().with_context(|| format!("line {}: bad count", lineno + 1))?,
+            None => 1,
+        };
+        if count > 1_000_000 {
+            bail!("line {}: implausible block count {count}", lineno + 1);
+        }
+        keys.extend(start..start + count.max(1));
+    }
+    Ok(Trace::new(name, keys))
+}
+
+/// Load a plain one-key-per-line trace.
+pub fn load_plain(path: impl AsRef<Path>) -> Result<Trace> {
+    let name = stem(&path);
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut keys = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        keys.push(
+            line.parse::<u64>()
+                .with_context(|| format!("line {}: bad key {line:?}", lineno + 1))?,
+        );
+    }
+    Ok(Trace::new(name, keys))
+}
+
+/// Load a binary little-endian u64 trace.
+pub fn load_binary(path: impl AsRef<Path>) -> Result<Trace> {
+    let name = stem(&path);
+    let mut file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    if bytes.len() % 8 != 0 {
+        bail!("binary trace length {} is not a multiple of 8", bytes.len());
+    }
+    let keys = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Trace::new(name, keys))
+}
+
+/// Resolve a trace argument: a known model name (`wiki_a`, `oltp`, ...)
+/// or a path with an optional `arc:` / `plain:` / `bin:` prefix.
+pub fn resolve(spec: &str, len: usize, seed: u64) -> Result<Trace> {
+    if let Some(t) = super::paper::build(spec, len, seed) {
+        return Ok(t);
+    }
+    if let Some(p) = spec.strip_prefix("arc:") {
+        return load_arc(p);
+    }
+    if let Some(p) = spec.strip_prefix("plain:") {
+        return load_plain(p);
+    }
+    if let Some(p) = spec.strip_prefix("bin:") {
+        return load_binary(p);
+    }
+    bail!(
+        "unknown trace {spec:?}: expected one of {:?} or arc:/plain:/bin: path",
+        super::paper::ALL
+    )
+}
+
+fn stem(path: &impl AsRef<Path>) -> String {
+    path.as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "trace".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("kway-loader-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn arc_expands_block_ranges() {
+        let p = tmp("a.arc", b"100 3 0 0\n200 1\n# comment\n\n300 2 junk\n");
+        let t = load_arc(&p).unwrap();
+        assert_eq!(t.keys, vec![100, 101, 102, 200, 300, 301]);
+        assert_eq!(t.name, "a");
+    }
+
+    #[test]
+    fn plain_and_binary_round_trip() {
+        let p = tmp("b.txt", b"5\n6\n\n7\n");
+        assert_eq!(load_plain(&p).unwrap().keys, vec![5, 6, 7]);
+
+        let mut bytes = Vec::new();
+        for k in [1u64, 2, 3] {
+            bytes.extend_from_slice(&k.to_le_bytes());
+        }
+        let p = tmp("c.bin", &bytes);
+        assert_eq!(load_binary(&p).unwrap().keys, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bad_inputs_error() {
+        let p = tmp("bad.arc", b"notanumber 3\n");
+        assert!(load_arc(&p).is_err());
+        let p = tmp("bad.txt", b"12x\n");
+        assert!(load_plain(&p).is_err());
+        let p = tmp("bad.bin", &[1, 2, 3]);
+        assert!(load_binary(&p).is_err());
+    }
+
+    #[test]
+    fn resolve_models_and_paths() {
+        assert!(resolve("oltp", 10_000, 1).is_ok());
+        assert!(resolve("definitely-not-a-trace", 10_000, 1).is_err());
+        let p = tmp("r.txt", b"9\n");
+        let spec = format!("plain:{}", p.display());
+        assert_eq!(resolve(&spec, 0, 0).unwrap().keys, vec![9]);
+    }
+}

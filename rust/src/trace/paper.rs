@@ -1,0 +1,234 @@
+//! Synthetic models of the paper's sixteen evaluation traces (§5.1).
+//!
+//! Each model documents what the real trace is and which structural
+//! features the synthetic stand-in reproduces. Lengths default to 2M
+//! accesses (1M for the small interactive traces), which is enough for
+//! the hit-ratio comparisons to stabilize while keeping a full sweep fast.
+//!
+//! | model | real trace | structure reproduced |
+//! |---|---|---|
+//! | `wiki_a`/`wiki_b` | Wikipedia 10% sample, 2007 [43] | heavy Zipf head (α≈0.99) over a multi-million universe + slow diurnal drift |
+//! | `sprite` | Sprite NFS, 2 days [26] | small hot working set, very high attainable hit ratio, strong recency |
+//! | `multi1/2/3` | cs+cpp (+postgres, +glimpse) [26] | Zipf core + repeated sequential scans (loops) that flood LRU |
+//! | `oltp` | ARC OLTP file system [33] | strong recency + skewed hot records |
+//! | `ds1` | ARC DS1 database [33] | weak locality over a huge universe |
+//! | `s1`/`s3` | ARC search engines [33] | weak skew, very large universe, scan-ish reads |
+//! | `p8`/`p12`/`p14` | Windows server disks [33] | mixed: skew + bursts of sequential I/O |
+//! | `f1`/`f2` | UMass financial OLTP [44] | sharp Zipf (hot accounts) + recency drift |
+//! | `w2`/`w3` | UMass WebSearch [44] | near-uniform huge universe, low attainable hit ratio |
+
+use super::synthetic::{drift, mix, scan_total, uniform, zipf, Component};
+use super::Trace;
+use crate::util::rng::Rng;
+
+/// All model names, in the order the paper first shows them.
+pub const ALL: [&str; 16] = [
+    "wiki_a", "wiki_b", "sprite", "multi1", "multi2", "multi3", "oltp", "ds1", "s1", "s3",
+    "p8", "p12", "p14", "f1", "f2", "w3",
+];
+
+/// Default access count per model.
+pub fn default_len(name: &str) -> usize {
+    match name {
+        "sprite" | "multi1" | "multi2" | "multi3" | "oltp" | "f1" | "f2" | "wiki_a"
+        | "wiki_b" | "p8" => 1_000_000,
+        _ => 2_000_000,
+    }
+}
+
+/// Build a named trace model. `len` scales the access count; the seed
+/// fixes the instance. Unknown names return `None`.
+pub fn build(name: &str, len: usize, seed: u64) -> Option<Trace> {
+    let mut rng = Rng::new(seed ^ 0x7ACE_0000);
+    let keys = match name {
+        // Wikipedia: strong Zipf head + slow drift of the popular set.
+        "wiki_a" => mix(
+            vec![
+                Component { weight: 0.85, keys: zipf(len * 85 / 100, 4_000_000, 0.99, 0, &mut rng) },
+                Component {
+                    weight: 0.15,
+                    keys: drift(len * 15 / 100, 200_000, 0.9, 50_000, 20_000, 8_000_000, &mut rng),
+                },
+            ],
+            &mut rng,
+        ),
+        "wiki_b" => mix(
+            vec![
+                Component { weight: 0.85, keys: zipf(len * 85 / 100, 4_000_000, 0.96, 0, &mut rng) },
+                Component {
+                    weight: 0.15,
+                    keys: drift(len * 15 / 100, 300_000, 0.9, 40_000, 30_000, 8_000_000, &mut rng),
+                },
+            ],
+            &mut rng,
+        ),
+        // Sprite: tiny drifting working set -> very high hit ratios, pure
+        // recency (the trace where the paper's design *loses* on
+        // throughput to sampled, Figure 24).
+        "sprite" => drift(len, 6_000, 1.1, 25_000, 600, 0, &mut rng),
+        // multiN: interactive tools + compiler/glimpse/postgres scans.
+        "multi1" => mix(
+            vec![
+                Component { weight: 0.6, keys: zipf(len * 6 / 10, 60_000, 0.9, 0, &mut rng) },
+                Component { weight: 0.4, keys: scan_total(20_000, len * 4 / 10, 1_000_000) },
+            ],
+            &mut rng,
+        ),
+        "multi2" => mix(
+            vec![
+                Component { weight: 0.5, keys: zipf(len / 2, 80_000, 0.9, 0, &mut rng) },
+                Component { weight: 0.3, keys: scan_total(30_000, len * 3 / 10, 1_000_000) },
+                Component { weight: 0.2, keys: uniform(len / 5, 150_000, 2_000_000, &mut rng) },
+            ],
+            &mut rng,
+        ),
+        "multi3" => mix(
+            vec![
+                Component { weight: 0.4, keys: zipf(len * 4 / 10, 100_000, 0.9, 0, &mut rng) },
+                Component { weight: 0.3, keys: scan_total(40_000, len * 3 / 10, 1_000_000) },
+                Component { weight: 0.3, keys: uniform(len * 3 / 10, 250_000, 2_000_000, &mut rng) },
+            ],
+            &mut rng,
+        ),
+        // OLTP: hot records + recency.
+        "oltp" => mix(
+            vec![
+                Component { weight: 0.7, keys: zipf(len * 7 / 10, 150_000, 1.0, 0, &mut rng) },
+                Component {
+                    weight: 0.3,
+                    keys: drift(len * 3 / 10, 30_000, 1.0, 20_000, 4_000, 1_000_000, &mut rng),
+                },
+            ],
+            &mut rng,
+        ),
+        // DS1: big universe, weak locality.
+        "ds1" => zipf(len, 6_000_000, 0.75, 0, &mut rng),
+        // Search engines: weak skew over large universes.
+        "s1" => mix(
+            vec![
+                Component { weight: 0.8, keys: zipf(len * 8 / 10, 3_000_000, 0.7, 0, &mut rng) },
+                Component { weight: 0.2, keys: scan_total(100_000, len * 2 / 10, 10_000_000) },
+            ],
+            &mut rng,
+        ),
+        "s3" => mix(
+            vec![
+                Component { weight: 0.8, keys: zipf(len * 8 / 10, 3_500_000, 0.72, 0, &mut rng) },
+                Component { weight: 0.2, keys: scan_total(150_000, len * 2 / 10, 10_000_000) },
+            ],
+            &mut rng,
+        ),
+        // Windows server disks: skew + sequential bursts.
+        "p8" => mix(
+            vec![
+                Component { weight: 0.6, keys: zipf(len * 6 / 10, 400_000, 0.9, 0, &mut rng) },
+                Component { weight: 0.4, keys: scan_total(25_000, len * 4 / 10, 5_000_000) },
+            ],
+            &mut rng,
+        ),
+        "p12" => mix(
+            vec![
+                Component { weight: 0.55, keys: zipf(len * 55 / 100, 700_000, 0.85, 0, &mut rng) },
+                Component { weight: 0.45, keys: scan_total(60_000, len * 45 / 100, 5_000_000) },
+            ],
+            &mut rng,
+        ),
+        "p14" => mix(
+            vec![
+                Component { weight: 0.6, keys: zipf(len * 6 / 10, 500_000, 0.88, 0, &mut rng) },
+                Component { weight: 0.4, keys: scan_total(40_000, len * 4 / 10, 5_000_000) },
+            ],
+            &mut rng,
+        ),
+        // Financial transaction processing: sharp skew + drift.
+        "f1" => mix(
+            vec![
+                Component { weight: 0.8, keys: zipf(len * 8 / 10, 800_000, 1.05, 0, &mut rng) },
+                Component {
+                    weight: 0.2,
+                    keys: drift(len * 2 / 10, 50_000, 1.0, 30_000, 10_000, 2_000_000, &mut rng),
+                },
+            ],
+            &mut rng,
+        ),
+        "f2" => mix(
+            vec![
+                Component { weight: 0.8, keys: zipf(len * 8 / 10, 1_000_000, 1.02, 0, &mut rng) },
+                Component {
+                    weight: 0.2,
+                    keys: drift(len * 2 / 10, 60_000, 1.0, 25_000, 12_000, 2_500_000, &mut rng),
+                },
+            ],
+            &mut rng,
+        ),
+        // WebSearch: near-uniform over a huge universe.
+        "w2" | "w3" => mix(
+            vec![
+                Component { weight: 0.3, keys: zipf(len * 3 / 10, 2_000_000, 0.6, 0, &mut rng) },
+                Component { weight: 0.7, keys: uniform(len * 7 / 10, 8_000_000, 4_000_000, &mut rng) },
+            ],
+            &mut rng,
+        ),
+        _ => return None,
+    };
+    Some(Trace::new(name, keys))
+}
+
+/// Build with the model's default length.
+pub fn build_default(name: &str, seed: u64) -> Option<Trace> {
+    build(name, default_len(name), seed)
+}
+
+/// Cache sizes the paper uses per trace in the throughput study
+/// (Figures 14–26): 2^11 for the small traces, 2^17/2^19 for the big ones.
+pub fn paper_cache_size(name: &str) -> usize {
+    match name {
+        "s1" | "s3" | "w2" | "w3" => 1 << 19,
+        "p12" | "p14" => 1 << 17,
+        _ => 1 << 11,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build() {
+        for name in ALL {
+            let t = build(name, 50_000, 1).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(t.len() >= 45_000, "{name} too short: {}", t.len());
+            assert!(t.unique_keys() > 100, "{name} degenerate");
+        }
+        assert!(build("nope", 1000, 1).is_none());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = build("oltp", 10_000, 7).unwrap();
+        let b = build("oltp", 10_000, 7).unwrap();
+        assert_eq!(a.keys, b.keys);
+        let c = build("oltp", 10_000, 8).unwrap();
+        assert_ne!(a.keys, c.keys);
+    }
+
+    #[test]
+    fn sprite_is_high_locality() {
+        // Sprite's model must be far more cacheable than websearch's.
+        let sprite = build("sprite", 100_000, 1).unwrap();
+        let w3 = build("w3", 100_000, 1).unwrap();
+        let sprite_ratio = sprite.unique_keys() as f64 / sprite.len() as f64;
+        let w3_ratio = w3.unique_keys() as f64 / w3.len() as f64;
+        assert!(
+            sprite_ratio * 10.0 < w3_ratio,
+            "sprite {sprite_ratio:.3} vs w3 {w3_ratio:.3}"
+        );
+    }
+
+    #[test]
+    fn cache_sizes_match_paper() {
+        assert_eq!(paper_cache_size("f1"), 2048);
+        assert_eq!(paper_cache_size("s3"), 1 << 19);
+        assert_eq!(paper_cache_size("p12"), 1 << 17);
+    }
+}

@@ -1,0 +1,201 @@
+//! Synthetic workload building blocks.
+//!
+//! Each generator is deterministic in its seed. The [`Mix`] combinator
+//! interleaves components with given weights, which is how the models in
+//! [`super::paper`] compose skew (Zipf), recency (drifting working sets)
+//! and scans (sequential sweeps) into trace shapes that reward the same
+//! cache behaviours the corresponding real traces do.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Zipf-distributed accesses over `universe` keys with exponent `alpha`.
+/// Rank r maps to key `base + permute(r)` so that popularity is not
+/// correlated with key order (and therefore not with set placement).
+pub fn zipf(n: usize, universe: u64, alpha: f64, base: u64, rng: &mut Rng) -> Vec<u64> {
+    let dist = Zipf::new(universe, alpha);
+    (0..n)
+        .map(|_| {
+            let rank = dist.sample(rng);
+            base + scramble(rank, universe)
+        })
+        .collect()
+}
+
+/// Bijectively scramble a rank into the key space so that hot keys are
+/// spread uniformly over sets (a multiplicative hash mod universe would
+/// bias; we use a Feistel-ish mix and reject out-of-range).
+fn scramble(rank: u64, universe: u64) -> u64 {
+    // Cycle-walk a bijection over the next power of two until the image
+    // lands inside [0, universe): xorshift and odd-multiply steps are each
+    // invertible mod 2^bits, so their composition is a permutation and the
+    // walk terminates.
+    let bits = 64 - u32::min((universe - 1).leading_zeros(), 63);
+    let mask = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut x = rank & mask;
+    loop {
+        x ^= x >> 7;
+        x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15) & mask;
+        x ^= x >> 5;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9) & mask;
+        x ^= x >> 11;
+        if x < universe {
+            return x;
+        }
+    }
+}
+
+/// Uniform accesses over `universe` keys.
+pub fn uniform(n: usize, universe: u64, base: u64, rng: &mut Rng) -> Vec<u64> {
+    (0..n).map(|_| base + rng.below(universe)).collect()
+}
+
+/// Sequential scan(s): `repeats` passes over `[base, base+span)` — the
+/// glimpse / postgres-join pattern that LIRS-style traces contain and
+/// that floods LRU.
+pub fn scan(span: u64, repeats: usize, base: u64) -> Vec<u64> {
+    let mut out = Vec::with_capacity(span as usize * repeats);
+    for _ in 0..repeats {
+        out.extend((0..span).map(|i| base + i));
+    }
+    out
+}
+
+/// Exactly `n` scan accesses: cyclic passes over `[base, base+span)`
+/// truncated to length `n` (so short traces still contain a partial
+/// scan instead of rounding down to nothing).
+pub fn scan_total(span: u64, n: usize, base: u64) -> Vec<u64> {
+    (0..n).map(|i| base + (i as u64 % span)).collect()
+}
+
+/// A drifting working set: Zipf over a window of `window` keys whose base
+/// shifts by `shift` every `period` accesses — models diurnal drift
+/// (Wikipedia) and session locality (Sprite).
+pub fn drift(
+    n: usize,
+    window: u64,
+    alpha: f64,
+    period: usize,
+    shift: u64,
+    base: u64,
+    rng: &mut Rng,
+) -> Vec<u64> {
+    let dist = Zipf::new(window, alpha);
+    let mut out = Vec::with_capacity(n);
+    let mut origin = base;
+    for i in 0..n {
+        if i > 0 && i % period == 0 {
+            origin += shift;
+        }
+        out.push(origin + scramble(dist.sample(rng), window));
+    }
+    out
+}
+
+/// One weighted component of a [`Mix`].
+pub struct Component {
+    pub weight: f64,
+    pub keys: Vec<u64>,
+}
+
+/// Interleave components by weight (without replacement: each component's
+/// sequence order is preserved — scans stay sequential).
+pub fn mix(components: Vec<Component>, rng: &mut Rng) -> Vec<u64> {
+    let total_len: usize = components.iter().map(|c| c.keys.len()).sum();
+    let total_weight: f64 = components.iter().map(|c| c.weight).sum();
+    let mut cursors = vec![0usize; components.len()];
+    let mut out = Vec::with_capacity(total_len);
+    while out.len() < total_len {
+        // Draw a component proportional to weight; skip exhausted ones.
+        let mut pick = rng.f64() * total_weight;
+        let mut chosen = None;
+        for (i, c) in components.iter().enumerate() {
+            pick -= c.weight;
+            if pick <= 0.0 {
+                chosen = Some(i);
+                break;
+            }
+        }
+        let mut i = chosen.unwrap_or(components.len() - 1);
+        // Advance to a non-exhausted component.
+        let mut tried = 0;
+        while cursors[i] >= components[i].keys.len() {
+            i = (i + 1) % components.len();
+            tried += 1;
+            if tried > components.len() {
+                return out;
+            }
+        }
+        out.push(components[i].keys[cursors[i]]);
+        cursors[i] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_keys_in_range_and_skewed() {
+        let mut rng = Rng::new(1);
+        let keys = zipf(100_000, 10_000, 1.0, 0, &mut rng);
+        assert!(keys.iter().all(|&k| k < 10_000));
+        // The most common key should appear far more often than average.
+        let mut counts = std::collections::HashMap::new();
+        for &k in &keys {
+            *counts.entry(k).or_insert(0u32) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 50 * (100_000 / 10_000), "zipf not skewed enough: max={max}");
+    }
+
+    #[test]
+    fn scramble_is_injective_in_range() {
+        let universe = 1000u64;
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..universe {
+            let s = scramble(r, universe);
+            assert!(s < universe);
+            assert!(seen.insert(s), "scramble collided at rank {r}");
+        }
+    }
+
+    #[test]
+    fn scan_is_sequential() {
+        let keys = scan(5, 2, 100);
+        assert_eq!(keys, vec![100, 101, 102, 103, 104, 100, 101, 102, 103, 104]);
+    }
+
+    #[test]
+    fn drift_moves_the_window() {
+        let mut rng = Rng::new(2);
+        let keys = drift(10_000, 100, 0.8, 1000, 1000, 0, &mut rng);
+        let early_max = keys[..1000].iter().max().copied().unwrap();
+        let late_min_origin = keys[9000..].iter().min().copied().unwrap();
+        assert!(late_min_origin > early_max, "window should have drifted past the start");
+    }
+
+    #[test]
+    fn mix_preserves_component_order_and_length() {
+        let mut rng = Rng::new(3);
+        let m = mix(
+            vec![
+                Component { weight: 1.0, keys: vec![1, 2, 3] },
+                Component { weight: 1.0, keys: vec![10, 20] },
+            ],
+            &mut rng,
+        );
+        assert_eq!(m.len(), 5);
+        let a: Vec<u64> = m.iter().copied().filter(|&k| k < 10).collect();
+        assert_eq!(a, vec![1, 2, 3], "component order must be preserved");
+    }
+
+    #[test]
+    fn uniform_covers_universe() {
+        let mut rng = Rng::new(4);
+        let keys = uniform(10_000, 100, 500, &mut rng);
+        assert!(keys.iter().all(|&k| (500..600).contains(&k)));
+        let distinct: std::collections::HashSet<_> = keys.iter().collect();
+        assert!(distinct.len() > 90);
+    }
+}

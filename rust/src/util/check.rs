@@ -1,0 +1,95 @@
+//! A small property-testing harness (proptest is not available offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property under many independently
+//! seeded RNGs and reports the failing seed so any counterexample can be
+//! replayed with `replay(seed, prop)`. Used for the cache invariants
+//! (occupancy bounds, no phantom keys, model equivalence) in module tests
+//! and `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Base seed: fixed so CI is deterministic; override with KWAY_CHECK_SEED.
+fn base_seed() -> u64 {
+    std::env::var("KWAY_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_0001)
+}
+
+/// Run `prop` for `cases` independently seeded cases; panics with the seed
+/// on the first failure (propagating the property's own panic message).
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed on case {case} (replay with \
+                 KWAY_CHECK_SEED-independent seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single property case with an explicit seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_quietly() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_rng| {
+                panic!("intentional");
+            });
+        });
+        let msg = match result {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always-fails"), "msg: {msg}");
+        assert!(msg.contains("intentional"), "msg: {msg}");
+        assert!(msg.contains("seed"), "msg: {msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = Vec::new();
+        replay(42, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        replay(42, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,146 @@
+//! A small command-line parser (clap is not available in the offline
+//! build): subcommand + `--key value` / `--flag` options + positionals.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand, named options, flags and
+/// positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// The first non-`--` token becomes the subcommand.
+    pub fn parse<I, S>(raw: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|next| !next.starts_with("--")) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String-valued option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with a default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("invalid value {s:?} for --{key}: {e}")),
+        }
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option, e.g. `--ways 4,8,16`.
+    pub fn get_list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    part.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow!("invalid element {part:?} in --{key}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        // Convention: positionals come before options; a bare `--name`
+        // followed by a non-dash token is parsed as `name=token`.
+        let a = Args::parse([
+            "bench", "extra1", "extra2", "--trace", "wiki_a", "--threads=8", "--verbose",
+        ])
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("trace"), Some("wiki_a"));
+        assert_eq!(a.get("threads"), Some("8"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn typed_and_list_parsing() {
+        let a = Args::parse(["x", "--n", "42", "--ways", "4,8,16"]).unwrap();
+        assert_eq!(a.get_parsed_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parsed_or("missing", 7u32).unwrap(), 7);
+        assert_eq!(a.get_list_or::<usize>("ways", &[]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.get_list_or::<usize>("absent", &[1, 2]).unwrap(), vec![1, 2]);
+        assert!(a.get_parsed_or("n", 0i8).is_ok());
+        let bad = Args::parse(["x", "--n", "notanum"]).unwrap();
+        assert!(bad.get_parsed_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_nothing() {
+        let a = Args::parse(["run", "--fast"]).unwrap();
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(["--only", "opts"]).unwrap();
+        assert_eq!(a.command, None);
+        assert_eq!(a.get("only"), Some("opts"));
+    }
+}

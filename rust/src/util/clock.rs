@@ -1,0 +1,93 @@
+//! Clocks: a shared logical clock (the `AtomicLong time` of the paper's
+//! Algorithm 1, used by the LRU/Hyperbolic policies) and a tiny wall-clock
+//! timer for the benchmark harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotone logical clock shared by all sets of a cache. LRU policies
+/// stamp entries with `tick()`; Hyperbolic divides access counts by the
+/// logical age derived from it.
+#[derive(Debug, Default)]
+pub struct LogicalClock {
+    now: AtomicU64,
+}
+
+impl LogicalClock {
+    pub fn new() -> Self {
+        // Start at 1 so that "0" can serve as the never-touched sentinel.
+        Self { now: AtomicU64::new(1) }
+    }
+
+    /// Advance and return the new timestamp.
+    #[inline]
+    pub fn tick(&self) -> u64 {
+        self.now.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Read without advancing.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.now.load(Ordering::Relaxed)
+    }
+}
+
+/// Wall-clock stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_are_monotone_and_start_past_zero() {
+        let c = LogicalClock::new();
+        let a = c.tick();
+        let b = c.tick();
+        assert!(a >= 2);
+        assert!(b > a);
+        assert_eq!(c.now(), b);
+    }
+
+    #[test]
+    fn concurrent_ticks_unique() {
+        let c = std::sync::Arc::new(LogicalClock::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| c.tick()).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), before, "logical timestamps must be unique");
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_secs() > 0.0);
+        assert!(sw.elapsed_nanos() > 0);
+    }
+}

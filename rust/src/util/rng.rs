@@ -1,0 +1,288 @@
+//! Deterministic pseudo-random generation: SplitMix64 seeding,
+//! Xoshiro256++ core, and a Zipf(α) sampler.
+//!
+//! Everything here is reproducible from a `u64` seed so every experiment in
+//! EXPERIMENTS.md can be regenerated bit-for-bit.
+
+/// Xoshiro256++ PRNG (Blackman & Vigna), seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion, as recommended by the xoshiro authors.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Self { s }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (no modulo bias
+    /// worth caring about at these bounds).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.index(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Split off an independent child generator (for per-thread streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Zipf(α) sampler over `{0, 1, ..., n-1}` (rank 0 is the most popular)
+/// using Hörmann's rejection-inversion method — O(1) per sample for any
+/// exponent > 0, including α = 1.
+///
+/// This is the workload backbone: web/storage traces are classically
+/// modelled as Zipf-like with α between 0.6 and 1.1.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    h_integral_x1: f64,
+    h_integral_num: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf needs a non-empty universe");
+        assert!(alpha > 0.0, "Zipf exponent must be positive");
+        let h_integral = |x: f64| -> f64 { helper_h_integral(x, alpha) };
+        Self {
+            n,
+            alpha,
+            h_integral_x1: h_integral(1.5) - 1.0,
+            h_integral_num: h_integral(n as f64 + 0.5),
+            s: 2.0 - helper_h_integral_inverse(h_integral(2.5) - helper_h(2.0, alpha), alpha),
+        }
+    }
+
+    /// Universe size.
+    pub fn universe(&self) -> u64 {
+        self.n
+    }
+
+    /// Exponent.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.h_integral_num
+                + rng.f64() * (self.h_integral_x1 - self.h_integral_num);
+            let x = helper_h_integral_inverse(u, self.alpha);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= helper_h_integral(k + 0.5, self.alpha) - helper_h(k, self.alpha)
+            {
+                return (k as u64) - 1;
+            }
+        }
+    }
+}
+
+// Numerically stable helpers, following the Apache Commons RNG
+// RejectionInversionZipfSampler formulation (Hörmann & Derflinger).
+// H(x) = ((x^(1-α)) - 1) / (1-α) is written as helper2((1-α)·ln x)·ln x with
+// helper2(t) = expm1(t)/t, which is exact in the α→1 limit.
+
+/// H(x), the integral of the hat function h(x) = x^(-α).
+fn helper_h_integral(x: f64, alpha: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - alpha) * log_x) * log_x
+}
+
+/// h(x) = x^(-α).
+fn helper_h(x: f64, alpha: f64) -> f64 {
+    (-alpha * x.ln()).exp()
+}
+
+/// H⁻¹(x).
+fn helper_h_integral_inverse(x: f64, alpha: f64) -> f64 {
+    let mut t = x * (1.0 - alpha);
+    if t < -1.0 {
+        // Numerical clamp: the inverse is only evaluated on H's range.
+        t = -1.0;
+    }
+    (helper1(t) * x).exp()
+}
+
+/// log1p(x)/x, continued with value 1 at x = 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - x * 0.25))
+    }
+}
+
+/// expm1(x)/x, continued with value 1 at x = 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x * (1.0 / 3.0) * (1.0 + x * 0.25))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_ranks_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn zipf_rank0_most_popular() {
+        for &alpha in &[0.6, 0.8, 1.0, 1.2] {
+            let z = Zipf::new(10_000, alpha);
+            let mut rng = Rng::new(5);
+            let mut counts = vec![0u32; 10_000];
+            for _ in 0..200_000 {
+                counts[z.sample(&mut rng) as usize] += 1;
+            }
+            // Head dominance: rank 0 beats rank 10 beats rank 1000.
+            assert!(counts[0] > counts[10], "alpha={alpha}");
+            assert!(counts[10] > counts[1000], "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn zipf_alpha1_frequency_ratio() {
+        // For α=1, f(rank 1)/f(rank 10) ≈ 10.
+        let z = Zipf::new(100_000, 1.0);
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0u32; 100];
+        let n = 2_000_000;
+        for _ in 0..n {
+            let r = z.sample(&mut rng);
+            if r < 100 {
+                counts[r as usize] += 1;
+            }
+        }
+        let ratio = counts[0] as f64 / counts[9] as f64;
+        assert!((ratio - 10.0).abs() < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut parent = Rng::new(9);
+        let mut a = parent.fork();
+        let mut b = parent.fork();
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,195 @@
+//! Concurrency stress tests across every concurrent cache implementation:
+//! no phantom values, bounded occupancy, progress under oversubscription,
+//! and single-threaded equivalence between the three k-way variants.
+
+use kway::fully::Sampled;
+use kway::kway::{build, Variant};
+use kway::policy::Policy;
+use kway::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
+use kway::util::check::check;
+use kway::util::rng::Rng;
+use kway::Cache;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn all_impls(capacity: usize) -> Vec<Arc<dyn Cache>> {
+    let mut v: Vec<Arc<dyn Cache>> = Vec::new();
+    for variant in Variant::ALL {
+        v.push(Arc::from(build(variant, capacity, 8, Policy::Lru)));
+    }
+    v.push(Arc::new(Sampled::with_defaults(capacity, 8, Policy::Lru)));
+    v.push(Arc::new(GuavaLike::new(capacity, 4)));
+    v.push(Arc::new(CaffeineLike::new(capacity)));
+    v.push(Arc::new(SegmentedCaffeine::new(capacity, 4)));
+    v
+}
+
+/// Values are derived from keys; readers must never observe a value that
+/// does not belong to the key they asked for (torn read / phantom).
+#[test]
+fn no_phantom_values_under_contention() {
+    for cache in all_impls(2048) {
+        let cache: Arc<dyn Cache> = cache;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let cache = cache.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xBEEF ^ t);
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) || ops < 10_000 {
+                    let key = rng.below(8192);
+                    if rng.chance(0.5) {
+                        cache.put(key, key.wrapping_mul(0x9E37) ^ 7);
+                    } else if let Some(v) = cache.get(key) {
+                        assert_eq!(
+                            v,
+                            key.wrapping_mul(0x9E37) ^ 7,
+                            "{}: phantom value for key {key}",
+                            cache.name()
+                        );
+                    }
+                    ops += 1;
+                    if ops == 50_000 {
+                        break;
+                    }
+                }
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// Occupancy must never exceed capacity (k-way exact; products may have a
+/// small in-flight overshoot from their async policy, bounded here).
+#[test]
+fn occupancy_bounded_after_churn() {
+    for cache in all_impls(1024) {
+        let cache: Arc<dyn Cache> = cache;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..50_000 {
+                    let key = rng.next_u64() >> 16;
+                    cache.put(key, key);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Allow the async products to catch up.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let len = cache.len();
+        let slack = cache.capacity() / 4 + 64; // generous for async drains
+        assert!(
+            len <= cache.capacity() + slack,
+            "{}: len {} way over capacity {}",
+            cache.name(),
+            len,
+            cache.capacity()
+        );
+    }
+}
+
+/// The three k-way variants implement the same abstract cache: driven
+/// single-threaded with the same inputs they must give identical hit/miss
+/// sequences (KW-LS upgrades always succeed without contention).
+#[test]
+fn kway_variants_agree_single_threaded() {
+    check("variants-agree", 10, |rng| {
+        let caches: Vec<Box<dyn Cache>> = Variant::ALL
+            .iter()
+            .map(|&v| build(v, 512, 8, Policy::Lru))
+            .collect();
+        for _ in 0..5_000 {
+            let key = rng.below(2048);
+            let read = rng.chance(0.6);
+            let mut outcomes = Vec::new();
+            for c in &caches {
+                if read {
+                    outcomes.push(c.get(key).is_some());
+                } else {
+                    c.put(key, key);
+                    outcomes.push(true);
+                }
+            }
+            assert!(
+                outcomes.windows(2).all(|w| w[0] == w[1]),
+                "variant divergence on key {key}: {outcomes:?}"
+            );
+        }
+    });
+}
+
+/// Worst-case contention: a single set hammered by 8 threads must still
+/// make progress (no livelock) and stay bounded.
+#[test]
+fn single_set_hotspot_makes_progress() {
+    for variant in [Variant::Wfa, Variant::Wfsc] {
+        // Capacity 8 with 8 ways = ONE set.
+        let cache: Arc<dyn Cache> = Arc::from(build(variant, 8, 8, Policy::Lfu));
+        let start = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..20_000 {
+                    let key = rng.below(64);
+                    if cache.get(key).is_none() {
+                        cache.put(key, key);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(30),
+            "{variant:?} single-set hotspot took too long (livelock?)"
+        );
+        assert!(cache.len() <= 8);
+    }
+}
+
+/// Concurrent duplicates of the same key converge to one of the written
+/// values.
+#[test]
+fn concurrent_same_key_put_converges() {
+    for cache in all_impls(256) {
+        let cache: Arc<dyn Cache> = cache;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    cache.put(42, 1000 + (t * 10_000 + i) % 7);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        match cache.get(42) {
+            Some(v) => assert!((1000..1007).contains(&v), "{}: bad value {v}", cache.name()),
+            None => {
+                // Eviction is legal (it's a cache) but with capacity 256
+                // and one hot key it would indicate a bug for k-way.
+                assert!(
+                    !cache.name().starts_with("KW"),
+                    "{}: hot key vanished",
+                    cache.name()
+                );
+            }
+        }
+    }
+}

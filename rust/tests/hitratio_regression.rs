@@ -1,0 +1,143 @@
+//! Hit-ratio regression tests: the qualitative *shapes* from the paper's
+//! evaluation that must hold on the trace models (DESIGN.md
+//! §Per-experiment index, "expected shapes").
+
+use kway::kway::Variant;
+use kway::policy::Policy;
+use kway::sim::{self, Config};
+use kway::trace::paper;
+
+fn ratio(trace: &kway::trace::Trace, capacity: usize, cfg: &Config) -> f64 {
+    let mut cache = cfg.build(capacity, 7);
+    sim::run(cache.as_mut(), &trace.keys).ratio()
+}
+
+fn kway(ways: usize, policy: Policy, tlfu: bool) -> Config {
+    Config::KWay { variant: Variant::Wfsc, ways, policy, tlfu }
+}
+
+/// Shape (i): the 8-way vs fully-associative gap is marginal on every
+/// trace model, for LRU.
+#[test]
+fn eight_way_close_to_full_lru_everywhere() {
+    for (trace_name, capacity) in [
+        ("wiki_a", 4096),
+        ("sprite", 1024),
+        ("oltp", 2048),
+        ("multi1", 2048),
+        ("f1", 2048),
+        ("p8", 4096),
+    ] {
+        let trace = paper::build(trace_name, 300_000, 3).unwrap();
+        let full = ratio(&trace, capacity, &Config::FullLru { tlfu: false });
+        let k8 = ratio(&trace, capacity, &kway(8, Policy::Lru, false));
+        assert!(
+            (full - k8).abs() <= 0.05,
+            "{trace_name}: full {full:.4} vs 8-way {k8:.4}"
+        );
+    }
+}
+
+/// Shape (i) continued: the gap shrinks (weakly) as associativity grows.
+#[test]
+fn associativity_gap_shrinks_with_k() {
+    let trace = paper::build("wiki_a", 300_000, 4).unwrap();
+    let capacity = 4096;
+    let full = ratio(&trace, capacity, &Config::FullLru { tlfu: false });
+    let gap4 = (full - ratio(&trace, capacity, &kway(4, Policy::Lru, false))).abs();
+    let gap64 = (full - ratio(&trace, capacity, &kway(64, Policy::Lru, false))).abs();
+    assert!(gap64 <= gap4 + 0.005, "gap4 {gap4:.4} gap64 {gap64:.4}");
+}
+
+/// Shape (ii): sampled eviction ≈ limited associativity at equal budget
+/// (sample size = ways), as the paper observes in subfigures (a)/(b).
+#[test]
+fn sampled_and_kway_comparable() {
+    for trace_name in ["oltp", "wiki_a", "multi2"] {
+        let trace = paper::build(trace_name, 300_000, 5).unwrap();
+        let capacity = 2048;
+        let k8 = ratio(&trace, capacity, &kway(8, Policy::Lru, false));
+        let s8 = ratio(
+            &trace,
+            capacity,
+            &Config::Sampled { sample: 8, policy: Policy::Lru, tlfu: false },
+        );
+        assert!(
+            (k8 - s8).abs() < 0.05,
+            "{trace_name}: 8-way {k8:.4} vs sampled8 {s8:.4}"
+        );
+    }
+}
+
+/// TinyLFU admission must not lose badly on scan-heavy traces (the multiN
+/// models) — the reason the paper pairs LFU with TinyLFU in subfigure (b).
+#[test]
+fn tinylfu_admission_helps_on_scans() {
+    let trace = paper::build("multi2", 400_000, 6).unwrap();
+    let capacity = 2048;
+    let plain = ratio(&trace, capacity, &kway(8, Policy::Lru, false));
+    let tlfu = ratio(&trace, capacity, &kway(8, Policy::Lfu, true));
+    assert!(
+        tlfu > plain - 0.02,
+        "LFU+TLFU ({tlfu:.4}) should not lose badly to LRU ({plain:.4}) on scans"
+    );
+}
+
+/// Caffeine-like (W-TinyLFU) is at least as good as Guava-like (plain
+/// LRU) on frequency-biased traces — the paper's subfigure (c) finding.
+#[test]
+fn caffeine_beats_guava_on_frequency_biased_trace() {
+    let trace = paper::build("wiki_a", 400_000, 8).unwrap();
+    let capacity = 2048;
+    let caffeine = ratio(&trace, capacity, &Config::Caffeine);
+    let guava = ratio(&trace, capacity, &Config::Guava { segments: 4 });
+    assert!(
+        caffeine >= guava - 0.01,
+        "Caffeine {caffeine:.4} should be >= Guava {guava:.4}"
+    );
+}
+
+/// Segmented Caffeine ≈ Caffeine on hit ratio (the paper: "nearly
+/// identical").
+#[test]
+fn segmented_caffeine_close_to_caffeine() {
+    let trace = paper::build("oltp", 300_000, 9).unwrap();
+    let capacity = 2048;
+    let caffeine = ratio(&trace, capacity, &Config::Caffeine);
+    let seg = ratio(&trace, capacity, &Config::SegCaffeine { segments: 8 });
+    assert!(
+        (caffeine - seg).abs() < 0.06,
+        "Caffeine {caffeine:.4} vs segmented {seg:.4}"
+    );
+}
+
+/// Hyperbolic: limited associativity ≈ sampling, per Figures 6/8/12.
+#[test]
+fn hyperbolic_kway_close_to_sampled() {
+    let trace = paper::build("p12", 400_000, 10).unwrap();
+    let capacity = 8192;
+    let k8 = ratio(&trace, capacity, &kway(8, Policy::Hyperbolic, false));
+    let s64 = ratio(&trace, capacity, &Config::FullHyperbolic { sample: 64, tlfu: false });
+    assert!((k8 - s64).abs() < 0.06, "8-way hyp {k8:.4} vs sampled-64 hyp {s64:.4}");
+}
+
+/// Sanity: sprite is the high-hit-ratio trace (>80% at small capacity),
+/// w3 the low one (<10%) — the workload spread the paper leans on.
+#[test]
+fn trace_models_span_hit_ratio_range() {
+    let sprite = paper::build("sprite", 200_000, 11).unwrap();
+    let w3 = paper::build("w3", 200_000, 11).unwrap();
+    let hi = ratio(&sprite, 2048, &kway(8, Policy::Lru, false));
+    let lo = ratio(&w3, 2048, &kway(8, Policy::Lru, false));
+    assert!(hi > 0.8, "sprite model should be hit-heavy, got {hi:.4}");
+    assert!(lo < 0.1, "w3 model should be miss-heavy, got {lo:.4}");
+}
+
+/// Determinism: the whole sim pipeline is reproducible from the seed.
+#[test]
+fn simulation_is_deterministic() {
+    let trace = paper::build("f1", 100_000, 12).unwrap();
+    let a = ratio(&trace, 2048, &kway(8, Policy::Lru, false));
+    let b = ratio(&trace, 2048, &kway(8, Policy::Lru, false));
+    assert_eq!(a, b);
+}
