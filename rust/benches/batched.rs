@@ -1,0 +1,83 @@
+//! The batched access path (figB* series, the batching extension): Mops/s
+//! and per-batch p50/p99 latency for the three k-way variants at the
+//! batch sizes in `kway::figures::BATCHED_FIGURES`, against the scalar
+//! one-by-one path over the *same* resident-set key distribution.
+//!
+//! ```bash
+//! cargo bench --bench batched
+//! KWAY_BENCH_QUICK=1 cargo bench --bench batched
+//! ```
+//!
+//! What to look for (DESIGN.md §Batched access path): the batched rows
+//! amortize one hash pass and one virtual call over the whole chunk and
+//! software-prefetch each set line before the first probe, so from batch
+//! ≈ 8 upward Mops/s should exceed the 1-by-1 row — most visibly for
+//! KW-WFSC, whose SoA layout means one prefetched fingerprint line covers
+//! the entire probe. The trade is per-call latency: a batch of 128 takes
+//! longer than a single get, which p50/p99 (per get_batch call) make
+//! explicit.
+
+use kway::figures::{quick_mode, BATCHED_FIGURES};
+use kway::policy::Policy;
+use kway::throughput::{impl_factory, measure, RunConfig, Workload};
+use std::time::Duration;
+
+fn main() {
+    let quick = quick_mode();
+    let capacity: usize = if quick { 1 << 14 } else { 1 << 18 };
+    let working_set = (capacity / 2) as u64;
+    let threads_list: Vec<usize> = if quick { vec![2] } else { vec![1, 4] };
+    let duration = Duration::from_millis(if quick { 100 } else { 300 });
+    let repeats = if quick { 2 } else { 3 };
+    let impls = ["KW-WFA", "KW-WFSC", "KW-LS"];
+
+    for &threads in &threads_list {
+        println!(
+            "\n==== batched get — capacity 2^{} working set {} threads {} ====",
+            capacity.trailing_zeros(),
+            working_set,
+            threads
+        );
+        println!(
+            "{:14} {:>8} {:>10} {:>12} {:>12} {:>8}",
+            "impl", "batch", "Mops/s", "p50(ns)", "p99(ns)", "hit"
+        );
+        for name in impls {
+            let factory = impl_factory(name, capacity, threads, Policy::Lru).unwrap();
+            let cfg = RunConfig { threads, duration, repeats, seed: 42 };
+            // Scalar baseline: same keys, one get per call.
+            let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
+            println!(
+                "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                name,
+                "1-by-1",
+                base.mops.mean(),
+                base.lat_p50_ns,
+                base.lat_p99_ns,
+                base.hit_ratio
+            );
+            for fig in BATCHED_FIGURES {
+                let r = measure(
+                    &*factory,
+                    &Workload::Batched { working_set, batch: fig.batch },
+                    &cfg,
+                );
+                println!(
+                    "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                    name,
+                    fig.batch,
+                    r.mops.mean(),
+                    r.lat_p50_ns,
+                    r.lat_p99_ns,
+                    r.hit_ratio
+                );
+            }
+        }
+    }
+    println!(
+        "\nReading: Mops/s counts every key of a batch as one op; p50/p99\n\
+         for batched rows are per get_batch call (the whole batch), for the\n\
+         1-by-1 row per single get. Batch sizes come from BATCHED_FIGURES\n\
+         (figB1/figB8/figB32/figB128)."
+    );
+}

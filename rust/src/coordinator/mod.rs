@@ -15,4 +15,6 @@
 
 mod service;
 
-pub use service::{drive_clients, CacheService, ServiceConfig, ServiceMetrics};
+pub use service::{
+    drive_clients, drive_clients_batched, CacheService, ServiceConfig, ServiceMetrics,
+};

@@ -1,4 +1,12 @@
 //! Worker-pool cache service with key-hash routing.
+//!
+//! Requests are routed to a worker by key hash, so same-key requests are
+//! FIFO-ordered per worker. Batched requests are *scattered* across the
+//! workers that own their keys and the partial results *gathered* back
+//! into input order — every worker probes its share of the batch in
+//! parallel through the cache's own batched path
+//! ([`crate::Cache::get_batch`]), instead of one worker serializing the
+//! whole batch. See DESIGN.md §Batched access path.
 
 use crate::metrics::{LatencyHistogram, OpCounters};
 use crate::util::hash;
@@ -45,7 +53,11 @@ impl ServiceMetrics {
 enum Request {
     Get { key: u64, enqueued: Instant, reply: Sender<Option<u64>> },
     Put { key: u64, value: u64, enqueued: Instant },
-    GetBatch { keys: Vec<u64>, enqueued: Instant, reply: Sender<Vec<Option<u64>>> },
+    /// One worker's share of a scattered batch; `worker` comes back with
+    /// the reply so the gatherer knows which sub-batch arrived.
+    GetBatch { keys: Vec<u64>, enqueued: Instant, worker: usize, reply: Sender<(usize, Vec<Option<u64>>)> },
+    /// One worker's share of a scattered batched put (fire-and-forget).
+    PutBatch { items: Vec<(u64, u64)>, enqueued: Instant },
     Shutdown,
 }
 
@@ -79,16 +91,17 @@ impl CacheService {
         Self { cache, senders, workers, metrics }
     }
 
+    /// Which worker owns a key. Same hash for singles and batches, so
+    /// per-key FIFO ordering holds across both paths.
     #[inline]
-    fn route(&self, key: u64) -> &Sender<Request> {
-        let w = (hash::xxh64_u64(key, 0x40F7E4) as usize) % self.senders.len();
-        &self.senders[w]
+    fn worker_of(&self, key: u64) -> usize {
+        (hash::xxh64_u64(key, 0x40F7E4) as usize) % self.senders.len()
     }
 
     /// Synchronous get through the service (router → worker → reply).
     pub fn get(&self, key: u64) -> Option<u64> {
         let (reply, rx) = channel();
-        self.route(key)
+        self.senders[self.worker_of(key)]
             .send(Request::Get { key, enqueued: Instant::now(), reply })
             .expect("service stopped");
         rx.recv().expect("worker dropped reply")
@@ -96,23 +109,80 @@ impl CacheService {
 
     /// Fire-and-forget put (the common cache-fill pattern).
     pub fn put(&self, key: u64, value: u64) {
-        self.route(key)
+        self.senders[self.worker_of(key)]
             .send(Request::Put { key, value, enqueued: Instant::now() })
             .expect("service stopped");
     }
 
-    /// Batched get: one round trip for many keys (all executed by the
-    /// batch's routing worker; batching amortizes queue crossings exactly
-    /// like batched serving systems do).
+    /// Batched get with scatter/gather: keys are split by owning worker,
+    /// every involved worker probes its sub-batch concurrently (through
+    /// the cache's batched path), and the partial results are stitched
+    /// back so `result[i]` always answers `keys[i]`. One queue crossing
+    /// per worker instead of one per key.
     pub fn get_batch(&self, keys: Vec<u64>) -> Vec<Option<u64>> {
-        if keys.is_empty() {
+        let n = keys.len();
+        if n == 0 {
             return Vec::new();
         }
+        let workers = self.senders.len();
+        // Scatter: group keys by owning worker, remembering each key's
+        // position in the input batch.
+        let mut sub_keys: Vec<Vec<u64>> = vec![Vec::new(); workers];
+        let mut sub_positions: Vec<Vec<usize>> = vec![Vec::new(); workers];
+        for (pos, &key) in keys.iter().enumerate() {
+            let w = self.worker_of(key);
+            sub_keys[w].push(key);
+            sub_positions[w].push(pos);
+        }
         let (reply, rx) = channel();
-        self.route(keys[0])
-            .send(Request::GetBatch { keys, enqueued: Instant::now(), reply })
-            .expect("service stopped");
-        rx.recv().expect("worker dropped reply")
+        let mut outstanding = 0usize;
+        for (w, sub) in sub_keys.iter_mut().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            outstanding += 1;
+            self.senders[w]
+                .send(Request::GetBatch {
+                    keys: std::mem::take(sub),
+                    enqueued: Instant::now(),
+                    worker: w,
+                    reply: reply.clone(),
+                })
+                .expect("service stopped");
+        }
+        drop(reply);
+        // Gather: sub-results arrive in any order; positions restore the
+        // input order exactly.
+        let mut out = vec![None; n];
+        for _ in 0..outstanding {
+            let (w, values) = rx.recv().expect("worker dropped batch reply");
+            debug_assert_eq!(values.len(), sub_positions[w].len());
+            for (&pos, value) in sub_positions[w].iter().zip(values) {
+                out[pos] = value;
+            }
+        }
+        out
+    }
+
+    /// Batched fire-and-forget put, scattered by owning worker like
+    /// [`CacheService::get_batch`].
+    pub fn put_batch(&self, items: Vec<(u64, u64)>) {
+        if items.is_empty() {
+            return;
+        }
+        let workers = self.senders.len();
+        let mut sub: Vec<Vec<(u64, u64)>> = vec![Vec::new(); workers];
+        for &(key, value) in &items {
+            sub[self.worker_of(key)].push((key, value));
+        }
+        for (w, items) in sub.into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            self.senders[w]
+                .send(Request::PutBatch { items, enqueued: Instant::now() })
+                .expect("service stopped");
+        }
     }
 
     /// Service-level metrics (latencies include queueing).
@@ -164,18 +234,21 @@ fn worker_loop(rx: Receiver<Request>, cache: Arc<dyn Cache>, metrics: Arc<Servic
                 metrics.ops.puts.fetch_add(1, Ordering::Relaxed);
                 metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
             }
-            Request::GetBatch { keys, enqueued, reply } => {
-                let mut out = Vec::with_capacity(keys.len());
-                for key in keys {
-                    let value = cache.get(key);
-                    metrics.ops.gets.fetch_add(1, Ordering::Relaxed);
-                    if value.is_some() {
-                        metrics.ops.hits.fetch_add(1, Ordering::Relaxed);
-                    }
-                    out.push(value);
-                }
+            Request::GetBatch { keys, enqueued, worker, reply } => {
+                let mut values = Vec::with_capacity(keys.len());
+                cache.get_batch(&keys, &mut values);
+                let hits = values.iter().filter(|v| v.is_some()).count() as u64;
+                metrics.ops.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                metrics.ops.hits.fetch_add(hits, Ordering::Relaxed);
+                // One latency sample per sub-batch: the latency a batched
+                // client actually observes from this worker.
                 metrics.get_latency.record(enqueued.elapsed().as_nanos() as u64);
-                let _ = reply.send(out);
+                let _ = reply.send((worker, values));
+            }
+            Request::PutBatch { items, enqueued } => {
+                cache.put_batch(&items);
+                metrics.ops.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
+                metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
             }
             Request::Shutdown => return,
         }
@@ -203,6 +276,46 @@ pub fn drive_clients(
                     let key = zipf.sample(&mut rng);
                     if service.get(key).is_none() {
                         service.put(key, key.wrapping_mul(31));
+                    }
+                }
+            });
+        }
+    });
+    start.elapsed().as_secs_f64()
+}
+
+/// Like [`drive_clients`] but each client issues `requests / batch`
+/// batched gets of size `batch`, filling misses with a batched put.
+/// Returns the total wall-clock seconds.
+pub fn drive_clients_batched(
+    service: &CacheService,
+    clients: usize,
+    requests: usize,
+    batch: usize,
+    keyspace: u64,
+    seed: u64,
+) -> f64 {
+    let batch = batch.max(1);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let service = &*service;
+            scope.spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(seed ^ (c as u64) << 8);
+                let zipf = crate::util::rng::Zipf::new(keyspace, 0.99);
+                let rounds = requests.div_ceil(batch);
+                for _ in 0..rounds {
+                    let keys: Vec<u64> =
+                        (0..batch).map(|_| zipf.sample(&mut rng)).collect();
+                    let results = service.get_batch(keys.clone());
+                    let fills: Vec<(u64, u64)> = keys
+                        .iter()
+                        .zip(&results)
+                        .filter(|(_, r)| r.is_none())
+                        .map(|(&k, _)| (k, k.wrapping_mul(31)))
+                        .collect();
+                    if !fills.is_empty() {
+                        service.put_batch(fills);
                     }
                 }
             });
@@ -265,6 +378,59 @@ mod tests {
     }
 
     #[test]
+    fn batch_get_scatters_across_workers() {
+        // With 4 workers and 100 distinct keys, the hash router must
+        // involve more than one worker; results still arrive input-ordered.
+        // (100 keys over 128 sets stay clear of the 8-way eviction bound.)
+        let s = service(4);
+        for k in 0..100u64 {
+            s.put(k, k * 2);
+        }
+        for k in 0..100u64 {
+            assert_eq!(s.get(k), Some(k * 2)); // per-key FIFO: put landed
+        }
+        let keys: Vec<u64> = (0..100u64).rev().collect();
+        let out = s.get_batch(keys.clone());
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(out[i], Some(k * 2), "position {i}");
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn batch_put_then_batch_get() {
+        let s = service(3);
+        let items: Vec<(u64, u64)> = (0..100u64).map(|k| (k, k + 7)).collect();
+        s.put_batch(items.clone());
+        // Per-key ordering: a single get of each key flushes its worker.
+        for &(k, v) in &items {
+            let mut got = None;
+            for _ in 0..1000 {
+                got = s.get(k);
+                if got.is_some() {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            assert_eq!(got, Some(v), "key {k}");
+        }
+        let out = s.get_batch(items.iter().map(|&(k, _)| k).collect());
+        for (i, &(_, v)) in items.iter().enumerate() {
+            assert_eq!(out[i], Some(v));
+        }
+        assert!(s.metrics().ops.puts.load(Ordering::Relaxed) >= 100);
+        s.shutdown();
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let s = service(2);
+        assert!(s.get_batch(Vec::new()).is_empty());
+        s.put_batch(Vec::new());
+        s.shutdown();
+    }
+
+    #[test]
     fn concurrent_clients() {
         let s = service(4);
         let secs = drive_clients(&s, 4, 2_000, 4096, 11);
@@ -272,6 +438,17 @@ mod tests {
         let m = s.metrics();
         assert!(m.ops.gets.load(Ordering::Relaxed) >= 8_000);
         assert!(m.get_latency.count() > 0);
+        assert!(m.ops.hit_ratio() > 0.1, "zipf working set should yield hits");
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_batched_clients() {
+        let s = service(4);
+        let secs = drive_clients_batched(&s, 4, 2_000, 32, 4096, 12);
+        assert!(secs > 0.0);
+        let m = s.metrics();
+        assert!(m.ops.gets.load(Ordering::Relaxed) >= 8_000);
         assert!(m.ops.hit_ratio() > 0.1, "zipf working set should yield hits");
         s.shutdown();
     }

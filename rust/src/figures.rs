@@ -83,6 +83,27 @@ pub const SYNTHETIC_FIGURES: &[SyntheticFigure] = &[
     SyntheticFigure { id: "fig30", label: "90% hit", gets_per_put: Some(9), all_miss: false },
 ];
 
+/// A batched-access throughput figure (the batching extension, not from
+/// the paper): Mops/s and per-batch latency vs `get_batch` size, for the
+/// k-way variants over a resident working set. `benches/batched.rs`
+/// iterates this table; the `kway batch` subcommand sweeps the same
+/// dimension interactively.
+#[derive(Debug, Clone)]
+pub struct BatchedFigure {
+    pub id: &'static str,
+    /// Keys per `get_batch` call.
+    pub batch: usize,
+}
+
+/// All batched figures (batch 1 isolates the batched-path overhead; the
+/// scalar one-by-one baseline is printed alongside by the bench).
+pub const BATCHED_FIGURES: &[BatchedFigure] = &[
+    BatchedFigure { id: "figB1", batch: 1 },
+    BatchedFigure { id: "figB8", batch: 8 },
+    BatchedFigure { id: "figB32", batch: 32 },
+    BatchedFigure { id: "figB128", batch: 128 },
+];
+
 /// Quick-mode flag shared by every bench: set `KWAY_BENCH_QUICK=1` to run
 /// an abbreviated pass (shorter traces, fewer repeats, fewer threads).
 pub fn quick_mode() -> bool {
@@ -109,6 +130,15 @@ mod tests {
         assert_eq!(HITRATIO_FIGURES.len(), 10); // Figures 4-13
         assert_eq!(THROUGHPUT_FIGURES.len(), 13); // Figures 14-26
         assert_eq!(SYNTHETIC_FIGURES.len(), 4); // Figures 27-30
+    }
+
+    #[test]
+    fn batched_figures_are_distinct_and_ascending() {
+        assert!(!BATCHED_FIGURES.is_empty());
+        for pair in BATCHED_FIGURES.windows(2) {
+            assert!(pair[0].batch < pair[1].batch, "{} vs {}", pair[0].id, pair[1].id);
+        }
+        assert!(BATCHED_FIGURES.iter().any(|f| f.batch == 32), "acceptance batch size");
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! The shared set-engine: everything the three k-way variants have in
+//! common, in one place.
+//!
+//! The paper's observation is that limited associativity reduces every
+//! cache operation to (a) hash the key to a set, (b) scan at most K ways,
+//! (c) update one metadata word — and that only the *synchronization
+//! protocol* around those steps differs between designs. This module owns
+//! steps (a)–(c):
+//!
+//! * key preparation — one hash pass yields the set index, the encoded
+//!   key word and the fingerprint ([`SetEngine::prepare`]);
+//! * the probe/re-validate read loop ([`SetEngine::probe_get`]);
+//! * policy *touch* semantics on hits, in an atomic flavour for the
+//!   wait-free variants and a plain flavour for the locked one;
+//! * the victim scan over a set snapshot ([`SetEngine::choose_victim`],
+//!   [`SetEngine::peek_victim_with`]);
+//! * the batched access driver ([`SetEngine::for_batch`]) that pre-hashes
+//!   a chunk of keys and software-prefetches their set lines before the
+//!   first probe, amortizing hashing and overlapping memory latency —
+//!   the same trick data-plane limited-associativity caches use.
+//!
+//! [`KwWfa`](super::KwWfa), [`KwWfsc`](super::KwWfsc) and
+//! [`KwLs`](super::KwLs) are thin storage adapters over this engine: each
+//! contributes its memory layout and its claim/publish protocol, nothing
+//! else. See DESIGN.md §Set engine.
+
+use super::geometry::{Geometry, EMPTY, RESERVED};
+use super::with_thread_rng;
+use crate::policy::Policy;
+use crate::util::clock::LogicalClock;
+use crate::util::hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Upper bound on ways so victim scans can use stack buffers.
+pub(crate) const MAX_WAYS: usize = 128;
+
+/// How many keys a batched operation prepares (hashes + prefetches) ahead
+/// of probing. Deep enough to cover DRAM latency with independent set
+/// lines in flight, small enough not to wash the prefetched lines out of
+/// L1 before they are probed.
+pub(crate) const BATCH_CHUNK: usize = 32;
+
+/// A key prepared for probing: hashing is done exactly once here, so the
+/// batched paths can amortize it across a whole chunk before touching any
+/// set memory.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct PreparedKey {
+    /// The user key.
+    pub key: u64,
+    /// Encoded key word (sentinel-free; see [`Geometry::encode_key`]).
+    pub ik: u64,
+    /// Non-zero fingerprint (only WFSC stores it, but it is one `mix64`
+    /// to derive, so preparing it unconditionally keeps one code path).
+    pub fp: u64,
+    /// Set index.
+    pub set: usize,
+}
+
+/// The victim a [`SetEngine::choose_victim`] scan picked.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct VictimChoice {
+    /// Way index within the set.
+    pub way: usize,
+    /// Snapshot of that way's claim-guard word (whatever word the
+    /// variant's claim CAS races on: WFA the key word, WFSC the
+    /// fingerprint, KW-LS the plain key).
+    pub guard: u64,
+}
+
+/// Geometry + policy + logical clock — the state every variant shares —
+/// plus the probe / touch / victim logic over it.
+pub(crate) struct SetEngine {
+    geo: Geometry,
+    policy: Policy,
+    clock: LogicalClock,
+}
+
+impl SetEngine {
+    pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
+        assert!(ways <= MAX_WAYS, "ways must be <= {MAX_WAYS}");
+        Self { geo: Geometry::new(capacity, ways), policy, clock: LogicalClock::new() }
+    }
+
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geo
+    }
+
+    #[inline]
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Advance the logical clock (one tick per cache operation).
+    #[inline]
+    pub fn tick(&self) -> u64 {
+        self.clock.tick()
+    }
+
+    /// Read the logical clock without advancing it.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.clock.now()
+    }
+
+    /// Hash a key once into everything a probe needs.
+    #[inline]
+    pub fn prepare(&self, key: u64) -> PreparedKey {
+        PreparedKey {
+            key,
+            ik: Geometry::encode_key(key),
+            fp: hash::fingerprint(key),
+            set: self.geo.set_of(key),
+        }
+    }
+
+    /// The probe loop shared by every variant's `get`: scan the k ways and
+    /// on a candidate match read the value, then *re-validate* the match so
+    /// a mid-replace (torn) read is detected and skipped. For KW-LS the
+    /// re-validation is trivially true (the read lock excludes writers) and
+    /// folds away after inlining.
+    #[inline]
+    pub fn probe_get(
+        &self,
+        k: usize,
+        matches: impl Fn(usize) -> bool,
+        read_value: impl Fn(usize) -> u64,
+    ) -> Option<(usize, u64)> {
+        for i in 0..k {
+            if matches(i) {
+                let value = read_value(i);
+                if matches(i) {
+                    return Some((i, value));
+                }
+            }
+        }
+        None
+    }
+
+    /// Pass-1 scan of a put: the way already holding this key, if any.
+    #[inline]
+    pub fn find_match(&self, k: usize, matches: impl Fn(usize) -> bool) -> Option<usize> {
+        (0..k).find(|&i| matches(i))
+    }
+
+    /// Apply the policy's on-hit metadata update with the cheapest atomic
+    /// op that implements it. A lost race here only blurs the recency /
+    /// frequency signal by one access — the same semantics as the paper's
+    /// non-synchronized Java counter updates.
+    #[inline]
+    pub fn touch_atomic(&self, meta: &AtomicU64, now: u64) {
+        match self.policy {
+            Policy::Lru => meta.store(now, Ordering::Relaxed),
+            Policy::Lfu => {
+                meta.fetch_add(1, Ordering::Relaxed);
+            }
+            Policy::Hyperbolic => {
+                let old = meta.load(Ordering::Relaxed);
+                let new = self.policy.on_hit_meta(old, now);
+                // Single CAS attempt; on contention we drop the update.
+                let _ = meta.compare_exchange_weak(old, new, Ordering::Relaxed, Ordering::Relaxed);
+            }
+            Policy::Fifo | Policy::Random => {}
+        }
+    }
+
+    /// On-hit metadata update for plain (lock-protected) storage.
+    #[inline]
+    pub fn touch_plain(&self, meta: &mut u64, now: u64) {
+        *meta = self.policy.on_hit_meta(*meta, now);
+    }
+
+    /// Metadata word for a fresh insert.
+    #[inline]
+    pub fn initial_meta(&self, now: u64) -> u64 {
+        self.policy.initial_meta(now)
+    }
+
+    /// Does a hit need a metadata write at all?
+    #[inline]
+    pub fn updates_on_hit(&self) -> bool {
+        self.policy.updates_on_hit()
+    }
+
+    /// Victim selection over an explicit metadata snapshot.
+    #[inline]
+    pub fn select_victim(&self, metas: &[u64], now: u64) -> usize {
+        with_thread_rng(|rng| self.policy.select_victim(metas, now, rng))
+    }
+
+    /// Snapshot a full set through `snap` — per way, the claim-guard word
+    /// and the metadata — and pick the policy victim. Variants report a
+    /// way that must not be chosen (mid-publish) by returning `u64::MAX`
+    /// metadata, which only loses to other `u64::MAX` ways.
+    #[inline]
+    pub fn choose_victim(
+        &self,
+        k: usize,
+        now: u64,
+        snap: impl Fn(usize) -> (u64, u64),
+    ) -> VictimChoice {
+        let mut guards = [0u64; MAX_WAYS];
+        let mut metas = [u64::MAX; MAX_WAYS];
+        for i in 0..k {
+            let (guard, meta) = snap(i);
+            guards[i] = guard;
+            metas[i] = meta;
+        }
+        let way = self.select_victim(&metas[..k], now);
+        VictimChoice { way, guard: guards[way] }
+    }
+
+    /// Shared `peek_victim` (the advisory preview used by TinyLFU
+    /// admission). `load_key` must yield the *effective* key word of a
+    /// way: [`EMPTY`] when the way is free, [`RESERVED`] when it is
+    /// mid-publish, the encoded key otherwise. Returns `None` when the set
+    /// still has room (no eviction needed) or the victim is mid-publish.
+    pub fn peek_victim_with(
+        &self,
+        k: usize,
+        load_key: impl Fn(usize) -> u64,
+        load_meta: impl Fn(usize) -> u64,
+    ) -> Option<u64> {
+        let now = self.now();
+        let mut keys = [0u64; MAX_WAYS];
+        let mut metas = [0u64; MAX_WAYS];
+        for i in 0..k {
+            keys[i] = load_key(i);
+            if keys[i] == EMPTY {
+                return None; // room available, no eviction needed
+            }
+            metas[i] = if keys[i] == RESERVED { u64::MAX } else { load_meta(i) };
+        }
+        let vi = self.select_victim(&metas[..k], now);
+        (keys[vi] != RESERVED).then(|| Geometry::decode_key(keys[vi]))
+    }
+
+    /// Drive a batched pass: prepare (hash) a chunk of items up front,
+    /// issue a software prefetch for each item's set line, then run `op`
+    /// per item in input order. Preparing a whole chunk before the first
+    /// probe amortizes hashing and overlaps the set lines' memory latency
+    /// with useful work instead of stalling on each miss in turn.
+    #[inline]
+    pub fn for_batch<I>(
+        &self,
+        items: &[I],
+        key_of: impl Fn(&I) -> u64,
+        prefetch_set: impl Fn(usize),
+        mut op: impl FnMut(PreparedKey, &I),
+    ) {
+        let mut prepared = [PreparedKey::default(); BATCH_CHUNK];
+        for chunk in items.chunks(BATCH_CHUNK) {
+            for (i, item) in chunk.iter().enumerate() {
+                let pk = self.prepare(key_of(item));
+                prefetch_set(pk.set);
+                prepared[i] = pk;
+            }
+            for (i, item) in chunk.iter().enumerate() {
+                op(prepared[i], item);
+            }
+        }
+    }
+}
+
+/// Best-effort software prefetch of the cache line holding `ptr` into all
+/// cache levels. A no-op on targets without a stable prefetch intrinsic —
+/// the batched path still wins there from amortized hashing and fewer
+/// virtual calls.
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(ptr: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        // SAFETY: prefetch is a pure hint; it cannot fault on any address.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(ptr as *const i8) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = ptr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(capacity: usize, ways: usize, policy: Policy) -> SetEngine {
+        SetEngine::new(capacity, ways, policy)
+    }
+
+    #[test]
+    fn prepare_is_consistent_with_geometry_and_hashing() {
+        let e = engine(1024, 8, Policy::Lru);
+        for key in 0..1000u64 {
+            let pk = e.prepare(key);
+            assert_eq!(pk.key, key);
+            assert_eq!(pk.ik, Geometry::encode_key(key));
+            assert_eq!(pk.fp, hash::fingerprint(key));
+            assert_eq!(pk.set, e.geometry().set_of(key));
+        }
+    }
+
+    #[test]
+    fn probe_get_revalidates() {
+        let e = engine(64, 4, Policy::Lru);
+        // A match that disappears between value read and re-validation
+        // must be skipped (simulated with a counter-driven closure).
+        use std::cell::Cell;
+        let calls = Cell::new(0u32);
+        let hit = e.probe_get(
+            4,
+            |i| {
+                if i == 1 {
+                    calls.set(calls.get() + 1);
+                    calls.get() == 1 // first check passes, re-check fails
+                } else {
+                    false
+                }
+            },
+            |_| 42,
+        );
+        assert_eq!(hit, None);
+        // A stable match is returned with its way index.
+        let hit = e.probe_get(4, |i| i == 2, |i| (i as u64) * 10);
+        assert_eq!(hit, Some((2, 20)));
+    }
+
+    #[test]
+    fn choose_victim_avoids_max_meta_ways() {
+        let e = engine(64, 4, Policy::Lru);
+        let metas = [5u64, u64::MAX, 3, 9];
+        let guards = [100u64, 101, 102, 103];
+        let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i]));
+        assert_eq!(choice.way, 2);
+        assert_eq!(choice.guard, 102);
+    }
+
+    #[test]
+    fn peek_victim_with_contract() {
+        let e = engine(64, 4, Policy::Lru);
+        // Any empty way -> no eviction needed.
+        let keys = [Geometry::encode_key(1), EMPTY, Geometry::encode_key(3), Geometry::encode_key(4)];
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |_| 0), None);
+        // Full set -> the policy minimum's decoded key.
+        let keys = [10u64, 11, 12, 13].map(Geometry::encode_key);
+        let metas = [50u64, 10, 90, 30];
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(11));
+        // Mid-publish victim -> None.
+        let keys = [Geometry::encode_key(10), RESERVED, Geometry::encode_key(12), Geometry::encode_key(13)];
+        let metas = [50u64, 0, 90, 30];
+        // RESERVED way is masked to u64::MAX, so the victim is way 3 (30).
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(13));
+    }
+
+    #[test]
+    fn for_batch_visits_every_item_in_order_across_chunks() {
+        let e = engine(4096, 8, Policy::Lru);
+        let keys: Vec<u64> = (0..(3 * BATCH_CHUNK as u64 + 7)).collect();
+        let mut seen = Vec::new();
+        e.for_batch(
+            &keys,
+            |&k| k,
+            |set| assert!(set < e.geometry().num_sets()),
+            |pk, &orig| {
+                assert_eq!(pk.key, orig);
+                seen.push(pk.key);
+            },
+        );
+        assert_eq!(seen, keys);
+    }
+
+    #[test]
+    fn prefetch_is_safe_on_any_pointer() {
+        let v = [1u64, 2, 3];
+        prefetch_read(&v[0]);
+        prefetch_read(std::ptr::null::<u64>());
+    }
+}

@@ -11,17 +11,17 @@
 //!
 //! Each set is cache-line padded so sets stay as independent in memory as
 //! they are logically — the paper's independence argument made physical.
+//!
+//! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
+//! only the locked plain storage and the upgrade protocol.
 
-use super::geometry::Geometry;
+use super::engine::{self, PreparedKey, SetEngine};
+use super::geometry::{Geometry, EMPTY};
 use super::stamped::StampedLock;
-use super::with_thread_rng;
 use crate::policy::Policy;
-use crate::util::clock::LogicalClock;
 use crate::Cache;
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
-
-const EMPTY: u64 = 0;
 
 /// One entry: encoded key word (0 = empty), value, policy metadata.
 #[derive(Clone, Copy, Default)]
@@ -53,43 +53,43 @@ impl LsSet {
 
 /// Lock-per-set k-way cache.
 pub struct KwLs {
-    geo: Geometry,
-    policy: Policy,
-    clock: LogicalClock,
+    engine: SetEngine,
     sets: Box<[CachePadded<LsSet>]>,
 }
 
 impl KwLs {
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        assert!(ways <= super::wfa::MAX_WAYS, "ways must be <= {}", super::wfa::MAX_WAYS);
-        let geo = Geometry::new(capacity, ways);
-        let sets = (0..geo.num_sets())
-            .map(|_| CachePadded::new(LsSet::new(geo.ways())))
+        let engine = SetEngine::new(capacity, ways, policy);
+        let sets = (0..engine.geometry().num_sets())
+            .map(|_| CachePadded::new(LsSet::new(engine.geometry().ways())))
             .collect();
-        Self { geo, policy, clock: LogicalClock::new(), sets }
+        Self { engine, sets }
     }
 
     pub fn geometry(&self) -> Geometry {
-        self.geo
+        self.engine.geometry()
     }
 
     pub fn policy(&self) -> Policy {
-        self.policy
+        self.engine.policy()
     }
-}
 
-impl Cache for KwLs {
-    fn get(&self, key: u64) -> Option<u64> {
-        let ik = Geometry::encode_key(key);
-        let now = self.clock.tick();
-        let set = &self.sets[self.geo.set_of(key)];
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths).
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let set = &self.sets[pk.set];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
-        for i in 0..entries.len() {
-            if entries[i].key == ik {
-                let value = entries[i].value;
-                if !self.policy.updates_on_hit() {
+        let hit = self.engine.probe_get(
+            entries.len(),
+            |i| entries[i].key == pk.ik,
+            |i| entries[i].value,
+        );
+        match hit {
+            Some((i, value)) => {
+                if !self.engine.updates_on_hit() {
                     set.lock.unlock_read();
                     return Some(value);
                 }
@@ -98,41 +98,41 @@ impl Cache for KwLs {
                 if set.lock.try_convert_to_write() {
                     // SAFETY: write lock held.
                     let entries = unsafe { &mut *set.entries.get() };
-                    entries[i].meta = self.policy.on_hit_meta(entries[i].meta, now);
+                    self.engine.touch_plain(&mut entries[i].meta, now);
                     set.lock.unlock_write();
                 } else {
                     set.lock.unlock_read();
                 }
-                return Some(value);
+                Some(value)
+            }
+            None => {
+                set.lock.unlock_read();
+                None
             }
         }
-        set.lock.unlock_read();
-        None
     }
 
-    fn put(&self, key: u64, value: u64) {
-        let ik = Geometry::encode_key(key);
-        let now = self.clock.tick();
-        let set = &self.sets[self.geo.set_of(key)];
+    /// `put` with the hashing already done.
+    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+        let now = self.engine.tick();
+        let set = &self.sets[pk.set];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
 
         // Pass 1 (Alg. 9 lines 4–13): overwrite an existing entry.
-        for i in 0..entries.len() {
-            if entries[i].key == ik {
-                if set.lock.try_convert_to_write() {
-                    // SAFETY: write lock held.
-                    let entries = unsafe { &mut *set.entries.get() };
-                    entries[i].value = value;
-                    entries[i].meta = self.policy.on_hit_meta(entries[i].meta, now);
-                    set.lock.unlock_write();
-                } else {
-                    // Paper: give up when the upgrade fails.
-                    set.lock.unlock_read();
-                }
-                return;
+        if let Some(i) = self.engine.find_match(entries.len(), |i| entries[i].key == pk.ik) {
+            if set.lock.try_convert_to_write() {
+                // SAFETY: write lock held.
+                let entries = unsafe { &mut *set.entries.get() };
+                entries[i].value = value;
+                self.engine.touch_plain(&mut entries[i].meta, now);
+                set.lock.unlock_write();
+            } else {
+                // Paper: give up when the upgrade fails.
+                set.lock.unlock_read();
             }
+            return;
         }
 
         // Miss path (Alg. 9 lines 15–27): upgrade, then fill an empty way
@@ -146,22 +146,54 @@ impl Cache for KwLs {
         let target = match entries.iter().position(|e| e.key == EMPTY) {
             Some(i) => i,
             None => {
-                let mut metas = [0u64; super::wfa::MAX_WAYS];
-                for (i, e) in entries.iter().enumerate() {
-                    metas[i] = e.meta;
-                }
-                with_thread_rng(|rng| {
-                    self.policy.select_victim(&metas[..entries.len()], now, rng)
-                })
+                self.engine
+                    .choose_victim(entries.len(), now, |i| (entries[i].key, entries[i].meta))
+                    .way
             }
         };
-        entries[target] =
-            Entry { key: ik, value, meta: self.policy.initial_meta(now) };
+        entries[target] = Entry { key: pk.ik, value, meta: self.engine.initial_meta(now) };
         set.lock.unlock_write();
+    }
+}
+
+impl Cache for KwLs {
+    fn get(&self, key: u64) -> Option<u64> {
+        self.get_prepared(self.engine.prepare(key))
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        self.put_prepared(self.engine.prepare(key), value)
+    }
+
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        out.reserve(keys.len());
+        self.engine.for_batch(
+            keys,
+            |&key| key,
+            // Prefetch the set header (lock word + entries pointer); the
+            // entries themselves sit behind one more indirection.
+            |set| {
+                let header: &LsSet = &self.sets[set];
+                engine::prefetch_read(header);
+            },
+            |pk, _| out.push(self.get_prepared(pk)),
+        );
+    }
+
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        self.engine.for_batch(
+            items,
+            |item| item.0,
+            |set| {
+                let header: &LsSet = &self.sets[set];
+                engine::prefetch_read(header);
+            },
+            |pk, item| self.put_prepared(pk, item.1),
+        );
     }
 
     fn capacity(&self) -> usize {
-        self.geo.capacity()
+        self.engine.geometry().capacity()
     }
 
     fn len(&self) -> usize {
@@ -181,23 +213,15 @@ impl Cache for KwLs {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let set = &self.sets[self.geo.set_of(key)];
-        let now = self.clock.now();
+        let set = &self.sets[self.engine.geometry().set_of(key)];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
-        let result = if entries.iter().any(|e| e.key == EMPTY) {
-            None
-        } else {
-            let mut metas = [0u64; super::wfa::MAX_WAYS];
-            for (i, e) in entries.iter().enumerate() {
-                metas[i] = e.meta;
-            }
-            let vi = with_thread_rng(|rng| {
-                self.policy.select_victim(&metas[..entries.len()], now, rng)
-            });
-            Some(Geometry::decode_key(entries[vi].key))
-        };
+        let result = self.engine.peek_victim_with(
+            entries.len(),
+            |i| entries[i].key,
+            |i| entries[i].meta,
+        );
         set.lock.unlock_read();
         result
     }
@@ -252,6 +276,33 @@ mod tests {
                 assert_eq!(c.get(key), Some(key ^ 0xABCD), "policy {p:?}");
             }
             assert!(c.len() <= c.capacity());
+        }
+    }
+
+    #[test]
+    fn batched_get_matches_scalar() {
+        let c = KwLs::new(512, 8, Policy::Lru);
+        for key in 0..400u64 {
+            c.put(key, key + 1);
+        }
+        let keys: Vec<u64> = (0..800u64).collect();
+        let mut batched = Vec::new();
+        c.get_batch(&keys, &mut batched);
+        assert_eq!(batched.len(), keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(batched[i], c.get(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn batched_put_then_get() {
+        // 300 keys over 512 sets: far below any set's 8 ways, so nothing
+        // the assertion depends on can be evicted.
+        let c = KwLs::new(4096, 8, Policy::Lru);
+        let items: Vec<(u64, u64)> = (0..300u64).map(|k| (k, k * 5)).collect();
+        c.put_batch(&items);
+        for &(k, v) in &items {
+            assert_eq!(c.get(k), Some(v), "key {k}");
         }
     }
 

@@ -17,8 +17,13 @@
 //!
 //! All three share [`Geometry`] (power-of-two set count, `hash(key) &
 //! (num_sets-1)` set indexing via xxh64, like the paper) and the policy
-//! metadata semantics from [`crate::policy`].
+//! metadata semantics from [`crate::policy`]. The probe loops, victim
+//! scans, touch semantics and the batched access driver live once in the
+//! internal `engine` module (DESIGN.md §Set engine); the three variants
+//! are storage adapters over it, each contributing only its layout and
+//! claim/publish protocol.
 
+mod engine;
 mod geometry;
 mod ls;
 mod stamped;

@@ -14,16 +14,15 @@
 //! key words (24-byte stride), reproducing the scattered-reads behaviour
 //! the paper attributes to WFA when comparing it against WFSC's contiguous
 //! fingerprint array.
+//!
+//! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
+//! only the AoS storage and the CAS claim/publish protocol.
 
+use super::engine::{self, PreparedKey, SetEngine};
 use super::geometry::{Geometry, EMPTY, RESERVED};
-use super::with_thread_rng;
 use crate::policy::Policy;
-use crate::util::clock::LogicalClock;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Upper bound on ways so victim scans can use stack buffers.
-pub(crate) const MAX_WAYS: usize = 128;
 
 struct Way {
     key: AtomicU64,
@@ -43,86 +42,68 @@ impl Way {
 
 /// Wait-free array k-way cache.
 pub struct KwWfa {
-    geo: Geometry,
-    policy: Policy,
-    clock: LogicalClock,
+    engine: SetEngine,
     ways: Box<[Way]>,
 }
 
 impl KwWfa {
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        assert!(ways <= MAX_WAYS, "ways must be <= {MAX_WAYS}");
-        let geo = Geometry::new(capacity, ways);
-        let slots = (0..geo.capacity()).map(|_| Way::new()).collect();
-        Self { geo, policy, clock: LogicalClock::new(), ways: slots }
+        let engine = SetEngine::new(capacity, ways, policy);
+        let slots = (0..engine.geometry().capacity()).map(|_| Way::new()).collect();
+        Self { engine, ways: slots }
     }
 
     pub fn geometry(&self) -> Geometry {
-        self.geo
+        self.engine.geometry()
     }
 
     pub fn policy(&self) -> Policy {
-        self.policy
+        self.engine.policy()
     }
 
     #[inline]
     fn set_ways(&self, set: usize) -> &[Way] {
-        &self.ways[self.geo.slots_of(set)]
+        &self.ways[self.engine.geometry().slots_of(set)]
     }
 
-    /// Apply the policy's on-hit metadata update with the cheapest atomic
-    /// op that implements it. A lost race here only blurs the recency /
-    /// frequency signal by one access — the same semantics as the paper's
-    /// non-synchronized Java counter updates.
+    /// Prefetch the lines a set scan strides over: a `Way` is 24 bytes, so
+    /// an 8-way set spans three cache lines (first / middle / last way).
     #[inline]
-    fn touch(&self, meta: &AtomicU64, now: u64) {
-        match self.policy {
-            Policy::Lru => meta.store(now, Ordering::Relaxed),
-            Policy::Lfu => {
-                meta.fetch_add(1, Ordering::Relaxed);
-            }
-            Policy::Hyperbolic => {
-                let old = meta.load(Ordering::Relaxed);
-                let new = self.policy.on_hit_meta(old, now);
-                // Single CAS attempt; on contention we drop the update.
-                let _ = meta.compare_exchange_weak(old, new, Ordering::Relaxed, Ordering::Relaxed);
-            }
-            Policy::Fifo | Policy::Random => {}
-        }
-    }
-}
-
-impl Cache for KwWfa {
-    fn get(&self, key: u64) -> Option<u64> {
-        let ik = Geometry::encode_key(key);
-        let now = self.clock.tick();
-        for way in self.set_ways(self.geo.set_of(key)) {
-            if way.key.load(Ordering::Acquire) == ik {
-                let value = way.value.load(Ordering::Acquire);
-                // Re-validate: if the key word changed while we read the
-                // value, a concurrent put replaced this way — the value we
-                // read may belong to the new entry, so skip it.
-                if way.key.load(Ordering::Acquire) == ik {
-                    self.touch(&way.meta, now);
-                    return Some(value);
-                }
-            }
-        }
-        None
+    fn prefetch_set(&self, set: usize, ways: usize) {
+        let base = set * ways;
+        engine::prefetch_read(&self.ways[base]);
+        engine::prefetch_read(&self.ways[base + ways / 2]);
+        engine::prefetch_read(&self.ways[base + ways - 1]);
     }
 
-    fn put(&self, key: u64, value: u64) {
-        let ik = Geometry::encode_key(key);
-        let now = self.clock.tick();
-        let set = self.set_ways(self.geo.set_of(key));
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths).
+    #[inline]
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let set = self.set_ways(pk.set);
+        let (way, value) = self.engine.probe_get(
+            set.len(),
+            |i| set[i].key.load(Ordering::Acquire) == pk.ik,
+            |i| set[i].value.load(Ordering::Acquire),
+        )?;
+        self.engine.touch_atomic(&set[way].meta, now);
+        Some(value)
+    }
+
+    /// `put` with the hashing already done.
+    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+        let now = self.engine.tick();
+        let set = self.set_ways(pk.set);
 
         // Pass 1 (Alg. 3 lines 3–6): overwrite an existing entry.
-        for way in set {
-            if way.key.load(Ordering::Acquire) == ik {
-                way.value.store(value, Ordering::Release);
-                self.touch(&way.meta, now);
-                return;
-            }
+        if let Some(i) = self
+            .engine
+            .find_match(set.len(), |i| set[i].key.load(Ordering::Acquire) == pk.ik)
+        {
+            set[i].value.store(value, Ordering::Release);
+            self.engine.touch_atomic(&set[i].meta, now);
+            return;
         }
 
         // Pass 2 (Alg. 3 lines 12–16): claim an empty way.
@@ -134,47 +115,74 @@ impl Cache for KwWfa {
                     .is_ok()
             {
                 way.value.store(value, Ordering::Release);
-                way.meta.store(self.policy.initial_meta(now), Ordering::Release);
-                way.key.store(ik, Ordering::Release);
+                way.meta.store(self.engine.initial_meta(now), Ordering::Release);
+                way.key.store(pk.ik, Ordering::Release);
                 return;
             }
         }
 
         // Pass 3 (Alg. 3 lines 7–11): evict the policy victim. Snapshot the
-        // metadata, pick the victim, then try to claim it with a single
-        // CAS. If the CAS fails, another thread is mutating this way
-        // concurrently — like the paper's WFA we simply give up (the cache
-        // is allowed to drop an insert under contention; it is a cache).
-        let mut metas = [0u64; MAX_WAYS];
-        let mut keys = [0u64; MAX_WAYS];
-        let k = set.len();
-        for i in 0..k {
-            keys[i] = set[i].key.load(Ordering::Acquire);
-            metas[i] = set[i].meta.load(Ordering::Relaxed);
-            if keys[i] == RESERVED {
-                // Mid-publish way: never pick it as the victim.
-                metas[i] = u64::MAX;
-            }
-        }
-        let vi =
-            with_thread_rng(|rng| self.policy.select_victim(&metas[..k], now, rng));
-        if keys[vi] == RESERVED {
+        // set, pick the victim, then try to claim it with a single CAS. If
+        // the CAS fails, another thread is mutating this way concurrently —
+        // like the paper's WFA we simply give up (the cache is allowed to
+        // drop an insert under contention; it is a cache).
+        let choice = self.engine.choose_victim(set.len(), now, |i| {
+            let key = set[i].key.load(Ordering::Acquire);
+            let meta = if key == RESERVED {
+                u64::MAX // mid-publish way: never pick it as the victim
+            } else {
+                set[i].meta.load(Ordering::Relaxed)
+            };
+            (key, meta)
+        });
+        if choice.guard == RESERVED {
             return;
         }
-        let way = &set[vi];
+        let way = &set[choice.way];
         if way
             .key
-            .compare_exchange(keys[vi], RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+            .compare_exchange(choice.guard, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
             way.value.store(value, Ordering::Release);
-            way.meta.store(self.policy.initial_meta(now), Ordering::Release);
-            way.key.store(ik, Ordering::Release);
+            way.meta.store(self.engine.initial_meta(now), Ordering::Release);
+            way.key.store(pk.ik, Ordering::Release);
         }
+    }
+}
+
+impl Cache for KwWfa {
+    fn get(&self, key: u64) -> Option<u64> {
+        self.get_prepared(self.engine.prepare(key))
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        self.put_prepared(self.engine.prepare(key), value)
+    }
+
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        out.reserve(keys.len());
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            keys,
+            |&key| key,
+            |set| self.prefetch_set(set, ways),
+            |pk, _| out.push(self.get_prepared(pk)),
+        );
+    }
+
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            items,
+            |item| item.0,
+            |set| self.prefetch_set(set, ways),
+            |pk, item| self.put_prepared(pk, item.1),
+        );
     }
 
     fn capacity(&self) -> usize {
-        self.geo.capacity()
+        self.engine.geometry().capacity()
     }
 
     fn len(&self) -> usize {
@@ -192,23 +200,12 @@ impl Cache for KwWfa {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let set = self.set_ways(self.geo.set_of(key));
-        let now = self.clock.now();
-        let k = set.len();
-        let mut metas = [0u64; MAX_WAYS];
-        let mut keys = [0u64; MAX_WAYS];
-        for i in 0..k {
-            keys[i] = set[i].key.load(Ordering::Acquire);
-            if keys[i] == EMPTY {
-                return None; // room available, no eviction needed
-            }
-            metas[i] = set[i].meta.load(Ordering::Relaxed);
-            if keys[i] == RESERVED {
-                metas[i] = u64::MAX;
-            }
-        }
-        let vi = with_thread_rng(|rng| self.policy.select_victim(&metas[..k], now, rng));
-        (keys[vi] != RESERVED).then(|| Geometry::decode_key(keys[vi]))
+        let set = self.set_ways(self.engine.geometry().set_of(key));
+        self.engine.peek_victim_with(
+            set.len(),
+            |i| set[i].key.load(Ordering::Acquire),
+            |i| set[i].meta.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -282,6 +279,33 @@ mod tests {
                 assert_eq!(c.get(key), Some(key * 2), "policy {p:?}: fresh insert readable");
             }
             assert!(c.len() <= c.capacity());
+        }
+    }
+
+    #[test]
+    fn batched_get_matches_scalar() {
+        let c = KwWfa::new(512, 8, Policy::Lru);
+        for key in 0..400u64 {
+            c.put(key, key + 7);
+        }
+        let keys: Vec<u64> = (0..800u64).collect(); // half hits, half misses
+        let mut batched = Vec::new();
+        c.get_batch(&keys, &mut batched);
+        assert_eq!(batched.len(), keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(batched[i], c.get(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn batched_put_then_get() {
+        // 300 keys over 512 sets: far below any set's 8 ways, so nothing
+        // the assertion depends on can be evicted.
+        let c = KwWfa::new(4096, 8, Policy::Lfu);
+        let items: Vec<(u64, u64)> = (0..300u64).map(|k| (k, k * 3)).collect();
+        c.put_batch(&items);
+        for &(k, v) in &items {
+            assert_eq!(c.get(k), Some(v), "key {k}");
         }
     }
 

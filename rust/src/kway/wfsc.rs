@@ -14,23 +14,23 @@
 //! Publication protocol: a put claims the way by CASing the fingerprint
 //! word (0 = empty), then publishes value and counter, and stores the key
 //! word last. Readers match on the fingerprint but *validate on the key
-//! word* and re-validate it after reading the value, so fingerprint
+//! word* and re-validate after reading the value, so fingerprint
 //! collisions and mid-replace reads are both detected and skipped.
+//!
+//! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
+//! only the SoA storage and the fingerprint claim/publish protocol. The
+//! SoA layout also makes WFSC the best batching target: one prefetch of
+//! the set's fingerprint line covers the whole probe.
 
-use super::geometry::{Geometry, EMPTY};
-use super::wfa::MAX_WAYS;
-use super::with_thread_rng;
+use super::engine::{self, PreparedKey, SetEngine};
+use super::geometry::{Geometry, EMPTY, RESERVED};
 use crate::policy::Policy;
-use crate::util::clock::LogicalClock;
-use crate::util::hash;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Wait-free separate-counters k-way cache.
 pub struct KwWfsc {
-    geo: Geometry,
-    policy: Policy,
-    clock: LogicalClock,
+    engine: SetEngine,
     /// Non-zero fingerprint per occupied way; 0 = empty.
     fps: Box<[AtomicU64]>,
     /// Policy metadata (the paper's separate counters array).
@@ -47,13 +47,10 @@ fn atomic_array(n: usize) -> Box<[AtomicU64]> {
 
 impl KwWfsc {
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        assert!(ways <= MAX_WAYS, "ways must be <= {MAX_WAYS}");
-        let geo = Geometry::new(capacity, ways);
-        let n = geo.capacity();
+        let engine = SetEngine::new(capacity, ways, policy);
+        let n = engine.geometry().capacity();
         Self {
-            geo,
-            policy,
-            clock: LogicalClock::new(),
+            engine,
             fps: atomic_array(n),
             counters: atomic_array(n),
             keys: atomic_array(n),
@@ -62,85 +59,65 @@ impl KwWfsc {
     }
 
     pub fn geometry(&self) -> Geometry {
-        self.geo
+        self.engine.geometry()
     }
 
     pub fn policy(&self) -> Policy {
-        self.policy
-    }
-
-    #[inline]
-    fn touch(&self, idx: usize, now: u64) {
-        let meta = &self.counters[idx];
-        match self.policy {
-            Policy::Lru => meta.store(now, Ordering::Relaxed),
-            Policy::Lfu => {
-                meta.fetch_add(1, Ordering::Relaxed);
-            }
-            Policy::Hyperbolic => {
-                let old = meta.load(Ordering::Relaxed);
-                let new = self.policy.on_hit_meta(old, now);
-                let _ = meta.compare_exchange_weak(old, new, Ordering::Relaxed, Ordering::Relaxed);
-            }
-            Policy::Fifo | Policy::Random => {}
-        }
+        self.engine.policy()
     }
 
     /// Publish (value, counter, key) into a way whose fingerprint we own.
     #[inline]
     fn publish(&self, idx: usize, ik: u64, value: u64, now: u64) {
         self.values[idx].store(value, Ordering::Release);
-        self.counters[idx].store(self.policy.initial_meta(now), Ordering::Release);
+        self.counters[idx].store(self.engine.initial_meta(now), Ordering::Release);
         self.keys[idx].store(ik, Ordering::Release);
     }
-}
 
-impl Cache for KwWfsc {
-    fn get(&self, key: u64) -> Option<u64> {
-        let ik = Geometry::encode_key(key);
-        let fp = hash::fingerprint(key);
-        let now = self.clock.tick();
-        let slots = self.geo.slots_of(self.geo.set_of(key));
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths).
+    #[inline]
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let start = pk.set * self.engine.geometry().ways();
+        let k = self.engine.geometry().ways();
         // Contiguous fingerprint scan (Alg. 5): one cache line for k <= 8.
-        for idx in slots {
-            if self.fps[idx].load(Ordering::Acquire) == fp
-                && self.keys[idx].load(Ordering::Acquire) == ik
-            {
-                let value = self.values[idx].load(Ordering::Acquire);
-                if self.keys[idx].load(Ordering::Acquire) == ik {
-                    self.touch(idx, now);
-                    return Some(value);
-                }
-            }
-        }
-        None
+        let (way, value) = self.engine.probe_get(
+            k,
+            |i| {
+                self.fps[start + i].load(Ordering::Acquire) == pk.fp
+                    && self.keys[start + i].load(Ordering::Acquire) == pk.ik
+            },
+            |i| self.values[start + i].load(Ordering::Acquire),
+        )?;
+        self.engine.touch_atomic(&self.counters[start + way], now);
+        Some(value)
     }
 
-    fn put(&self, key: u64, value: u64) {
-        let ik = Geometry::encode_key(key);
-        let fp = hash::fingerprint(key);
-        let now = self.clock.tick();
-        let slots = self.geo.slots_of(self.geo.set_of(key));
+    /// `put` with the hashing already done.
+    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+        let now = self.engine.tick();
+        let start = pk.set * self.engine.geometry().ways();
+        let k = self.engine.geometry().ways();
 
         // Pass 1 (Alg. 6 lines 3–9): overwrite an existing entry.
-        for idx in slots.clone() {
-            if self.fps[idx].load(Ordering::Acquire) == fp
-                && self.keys[idx].load(Ordering::Acquire) == ik
-            {
-                self.values[idx].store(value, Ordering::Release);
-                self.touch(idx, now);
-                return;
-            }
+        if let Some(i) = self.engine.find_match(k, |i| {
+            self.fps[start + i].load(Ordering::Acquire) == pk.fp
+                && self.keys[start + i].load(Ordering::Acquire) == pk.ik
+        }) {
+            self.values[start + i].store(value, Ordering::Release);
+            self.engine.touch_atomic(&self.counters[start + i], now);
+            return;
         }
 
         // Pass 2: claim an empty way (fingerprint CAS 0 -> fp).
-        for idx in slots.clone() {
-            if self.fps[idx].load(Ordering::Acquire) == EMPTY
-                && self.fps[idx]
-                    .compare_exchange(EMPTY, fp, Ordering::AcqRel, Ordering::Relaxed)
+        for i in 0..k {
+            if self.fps[start + i].load(Ordering::Acquire) == EMPTY
+                && self.fps[start + i]
+                    .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
-                self.publish(idx, ik, value, now);
+                self.publish(start + i, pk.ik, value, now);
                 return;
             }
         }
@@ -150,26 +127,69 @@ impl Cache for KwWfsc {
         // it by CASing its fingerprint. A failed CAS means a concurrent
         // replacement won the way; like the paper we give up rather than
         // loop (wait-free).
-        let start = slots.start;
-        let k = slots.len();
-        let mut metas = [0u64; MAX_WAYS];
-        let mut snap_fps = [0u64; MAX_WAYS];
-        for i in 0..k {
-            metas[i] = self.counters[start + i].load(Ordering::Relaxed);
-            snap_fps[i] = self.fps[start + i].load(Ordering::Acquire);
-        }
-        let vi = with_thread_rng(|rng| self.policy.select_victim(&metas[..k], now, rng));
-        let idx = start + vi;
+        let choice = self.engine.choose_victim(k, now, |i| {
+            (
+                self.fps[start + i].load(Ordering::Acquire),
+                self.counters[start + i].load(Ordering::Relaxed),
+            )
+        });
+        let idx = start + choice.way;
         if self.fps[idx]
-            .compare_exchange(snap_fps[vi], fp, Ordering::AcqRel, Ordering::Relaxed)
+            .compare_exchange(choice.guard, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
-            self.publish(idx, ik, value, now);
+            self.publish(idx, pk.ik, value, now);
         }
+    }
+}
+
+impl Cache for KwWfsc {
+    fn get(&self, key: u64) -> Option<u64> {
+        self.get_prepared(self.engine.prepare(key))
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        self.put_prepared(self.engine.prepare(key), value)
+    }
+
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        out.reserve(keys.len());
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            keys,
+            |&key| key,
+            // The lines a get touches: one fingerprint line covers the
+            // whole probe for k <= 8; key validation and the value read
+            // each land on one more line.
+            |set| {
+                let base = set * ways;
+                engine::prefetch_read(&self.fps[base]);
+                engine::prefetch_read(&self.keys[base]);
+                engine::prefetch_read(&self.values[base]);
+            },
+            |pk, _| out.push(self.get_prepared(pk)),
+        );
+    }
+
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            items,
+            |item| item.0,
+            // The lines a put touches first: fingerprints (pass 1/2 scan +
+            // claim), keys (pass-1 validation), counters (victim scan).
+            |set| {
+                let base = set * ways;
+                engine::prefetch_read(&self.fps[base]);
+                engine::prefetch_read(&self.keys[base]);
+                engine::prefetch_read(&self.counters[base]);
+            },
+            |pk, item| self.put_prepared(pk, item.1),
+        );
     }
 
     fn capacity(&self) -> usize {
-        self.geo.capacity()
+        self.engine.geometry().capacity()
     }
 
     fn len(&self) -> usize {
@@ -181,20 +201,26 @@ impl Cache for KwWfsc {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let slots = self.geo.slots_of(self.geo.set_of(key));
-        let now = self.clock.now();
-        let start = slots.start;
-        let k = slots.len();
-        let mut metas = [0u64; MAX_WAYS];
-        for i in 0..k {
-            if self.fps[start + i].load(Ordering::Acquire) == EMPTY {
-                return None; // room available
-            }
-            metas[i] = self.counters[start + i].load(Ordering::Relaxed);
-        }
-        let vi = with_thread_rng(|rng| self.policy.select_victim(&metas[..k], now, rng));
-        let word = self.keys[start + vi].load(Ordering::Acquire);
-        (word >= 2).then(|| Geometry::decode_key(word))
+        let start = self.engine.geometry().set_of(key) * self.engine.geometry().ways();
+        self.engine.peek_victim_with(
+            self.engine.geometry().ways(),
+            |i| {
+                // Effective key word: EMPTY when the way is free, RESERVED
+                // when the fingerprint is claimed but the key word is not
+                // yet published, the encoded key otherwise.
+                if self.fps[start + i].load(Ordering::Acquire) == EMPTY {
+                    EMPTY
+                } else {
+                    let word = self.keys[start + i].load(Ordering::Acquire);
+                    if word == EMPTY || word == RESERVED {
+                        RESERVED
+                    } else {
+                        word
+                    }
+                }
+            },
+            |i| self.counters[start + i].load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -265,6 +291,33 @@ mod tests {
     }
 
     #[test]
+    fn batched_get_matches_scalar() {
+        let c = KwWfsc::new(512, 8, Policy::Lru);
+        for key in 0..400u64 {
+            c.put(key, key ^ 0xA5);
+        }
+        let keys: Vec<u64> = (0..800u64).collect();
+        let mut batched = Vec::new();
+        c.get_batch(&keys, &mut batched);
+        assert_eq!(batched.len(), keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(batched[i], c.get(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn batched_put_then_get() {
+        // 300 keys over 512 sets: far below any set's 8 ways, so nothing
+        // the assertion depends on can be evicted.
+        let c = KwWfsc::new(4096, 8, Policy::Lru);
+        let items: Vec<(u64, u64)> = (0..300u64).map(|k| (k, k + 11)).collect();
+        c.put_batch(&items);
+        for &(k, v) in &items {
+            assert_eq!(c.get(k), Some(v), "key {k}");
+        }
+    }
+
+    #[test]
     fn concurrent_put_get_no_phantoms() {
         let c = Arc::new(KwWfsc::new(1024, 8, Policy::Lfu));
         let mut handles = Vec::new();
@@ -286,6 +339,45 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn concurrent_batched_get_no_phantoms() {
+        // Batched readers race scalar writers; every returned value must
+        // belong to the key at its input position.
+        let c = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(77 + t);
+                for _ in 0..40_000 {
+                    let key = rng.below(4096);
+                    c.put(key, key.wrapping_mul(31));
+                }
+            }));
+        }
+        for t in 0..2u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(177 + t);
+                let mut out = Vec::new();
+                for _ in 0..1_000 {
+                    let keys: Vec<u64> = (0..64).map(|_| rng.below(4096)).collect();
+                    out.clear();
+                    c.get_batch(&keys, &mut out);
+                    assert_eq!(out.len(), keys.len());
+                    for (i, &key) in keys.iter().enumerate() {
+                        if let Some(v) = out[i] {
+                            assert_eq!(v, key.wrapping_mul(31), "phantom at position {i}");
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

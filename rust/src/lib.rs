@@ -52,6 +52,26 @@ pub trait Cache: Send + Sync {
     fn get(&self, key: u64) -> Option<u64>;
     /// Insert or overwrite `key`, evicting a victim if there is no room.
     fn put(&self, key: u64, value: u64);
+    /// Batched lookup: append one result per key to `out`, in input order
+    /// (`out[i]` answers `keys[i]` when `out` starts empty). The default
+    /// walks keys one by one; the k-way implementations override it to
+    /// hash the whole chunk up front and software-prefetch each set line
+    /// before the first probe, which amortizes hashing and overlaps memory
+    /// latency (DESIGN.md §Batched access path). Taking a caller-owned
+    /// buffer keeps the hot path allocation-free under reuse.
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        out.reserve(keys.len());
+        for &key in keys {
+            out.push(self.get(key));
+        }
+    }
+    /// Batched insert of `(key, value)` pairs — same amortization story as
+    /// [`Cache::get_batch`].
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        for &(key, value) in items {
+            self.put(key, value);
+        }
+    }
     /// Maximum number of entries the cache may hold.
     fn capacity(&self) -> usize;
     /// Number of entries currently held (approximate under concurrency).

@@ -4,6 +4,7 @@
 //!   hitratio    hit-ratio sweep on a trace (Figures 4–13 series)
 //!   throughput  multi-threaded trace-replay throughput (Figures 14–26)
 //!   synthetic   synthetic-mix throughput (Figures 27–30)
+//!   batch       batched-get sweep: Mops/s + per-batch p50/p99 vs batch size
 //!   serve       run the cache service demo (router + workers + metrics)
 //!   validate    cross-check the XLA artifacts against the native engine
 //!   ballsbins   Theorem 4.1 bound vs Monte-Carlo
@@ -30,6 +31,7 @@ fn main() {
         Some("hitratio") => cmd_hitratio(&args),
         Some("throughput") => cmd_throughput(&args),
         Some("synthetic") => cmd_synthetic(&args),
+        Some("batch") => cmd_batch(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("ballsbins") => cmd_ballsbins(&args),
@@ -50,7 +52,8 @@ const HELP: &str = "usage: kway <subcommand> [--options]
   hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
   throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5]
   synthetic  --workload miss100|hit100|hit95|hit90 [--capacity 2097152] [--threads ...]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000]
+  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
@@ -120,18 +123,21 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     for t in &threads {
         print!(" {t:>10}");
     }
-    println!();
+    println!("   p50/p99(ns)");
     for name in &impls {
         let workload = Workload::TraceReplay(trace.clone());
         print!("{name:14}");
+        let mut last_lat = (0u64, 0u64);
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, policy)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
             let cfg = RunConfig { threads: t, duration, repeats, seed };
             let r = measure(&*factory, &workload, &cfg);
+            last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
         }
-        println!();
+        // Latency of the highest thread count (sampled per access).
+        println!("   {}/{}", last_lat.0, last_lat.1);
     }
     Ok(())
 }
@@ -164,18 +170,69 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
     for t in &threads {
         print!(" {t:>10}");
     }
-    println!();
+    println!("   p50/p99(ns)");
     for name in &impls {
         print!("{name:14}");
+        let mut last_lat = (0u64, 0u64);
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, Policy::Lru)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
             let cfg = RunConfig { threads: t, duration, repeats, seed };
             let r = measure(&*factory, &workload, &cfg);
+            last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
         }
-        println!();
+        println!("   {}/{}", last_lat.0, last_lat.1);
     }
+    Ok(())
+}
+
+/// The batched-access sweep: Mops/s and per-batch latency percentiles vs
+/// batch size, for the k-way variants. The `1-by-1` row is the scalar
+/// path over the same key distribution, as the baseline.
+fn cmd_batch(args: &Args) -> Result<()> {
+    let capacity = args.get_parsed_or("capacity", 1usize << 18)?;
+    let working_set = (capacity / 2) as u64;
+    let batches: Vec<usize> = args.get_list_or("batch", &[1, 8, 32, 128])?;
+    let default_impls: Vec<String> =
+        ["KW-WFA", "KW-WFSC", "KW-LS"].iter().map(|s| s.to_string()).collect();
+    let impls: Vec<String> = args.get_list_or("impls", &default_impls)?;
+    let threads = args.get_parsed_or("threads", 4usize)?;
+    let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 300u64)?);
+    let repeats = args.get_parsed_or("repeats", 3usize)?;
+    let seed = args.get_parsed_or("seed", 42u64)?;
+
+    println!(
+        "# batch sweep: capacity={capacity} working_set={working_set} threads={threads} \
+         duration={duration:?} repeats={repeats}"
+    );
+    println!(
+        "{:14} {:>8} {:>10} {:>12} {:>12} {:>8}",
+        "impl", "batch", "Mops/s", "p50(ns)", "p99(ns)", "hit"
+    );
+    for name in &impls {
+        let factory = impl_factory(name, capacity, threads, Policy::Lru)
+            .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+        let cfg = RunConfig { threads, duration, repeats, seed };
+        // Baseline: the same resident-set gets, one key per call.
+        let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
+        println!(
+            "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+            name, "1-by-1", base.mops.mean(), base.lat_p50_ns, base.lat_p99_ns, base.hit_ratio
+        );
+        for &batch in &batches {
+            let r = measure(&*factory, &Workload::Batched { working_set, batch }, &cfg);
+            println!(
+                "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                name, batch, r.mops.mean(), r.lat_p50_ns, r.lat_p99_ns, r.hit_ratio
+            );
+        }
+    }
+    println!(
+        "\nReading: batched rows amortize hashing and prefetch set lines a\n\
+         chunk at a time; p50/p99 are per get_batch call (one whole batch),\n\
+         the 1-by-1 row per single get."
+    );
     Ok(())
 }
 
@@ -186,15 +243,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_parsed_or("workers", 4usize)?;
     let clients = args.get_parsed_or("clients", 8usize)?;
     let requests = args.get_parsed_or("requests", 20_000usize)?;
+    // --batch N > 0 switches the clients to scatter/gather get_batch calls
+    // of N keys (misses refilled with put_batch).
+    let batch = args.get_parsed_or("batch", 0usize)?;
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
-        "serving: cache={} capacity={} workers={workers} clients={clients} x {requests} reqs",
+        "serving: cache={} capacity={} workers={workers} clients={clients} x {requests} reqs{}",
         cache.name(),
-        cache.capacity()
+        cache.capacity(),
+        if batch > 0 { format!(" (batched x{batch})") } else { String::new() }
     );
     let service = CacheService::start(cache, ServiceConfig { workers });
-    let secs = kway::coordinator::drive_clients(&service, clients, requests, (capacity * 4) as u64, 7);
-    let total = (clients * requests) as f64;
+    let keyspace = (capacity * 4) as u64;
+    let secs = if batch > 0 {
+        kway::coordinator::drive_clients_batched(&service, clients, requests, batch, keyspace, 7)
+    } else {
+        kway::coordinator::drive_clients(&service, clients, requests, keyspace, 7)
+    };
+    // Batched clients round the request count up to whole batches.
+    let per_client = if batch > 0 { requests.div_ceil(batch) * batch } else { requests };
+    let total = (clients * per_client) as f64;
     println!(
         "done in {secs:.2}s — {:.0} req/s\n{}",
         total / secs,

@@ -12,14 +12,25 @@
 //!
 //! Synthetic workloads (Figures 27–30) are expressed as [`Workload`]
 //! variants: 100% miss (unique keys), 100% hit (resident working set), and
-//! fixed hit-ratio mixes (1 put per N gets).
+//! fixed hit-ratio mixes (1 put per N gets). The batching extension adds
+//! [`Workload::Batched`]: resident-set gets issued through
+//! [`Cache::get_batch`] in fixed-size batches, the workload the `batch`
+//! sweep and `benches/batched.rs` measure.
+//!
+//! Besides Mops/s, every run samples operation latency (one op in
+//! [`SAMPLE_EVERY`] per worker, so sampling does not perturb what it
+//! measures) into a [`LatencyHistogram`]; [`RunResult`] reports the p50
+//! and p99 next to the throughput summary. For batched workloads the
+//! sample is the latency of one whole batch — the latency a batched
+//! caller actually observes.
 
+use crate::metrics::LatencyHistogram;
 use crate::trace::Trace;
 use crate::util::stats::Summary;
 use crate::Cache;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// What the workers execute.
 #[derive(Clone)]
@@ -33,6 +44,11 @@ pub enum Workload {
     /// `gets_per_put` gets over a resident set, then one put of a fresh
     /// key (Figures 29–30: 19:1 ≈ 95%, 9:1 ≈ 90%).
     HitRatio { working_set: u64, gets_per_put: u32 },
+    /// Gets over a resident set issued through the batched path,
+    /// `batch` keys per `get_batch` call (the batching extension; same
+    /// key distribution as [`Workload::AllHit`] so the two are directly
+    /// comparable).
+    Batched { working_set: u64, batch: usize },
 }
 
 impl Workload {
@@ -44,6 +60,7 @@ impl Workload {
             Workload::HitRatio { gets_per_put, .. } => {
                 format!("{}%-hit", 100 * *gets_per_put / (*gets_per_put + 1))
             }
+            Workload::Batched { batch, .. } => format!("batched-x{batch}"),
         }
     }
 }
@@ -63,11 +80,17 @@ impl Default for RunConfig {
     }
 }
 
-/// Result of one measurement: throughput summary in Mops/s plus the
-/// observed hit ratio of the last run (for sanity checks).
+/// Result of one measurement: throughput summary in Mops/s, the hit ratio
+/// aggregated over *all* repeats (total hits / total gets, so every repeat
+/// counts — not just the last one), and latency percentiles from the
+/// sampled per-op histogram (nanoseconds; per *batch* for
+/// [`Workload::Batched`]).
 pub struct RunResult {
     pub mops: Summary,
     pub hit_ratio: f64,
+    pub lat_p50_ns: u64,
+    pub lat_p99_ns: u64,
+    pub lat_mean_ns: f64,
 }
 
 /// Keys guaranteed not to collide with trace keys or resident sets
@@ -75,6 +98,9 @@ pub struct RunResult {
 const WARM_BASE: u64 = 1 << 48;
 /// Fresh-miss key space for the synthetic workloads.
 const FRESH_BASE: u64 = 1 << 49;
+
+/// One op in this many is individually timed into the latency histogram.
+const SAMPLE_EVERY: u32 = 64;
 
 /// Measure a cache implementation under a workload. `factory` builds a
 /// fresh cache per repeat (so runs are independent, like the paper's).
@@ -84,14 +110,23 @@ pub fn measure(
     cfg: &RunConfig,
 ) -> RunResult {
     let mut mops = Summary::new();
-    let mut hit_ratio = 0.0;
+    let latency = Arc::new(LatencyHistogram::new());
+    let mut total_hits = 0u64;
+    let mut total_gets = 0u64;
     for rep in 0..cfg.repeats {
         let cache = factory();
-        let (ops, hits, gets, secs) = one_run(cache, workload, cfg, rep as u64);
+        let (ops, hits, gets, secs) = one_run(cache, workload, cfg, rep as u64, &latency);
         mops.add(ops as f64 / secs / 1e6);
-        hit_ratio = if gets > 0 { hits as f64 / gets as f64 } else { 0.0 };
+        total_hits += hits;
+        total_gets += gets;
     }
-    RunResult { mops, hit_ratio }
+    RunResult {
+        mops,
+        hit_ratio: if total_gets > 0 { total_hits as f64 / total_gets as f64 } else { 0.0 },
+        lat_p50_ns: latency.percentile(50.0),
+        lat_p99_ns: latency.percentile(99.0),
+        lat_mean_ns: latency.mean(),
+    }
 }
 
 fn one_run(
@@ -99,6 +134,7 @@ fn one_run(
     workload: &Workload,
     cfg: &RunConfig,
     rep: u64,
+    latency: &Arc<LatencyHistogram>,
 ) -> (u64, u64, u64, f64) {
     let capacity = cache.capacity();
     // Warm-up phase 1: main thread fills with non-trace keys.
@@ -125,6 +161,7 @@ fn one_run(
         let total_ops = total_ops.clone();
         let total_hits = total_hits.clone();
         let total_gets = total_gets.clone();
+        let latency = latency.clone();
         let workload = workload.clone();
         let threads = cfg.threads;
         let seed = cfg.seed ^ (rep << 32) ^ t as u64;
@@ -136,7 +173,8 @@ fn one_run(
             }
             warm_done.wait();
             barrier.wait();
-            let (ops, hits, gets) = worker(&*cache, &workload, &stop, t, threads, seed);
+            let (ops, hits, gets) =
+                worker(&*cache, &workload, &stop, t, threads, seed, &latency);
             total_ops.fetch_add(ops, Ordering::Relaxed);
             total_hits.fetch_add(hits, Ordering::Relaxed);
             total_gets.fetch_add(gets, Ordering::Relaxed);
@@ -147,7 +185,9 @@ fn one_run(
     // For hit-mode workloads the resident set must be installed after all
     // warm-up traffic so it is actually resident when the clock starts.
     match workload {
-        Workload::AllHit { working_set } | Workload::HitRatio { working_set, .. } => {
+        Workload::AllHit { working_set }
+        | Workload::HitRatio { working_set, .. }
+        | Workload::Batched { working_set, .. } => {
             for k in 0..*working_set {
                 cache.put(k, k);
             }
@@ -171,8 +211,36 @@ fn one_run(
     )
 }
 
+/// Times one op in [`SAMPLE_EVERY`] into the shared histogram; the other
+/// ops run untimed so the measurement does not perturb the hot loop.
+struct Sampler<'a> {
+    hist: &'a LatencyHistogram,
+    countdown: u32,
+}
+
+impl<'a> Sampler<'a> {
+    fn new(hist: &'a LatencyHistogram) -> Self {
+        Self { hist, countdown: 1 } // sample the first op, then 1-in-N
+    }
+
+    #[inline]
+    fn run<T>(&mut self, op: impl FnOnce() -> T) -> T {
+        self.countdown -= 1;
+        if self.countdown == 0 {
+            self.countdown = SAMPLE_EVERY;
+            let start = Instant::now();
+            let out = op();
+            self.hist.record(start.elapsed().as_nanos() as u64);
+            out
+        } else {
+            op()
+        }
+    }
+}
+
 /// The worker loop; returns (ops, hits, gets). An "op" is a get or a put,
-/// matching the paper's Get/Put operations-per-second metric.
+/// matching the paper's Get/Put operations-per-second metric (every key of
+/// a batched get counts as one op).
 fn worker(
     cache: &dyn Cache,
     workload: &Workload,
@@ -180,11 +248,13 @@ fn worker(
     thread_id: usize,
     threads: usize,
     seed: u64,
+    latency: &LatencyHistogram,
 ) -> (u64, u64, u64) {
     const CHECK_EVERY: u64 = 256;
     let mut ops = 0u64;
     let mut hits = 0u64;
     let mut gets = 0u64;
+    let mut sampler = Sampler::new(latency);
     match workload {
         Workload::TraceReplay(trace) => {
             let n = trace.len();
@@ -197,11 +267,19 @@ fn worker(
                         pos = 0;
                     }
                     gets += 1;
-                    if cache.get(key).is_some() {
+                    // One access = get, plus the fill on a miss.
+                    let hit = sampler.run(|| {
+                        if cache.get(key).is_some() {
+                            true
+                        } else {
+                            cache.put(key, key);
+                            false
+                        }
+                    });
+                    if hit {
                         hits += 1;
                         ops += 1;
                     } else {
-                        cache.put(key, key);
                         ops += 2;
                     }
                 }
@@ -216,10 +294,15 @@ fn worker(
             loop {
                 for _ in 0..CHECK_EVERY {
                     gets += 1;
-                    if cache.get(next).is_some() {
+                    let key = next;
+                    let hit = sampler.run(|| {
+                        let hit = cache.get(key).is_some();
+                        cache.put(key, key);
+                        hit
+                    });
+                    if hit {
                         hits += 1;
                     }
-                    cache.put(next, next);
                     ops += 2;
                     next += 1;
                 }
@@ -234,7 +317,7 @@ fn worker(
                 for _ in 0..CHECK_EVERY {
                     let key = rng.below(*working_set);
                     gets += 1;
-                    if cache.get(key).is_some() {
+                    if sampler.run(|| cache.get(key)).is_some() {
                         hits += 1;
                     }
                     ops += 1;
@@ -252,18 +335,44 @@ fn worker(
                 for _ in 0..CHECK_EVERY {
                     if since_put >= *gets_per_put {
                         since_put = 0;
-                        cache.put(next, next);
+                        let key = next;
+                        sampler.run(|| cache.put(key, key));
                         next += 1;
                         ops += 1;
                     } else {
                         since_put += 1;
                         let key = rng.below(*working_set);
                         gets += 1;
-                        if cache.get(key).is_some() {
+                        if sampler.run(|| cache.get(key)).is_some() {
                             hits += 1;
                         }
                         ops += 1;
                     }
+                }
+                if stop.load(Ordering::Acquire) {
+                    return (ops, hits, gets);
+                }
+            }
+        }
+        Workload::Batched { working_set, batch } => {
+            let batch = (*batch).max(1);
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let mut keys = vec![0u64; batch];
+            let mut out: Vec<Option<u64>> = Vec::with_capacity(batch);
+            // Keep the stop-poll cadence comparable to the scalar arms.
+            let batches_per_check = (CHECK_EVERY / batch as u64).max(1);
+            loop {
+                for _ in 0..batches_per_check {
+                    for slot in keys.iter_mut() {
+                        *slot = rng.below(*working_set);
+                    }
+                    out.clear();
+                    // The latency sample is one whole batch: what a
+                    // batched caller observes per call.
+                    sampler.run(|| cache.get_batch(&keys, &mut out));
+                    gets += batch as u64;
+                    ops += batch as u64;
+                    hits += out.iter().filter(|v| v.is_some()).count() as u64;
                 }
                 if stop.load(Ordering::Acquire) {
                     return (ops, hits, gets);
@@ -369,6 +478,58 @@ mod tests {
         assert!(r.hit_ratio > 0.9, "hit ratio {}", r.hit_ratio);
         assert_eq!(Workload::HitRatio { working_set: 1, gets_per_put: 19 }.label(), "95%-hit");
         assert_eq!(Workload::HitRatio { working_set: 1, gets_per_put: 9 }.label(), "90%-hit");
+    }
+
+    #[test]
+    fn batched_workload_hits_resident_set() {
+        let r = measure(
+            &kw_factory(4096),
+            &Workload::Batched { working_set: 256, batch: 32 },
+            &quick_cfg(2),
+        );
+        assert!(r.hit_ratio > 0.95, "hit ratio {}", r.hit_ratio);
+        assert!(r.mops.mean() > 0.0);
+        assert_eq!(Workload::Batched { working_set: 1, batch: 32 }.label(), "batched-x32");
+    }
+
+    #[test]
+    fn latency_percentiles_are_populated_and_ordered() {
+        let r = measure(
+            &kw_factory(4096),
+            &Workload::AllHit { working_set: 256 },
+            &quick_cfg(2),
+        );
+        assert!(r.lat_p50_ns > 0, "p50 {}", r.lat_p50_ns);
+        assert!(r.lat_p99_ns >= r.lat_p50_ns, "p99 {} < p50 {}", r.lat_p99_ns, r.lat_p50_ns);
+        assert!(r.lat_mean_ns > 0.0);
+    }
+
+    #[test]
+    fn hit_ratio_is_aggregated_over_repeats_not_last() {
+        use std::sync::atomic::AtomicUsize;
+        // A stateful factory gives repeat 0 a cache that holds ~25% of the
+        // working set (ratio ≈ 0.25) and repeat 1 one that holds all of it
+        // (ratio ≈ 1.0). Only an aggregate over both repeats lands in the
+        // middle; the old bug — reporting the last repeat only — would be
+        // ≈ 1.0, and "first repeat only" would be ≈ 0.25.
+        let calls = AtomicUsize::new(0);
+        let factory = move || -> Arc<dyn Cache> {
+            let capacity =
+                if calls.fetch_add(1, Ordering::Relaxed) == 0 { 1024 } else { 16_384 };
+            Arc::new(KwWfsc::new(capacity, 8, Policy::Lru))
+        };
+        let cfg = RunConfig {
+            threads: 2,
+            duration: Duration::from_millis(40),
+            repeats: 2,
+            seed: 5,
+        };
+        let r = measure(&factory, &Workload::AllHit { working_set: 4096 }, &cfg);
+        assert!(
+            r.hit_ratio > 0.30 && r.hit_ratio < 0.95,
+            "aggregate ratio {} should mix both repeats, not report the last",
+            r.hit_ratio
+        );
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! The `Cache::peek_victim` contract across every implementation.
+//!
+//! `peek_victim` is advisory (used by TinyLFU admission): `None` means
+//! "no eviction needed" *or* "no preview support", so this suite pins
+//! down which implementations actually support previews — and that when
+//! a preview is given, the named victim is really resident.
+//!
+//! Preview support: the three k-way variants (victim = policy scan of the
+//! probed key's set), `sampled` (victim = sampled scan of the segment),
+//! and Guava-like (victim = LRU tail of the segment). Caffeine-like and
+//! segmented Caffeine inherit the trait default and always answer `None`.
+
+use kway::kway::{build, KwWfsc, Variant};
+use kway::policy::Policy;
+use kway::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
+use kway::fully::Sampled;
+use kway::Cache;
+
+/// Fill far past capacity so every set / segment is full, then probe.
+fn fill(cache: &dyn Cache, keys: u64) {
+    for key in 0..keys {
+        cache.put(key, key);
+    }
+}
+
+#[test]
+fn kway_previews_are_resident_for_every_variant_and_policy() {
+    for variant in Variant::ALL {
+        for policy in Policy::ALL {
+            let cache = build(variant, 64, 4, policy);
+            fill(&*cache, 2048);
+            let mut previews = 0;
+            for probe in 10_000..10_200u64 {
+                if let Some(victim) = cache.peek_victim(probe) {
+                    previews += 1;
+                    // Values equal keys, so a resident victim returns
+                    // itself; a non-resident "victim" would be a lie.
+                    assert_eq!(
+                        cache.get(victim),
+                        Some(victim),
+                        "{variant:?}/{policy:?}: previewed victim {victim} not resident"
+                    );
+                }
+            }
+            // With every set full, a preview must be produced essentially
+            // always (single-threaded: no mid-publish ways to skip).
+            assert!(
+                previews >= 190,
+                "{variant:?}/{policy:?}: only {previews}/200 previews on a full cache"
+            );
+        }
+    }
+}
+
+#[test]
+fn kway_preview_is_none_while_room_remains() {
+    for variant in Variant::ALL {
+        let cache = build(variant, 1024, 8, Policy::Lru);
+        // A handful of inserts cannot fill any 8-way set.
+        for key in 0..4u64 {
+            cache.put(key, key);
+        }
+        for probe in 0..64u64 {
+            assert_eq!(
+                cache.peek_victim(probe),
+                None,
+                "{variant:?}: preview with empty ways must be None"
+            );
+        }
+    }
+}
+
+#[test]
+fn kway_preview_victim_shares_the_probed_set() {
+    // White-box check on the concrete type: the victim must live in the
+    // same set the probe key maps to (that is what the preview promises —
+    // "this is who *you* would evict").
+    let cache = KwWfsc::new(64, 4, Policy::Lru);
+    fill(&cache, 2048);
+    let geo = cache.geometry();
+    let mut checked = 0;
+    for probe in 10_000..10_100u64 {
+        if let Some(victim) = cache.peek_victim(probe) {
+            assert_eq!(
+                geo.set_of(victim),
+                geo.set_of(probe),
+                "victim {victim} not in probe {probe}'s set"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0);
+}
+
+#[test]
+fn sampled_and_guava_previews_are_resident() {
+    let sampled = Sampled::with_defaults(256, 8, Policy::Lru);
+    fill(&sampled, 4096);
+    let mut previews = 0;
+    for probe in 10_000..10_100u64 {
+        if let Some(victim) = sampled.peek_victim(probe) {
+            previews += 1;
+            assert_eq!(sampled.get(victim), Some(victim), "sampled victim {victim}");
+        }
+    }
+    assert!(previews > 0, "full sampled cache must preview victims");
+
+    let guava = GuavaLike::new(256, 4);
+    fill(&guava, 4096);
+    let mut previews = 0;
+    for probe in 10_000..10_100u64 {
+        if let Some(victim) = guava.peek_victim(probe) {
+            previews += 1;
+            assert_eq!(guava.get(victim), Some(victim), "guava victim {victim}");
+        }
+    }
+    assert!(previews > 0, "full guava cache must preview victims");
+}
+
+#[test]
+fn default_inheritors_always_answer_none() {
+    // Caffeine-like and segmented Caffeine silently inherit the advisory
+    // default. Pin that down: if one of them grows real preview support,
+    // this test should be updated alongside the TinyLFU admission wiring.
+    let caffeine = CaffeineLike::new(64);
+    let seg = SegmentedCaffeine::new(64, 2);
+    fill(&caffeine, 2048);
+    fill(&seg, 2048);
+    for probe in 0..256u64 {
+        assert_eq!(caffeine.peek_victim(probe), None, "CaffeineLike grew previews?");
+        assert_eq!(seg.peek_victim(probe), None, "SegmentedCaffeine grew previews?");
+    }
+}

@@ -63,6 +63,74 @@ fn batch_get_equals_singles() {
 }
 
 #[test]
+fn batch_scatter_gather_in_input_order_under_concurrency() {
+    // A scattered batch must come back stitched in input order even while
+    // writer clients continuously push traffic through every worker. The
+    // writers re-put resident keys with their existing values, so the
+    // working set churns the workers without ever changing an answer.
+    // 2048 resident keys over 8192 sets (capacity 64k): no set comes near
+    // its 8 ways, so residency is stable for the whole test.
+    let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 65_536, 8, Policy::Lru));
+    let service = Arc::new(CacheService::start(cache, ServiceConfig { workers: 4 }));
+    const RESIDENT: u64 = 2048;
+    let value_of = |k: u64| k * 7 + 1;
+    for key in 0..RESIDENT {
+        service.put(key, value_of(key));
+    }
+    // Per-key FIFO through the router: one get per key flushes its worker.
+    for key in 0..RESIDENT {
+        assert_eq!(service.get(key), Some(value_of(key)));
+    }
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut writers = Vec::new();
+    for t in 0..2u64 {
+        let service = service.clone();
+        let stop = stop.clone();
+        writers.push(std::thread::spawn(move || {
+            let mut key = t * 31;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                key = (key + 1) % RESIDENT;
+                service.put(key, value_of(key));
+            }
+        }));
+    }
+
+    let mut rng = kway::util::rng::Rng::new(3);
+    for round in 0..200 {
+        // 97 keys: not a multiple of the worker count, shuffled across all
+        // four workers' shards.
+        let keys: Vec<u64> = (0..97).map(|_| rng.below(RESIDENT)).collect();
+        let out = service.get_batch(keys.clone());
+        assert_eq!(out.len(), keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(out[i], Some(value_of(key)), "round {round} position {i} key {key}");
+        }
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    // Dropping the last Arc shuts the service down (Drop joins workers).
+}
+
+#[test]
+fn batched_drive_clients_hits_like_scalar() {
+    let cache: Arc<dyn Cache> = Arc::from(build(Variant::Ls, 4096, 8, Policy::Lru));
+    let service = CacheService::start(cache, ServiceConfig { workers: 2 });
+    let secs = kway::coordinator::drive_clients_batched(&service, 3, 2_000, 16, 8192, 9);
+    assert!(secs > 0.0);
+    let m = service.metrics();
+    assert!(
+        m.ops.gets.load(std::sync::atomic::Ordering::Relaxed) >= 6_000,
+        "batched gets are counted per key"
+    );
+    assert!(m.ops.hit_ratio() > 0.05, "zipf batched workload should hit");
+    service.shutdown();
+}
+
+#[test]
 fn metrics_report_format() {
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 512, 8, Policy::Lru));
     let service = CacheService::start(cache, ServiceConfig { workers: 1 });

@@ -1,0 +1,219 @@
+//! Vendored offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network registry, so this workspace
+//! vendors the subset of `anyhow` it actually uses (see DESIGN.md
+//! §Offline build): [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//! Semantics mirror the real crate closely enough that swapping the path
+//! dependency for the registry crate is a no-op for this codebase.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A context-carrying error: a message plus an optional chain of causes.
+///
+/// `{}` prints the outermost message, `{:#}` the whole chain separated by
+/// `": "`, and `{:?}` an `anyhow`-style "Caused by:" listing.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error in an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Self { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause_msg(&self) -> &str {
+        let mut cur = self;
+        while let Some(next) = cur.source.as_deref() {
+            cur = next;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(cause) = self.source.as_deref() {
+            f.write_str("\n\nCaused by:")?;
+            let mut cur = Some(cause);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        fn build(err: &(dyn StdError + 'static)) -> Error {
+            Error {
+                msg: err.to_string(),
+                source: err.source().map(|s| Box::new(build(s))),
+            }
+        }
+        build(&err)
+    }
+}
+
+mod private {
+    use super::{Error, StdError};
+
+    /// Anything `.context()` can upgrade into an [`Error`] — every std
+    /// error type, plus [`Error`] itself (so contexts stack).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`,
+/// mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Attach a context message to the error, if any.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (captures work, like
+/// `format!`) or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn contexts_stack_on_anyhow_errors() {
+        let base: Result<()> = Err(anyhow!("inner {}", 42));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.root_cause_msg(), "inner 42");
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged: {flag}");
+            }
+            None::<u32>.with_context(|| "empty option")
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flagged: true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "empty option");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Vendored offline stand-in for `crossbeam-utils` (see DESIGN.md
+//! §Offline build). Only [`CachePadded`] is provided — the one item this
+//! workspace uses. API-compatible with the real crate's root re-export.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to 128 bytes so adjacent values never share a
+/// cache line. 128 (not 64) covers the adjacent-line spatial prefetcher
+/// pairing on modern x86 and the 128-byte lines of some ARM parts — the
+/// same constant the real crossbeam uses on those targets.
+#[derive(Default, Clone, Copy)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap a value in cache-line padding.
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    /// Unwrap, discarding the padding.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CachePadded").field("value", &self.value).finish()
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_and_deref() {
+        let p = CachePadded::new(7u64);
+        assert_eq!(*p, 7);
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<u8>>() >= 128);
+        let addr = &p as *const _ as usize;
+        assert_eq!(addr % 128, 0);
+    }
+
+    #[test]
+    fn deref_mut_and_into_inner() {
+        let mut p = CachePadded::new(vec![1, 2]);
+        p.push(3);
+        assert_eq!(p.into_inner(), vec![1, 2, 3]);
+    }
+}

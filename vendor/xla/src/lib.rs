@@ -1,0 +1,160 @@
+//! Offline stub of the `xla` crate (the xla-rs PJRT bindings).
+//!
+//! The real crate links `xla_extension` (PJRT + XLA compiler); this
+//! environment ships neither, so the stub provides the exact type surface
+//! `kway::runtime` compiles against while [`PjRtClient::cpu`] — the first
+//! call every runtime path makes — fails with a clear message. Replacing
+//! this vendored path dependency with a real xla-rs build (and running
+//! `make artifacts`) enables the full Layers 1–2 pipeline and the
+//! `pjrt`-gated parity tests. See DESIGN.md §Offline build.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` far enough for `?` and `.context()`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` with the stub [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime unavailable: this build uses the vendored `xla` stub \
+         (no xla_extension in this environment); swap vendor/xla for a real \
+         xla-rs build to enable it"
+            .to_string(),
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait ArrayElement: Copy {}
+
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u32 {}
+impl ArrayElement for u64 {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// Host-side tensor stand-in. Construction succeeds (so argument-building
+/// code is exercised); anything that would need device data errors.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: ArrayElement>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Scalar literal.
+    pub fn scalar<T: ArrayElement>(_value: T) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Copy out as a host vector — needs a real backend.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    /// Decompose a tuple literal — needs a real backend.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text file — needs a real backend.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host — needs a real backend.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments — needs a real backend.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A PJRT client. In the stub, construction always fails — callers see a
+/// clean `Err` before touching any other API.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — needs a real backend.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn literal_building_is_infallible() {
+        let lit = Literal::vec1(&[1i32, 2, 3]).reshape(&[3, 1]).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+}
