@@ -67,7 +67,8 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Layer 3: serve the same trace through the cache service.
     let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(capacity, sim.ways, Policy::Lru));
-    let service = Arc::new(CacheService::start(cache, ServiceConfig { workers: 2 }));
+    let service =
+        Arc::new(CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() }));
     let next = Arc::new(AtomicUsize::new(0));
 
     let t0 = Instant::now();

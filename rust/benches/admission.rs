@@ -1,0 +1,91 @@
+//! The admission extension (figT* series): trace-replay throughput for
+//! the three k-way variants with and without TinyLFU admission, against
+//! the Caffeine-like baseline (whose W-TinyLFU admission is built in),
+//! across thread counts.
+//!
+//! ```bash
+//! cargo bench --bench admission
+//! KWAY_BENCH_QUICK=1 cargo bench --bench admission
+//! cargo bench --bench admission -- --figure figT1
+//! ```
+//!
+//! What to look for (DESIGN.md §Admission): the `+TLFU` rows pay one
+//! sketch record per access plus one victim preview per insert, so at
+//! 100%-hit-style traces the overhead is a few relaxed atomics; on
+//! insert-heavy traces admission *refuses* most one-hit wonders, turning
+//! expensive replacements into cheap drops — throughput at equal or
+//! better hit ratio. The Caffeine row shows what a write-buffered design
+//! pays for the same filter.
+
+use kway::figures::{quick_mode, ADMISSION_FIGURES};
+use kway::throughput::{impl_factory, measure, RunConfig, Workload};
+use kway::tinylfu::AdmissionMode;
+use kway::trace::paper;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let only = args
+        .iter()
+        .position(|a| a == "--figure")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let quick = quick_mode();
+    let threads: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 4, 8, 16] };
+    let duration = Duration::from_millis(if quick { 100 } else { 300 });
+    let repeats = if quick { 2 } else { 3 };
+    let len = if quick { 100_000 } else { 500_000 };
+    let kway_impls = ["KW-WFA", "KW-WFSC", "KW-LS"];
+
+    for fig in ADMISSION_FIGURES {
+        if let Some(ref f) = only {
+            if f != fig.id {
+                continue;
+            }
+        }
+        let trace = Arc::new(paper::build(fig.trace, len, 42).expect("trace model"));
+        println!(
+            "\n==== {} — trace {} cache 2^{} policy {} ± TLFU admission — Mops/s ====",
+            fig.id,
+            fig.trace,
+            fig.capacity.trailing_zeros(),
+            fig.policy.name(),
+        );
+        print!("{:20}", "impl\\threads");
+        for t in &threads {
+            print!(" {t:>9}");
+        }
+        println!("   hit-ratio");
+        for name in kway_impls {
+            for admission in AdmissionMode::ALL {
+                let label = format!("{name}{}", admission.label());
+                print!("{label:20}");
+                let mut last_hit = 0.0;
+                for &t in &threads {
+                    let factory =
+                        impl_factory(name, fig.capacity, t, fig.policy, admission).unwrap();
+                    let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+                    let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
+                    last_hit = r.hit_ratio;
+                    print!(" {:9.2}", r.mops.mean());
+                }
+                println!("   {last_hit:9.3}");
+            }
+        }
+        // Caffeine-like runs bare: its W-TinyLFU admission is internal,
+        // so it is the "product with admission" reference line.
+        print!("{:20}", "Caffeine");
+        let mut last_hit = 0.0;
+        for &t in &threads {
+            let factory =
+                impl_factory("Caffeine", fig.capacity, t, fig.policy, AdmissionMode::None)
+                    .unwrap();
+            let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+            let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
+            last_hit = r.hit_ratio;
+            print!(" {:9.2}", r.mops.mean());
+        }
+        println!("   {last_hit:9.3}");
+    }
+}

@@ -20,6 +20,7 @@
 use kway::figures::{quick_mode, BATCHED_FIGURES};
 use kway::policy::Policy;
 use kway::throughput::{impl_factory, measure, RunConfig, Workload};
+use kway::tinylfu::AdmissionMode;
 use std::time::Duration;
 
 fn main() {
@@ -43,7 +44,8 @@ fn main() {
             "impl", "batch", "Mops/s", "p50(ns)", "p99(ns)", "hit"
         );
         for name in impls {
-            let factory = impl_factory(name, capacity, threads, Policy::Lru).unwrap();
+            let factory =
+                impl_factory(name, capacity, threads, Policy::Lru, AdmissionMode::None).unwrap();
             let cfg = RunConfig { threads, duration, repeats, seed: 42 };
             // Scalar baseline: same keys, one get per call.
             let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);

@@ -15,6 +15,7 @@
 use kway::figures::{quick_mode, SYNTHETIC_FIGURES};
 use kway::policy::Policy;
 use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::tinylfu::AdmissionMode;
 use std::time::Duration;
 
 fn main() {
@@ -68,7 +69,8 @@ fn main() {
         for name in IMPLS {
             print!("{name:14}");
             for &t in &threads {
-                let factory = impl_factory(name, capacity, t, Policy::Lru).unwrap();
+                let factory =
+                    impl_factory(name, capacity, t, Policy::Lru, AdmissionMode::None).unwrap();
                 let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
                 let r = measure(&*factory, &workload, &cfg);
                 print!(" {:9.2}", r.mops.mean());

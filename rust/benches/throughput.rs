@@ -17,6 +17,7 @@
 use kway::figures::{quick_mode, THROUGHPUT_FIGURES};
 use kway::policy::Policy;
 use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::tinylfu::AdmissionMode;
 use kway::trace::paper;
 use std::sync::Arc;
 use std::time::Duration;
@@ -57,7 +58,9 @@ fn main() {
             print!("{name:14}");
             let mut last_hit = 0.0;
             for &t in &threads {
-                let factory = impl_factory(name, fig.capacity, t, Policy::Lru).unwrap();
+                let factory =
+                    impl_factory(name, fig.capacity, t, Policy::Lru, AdmissionMode::None)
+                        .unwrap();
                 let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
                 let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
                 last_hit = r.hit_ratio;

@@ -9,6 +9,7 @@
 //! whole batch. See DESIGN.md §Batched access path.
 
 use crate::metrics::{LatencyHistogram, OpCounters};
+use crate::tinylfu::AdmissionMode;
 use crate::util::hash;
 use crate::Cache;
 use std::sync::atomic::Ordering;
@@ -21,11 +22,16 @@ use std::time::Instant;
 pub struct ServiceConfig {
     /// Worker threads executing cache operations.
     pub workers: usize,
+    /// Admission filter layered over the supplied cache before the
+    /// workers start ([`AdmissionMode::TinyLfu`] wraps it in a
+    /// [`crate::tinylfu::TlfuCache`], so every routed get/put — batched
+    /// or not — flows through the shared frequency sketch).
+    pub admission: AdmissionMode,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 4 }
+        Self { workers: 4, admission: AdmissionMode::None }
     }
 }
 
@@ -55,7 +61,12 @@ enum Request {
     Put { key: u64, value: u64, enqueued: Instant },
     /// One worker's share of a scattered batch; `worker` comes back with
     /// the reply so the gatherer knows which sub-batch arrived.
-    GetBatch { keys: Vec<u64>, enqueued: Instant, worker: usize, reply: Sender<(usize, Vec<Option<u64>>)> },
+    GetBatch {
+        keys: Vec<u64>,
+        enqueued: Instant,
+        worker: usize,
+        reply: Sender<(usize, Vec<Option<u64>>)>,
+    },
     /// One worker's share of a scattered batched put (fire-and-forget).
     PutBatch { items: Vec<(u64, u64)>, enqueued: Instant },
     Shutdown,
@@ -70,9 +81,11 @@ pub struct CacheService {
 }
 
 impl CacheService {
-    /// Start `cfg.workers` workers over `cache`.
+    /// Start `cfg.workers` workers over `cache` (layered behind the
+    /// configured admission filter).
     pub fn start(cache: Arc<dyn Cache>, cfg: ServiceConfig) -> Self {
         assert!(cfg.workers >= 1);
+        let cache = cfg.admission.wrap(cache);
         let metrics = Arc::new(ServiceMetrics::default());
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -332,7 +345,7 @@ mod tests {
 
     fn service(workers: usize) -> CacheService {
         let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
-        CacheService::start(cache, ServiceConfig { workers })
+        CacheService::start(cache, ServiceConfig { workers, ..Default::default() })
     }
 
     #[test]
@@ -450,6 +463,26 @@ mod tests {
         let m = s.metrics();
         assert!(m.ops.gets.load(Ordering::Relaxed) >= 8_000);
         assert!(m.ops.hit_ratio() > 0.1, "zipf working set should yield hits");
+        s.shutdown();
+    }
+
+    #[test]
+    fn admission_wrapped_service_serves() {
+        let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let s = CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, admission: AdmissionMode::TinyLfu },
+        );
+        assert_eq!(s.cache().name(), "KW-WFSC+TLFU");
+        let secs = drive_clients(&s, 2, 2_000, 2048, 3);
+        assert!(secs > 0.0);
+        // The Zipf head builds frequency through the routed gets, gets
+        // admitted, and starts hitting.
+        assert!(
+            s.metrics().ops.hit_ratio() > 0.05,
+            "no hits through admission: {}",
+            s.metrics().ops.hit_ratio()
+        );
         s.shutdown();
     }
 

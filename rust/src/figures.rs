@@ -3,6 +3,8 @@
 //! it. The bench binaries (`rust/benches/`) iterate this table; DESIGN.md
 //! §Per-experiment index mirrors it.
 
+use crate::policy::Policy;
+
 /// Which hit-ratio subfigure-(d) series a figure shows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExtraSeries {
@@ -22,6 +24,7 @@ pub struct HitRatioFigure {
 }
 
 /// All hit-ratio figures.
+#[rustfmt::skip]
 pub const HITRATIO_FIGURES: &[HitRatioFigure] = &[
     HitRatioFigure { id: "fig4", trace: "wiki_a", sizes: &[512, 2048, 8192], extra: ExtraSeries::Hyperbolic },
     HitRatioFigure { id: "fig5", trace: "p8", sizes: &[1024, 4096, 16384], extra: ExtraSeries::None },
@@ -49,6 +52,7 @@ pub struct ThroughputFigure {
 }
 
 /// All trace-replay throughput figures.
+#[rustfmt::skip]
 pub const THROUGHPUT_FIGURES: &[ThroughputFigure] = &[
     ThroughputFigure { id: "fig14", trace: "f1", capacity: 1 << 11, paper_duration_s: 1, platform: "AMD" },
     ThroughputFigure { id: "fig15", trace: "s3", capacity: 1 << 19, paper_duration_s: 4, platform: "AMD" },
@@ -104,6 +108,32 @@ pub const BATCHED_FIGURES: &[BatchedFigure] = &[
     BatchedFigure { id: "figB128", batch: 128 },
 ];
 
+/// An admission-throughput figure (the TinyLFU-admission extension, not
+/// from the paper): trace-replay Mops/s vs thread count for the three
+/// k-way variants with and without TinyLFU admission, against the
+/// Caffeine-like baseline (whose W-TinyLFU admission is built in).
+/// `benches/admission.rs` iterates this table; `kway throughput
+/// --admission tlfu` sweeps the same dimension interactively.
+#[derive(Debug, Clone)]
+pub struct AdmissionFigure {
+    pub id: &'static str,
+    pub trace: &'static str,
+    /// Cache size (paper-style power of two).
+    pub capacity: usize,
+    /// Eviction policy the k-way variants run under admission — figT1/3
+    /// are the concurrent realizations of the paper's subfigure (b)
+    /// "LFU + TinyLFU" and subfigure (d) "Hyperbolic + TinyLFU".
+    pub policy: Policy,
+}
+
+/// All admission figures.
+#[rustfmt::skip]
+pub const ADMISSION_FIGURES: &[AdmissionFigure] = &[
+    AdmissionFigure { id: "figT1", trace: "oltp", capacity: 1 << 11, policy: Policy::Lfu },
+    AdmissionFigure { id: "figT2", trace: "wiki_a", capacity: 1 << 11, policy: Policy::Lru },
+    AdmissionFigure { id: "figT3", trace: "multi2", capacity: 1 << 11, policy: Policy::Hyperbolic },
+];
+
 /// Quick-mode flag shared by every bench: set `KWAY_BENCH_QUICK=1` to run
 /// an abbreviated pass (shorter traces, fewer repeats, fewer threads).
 pub fn quick_mode() -> bool {
@@ -123,6 +153,21 @@ mod tests {
         for f in THROUGHPUT_FIGURES {
             assert!(paper::build(f.trace, 1000, 1).is_some(), "{} trace {}", f.id, f.trace);
         }
+        for f in ADMISSION_FIGURES {
+            assert!(paper::build(f.trace, 1000, 1).is_some(), "{} trace {}", f.id, f.trace);
+        }
+    }
+
+    #[test]
+    fn admission_figures_cover_the_paper_pairings() {
+        // Subfigure (b) LFU+TLFU and subfigure (d) Hyperbolic+TLFU must
+        // both be represented, and ids must be unique.
+        assert!(ADMISSION_FIGURES.iter().any(|f| f.policy == Policy::Lfu));
+        assert!(ADMISSION_FIGURES.iter().any(|f| f.policy == Policy::Hyperbolic));
+        let mut ids: Vec<&str> = ADMISSION_FIGURES.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ADMISSION_FIGURES.len());
     }
 
     #[test]

@@ -157,8 +157,11 @@ impl SetEngine {
             Policy::Hyperbolic => {
                 let old = meta.load(Ordering::Relaxed);
                 let new = self.policy.on_hit_meta(old, now);
-                // Single CAS attempt; on contention we drop the update.
-                let _ = meta.compare_exchange_weak(old, new, Ordering::Relaxed, Ordering::Relaxed);
+                // Single *strong* CAS attempt; on contention we drop the
+                // update. Strong so the uncontended (and single-threaded)
+                // path never fails spuriously on LL/SC targets — the
+                // atomic/plain touch-flavour parity depends on it.
+                let _ = meta.compare_exchange(old, new, Ordering::Relaxed, Ordering::Relaxed);
             }
             Policy::Fifo | Policy::Random => {}
         }
@@ -215,6 +218,19 @@ impl SetEngine {
     /// way: [`EMPTY`] when the way is free, [`RESERVED`] when it is
     /// mid-publish, the encoded key otherwise. Returns `None` when the set
     /// still has room (no eviction needed) or the victim is mid-publish.
+    ///
+    /// The victim-preview **contract** every variant upholds (pinned by
+    /// `rust/tests/peek_victim.rs` and relied on by
+    /// [`crate::tinylfu::TlfuCache`]):
+    ///
+    /// * a returned key was resident in the probed key's set at snapshot
+    ///   time — never a sentinel, never a made-up key;
+    /// * `None` ⇒ the insert needs no eviction *or* the set is mid-churn
+    ///   (callers must treat `None` as "admit");
+    /// * under concurrency the preview is *advisory*: the put that follows
+    ///   may evict a different way. Admission is a probabilistic filter,
+    ///   so acting on a stale preview mis-scores at most one insert —
+    ///   safety is untouched (DESIGN.md §Admission).
     pub fn peek_victim_with(
         &self,
         k: usize,
@@ -339,17 +355,70 @@ mod tests {
     fn peek_victim_with_contract() {
         let e = engine(64, 4, Policy::Lru);
         // Any empty way -> no eviction needed.
-        let keys = [Geometry::encode_key(1), EMPTY, Geometry::encode_key(3), Geometry::encode_key(4)];
+        let keys =
+            [Geometry::encode_key(1), EMPTY, Geometry::encode_key(3), Geometry::encode_key(4)];
         assert_eq!(e.peek_victim_with(4, |i| keys[i], |_| 0), None);
         // Full set -> the policy minimum's decoded key.
         let keys = [10u64, 11, 12, 13].map(Geometry::encode_key);
         let metas = [50u64, 10, 90, 30];
         assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(11));
         // Mid-publish victim -> None.
-        let keys = [Geometry::encode_key(10), RESERVED, Geometry::encode_key(12), Geometry::encode_key(13)];
+        let keys = [
+            Geometry::encode_key(10),
+            RESERVED,
+            Geometry::encode_key(12),
+            Geometry::encode_key(13),
+        ];
         let metas = [50u64, 0, 90, 30];
         // RESERVED way is masked to u64::MAX, so the victim is way 3 (30).
         assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(13));
+    }
+
+    #[test]
+    fn atomic_and_plain_touch_flavours_agree_for_every_policy() {
+        // The engine has two touch flavours — atomic (WFA/WFSC) and plain
+        // (KW-LS) — that must encode the *same* policy semantics: driven
+        // single-threaded over a scripted access sequence they must
+        // produce identical metadata and identical victim choices. This
+        // pins the refactor-safety of engine.rs: a change to one flavour
+        // that forgets the other diverges the k-way variants' behaviour.
+        use crate::util::rng::Rng;
+        let k = 8usize;
+        // (way, logical time) hit script; strictly increasing times.
+        let script: [(usize, u64); 12] = [
+            (0, 100),
+            (1, 101),
+            (0, 102),
+            (3, 110),
+            (5, 111),
+            (0, 112),
+            (6, 120),
+            (3, 121),
+            (2, 130),
+            (7, 131),
+            (0, 140),
+            (4, 141),
+        ];
+        for policy in Policy::ALL {
+            let e = engine(64, k, policy);
+            let atomic: Vec<AtomicU64> =
+                (0..k).map(|i| AtomicU64::new(e.initial_meta(10 * i as u64))).collect();
+            let mut plain: Vec<u64> =
+                (0..k).map(|i| e.initial_meta(10 * i as u64)).collect();
+            for &(way, now) in &script {
+                e.touch_atomic(&atomic[way], now);
+                e.touch_plain(&mut plain[way], now);
+            }
+            let metas_atomic: Vec<u64> =
+                atomic.iter().map(|m| m.load(Ordering::Relaxed)).collect();
+            assert_eq!(metas_atomic, plain, "{policy:?}: metadata flavours diverged");
+            // Victim selection over the two flavours' metadata must agree
+            // (identically-seeded RNGs make Random comparable too).
+            let now = 200;
+            let va = policy.select_victim(&metas_atomic, now, &mut Rng::new(99));
+            let vp = policy.select_victim(&plain, now, &mut Rng::new(99));
+            assert_eq!(va, vp, "{policy:?}: victim choice diverged");
+        }
     }
 
     #[test]

@@ -21,7 +21,11 @@
 //! scans, touch semantics and the batched access driver live once in the
 //! internal `engine` module (DESIGN.md §Set engine); the three variants
 //! are storage adapters over it, each contributing only its layout and
-//! claim/publish protocol.
+//! claim/publish protocol. Every variant also exposes the engine's
+//! advisory victim preview (`Cache::peek_victim`) — the per-set hook the
+//! concurrent TinyLFU admission layer ([`crate::tinylfu::TlfuCache`])
+//! composes on, which is exactly the "limited associativity TinyLFU"
+//! the paper promotes.
 
 mod engine;
 mod geometry;

@@ -13,7 +13,11 @@
 //!   ([`products`]), the TinyLFU admission substrate ([`tinylfu`]), trace
 //!   models ([`trace`]), the hit-ratio simulator ([`sim`]), the
 //!   multi-threaded throughput harness ([`throughput`]) and the cache
-//!   service coordinator ([`coordinator`]).
+//!   service coordinator ([`coordinator`]). TinyLFU admission is a
+//!   first-class concurrent layer: [`tinylfu::TlfuCache`] wraps any
+//!   [`Cache`] behind [`tinylfu::AdmissionMode`], so every harness,
+//!   service and bench can run the paper's "eviction + TinyLFU admission"
+//!   configurations multi-threaded.
 //! * **Layer 2 (python/compile/model.py)** — a JAX formulation of the
 //!   set-parallel cache simulation and batched policy evaluation, AOT
 //!   lowered to HLO text at build time.
@@ -89,6 +93,43 @@ pub trait Cache: Send + Sync {
     /// fine for an approximate admission filter.
     fn peek_victim(&self, _key: u64) -> Option<u64> {
         None
+    }
+}
+
+/// Forward the full `Cache` surface through a shared pointer, so wrapper
+/// layers ([`tinylfu::TlfuCache`]) can compose over an already-shared
+/// `Arc<dyn Cache>` — the shape the coordinator service and the
+/// throughput factories hand caches around in. Every method (including
+/// the batched paths and the victim preview) forwards explicitly: falling
+/// back to the trait defaults here would silently drop the inner
+/// implementation's batching and preview support.
+impl Cache for std::sync::Arc<dyn Cache> {
+    fn get(&self, key: u64) -> Option<u64> {
+        (**self).get(key)
+    }
+    fn put(&self, key: u64, value: u64) {
+        (**self).put(key, value)
+    }
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        (**self).get_batch(keys, out)
+    }
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        (**self).put_batch(items)
+    }
+    fn capacity(&self) -> usize {
+        (**self).capacity()
+    }
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn peek_victim(&self, key: u64) -> Option<u64> {
+        (**self).peek_victim(key)
     }
 }
 

@@ -5,15 +5,22 @@
 //!   throughput  multi-threaded trace-replay throughput (Figures 14–26)
 //!   synthetic   synthetic-mix throughput (Figures 27–30)
 //!   batch       batched-get sweep: Mops/s + per-batch p50/p99 vs batch size
+//!   bench       named benchmark suite; --json writes BENCH_<name>.json
 //!   serve       run the cache service demo (router + workers + metrics)
 //!   validate    cross-check the XLA artifacts against the native engine
 //!   ballsbins   Theorem 4.1 bound vs Monte-Carlo
 //!   info        list trace models, implementations and artifacts
+//!
+//! `throughput`, `synthetic`, `batch`, `bench` and `serve` all take
+//! `--admission none|tlfu`: `tlfu` layers the concurrent TinyLFU
+//! admission filter (`kway::tinylfu::TlfuCache`) over every cache they
+//! build.
 
 use anyhow::{anyhow, bail, Result};
 use kway::policy::Policy;
 use kway::sim::{self, Config};
 use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::tinylfu::AdmissionMode;
 use kway::trace::{loader, paper};
 use kway::util::cli::Args;
 use std::sync::Arc;
@@ -32,6 +39,7 @@ fn main() {
         Some("throughput") => cmd_throughput(&args),
         Some("synthetic") => cmd_synthetic(&args),
         Some("batch") => cmd_batch(&args),
+        Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("ballsbins") => cmd_ballsbins(&args),
@@ -50,13 +58,20 @@ fn main() {
 
 const HELP: &str = "usage: kway <subcommand> [--options]
   hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
-  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5]
-  synthetic  --workload miss100|hit100|hit95|hit90 [--capacity 2097152] [--threads ...]
-  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0]
+  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu]
+  synthetic  --workload miss100|hit100|hit95|hit90 [--capacity 2097152] [--threads ...] [--admission none|tlfu]
+  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu]
+  bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--json]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
+
+/// Parse the shared `--admission none|tlfu` option.
+fn parse_admission(args: &Args) -> Result<AdmissionMode> {
+    let raw = args.get_or("admission", "none");
+    AdmissionMode::parse(&raw).ok_or_else(|| anyhow!("bad --admission {raw:?} (none|tlfu)"))
+}
 
 fn cmd_hitratio(args: &Args) -> Result<()> {
     let trace_name = args.get_or("trace", "oltp");
@@ -114,22 +129,28 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let repeats = args.get_parsed_or("repeats", 5usize)?;
     let policy = Policy::parse(&args.get_or("policy", "lru"))
         .ok_or_else(|| anyhow!("bad --policy"))?;
+    let admission = parse_admission(args)?;
 
     println!(
-        "# throughput: trace={} capacity={} duration={:?} repeats={} (Mops/s)",
-        trace.name, capacity, duration, repeats
+        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} (Mops/s)",
+        trace.name,
+        capacity,
+        duration,
+        repeats,
+        admission.name()
     );
-    print!("{:14}", "impl\\threads");
+    print!("{:20}", "impl\\threads");
     for t in &threads {
         print!(" {t:>10}");
     }
     println!("   p50/p99(ns)");
     for name in &impls {
         let workload = Workload::TraceReplay(trace.clone());
-        print!("{name:14}");
+        let label = format!("{name}{}", admission.label());
+        print!("{label:20}");
         let mut last_lat = (0u64, 0u64);
         for &t in &threads {
-            let factory = impl_factory(name, capacity, t, policy)
+            let factory = impl_factory(name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
             let cfg = RunConfig { threads: t, duration, repeats, seed };
             let r = measure(&*factory, &workload, &cfg);
@@ -158,24 +179,27 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
     let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 500u64)?);
     let repeats = args.get_parsed_or("repeats", 5usize)?;
     let seed = args.get_parsed_or("seed", 42u64)?;
+    let admission = parse_admission(args)?;
 
     println!(
-        "# synthetic {}: capacity={} duration={:?} repeats={} (Mops/s)",
+        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} (Mops/s)",
         workload.label(),
         capacity,
         duration,
-        repeats
+        repeats,
+        admission.name()
     );
-    print!("{:14}", "impl\\threads");
+    print!("{:20}", "impl\\threads");
     for t in &threads {
         print!(" {t:>10}");
     }
     println!("   p50/p99(ns)");
     for name in &impls {
-        print!("{name:14}");
+        let label = format!("{name}{}", admission.label());
+        print!("{label:20}");
         let mut last_lat = (0u64, 0u64);
         for &t in &threads {
-            let factory = impl_factory(name, capacity, t, Policy::Lru)
+            let factory = impl_factory(name, capacity, t, Policy::Lru, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
             let cfg = RunConfig { threads: t, duration, repeats, seed };
             let r = measure(&*factory, &workload, &cfg);
@@ -201,30 +225,33 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 300u64)?);
     let repeats = args.get_parsed_or("repeats", 3usize)?;
     let seed = args.get_parsed_or("seed", 42u64)?;
+    let admission = parse_admission(args)?;
 
     println!(
         "# batch sweep: capacity={capacity} working_set={working_set} threads={threads} \
-         duration={duration:?} repeats={repeats}"
+         duration={duration:?} repeats={repeats} admission={}",
+        admission.name()
     );
     println!(
-        "{:14} {:>8} {:>10} {:>12} {:>12} {:>8}",
+        "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
         "impl", "batch", "Mops/s", "p50(ns)", "p99(ns)", "hit"
     );
     for name in &impls {
-        let factory = impl_factory(name, capacity, threads, Policy::Lru)
+        let factory = impl_factory(name, capacity, threads, Policy::Lru, admission)
             .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+        let label = format!("{name}{}", admission.label());
         let cfg = RunConfig { threads, duration, repeats, seed };
         // Baseline: the same resident-set gets, one key per call.
         let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
         println!(
-            "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
-            name, "1-by-1", base.mops.mean(), base.lat_p50_ns, base.lat_p99_ns, base.hit_ratio
+            "{:20} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+            label, "1-by-1", base.mops.mean(), base.lat_p50_ns, base.lat_p99_ns, base.hit_ratio
         );
         for &batch in &batches {
             let r = measure(&*factory, &Workload::Batched { working_set, batch }, &cfg);
             println!(
-                "{:14} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
-                name, batch, r.mops.mean(), r.lat_p50_ns, r.lat_p99_ns, r.hit_ratio
+                "{:20} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                label, batch, r.mops.mean(), r.lat_p50_ns, r.lat_p99_ns, r.hit_ratio
             );
         }
     }
@@ -246,14 +273,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --batch N > 0 switches the clients to scatter/gather get_batch calls
     // of N keys (misses refilled with put_batch).
     let batch = args.get_parsed_or("batch", 0usize)?;
+    let admission = parse_admission(args)?;
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
-        "serving: cache={} capacity={} workers={workers} clients={clients} x {requests} reqs{}",
+        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}",
         cache.name(),
+        admission.label(),
         cache.capacity(),
         if batch > 0 { format!(" (batched x{batch})") } else { String::new() }
     );
-    let service = CacheService::start(cache, ServiceConfig { workers });
+    let service = CacheService::start(cache, ServiceConfig { workers, admission });
     let keyspace = (capacity * 4) as u64;
     let secs = if batch > 0 {
         kway::coordinator::drive_clients_batched(&service, clients, requests, batch, keyspace, 7)
@@ -269,6 +298,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
         service.metrics().report()
     );
     service.shutdown();
+    Ok(())
+}
+
+/// A small named benchmark suite: trace-replay throughput for a list of
+/// implementations × thread counts. Always prints the table; with
+/// `--json`, also writes `BENCH_<name>.json` (schema: DESIGN.md §Bench
+/// JSON) so the repo can accumulate a perf trajectory over time.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use kway::util::json::Json;
+    let trace_name = args.get_or("trace", "oltp");
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let len = args.get_parsed_or("len", 0usize)?;
+    let len = if len == 0 { paper::default_len(&trace_name) } else { len };
+    let trace = Arc::new(loader::resolve(&trace_name, len, seed)?);
+    let capacity =
+        args.get_parsed_or("capacity", paper::paper_cache_size(&trace_name))?;
+    let default_impls: Vec<String> =
+        ["KW-WFA", "KW-WFSC", "KW-LS"].iter().map(|s| s.to_string()).collect();
+    let impls: Vec<String> = args.get_list_or("impls", &default_impls)?;
+    let threads: Vec<usize> = args.get_list_or("threads", &[1, 4])?;
+    let duration = Duration::from_millis(args.get_parsed_or("duration-ms", 300u64)?);
+    let repeats = args.get_parsed_or("repeats", 3usize)?;
+    let policy = Policy::parse(&args.get_or("policy", "lru"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    let admission = parse_admission(args)?;
+    // Sanitize the run name: it becomes part of the BENCH_<name>.json
+    // path, and trace specs may carry ':' / '/' (e.g. plain:/data/t.txt).
+    let name: String = args
+        .get_or("name", &trace_name)
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect();
+
+    println!(
+        "# bench {name}: trace={} capacity={capacity} policy={} admission={} \
+         duration={duration:?} repeats={repeats}",
+        trace.name,
+        policy.name(),
+        admission.name()
+    );
+    println!(
+        "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
+        "impl", "threads", "Mops/s", "p50(ns)", "p99(ns)", "hit"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for impl_name in &impls {
+        for &t in &threads {
+            let factory = impl_factory(impl_name, capacity, t, policy, admission)
+                .ok_or_else(|| anyhow!("unknown impl {impl_name:?}"))?;
+            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
+            let label = format!("{impl_name}{}", admission.label());
+            println!(
+                "{:20} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                label,
+                t,
+                r.mops.mean(),
+                r.lat_p50_ns,
+                r.lat_p99_ns,
+                r.hit_ratio
+            );
+            rows.push(Json::Object(vec![
+                ("impl".to_string(), Json::Str(label)),
+                ("threads".to_string(), Json::Int(t as i64)),
+                ("mops_mean".to_string(), Json::Float(r.mops.mean())),
+                ("mops_stddev".to_string(), Json::Float(r.mops.stddev())),
+                ("p50_ns".to_string(), Json::Int(r.lat_p50_ns as i64)),
+                ("p99_ns".to_string(), Json::Int(r.lat_p99_ns as i64)),
+                ("hit_ratio".to_string(), Json::Float(r.hit_ratio)),
+            ]));
+        }
+    }
+    if args.has_flag("json") {
+        let doc = Json::Object(vec![
+            ("schema".to_string(), Json::Str("kway-bench-v1".to_string())),
+            ("name".to_string(), Json::Str(name.clone())),
+            ("trace".to_string(), Json::Str(trace.name.clone())),
+            ("capacity".to_string(), Json::Int(capacity as i64)),
+            ("policy".to_string(), Json::Str(policy.name().to_string())),
+            ("admission".to_string(), Json::Str(admission.name().to_string())),
+            ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
+            ("repeats".to_string(), Json::Int(repeats as i64)),
+            ("seed".to_string(), Json::Int(seed as i64)),
+            ("results".to_string(), Json::Array(rows)),
+        ]);
+        let path = format!("BENCH_{name}.json");
+        std::fs::write(&path, format!("{doc}\n"))
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 

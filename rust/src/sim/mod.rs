@@ -217,7 +217,12 @@ pub const WAYS_SERIES: [usize; 6] = [4, 8, 16, 32, 64, 128];
 pub fn lru_series() -> Vec<Config> {
     let mut v: Vec<Config> = WAYS_SERIES
         .iter()
-        .map(|&ways| Config::KWay { variant: Variant::Wfsc, ways, policy: Policy::Lru, tlfu: false })
+        .map(|&ways| Config::KWay {
+            variant: Variant::Wfsc,
+            ways,
+            policy: Policy::Lru,
+            tlfu: false,
+        })
         .collect();
     v.extend(WAYS_SERIES.iter().map(|&sample| Config::Sampled {
         sample,

@@ -25,6 +25,7 @@
 //! caller actually observes.
 
 use crate::metrics::LatencyHistogram;
+use crate::tinylfu::AdmissionMode;
 use crate::trace::Trace;
 use crate::util::stats::Summary;
 use crate::Cache;
@@ -184,12 +185,18 @@ fn one_run(
     warm_done.wait();
     // For hit-mode workloads the resident set must be installed after all
     // warm-up traffic so it is actually resident when the clock starts.
+    // Installed with the same get-then-fill pattern the workers measure:
+    // for plain caches this is identical to a bare put, and for
+    // admission-filtered caches it seeds the frequency a bare put of a
+    // never-seen key would lack (exactly what TinyLFU is built to reject).
     match workload {
         Workload::AllHit { working_set }
         | Workload::HitRatio { working_set, .. }
         | Workload::Batched { working_set, .. } => {
             for k in 0..*working_set {
-                cache.put(k, k);
+                if cache.get(k).is_none() {
+                    cache.put(k, k);
+                }
             }
         }
         _ => {}
@@ -390,19 +397,25 @@ fn worker(
 pub const IMPLS: [&str; 7] =
     ["KW-WFA", "KW-WFSC", "KW-LS", "sampled", "Guava", "Caffeine", "seg-Caffeine"];
 
-/// Build a cache factory by implementation name.
+/// A cache constructor handed to [`measure`]: one fresh cache per repeat.
+pub type CacheFactory = Box<dyn Fn() -> Arc<dyn Cache> + Sync>;
+
+/// Build a cache factory by implementation name, optionally layered
+/// behind an admission filter ([`AdmissionMode::TinyLfu`] wraps every
+/// built cache in a [`crate::tinylfu::TlfuCache`]).
 pub fn impl_factory(
     name: &str,
     capacity: usize,
     threads: usize,
     policy: crate::policy::Policy,
-) -> Option<Box<dyn Fn() -> Arc<dyn Cache> + Sync>> {
+    admission: AdmissionMode,
+) -> Option<CacheFactory> {
     use crate::fully::Sampled;
     use crate::kway::{KwLs, KwWfa, KwWfsc};
     use crate::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
     let ways = 8;
     let sample = 8;
-    let f: Box<dyn Fn() -> Arc<dyn Cache> + Sync> = match name {
+    let f: CacheFactory = match name {
         "KW-WFA" | "wfa" => Box::new(move || Arc::new(KwWfa::new(capacity, ways, policy))),
         "KW-WFSC" | "wfsc" => Box::new(move || Arc::new(KwWfsc::new(capacity, ways, policy))),
         "KW-LS" | "ls" => Box::new(move || Arc::new(KwLs::new(capacity, ways, policy))),
@@ -417,7 +430,10 @@ pub fn impl_factory(
         }
         _ => return None,
     };
-    Some(f)
+    Some(match admission {
+        AdmissionMode::None => f,
+        AdmissionMode::TinyLfu => Box::new(move || AdmissionMode::TinyLfu.wrap(f())),
+    })
 }
 
 #[cfg(test)]
@@ -530,6 +546,31 @@ mod tests {
             "aggregate ratio {} should mix both repeats, not report the last",
             r.hit_ratio
         );
+    }
+
+    #[test]
+    fn tlfu_factory_wraps_and_measures() {
+        let factory =
+            impl_factory("KW-WFSC", 4096, 2, Policy::Lru, AdmissionMode::TinyLfu).unwrap();
+        assert_eq!(factory().name(), "KW-WFSC+TLFU");
+        // The resident working set must survive the warm-up through
+        // admission (the install loop seeds frequency via get-then-fill).
+        let r = measure(&*factory, &Workload::AllHit { working_set: 256 }, &quick_cfg(2));
+        assert!(r.hit_ratio > 0.9, "hit ratio through admission {}", r.hit_ratio);
+        assert!(r.mops.mean() > 0.0);
+    }
+
+    #[test]
+    fn every_impl_builds_with_both_admission_modes() {
+        for name in IMPLS {
+            for admission in AdmissionMode::ALL {
+                let factory = impl_factory(name, 1024, 2, Policy::Lru, admission)
+                    .unwrap_or_else(|| panic!("no factory for {name}"));
+                let cache = factory();
+                cache.put(3, 33);
+                assert_eq!(cache.get(3), Some(33), "{name}{}", admission.label());
+            }
+        }
     }
 
     #[test]

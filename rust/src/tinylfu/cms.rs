@@ -1,27 +1,59 @@
 //! TinyLFU frequency sketch: a 4-bit count-min sketch with a doorkeeper
 //! Bloom filter and periodic halving ("reset" aging), following
 //! Einziger, Friedman & Manes (ACM ToS 2017) — the admission substrate for
-//! both the paper's "LFU + TinyLFU admission" configuration and the
-//! Caffeine-like product baseline.
+//! the paper's "LFU + TinyLFU admission" and "Hyperbolic + TinyLFU"
+//! configurations, the Caffeine-like product baseline, and the concurrent
+//! admission layer ([`super::TlfuCache`]).
+//!
+//! This is the crate's *single* sketch implementation, and it is
+//! concurrent: `record`, `estimate` and `admit` all take `&self`.
+//!
+//! * **Counters** are 4-bit nibbles packed 16 to an `AtomicU64` word. An
+//!   increment is one relaxed single-shot CAS of the whole word, which
+//!   saturates the nibble and can never carry into a neighbour. Sketch
+//!   increments are commutative, so threads never need to observe each
+//!   other's updates in any particular order (cf. *Flexible Support for
+//!   Fast Parallel Commutative Updates*, PAPERS.md); a CAS that loses its
+//!   race is simply dropped, blurring the estimate by at most one access —
+//!   the same "it is a cache" failure semantics the k-way caches use for
+//!   policy touches.
+//! * **Doorkeeper** bits are sharded over independent `AtomicU64` words
+//!   updated with relaxed `fetch_or`; two threads racing the same fresh
+//!   key both treat it as a first access, a one-count undercount.
+//! * **Aging** is epoch-based: the record that crosses the sample boundary
+//!   tries to claim the `aging` flag, and the single winner halves every
+//!   counter word (whole-word load/store — readers can observe the old or
+//!   the halved word, never a torn nibble) and clears the doorkeeper.
+//!   Records that arrive mid-pass skip the claim and keep counting; the
+//!   next post-pass crossing re-arms the epoch, so aging can never stall.
+//!
+//! Driven single-threaded (the hit-ratio simulator, [`super::TlfuSim`]),
+//! every CAS succeeds and the flag is always free, so the sketch behaves
+//! bit-for-bit like the sequential implementation it replaced — the sim
+//! figures are unchanged.
 
 use crate::util::hash;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const ROWS: usize = 4;
 const COUNTER_MAX: u64 = 15;
 
-/// 4-bit count-min sketch + doorkeeper with periodic reset.
+/// Concurrent 4-bit count-min sketch + doorkeeper with periodic reset.
 pub struct FrequencySketch {
-    /// Each row is `width/16` u64 words, 16 nibble counters per word.
-    rows: Vec<Vec<u64>>,
+    /// Each row is `width/16` words, 16 nibble counters per word.
+    rows: Vec<Box<[AtomicU64]>>,
     width_mask: u64,
-    /// Doorkeeper bloom filter bits.
-    door: Vec<u64>,
+    /// Doorkeeper bloom-filter bits, sharded over independent words.
+    door: Box<[AtomicU64]>,
     door_mask: u64,
     /// Accesses recorded since the last reset.
-    additions: u64,
+    additions: AtomicU64,
     /// Reset period (the TinyLFU "sample size", W = 10·C by default).
     sample_size: u64,
-    resets: u64,
+    /// Completed aging passes — the aging epoch.
+    resets: AtomicU64,
+    /// Aging mutual exclusion: non-zero while a halving pass runs.
+    aging: AtomicU64,
 }
 
 impl FrequencySketch {
@@ -32,13 +64,16 @@ impl FrequencySketch {
         let width = (8 * capacity).next_power_of_two() as u64;
         let door_bits = (8 * capacity).next_power_of_two() as u64;
         Self {
-            rows: (0..ROWS).map(|_| vec![0u64; (width / 16) as usize]).collect(),
+            rows: (0..ROWS)
+                .map(|_| (0..width / 16).map(|_| AtomicU64::new(0)).collect())
+                .collect(),
             width_mask: width - 1,
-            door: vec![0u64; (door_bits / 64) as usize],
+            door: (0..door_bits / 64).map(|_| AtomicU64::new(0)).collect(),
             door_mask: door_bits - 1,
-            additions: 0,
+            additions: AtomicU64::new(0),
             sample_size: 10 * capacity as u64,
-            resets: 0,
+            resets: AtomicU64::new(0),
+            aging: AtomicU64::new(0),
         }
     }
 
@@ -59,36 +94,57 @@ impl FrequencySketch {
     fn door_contains(&self, key: u64) -> bool {
         (0..3).all(|i| {
             let (word, bit) = self.door_bit(key, i);
-            self.door[word] >> bit & 1 == 1
+            self.door[word].load(Ordering::Relaxed) >> bit & 1 == 1
         })
     }
 
-    fn door_insert(&mut self, key: u64) {
+    fn door_insert(&self, key: u64) {
         for i in 0..3 {
             let (word, bit) = self.door_bit(key, i);
-            self.door[word] |= 1 << bit;
+            self.door[word].fetch_or(1 << bit, Ordering::Relaxed);
         }
     }
 
     /// Record one access. First-time keys only set the doorkeeper; repeat
     /// keys increment the sketch (saturating 4-bit counters). Every
     /// `sample_size` records, all counters are halved and the doorkeeper
-    /// cleared — TinyLFU's aging mechanism.
-    pub fn record(&mut self, key: u64) {
+    /// cleared — TinyLFU's aging mechanism. Safe to call from any number
+    /// of threads; a lost increment race only blurs the estimate.
+    pub fn record(&self, key: u64) {
         if !self.door_contains(key) {
             self.door_insert(key);
         } else {
             for row in 0..ROWS {
                 let (word, shift) = self.row_index(key, row);
-                let counter = (self.rows[row][word] >> shift) & 0xF;
-                if counter < COUNTER_MAX {
-                    self.rows[row][word] += 1 << shift;
+                let w = self.rows[row][word].load(Ordering::Relaxed);
+                if (w >> shift) & 0xF < COUNTER_MAX {
+                    // Single-shot CAS: a saturating nibble increment that
+                    // can never carry into the neighbour nibble. Losing
+                    // the race drops one commutative increment — benign.
+                    // Strong CAS, not weak: it only fails on a real race,
+                    // which keeps the single-threaded path deterministic
+                    // on LL/SC targets too (the sim parity depends on it).
+                    let _ = self.rows[row][word].compare_exchange(
+                        w,
+                        w + (1 << shift),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    );
                 }
             }
         }
-        self.additions += 1;
-        if self.additions >= self.sample_size {
-            self.reset();
+        if self.additions.fetch_add(1, Ordering::Relaxed) + 1 >= self.sample_size {
+            self.try_reset();
+        }
+    }
+
+    /// Record a whole batch before any of it is probed — the batched
+    /// access paths ([`super::TlfuCache::get_batch`]) call this so the
+    /// sketch updates for a chunk land together, mirroring the k-way
+    /// prepare-then-probe batching discipline.
+    pub fn record_batch(&self, keys: &[u64]) {
+        for &key in keys {
+            self.record(key);
         }
     }
 
@@ -97,28 +153,52 @@ impl FrequencySketch {
         let mut min = u64::MAX;
         for row in 0..ROWS {
             let (word, shift) = self.row_index(key, row);
-            min = min.min((self.rows[row][word] >> shift) & 0xF);
+            min = min.min((self.rows[row][word].load(Ordering::Relaxed) >> shift) & 0xF);
         }
         min + u64::from(self.door_contains(key))
     }
 
-    /// Halve every counter and clear the doorkeeper.
-    fn reset(&mut self) {
-        for row in &mut self.rows {
-            for word in row.iter_mut() {
-                // Halve each nibble: shift right then clear the bit that
-                // leaked in from the neighbour nibble.
-                *word = (*word >> 1) & 0x7777_7777_7777_7777;
-            }
+    /// Run one aging pass if this thread wins the epoch flag. Every
+    /// record past the boundary retries until one wins, so a pass that
+    /// was skipped because another was in flight cannot stall the epoch.
+    fn try_reset(&self) {
+        if self
+            .aging
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // another thread is aging right now
         }
-        self.door.fill(0);
-        self.additions = 0;
-        self.resets += 1;
+        if self.additions.load(Ordering::Relaxed) >= self.sample_size {
+            self.additions.fetch_sub(self.sample_size, Ordering::Relaxed);
+            self.reset();
+        }
+        self.aging.store(0, Ordering::Release);
     }
 
-    /// Number of resets so far (for tests and ablation reporting).
+    /// Halve every counter and clear the doorkeeper. Runs on the single
+    /// thread holding the aging flag; concurrent records may lose an
+    /// increment against the halving stores — the documented
+    /// relaxed-commutative trade.
+    fn reset(&self) {
+        for row in &self.rows {
+            for word in row.iter() {
+                // Halve each nibble: shift right then clear the bit that
+                // leaked in from the neighbour nibble.
+                let w = word.load(Ordering::Relaxed);
+                word.store((w >> 1) & 0x7777_7777_7777_7777, Ordering::Relaxed);
+            }
+        }
+        for word in self.door.iter() {
+            word.store(0, Ordering::Relaxed);
+        }
+        self.resets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of completed aging passes — the aging epoch (for tests,
+    /// the concurrency smoke suite and ablation reporting).
     pub fn resets(&self) -> u64 {
-        self.resets
+        self.resets.load(Ordering::Relaxed)
     }
 
     /// TinyLFU admission: admit `candidate` only if its estimated
@@ -131,10 +211,11 @@ impl FrequencySketch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn estimates_track_frequency() {
-        let mut s = FrequencySketch::new(1024);
+        let s = FrequencySketch::new(1024);
         for _ in 0..10 {
             s.record(42);
         }
@@ -146,7 +227,7 @@ mod tests {
 
     #[test]
     fn doorkeeper_absorbs_singletons() {
-        let mut s = FrequencySketch::new(1024);
+        let s = FrequencySketch::new(1024);
         // One-hit wonders only set the doorkeeper; the sketch rows stay 0.
         for key in 0..100u64 {
             s.record(key);
@@ -158,7 +239,7 @@ mod tests {
 
     #[test]
     fn counters_saturate() {
-        let mut s = FrequencySketch::new(64);
+        let s = FrequencySketch::new(64);
         // sample_size = 640 for capacity 64; stay below it (500 records).
         for _ in 0..500 {
             s.record(1);
@@ -168,7 +249,7 @@ mod tests {
 
     #[test]
     fn reset_halves() {
-        let mut s = FrequencySketch::new(16);
+        let s = FrequencySketch::new(16);
         // capacity clamps to 16 -> sample = 160.
         for _ in 0..100 {
             s.record(5);
@@ -184,7 +265,7 @@ mod tests {
 
     #[test]
     fn admit_prefers_frequent() {
-        let mut s = FrequencySketch::new(1024);
+        let s = FrequencySketch::new(1024);
         for _ in 0..8 {
             s.record(100);
         }
@@ -192,5 +273,63 @@ mod tests {
         assert!(s.admit(100, 200), "frequent candidate must be admitted");
         assert!(!s.admit(200, 100), "rare candidate must be rejected");
         assert!(!s.admit(300, 300), "equal frequency is not admitted");
+    }
+
+    #[test]
+    fn record_batch_matches_scalar_records() {
+        let batched = FrequencySketch::new(256);
+        let scalar = FrequencySketch::new(256);
+        let keys: Vec<u64> = (0..64u64).flat_map(|k| [k, k % 8]).collect();
+        batched.record_batch(&keys);
+        for &key in &keys {
+            scalar.record(key);
+        }
+        for key in 0..64u64 {
+            assert_eq!(batched.estimate(key), scalar.estimate(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn concurrent_records_accumulate() {
+        // 4 threads × 1000 records of one hot key, all inside one sample
+        // window (capacity 4096 -> sample 40960): the hot key must end up
+        // saturated even though increments race.
+        let s = Arc::new(FrequencySketch::new(4096));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    s.record(7);
+                    s.record(1_000_000 + t * 10_000 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(s.estimate(7) >= COUNTER_MAX, "hot key estimate {}", s.estimate(7));
+    }
+
+    #[test]
+    fn concurrent_aging_advances_epoch_without_stalling() {
+        // Tiny sketch (sample 160) hammered by 4 threads: the epoch must
+        // advance many times and never deadlock or panic.
+        let s = Arc::new(FrequencySketch::new(16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    s.record(t * 100_000 + i % 512);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 40_000 records / sample 160 ≈ 250 crossings; allow generous
+        // slippage for crossings that coalesce under contention.
+        assert!(s.resets() >= 10, "aging epoch stalled at {}", s.resets());
     }
 }

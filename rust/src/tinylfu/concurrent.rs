@@ -1,0 +1,333 @@
+//! TinyLFU admission as a first-class concurrent cache layer.
+//!
+//! The paper's headline throughput configurations pair an eviction policy
+//! with TinyLFU admission ("LFU + TinyLFU", "Hyperbolic + TinyLFU" —
+//! Figures 4–13, subfigures b/d). Before this layer existed the repo could
+//! only simulate those single-threaded ([`super::TlfuSim`]); [`TlfuCache`]
+//! composes the same admission filter with *any* concurrent
+//! [`Cache`], including the batched access path, so the multi-threaded
+//! throughput harness, the coordinator service and the benches can all
+//! run the admission configurations the paper promotes.
+//!
+//! The composition point is [`Cache::peek_victim`]: the inner cache
+//! previews which key an insert would evict, and the sketch admits the
+//! candidate only when its estimated frequency beats that victim's. Under
+//! concurrency the preview is *advisory* — by the time the put lands the
+//! set may have chosen a different victim — but admission is a
+//! probabilistic filter to begin with, so a stale preview only blurs the
+//! decision by one access, never safety (DESIGN.md §Admission).
+//!
+//! Recording policy: every `get` records its key (hit or miss, exactly
+//! like the simulator's read-then-fill methodology), and every `put`
+//! records its candidate before the admission check (like Caffeine's
+//! write-path recording) so caches that are seeded through bare puts can
+//! still build frequency. The batched paths record the whole chunk into
+//! the sketch before the first probe — the same prepare-then-probe
+//! discipline the k-way batched paths use for hashing and prefetching.
+
+use super::FrequencySketch;
+use crate::Cache;
+use std::sync::Arc;
+
+/// An admission filter: decides whether a candidate may displace a
+/// victim, fed by a stream of recorded accesses. Object-safe and
+/// `&self`-based so implementations can sit in front of any concurrent
+/// cache. [`FrequencySketch`] is the one implementation today; the trait
+/// is the seam for alternative filters (ghost caches, per-tenant
+/// sketches) without touching the wrapper or the wiring.
+pub trait Admission: Send + Sync {
+    /// Record one access to `key`.
+    fn record(&self, key: u64);
+    /// Record a whole batch before it is probed (batched access paths).
+    fn record_batch(&self, keys: &[u64]) {
+        for &key in keys {
+            self.record(key);
+        }
+    }
+    /// Should `candidate` displace `victim`?
+    fn admit(&self, candidate: u64, victim: u64) -> bool;
+}
+
+impl Admission for FrequencySketch {
+    fn record(&self, key: u64) {
+        FrequencySketch::record(self, key);
+    }
+    fn admit(&self, candidate: u64, victim: u64) -> bool {
+        FrequencySketch::admit(self, candidate, victim)
+    }
+}
+
+/// Which admission filter to layer over a cache — the CLI/config surface
+/// (`--admission none|tlfu`) shared by the throughput harness, the
+/// coordinator service and the benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// No admission: every put goes straight to the cache.
+    None,
+    /// TinyLFU admission through a [`TlfuCache`] wrapper.
+    TinyLfu,
+}
+
+impl AdmissionMode {
+    pub const ALL: [AdmissionMode; 2] = [AdmissionMode::None, AdmissionMode::TinyLfu];
+
+    pub fn parse(s: &str) -> Option<AdmissionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(AdmissionMode::None),
+            "tlfu" | "tinylfu" => Some(AdmissionMode::TinyLfu),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionMode::None => "none",
+            AdmissionMode::TinyLfu => "tlfu",
+        }
+    }
+
+    /// Suffix for implementation labels in tables and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionMode::None => "",
+            AdmissionMode::TinyLfu => "+TLFU",
+        }
+    }
+
+    /// Layer this admission mode over an already-shared cache. The sketch
+    /// is sized from the cache's own capacity.
+    pub fn wrap(&self, cache: Arc<dyn Cache>) -> Arc<dyn Cache> {
+        match self {
+            AdmissionMode::None => cache,
+            AdmissionMode::TinyLfu => {
+                let capacity = cache.capacity();
+                Arc::new(TlfuCache::new(cache, capacity))
+            }
+        }
+    }
+}
+
+/// TinyLFU admission wrapped around any concurrent cache. Implements the
+/// full [`Cache`] trait — including the batched paths — so it drops into
+/// every layer that takes a cache: the throughput harness, the
+/// coordinator service, the benches and the CLI.
+pub struct TlfuCache<C: Cache> {
+    inner: C,
+    sketch: FrequencySketch,
+    /// `"{inner}+TLFU"`, leaked once per cache so [`Cache::name`] can stay
+    /// `&'static str` (a few bytes per constructed cache, not per op).
+    name: &'static str,
+}
+
+impl<C: Cache> TlfuCache<C> {
+    /// Wrap `inner` with a TinyLFU filter whose sketch is sized for
+    /// `capacity` entries.
+    pub fn new(inner: C, capacity: usize) -> Self {
+        let name = Box::leak(format!("{}+TLFU", inner.name()).into_boxed_str());
+        Self { inner, sketch: FrequencySketch::new(capacity), name }
+    }
+
+    /// The wrapped cache.
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    /// The shared frequency sketch (tests read the aging epoch here).
+    pub fn sketch(&self) -> &FrequencySketch {
+        &self.sketch
+    }
+
+    /// Admission verdict for one candidate whose access is already
+    /// recorded. `peek_victim` cannot tell whether the candidate is
+    /// already resident, so a rejected candidate gets one residency probe:
+    /// an update of a resident key must never be dropped (it would leave a
+    /// stale value readable).
+    fn admits(&self, key: u64) -> bool {
+        match self.inner.peek_victim(key) {
+            // Free room (or no preview support): always admit.
+            None => true,
+            // The probed key is itself the policy victim — an overwrite.
+            Some(victim) if victim == key => true,
+            Some(victim) => {
+                self.sketch.admit(key, victim) || self.inner.get(key).is_some()
+            }
+        }
+    }
+
+    /// `put` that reports whether the candidate was admitted (the
+    /// concurrency smoke suite asserts on this).
+    pub fn put_admitted(&self, key: u64, value: u64) -> bool {
+        self.sketch.record(key);
+        if self.admits(key) {
+            self.inner.put(key, value);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl<C: Cache> Cache for TlfuCache<C> {
+    fn get(&self, key: u64) -> Option<u64> {
+        // TinyLFU records every access, hit or miss.
+        self.sketch.record(key);
+        self.inner.get(key)
+    }
+
+    fn put(&self, key: u64, value: u64) {
+        self.put_admitted(key, value);
+    }
+
+    fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        // Record the whole chunk before the first probe, then let the
+        // inner cache run its own batched (prefetching) path.
+        self.sketch.record_batch(keys);
+        self.inner.get_batch(keys, out);
+    }
+
+    fn put_batch(&self, items: &[(u64, u64)]) {
+        for &(key, _) in items {
+            self.sketch.record(key);
+        }
+        let mut admitted: Vec<(u64, u64)> = Vec::with_capacity(items.len());
+        for &(key, value) in items {
+            if self.admits(key) {
+                admitted.push((key, value));
+            }
+        }
+        if !admitted.is_empty() {
+            self.inner.put_batch(&admitted);
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn peek_victim(&self, key: u64) -> Option<u64> {
+        self.inner.peek_victim(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kway::KwWfsc;
+    use crate::policy::Policy;
+
+    /// Drive the read-then-fill loop the evaluation uses.
+    fn access(cache: &TlfuCache<KwWfsc>, key: u64) -> bool {
+        if cache.get(key).is_some() {
+            true
+        } else {
+            cache.put(key, key.wrapping_mul(31));
+            false
+        }
+    }
+
+    #[test]
+    fn name_and_forwarding() {
+        let c = TlfuCache::new(KwWfsc::new(256, 8, Policy::Lru), 256);
+        assert_eq!(c.name(), "KW-WFSC+TLFU");
+        assert_eq!(c.capacity(), 256);
+        assert!(c.is_empty());
+        c.put(1, 10);
+        assert_eq!(c.get(1), Some(10));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn admits_into_free_room() {
+        let c = TlfuCache::new(KwWfsc::new(1024, 8, Policy::Lru), 1024);
+        assert!(c.put_admitted(5, 50), "free room must always admit");
+        assert_eq!(c.get(5), Some(50));
+    }
+
+    #[test]
+    fn protects_hot_set_from_scan() {
+        // One set (capacity 8, 8 ways) under LFU: make 8 keys hot, then
+        // scan 200 cold keys through. Admission must keep the hot set.
+        let c = TlfuCache::new(KwWfsc::new(8, 8, Policy::Lfu), 8);
+        for _ in 0..20 {
+            for key in 0..8u64 {
+                access(&c, key);
+            }
+        }
+        for key in 1000..1200u64 {
+            access(&c, key);
+        }
+        let survivors = (0..8u64).filter(|&k| c.inner().get(k).is_some()).count();
+        assert!(survivors >= 6, "hot set lost to scan: {survivors}/8 kept");
+    }
+
+    #[test]
+    fn resident_key_update_is_never_dropped() {
+        // Fill the single set, then overwrite a resident key while the
+        // set is full and admission would *reject* it as a fresh insert:
+        // the update must land anyway (a stale value readable after a
+        // dropped update is a correctness bug, not a policy choice).
+        // FIFO pins the victim to key 0 (oldest insert) no matter how hot
+        // it gets, so making 0 sketch-hot forces the rejection path.
+        let c = TlfuCache::new(KwWfsc::new(4, 4, Policy::Fifo), 4);
+        for key in 0..4u64 {
+            c.put(key, key);
+        }
+        for _ in 0..30 {
+            let _ = c.get(0);
+        }
+        c.put(2, 999);
+        assert_eq!(c.inner().get(2), Some(999), "resident update was dropped");
+    }
+
+    #[test]
+    fn batched_get_records_and_matches_scalar() {
+        let c = TlfuCache::new(KwWfsc::new(4096, 8, Policy::Lru), 4096);
+        for key in 0..300u64 {
+            c.put(key, key + 7);
+        }
+        let keys: Vec<u64> = (0..600u64).collect();
+        let mut out = Vec::new();
+        c.get_batch(&keys, &mut out);
+        assert_eq!(out.len(), keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            let expect = if key < 300 { Some(key + 7) } else { None };
+            assert_eq!(out[i], expect, "position {i}");
+        }
+        // The batch was recorded: repeated keys have built frequency.
+        assert!(c.sketch().estimate(0) >= 1);
+    }
+
+    #[test]
+    fn batched_put_admits_into_free_room() {
+        let c = TlfuCache::new(KwWfsc::new(4096, 8, Policy::Lru), 4096);
+        let items: Vec<(u64, u64)> = (0..300u64).map(|k| (k, k * 3)).collect();
+        c.put_batch(&items);
+        for &(k, v) in &items {
+            assert_eq!(c.get(k), Some(v), "key {k}");
+        }
+    }
+
+    #[test]
+    fn admission_mode_parse_and_wrap() {
+        assert_eq!(AdmissionMode::parse("tlfu"), Some(AdmissionMode::TinyLfu));
+        assert_eq!(AdmissionMode::parse("TinyLFU"), Some(AdmissionMode::TinyLfu));
+        assert_eq!(AdmissionMode::parse("none"), Some(AdmissionMode::None));
+        assert_eq!(AdmissionMode::parse("bogus"), None);
+        let base: Arc<dyn Cache> = Arc::new(KwWfsc::new(256, 8, Policy::Lru));
+        let plain = AdmissionMode::None.wrap(base.clone());
+        assert_eq!(plain.name(), "KW-WFSC");
+        let wrapped = AdmissionMode::TinyLfu.wrap(base);
+        assert_eq!(wrapped.name(), "KW-WFSC+TLFU");
+        wrapped.put(9, 90);
+        assert_eq!(wrapped.get(9), Some(90));
+    }
+}

@@ -3,14 +3,27 @@
 //! The paper evaluates "LFU eviction with TinyLFU admission" and
 //! "Hyperbolic + TinyLFU" configurations (Figures 4–13, subfigures b/d):
 //! the eviction policy proposes a victim, and the TinyLFU sketch admits the
-//! candidate only when its estimated frequency exceeds the victim's.
-//! [`TlfuSim`] composes that filter with *any* cache that supports victim
-//! preview — the k-way caches preview per-set, which is precisely the
+//! candidate only when its estimated frequency exceeds the victim's. The
+//! k-way caches preview their victim per-set, which is precisely the
 //! "limited associativity TinyLFU" the paper promotes.
+//!
+//! There is exactly **one** frequency-sketch implementation
+//! ([`FrequencySketch`], concurrent — see `cms.rs`), shared by two
+//! composition layers:
+//!
+//! * [`TlfuSim`] — the sequential wrapper the hit-ratio simulator uses
+//!   (records on `sim_get`, admits on `sim_put`, single-threaded).
+//! * [`TlfuCache`] — the concurrent first-class layer: wraps any
+//!   [`crate::Cache`] (including the batched paths) so the throughput
+//!   harness, the coordinator service and the CLI can run admission
+//!   configurations multi-threaded. Selected via [`AdmissionMode`]
+//!   (`--admission tlfu`).
 
 pub mod cms;
+pub mod concurrent;
 
 pub use cms::FrequencySketch;
+pub use concurrent::{Admission, AdmissionMode, TlfuCache};
 
 use crate::fully::SimVictimPeek;
 use crate::SimCache;

@@ -44,7 +44,10 @@ pub fn build(name: &str, len: usize, seed: u64) -> Option<Trace> {
         // Wikipedia: strong Zipf head + slow drift of the popular set.
         "wiki_a" => mix(
             vec![
-                Component { weight: 0.85, keys: zipf(len * 85 / 100, 4_000_000, 0.99, 0, &mut rng) },
+                Component {
+                    weight: 0.85,
+                    keys: zipf(len * 85 / 100, 4_000_000, 0.99, 0, &mut rng),
+                },
                 Component {
                     weight: 0.15,
                     keys: drift(len * 15 / 100, 200_000, 0.9, 50_000, 20_000, 8_000_000, &mut rng),
@@ -54,7 +57,10 @@ pub fn build(name: &str, len: usize, seed: u64) -> Option<Trace> {
         ),
         "wiki_b" => mix(
             vec![
-                Component { weight: 0.85, keys: zipf(len * 85 / 100, 4_000_000, 0.96, 0, &mut rng) },
+                Component {
+                    weight: 0.85,
+                    keys: zipf(len * 85 / 100, 4_000_000, 0.96, 0, &mut rng),
+                },
                 Component {
                     weight: 0.15,
                     keys: drift(len * 15 / 100, 300_000, 0.9, 40_000, 30_000, 8_000_000, &mut rng),
@@ -86,7 +92,10 @@ pub fn build(name: &str, len: usize, seed: u64) -> Option<Trace> {
             vec![
                 Component { weight: 0.4, keys: zipf(len * 4 / 10, 100_000, 0.9, 0, &mut rng) },
                 Component { weight: 0.3, keys: scan_total(40_000, len * 3 / 10, 1_000_000) },
-                Component { weight: 0.3, keys: uniform(len * 3 / 10, 250_000, 2_000_000, &mut rng) },
+                Component {
+                    weight: 0.3,
+                    keys: uniform(len * 3 / 10, 250_000, 2_000_000, &mut rng),
+                },
             ],
             &mut rng,
         ),
@@ -165,7 +174,10 @@ pub fn build(name: &str, len: usize, seed: u64) -> Option<Trace> {
         "w2" | "w3" => mix(
             vec![
                 Component { weight: 0.3, keys: zipf(len * 3 / 10, 2_000_000, 0.6, 0, &mut rng) },
-                Component { weight: 0.7, keys: uniform(len * 7 / 10, 8_000_000, 4_000_000, &mut rng) },
+                Component {
+                    weight: 0.7,
+                    keys: uniform(len * 7 / 10, 8_000_000, 4_000_000, &mut rng),
+                },
             ],
             &mut rng,
         ),

@@ -1,0 +1,116 @@
+//! The `Cache::get_batch`/`put_batch` contract across every
+//! implementation.
+//!
+//! The k-way caches override the batched defaults with prefetching fast
+//! paths; everything else (`products::*`, `fully::Sampled`, the TinyLFU
+//! admission wrapper) inherits the trait defaults. Nothing pinned the
+//! defaults' semantics until now, so this suite does: results are
+//! **appended** to `out` with exactly one entry per key, in input order
+//! (`out[i]` answers `keys[i]` when `out` starts empty), and `put_batch`
+//! applies its items in input order (last write of a duplicate key wins).
+//!
+//! Key-count note: 300 keys over ≥ 512 sets stays far below any 8-way
+//! set's capacity (same bound the per-impl unit tests use), so none of
+//! the assertions can be disturbed by evictions.
+
+use kway::fully::Sampled;
+use kway::kway::{build, KwWfsc, Variant};
+use kway::policy::Policy;
+use kway::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
+use kway::tinylfu::TlfuCache;
+use kway::util::rng::Rng;
+use kway::Cache;
+
+/// One of every `Cache` implementation in the crate, at a capacity large
+/// enough that the test keys never face eviction.
+fn lineup() -> Vec<Box<dyn Cache>> {
+    let capacity = 4096;
+    let mut v: Vec<Box<dyn Cache>> = Vec::new();
+    for variant in Variant::ALL {
+        v.push(build(variant, capacity, 8, Policy::Lru));
+    }
+    v.push(Box::new(Sampled::with_defaults(capacity, 8, Policy::Lru)));
+    v.push(Box::new(GuavaLike::new(capacity, 4)));
+    v.push(Box::new(CaffeineLike::new(capacity)));
+    v.push(Box::new(SegmentedCaffeine::new(capacity, 4)));
+    v.push(Box::new(TlfuCache::new(KwWfsc::new(capacity, 8, Policy::Lru), capacity)));
+    v
+}
+
+#[test]
+fn put_batch_then_get_batch_round_trips_in_input_order() {
+    for cache in lineup() {
+        let items: Vec<(u64, u64)> =
+            (0..300u64).map(|k| (k, k.wrapping_mul(31) + 7)).collect();
+        cache.put_batch(&items);
+        let keys: Vec<u64> = items.iter().map(|&(k, _)| k).collect();
+        let mut out = Vec::new();
+        cache.get_batch(&keys, &mut out);
+        assert_eq!(out.len(), keys.len(), "{}: one result per key", cache.name());
+        for (i, &(k, v)) in items.iter().enumerate() {
+            assert_eq!(out[i], Some(v), "{}: position {i} key {k}", cache.name());
+        }
+    }
+}
+
+#[test]
+fn get_batch_matches_scalar_gets_positionally_with_misses() {
+    for cache in lineup() {
+        for key in 0..300u64 {
+            cache.put(key, key ^ 0x5A5A);
+        }
+        // Shuffled mix of residents and misses: out[i] must answer
+        // keys[i], not some reordered or compacted result.
+        let mut keys: Vec<u64> = (0..600u64).collect();
+        Rng::new(7).shuffle(&mut keys);
+        let mut out = Vec::new();
+        cache.get_batch(&keys, &mut out);
+        assert_eq!(out.len(), keys.len(), "{}", cache.name());
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(out[i], cache.get(key), "{}: position {i} key {key}", cache.name());
+        }
+    }
+}
+
+#[test]
+fn get_batch_appends_to_a_non_empty_buffer() {
+    // The documented contract is "out[i] answers keys[i] when out starts
+    // empty"; the appending behaviour behind it (reuse-friendly caller
+    // buffers) must hold for overrides and defaults alike.
+    for cache in lineup() {
+        cache.put(1, 11);
+        cache.put(2, 22);
+        let mut out = vec![Some(999u64)];
+        cache.get_batch(&[1, 2], &mut out);
+        assert_eq!(
+            out,
+            vec![Some(999), Some(11), Some(22)],
+            "{}: batched results must append",
+            cache.name()
+        );
+    }
+}
+
+#[test]
+fn put_batch_applies_duplicates_in_input_order() {
+    for cache in lineup() {
+        cache.put_batch(&[(5, 1), (5, 2), (5, 3)]);
+        assert_eq!(
+            cache.get(5),
+            Some(3),
+            "{}: last write of a duplicate key must win",
+            cache.name()
+        );
+    }
+}
+
+#[test]
+fn empty_batches_are_noops() {
+    for cache in lineup() {
+        let mut out = Vec::new();
+        cache.get_batch(&[], &mut out);
+        assert!(out.is_empty(), "{}", cache.name());
+        cache.put_batch(&[]);
+        assert_eq!(cache.len(), 0, "{}", cache.name());
+    }
+}

@@ -12,7 +12,8 @@ use std::sync::Arc;
 fn service_works_over_every_kway_variant() {
     for variant in Variant::ALL {
         let cache: Arc<dyn Cache> = Arc::from(build(variant, 4096, 8, Policy::Lru));
-        let service = CacheService::start(cache, ServiceConfig { workers: 2 });
+        let service =
+            CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() });
         let secs = drive_clients(&service, 3, 3_000, 8192, 5);
         assert!(secs > 0.0);
         let m = service.metrics();
@@ -25,7 +26,7 @@ fn service_works_over_every_kway_variant() {
 #[test]
 fn service_works_over_products() {
     let cache: Arc<dyn Cache> = Arc::new(SegmentedCaffeine::new(4096, 2));
-    let service = CacheService::start(cache, ServiceConfig { workers: 2 });
+    let service = CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() });
     drive_clients(&service, 2, 2_000, 8192, 6);
     assert!(service.metrics().ops.gets.load(std::sync::atomic::Ordering::Relaxed) >= 4_000);
     service.shutdown();
@@ -36,7 +37,7 @@ fn per_key_ordering_through_router() {
     // Same-key requests route to the same worker, so a put followed by a
     // get of the same key must observe the put.
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 1024, 8, Policy::Lru));
-    let service = CacheService::start(cache, ServiceConfig { workers: 4 });
+    let service = CacheService::start(cache, ServiceConfig { workers: 4, ..Default::default() });
     for key in 0..500u64 {
         service.put(key, key * 3);
         assert_eq!(service.get(key), Some(key * 3), "key {key}");
@@ -47,7 +48,7 @@ fn per_key_ordering_through_router() {
 #[test]
 fn batch_get_equals_singles() {
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfa, 1024, 8, Policy::Lfu));
-    let service = CacheService::start(cache, ServiceConfig { workers: 3 });
+    let service = CacheService::start(cache, ServiceConfig { workers: 3, ..Default::default() });
     for key in 0..64u64 {
         service.put(key, key + 1);
     }
@@ -71,7 +72,10 @@ fn batch_scatter_gather_in_input_order_under_concurrency() {
     // 2048 resident keys over 8192 sets (capacity 64k): no set comes near
     // its 8 ways, so residency is stable for the whole test.
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 65_536, 8, Policy::Lru));
-    let service = Arc::new(CacheService::start(cache, ServiceConfig { workers: 4 }));
+    let service = Arc::new(CacheService::start(
+        cache,
+        ServiceConfig { workers: 4, ..Default::default() },
+    ));
     const RESIDENT: u64 = 2048;
     let value_of = |k: u64| k * 7 + 1;
     for key in 0..RESIDENT {
@@ -118,7 +122,7 @@ fn batch_scatter_gather_in_input_order_under_concurrency() {
 #[test]
 fn batched_drive_clients_hits_like_scalar() {
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Ls, 4096, 8, Policy::Lru));
-    let service = CacheService::start(cache, ServiceConfig { workers: 2 });
+    let service = CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() });
     let secs = kway::coordinator::drive_clients_batched(&service, 3, 2_000, 16, 8192, 9);
     assert!(secs > 0.0);
     let m = service.metrics();
@@ -133,7 +137,7 @@ fn batched_drive_clients_hits_like_scalar() {
 #[test]
 fn metrics_report_format() {
     let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 512, 8, Policy::Lru));
-    let service = CacheService::start(cache, ServiceConfig { workers: 1 });
+    let service = CacheService::start(cache, ServiceConfig { workers: 1, ..Default::default() });
     service.put(1, 1);
     service.get(1);
     service.get(2);
