@@ -5,15 +5,21 @@
 //!    (router + worker pool) over the wait-free KW-WFSC cache serves
 //!    batched get/put requests from concurrent clients replaying the
 //!    `wiki_a` trace model; we report throughput, latency percentiles and
-//!    the measured hit ratio.
+//!    the measured hit ratio. The service runs with a **default TTL**
+//!    (`ServiceConfig::default_ttl`), so every fill is mortal and the
+//!    run exercises lazy per-set expiration under real traffic, plus the
+//!    incremental sweep hook between phases.
 //! 2. **Layers 1–2 analytics path** — the AOT-compiled XLA artifact
 //!    (Pallas set-scan kernels inside a lax.scan cache simulator) replays
 //!    the *same* trace through PJRT and predicts the hit ratio; we check
 //!    the prediction against both the native set simulator and the live
-//!    service measurement.
+//!    service measurement. With the vendored PJRT stub (no `make
+//!    artifacts`) this phase reports itself unavailable and the example
+//!    still completes as a layer-3 smoke test.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example cache_server
+//! cargo run --release --example cache_server            # layer 3 only
+//! make artifacts && cargo run --release --example cache_server  # + XLA
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
@@ -24,51 +30,81 @@ use kway::policy::Policy;
 use kway::runtime::XlaRuntime;
 use kway::sim::xla::{NativeSetSim, XlaSim};
 use kway::trace::paper;
-use kway::Cache;
+use kway::{Cache, EntryOpts};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::var("KWAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let clients = 4usize;
     let batch = 32usize;
 
-    // ---- Layers 1–2: load the AOT artifacts and bind the simulator.
-    let rt = XlaRuntime::load(&artifacts)?;
-    let sim = XlaSim::new(&rt, "cache_sim_k8")?;
-    let capacity = sim.capacity(); // 2^11, the paper's small-cache setup
-    println!(
-        "loaded {} artifacts on {} (cache_sim: {} sets x {} ways)",
-        rt.entry_names().len(),
-        rt.platform(),
-        sim.num_sets,
-        sim.ways
-    );
+    // ---- Layers 1–2 (optional): load the AOT artifacts and bind the
+    // simulator. With the vendored xla stub this fails cleanly and the
+    // example degrades to the layer-3 serving smoke test.
+    let runtime = match XlaRuntime::load(&artifacts) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("XLA layers unavailable ({e:#}); running layer 3 only");
+            None
+        }
+    };
+    let xla = match &runtime {
+        Some(rt) => {
+            let sim = XlaSim::new(rt, "cache_sim_k8")?;
+            println!(
+                "loaded {} artifacts on {} (cache_sim: {} sets x {} ways)",
+                rt.entry_names().len(),
+                rt.platform(),
+                sim.num_sets,
+                sim.ways
+            );
+            Some(sim)
+        }
+        None => None,
+    };
+    let (capacity, ways) = match &xla {
+        Some(sim) => (sim.capacity(), sim.ways),
+        None => (1 << 11, 8), // the paper's small-cache setup
+    };
 
     // The workload: the Wikipedia trace model.
     let trace = Arc::new(paper::build("wiki_a", 400_000, 42).unwrap());
     println!("trace={} accesses={} unique={}", trace.name, trace.len(), trace.unique_keys());
 
     // ---- Offline prediction through PJRT (python is NOT involved).
-    let t0 = Instant::now();
-    let predicted = sim.run(&trace)?;
-    let xla_secs = t0.elapsed().as_secs_f64();
-    let native = NativeSetSim::new(sim.num_sets, sim.ways).run(&trace.keys);
-    println!(
-        "XLA cache_sim: {} hits / {} accesses = {:.4} ({:.2} Mkeys/s); native agrees: {}",
-        predicted.hits,
-        predicted.accesses,
-        predicted.hits as f64 / predicted.accesses as f64,
-        predicted.accesses as f64 / xla_secs / 1e6,
-        predicted.hits == native.hits
-    );
-    assert_eq!(predicted.hits, native.hits, "layer 1/2 vs layer 3 divergence");
+    let predicted = match &xla {
+        Some(sim) => {
+            let t0 = Instant::now();
+            let predicted = sim.run(trace.as_ref())?;
+            let xla_secs = t0.elapsed().as_secs_f64();
+            let native = NativeSetSim::new(sim.num_sets, sim.ways).run(&trace.keys);
+            println!(
+                "XLA cache_sim: {} hits / {} accesses = {:.4} ({:.2} Mkeys/s); native agrees: {}",
+                predicted.hits,
+                predicted.accesses,
+                predicted.hits as f64 / predicted.accesses as f64,
+                predicted.accesses as f64 / xla_secs / 1e6,
+                predicted.hits == native.hits
+            );
+            assert_eq!(predicted.hits, native.hits, "layer 1/2 vs layer 3 divergence");
+            Some(predicted)
+        }
+        None => None,
+    };
 
-    // ---- Layer 3: serve the same trace through the cache service.
-    let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(capacity, sim.ways, Policy::Lru));
-    let service =
-        Arc::new(CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() }));
+    // ---- Layer 3: serve the same trace through the cache service. A
+    // default TTL far beyond the replay duration means nothing expires
+    // mid-run (the hit ratio stays comparable to the immortal
+    // configuration and to the XLA prediction) while every entry still
+    // takes the mortal code path end to end.
+    let default_ttl = Duration::from_secs(300);
+    let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(capacity, ways, Policy::Lru));
+    let service = Arc::new(CacheService::start(
+        cache,
+        ServiceConfig { workers: 2, default_ttl: Some(default_ttl), ..Default::default() },
+    ));
     let next = Arc::new(AtomicUsize::new(0));
 
     let t0 = Instant::now();
@@ -87,7 +123,7 @@ fn main() -> anyhow::Result<()> {
                 let results = service.get_batch(keys.clone());
                 for (key, value) in keys.into_iter().zip(results) {
                     if value.is_none() {
-                        service.put(key, key);
+                        service.put(key, key); // carries the default TTL
                     }
                 }
             });
@@ -98,27 +134,45 @@ fn main() -> anyhow::Result<()> {
     let m = service.metrics();
     let measured_ratio = m.ops.hit_ratio();
     println!(
-        "\nservice: {} requests in {:.2}s = {:.2} Mops/s",
+        "\nservice: {} requests in {:.2}s = {:.2} Mops/s (default ttl {default_ttl:?})",
         trace.len(),
         serve_secs,
         trace.len() as f64 / serve_secs / 1e6
     );
     println!("{}", m.report());
 
+    // ---- TTL smoke test: the service's entries are mortal. An explicit
+    // zero-TTL put is never readable, and one incremental sweep pass
+    // reclaims it in place — no background expiry thread exists anywhere
+    // in the system (DESIGN.md §Expiration).
+    service.put_with(u64::MAX - 3, 1, EntryOpts::ttl(Duration::ZERO));
+    assert_eq!(service.get(u64::MAX - 3), None, "an expired key must never be served");
+    let before = service.cache().len();
+    let reclaimed = service.cache().sweep_expired(usize::MAX);
+    println!(
+        "ttl: {before} resident entries ({default_ttl:?} default TTL), one sweep pass \
+         reclaimed {reclaimed} already-dead line(s); {} remain mortal",
+        service.cache().len()
+    );
+    assert!(reclaimed >= 1, "the zero-TTL key must be reclaimed by the sweep");
+    assert!(service.cache().len() < before);
+
     // ---- Cross-check: the XLA prediction must match the service's
     // measured hit ratio (same geometry, same LRU semantics; the service
     // replays the identical access sequence, modulo client interleaving
     // which perturbs LRU order only slightly).
-    let predicted_ratio = predicted.hits as f64 / predicted.accesses as f64;
-    println!(
-        "\npredicted (XLA) hit ratio = {predicted_ratio:.4}, measured (service) = {measured_ratio:.4}"
-    );
-    let gap = (predicted_ratio - measured_ratio).abs();
-    assert!(
-        gap < 0.03,
-        "offline prediction and live measurement diverged by {gap:.4}"
-    );
-    println!("end-to-end OK: all three layers agree.");
+    if let Some(predicted) = predicted {
+        let predicted_ratio = predicted.hits as f64 / predicted.accesses as f64;
+        println!(
+            "\npredicted (XLA) hit ratio = {predicted_ratio:.4}, measured (service) = \
+             {measured_ratio:.4}"
+        );
+        let gap = (predicted_ratio - measured_ratio).abs();
+        assert!(gap < 0.03, "offline prediction and live measurement diverged by {gap:.4}");
+        println!("end-to-end OK: all three layers agree.");
+    } else {
+        println!("\nend-to-end OK (layer 3 + TTL path; rerun with artifacts for the XLA check).");
+    }
     Arc::try_unwrap(service).ok().map(|s| s.shutdown());
     Ok(())
 }

@@ -65,7 +65,13 @@ fn main() {
                 for &t in &threads {
                     let factory =
                         impl_factory(name, fig.capacity, t, fig.policy, admission).unwrap();
-                    let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+                    let cfg = RunConfig {
+                        threads: t,
+                        duration,
+                        repeats,
+                        seed: 42,
+                        ..Default::default()
+                    };
                     let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
                     last_hit = r.hit_ratio;
                     print!(" {:9.2}", r.mops.mean());
@@ -81,7 +87,7 @@ fn main() {
             let factory =
                 impl_factory("Caffeine", fig.capacity, t, fig.policy, AdmissionMode::None)
                     .unwrap();
-            let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+            let cfg = RunConfig { threads: t, duration, repeats, seed: 42, ..Default::default() };
             let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
             last_hit = r.hit_ratio;
             print!(" {:9.2}", r.mops.mean());

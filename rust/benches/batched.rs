@@ -46,7 +46,7 @@ fn main() {
         for name in impls {
             let factory =
                 impl_factory(name, capacity, threads, Policy::Lru, AdmissionMode::None).unwrap();
-            let cfg = RunConfig { threads, duration, repeats, seed: 42 };
+            let cfg = RunConfig { threads, duration, repeats, seed: 42, ..Default::default() };
             // Scalar baseline: same keys, one get per call.
             let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
             println!(

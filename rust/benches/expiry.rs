@@ -1,0 +1,83 @@
+//! Entry lifetime and weighted capacity (figE* series, the lifetime
+//! extension): throughput and steady-state hit ratio of the expiring
+//! get-or-fill workload across the TTL and weight-distribution points in
+//! `kway::figures::EXPIRY_FIGURES`, for the three k-way variants against
+//! the sampled baseline.
+//!
+//! ```bash
+//! cargo bench --bench expiry
+//! KWAY_BENCH_QUICK=1 cargo bench --bench expiry
+//! ```
+//!
+//! What to look for (DESIGN.md §Expiration, §Weighted capacity): the
+//! figE0 row (no TTL, unit weights) is the control — it runs the exact
+//! pre-lifetime code path, so its Mops/s should match the 100%-hit
+//! synthetic figures. Shrinking the TTL lowers the hit ratio (entries
+//! die between touches) while k-way throughput stays nearly flat: lazy
+//! reclamation is folded into probes the engine performs anyway, which
+//! is the limited-associativity advantage — no timer wheel, no
+//! background sweeper. The zipf-weighted rows hold fewer, heavier
+//! entries per set, trading hit ratio for byte-accurate capacity.
+
+use kway::figures::{quick_mode, EXPIRY_FIGURES};
+use kway::lifetime::WeightDist;
+use kway::policy::Policy;
+use kway::throughput::{impl_factory, measure, FillSpec, RunConfig, Workload};
+use kway::tinylfu::AdmissionMode;
+use std::time::Duration;
+
+fn main() {
+    let quick = quick_mode();
+    let capacity: usize = if quick { 1 << 12 } else { 1 << 16 };
+    // Working set 2x capacity: misses and evictions happen even without
+    // TTLs, so the TTL effect shows on top of a realistic baseline.
+    let working_set = (capacity * 2) as u64;
+    let threads_list: Vec<usize> = if quick { vec![2] } else { vec![1, 4] };
+    let duration = Duration::from_millis(if quick { 100 } else { 300 });
+    let repeats = if quick { 2 } else { 3 };
+    let impls = ["KW-WFA", "KW-WFSC", "KW-LS", "sampled"];
+
+    for &threads in &threads_list {
+        println!(
+            "\n==== expiring get-or-fill — capacity 2^{} working set {} threads {} ====",
+            capacity.trailing_zeros(),
+            working_set,
+            threads
+        );
+        println!(
+            "{:10} {:>8} {:>10} {:14} {:>10} {:>12} {:>12} {:>8}",
+            "figure", "ttl(ms)", "weights", "impl", "Mops/s", "p50(ns)", "p99(ns)", "hit"
+        );
+        for fig in EXPIRY_FIGURES {
+            let fill = FillSpec {
+                ttl: (fig.ttl_ms > 0).then(|| Duration::from_millis(fig.ttl_ms)),
+                weight_dist: WeightDist::parse(fig.weight_dist).unwrap(),
+            };
+            for name in impls {
+                let factory =
+                    impl_factory(name, capacity, threads, Policy::Lru, AdmissionMode::None)
+                        .unwrap();
+                let cfg = RunConfig { threads, duration, repeats, seed: 42, fill: fill.clone() };
+                let r = measure(&*factory, &Workload::Expiring { working_set }, &cfg);
+                println!(
+                    "{:10} {:>8} {:>10} {:14} {:>10.2} {:>12} {:>12} {:>8.3}",
+                    fig.id,
+                    fig.ttl_ms,
+                    fig.weight_dist,
+                    name,
+                    r.mops.mean(),
+                    r.lat_p50_ns,
+                    r.lat_p99_ns,
+                    r.hit_ratio
+                );
+            }
+        }
+    }
+    println!(
+        "\nReading: figE0 is the immortal/unit control (the pre-lifetime\n\
+         path, bit-identical by construction); hit ratio falls as TTL\n\
+         shrinks below the re-reference interval while k-way Mops/s stays\n\
+         nearly flat (reclamation rides the probe). zipf:8 rows bound each\n\
+         set by total weight instead of entry count."
+    );
+}

@@ -71,7 +71,8 @@ fn main() {
             for &t in &threads {
                 let factory =
                     impl_factory(name, capacity, t, Policy::Lru, AdmissionMode::None).unwrap();
-                let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+                let cfg =
+                    RunConfig { threads: t, duration, repeats, seed: 42, ..Default::default() };
                 let r = measure(&*factory, &workload, &cfg);
                 print!(" {:9.2}", r.mops.mean());
             }

@@ -61,7 +61,8 @@ fn main() {
                 let factory =
                     impl_factory(name, fig.capacity, t, Policy::Lru, AdmissionMode::None)
                         .unwrap();
-                let cfg = RunConfig { threads: t, duration, repeats, seed: 42 };
+                let cfg =
+                    RunConfig { threads: t, duration, repeats, seed: 42, ..Default::default() };
                 let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
                 last_hit = r.hit_ratio;
                 print!(" {:9.2}", r.mops.mean());

@@ -8,6 +8,7 @@
 //! ([`crate::Cache::get_batch`]), instead of one worker serializing the
 //! whole batch. See DESIGN.md §Batched access path.
 
+use crate::lifetime::{BatchEntry, EntryOpts};
 use crate::metrics::{LatencyHistogram, OpCounters};
 use crate::tinylfu::AdmissionMode;
 use crate::util::hash;
@@ -15,7 +16,7 @@ use crate::Cache;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -27,23 +28,33 @@ pub struct ServiceConfig {
     /// [`crate::tinylfu::TlfuCache`], so every routed get/put — batched
     /// or not — flows through the shared frequency sketch).
     pub admission: AdmissionMode,
+    /// Default entry lifetime: every put routed through
+    /// [`CacheService::put`] / [`CacheService::put_batch`] carries this
+    /// TTL unless the caller passes explicit options via
+    /// [`CacheService::put_with`]. `None` (the default) keeps entries
+    /// immortal — the pre-lifetime behaviour.
+    pub default_ttl: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 4, admission: AdmissionMode::None }
+        Self { workers: 4, admission: AdmissionMode::None, default_ttl: None }
     }
 }
 
 /// Shared service metrics.
 #[derive(Default)]
 pub struct ServiceMetrics {
+    /// Queue-to-completion latency of routed gets (includes queueing).
     pub get_latency: LatencyHistogram,
+    /// Queue-to-completion latency of routed puts (includes queueing).
     pub put_latency: LatencyHistogram,
+    /// Operation and hit counters.
     pub ops: OpCounters,
 }
 
 impl ServiceMetrics {
+    /// Multi-line human-readable summary of all service metrics.
     pub fn report(&self) -> String {
         format!(
             "gets={} puts={} hit_ratio={:.3}\n  get latency: {}\n  put latency: {}",
@@ -58,7 +69,9 @@ impl ServiceMetrics {
 
 enum Request {
     Get { key: u64, enqueued: Instant, reply: Sender<Option<u64>> },
-    Put { key: u64, value: u64, enqueued: Instant },
+    /// `opts` carries the entry lifetime/weight (the service default for
+    /// plain puts, caller-supplied for `put_with`).
+    Put { key: u64, value: u64, opts: EntryOpts, enqueued: Instant },
     /// One worker's share of a scattered batch; `worker` comes back with
     /// the reply so the gatherer knows which sub-batch arrived.
     GetBatch {
@@ -67,8 +80,9 @@ enum Request {
         worker: usize,
         reply: Sender<(usize, Vec<Option<u64>>)>,
     },
-    /// One worker's share of a scattered batched put (fire-and-forget).
-    PutBatch { items: Vec<(u64, u64)>, enqueued: Instant },
+    /// One worker's share of a scattered batched put (fire-and-forget);
+    /// `opts` applies to every item of the sub-batch.
+    PutBatch { items: Vec<(u64, u64)>, opts: EntryOpts, enqueued: Instant },
     Shutdown,
 }
 
@@ -78,11 +92,29 @@ pub struct CacheService {
     senders: Vec<Sender<Request>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<ServiceMetrics>,
+    /// Options stamped on puts that do not carry their own (from
+    /// [`ServiceConfig::default_ttl`]).
+    default_opts: EntryOpts,
 }
 
 impl CacheService {
     /// Start `cfg.workers` workers over `cache` (layered behind the
     /// configured admission filter).
+    ///
+    /// ```
+    /// use kway::coordinator::{CacheService, ServiceConfig};
+    /// use kway::kway::KwWfsc;
+    /// use kway::policy::Policy;
+    /// use std::sync::Arc;
+    ///
+    /// let cache = Arc::new(KwWfsc::new(1 << 10, 8, Policy::Lru));
+    /// let service = CacheService::start(cache, ServiceConfig::default());
+    /// service.put(1, 10);
+    /// // Routed puts are fire-and-forget; a same-key get is FIFO-ordered
+    /// // behind the put, so it observes the write.
+    /// assert_eq!(service.get(1), Some(10));
+    /// service.shutdown();
+    /// ```
     pub fn start(cache: Arc<dyn Cache>, cfg: ServiceConfig) -> Self {
         assert!(cfg.workers >= 1);
         let cache = cfg.admission.wrap(cache);
@@ -101,7 +133,17 @@ impl CacheService {
                     .expect("spawn worker"),
             );
         }
-        Self { cache, senders, workers, metrics }
+        let default_opts = EntryOpts { ttl: cfg.default_ttl, weight: 1 };
+        // A default TTL over a cache without lifetime support would be a
+        // silent no-op (every entry immortal); say so rather than let
+        // the operator believe the TTL bounds staleness.
+        if default_opts.ttl.is_some() && !cache.supports_lifetime() {
+            eprintln!(
+                "warning: {} has no lifetime support; the service default TTL is ignored",
+                cache.name()
+            );
+        }
+        Self { cache, senders, workers, metrics, default_opts }
     }
 
     /// Which worker owns a key. Same hash for singles and batches, so
@@ -120,10 +162,17 @@ impl CacheService {
         rx.recv().expect("worker dropped reply")
     }
 
-    /// Fire-and-forget put (the common cache-fill pattern).
+    /// Fire-and-forget put (the common cache-fill pattern). Carries the
+    /// service's default entry lifetime ([`ServiceConfig::default_ttl`]).
     pub fn put(&self, key: u64, value: u64) {
+        self.put_with(key, value, self.default_opts);
+    }
+
+    /// Fire-and-forget put with explicit lifetime/weight options,
+    /// overriding the service default.
+    pub fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
         self.senders[self.worker_of(key)]
-            .send(Request::Put { key, value, enqueued: Instant::now() })
+            .send(Request::Put { key, value, opts, enqueued: Instant::now() })
             .expect("service stopped");
     }
 
@@ -178,8 +227,15 @@ impl CacheService {
     }
 
     /// Batched fire-and-forget put, scattered by owning worker like
-    /// [`CacheService::get_batch`].
+    /// [`CacheService::get_batch`]. Carries the service's default entry
+    /// lifetime; use [`CacheService::put_batch_with`] to override it.
     pub fn put_batch(&self, items: Vec<(u64, u64)>) {
+        self.put_batch_with(items, self.default_opts);
+    }
+
+    /// [`CacheService::put_batch`] with explicit lifetime/weight options
+    /// applied to every item of the batch.
+    pub fn put_batch_with(&self, items: Vec<(u64, u64)>, opts: EntryOpts) {
         if items.is_empty() {
             return;
         }
@@ -193,7 +249,7 @@ impl CacheService {
                 continue;
             }
             self.senders[w]
-                .send(Request::PutBatch { items, enqueued: Instant::now() })
+                .send(Request::PutBatch { items, opts, enqueued: Instant::now() })
                 .expect("service stopped");
         }
     }
@@ -242,8 +298,12 @@ fn worker_loop(rx: Receiver<Request>, cache: Arc<dyn Cache>, metrics: Arc<Servic
                 metrics.get_latency.record(enqueued.elapsed().as_nanos() as u64);
                 let _ = reply.send(value);
             }
-            Request::Put { key, value, enqueued } => {
-                cache.put(key, value);
+            Request::Put { key, value, opts, enqueued } => {
+                if opts.is_plain() {
+                    cache.put(key, value);
+                } else {
+                    cache.put_with(key, value, opts);
+                }
                 metrics.ops.puts.fetch_add(1, Ordering::Relaxed);
                 metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
             }
@@ -258,8 +318,16 @@ fn worker_loop(rx: Receiver<Request>, cache: Arc<dyn Cache>, metrics: Arc<Servic
                 metrics.get_latency.record(enqueued.elapsed().as_nanos() as u64);
                 let _ = reply.send((worker, values));
             }
-            Request::PutBatch { items, enqueued } => {
-                cache.put_batch(&items);
+            Request::PutBatch { items, opts, enqueued } => {
+                if opts.is_plain() {
+                    cache.put_batch(&items);
+                } else {
+                    let entries: Vec<BatchEntry> = items
+                        .iter()
+                        .map(|&(key, value)| BatchEntry::new(key, value, opts))
+                        .collect();
+                    cache.put_batch_with(&entries);
+                }
                 metrics.ops.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
                 metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
             }
@@ -491,5 +559,28 @@ mod tests {
         let s = service(2);
         s.put(1, 1);
         drop(s); // must not hang
+    }
+
+    #[test]
+    fn default_ttl_applies_to_routed_puts() {
+        use std::time::Duration;
+        let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let s = CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, default_ttl: Some(Duration::ZERO), ..Default::default() },
+        );
+        // Per-key FIFO: the get queues behind the put on the same worker.
+        s.put(5, 55);
+        assert_eq!(s.get(5), None, "default-TTL'd entries expire (TTL 0 = at birth)");
+        // Explicit options override the service default.
+        s.put_with(6, 66, crate::lifetime::EntryOpts::default());
+        assert_eq!(s.get(6), Some(66));
+        // Batched puts inherit the default too.
+        s.put_batch(vec![(7, 77), (8, 88)]);
+        assert_eq!(s.get(7), None);
+        assert_eq!(s.get(8), None);
+        s.put_batch_with(vec![(9, 99)], crate::lifetime::EntryOpts::default());
+        assert_eq!(s.get(9), Some(99));
+        s.shutdown();
     }
 }

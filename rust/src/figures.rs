@@ -8,18 +8,24 @@ use crate::policy::Policy;
 /// Which hit-ratio subfigure-(d) series a figure shows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExtraSeries {
+    /// Subfigure (d) shows plain Hyperbolic.
     Hyperbolic,
+    /// Subfigure (d) shows Hyperbolic + TinyLFU.
     HyperbolicTlfu,
+    /// No extra series on this figure.
     None,
 }
 
 /// A hit-ratio figure (Figures 4–13): four subfigures on one trace.
 #[derive(Debug, Clone)]
 pub struct HitRatioFigure {
+    /// Figure id (fig4..fig13).
     pub id: &'static str,
+    /// Trace model name (see `trace::paper`).
     pub trace: &'static str,
     /// Cache sizes for the x-axis sweep.
     pub sizes: &'static [usize],
+    /// Which subfigure-(d) series the figure shows.
     pub extra: ExtraSeries,
 }
 
@@ -41,7 +47,9 @@ pub const HITRATIO_FIGURES: &[HitRatioFigure] = &[
 /// A trace-replay throughput figure (Figures 14–26).
 #[derive(Debug, Clone)]
 pub struct ThroughputFigure {
+    /// Figure id (fig14..fig26).
     pub id: &'static str,
+    /// Trace model name (see `trace::paper`).
     pub trace: &'static str,
     /// Cache size from the figure caption (2^11 / 2^17 / 2^19).
     pub capacity: usize,
@@ -72,10 +80,13 @@ pub const THROUGHPUT_FIGURES: &[ThroughputFigure] = &[
 /// A synthetic-mix throughput figure (Figures 27–30).
 #[derive(Debug, Clone)]
 pub struct SyntheticFigure {
+    /// Figure id (fig27..fig30).
     pub id: &'static str,
+    /// Mix label as the paper prints it.
     pub label: &'static str,
     /// gets per put; None = all-miss (27) / all-hit (28) special cases.
     pub gets_per_put: Option<u32>,
+    /// True for the 100%-miss special case (Figure 27).
     pub all_miss: bool,
 }
 
@@ -94,6 +105,7 @@ pub const SYNTHETIC_FIGURES: &[SyntheticFigure] = &[
 /// dimension interactively.
 #[derive(Debug, Clone)]
 pub struct BatchedFigure {
+    /// Figure id (figB*).
     pub id: &'static str,
     /// Keys per `get_batch` call.
     pub batch: usize,
@@ -116,7 +128,9 @@ pub const BATCHED_FIGURES: &[BatchedFigure] = &[
 /// --admission tlfu` sweeps the same dimension interactively.
 #[derive(Debug, Clone)]
 pub struct AdmissionFigure {
+    /// Figure id (figT*).
     pub id: &'static str,
+    /// Trace model name (see `trace::paper`).
     pub trace: &'static str,
     /// Cache size (paper-style power of two).
     pub capacity: usize,
@@ -132,6 +146,40 @@ pub const ADMISSION_FIGURES: &[AdmissionFigure] = &[
     AdmissionFigure { id: "figT1", trace: "oltp", capacity: 1 << 11, policy: Policy::Lfu },
     AdmissionFigure { id: "figT2", trace: "wiki_a", capacity: 1 << 11, policy: Policy::Lru },
     AdmissionFigure { id: "figT3", trace: "multi2", capacity: 1 << 11, policy: Policy::Hyperbolic },
+];
+
+/// An expiration / weighted-capacity figure (the lifetime extension, not
+/// from the paper): the [`crate::throughput::Workload::Expiring`]
+/// get-or-fill loop under a given TTL and weight distribution, for the
+/// three k-way variants against the sampled baseline.
+/// `benches/expiry.rs` iterates this table; `kway synthetic --workload
+/// expiring --ttl ... --weight-dist ...` sweeps the same dimension
+/// interactively.
+#[derive(Debug, Clone)]
+pub struct ExpiryFigure {
+    /// Figure id (figE*).
+    pub id: &'static str,
+    /// TTL stamped on every fill, in milliseconds; 0 = immortal (the
+    /// baseline row, which must be bit-identical to the pre-lifetime
+    /// path).
+    pub ttl_ms: u64,
+    /// Weight distribution spec (parsed by
+    /// [`crate::lifetime::WeightDist::parse`]).
+    pub weight_dist: &'static str,
+}
+
+/// All expiration/weighted figures. The TTL sweep brackets the expected
+/// re-reference interval of the expiring workload (entries die between
+/// touches at 50 ms, mostly survive at 1 s), and the weighted rows rerun
+/// the immortal and 250 ms points under Pareto-skewed entry sizes.
+#[rustfmt::skip]
+pub const EXPIRY_FIGURES: &[ExpiryFigure] = &[
+    ExpiryFigure { id: "figE0",   ttl_ms: 0,    weight_dist: "unit" },
+    ExpiryFigure { id: "figE1s",  ttl_ms: 1000, weight_dist: "unit" },
+    ExpiryFigure { id: "figE250", ttl_ms: 250,  weight_dist: "unit" },
+    ExpiryFigure { id: "figE50",  ttl_ms: 50,   weight_dist: "unit" },
+    ExpiryFigure { id: "figEW",   ttl_ms: 0,    weight_dist: "zipf:8" },
+    ExpiryFigure { id: "figEWT",  ttl_ms: 250,  weight_dist: "zipf:8" },
 ];
 
 /// Quick-mode flag shared by every bench: set `KWAY_BENCH_QUICK=1` to run
@@ -175,6 +223,23 @@ mod tests {
         assert_eq!(HITRATIO_FIGURES.len(), 10); // Figures 4-13
         assert_eq!(THROUGHPUT_FIGURES.len(), 13); // Figures 14-26
         assert_eq!(SYNTHETIC_FIGURES.len(), 4); // Figures 27-30
+    }
+
+    #[test]
+    fn expiry_figures_are_well_formed() {
+        use crate::lifetime::WeightDist;
+        let mut ids: Vec<&str> = EXPIRY_FIGURES.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), EXPIRY_FIGURES.len(), "figE ids must be unique");
+        for f in EXPIRY_FIGURES {
+            assert!(WeightDist::parse(f.weight_dist).is_some(), "{}: bad dist", f.id);
+        }
+        // The immortal baseline and at least one TTL + one weighted row
+        // must be present (the acceptance scenarios).
+        assert!(EXPIRY_FIGURES.iter().any(|f| f.ttl_ms == 0 && f.weight_dist == "unit"));
+        assert!(EXPIRY_FIGURES.iter().any(|f| f.ttl_ms > 0));
+        assert!(EXPIRY_FIGURES.iter().any(|f| f.weight_dist != "unit"));
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub struct FifoQueue {
 }
 
 impl FifoQueue {
+    /// A FIFO cache holding at most `capacity` keys.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
@@ -22,10 +23,12 @@ impl FifoQueue {
         }
     }
 
+    /// Number of resident keys.
     pub fn len(&self) -> usize {
         self.resident.len()
     }
 
+    /// Maximum number of resident keys.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -43,6 +43,7 @@ impl HyperbolicFull {
         }
     }
 
+    /// Number of resident keys.
     pub fn len(&self) -> usize {
         self.keys.len()
     }

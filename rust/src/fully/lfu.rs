@@ -18,6 +18,7 @@ pub struct LfuOrdered {
 }
 
 impl LfuOrdered {
+    /// An exact LFU cache holding at most `capacity` keys.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
@@ -28,10 +29,12 @@ impl LfuOrdered {
         }
     }
 
+    /// Number of resident keys.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Maximum number of resident keys.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -2,8 +2,16 @@
 //! plus a key→slot index. This is the paper's "fully associative"
 //! hit-ratio line and the textbook structure whose head-of-list contention
 //! motivates the whole work (§1, §2.4).
+//!
+//! TTL support (so expiring-workload comparisons against the k-way
+//! designs stay apples-to-apples) is a side deadline map consulted on
+//! access — note the contrast with the k-way caches, where the deadline
+//! rides *inside* the set and reclamation folds into the probe: a
+//! fully-associative design has no set to scan, so it pays an extra map
+//! lookup per access instead (DESIGN.md §Expiration).
 
 use super::SimVictimPeek;
+use crate::lifetime::{self, EntryOpts};
 use crate::SimCache;
 use std::collections::HashMap;
 
@@ -24,9 +32,14 @@ pub struct LruList {
     head: u32,
     tail: u32,
     free: Vec<u32>,
+    /// Expiry deadlines (coarse ms) for the keys that carry a TTL;
+    /// immortal keys stay out of the map entirely, so TTL-free
+    /// simulations never pay for it.
+    deadlines: HashMap<u64, u64>,
 }
 
 impl LruList {
+    /// Build an LRU list holding at most `capacity` keys.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
@@ -36,19 +49,37 @@ impl LruList {
             head: NIL,
             tail: NIL,
             free: Vec::new(),
+            deadlines: HashMap::new(),
         }
     }
 
+    /// Number of resident keys (expired-but-unreclaimed keys included).
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is resident.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Maximum number of resident keys.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Is `key` resident but past its deadline?
+    fn expired(&self, key: u64) -> bool {
+        self.deadlines.get(&key).is_some_and(|&d| d <= lifetime::now_ms())
+    }
+
+    /// Drop a resident key entirely (expire-on-access reclamation).
+    fn remove(&mut self, key: u64) {
+        if let Some(idx) = self.map.remove(&key) {
+            self.unlink(idx);
+            self.free.push(idx);
+        }
+        self.deadlines.remove(&key);
     }
 
     fn unlink(&mut self, idx: u32) {
@@ -97,6 +128,7 @@ impl LruList {
         let key = self.nodes[idx as usize].key;
         self.unlink(idx);
         self.map.remove(&key);
+        self.deadlines.remove(&key);
         idx
     }
 
@@ -118,6 +150,10 @@ impl LruList {
 
 impl SimCache for LruList {
     fn sim_get(&mut self, key: u64) -> bool {
+        if self.expired(key) {
+            self.remove(key); // expire-on-access; an expired key never hits
+            return false;
+        }
         if let Some(&idx) = self.map.get(&key) {
             self.touch(idx);
             true
@@ -127,10 +163,25 @@ impl SimCache for LruList {
     }
 
     fn sim_put(&mut self, key: u64) {
+        self.sim_put_with(key, EntryOpts::default())
+    }
+
+    fn sim_put_with(&mut self, key: u64, opts: EntryOpts) {
         if let Some(&idx) = self.map.get(&key) {
             self.touch(idx);
         } else {
             self.insert(key);
+        }
+        // A (re-)insert restarts the lifetime: record the new deadline,
+        // or clear a stale one when the entry becomes immortal.
+        match opts.ttl {
+            Some(_) => {
+                let d = lifetime::deadline_ms(opts.ttl, lifetime::now_ms());
+                self.deadlines.insert(key, d);
+            }
+            None => {
+                self.deadlines.remove(&key);
+            }
         }
     }
 
@@ -186,6 +237,28 @@ mod tests {
         let victim = c.sim_peek_victim(99).unwrap();
         c.sim_put(99);
         assert!(!c.sim_get(victim), "peeked victim {victim} must be evicted");
+    }
+
+    #[test]
+    fn expired_keys_never_hit_and_are_reclaimed() {
+        use std::time::Duration;
+        let mut c = LruList::new(4);
+        c.sim_put_with(1, EntryOpts::ttl(Duration::ZERO));
+        c.sim_put_with(2, EntryOpts::ttl(Duration::from_secs(3600)));
+        c.sim_put(3);
+        assert!(!c.sim_get(1), "zero-TTL key is born expired");
+        assert_eq!(c.len(), 2, "expire-on-access reclaims the slot");
+        assert!(c.sim_get(2));
+        assert!(c.sim_get(3));
+        // Re-inserting an expired key revives it (immortal this time).
+        c.sim_put(1);
+        assert!(c.sim_get(1));
+        // Eviction of a TTL'd key must not leak its deadline: key 2's
+        // deadline is gone once LRU pressure pushes it out.
+        for k in 10..14 {
+            c.sim_put(k);
+        }
+        assert!(c.deadlines.is_empty(), "evicted keys must drop deadlines");
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //!   `sample` random resident entries and evicting the policy minimum.
 //!   This reproduces the cost the paper highlights: one PRNG draw plus one
 //!   random memory access per sampled entry on every miss.
+//!
+//! For expiring/weighted scenarios, [`Sampled`] carries full lifetime
+//! support (TTL + weighted capacity, like the k-way family) and
+//! [`LruList`] expires lazily through a side deadline map, so the
+//! headline baselines stay apples-to-apples with the k-way designs
+//! (DESIGN.md §Expiration). The remaining sequential baselines treat
+//! every entry as immortal (the [`crate::SimCache`] default).
 
 mod fifo;
 mod hyperbolic;
@@ -38,6 +45,8 @@ pub use sampled::Sampled;
 /// evicted if `key` were inserted now and the cache were full? `None`
 /// means "no eviction needed" (free room) — the caller should admit.
 pub trait SimVictimPeek {
+    /// The key that would be evicted if `key` were inserted now, or
+    /// `None` when no eviction would be needed.
     fn sim_peek_victim(&mut self, key: u64) -> Option<u64>;
 }
 

@@ -15,6 +15,7 @@ pub struct RandomFull {
 }
 
 impl RandomFull {
+    /// A random-eviction cache holding at most `capacity` keys.
     pub fn new(capacity: usize, seed: u64) -> Self {
         assert!(capacity > 0);
         Self {
@@ -25,6 +26,7 @@ impl RandomFull {
         }
     }
 
+    /// Number of resident keys.
     pub fn len(&self) -> usize {
         self.keys.len()
     }

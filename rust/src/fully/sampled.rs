@@ -8,8 +8,17 @@
 //! contiguous scan. Hits only touch the accessed entry's metadata, which
 //! is why sampled can win on very hit-heavy traces (the paper's Sprite
 //! discussion).
+//!
+//! Lifetime support mirrors the k-way family so expiring/weighted
+//! comparisons stay apples-to-apples (DESIGN.md §Expiration, §Weighted
+//! capacity): an expired entry probes as a miss (and is reclaimed in
+//! place — the segment lock makes that exact, like Redis's
+//! expire-on-access), eviction prefers an expired entry found in the
+//! sample, and each segment bounds the *sum of entry weights* by its
+//! capacity share.
 
 use super::SimVictimPeek;
+use crate::lifetime::{self, EntryOpts};
 use crate::policy::Policy;
 use crate::util::clock::LogicalClock;
 use crate::util::hash;
@@ -17,12 +26,17 @@ use crate::util::rng::Rng;
 use crate::Cache;
 use crossbeam_utils::CachePadded;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 struct Seg {
     keys: Vec<u64>,
     values: Vec<u64>,
     metas: Vec<u64>,
+    /// Packed (weight, expiry) life words, parallel to `keys`.
+    lives: Vec<u64>,
+    /// Running total of resident entry weights (exact under the lock).
+    weight: u64,
     index: HashMap<u64, usize>,
     rng: Rng,
 }
@@ -33,6 +47,8 @@ impl Seg {
             keys: Vec::with_capacity(capacity_hint),
             values: Vec::with_capacity(capacity_hint),
             metas: Vec::with_capacity(capacity_hint),
+            lives: Vec::with_capacity(capacity_hint),
+            weight: 0,
             index: HashMap::with_capacity(capacity_hint),
             rng: Rng::new(seed),
         }
@@ -42,6 +58,7 @@ impl Seg {
         let key = self.keys.swap_remove(slot);
         self.values.swap_remove(slot);
         self.metas.swap_remove(slot);
+        self.weight -= lifetime::weight_of(self.lives.swap_remove(slot));
         self.index.remove(&key);
         if slot < self.keys.len() {
             let moved = self.keys[slot];
@@ -49,16 +66,38 @@ impl Seg {
         }
     }
 
-    /// Sample `sample` resident slots and return the policy victim's slot.
-    fn sample_victim(&mut self, policy: Policy, sample: usize, now: u64) -> usize {
+    /// Sample `sample` resident slots and return the victim's slot: an
+    /// expired entry in the sample wins outright (victim of first
+    /// resort), the policy minimum otherwise. `exclude` spares a slot
+    /// (the entry the current put installed).
+    fn sample_victim(
+        &mut self,
+        policy: Policy,
+        sample: usize,
+        now: u64,
+        now_ms: u64,
+        exclude: Option<usize>,
+    ) -> Option<usize> {
         let n = self.keys.len();
         debug_assert!(n > 0);
-        let mut best = self.rng.index(n);
-        for _ in 1..sample {
+        let mut best: Option<usize> = None;
+        for _ in 0..sample.max(1) {
             let s = self.rng.index(n);
-            if !policy.victim_le(self.metas[best], self.metas[s], now) {
-                best = s;
+            if Some(s) == exclude {
+                continue;
             }
+            if lifetime::is_expired(self.lives[s], now_ms) {
+                return Some(s);
+            }
+            best = match best {
+                None => Some(s),
+                Some(b) if !policy.victim_le(self.metas[b], self.metas[s], now) => Some(s),
+                keep => keep,
+            };
+        }
+        // All draws hit the excluded slot: fall back to any other slot.
+        if best.is_none() {
+            best = (0..n).find(|&s| Some(s) != exclude);
         }
         best
     }
@@ -72,6 +111,13 @@ pub struct Sampled {
     sample: usize,
     clock: LogicalClock,
     capacity: usize,
+    /// Rotating segment cursor for [`Cache::sweep_expired`].
+    sweep_cursor: AtomicUsize,
+    /// Latched once any put carries a TTL or a non-unit weight; until
+    /// then the hot paths skip the wall-clock read entirely, keeping the
+    /// paper-comparison baseline's cost profile untouched (same gating
+    /// as the k-way engine's activity flags).
+    lifetimed: AtomicBool,
 }
 
 impl Sampled {
@@ -84,7 +130,16 @@ impl Sampled {
         let segments = (0..nsegs)
             .map(|i| CachePadded::new(Mutex::new(Seg::new(seg_capacity.min(1 << 20), i as u64))))
             .collect();
-        Self { segments, seg_capacity, policy, sample, clock: LogicalClock::new(), capacity }
+        Self {
+            segments,
+            seg_capacity,
+            policy,
+            sample,
+            clock: LogicalClock::new(),
+            capacity,
+            sweep_cursor: AtomicUsize::new(0),
+            lifetimed: AtomicBool::new(false),
+        }
     }
 
     /// Default segment count used by the evaluation harness.
@@ -100,20 +155,40 @@ impl Sampled {
         &self.segments[idx]
     }
 
+    /// The eviction policy.
     pub fn policy(&self) -> Policy {
         self.policy
     }
 
+    /// Entries drawn per eviction.
     pub fn sample_size(&self) -> usize {
         self.sample
+    }
+
+    /// Coarse wall-clock for expiry checks: 0 until any lifetime-carrying
+    /// put latched the flag (an unlatched cache holds only immortal
+    /// unit-weight entries, against which nothing ever expires).
+    #[inline]
+    fn lifetime_now(&self) -> u64 {
+        if self.lifetimed.load(Ordering::Relaxed) {
+            lifetime::now_ms()
+        } else {
+            0
+        }
     }
 }
 
 impl Cache for Sampled {
     fn get(&self, key: u64) -> Option<u64> {
         let now = self.clock.tick();
+        let now_ms = self.lifetime_now();
         let mut seg = self.segment(key).lock().unwrap();
         if let Some(&slot) = seg.index.get(&key) {
+            if lifetime::is_expired(seg.lives[slot], now_ms) {
+                // Expire-on-access: the lock makes reclamation exact.
+                seg.remove_at(slot);
+                return None;
+            }
             seg.metas[slot] = self.policy.on_hit_meta(seg.metas[slot], now);
             Some(seg.values[slot])
         } else {
@@ -122,22 +197,58 @@ impl Cache for Sampled {
     }
 
     fn put(&self, key: u64, value: u64) {
+        self.put_with(key, value, EntryOpts::default());
+    }
+
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        let budget = self.seg_capacity as u64;
+        if opts.weight as u64 > budget {
+            return; // heavier than a whole segment: can never fit
+        }
+        if !opts.is_plain() && !self.lifetimed.load(Ordering::Relaxed) {
+            self.lifetimed.store(true, Ordering::Relaxed);
+        }
         let now = self.clock.tick();
+        let now_ms = self.lifetime_now();
+        let life = lifetime::life_of(&opts, now_ms);
         let mut seg = self.segment(key).lock().unwrap();
         if let Some(&slot) = seg.index.get(&key) {
             seg.values[slot] = value;
+            seg.weight -= lifetime::weight_of(seg.lives[slot]);
+            seg.weight += lifetime::weight_of(life);
+            seg.lives[slot] = life;
             seg.metas[slot] = self.policy.on_hit_meta(seg.metas[slot], now);
-            return;
+        } else {
+            // Evict-then-insert on the count-full path — the pre-lifetime
+            // baseline semantics, so plain (no-TTL, unit-weight) workloads
+            // draw the exact same victims as before this dimension
+            // existed; the repair loop below only handles weight overflow.
+            if seg.keys.len() >= self.seg_capacity {
+                let victim = seg.sample_victim(self.policy, self.sample, now, now_ms, None);
+                if let Some(slot) = victim {
+                    seg.remove_at(slot);
+                }
+            }
+            let slot = seg.keys.len();
+            seg.keys.push(key);
+            seg.values.push(value);
+            seg.metas.push(self.policy.initial_meta(now));
+            seg.weight += lifetime::weight_of(life);
+            seg.lives.push(life);
+            seg.index.insert(key, slot);
         }
-        if seg.keys.len() >= self.seg_capacity {
-            let slot = seg.sample_victim(self.policy, self.sample, now);
-            seg.remove_at(slot);
+        // Weighted capacity: evict (expired lines first) until both the
+        // entry count and the weight sum fit the segment's share. The
+        // installed entry is spared so a legal insert never bounces
+        // itself; its slot can move when remove_at swap-removes, so it
+        // is re-resolved through the index every round.
+        while seg.keys.len() > self.seg_capacity || seg.weight > budget {
+            let exclude = seg.index.get(&key).copied();
+            match seg.sample_victim(self.policy, self.sample, now, now_ms, exclude) {
+                Some(slot) => seg.remove_at(slot),
+                None => break, // only the new entry remains
+            }
         }
-        let slot = seg.keys.len();
-        seg.keys.push(key);
-        seg.values.push(value);
-        seg.metas.push(self.policy.initial_meta(now));
-        seg.index.insert(key, slot);
     }
 
     fn capacity(&self) -> usize {
@@ -148,15 +259,51 @@ impl Cache for Sampled {
         self.segments.iter().map(|s| s.lock().unwrap().keys.len()).sum()
     }
 
+    fn weight(&self) -> u64 {
+        self.segments.iter().map(|s| s.lock().unwrap().weight).sum()
+    }
+
     fn name(&self) -> &'static str {
         "sampled"
     }
 
+    fn supports_lifetime(&self) -> bool {
+        true
+    }
+
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        if max_sets == 0 || !self.lifetimed.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let nsegs = self.segments.len();
+        let span = max_sets.min(nsegs);
+        let start = self.sweep_cursor.fetch_add(span, Ordering::Relaxed) % nsegs;
+        let now_ms = lifetime::now_ms();
+        let mut reclaimed = 0;
+        for j in 0..span {
+            let mut seg = self.segments[(start + j) % nsegs].lock().unwrap();
+            let mut slot = 0;
+            while slot < seg.keys.len() {
+                if lifetime::is_expired(seg.lives[slot], now_ms) {
+                    seg.remove_at(slot); // swap_remove: re-check this slot
+                    reclaimed += 1;
+                } else {
+                    slot += 1;
+                }
+            }
+        }
+        reclaimed
+    }
+
     fn peek_victim(&self, key: u64) -> Option<u64> {
         let now = self.clock.now();
+        let now_ms = self.lifetime_now();
         let mut seg = self.segment(key).lock().unwrap();
-        if seg.keys.len() >= self.seg_capacity {
-            let slot = seg.sample_victim(self.policy, self.sample, now);
+        if seg.keys.len() >= self.seg_capacity || seg.weight >= self.seg_capacity as u64 {
+            let slot = seg.sample_victim(self.policy, self.sample, now, now_ms, None)?;
+            if lifetime::is_expired(seg.lives[slot], now_ms) {
+                return None; // an expired line counts as free room
+            }
             Some(seg.keys[slot])
         } else {
             None
@@ -176,6 +323,7 @@ fn _assert_traits(s: &mut Sampled) {
 mod tests {
     use super::*;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn put_get_overwrite() {
@@ -209,6 +357,45 @@ mod tests {
         c.get(3);
         c.put(100, 100);
         assert_eq!(c.get(2), None, "exact-sample LRU must evict the oldest");
+    }
+
+    #[test]
+    fn expired_entries_are_misses_and_reclaimed() {
+        let c = Sampled::new(128, 8, Policy::Lru, 4);
+        c.put_with(1, 10, EntryOpts::ttl(Duration::ZERO));
+        c.put_with(2, 20, EntryOpts::ttl(Duration::from_secs(3600)));
+        assert_eq!(c.len(), 2, "lazy: the dead entry still occupies a slot");
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.len(), 1, "expire-on-access reclaims under the lock");
+        assert_eq!(c.get(2), Some(20));
+    }
+
+    #[test]
+    fn sweep_reclaims_expired_entries() {
+        let c = Sampled::new(128, 8, Policy::Lru, 4);
+        for k in 0..10u64 {
+            c.put_with(k, k, EntryOpts::ttl(Duration::ZERO));
+        }
+        for k in 10..20u64 {
+            c.put(k, k);
+        }
+        assert_eq!(c.sweep_expired(usize::MAX), 10);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.weight(), 10);
+    }
+
+    #[test]
+    fn weight_budget_is_exact_per_segment() {
+        // One segment, capacity 8 = weight budget 8.
+        let c = Sampled::new(8, 8, Policy::Lru, 1);
+        c.put_with(0, 0, EntryOpts::weight(5));
+        c.put_with(1, 1, EntryOpts::weight(3));
+        assert_eq!(c.weight(), 8);
+        c.put_with(2, 2, EntryOpts::weight(4)); // 12 > 8: must evict
+        assert!(c.weight() <= 8, "weight {} exceeds the budget", c.weight());
+        assert_eq!(c.get(2), Some(2), "the inserting key is spared");
+        c.put_with(9, 9, EntryOpts::weight(9));
+        assert_eq!(c.get(9), None, "oversized entries are dropped");
     }
 
     #[test]

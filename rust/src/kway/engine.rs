@@ -26,10 +26,11 @@
 
 use super::geometry::{Geometry, EMPTY, RESERVED};
 use super::with_thread_rng;
+use crate::lifetime::{self, EntryOpts};
 use crate::policy::Policy;
 use crate::util::clock::LogicalClock;
 use crate::util::hash;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// Upper bound on ways so victim scans can use stack buffers.
 pub(crate) const MAX_WAYS: usize = 128;
@@ -69,23 +70,98 @@ pub(crate) struct VictimChoice {
 
 /// Geometry + policy + logical clock — the state every variant shares —
 /// plus the probe / touch / victim logic over it.
+///
+/// The engine also owns the *lifetime activity flags*: whether any put so
+/// far carried a TTL or a non-unit weight. Until a flag flips, the
+/// corresponding checks (life-word loads on probes, weight-repair scans
+/// on puts) are skipped entirely, so a cache that never sees
+/// [`EntryOpts`] runs the exact pre-lifetime code path (DESIGN.md
+/// §Expiration: "bit-identical when no TTLs are set").
 pub(crate) struct SetEngine {
     geo: Geometry,
     policy: Policy,
     clock: LogicalClock,
+    /// Any put so far carried a TTL.
+    ttl_active: AtomicBool,
+    /// Any put so far carried a weight != 1.
+    weight_active: AtomicBool,
+    /// Rotating start position for the incremental expiry sweep.
+    sweep_cursor: AtomicUsize,
 }
 
 impl SetEngine {
+    /// An engine for (at least) `capacity` slots in sets of `ways`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
         assert!(ways <= MAX_WAYS, "ways must be <= {MAX_WAYS}");
-        Self { geo: Geometry::new(capacity, ways), policy, clock: LogicalClock::new() }
+        Self {
+            geo: Geometry::new(capacity, ways),
+            policy,
+            clock: LogicalClock::new(),
+            ttl_active: AtomicBool::new(false),
+            weight_active: AtomicBool::new(false),
+            sweep_cursor: AtomicUsize::new(0),
+        }
     }
 
+    /// Record which lifetime dimensions `opts` activates (latching —
+    /// once a cache has seen a TTL or a weight it keeps checking them).
+    #[inline]
+    pub fn note_opts(&self, opts: &EntryOpts) {
+        if opts.ttl.is_some() && !self.ttl_active.load(Ordering::Relaxed) {
+            self.ttl_active.store(true, Ordering::Relaxed);
+        }
+        if opts.weight != 1 && !self.weight_active.load(Ordering::Relaxed) {
+            self.weight_active.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Has any put carried a TTL? Gates every expiry check.
+    #[inline]
+    pub fn ttl_active(&self) -> bool {
+        self.ttl_active.load(Ordering::Relaxed)
+    }
+
+    /// Has any put carried a non-unit weight? Gates the weight repair.
+    #[inline]
+    pub fn weight_active(&self) -> bool {
+        self.weight_active.load(Ordering::Relaxed)
+    }
+
+    /// Per-set weight budget. Capacity is interpreted as the total
+    /// *weight* budget, so each set's share is its way count — with unit
+    /// weights the bound degenerates to "at most k entries", exactly the
+    /// pre-lifetime semantics (DESIGN.md §Weighted capacity).
+    #[inline]
+    pub fn set_budget(&self) -> u64 {
+        self.geo.ways() as u64
+    }
+
+    /// Coarse wall-clock for expiry checks: the shared millisecond clock
+    /// when TTLs are active, 0 (against which nothing is expired, since
+    /// every check is also gated on [`SetEngine::ttl_active`]) otherwise.
+    #[inline]
+    pub fn expiry_now(&self) -> u64 {
+        if self.ttl_active() {
+            lifetime::now_ms()
+        } else {
+            0
+        }
+    }
+
+    /// Hand out the rotating start set for an incremental sweep of
+    /// `max_sets` sets; consecutive calls cover the whole cache.
+    #[inline]
+    pub fn sweep_start(&self, max_sets: usize) -> usize {
+        self.sweep_cursor.fetch_add(max_sets, Ordering::Relaxed) % self.geo.num_sets()
+    }
+
+    /// The rounded geometry.
     #[inline]
     pub fn geometry(&self) -> Geometry {
         self.geo
     }
 
+    /// The eviction policy.
     #[inline]
     pub fn policy(&self) -> Policy {
         self.policy
@@ -119,15 +195,25 @@ impl SetEngine {
     /// a mid-replace (torn) read is detected and skipped. For KW-LS the
     /// re-validation is trivially true (the read lock excludes writers) and
     /// folds away after inlining.
+    ///
+    /// `expired` is the lazy-expiration filter: a way that matches but has
+    /// outlived its TTL is treated as a miss, so an expired key is never
+    /// returned. Variants gate the life-word load behind
+    /// [`SetEngine::ttl_active`] and pass `|_| false` until a TTL exists,
+    /// keeping the TTL-free probe identical to the pre-lifetime one.
     #[inline]
     pub fn probe_get(
         &self,
         k: usize,
         matches: impl Fn(usize) -> bool,
+        expired: impl Fn(usize) -> bool,
         read_value: impl Fn(usize) -> u64,
     ) -> Option<(usize, u64)> {
         for i in 0..k {
             if matches(i) {
+                if expired(i) {
+                    continue;
+                }
                 let value = read_value(i);
                 if matches(i) {
                     return Some((i, value));
@@ -191,21 +277,28 @@ impl SetEngine {
         with_thread_rng(|rng| self.policy.select_victim(metas, now, rng))
     }
 
-    /// Snapshot a full set through `snap` — per way, the claim-guard word
-    /// and the metadata — and pick the policy victim. Variants report a
-    /// way that must not be chosen (mid-publish) by returning `u64::MAX`
-    /// metadata, which only loses to other `u64::MAX` ways.
+    /// Snapshot a full set through `snap` — per way, the claim-guard word,
+    /// the metadata and whether the way holds an *expired* entry — and
+    /// pick the victim. An expired line is the victim of first resort
+    /// (reclaiming it costs the hit ratio nothing — lazy expiration,
+    /// DESIGN.md §Expiration); otherwise the policy chooses. Variants
+    /// report a way that must not be chosen (mid-publish) by returning
+    /// `u64::MAX` metadata, which only loses to other `u64::MAX` ways and
+    /// disables the expired shortcut for that way.
     #[inline]
     pub fn choose_victim(
         &self,
         k: usize,
         now: u64,
-        snap: impl Fn(usize) -> (u64, u64),
+        snap: impl Fn(usize) -> (u64, u64, bool),
     ) -> VictimChoice {
         let mut guards = [0u64; MAX_WAYS];
         let mut metas = [u64::MAX; MAX_WAYS];
         for i in 0..k {
-            let (guard, meta) = snap(i);
+            let (guard, meta, expired) = snap(i);
+            if expired && meta != u64::MAX {
+                return VictimChoice { way: i, guard };
+            }
             guards[i] = guard;
             metas[i] = meta;
         }
@@ -216,8 +309,10 @@ impl SetEngine {
     /// Shared `peek_victim` (the advisory preview used by TinyLFU
     /// admission). `load_key` must yield the *effective* key word of a
     /// way: [`EMPTY`] when the way is free, [`RESERVED`] when it is
-    /// mid-publish, the encoded key otherwise. Returns `None` when the set
-    /// still has room (no eviction needed) or the victim is mid-publish.
+    /// mid-publish, the encoded key otherwise; `load_life` the way's life
+    /// word (only consulted while TTLs are active). Returns `None` when
+    /// the set still has room (no eviction needed) or the victim is
+    /// mid-publish.
     ///
     /// The victim-preview **contract** every variant upholds (pinned by
     /// `rust/tests/peek_victim.rs` and relied on by
@@ -226,7 +321,8 @@ impl SetEngine {
     /// * a returned key was resident in the probed key's set at snapshot
     ///   time — never a sentinel, never a made-up key;
     /// * `None` ⇒ the insert needs no eviction *or* the set is mid-churn
-    ///   (callers must treat `None` as "admit");
+    ///   (callers must treat `None` as "admit") — an *expired* resident
+    ///   line counts as free room, since displacing it costs nothing;
     /// * under concurrency the preview is *advisory*: the put that follows
     ///   may evict a different way. Admission is a probabilistic filter,
     ///   so acting on a stale preview mis-scores at most one insert —
@@ -236,14 +332,20 @@ impl SetEngine {
         k: usize,
         load_key: impl Fn(usize) -> u64,
         load_meta: impl Fn(usize) -> u64,
+        load_life: impl Fn(usize) -> u64,
     ) -> Option<u64> {
         let now = self.now();
+        let ttl_active = self.ttl_active();
+        let now_ms = self.expiry_now();
         let mut keys = [0u64; MAX_WAYS];
         let mut metas = [0u64; MAX_WAYS];
         for i in 0..k {
             keys[i] = load_key(i);
             if keys[i] == EMPTY {
                 return None; // room available, no eviction needed
+            }
+            if keys[i] != RESERVED && ttl_active && lifetime::is_expired(load_life(i), now_ms) {
+                return None; // expired line: the insert evicts a dead entry
             }
             metas[i] = if keys[i] == RESERVED { u64::MAX } else { load_meta(i) };
         }
@@ -333,12 +435,16 @@ mod tests {
                     false
                 }
             },
+            |_| false,
             |_| 42,
         );
         assert_eq!(hit, None);
         // A stable match is returned with its way index.
-        let hit = e.probe_get(4, |i| i == 2, |i| (i as u64) * 10);
+        let hit = e.probe_get(4, |i| i == 2, |_| false, |i| (i as u64) * 10);
         assert_eq!(hit, Some((2, 20)));
+        // An expired match is a miss, even though the key matches.
+        let hit = e.probe_get(4, |i| i == 2, |i| i == 2, |i| (i as u64) * 10);
+        assert_eq!(hit, None);
     }
 
     #[test]
@@ -346,22 +452,68 @@ mod tests {
         let e = engine(64, 4, Policy::Lru);
         let metas = [5u64, u64::MAX, 3, 9];
         let guards = [100u64, 101, 102, 103];
-        let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i]));
+        let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i], false));
         assert_eq!(choice.way, 2);
         assert_eq!(choice.guard, 102);
     }
 
     #[test]
+    fn choose_victim_prefers_expired_lines() {
+        let e = engine(64, 4, Policy::Lru);
+        let metas = [5u64, 7, 3, 9];
+        let guards = [100u64, 101, 102, 103];
+        // Way 3 is expired: it wins over the LRU minimum (way 2).
+        let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i], i == 3));
+        assert_eq!(choice.way, 3);
+        assert_eq!(choice.guard, 103);
+        // A mid-publish way (meta MAX) is never taken via the expired
+        // shortcut.
+        let metas = [5u64, u64::MAX, 3, 9];
+        let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i], i == 1));
+        assert_eq!(choice.way, 2);
+    }
+
+    #[test]
+    fn lifetime_flags_latch_and_gate() {
+        use crate::lifetime::EntryOpts;
+        use std::time::Duration;
+        let e = engine(64, 4, Policy::Lru);
+        assert!(!e.ttl_active());
+        assert!(!e.weight_active());
+        assert_eq!(e.expiry_now(), 0, "TTL-free caches never read the clock");
+        e.note_opts(&EntryOpts::default());
+        assert!(!e.ttl_active() && !e.weight_active(), "plain opts must not latch");
+        e.note_opts(&EntryOpts::ttl(Duration::from_millis(1)));
+        assert!(e.ttl_active());
+        e.note_opts(&EntryOpts::weight(3));
+        assert!(e.weight_active());
+        assert_eq!(e.set_budget(), 4);
+    }
+
+    #[test]
+    fn sweep_start_rotates_over_all_sets() {
+        let e = engine(64, 4, Policy::Lru); // 16 sets
+        let n = e.geometry().num_sets();
+        let mut covered = vec![false; n];
+        for _ in 0..n {
+            let start = e.sweep_start(1);
+            covered[start] = true;
+        }
+        assert!(covered.iter().all(|&c| c), "cursor must cover every set");
+    }
+
+    #[test]
     fn peek_victim_with_contract() {
         let e = engine(64, 4, Policy::Lru);
+        let immortal = crate::lifetime::immortal_unit();
         // Any empty way -> no eviction needed.
         let keys =
             [Geometry::encode_key(1), EMPTY, Geometry::encode_key(3), Geometry::encode_key(4)];
-        assert_eq!(e.peek_victim_with(4, |i| keys[i], |_| 0), None);
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |_| 0, |_| immortal), None);
         // Full set -> the policy minimum's decoded key.
         let keys = [10u64, 11, 12, 13].map(Geometry::encode_key);
         let metas = [50u64, 10, 90, 30];
-        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(11));
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i], |_| immortal), Some(11));
         // Mid-publish victim -> None.
         let keys = [
             Geometry::encode_key(10),
@@ -371,7 +523,26 @@ mod tests {
         ];
         let metas = [50u64, 0, 90, 30];
         // RESERVED way is masked to u64::MAX, so the victim is way 3 (30).
-        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i]), Some(13));
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i], |_| immortal), Some(13));
+    }
+
+    #[test]
+    fn peek_victim_treats_expired_lines_as_free_room() {
+        use crate::lifetime::{life_of, EntryOpts};
+        use std::time::Duration;
+        let e = engine(64, 4, Policy::Lru);
+        e.note_opts(&EntryOpts::ttl(Duration::ZERO)); // activate TTLs
+        let keys = [10u64, 11, 12, 13].map(Geometry::encode_key);
+        let metas = [50u64, 10, 90, 30];
+        let now = crate::lifetime::now_ms();
+        let dead = life_of(&EntryOpts::ttl(Duration::ZERO), now);
+        let live = life_of(&EntryOpts::default(), now);
+        // Way 2 is expired: the preview reports "no live victim needed".
+        let lives = [live, live, dead, live];
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i], |i| lives[i]), None);
+        // All live: back to the policy minimum.
+        let lives = [live; 4];
+        assert_eq!(e.peek_victim_with(4, |i| keys[i], |i| metas[i], |i| lives[i]), Some(11));
     }
 
     #[test]

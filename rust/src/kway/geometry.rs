@@ -32,11 +32,13 @@ impl Geometry {
         Self { num_sets, ways }
     }
 
+    /// Number of sets (always a power of two).
     #[inline]
     pub fn num_sets(&self) -> usize {
         self.num_sets
     }
 
+    /// Ways (entries) per set.
     #[inline]
     pub fn ways(&self) -> usize {
         self.ways

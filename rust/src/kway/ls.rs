@@ -13,22 +13,29 @@
 //! they are logically — the paper's independence argument made physical.
 //!
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
-//! only the locked plain storage and the upgrade protocol.
+//! only the locked plain storage and the upgrade protocol. Because every
+//! mutation happens under the write lock, KW-LS is the *exact* member of
+//! the family for the lifetime dimension: expired entries probe as misses
+//! and are reclaimed in place, and the per-set weight budget is enforced
+//! precisely on every insert (DESIGN.md §Expiration, §Weighted capacity).
 
-use super::engine::{self, PreparedKey, SetEngine};
+use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY};
 use super::stamped::StampedLock;
+use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
 
-/// One entry: encoded key word (0 = empty), value, policy metadata.
+/// One entry: encoded key word (0 = empty), value, policy metadata and
+/// the packed (weight, expiry) life word.
 #[derive(Clone, Copy, Default)]
 struct Entry {
     key: u64,
     value: u64,
     meta: u64,
+    life: u64,
 }
 
 /// A set: lock + plain storage.
@@ -58,6 +65,8 @@ pub struct KwLs {
 }
 
 impl KwLs {
+    /// Build a cache of (at least) `capacity` weight units in sets of
+    /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
         let engine = SetEngine::new(capacity, ways, policy);
         let sets = (0..engine.geometry().num_sets())
@@ -66,18 +75,42 @@ impl KwLs {
         Self { engine, sets }
     }
 
+    /// The rounded geometry this cache runs with.
     pub fn geometry(&self) -> Geometry {
         self.engine.geometry()
     }
 
+    /// The eviction policy.
     pub fn policy(&self) -> Policy {
         self.engine.policy()
+    }
+
+    /// Largest per-set total weight currently held. Diagnostic for the
+    /// weighted-capacity tests; for KW-LS the bound is exact (every
+    /// mutation holds the write lock).
+    pub fn max_set_weight(&self) -> u64 {
+        let mut max = 0u64;
+        for set in self.sets.iter() {
+            set.lock.read_lock();
+            // SAFETY: read lock held.
+            let entries = unsafe { &*set.entries.get() };
+            let w: u64 = entries
+                .iter()
+                .filter(|e| e.key != EMPTY)
+                .map(|e| lifetime::weight_of(e.life))
+                .sum();
+            set.lock.unlock_read();
+            max = max.max(w);
+        }
+        max
     }
 
     /// `get` with the hashing already done (shared by the scalar and
     /// batched paths).
     fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
         let now = self.engine.tick();
+        let ttl_active = self.engine.ttl_active();
+        let now_ms = self.engine.expiry_now();
         let set = &self.sets[pk.set];
         set.lock.read_lock();
         // SAFETY: read lock held.
@@ -85,6 +118,7 @@ impl KwLs {
         let hit = self.engine.probe_get(
             entries.len(),
             |i| entries[i].key == pk.ik,
+            |i| ttl_active && lifetime::is_expired(entries[i].life, now_ms),
             |i| entries[i].value,
         );
         match hit {
@@ -113,20 +147,30 @@ impl KwLs {
     }
 
     /// `put` with the hashing already done.
-    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
+        self.engine.note_opts(&opts);
+        if opts.weight as u64 > self.engine.set_budget() {
+            return; // heavier than a whole set: can never fit, dropped
+        }
         let now = self.engine.tick();
+        let now_ms = self.engine.expiry_now();
+        let life = lifetime::life_of(&opts, now_ms);
+        let ttl_active = self.engine.ttl_active();
         let set = &self.sets[pk.set];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
 
-        // Pass 1 (Alg. 9 lines 4–13): overwrite an existing entry.
+        // Pass 1 (Alg. 9 lines 4–13): overwrite an existing entry (and
+        // refresh its life word — an overwrite restarts the TTL).
         if let Some(i) = self.engine.find_match(entries.len(), |i| entries[i].key == pk.ik) {
             if set.lock.try_convert_to_write() {
                 // SAFETY: write lock held.
                 let entries = unsafe { &mut *set.entries.get() };
                 entries[i].value = value;
+                entries[i].life = life;
                 self.engine.touch_plain(&mut entries[i].meta, now);
+                Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
                 set.lock.unlock_write();
             } else {
                 // Paper: give up when the upgrade fails.
@@ -136,7 +180,8 @@ impl KwLs {
         }
 
         // Miss path (Alg. 9 lines 15–27): upgrade, then fill an empty way
-        // or replace the policy victim.
+        // or replace the victim (an expired line first, the policy choice
+        // otherwise).
         if !set.lock.try_convert_to_write() {
             set.lock.unlock_read();
             return;
@@ -147,12 +192,64 @@ impl KwLs {
             Some(i) => i,
             None => {
                 self.engine
-                    .choose_victim(entries.len(), now, |i| (entries[i].key, entries[i].meta))
+                    .choose_victim(entries.len(), now, |i| {
+                        let expired = ttl_active && lifetime::is_expired(entries[i].life, now_ms);
+                        (entries[i].key, entries[i].meta, expired)
+                    })
                     .way
             }
         };
-        entries[target] = Entry { key: pk.ik, value, meta: self.engine.initial_meta(now) };
+        entries[target] = Entry { key: pk.ik, value, meta: self.engine.initial_meta(now), life };
+        Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
         set.lock.unlock_write();
+    }
+
+    /// Exact weighted-capacity repair, run under the write lock: evict
+    /// victims (expired lines first, the policy choice otherwise, sparing
+    /// `keep`) until the set's total weight fits the budget.
+    fn repair_weight_locked(
+        engine: &SetEngine,
+        entries: &mut [Entry],
+        keep: u64,
+        now: u64,
+        now_ms: u64,
+    ) {
+        if !engine.weight_active() {
+            return;
+        }
+        let budget = engine.set_budget();
+        let ttl_active = engine.ttl_active();
+        loop {
+            let total: u64 = entries
+                .iter()
+                .filter(|e| e.key != EMPTY)
+                .map(|e| lifetime::weight_of(e.life))
+                .sum();
+            if total <= budget {
+                return;
+            }
+            let mut eligible = [0usize; MAX_WAYS];
+            let mut metas = [0u64; MAX_WAYS];
+            let mut n = 0usize;
+            let mut victim: Option<usize> = None;
+            for (i, e) in entries.iter().enumerate() {
+                if e.key == EMPTY || e.key == keep {
+                    continue;
+                }
+                if victim.is_none() && ttl_active && lifetime::is_expired(e.life, now_ms) {
+                    victim = Some(i);
+                }
+                eligible[n] = i;
+                metas[n] = e.meta;
+                n += 1;
+            }
+            let target = match victim {
+                Some(i) => i,
+                None if n > 0 => eligible[engine.select_victim(&metas[..n], now)],
+                None => return, // only the spared entry remains
+            };
+            entries[target] = Entry::default();
+        }
     }
 }
 
@@ -162,7 +259,11 @@ impl Cache for KwLs {
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value)
+        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+    }
+
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        self.put_prepared(self.engine.prepare(key), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -188,7 +289,19 @@ impl Cache for KwLs {
                 let header: &LsSet = &self.sets[set];
                 engine::prefetch_read(header);
             },
-            |pk, item| self.put_prepared(pk, item.1),
+            |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
+        );
+    }
+
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        self.engine.for_batch(
+            items,
+            |item| item.key,
+            |set| {
+                let header: &LsSet = &self.sets[set];
+                engine::prefetch_read(header);
+            },
+            |pk, item| self.put_prepared(pk, item.value, item.opts),
         );
     }
 
@@ -208,8 +321,62 @@ impl Cache for KwLs {
         n
     }
 
+    fn weight(&self) -> u64 {
+        if !self.engine.weight_active() {
+            return self.len() as u64;
+        }
+        let mut total = 0u64;
+        for set in self.sets.iter() {
+            set.lock.read_lock();
+            // SAFETY: read lock held.
+            let entries = unsafe { &*set.entries.get() };
+            total += entries
+                .iter()
+                .filter(|e| e.key != EMPTY)
+                .map(|e| lifetime::weight_of(e.life))
+                .sum::<u64>();
+            set.lock.unlock_read();
+        }
+        total
+    }
+
     fn name(&self) -> &'static str {
         "KW-LS"
+    }
+
+    fn supports_lifetime(&self) -> bool {
+        true
+    }
+
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        if max_sets == 0 || !self.engine.ttl_active() {
+            return 0;
+        }
+        let num_sets = self.engine.geometry().num_sets();
+        let span = max_sets.min(num_sets);
+        let start = self.engine.sweep_start(span);
+        let now_ms = lifetime::now_ms();
+        let mut reclaimed = 0;
+        for j in 0..span {
+            let set = &self.sets[(start + j) % num_sets];
+            set.lock.read_lock();
+            // Like every KW-LS mutation: upgrade or give up (the next
+            // sweep pass will revisit this set).
+            if !set.lock.try_convert_to_write() {
+                set.lock.unlock_read();
+                continue;
+            }
+            // SAFETY: write lock held.
+            let entries = unsafe { &mut *set.entries.get() };
+            for e in entries.iter_mut() {
+                if e.key != EMPTY && lifetime::is_expired(e.life, now_ms) {
+                    *e = Entry::default();
+                    reclaimed += 1;
+                }
+            }
+            set.lock.unlock_write();
+        }
+        reclaimed
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
@@ -221,6 +388,7 @@ impl Cache for KwLs {
             entries.len(),
             |i| entries[i].key,
             |i| entries[i].meta,
+            |i| entries[i].life,
         );
         set.lock.unlock_read();
         result
@@ -232,6 +400,7 @@ mod tests {
     use super::*;
     use crate::util::check::check;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn put_get_overwrite() {
@@ -304,6 +473,55 @@ mod tests {
         for &(k, v) in &items {
             assert_eq!(c.get(k), Some(v), "key {k}");
         }
+    }
+
+    #[test]
+    fn expired_entries_probe_as_misses() {
+        let c = KwLs::new(64, 4, Policy::Lru);
+        c.put_with(1, 10, EntryOpts::ttl(Duration::ZERO));
+        assert_eq!(c.get(1), None);
+        c.put_with(2, 20, EntryOpts::ttl(Duration::from_secs(3600)));
+        assert_eq!(c.get(2), Some(20));
+    }
+
+    #[test]
+    fn expired_line_is_victim_of_first_resort() {
+        let c = KwLs::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::ttl(Duration::ZERO));
+        for key in 1..4u64 {
+            c.put(key, key);
+        }
+        c.put(100, 100);
+        for key in 1..4u64 {
+            assert_eq!(c.get(key), Some(key), "immortal {key} must survive");
+        }
+        assert_eq!(c.get(100), Some(100));
+    }
+
+    #[test]
+    fn weight_budget_is_exact_under_the_lock() {
+        let c = KwLs::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::weight(3));
+        c.put(1, 1);
+        assert_eq!(c.max_set_weight(), 4);
+        c.put(2, 2); // 3+1+1 > 4: repair must evict on insert
+        assert!(c.max_set_weight() <= 4);
+        assert_eq!(c.get(2), Some(2), "the inserting key is spared");
+        c.put_with(9, 9, EntryOpts::weight(5));
+        assert_eq!(c.get(9), None, "oversized entries are dropped");
+    }
+
+    #[test]
+    fn sweep_reclaims_expired_lines() {
+        let c = KwLs::new(4096, 8, Policy::Lru);
+        for key in 0..10u64 {
+            c.put_with(key, key, EntryOpts::ttl(Duration::ZERO));
+        }
+        for key in 10..20u64 {
+            c.put(key, key);
+        }
+        assert_eq!(c.sweep_expired(c.geometry().num_sets()), 10);
+        assert_eq!(c.len(), 10);
     }
 
     #[test]

@@ -46,14 +46,19 @@ use crate::Cache;
 /// Which concurrent implementation to construct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Variant {
+    /// [`KwWfa`] — wait-free array-of-structs.
     Wfa,
+    /// [`KwWfsc`] — wait-free structure-of-arrays with separate counters.
     Wfsc,
+    /// [`KwLs`] — lock-per-set with plain storage.
     Ls,
 }
 
 impl Variant {
+    /// All variants, for sweeps.
     pub const ALL: [Variant; 3] = [Variant::Wfa, Variant::Wfsc, Variant::Ls];
 
+    /// Parse from a CLI string.
     pub fn parse(s: &str) -> Option<Variant> {
         match s.to_ascii_lowercase().as_str() {
             "wfa" | "kw-wfa" => Some(Variant::Wfa),
@@ -63,6 +68,7 @@ impl Variant {
         }
     }
 
+    /// Canonical implementation label (inverse of [`Variant::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Variant::Wfa => "KW-WFA",

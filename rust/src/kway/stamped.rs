@@ -17,6 +17,7 @@ pub struct StampedLock {
 }
 
 impl StampedLock {
+    /// A fresh unlocked lock.
     pub fn new() -> Self {
         Self { state: AtomicU64::new(0) }
     }

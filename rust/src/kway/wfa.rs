@@ -1,25 +1,31 @@
 //! KW-WFA — K-Way cache, Wait-Free Array (paper Algorithms 1–3).
 //!
-//! Array-of-structs: each way is a `Way { key, value, meta }` triple of
-//! atomic words. The paper's Java version holds an
+//! Array-of-structs: each way is a `Way { key, value, meta, life }`
+//! quadruple of atomic words. The paper's Java version holds an
 //! `AtomicReferenceArray<Node>` and swaps whole nodes with one CAS, leaning
 //! on the GC to reclaim the replaced node. Rust has no GC, so a way is
-//! *claimed* by CASing its key word to a `RESERVED` sentinel, the value and
-//! metadata words are published, and the key word is released last; readers
-//! re-validate the key word after reading the value so a torn (mid-replace)
-//! read is detected and skipped. Every operation is a bounded number of
-//! steps — no locks, no retry loops.
+//! *claimed* by CASing its key word to a `RESERVED` sentinel, the value,
+//! metadata and life words are published, and the key word is released
+//! last; readers re-validate the key word after reading the value so a
+//! torn (mid-replace) read is detected and skipped. Every operation is a
+//! bounded number of steps — no locks, no retry loops.
 //!
 //! The AoS layout is deliberate: scanning the set strides over the ways'
-//! key words (24-byte stride), reproducing the scattered-reads behaviour
+//! key words (32-byte stride), reproducing the scattered-reads behaviour
 //! the paper attributes to WFA when comparing it against WFSC's contiguous
 //! fingerprint array.
 //!
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
-//! only the AoS storage and the CAS claim/publish protocol.
+//! only the AoS storage and the CAS claim/publish protocol — including
+//! the lifetime dimension: the `life` word packs the expiry deadline and
+//! the weight, expired lines probe as misses and are the victims of
+//! first resort, and the per-set weight budget is repaired after every
+//! insert while weights are in play (DESIGN.md §Expiration, §Weighted
+//! capacity).
 
-use super::engine::{self, PreparedKey, SetEngine};
+use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
+use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +34,9 @@ struct Way {
     key: AtomicU64,
     value: AtomicU64,
     meta: AtomicU64,
+    /// Packed (weight, expiry) life word; published under the same
+    /// claim/publish protocol as the value.
+    life: AtomicU64,
 }
 
 impl Way {
@@ -36,6 +45,7 @@ impl Way {
             key: AtomicU64::new(EMPTY),
             value: AtomicU64::new(0),
             meta: AtomicU64::new(0),
+            life: AtomicU64::new(0),
         }
     }
 }
@@ -47,18 +57,43 @@ pub struct KwWfa {
 }
 
 impl KwWfa {
+    /// Build a cache of (at least) `capacity` weight units in sets of
+    /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
         let engine = SetEngine::new(capacity, ways, policy);
         let slots = (0..engine.geometry().capacity()).map(|_| Way::new()).collect();
         Self { engine, ways: slots }
     }
 
+    /// The rounded geometry this cache runs with.
     pub fn geometry(&self) -> Geometry {
         self.engine.geometry()
     }
 
+    /// The eviction policy.
     pub fn policy(&self) -> Policy {
         self.engine.policy()
+    }
+
+    /// Largest per-set total weight currently held. Diagnostic for the
+    /// weighted-capacity tests: after churn quiesces this never exceeds
+    /// the per-set budget (= `ways`).
+    pub fn max_set_weight(&self) -> u64 {
+        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).max().unwrap_or(0)
+    }
+
+    fn set_weight(&self, set: usize) -> u64 {
+        self.set_ways(set)
+            .iter()
+            .map(|w| {
+                let key = w.key.load(Ordering::Acquire);
+                if key == EMPTY || key == RESERVED {
+                    0
+                } else {
+                    lifetime::weight_of(w.life.load(Ordering::Relaxed))
+                }
+            })
+            .sum()
     }
 
     #[inline]
@@ -66,8 +101,9 @@ impl KwWfa {
         &self.ways[self.engine.geometry().slots_of(set)]
     }
 
-    /// Prefetch the lines a set scan strides over: a `Way` is 24 bytes, so
-    /// an 8-way set spans three cache lines (first / middle / last way).
+    /// Prefetch the lines a set scan strides over: a `Way` is 32 bytes, so
+    /// an 8-way set spans four cache lines (prefetch first / middle /
+    /// last way).
     #[inline]
     fn prefetch_set(&self, set: usize, ways: usize) {
         let base = set * ways;
@@ -81,10 +117,13 @@ impl KwWfa {
     #[inline]
     fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
         let now = self.engine.tick();
+        let ttl_active = self.engine.ttl_active();
+        let now_ms = self.engine.expiry_now();
         let set = self.set_ways(pk.set);
         let (way, value) = self.engine.probe_get(
             set.len(),
             |i| set[i].key.load(Ordering::Acquire) == pk.ik,
+            |i| ttl_active && lifetime::is_expired(set[i].life.load(Ordering::Relaxed), now_ms),
             |i| set[i].value.load(Ordering::Acquire),
         )?;
         self.engine.touch_atomic(&set[way].meta, now);
@@ -92,17 +131,29 @@ impl KwWfa {
     }
 
     /// `put` with the hashing already done.
-    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
+        self.engine.note_opts(&opts);
+        if opts.weight as u64 > self.engine.set_budget() {
+            // Heavier than a whole set's budget: can never fit, dropped
+            // ("it is a cache" — same as an insert lost to contention).
+            return;
+        }
         let now = self.engine.tick();
+        let now_ms = self.engine.expiry_now();
+        let life = lifetime::life_of(&opts, now_ms);
+        let ttl_active = self.engine.ttl_active();
         let set = self.set_ways(pk.set);
 
-        // Pass 1 (Alg. 3 lines 3–6): overwrite an existing entry.
+        // Pass 1 (Alg. 3 lines 3–6): overwrite an existing entry. The
+        // life word is refreshed too: an overwrite restarts the TTL.
         if let Some(i) = self
             .engine
             .find_match(set.len(), |i| set[i].key.load(Ordering::Acquire) == pk.ik)
         {
             set[i].value.store(value, Ordering::Release);
+            set[i].life.store(life, Ordering::Release);
             self.engine.touch_atomic(&set[i].meta, now);
+            self.repair_weight(pk);
             return;
         }
 
@@ -116,24 +167,28 @@ impl KwWfa {
             {
                 way.value.store(value, Ordering::Release);
                 way.meta.store(self.engine.initial_meta(now), Ordering::Release);
+                way.life.store(life, Ordering::Release);
                 way.key.store(pk.ik, Ordering::Release);
+                self.repair_weight(pk);
                 return;
             }
         }
 
-        // Pass 3 (Alg. 3 lines 7–11): evict the policy victim. Snapshot the
-        // set, pick the victim, then try to claim it with a single CAS. If
-        // the CAS fails, another thread is mutating this way concurrently —
-        // like the paper's WFA we simply give up (the cache is allowed to
-        // drop an insert under contention; it is a cache).
+        // Pass 3 (Alg. 3 lines 7–11): evict the victim — an expired line
+        // first, the policy choice otherwise. Snapshot the set, pick, then
+        // try to claim with a single CAS. If the CAS fails, another thread
+        // is mutating this way concurrently — like the paper's WFA we
+        // simply give up (the cache is allowed to drop an insert under
+        // contention; it is a cache).
         let choice = self.engine.choose_victim(set.len(), now, |i| {
             let key = set[i].key.load(Ordering::Acquire);
-            let meta = if key == RESERVED {
-                u64::MAX // mid-publish way: never pick it as the victim
+            if key == RESERVED {
+                (key, u64::MAX, false) // mid-publish way: never the victim
             } else {
-                set[i].meta.load(Ordering::Relaxed)
-            };
-            (key, meta)
+                let expired = ttl_active
+                    && lifetime::is_expired(set[i].life.load(Ordering::Relaxed), now_ms);
+                (key, set[i].meta.load(Ordering::Relaxed), expired)
+            }
         });
         if choice.guard == RESERVED {
             return;
@@ -146,7 +201,78 @@ impl KwWfa {
         {
             way.value.store(value, Ordering::Release);
             way.meta.store(self.engine.initial_meta(now), Ordering::Release);
+            way.life.store(life, Ordering::Release);
             way.key.store(pk.ik, Ordering::Release);
+        }
+        self.repair_weight(pk);
+    }
+
+    /// Weighted-capacity repair (DESIGN.md §Weighted capacity): while the
+    /// set's total weight exceeds its budget, evict victims — expired
+    /// lines first, the policy choice otherwise — sparing the key just
+    /// inserted so a legal oversized insert cannot bounce itself. A
+    /// no-op until any put carries a non-unit weight; bounded by k
+    /// passes, each freeing one way with a single CAS (a failed CAS
+    /// means concurrent churn — the racing put's own repair finishes the
+    /// job).
+    fn repair_weight(&self, pk: PreparedKey) {
+        if !self.engine.weight_active() {
+            return;
+        }
+        // Make this thread's publish globally visible before snapshotting
+        // the set: whichever racing put finishes *last* then observes
+        // every earlier insert, so the quiesced set always fits its
+        // budget (transient overshoot during the race is the usual "it
+        // is a cache" window).
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let set = self.set_ways(pk.set);
+        let budget = self.engine.set_budget();
+        let ttl_active = self.engine.ttl_active();
+        let k = set.len();
+        for _ in 0..k {
+            let now = self.engine.now();
+            let now_ms = self.engine.expiry_now();
+            let mut total = 0u64;
+            let mut eligible = [0usize; MAX_WAYS];
+            let mut metas = [0u64; MAX_WAYS];
+            let mut guards = [0u64; MAX_WAYS];
+            let mut n = 0usize;
+            let mut expired_pick: Option<(usize, u64)> = None;
+            for (i, way) in set.iter().enumerate() {
+                let key = way.key.load(Ordering::Acquire);
+                if key == EMPTY || key == RESERVED {
+                    continue;
+                }
+                let life = way.life.load(Ordering::Relaxed);
+                total += lifetime::weight_of(life);
+                if key == pk.ik {
+                    continue; // spare the entry this put installed
+                }
+                if expired_pick.is_none() && ttl_active && lifetime::is_expired(life, now_ms) {
+                    expired_pick = Some((i, key));
+                }
+                eligible[n] = i;
+                guards[n] = key;
+                metas[n] = way.meta.load(Ordering::Relaxed);
+                n += 1;
+            }
+            if total <= budget {
+                return;
+            }
+            let (way, guard) = match expired_pick {
+                Some(pick) => pick,
+                None if n > 0 => {
+                    let j = self.engine.select_victim(&metas[..n], now);
+                    (eligible[j], guards[j])
+                }
+                None => return, // nothing evictable besides the new entry
+            };
+            let _ = set[way].key.compare_exchange(
+                guard,
+                EMPTY,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
         }
     }
 }
@@ -157,7 +283,11 @@ impl Cache for KwWfa {
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value)
+        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+    }
+
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        self.put_prepared(self.engine.prepare(key), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -177,7 +307,17 @@ impl Cache for KwWfa {
             items,
             |item| item.0,
             |set| self.prefetch_set(set, ways),
-            |pk, item| self.put_prepared(pk, item.1),
+            |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
+        );
+    }
+
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            items,
+            |item| item.key,
+            |set| self.prefetch_set(set, ways),
+            |pk, item| self.put_prepared(pk, item.value, item.opts),
         );
     }
 
@@ -195,8 +335,47 @@ impl Cache for KwWfa {
             .count()
     }
 
+    fn weight(&self) -> u64 {
+        if !self.engine.weight_active() {
+            return self.len() as u64;
+        }
+        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).sum()
+    }
+
     fn name(&self) -> &'static str {
         "KW-WFA"
+    }
+
+    fn supports_lifetime(&self) -> bool {
+        true
+    }
+
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        if max_sets == 0 || !self.engine.ttl_active() {
+            return 0;
+        }
+        let num_sets = self.engine.geometry().num_sets();
+        let span = max_sets.min(num_sets);
+        let start = self.engine.sweep_start(span);
+        let now_ms = lifetime::now_ms();
+        let mut reclaimed = 0;
+        for j in 0..span {
+            for way in self.set_ways((start + j) % num_sets) {
+                let key = way.key.load(Ordering::Acquire);
+                if key == EMPTY || key == RESERVED {
+                    continue;
+                }
+                if lifetime::is_expired(way.life.load(Ordering::Relaxed), now_ms)
+                    && way
+                        .key
+                        .compare_exchange(key, EMPTY, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok()
+                {
+                    reclaimed += 1;
+                }
+            }
+        }
+        reclaimed
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
@@ -205,6 +384,7 @@ impl Cache for KwWfa {
             set.len(),
             |i| set[i].key.load(Ordering::Acquire),
             |i| set[i].meta.load(Ordering::Relaxed),
+            |i| set[i].life.load(Ordering::Relaxed),
         )
     }
 }
@@ -214,6 +394,7 @@ mod tests {
     use super::*;
     use crate::util::check::check;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn put_get_overwrite() {
@@ -306,6 +487,81 @@ mod tests {
         c.put_batch(&items);
         for &(k, v) in &items {
             assert_eq!(c.get(k), Some(v), "key {k}");
+        }
+    }
+
+    #[test]
+    fn expired_entries_probe_as_misses() {
+        let c = KwWfa::new(64, 4, Policy::Lru);
+        c.put_with(1, 10, EntryOpts::ttl(Duration::ZERO));
+        assert_eq!(c.get(1), None, "a zero-TTL entry is born expired");
+        c.put_with(2, 20, EntryOpts::ttl(Duration::from_secs(3600)));
+        assert_eq!(c.get(2), Some(20), "a live TTL entry is readable");
+        // Overwriting an expired key revives it.
+        c.put(1, 11);
+        assert_eq!(c.get(1), Some(11));
+    }
+
+    #[test]
+    fn expired_line_is_victim_of_first_resort() {
+        // Single set, LRU. Fill with 3 immortals + 1 expired; the next
+        // insert must displace the expired line, not the LRU minimum.
+        let c = KwWfa::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::ttl(Duration::ZERO));
+        for key in 1..4u64 {
+            c.put(key, key);
+        }
+        c.put(100, 100);
+        for key in 1..4u64 {
+            assert_eq!(c.get(key), Some(key), "immortal {key} must survive");
+        }
+        assert_eq!(c.get(100), Some(100));
+    }
+
+    #[test]
+    fn weighted_insert_respects_set_budget() {
+        // Single set of 4 ways = budget 4. A weight-3 entry plus two
+        // unit entries fit exactly; adding one more unit entry must
+        // shrink the set back to the budget.
+        let c = KwWfa::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::weight(3));
+        c.put(1, 1);
+        assert_eq!(c.max_set_weight(), 4, "3 + 1 fits the budget exactly");
+        assert_eq!(c.weight(), 4);
+        // Weight 3+1+1 = 5 > 4: the put of key 2 must repair on insert.
+        c.put(2, 2);
+        let resident: Vec<u64> = (0..3u64).filter(|&k| c.get(k).is_some()).collect();
+        let total: u64 = resident.iter().map(|&k| if k == 0 { 3 } else { 1 }).sum();
+        assert!(total <= 4, "resident weight {total} exceeds the budget");
+        assert!(c.max_set_weight() <= 4);
+        assert!(c.get(2).is_some(), "the inserting key is spared by its own repair");
+    }
+
+    #[test]
+    fn oversized_entries_are_dropped() {
+        let c = KwWfa::new(4, 4, Policy::Lru);
+        c.put_with(7, 70, EntryOpts::weight(5)); // budget is 4
+        assert_eq!(c.get(7), None, "an entry heavier than a set can never fit");
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn sweep_reclaims_expired_lines() {
+        // 20 keys over 512 sets of 8 ways: no set overflows, so nothing
+        // is evicted before the sweep (same bound the batch tests use).
+        let c = KwWfa::new(4096, 8, Policy::Lru);
+        for key in 0..10u64 {
+            c.put_with(key, key, EntryOpts::ttl(Duration::ZERO));
+        }
+        for key in 10..20u64 {
+            c.put(key, key);
+        }
+        assert_eq!(c.len(), 20, "lazy expiration leaves dead lines in place");
+        let reclaimed = c.sweep_expired(c.geometry().num_sets());
+        assert_eq!(reclaimed, 10, "sweep must reclaim exactly the expired lines");
+        assert_eq!(c.len(), 10);
+        for key in 10..20u64 {
+            assert_eq!(c.get(key), Some(key), "immortal {key} survives the sweep");
         }
     }
 

@@ -1,29 +1,34 @@
 //! KW-WFSC — K-Way cache, Wait-Free with Separate Counters (paper
 //! Algorithms 4–6).
 //!
-//! Structure-of-arrays: the whole cache is four flat atomic arrays —
-//! fingerprints, counters, keys, values — indexed `set * k + way`. A probe
-//! scans only the *fingerprint* slice of the set and a victim search scans
-//! only the *counter* slice, so for k ≤ 8 each scan touches a single
-//! 64-byte cache line. That contiguity is exactly the optimization the
-//! paper introduces WFSC for; the cost is that a replacement needs several
-//! atomic operations (one CAS + three stores here, "three atomic
-//! operations" in the paper's Java version) instead of WFA's single
-//! node-swap CAS.
+//! Structure-of-arrays: the whole cache is five flat atomic arrays —
+//! fingerprints, counters, keys, values, life words — indexed
+//! `set * k + way`. A probe scans only the *fingerprint* slice of the set
+//! and a victim search scans only the *counter* slice, so for k ≤ 8 each
+//! scan touches a single 64-byte cache line. That contiguity is exactly
+//! the optimization the paper introduces WFSC for; the cost is that a
+//! replacement needs several atomic operations (one CAS + four stores
+//! here, "three atomic operations" in the paper's Java version) instead
+//! of WFA's single node-swap CAS.
 //!
 //! Publication protocol: a put claims the way by CASing the fingerprint
-//! word (0 = empty), then publishes value and counter, and stores the key
-//! word last. Readers match on the fingerprint but *validate on the key
-//! word* and re-validate after reading the value, so fingerprint
-//! collisions and mid-replace reads are both detected and skipped.
+//! word (0 = empty), then publishes value, counter and life word, and
+//! stores the key word last. Readers match on the fingerprint but
+//! *validate on the key word* and re-validate after reading the value, so
+//! fingerprint collisions and mid-replace reads are both detected and
+//! skipped.
 //!
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
-//! only the SoA storage and the fingerprint claim/publish protocol. The
-//! SoA layout also makes WFSC the best batching target: one prefetch of
-//! the set's fingerprint line covers the whole probe.
+//! only the SoA storage and the fingerprint claim/publish protocol —
+//! including the lifetime dimension (expired lines probe as misses, are
+//! the victims of first resort, and the per-set weight budget is
+//! repaired after inserts; DESIGN.md §Expiration, §Weighted capacity).
+//! The SoA layout also makes WFSC the best batching target: one prefetch
+//! of the set's fingerprint line covers the whole probe.
 
-use super::engine::{self, PreparedKey, SetEngine};
+use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
+use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -39,6 +44,8 @@ pub struct KwWfsc {
     keys: Box<[AtomicU64]>,
     /// Values.
     values: Box<[AtomicU64]>,
+    /// Packed (weight, expiry) life words.
+    lives: Box<[AtomicU64]>,
 }
 
 fn atomic_array(n: usize) -> Box<[AtomicU64]> {
@@ -46,6 +53,8 @@ fn atomic_array(n: usize) -> Box<[AtomicU64]> {
 }
 
 impl KwWfsc {
+    /// Build a cache of (at least) `capacity` weight units in sets of
+    /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
         let engine = SetEngine::new(capacity, ways, policy);
         let n = engine.geometry().capacity();
@@ -55,22 +64,47 @@ impl KwWfsc {
             counters: atomic_array(n),
             keys: atomic_array(n),
             values: atomic_array(n),
+            lives: atomic_array(n),
         }
     }
 
+    /// The rounded geometry this cache runs with.
     pub fn geometry(&self) -> Geometry {
         self.engine.geometry()
     }
 
+    /// The eviction policy.
     pub fn policy(&self) -> Policy {
         self.engine.policy()
     }
 
-    /// Publish (value, counter, key) into a way whose fingerprint we own.
+    /// Largest per-set total weight currently held. Diagnostic for the
+    /// weighted-capacity tests: after churn quiesces this never exceeds
+    /// the per-set budget (= `ways`).
+    pub fn max_set_weight(&self) -> u64 {
+        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).max().unwrap_or(0)
+    }
+
+    fn set_weight(&self, set: usize) -> u64 {
+        let start = set * self.engine.geometry().ways();
+        (0..self.engine.geometry().ways())
+            .map(|i| {
+                if self.fps[start + i].load(Ordering::Acquire) == EMPTY {
+                    0
+                } else {
+                    lifetime::weight_of(self.lives[start + i].load(Ordering::Relaxed))
+                }
+            })
+            .sum()
+    }
+
+    /// Publish (value, counter, life, key) into a way whose fingerprint
+    /// we own.
     #[inline]
-    fn publish(&self, idx: usize, ik: u64, value: u64, now: u64) {
+    fn publish(&self, idx: usize, ik: u64, value: u64, life: u64, now: u64) {
         self.values[idx].store(value, Ordering::Release);
         self.counters[idx].store(self.engine.initial_meta(now), Ordering::Release);
+        self.lives[idx].store(life, Ordering::Release);
         self.keys[idx].store(ik, Ordering::Release);
     }
 
@@ -79,6 +113,8 @@ impl KwWfsc {
     #[inline]
     fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
         let now = self.engine.tick();
+        let ttl_active = self.engine.ttl_active();
+        let now_ms = self.engine.expiry_now();
         let start = pk.set * self.engine.geometry().ways();
         let k = self.engine.geometry().ways();
         // Contiguous fingerprint scan (Alg. 5): one cache line for k <= 8.
@@ -88,6 +124,10 @@ impl KwWfsc {
                 self.fps[start + i].load(Ordering::Acquire) == pk.fp
                     && self.keys[start + i].load(Ordering::Acquire) == pk.ik
             },
+            |i| {
+                ttl_active
+                    && lifetime::is_expired(self.lives[start + i].load(Ordering::Relaxed), now_ms)
+            },
             |i| self.values[start + i].load(Ordering::Acquire),
         )?;
         self.engine.touch_atomic(&self.counters[start + way], now);
@@ -95,18 +135,28 @@ impl KwWfsc {
     }
 
     /// `put` with the hashing already done.
-    fn put_prepared(&self, pk: PreparedKey, value: u64) {
+    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
+        self.engine.note_opts(&opts);
+        if opts.weight as u64 > self.engine.set_budget() {
+            return; // heavier than a whole set: can never fit, dropped
+        }
         let now = self.engine.tick();
+        let now_ms = self.engine.expiry_now();
+        let life = lifetime::life_of(&opts, now_ms);
+        let ttl_active = self.engine.ttl_active();
         let start = pk.set * self.engine.geometry().ways();
         let k = self.engine.geometry().ways();
 
-        // Pass 1 (Alg. 6 lines 3–9): overwrite an existing entry.
+        // Pass 1 (Alg. 6 lines 3–9): overwrite an existing entry (and
+        // refresh its life word — an overwrite restarts the TTL).
         if let Some(i) = self.engine.find_match(k, |i| {
             self.fps[start + i].load(Ordering::Acquire) == pk.fp
                 && self.keys[start + i].load(Ordering::Acquire) == pk.ik
         }) {
             self.values[start + i].store(value, Ordering::Release);
+            self.lives[start + i].store(life, Ordering::Release);
             self.engine.touch_atomic(&self.counters[start + i], now);
+            self.repair_weight(pk);
             return;
         }
 
@@ -117,28 +167,109 @@ impl KwWfsc {
                     .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
-                self.publish(start + i, pk.ik, value, now);
+                self.publish(start + i, pk.ik, value, life, now);
+                self.repair_weight(pk);
                 return;
             }
         }
 
-        // Pass 3 (Alg. 6 lines 11–15): select the victim from the counters
-        // array alone — this scan never touches keys or values — then claim
-        // it by CASing its fingerprint. A failed CAS means a concurrent
+        // Pass 3 (Alg. 6 lines 11–15): select the victim — an expired line
+        // first, otherwise from the counters array alone — then claim it
+        // by CASing its fingerprint. A failed CAS means a concurrent
         // replacement won the way; like the paper we give up rather than
-        // loop (wait-free).
+        // loop (wait-free). The expired shortcut only trusts a way whose
+        // key word is fully published: a mid-publish way's life word is
+        // the previous occupant's (or the initial zero, which reads as
+        // expired), and taking it as the victim of first resort would
+        // race the in-flight publish — same rule as repair_weight below.
         let choice = self.engine.choose_victim(k, now, |i| {
-            (
-                self.fps[start + i].load(Ordering::Acquire),
-                self.counters[start + i].load(Ordering::Relaxed),
-            )
+            let fp = self.fps[start + i].load(Ordering::Acquire);
+            let expired = if ttl_active && fp != EMPTY {
+                let word = self.keys[start + i].load(Ordering::Acquire);
+                word != EMPTY
+                    && word != RESERVED
+                    && lifetime::is_expired(self.lives[start + i].load(Ordering::Relaxed), now_ms)
+            } else {
+                false
+            };
+            (fp, self.counters[start + i].load(Ordering::Relaxed), expired)
         });
         let idx = start + choice.way;
         if self.fps[idx]
             .compare_exchange(choice.guard, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
-            self.publish(idx, pk.ik, value, now);
+            self.publish(idx, pk.ik, value, life, now);
+        }
+        self.repair_weight(pk);
+    }
+
+    /// Weighted-capacity repair: evict victims (expired lines first, the
+    /// policy choice otherwise, sparing the just-inserted key) until the
+    /// set's total weight fits its budget. A no-op until any put carries
+    /// a non-unit weight; see [`KwWfa`](super::KwWfa) for the protocol
+    /// discussion — here a way is freed by CASing its fingerprint back
+    /// to 0.
+    fn repair_weight(&self, pk: PreparedKey) {
+        if !self.engine.weight_active() {
+            return;
+        }
+        // Publish-then-snapshot ordering: see KwWfa::repair_weight — the
+        // fence guarantees the last racing put's repair sees every
+        // earlier insert, so the quiesced set always fits its budget.
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let budget = self.engine.set_budget();
+        let ttl_active = self.engine.ttl_active();
+        let start = pk.set * self.engine.geometry().ways();
+        let k = self.engine.geometry().ways();
+        for _ in 0..k {
+            let now = self.engine.now();
+            let now_ms = self.engine.expiry_now();
+            let mut total = 0u64;
+            let mut eligible = [0usize; MAX_WAYS];
+            let mut metas = [0u64; MAX_WAYS];
+            let mut guards = [0u64; MAX_WAYS];
+            let mut n = 0usize;
+            let mut expired_pick: Option<(usize, u64)> = None;
+            for i in 0..k {
+                let fp = self.fps[start + i].load(Ordering::Acquire);
+                if fp == EMPTY {
+                    continue;
+                }
+                let key = self.keys[start + i].load(Ordering::Acquire);
+                if key == EMPTY || key == RESERVED {
+                    continue; // mid-publish: its own put will repair
+                }
+                let life = self.lives[start + i].load(Ordering::Relaxed);
+                total += lifetime::weight_of(life);
+                if key == pk.ik {
+                    continue; // spare the entry this put installed
+                }
+                if expired_pick.is_none() && ttl_active && lifetime::is_expired(life, now_ms) {
+                    expired_pick = Some((i, fp));
+                }
+                eligible[n] = i;
+                guards[n] = fp;
+                metas[n] = self.counters[start + i].load(Ordering::Relaxed);
+                n += 1;
+            }
+            if total <= budget {
+                return;
+            }
+            let (way, guard) = match expired_pick {
+                Some(pick) => pick,
+                None if n > 0 => {
+                    let j = self.engine.select_victim(&metas[..n], now);
+                    (eligible[j], guards[j])
+                }
+                None => return,
+            };
+            let _ = self.fps[start + way].compare_exchange(
+                guard,
+                EMPTY,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
         }
     }
 }
@@ -149,7 +280,11 @@ impl Cache for KwWfsc {
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value)
+        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+    }
+
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        self.put_prepared(self.engine.prepare(key), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -184,7 +319,22 @@ impl Cache for KwWfsc {
                 engine::prefetch_read(&self.keys[base]);
                 engine::prefetch_read(&self.counters[base]);
             },
-            |pk, item| self.put_prepared(pk, item.1),
+            |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
+        );
+    }
+
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        let ways = self.engine.geometry().ways();
+        self.engine.for_batch(
+            items,
+            |item| item.key,
+            |set| {
+                let base = set * ways;
+                engine::prefetch_read(&self.fps[base]);
+                engine::prefetch_read(&self.keys[base]);
+                engine::prefetch_read(&self.counters[base]);
+            },
+            |pk, item| self.put_prepared(pk, item.value, item.opts),
         );
     }
 
@@ -196,8 +346,51 @@ impl Cache for KwWfsc {
         self.fps.iter().filter(|f| f.load(Ordering::Relaxed) != EMPTY).count()
     }
 
+    fn weight(&self) -> u64 {
+        if !self.engine.weight_active() {
+            return self.len() as u64;
+        }
+        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).sum()
+    }
+
     fn name(&self) -> &'static str {
         "KW-WFSC"
+    }
+
+    fn supports_lifetime(&self) -> bool {
+        true
+    }
+
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        if max_sets == 0 || !self.engine.ttl_active() {
+            return 0;
+        }
+        let geo = self.engine.geometry();
+        let span = max_sets.min(geo.num_sets());
+        let start_set = self.engine.sweep_start(span);
+        let now_ms = lifetime::now_ms();
+        let mut reclaimed = 0;
+        for j in 0..span {
+            let base = ((start_set + j) % geo.num_sets()) * geo.ways();
+            for i in 0..geo.ways() {
+                let fp = self.fps[base + i].load(Ordering::Acquire);
+                if fp == EMPTY {
+                    continue;
+                }
+                let key = self.keys[base + i].load(Ordering::Acquire);
+                if key == EMPTY || key == RESERVED {
+                    continue; // mid-publish
+                }
+                if lifetime::is_expired(self.lives[base + i].load(Ordering::Relaxed), now_ms)
+                    && self.fps[base + i]
+                        .compare_exchange(fp, EMPTY, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok()
+                {
+                    reclaimed += 1;
+                }
+            }
+        }
+        reclaimed
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
@@ -220,6 +413,7 @@ impl Cache for KwWfsc {
                 }
             },
             |i| self.counters[start + i].load(Ordering::Relaxed),
+            |i| self.lives[start + i].load(Ordering::Relaxed),
         )
     }
 }
@@ -229,6 +423,7 @@ mod tests {
     use super::*;
     use crate::util::check::check;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn put_get_overwrite() {
@@ -315,6 +510,80 @@ mod tests {
         for &(k, v) in &items {
             assert_eq!(c.get(k), Some(v), "key {k}");
         }
+    }
+
+    #[test]
+    fn expired_entries_probe_as_misses_scalar_and_batched() {
+        let c = KwWfsc::new(4096, 8, Policy::Lru);
+        c.put_with(1, 10, EntryOpts::ttl(Duration::ZERO));
+        c.put_with(2, 20, EntryOpts::ttl(Duration::from_secs(3600)));
+        c.put(3, 30);
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.get(2), Some(20));
+        let mut out = Vec::new();
+        c.get_batch(&[1, 2, 3], &mut out);
+        assert_eq!(out, vec![None, Some(20), Some(30)]);
+    }
+
+    #[test]
+    fn batched_put_with_carries_per_item_opts() {
+        let c = KwWfsc::new(4096, 8, Policy::Lru);
+        let items: Vec<BatchEntry> = (0..100u64)
+            .map(|k| {
+                let opts = if k % 2 == 0 {
+                    EntryOpts::ttl(Duration::ZERO)
+                } else {
+                    EntryOpts::default()
+                };
+                BatchEntry::new(k, k + 5, opts)
+            })
+            .collect();
+        c.put_batch_with(&items);
+        for k in 0..100u64 {
+            let expect = if k % 2 == 0 { None } else { Some(k + 5) };
+            assert_eq!(c.get(k), expect, "key {k}");
+        }
+    }
+
+    #[test]
+    fn expired_line_is_victim_of_first_resort() {
+        let c = KwWfsc::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::ttl(Duration::ZERO));
+        for key in 1..4u64 {
+            c.put(key, key);
+        }
+        c.put(100, 100);
+        for key in 1..4u64 {
+            assert_eq!(c.get(key), Some(key), "immortal {key} must survive");
+        }
+        assert_eq!(c.get(100), Some(100));
+    }
+
+    #[test]
+    fn weighted_inserts_respect_set_budget() {
+        let c = KwWfsc::new(4, 4, Policy::Lru);
+        c.put_with(0, 0, EntryOpts::weight(2));
+        c.put_with(1, 1, EntryOpts::weight(2));
+        assert_eq!(c.max_set_weight(), 4);
+        c.put_with(2, 2, EntryOpts::weight(2));
+        assert!(c.max_set_weight() <= 4, "repair must restore the budget");
+        assert_eq!(c.get(2), Some(2), "the inserting key is spared");
+        // An entry heavier than the whole set is dropped.
+        c.put_with(9, 9, EntryOpts::weight(5));
+        assert_eq!(c.get(9), None);
+    }
+
+    #[test]
+    fn sweep_reclaims_expired_lines() {
+        let c = KwWfsc::new(4096, 8, Policy::Lru);
+        for key in 0..10u64 {
+            c.put_with(key, key, EntryOpts::ttl(Duration::ZERO));
+        }
+        for key in 10..20u64 {
+            c.put(key, key);
+        }
+        assert_eq!(c.sweep_expired(c.geometry().num_sets()), 10);
+        assert_eq!(c.len(), 10);
     }
 
     #[test]

@@ -28,7 +28,10 @@
 //! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
 //! crate) so the rust binary never invokes python at run time.
 
+#![warn(missing_docs)]
+
 pub mod figures;
+pub mod lifetime;
 pub mod util;
 pub mod policy;
 pub mod kway;
@@ -43,6 +46,8 @@ pub mod coordinator;
 pub mod metrics;
 pub mod analysis;
 
+pub use lifetime::{BatchEntry, EntryOpts, WeightDist};
+
 /// Common cache interface shared by every implementation in this crate.
 ///
 /// Keys and values are `u64`. Trace-driven cache evaluation (the paper's
@@ -51,11 +56,46 @@ pub mod analysis;
 /// plain atomics, which is the rust-idiomatic equivalent of the paper's
 /// Java `AtomicReferenceArray<Node>` (Java leans on the GC for node
 /// reclamation; we lean on fixed-width atomics — see DESIGN.md §Concurrency).
+///
+/// # Entry lifetime and weight
+///
+/// Entries may carry a time-to-live and a weight ([`EntryOpts`], via
+/// [`Cache::put_with`] / [`Cache::put_batch_with`]). Implementations
+/// that report [`Cache::supports_lifetime`] guarantee an expired key is
+/// **never** returned — by `get` or `get_batch` — and bound every set's
+/// total entry weight by its capacity share (DESIGN.md §Expiration,
+/// §Weighted capacity). Implementations without support treat every
+/// entry as immortal and unit-weight; the defaults below encode that.
+///
+/// ```
+/// use kway::{Cache, EntryOpts};
+/// use kway::kway::KwWfsc;
+/// use kway::policy::Policy;
+/// use std::time::Duration;
+///
+/// let cache = KwWfsc::new(1 << 10, 8, Policy::Lru);
+/// cache.put(1, 10); // immortal, weight 1
+/// cache.put_with(2, 20, EntryOpts::ttl(Duration::ZERO)); // born expired
+/// cache.put_with(3, 30, EntryOpts::weight(4)); // weighs 4 budget units
+/// assert_eq!(cache.get(1), Some(10));
+/// assert_eq!(cache.get(2), None); // expired keys are never returned
+/// assert_eq!(cache.get(3), Some(30));
+/// ```
 pub trait Cache: Send + Sync {
     /// Retrieve `key`'s value, updating the policy metadata on a hit.
     fn get(&self, key: u64) -> Option<u64>;
     /// Insert or overwrite `key`, evicting a victim if there is no room.
     fn put(&self, key: u64, value: u64);
+    /// Insert or overwrite `key` with explicit lifetime/weight options.
+    /// `put_with(k, v, EntryOpts::default())` is behaviourally identical
+    /// to `put(k, v)` for every implementation. The default ignores the
+    /// options (immortal, unit weight) — the honest behaviour of an
+    /// implementation without lifetime support; implementations that
+    /// report [`Cache::supports_lifetime`] override it.
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        let _ = opts;
+        self.put(key, value);
+    }
     /// Batched lookup: append one result per key to `out`, in input order
     /// (`out[i]` answers `keys[i]` when `out` starts empty). The default
     /// walks keys one by one; the k-way implementations override it to
@@ -76,10 +116,44 @@ pub trait Cache: Send + Sync {
             self.put(key, value);
         }
     }
-    /// Maximum number of entries the cache may hold.
+    /// Batched insert where every item carries its own lifetime/weight
+    /// options ([`BatchEntry`]). Same input-order contract as
+    /// [`Cache::put_batch`]; the k-way implementations override it with
+    /// the prepare-then-probe batched path.
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        for item in items {
+            self.put_with(item.key, item.value, item.opts);
+        }
+    }
+    /// Maximum number of entries the cache may hold. For
+    /// lifetime-supporting implementations this doubles as the total
+    /// *weight* budget: with unit weights the two readings coincide.
     fn capacity(&self) -> usize;
     /// Number of entries currently held (approximate under concurrency).
     fn len(&self) -> usize;
+    /// Total weight units currently held (approximate under
+    /// concurrency). Defaults to [`Cache::len`] — exact for
+    /// implementations where every entry weighs 1.
+    fn weight(&self) -> u64 {
+        self.len() as u64
+    }
+    /// Does this implementation honour [`EntryOpts`]? When `false` (the
+    /// default), `put_with` stores immortal unit-weight entries and
+    /// [`Cache::sweep_expired`] is a no-op.
+    fn supports_lifetime(&self) -> bool {
+        false
+    }
+    /// Incrementally reclaim expired entries: scan up to `max_sets` sets
+    /// (or segments) from an internal cursor and free every expired line
+    /// found, returning the number reclaimed. Expiration is *lazy* — a
+    /// probe never returns an expired entry and an insert evicts expired
+    /// lines first — so calling this is optional: it only recovers
+    /// memory earlier on idle caches (DESIGN.md §Expiration). The
+    /// default does nothing.
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        let _ = max_sets;
+        0
+    }
     /// True when no entries are present.
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -110,17 +184,32 @@ impl Cache for std::sync::Arc<dyn Cache> {
     fn put(&self, key: u64, value: u64) {
         (**self).put(key, value)
     }
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        (**self).put_with(key, value, opts)
+    }
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
         (**self).get_batch(keys, out)
     }
     fn put_batch(&self, items: &[(u64, u64)]) {
         (**self).put_batch(items)
     }
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        (**self).put_batch_with(items)
+    }
     fn capacity(&self) -> usize {
         (**self).capacity()
     }
     fn len(&self) -> usize {
         (**self).len()
+    }
+    fn weight(&self) -> u64 {
+        (**self).weight()
+    }
+    fn supports_lifetime(&self) -> bool {
+        (**self).supports_lifetime()
+    }
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        (**self).sweep_expired(max_sets)
     }
     fn is_empty(&self) -> bool {
         (**self).is_empty()
@@ -139,8 +228,19 @@ impl Cache for std::sync::Arc<dyn Cache> {
 /// implement it directly to avoid paying for synchronization they do not
 /// need.
 pub trait SimCache {
+    /// Was `key` resident (and not expired)? Updates policy metadata.
     fn sim_get(&mut self, key: u64) -> bool;
+    /// Install `key`, evicting if needed.
     fn sim_put(&mut self, key: u64);
+    /// Install `key` with lifetime/weight options. The default ignores
+    /// them — the honest behaviour of a baseline without lifetime
+    /// support; expiry-aware baselines (e.g. [`fully::LruList`]) and the
+    /// blanket [`Cache`] impl override it.
+    fn sim_put_with(&mut self, key: u64, opts: EntryOpts) {
+        let _ = opts;
+        self.sim_put(key)
+    }
+    /// Label used in simulator reports.
     fn sim_name(&self) -> String;
 }
 
@@ -150,6 +250,9 @@ impl<C: Cache> SimCache for C {
     }
     fn sim_put(&mut self, key: u64) {
         self.put(key, key)
+    }
+    fn sim_put_with(&mut self, key: u64, opts: EntryOpts) {
+        self.put_with(key, key, opts)
     }
     fn sim_name(&self) -> String {
         self.name().to_string()

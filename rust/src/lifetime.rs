@@ -1,0 +1,388 @@
+//! Entry lifetime (TTL) and weight: the shared vocabulary for the
+//! expiration and weighted-capacity dimension of every cache layer.
+//!
+//! The paper's pitch is that limited associativity makes cache-management
+//! schemes *simple* to parallelize — and expiration is the scheme where
+//! that advantage is starkest. A fully-associative design needs a global
+//! timer wheel or a background sweeper to find dead entries; with k-way
+//! sets, expired-entry reclamation is a bounded per-set scan folded into
+//! the probe the set engine already does (an expired line is simply the
+//! victim of first resort). This module holds everything that dimension
+//! shares:
+//!
+//! * [`EntryOpts`] — the per-insert options (`ttl`, `weight`) carried by
+//!   [`crate::Cache::put_with`] and [`crate::Cache::put_batch_with`];
+//! * the packed **life word** — per-entry expiry deadline (48 bits of
+//!   coarse milliseconds) and weight (16 bits) in one `u64`, so the
+//!   wait-free variants can publish lifetime metadata with a single
+//!   atomic store under their existing claim/publish protocols;
+//! * the coarse monotonic clock ([`now_ms`]) shared by every
+//!   implementation, so deadlines from different caches compare;
+//! * [`WeightDist`] — the deterministic per-key weight generators the
+//!   workloads and CLI (`--weight-dist`) use for size-aware scenarios;
+//! * [`parse_duration`] — the `--ttl 100ms` CLI parser.
+//!
+//! Design notes: DESIGN.md §Expiration and §Weighted capacity.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Bits of the life word holding the expiry deadline (coarse ms).
+const EXPIRY_BITS: u32 = 48;
+/// Mask of the expiry field: 2^48 ms ≈ 8 900 years of process uptime.
+const EXPIRY_MASK: u64 = (1 << EXPIRY_BITS) - 1;
+/// Expiry field value meaning "never expires".
+pub(crate) const NO_EXPIRY: u64 = EXPIRY_MASK;
+/// Largest weight a single entry can carry (the 16-bit field saturates).
+pub const MAX_WEIGHT: u32 = u16::MAX as u32;
+
+/// Per-insert entry options: time-to-live and weight.
+///
+/// The default (`ttl: None`, `weight: 1`) makes
+/// [`crate::Cache::put_with`] behave exactly like [`crate::Cache::put`]:
+/// an immortal, unit-weight entry. A `ttl` of zero produces an entry that
+/// is already expired — readable never — which tests use for
+/// deterministic expiry without sleeping.
+///
+/// ```
+/// use kway::EntryOpts;
+/// use std::time::Duration;
+///
+/// let opts = EntryOpts::default();
+/// assert_eq!(opts.ttl, None);
+/// assert_eq!(opts.weight, 1);
+/// let opts = EntryOpts::ttl(Duration::from_millis(100)).weighted(3);
+/// assert_eq!(opts.weight, 3);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryOpts {
+    /// Time-to-live from the moment of the insert; `None` = immortal.
+    pub ttl: Option<Duration>,
+    /// Weight units this entry consumes of the per-set weight budget
+    /// (clamped to [`MAX_WEIGHT`] on storage). Weight 0 is allowed and
+    /// consumes a way but no budget.
+    pub weight: u32,
+}
+
+impl Default for EntryOpts {
+    fn default() -> Self {
+        Self { ttl: None, weight: 1 }
+    }
+}
+
+impl EntryOpts {
+    /// Immortal unit-weight entry — identical to a plain `put`.
+    pub const IMMORTAL: EntryOpts = EntryOpts { ttl: None, weight: 1 };
+
+    /// Unit-weight entry expiring `ttl` from now.
+    pub fn ttl(ttl: Duration) -> Self {
+        Self { ttl: Some(ttl), weight: 1 }
+    }
+
+    /// Immortal entry of the given weight.
+    pub fn weight(weight: u32) -> Self {
+        Self { ttl: None, weight }
+    }
+
+    /// Builder-style weight override.
+    pub fn weighted(mut self, weight: u32) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// True when these options are indistinguishable from a plain `put`.
+    pub fn is_plain(&self) -> bool {
+        self.ttl.is_none() && self.weight == 1
+    }
+}
+
+/// One item of a lifetime-carrying batched insert
+/// ([`crate::Cache::put_batch_with`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchEntry {
+    /// Key to insert.
+    pub key: u64,
+    /// Value to store.
+    pub value: u64,
+    /// Lifetime/weight options for this item.
+    pub opts: EntryOpts,
+}
+
+impl BatchEntry {
+    /// Convenience constructor.
+    pub fn new(key: u64, value: u64, opts: EntryOpts) -> Self {
+        Self { key, value, opts }
+    }
+}
+
+/// Milliseconds since the process-wide epoch (first call). Coarse on
+/// purpose: a 48-bit millisecond deadline packs next to a 16-bit weight
+/// in one atomic word, and cache TTLs below a millisecond are noise.
+#[inline]
+pub fn now_ms() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Absolute expiry deadline (coarse ms) for an optional TTL taken now.
+/// `None` maps to [`NO_EXPIRY`]; finite deadlines are clamped below it.
+/// Sub-millisecond TTLs round *up* to one tick, so `--ttl 250us` means
+/// "alive this millisecond" — only an explicit zero TTL is born expired.
+#[inline]
+pub(crate) fn deadline_ms(ttl: Option<Duration>, now: u64) -> u64 {
+    match ttl {
+        None => NO_EXPIRY,
+        Some(ttl) => {
+            let mut ms = ttl.as_millis().min(u64::MAX as u128) as u64;
+            if ms == 0 && !ttl.is_zero() {
+                ms = 1;
+            }
+            now.saturating_add(ms).min(NO_EXPIRY - 1)
+        }
+    }
+}
+
+/// Pack an expiry deadline and a weight into one life word.
+#[inline]
+pub(crate) fn pack_life(expiry_ms: u64, weight: u32) -> u64 {
+    ((weight.min(MAX_WEIGHT) as u64) << EXPIRY_BITS) | (expiry_ms & EXPIRY_MASK)
+}
+
+/// Life word of an immortal unit-weight entry (what a plain `put` stores).
+#[inline]
+pub(crate) fn immortal_unit() -> u64 {
+    pack_life(NO_EXPIRY, 1)
+}
+
+/// Life word for an insert with `opts` happening at `now` (coarse ms).
+#[inline]
+pub(crate) fn life_of(opts: &EntryOpts, now: u64) -> u64 {
+    pack_life(deadline_ms(opts.ttl, now), opts.weight)
+}
+
+/// Expiry deadline field of a life word.
+#[inline]
+pub(crate) fn expiry_of(life: u64) -> u64 {
+    life & EXPIRY_MASK
+}
+
+/// Weight field of a life word.
+#[inline]
+pub(crate) fn weight_of(life: u64) -> u64 {
+    life >> EXPIRY_BITS
+}
+
+/// Is an entry with this life word expired at coarse time `now`?
+/// [`NO_EXPIRY`] deadlines never are (the clock cannot reach 2^48-1 ms).
+#[inline]
+pub(crate) fn is_expired(life: u64, now: u64) -> bool {
+    expiry_of(life) <= now && expiry_of(life) != NO_EXPIRY
+}
+
+/// Deterministic per-key weight distributions for size-aware workloads
+/// (`--weight-dist` on the CLI; [`crate::throughput::FillSpec`] in the
+/// harness). Weights are a pure function of the key, so every fill of a
+/// given key costs the same budget no matter which thread or repeat
+/// performs it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightDist {
+    /// Every entry weighs 1 — byte-compatible with the unweighted world.
+    #[default]
+    Unit,
+    /// Uniform weights in `1..=max`.
+    Uniform {
+        /// Largest weight drawn.
+        max: u32,
+    },
+    /// Pareto-skewed weights in `1..=max` (most keys small, a heavy
+    /// tail of large entries — the "wildly non-uniform sizes" shape of
+    /// real object caches).
+    Zipf {
+        /// Cap on the heavy tail.
+        max: u32,
+    },
+}
+
+impl WeightDist {
+    /// Parse a CLI spelling: `unit`, `uniform[:MAX]`, `zipf[:MAX]`
+    /// (default MAX = 8).
+    pub fn parse(s: &str) -> Option<WeightDist> {
+        let (name, max) = match s.split_once(':') {
+            Some((n, m)) => (n, m.parse::<u32>().ok()?),
+            None => (s, 8),
+        };
+        if max == 0 || max > MAX_WEIGHT {
+            return None;
+        }
+        match name.to_ascii_lowercase().as_str() {
+            "unit" | "none" => Some(WeightDist::Unit),
+            "uniform" => Some(WeightDist::Uniform { max }),
+            "zipf" | "pareto" => Some(WeightDist::Zipf { max }),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling (inverse of [`WeightDist::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            WeightDist::Unit => "unit".into(),
+            WeightDist::Uniform { max } => format!("uniform:{max}"),
+            WeightDist::Zipf { max } => format!("zipf:{max}"),
+        }
+    }
+
+    /// The weight of `key` under this distribution (deterministic).
+    pub fn weight_of(&self, key: u64) -> u32 {
+        match self {
+            WeightDist::Unit => 1,
+            WeightDist::Uniform { max } => {
+                1 + (crate::util::hash::mix64(key ^ 0xD15E_A5E1) % *max as u64) as u32
+            }
+            WeightDist::Zipf { max } => {
+                // Pareto(α = 2) via inverse transform: P(w ≥ x) = x⁻²,
+                // so most keys weigh 1 and a heavy tail reaches `max`.
+                let h = crate::util::hash::mix64(key ^ 0x5EED_F00D);
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+                let w = (1.0 - u).powf(-0.5);
+                (w as u32).clamp(1, *max)
+            }
+        }
+    }
+}
+
+/// Parse a human duration: `0`, `250us`, `100ms`, `2s`, `5m` (bare
+/// numbers are milliseconds). Used by the `--ttl` CLI option.
+pub fn parse_duration(s: &str) -> Option<Duration> {
+    let s = s.trim();
+    let (digits, unit) = match s.find(|c: char| !c.is_ascii_digit()) {
+        Some(split) => s.split_at(split),
+        None => (s, "ms"),
+    };
+    let n: u64 = digits.parse().ok()?;
+    match unit.trim() {
+        "us" | "µs" => Some(Duration::from_micros(n)),
+        "ms" | "" => Some(Duration::from_millis(n)),
+        "s" => Some(Duration::from_secs(n)),
+        "m" | "min" => n.checked_mul(60).map(Duration::from_secs),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_opts_are_plain_and_immortal() {
+        assert!(EntryOpts::default().is_plain());
+        assert_eq!(EntryOpts::default(), EntryOpts::IMMORTAL);
+        assert!(!EntryOpts::ttl(Duration::from_millis(5)).is_plain());
+        assert!(!EntryOpts::weight(3).is_plain());
+        assert!(EntryOpts::weight(1).is_plain());
+    }
+
+    #[test]
+    fn life_word_round_trips() {
+        for (exp, w) in [(0u64, 0u32), (123, 1), (NO_EXPIRY, 7), (NO_EXPIRY - 1, 65535)] {
+            let life = pack_life(exp, w);
+            assert_eq!(expiry_of(life), exp);
+            assert_eq!(weight_of(life), w as u64);
+        }
+        // Weight saturates at the 16-bit field.
+        assert_eq!(weight_of(pack_life(0, u32::MAX)), MAX_WEIGHT as u64);
+    }
+
+    #[test]
+    fn immortal_entries_never_expire() {
+        let life = immortal_unit();
+        assert!(!is_expired(life, 0));
+        assert!(!is_expired(life, NO_EXPIRY - 1));
+        assert_eq!(weight_of(life), 1);
+    }
+
+    #[test]
+    fn zero_ttl_is_expired_immediately() {
+        let now = 1000;
+        let life = life_of(&EntryOpts::ttl(Duration::ZERO), now);
+        assert!(is_expired(life, now));
+        let life = life_of(&EntryOpts::ttl(Duration::from_millis(5)), now);
+        assert!(!is_expired(life, now));
+        assert!(!is_expired(life, now + 4));
+        assert!(is_expired(life, now + 5));
+    }
+
+    #[test]
+    fn sub_millisecond_ttls_round_up_to_one_tick() {
+        // `--ttl 250us` must not be born expired on a millisecond clock:
+        // any non-zero TTL gets at least one tick of life.
+        let now = 1000;
+        let life = life_of(&EntryOpts::ttl(Duration::from_micros(250)), now);
+        assert!(!is_expired(life, now));
+        assert_eq!(expiry_of(life), now + 1);
+        assert!(is_expired(life, now + 1));
+    }
+
+    #[test]
+    fn huge_ttls_clamp_below_no_expiry() {
+        let life = life_of(&EntryOpts::ttl(Duration::from_secs(u64::MAX / 2)), 5);
+        assert_eq!(expiry_of(life), NO_EXPIRY - 1);
+        assert!(!is_expired(life, 1_000_000));
+    }
+
+    #[test]
+    fn now_ms_is_monotone() {
+        let a = now_ms();
+        let b = now_ms();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn weight_dist_parse_and_name_round_trip() {
+        for spec in ["unit", "uniform:4", "zipf:16"] {
+            let d = WeightDist::parse(spec).unwrap();
+            assert_eq!(d.name(), spec);
+        }
+        assert_eq!(WeightDist::parse("zipf"), Some(WeightDist::Zipf { max: 8 }));
+        assert_eq!(WeightDist::parse("uniform:0"), None);
+        assert_eq!(WeightDist::parse("bogus"), None);
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_in_range() {
+        for dist in [
+            WeightDist::Unit,
+            WeightDist::Uniform { max: 6 },
+            WeightDist::Zipf { max: 16 },
+        ] {
+            for key in 0..2000u64 {
+                let w = dist.weight_of(key);
+                assert_eq!(w, dist.weight_of(key), "{dist:?} key {key} not deterministic");
+                assert!((1..=16).contains(&w), "{dist:?} key {key} weight {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_weights_are_skewed_small() {
+        let dist = WeightDist::Zipf { max: 64 };
+        let small = (0..10_000u64).filter(|&k| dist.weight_of(k) <= 2).count();
+        // Pareto(2): P(w ≤ 2) = 1 - 1/4 = 0.75.
+        assert!(small > 6_500, "only {small}/10000 small weights");
+        let heavy = (0..10_000u64).filter(|&k| dist.weight_of(k) >= 8).count();
+        assert!(heavy > 20, "no heavy tail: {heavy}");
+    }
+
+    #[test]
+    fn duration_parser_accepts_cli_spellings() {
+        assert_eq!(parse_duration("100ms"), Some(Duration::from_millis(100)));
+        assert_eq!(parse_duration("2s"), Some(Duration::from_secs(2)));
+        assert_eq!(parse_duration("250us"), Some(Duration::from_micros(250)));
+        assert_eq!(parse_duration("5m"), Some(Duration::from_secs(300)));
+        assert_eq!(parse_duration("0"), Some(Duration::ZERO));
+        assert_eq!(parse_duration("42"), Some(Duration::from_millis(42)));
+        assert_eq!(parse_duration("nope"), None);
+        assert_eq!(parse_duration("10parsecs"), None);
+        // Overflowing minute counts are rejected, not wrapped.
+        assert_eq!(parse_duration("307445734561825861m"), None);
+    }
+}

@@ -14,12 +14,17 @@
 //! `throughput`, `synthetic`, `batch`, `bench` and `serve` all take
 //! `--admission none|tlfu`: `tlfu` layers the concurrent TinyLFU
 //! admission filter (`kway::tinylfu::TlfuCache`) over every cache they
-//! build.
+//! build. They also take the lifetime options `--ttl <dur>` (every fill
+//! carries that TTL; on `serve` it becomes the service-wide default) and
+//! `--weight-dist unit|uniform[:MAX]|zipf[:MAX]` (deterministic per-key
+//! entry weights against the weight-based capacity); `synthetic
+//! --workload expiring` is the dedicated TTL-churn scenario.
 
 use anyhow::{anyhow, bail, Result};
+use kway::lifetime::{parse_duration, WeightDist};
 use kway::policy::Policy;
 use kway::sim::{self, Config};
-use kway::throughput::{impl_factory, measure, RunConfig, Workload, IMPLS};
+use kway::throughput::{impl_factory, measure, FillSpec, RunConfig, Workload, IMPLS};
 use kway::tinylfu::AdmissionMode;
 use kway::trace::{loader, paper};
 use kway::util::cli::Args;
@@ -58,11 +63,11 @@ fn main() {
 
 const HELP: &str = "usage: kway <subcommand> [--options]
   hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
-  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu]
-  synthetic  --workload miss100|hit100|hit95|hit90 [--capacity 2097152] [--threads ...] [--admission none|tlfu]
-  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu]
-  bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--json]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu]
+  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  synthetic  --workload miss100|hit100|hit95|hit90|expiring [--capacity 2097152] [--threads ...] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--json]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
@@ -71,6 +76,25 @@ const HELP: &str = "usage: kway <subcommand> [--options]
 fn parse_admission(args: &Args) -> Result<AdmissionMode> {
     let raw = args.get_or("admission", "none");
     AdmissionMode::parse(&raw).ok_or_else(|| anyhow!("bad --admission {raw:?} (none|tlfu)"))
+}
+
+/// Parse the shared `--ttl <dur>` / `--weight-dist <dist>` fill options
+/// (e.g. `--ttl 100ms --weight-dist zipf:8`). Absent options leave the
+/// fill plain: immortal entries of weight 1, the pre-lifetime behaviour.
+fn parse_fill(args: &Args) -> Result<FillSpec> {
+    let ttl = match args.get("ttl") {
+        None => None,
+        Some(raw) => Some(
+            parse_duration(raw)
+                .ok_or_else(|| anyhow!("bad --ttl {raw:?} (e.g. 100ms, 2s, 250us)"))?,
+        ),
+    };
+    let weight_dist = match args.get("weight-dist") {
+        None => WeightDist::Unit,
+        Some(raw) => WeightDist::parse(raw)
+            .ok_or_else(|| anyhow!("bad --weight-dist {raw:?} (unit|uniform[:MAX]|zipf[:MAX])"))?,
+    };
+    Ok(FillSpec { ttl, weight_dist })
 }
 
 fn cmd_hitratio(args: &Args) -> Result<()> {
@@ -130,14 +154,16 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let policy = Policy::parse(&args.get_or("policy", "lru"))
         .ok_or_else(|| anyhow!("bad --policy"))?;
     let admission = parse_admission(args)?;
+    let fill = parse_fill(args)?;
 
     println!(
-        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} (Mops/s)",
+        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} fill={} (Mops/s)",
         trace.name,
         capacity,
         duration,
         repeats,
-        admission.name()
+        admission.name(),
+        fill.label()
     );
     print!("{:20}", "impl\\threads");
     for t in &threads {
@@ -152,7 +178,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -172,7 +198,8 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
         "hit100" => Workload::AllHit { working_set },
         "hit95" => Workload::HitRatio { working_set, gets_per_put: 19 },
         "hit90" => Workload::HitRatio { working_set, gets_per_put: 9 },
-        other => bail!("unknown workload {other:?} (miss100|hit100|hit95|hit90)"),
+        "expiring" => Workload::Expiring { working_set },
+        other => bail!("unknown workload {other:?} (miss100|hit100|hit95|hit90|expiring)"),
     };
     let impls: Vec<String> = args.get_list_or("impls", &IMPLS.map(String::from))?;
     let threads = parse_threads(args)?;
@@ -180,14 +207,16 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
     let repeats = args.get_parsed_or("repeats", 5usize)?;
     let seed = args.get_parsed_or("seed", 42u64)?;
     let admission = parse_admission(args)?;
+    let fill = parse_fill(args)?;
 
     println!(
-        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} (Mops/s)",
+        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} fill={} (Mops/s)",
         workload.label(),
         capacity,
         duration,
         repeats,
-        admission.name()
+        admission.name(),
+        fill.label()
     );
     print!("{:20}", "impl\\threads");
     for t in &threads {
@@ -201,7 +230,7 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, Policy::Lru, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -226,11 +255,13 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let repeats = args.get_parsed_or("repeats", 3usize)?;
     let seed = args.get_parsed_or("seed", 42u64)?;
     let admission = parse_admission(args)?;
+    let fill = parse_fill(args)?;
 
     println!(
         "# batch sweep: capacity={capacity} working_set={working_set} threads={threads} \
-         duration={duration:?} repeats={repeats} admission={}",
-        admission.name()
+         duration={duration:?} repeats={repeats} admission={} fill={}",
+        admission.name(),
+        fill.label()
     );
     println!(
         "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
@@ -240,7 +271,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let factory = impl_factory(name, capacity, threads, Policy::Lru, admission)
             .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
         let label = format!("{name}{}", admission.label());
-        let cfg = RunConfig { threads, duration, repeats, seed };
+        let cfg = RunConfig { threads, duration, repeats, seed, fill: fill.clone() };
         // Baseline: the same resident-set gets, one key per call.
         let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
         println!(
@@ -274,15 +305,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // of N keys (misses refilled with put_batch).
     let batch = args.get_parsed_or("batch", 0usize)?;
     let admission = parse_admission(args)?;
+    // --ttl <dur> becomes the service-wide default entry lifetime: every
+    // routed put carries it unless the caller passes explicit options.
+    let default_ttl = parse_fill(args)?.ttl;
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
-        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}",
+        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}",
         cache.name(),
         admission.label(),
         cache.capacity(),
-        if batch > 0 { format!(" (batched x{batch})") } else { String::new() }
+        if batch > 0 { format!(" (batched x{batch})") } else { String::new() },
+        match default_ttl {
+            Some(ttl) => format!(" (ttl {ttl:?})"),
+            None => String::new(),
+        }
     );
-    let service = CacheService::start(cache, ServiceConfig { workers, admission });
+    let service = CacheService::start(cache, ServiceConfig { workers, admission, default_ttl });
     let keyspace = (capacity * 4) as u64;
     let secs = if batch > 0 {
         kway::coordinator::drive_clients_batched(&service, clients, requests, batch, keyspace, 7)
@@ -323,6 +361,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let policy = Policy::parse(&args.get_or("policy", "lru"))
         .ok_or_else(|| anyhow!("bad --policy"))?;
     let admission = parse_admission(args)?;
+    let fill = parse_fill(args)?;
     // Sanitize the run name: it becomes part of the BENCH_<name>.json
     // path, and trace specs may carry ':' / '/' (e.g. plain:/data/t.txt).
     let name: String = args
@@ -332,11 +371,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .collect();
 
     println!(
-        "# bench {name}: trace={} capacity={capacity} policy={} admission={} \
+        "# bench {name}: trace={} capacity={capacity} policy={} admission={} fill={} \
          duration={duration:?} repeats={repeats}",
         trace.name,
         policy.name(),
-        admission.name()
+        admission.name(),
+        fill.label()
     );
     println!(
         "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
@@ -347,7 +387,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(impl_name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {impl_name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed };
+            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
             let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
             let label = format!("{impl_name}{}", admission.label());
             println!(
@@ -371,13 +411,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     if args.has_flag("json") {
+        // Schema v2 = v1 plus the fill options (ttl_ms 0 = immortal);
+        // see DESIGN.md §Bench JSON.
+        let ttl_ms = fill.ttl.map_or(0, |d| d.as_millis() as i64);
         let doc = Json::Object(vec![
-            ("schema".to_string(), Json::Str("kway-bench-v1".to_string())),
+            ("schema".to_string(), Json::Str("kway-bench-v2".to_string())),
             ("name".to_string(), Json::Str(name.clone())),
             ("trace".to_string(), Json::Str(trace.name.clone())),
             ("capacity".to_string(), Json::Int(capacity as i64)),
             ("policy".to_string(), Json::Str(policy.name().to_string())),
             ("admission".to_string(), Json::Str(admission.name().to_string())),
+            ("ttl_ms".to_string(), Json::Int(ttl_ms)),
+            ("weight_dist".to_string(), Json::Str(fill.weight_dist.name())),
             ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
             ("repeats".to_string(), Json::Int(repeats as i64)),
             ("seed".to_string(), Json::Int(seed as i64)),

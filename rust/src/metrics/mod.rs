@@ -24,6 +24,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self {
             counts: (0..BUCKETS * SUB).map(|_| AtomicU64::new(0)).collect(),
@@ -52,6 +53,7 @@ impl LatencyHistogram {
         self.sum.fetch_add(nanos, Ordering::Relaxed);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.total.load(Ordering::Relaxed)
     }
@@ -107,12 +109,16 @@ impl LatencyHistogram {
 /// Named operation counters for the service.
 #[derive(Default)]
 pub struct OpCounters {
+    /// Completed get operations.
     pub gets: AtomicU64,
+    /// Completed put operations.
     pub puts: AtomicU64,
+    /// Gets that found their key.
     pub hits: AtomicU64,
 }
 
 impl OpCounters {
+    /// hits / gets (0 when nothing was read yet).
     pub fn hit_ratio(&self) -> f64 {
         let g = self.gets.load(Ordering::Relaxed);
         if g == 0 {

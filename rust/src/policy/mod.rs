@@ -28,10 +28,15 @@ const HYP_COUNT_MAX: u64 = (1 << HYP_COUNT_BITS) - 1;
 /// The five eviction policies of the paper's K-Way implementation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
+    /// Least-recently-used: metadata = last-access timestamp.
     Lru,
+    /// Least-frequently-used: metadata = access count.
     Lfu,
+    /// First-in-first-out: metadata = insertion timestamp, hits ignored.
     Fifo,
+    /// Uniform-random victim; metadata unused.
     Random,
+    /// Hyperbolic caching: victim minimizes `count / age`.
     Hyperbolic,
 }
 
@@ -52,6 +57,7 @@ impl Policy {
         }
     }
 
+    /// Canonical CLI spelling (inverse of [`Policy::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Policy::Lru => "lru",

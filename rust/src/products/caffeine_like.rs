@@ -206,6 +206,8 @@ impl CaffeineLike {
         }
     }
 
+    /// A Caffeine-like cache of `capacity` entries with a background
+    /// maintenance (drain) thread, as the real library runs.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         let shared = Arc::new(Shared {

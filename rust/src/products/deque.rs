@@ -26,18 +26,22 @@ pub struct AccessDeque {
 }
 
 impl AccessDeque {
+    /// An empty deque.
     pub fn new() -> Self {
         Self { map: HashMap::new(), nodes: Vec::new(), head: NIL, tail: NIL, free: Vec::new() }
     }
 
+    /// Number of linked keys.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no keys are linked.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Is `key` currently linked?
     pub fn contains(&self, key: u64) -> bool {
         self.map.contains_key(&key)
     }

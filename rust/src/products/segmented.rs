@@ -46,6 +46,7 @@ impl SegmentedCaffeine {
         &self.segments[idx]
     }
 
+    /// Number of independent Caffeine segments.
     pub fn segment_count(&self) -> usize {
         self.segments.len()
     }

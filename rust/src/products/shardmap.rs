@@ -196,6 +196,7 @@ impl ShardMap {
         self.shards.iter().map(|s| s.len.load(Ordering::Relaxed)).sum()
     }
 
+    /// True when no entries are present.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

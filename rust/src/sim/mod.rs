@@ -24,11 +24,14 @@ use crate::{Cache, SimCache};
 /// Outcome of a simulation run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HitStats {
+    /// Total accesses simulated.
     pub accesses: u64,
+    /// Accesses that hit.
     pub hits: u64,
 }
 
 impl HitStats {
+    /// hits / accesses (0 when nothing was accessed).
     pub fn ratio(&self) -> f64 {
         if self.accesses == 0 {
             0.0
@@ -57,20 +60,58 @@ pub fn run(cache: &mut dyn SimCache, keys: &[u64]) -> HitStats {
 pub enum Config {
     /// k-way set-associative (any of the three concurrency variants —
     /// they simulate identically single-threaded; WFSC is the default).
-    KWay { variant: Variant, ways: usize, policy: Policy, tlfu: bool },
+    KWay {
+        /// Which concurrency flavour to construct.
+        variant: Variant,
+        /// Ways per set.
+        ways: usize,
+        /// Eviction policy.
+        policy: Policy,
+        /// Layer TinyLFU admission over the cache.
+        tlfu: bool,
+    },
     /// Redis-style sampled eviction.
-    Sampled { sample: usize, policy: Policy, tlfu: bool },
+    Sampled {
+        /// Entries drawn per eviction.
+        sample: usize,
+        /// Eviction policy.
+        policy: Policy,
+        /// Layer TinyLFU admission over the cache.
+        tlfu: bool,
+    },
     /// Exact fully-associative LRU (linked list).
-    FullLru { tlfu: bool },
+    FullLru {
+        /// Layer TinyLFU admission over the cache.
+        tlfu: bool,
+    },
     /// Exact fully-associative LFU.
-    FullLfu { tlfu: bool },
+    FullLfu {
+        /// Layer TinyLFU admission over the cache.
+        tlfu: bool,
+    },
+    /// Exact fully-associative FIFO.
     FullFifo,
+    /// Exact fully-associative uniform-random eviction.
     FullRandom,
     /// Hyperbolic caching; `sample >= capacity` = exact.
-    FullHyperbolic { sample: usize, tlfu: bool },
-    Guava { segments: usize },
+    FullHyperbolic {
+        /// Entries drawn per eviction.
+        sample: usize,
+        /// Layer TinyLFU admission over the cache.
+        tlfu: bool,
+    },
+    /// Guava-style segmented LRU.
+    Guava {
+        /// Independent segments (Guava's concurrency level).
+        segments: usize,
+    },
+    /// Caffeine-style W-TinyLFU cache.
     Caffeine,
-    SegCaffeine { segments: usize },
+    /// Hash-routed independent Caffeine instances.
+    SegCaffeine {
+        /// Independent Caffeine segments.
+        segments: usize,
+    },
 }
 
 impl Config {
@@ -194,7 +235,9 @@ impl SimCache for SyncSegCaffeine {
 /// One row of a figure: configuration label and measured hit ratio.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Configuration label (cache + policy + admission).
     pub label: String,
+    /// Measured hit ratio over the whole trace.
     pub hit_ratio: f64,
 }
 

@@ -22,8 +22,11 @@ use anyhow::{anyhow, bail, Result};
 pub struct XlaSim<'rt> {
     runtime: &'rt XlaRuntime,
     entry: String,
+    /// Number of sets baked into the artifact.
     pub num_sets: usize,
+    /// Ways per set baked into the artifact.
     pub ways: usize,
+    /// Keys consumed per execute call.
     pub chunk: usize,
 }
 
@@ -107,13 +110,16 @@ impl<'rt> XlaSim<'rt> {
 pub struct SetParSim<'rt> {
     runtime: &'rt XlaRuntime,
     entry: String,
+    /// Number of sets baked into the artifact.
     pub num_sets: usize,
+    /// Ways per set baked into the artifact.
     pub ways: usize,
     /// Rounds per execute (the L dimension).
     pub steps: usize,
 }
 
 impl<'rt> SetParSim<'rt> {
+    /// Bind to a `cache_sim_setpar` artifact by entry name.
     pub fn new(runtime: &'rt XlaRuntime, entry: &str) -> Result<Self> {
         let spec = runtime
             .manifest()
@@ -131,6 +137,7 @@ impl<'rt> SetParSim<'rt> {
         })
     }
 
+    /// Total slots (= num_sets x ways).
     pub fn capacity(&self) -> usize {
         self.num_sets * self.ways
     }
@@ -270,7 +277,9 @@ pub fn fp31(key: u64) -> i32 {
 /// the lowest way). Used for parity testing and as the fast path when the
 /// runtime is not loaded.
 pub struct NativeSetSim {
+    /// Number of sets.
     pub num_sets: usize,
+    /// Ways per set.
     pub ways: usize,
     fps: Vec<i32>,
     counters: Vec<i32>,
@@ -278,6 +287,7 @@ pub struct NativeSetSim {
 }
 
 impl NativeSetSim {
+    /// A fresh, empty simulator of the given geometry.
     pub fn new(num_sets: usize, ways: usize) -> Self {
         Self {
             num_sets,
@@ -313,6 +323,7 @@ impl NativeSetSim {
         false
     }
 
+    /// Replay `keys` and count hits.
     pub fn run(&mut self, keys: &[u64]) -> HitStats {
         let mut hits = 0u64;
         for &k in keys {

@@ -18,12 +18,13 @@
 //! sweep and `benches/batched.rs` measure.
 //!
 //! Besides Mops/s, every run samples operation latency (one op in
-//! [`SAMPLE_EVERY`] per worker, so sampling does not perturb what it
+//! `SAMPLE_EVERY` per worker, so sampling does not perturb what it
 //! measures) into a [`LatencyHistogram`]; [`RunResult`] reports the p50
 //! and p99 next to the throughput summary. For batched workloads the
 //! sample is the latency of one whole batch — the latency a batched
 //! caller actually observes.
 
+use crate::lifetime::{EntryOpts, WeightDist};
 use crate::metrics::LatencyHistogram;
 use crate::tinylfu::AdmissionMode;
 use crate::trace::Trace;
@@ -33,6 +34,51 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
+/// How every fill (the put on a miss, and the resident-set install) is
+/// performed: which TTL the entry carries and which per-key weight
+/// distribution sizes it. The default (`ttl: None`, unit weights) routes
+/// through the plain [`Cache::put`] path, so TTL-free measurements are
+/// bit-identical to the pre-lifetime harness. Built from the CLI's
+/// `--ttl` / `--weight-dist` options.
+#[derive(Debug, Clone, Default)]
+pub struct FillSpec {
+    /// TTL stamped on every filled entry; `None` = immortal.
+    pub ttl: Option<Duration>,
+    /// Deterministic per-key weight distribution.
+    pub weight_dist: WeightDist,
+}
+
+impl FillSpec {
+    /// True when fills are indistinguishable from plain puts.
+    pub fn is_plain(&self) -> bool {
+        self.ttl.is_none() && self.weight_dist == WeightDist::Unit
+    }
+
+    /// The [`EntryOpts`] a fill of `key` carries.
+    pub fn opts_for(&self, key: u64) -> EntryOpts {
+        EntryOpts { ttl: self.ttl, weight: self.weight_dist.weight_of(key) }
+    }
+
+    /// Perform one fill through the cheapest matching path.
+    #[inline]
+    pub fn fill(&self, cache: &dyn Cache, key: u64, value: u64) {
+        if self.is_plain() {
+            cache.put(key, value);
+        } else {
+            cache.put_with(key, value, self.opts_for(key));
+        }
+    }
+
+    /// Human-readable summary for table headers.
+    pub fn label(&self) -> String {
+        match self.ttl {
+            None if self.weight_dist == WeightDist::Unit => "immortal".into(),
+            None => format!("immortal/{}", self.weight_dist.name()),
+            Some(ttl) => format!("ttl={ttl:?}/{}", self.weight_dist.name()),
+        }
+    }
+}
+
 /// What the workers execute.
 #[derive(Clone)]
 pub enum Workload {
@@ -41,18 +87,44 @@ pub enum Workload {
     /// Every access is a unique key: get (miss) then put (Figure 27).
     AllMiss,
     /// Only gets over a resident working set (Figure 28).
-    AllHit { working_set: u64 },
+    AllHit {
+        /// Resident keys drawn uniformly.
+        working_set: u64,
+    },
     /// `gets_per_put` gets over a resident set, then one put of a fresh
     /// key (Figures 29–30: 19:1 ≈ 95%, 9:1 ≈ 90%).
-    HitRatio { working_set: u64, gets_per_put: u32 },
+    HitRatio {
+        /// Resident keys drawn uniformly.
+        working_set: u64,
+        /// Gets issued between consecutive fresh-key puts.
+        gets_per_put: u32,
+    },
     /// Gets over a resident set issued through the batched path,
     /// `batch` keys per `get_batch` call (the batching extension; same
     /// key distribution as [`Workload::AllHit`] so the two are directly
     /// comparable).
-    Batched { working_set: u64, batch: usize },
+    Batched {
+        /// Resident keys drawn uniformly.
+        working_set: u64,
+        /// Keys per `get_batch` call.
+        batch: usize,
+    },
+    /// Get-or-fill over a uniform working set where every fill carries
+    /// the run's [`FillSpec`] (the expiration/weighted-capacity
+    /// extension): with a TTL the resident set continuously decays and
+    /// is refilled, so the steady-state hit ratio measures how cheaply
+    /// an implementation reclaims dead lines; with a weight distribution
+    /// the set budget admits fewer-but-heavier entries
+    /// (`benches/expiry.rs`, `kway synthetic --workload expiring`).
+    Expiring {
+        /// Keys drawn uniformly; misses are refilled with the run's
+        /// fill options.
+        working_set: u64,
+    },
 }
 
 impl Workload {
+    /// Short label used in tables and bench output.
     pub fn label(&self) -> String {
         match self {
             Workload::TraceReplay(t) => format!("trace:{}", t.name),
@@ -62,6 +134,7 @@ impl Workload {
                 format!("{}%-hit", 100 * *gets_per_put / (*gets_per_put + 1))
             }
             Workload::Batched { batch, .. } => format!("batched-x{batch}"),
+            Workload::Expiring { .. } => "expiring".into(),
         }
     }
 }
@@ -69,15 +142,27 @@ impl Workload {
 /// Harness configuration.
 #[derive(Clone)]
 pub struct RunConfig {
+    /// Worker thread count.
     pub threads: usize,
+    /// Wall-clock measurement window per repeat.
     pub duration: Duration,
+    /// Independent repeats (fresh cache each).
     pub repeats: usize,
+    /// Base RNG seed (perturbed per repeat and per thread).
     pub seed: u64,
+    /// TTL/weight options applied to every fill (see [`FillSpec`]).
+    pub fill: FillSpec,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
-        Self { threads: 4, duration: Duration::from_millis(500), repeats: 5, seed: 1 }
+        Self {
+            threads: 4,
+            duration: Duration::from_millis(500),
+            repeats: 5,
+            seed: 1,
+            fill: FillSpec::default(),
+        }
     }
 }
 
@@ -87,10 +172,15 @@ impl Default for RunConfig {
 /// sampled per-op histogram (nanoseconds; per *batch* for
 /// [`Workload::Batched`]).
 pub struct RunResult {
+    /// Throughput summary (Mops/s over the repeats).
     pub mops: Summary,
+    /// Total hits / total gets across all repeats.
     pub hit_ratio: f64,
+    /// Sampled per-op latency: 50th percentile, nanoseconds.
     pub lat_p50_ns: u64,
+    /// Sampled per-op latency: 99th percentile, nanoseconds.
     pub lat_p99_ns: u64,
+    /// Sampled per-op latency: mean, nanoseconds.
     pub lat_mean_ns: f64,
 }
 
@@ -116,6 +206,15 @@ pub fn measure(
     let mut total_gets = 0u64;
     for rep in 0..cfg.repeats {
         let cache = factory();
+        // A TTL/weight fill against a cache without lifetime support is
+        // a silent no-op (entries stay immortal) — say so once, or the
+        // cross-impl comparison rows would look valid when they are not.
+        if rep == 0 && !cfg.fill.is_plain() && !cache.supports_lifetime() {
+            eprintln!(
+                "warning: {} has no lifetime support; --ttl/--weight-dist fills are immortal",
+                cache.name()
+            );
+        }
         let (ops, hits, gets, secs) = one_run(cache, workload, cfg, rep as u64, &latency);
         mops.add(ops as f64 / secs / 1e6);
         total_hits += hits;
@@ -166,6 +265,7 @@ fn one_run(
         let workload = workload.clone();
         let threads = cfg.threads;
         let seed = cfg.seed ^ (rep << 32) ^ t as u64;
+        let fill = cfg.fill.clone();
         handles.push(std::thread::spawn(move || {
             // Warm-up phase 2: per-thread non-trace inserts.
             let per = (cache.capacity() / threads).max(1) as u64;
@@ -175,7 +275,7 @@ fn one_run(
             warm_done.wait();
             barrier.wait();
             let (ops, hits, gets) =
-                worker(&*cache, &workload, &stop, t, threads, seed, &latency);
+                worker(&*cache, &workload, &fill, &stop, t, threads, seed, &latency);
             total_ops.fetch_add(ops, Ordering::Relaxed);
             total_hits.fetch_add(hits, Ordering::Relaxed);
             total_gets.fetch_add(gets, Ordering::Relaxed);
@@ -192,10 +292,11 @@ fn one_run(
     match workload {
         Workload::AllHit { working_set }
         | Workload::HitRatio { working_set, .. }
-        | Workload::Batched { working_set, .. } => {
+        | Workload::Batched { working_set, .. }
+        | Workload::Expiring { working_set } => {
             for k in 0..*working_set {
                 if cache.get(k).is_none() {
-                    cache.put(k, k);
+                    cfg.fill.fill(&*cache, k, k);
                 }
             }
         }
@@ -247,10 +348,13 @@ impl<'a> Sampler<'a> {
 
 /// The worker loop; returns (ops, hits, gets). An "op" is a get or a put,
 /// matching the paper's Get/Put operations-per-second metric (every key of
-/// a batched get counts as one op).
+/// a batched get counts as one op). Every fill goes through `fill`, which
+/// routes to the plain put path unless the run carries TTLs or weights.
+#[allow(clippy::too_many_arguments)]
 fn worker(
     cache: &dyn Cache,
     workload: &Workload,
+    fill: &FillSpec,
     stop: &AtomicBool,
     thread_id: usize,
     threads: usize,
@@ -279,7 +383,7 @@ fn worker(
                         if cache.get(key).is_some() {
                             true
                         } else {
-                            cache.put(key, key);
+                            fill.fill(cache, key, key);
                             false
                         }
                     });
@@ -304,7 +408,7 @@ fn worker(
                     let key = next;
                     let hit = sampler.run(|| {
                         let hit = cache.get(key).is_some();
-                        cache.put(key, key);
+                        fill.fill(cache, key, key);
                         hit
                     });
                     if hit {
@@ -343,7 +447,7 @@ fn worker(
                     if since_put >= *gets_per_put {
                         since_put = 0;
                         let key = next;
-                        sampler.run(|| cache.put(key, key));
+                        sampler.run(|| fill.fill(cache, key, key));
                         next += 1;
                         ops += 1;
                     } else {
@@ -380,6 +484,37 @@ fn worker(
                     gets += batch as u64;
                     ops += batch as u64;
                     hits += out.iter().filter(|v| v.is_some()).count() as u64;
+                }
+                if stop.load(Ordering::Acquire) {
+                    return (ops, hits, gets);
+                }
+            }
+        }
+        Workload::Expiring { working_set } => {
+            // Get-or-fill over a uniform working set: with a TTL in the
+            // fill spec the resident set decays continuously, so the
+            // steady-state hit ratio is governed by TTL vs. re-reference
+            // interval; with weights the sets hold fewer, heavier
+            // entries. Same op accounting as trace replay.
+            let mut rng = crate::util::rng::Rng::new(seed);
+            loop {
+                for _ in 0..CHECK_EVERY {
+                    let key = rng.below(*working_set);
+                    gets += 1;
+                    let hit = sampler.run(|| {
+                        if cache.get(key).is_some() {
+                            true
+                        } else {
+                            fill.fill(cache, key, key);
+                            false
+                        }
+                    });
+                    if hit {
+                        hits += 1;
+                        ops += 1;
+                    } else {
+                        ops += 2;
+                    }
                 }
                 if stop.load(Ordering::Acquire) {
                     return (ops, hits, gets);
@@ -448,6 +583,7 @@ mod tests {
             duration: Duration::from_millis(50),
             repeats: 2,
             seed: 9,
+            ..Default::default()
         }
     }
 
@@ -539,6 +675,7 @@ mod tests {
             duration: Duration::from_millis(40),
             repeats: 2,
             seed: 5,
+            ..Default::default()
         };
         let r = measure(&factory, &Workload::AllHit { working_set: 4096 }, &cfg);
         assert!(
@@ -577,6 +714,61 @@ mod tests {
     fn workload_labels() {
         assert_eq!(Workload::AllMiss.label(), "100%-miss");
         assert_eq!(Workload::AllHit { working_set: 1 }.label(), "100%-hit");
+        assert_eq!(Workload::Expiring { working_set: 1 }.label(), "expiring");
+    }
+
+    #[test]
+    fn fill_spec_labels_and_plain_detection() {
+        use crate::lifetime::WeightDist;
+        let plain = FillSpec::default();
+        assert!(plain.is_plain());
+        assert_eq!(plain.label(), "immortal");
+        assert_eq!(plain.opts_for(7), crate::lifetime::EntryOpts::default());
+        let ttl = FillSpec { ttl: Some(Duration::from_millis(100)), ..Default::default() };
+        assert!(!ttl.is_plain());
+        let weighted = FillSpec { weight_dist: WeightDist::Zipf { max: 8 }, ..Default::default() };
+        assert!(!weighted.is_plain());
+        assert_eq!(weighted.label(), "immortal/zipf:8");
+        assert!(weighted.opts_for(7).weight >= 1);
+    }
+
+    #[test]
+    fn expiring_workload_without_ttl_behaves_like_all_hit() {
+        // No TTL in the fill spec: the pre-installed working set never
+        // decays, so the expiring loop is a pure hit loop.
+        let r = measure(
+            &kw_factory(4096),
+            &Workload::Expiring { working_set: 256 },
+            &quick_cfg(2),
+        );
+        assert!(r.hit_ratio > 0.95, "hit ratio {}", r.hit_ratio);
+        assert!(r.mops.mean() > 0.0);
+    }
+
+    #[test]
+    fn expiring_workload_with_short_ttl_misses_and_refills() {
+        // A 1 ms TTL over a 50 ms window: entries die between touches,
+        // so a healthy fraction of gets miss and refill. The run must
+        // stay well-formed (ops flowing, ratio strictly between 0 and 1).
+        let cfg = RunConfig {
+            fill: FillSpec { ttl: Some(Duration::from_millis(1)), ..Default::default() },
+            ..quick_cfg(2)
+        };
+        let r = measure(&kw_factory(4096), &Workload::Expiring { working_set: 4096 }, &cfg);
+        assert!(r.mops.mean() > 0.0);
+        assert!(r.hit_ratio < 1.0, "a 1ms TTL must produce some expiries");
+    }
+
+    #[test]
+    fn weighted_fills_run_end_to_end() {
+        use crate::lifetime::WeightDist;
+        let cfg = RunConfig {
+            fill: FillSpec { weight_dist: WeightDist::Zipf { max: 8 }, ..Default::default() },
+            ..quick_cfg(2)
+        };
+        let r = measure(&kw_factory(4096), &Workload::Expiring { working_set: 512 }, &cfg);
+        assert!(r.mops.mean() > 0.0);
+        assert!(r.hit_ratio > 0.0, "weighted resident set should still hit");
     }
 
     #[test]

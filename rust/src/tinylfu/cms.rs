@@ -139,7 +139,7 @@ impl FrequencySketch {
     }
 
     /// Record a whole batch before any of it is probed — the batched
-    /// access paths ([`super::TlfuCache::get_batch`]) call this so the
+    /// access paths ([`super::TlfuCache`]'s `get_batch`) call this so the
     /// sketch updates for a chunk land together, mirroring the k-way
     /// prepare-then-probe batching discipline.
     pub fn record_batch(&self, keys: &[u64]) {

@@ -26,6 +26,7 @@
 //! discipline the k-way batched paths use for hashing and prefetching.
 
 use super::FrequencySketch;
+use crate::lifetime::{BatchEntry, EntryOpts};
 use crate::Cache;
 use std::sync::Arc;
 
@@ -69,8 +70,10 @@ pub enum AdmissionMode {
 }
 
 impl AdmissionMode {
+    /// Both modes, for sweeps.
     pub const ALL: [AdmissionMode; 2] = [AdmissionMode::None, AdmissionMode::TinyLfu];
 
+    /// Parse from a CLI string (`none`/`off`, `tlfu`/`tinylfu`).
     pub fn parse(s: &str) -> Option<AdmissionMode> {
         match s.to_ascii_lowercase().as_str() {
             "none" | "off" => Some(AdmissionMode::None),
@@ -109,9 +112,22 @@ impl AdmissionMode {
 }
 
 /// TinyLFU admission wrapped around any concurrent cache. Implements the
-/// full [`Cache`] trait — including the batched paths — so it drops into
-/// every layer that takes a cache: the throughput harness, the
-/// coordinator service, the benches and the CLI.
+/// full [`Cache`] trait — including the batched paths and the lifetime
+/// dimension — so it drops into every layer that takes a cache: the
+/// throughput harness, the coordinator service, the benches and the CLI.
+///
+/// ```
+/// use kway::kway::KwWfsc;
+/// use kway::policy::Policy;
+/// use kway::tinylfu::TlfuCache;
+/// use kway::Cache;
+///
+/// let cache = TlfuCache::new(KwWfsc::new(1 << 10, 8, Policy::Lru), 1 << 10);
+/// assert_eq!(cache.name(), "KW-WFSC+TLFU");
+/// assert!(cache.put_admitted(7, 70), "free room always admits");
+/// assert_eq!(cache.get(7), Some(70));
+/// assert!(cache.supports_lifetime(), "lifetime support is forwarded");
+/// ```
 pub struct TlfuCache<C: Cache> {
     inner: C,
     sketch: FrequencySketch,
@@ -166,6 +182,19 @@ impl<C: Cache> TlfuCache<C> {
             false
         }
     }
+
+    /// [`TlfuCache::put_admitted`] with lifetime/weight options: the
+    /// admission decision is identical (the sketch scores *keys*, not
+    /// lifetimes), the options are simply forwarded to the inner cache.
+    pub fn put_with_admitted(&self, key: u64, value: u64, opts: EntryOpts) -> bool {
+        self.sketch.record(key);
+        if self.admits(key) {
+            self.inner.put_with(key, value, opts);
+            true
+        } else {
+            false
+        }
+    }
 }
 
 impl<C: Cache> Cache for TlfuCache<C> {
@@ -177,6 +206,10 @@ impl<C: Cache> Cache for TlfuCache<C> {
 
     fn put(&self, key: u64, value: u64) {
         self.put_admitted(key, value);
+    }
+
+    fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        self.put_with_admitted(key, value, opts);
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -201,12 +234,42 @@ impl<C: Cache> Cache for TlfuCache<C> {
         }
     }
 
+    fn put_batch_with(&self, items: &[BatchEntry]) {
+        // Same discipline as `put_batch`: record the whole chunk before
+        // the first probe, filter by admission, forward the survivors
+        // through the inner cache's batched lifetime path.
+        for item in items {
+            self.sketch.record(item.key);
+        }
+        let mut admitted: Vec<BatchEntry> = Vec::with_capacity(items.len());
+        for item in items {
+            if self.admits(item.key) {
+                admitted.push(*item);
+            }
+        }
+        if !admitted.is_empty() {
+            self.inner.put_batch_with(&admitted);
+        }
+    }
+
     fn capacity(&self) -> usize {
         self.inner.capacity()
     }
 
     fn len(&self) -> usize {
         self.inner.len()
+    }
+
+    fn weight(&self) -> u64 {
+        self.inner.weight()
+    }
+
+    fn supports_lifetime(&self) -> bool {
+        self.inner.supports_lifetime()
+    }
+
+    fn sweep_expired(&self, max_sets: usize) -> usize {
+        self.inner.sweep_expired(max_sets)
     }
 
     fn name(&self) -> &'static str {
@@ -313,6 +376,46 @@ mod tests {
         c.put_batch(&items);
         for &(k, v) in &items {
             assert_eq!(c.get(k), Some(v), "key {k}");
+        }
+    }
+
+    #[test]
+    fn expired_victims_always_admit() {
+        use std::time::Duration;
+        // One full set whose lines are all expired: even a sketch-cold
+        // candidate must be admitted, because `peek_victim` reports an
+        // expired line as free room (no live entry is displaced).
+        let c = TlfuCache::new(KwWfsc::new(4, 4, Policy::Lfu), 4);
+        for key in 0..4u64 {
+            c.put_with(key, key, crate::lifetime::EntryOpts::ttl(Duration::ZERO));
+        }
+        assert!(c.put_with_admitted(100, 100, crate::lifetime::EntryOpts::default()));
+        assert_eq!(c.get(100), Some(100));
+    }
+
+    #[test]
+    fn put_with_forwards_lifetime_through_admission() {
+        use std::time::Duration;
+        let c = TlfuCache::new(KwWfsc::new(1024, 8, Policy::Lru), 1024);
+        c.put_with(5, 50, crate::lifetime::EntryOpts::ttl(Duration::ZERO));
+        assert_eq!(c.get(5), None, "expired keys are never returned through the wrapper");
+        c.put_with(6, 60, crate::lifetime::EntryOpts::ttl(Duration::from_secs(3600)));
+        assert_eq!(c.get(6), Some(60));
+        // Batched variant: per-item opts survive the admission filter.
+        let items: Vec<crate::lifetime::BatchEntry> = (10..20u64)
+            .map(|k| {
+                let opts = if k % 2 == 0 {
+                    crate::lifetime::EntryOpts::ttl(Duration::ZERO)
+                } else {
+                    crate::lifetime::EntryOpts::default()
+                };
+                crate::lifetime::BatchEntry::new(k, k + 1, opts)
+            })
+            .collect();
+        c.put_batch_with(&items);
+        for k in 10..20u64 {
+            let expect = if k % 2 == 0 { None } else { Some(k + 1) };
+            assert_eq!(c.get(k), expect, "key {k}");
         }
     }
 

@@ -35,14 +35,17 @@ pub struct TlfuSim<C> {
 }
 
 impl<C: SimCache + SimVictimPeek> TlfuSim<C> {
+    /// Wrap `inner` with a TinyLFU filter sized for `capacity` entries.
     pub fn new(inner: C, capacity: usize) -> Self {
         Self { inner, sketch: FrequencySketch::new(capacity) }
     }
 
+    /// The wrapped cache.
     pub fn inner(&self) -> &C {
         &self.inner
     }
 
+    /// The frequency sketch (tests read the aging epoch here).
     pub fn sketch(&self) -> &FrequencySketch {
         &self.sketch
     }

@@ -22,19 +22,24 @@ pub mod synthetic;
 /// A trace: a name plus the sequence of accessed keys.
 #[derive(Debug, Clone)]
 pub struct Trace {
+    /// Trace model name (reports and file naming).
     pub name: String,
+    /// The accessed keys, in order.
     pub keys: Vec<u64>,
 }
 
 impl Trace {
+    /// Wrap a key sequence as a named trace.
     pub fn new(name: impl Into<String>, keys: Vec<u64>) -> Self {
         Self { name: name.into(), keys }
     }
 
+    /// Number of accesses.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// True when the trace has no accesses.
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }

@@ -1,6 +1,6 @@
 //! Synthetic workload building blocks.
 //!
-//! Each generator is deterministic in its seed. The [`Mix`] combinator
+//! Each generator is deterministic in its seed. The [`mix`] combinator
 //! interleaves components with given weights, which is how the models in
 //! [`super::paper`] compose skew (Zipf), recency (drifting working sets)
 //! and scans (sequential sweeps) into trace shapes that reward the same
@@ -91,9 +91,11 @@ pub fn drift(
     out
 }
 
-/// One weighted component of a [`Mix`].
+/// One weighted component of a [`mix`].
 pub struct Component {
+    /// Relative share of accesses drawn from this component.
     pub weight: f64,
+    /// The component's access sequence.
     pub keys: Vec<u64>,
 }
 

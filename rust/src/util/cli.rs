@@ -8,9 +8,11 @@ use std::collections::BTreeMap;
 /// positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first non-`--` token), if any.
     pub command: Option<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Tokens that are neither the subcommand nor options.
     pub positional: Vec<String>,
 }
 

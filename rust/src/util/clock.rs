@@ -14,6 +14,7 @@ pub struct LogicalClock {
 }
 
 impl LogicalClock {
+    /// A fresh clock starting at 1 (0 is the never-touched sentinel).
     pub fn new() -> Self {
         // Start at 1 so that "0" can serve as the never-touched sentinel.
         Self { now: AtomicU64::new(1) }
@@ -39,14 +40,17 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Seconds elapsed since [`Stopwatch::start`].
     pub fn elapsed_secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Nanoseconds elapsed since [`Stopwatch::start`].
     pub fn elapsed_nanos(&self) -> u128 {
         self.start.elapsed().as_nanos()
     }

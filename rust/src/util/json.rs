@@ -12,16 +12,24 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number with no fractional part.
     Int(i64),
+    /// A fractional number.
     Float(f64),
+    /// A string.
     Str(String),
+    /// An ordered array.
     Array(Vec<Json>),
+    /// An object; key order is preserved for deterministic output.
     Object(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -29,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The integral payload (`Int`, or a fraction-free `Float`).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Int(n) => Some(*n),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload as a float (`Int` or `Float`).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Int(n) => Some(*n as f64),
@@ -45,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Array`.
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Array(a) => Some(a),
@@ -59,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The fields, if this is an `Object`.
     pub fn as_object(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Object(o) => Some(o),

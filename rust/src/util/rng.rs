@@ -105,6 +105,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// A Zipf(α) sampler over `{0, .., n-1}`.
     pub fn new(n: u64, alpha: f64) -> Self {
         assert!(n > 0, "Zipf needs a non-empty universe");
         assert!(alpha > 0.0, "Zipf exponent must be positive");

@@ -11,10 +11,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty summary.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Summarize an iterator of samples.
     pub fn from_samples(samples: impl IntoIterator<Item = f64>) -> Self {
         let mut s = Self::new();
         for x in samples {
@@ -23,6 +25,7 @@ impl Summary {
         s
     }
 
+    /// Add one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
         let n = self.samples.len() as f64;
@@ -31,10 +34,12 @@ impl Summary {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Number of samples.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// Arithmetic mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -48,10 +53,12 @@ impl Summary {
         }
     }
 
+    /// Smallest sample (`inf` when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (`-inf` when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -76,6 +83,7 @@ impl Summary {
         }
     }
 
+    /// The 50th percentile.
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }

@@ -1,0 +1,276 @@
+//! The entry-lifetime contract across every lifetime-supporting
+//! implementation (DESIGN.md §Expiration, §Weighted capacity):
+//!
+//! 1. **An expired key is never returned** — by single gets or batched
+//!    gets — whether the entry was born expired (TTL 0) or outlived a
+//!    real deadline.
+//! 2. **Weight accounting never exceeds a set's capacity share** once
+//!    churn quiesces, including under concurrent weighted puts (exact at
+//!    all times for KW-LS, which mutates under the set lock; the
+//!    wait-free variants repair on insert behind a publish fence).
+//! 3. **TTL = ∞ is bit-identical to the pre-lifetime behaviour**: a
+//!    cache driven through `put_with` with default options returns, step
+//!    for step, exactly what a twin driven through plain `put` returns —
+//!    and never reads the wall clock (the activity flags stay cold).
+//!
+//! Implementations without lifetime support (the `products/`
+//! re-implementations) honestly report it and treat every entry as
+//! immortal; the lineup test pins who claims what.
+
+use kway::fully::Sampled;
+use kway::kway::{KwLs, KwWfa, KwWfsc};
+use kway::policy::Policy;
+use kway::products::{CaffeineLike, GuavaLike, SegmentedCaffeine};
+use kway::tinylfu::TlfuCache;
+use kway::util::rng::Rng;
+use kway::{Cache, EntryOpts};
+use std::time::Duration;
+
+/// Every implementation that claims lifetime support, at a capacity
+/// large enough that the test keys never face capacity eviction.
+fn lifetime_lineup() -> Vec<Box<dyn Cache>> {
+    let capacity = 4096;
+    vec![
+        Box::new(KwWfa::new(capacity, 8, Policy::Lru)),
+        Box::new(KwWfsc::new(capacity, 8, Policy::Lru)),
+        Box::new(KwLs::new(capacity, 8, Policy::Lru)),
+        Box::new(Sampled::with_defaults(capacity, 8, Policy::Lru)),
+        Box::new(TlfuCache::new(KwWfsc::new(capacity, 8, Policy::Lru), capacity)),
+    ]
+}
+
+#[test]
+fn lineup_claims_match_reality() {
+    for cache in lifetime_lineup() {
+        assert!(cache.supports_lifetime(), "{} must support lifetime", cache.name());
+    }
+    // The product re-implementations honestly report no support (their
+    // put_with stores immortal unit-weight entries — the trait default).
+    let products: Vec<Box<dyn Cache>> = vec![
+        Box::new(GuavaLike::new(1024, 4)),
+        Box::new(CaffeineLike::new(1024)),
+        Box::new(SegmentedCaffeine::new(1024, 4)),
+    ];
+    for cache in products {
+        assert!(!cache.supports_lifetime(), "{} claims unimplemented support", cache.name());
+        // And the default really is "immortal": a zero-TTL put stays.
+        cache.put_with(1, 11, EntryOpts::ttl(Duration::ZERO));
+        assert_eq!(cache.get(1), Some(11), "{}: default put_with is a plain put", cache.name());
+    }
+}
+
+#[test]
+fn expired_keys_are_never_returned_single_get() {
+    for cache in lifetime_lineup() {
+        let name = cache.name();
+        // Born expired (TTL 0): never readable, no sleeping needed.
+        cache.put_with(1, 10, EntryOpts::ttl(Duration::ZERO));
+        assert_eq!(cache.get(1), None, "{name}: zero-TTL key returned");
+        // Real deadline: readable now, gone after it passes. The window
+        // is generous (100 ms) so scheduler hiccups between the put and
+        // the first get cannot flake the "live" assertion.
+        cache.put_with(2, 20, EntryOpts::ttl(Duration::from_millis(100)));
+        assert_eq!(cache.get(2), Some(20), "{name}: live key must hit");
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(cache.get(2), None, "{name}: out-lived key returned");
+        // Immortal neighbours are untouched.
+        cache.put(3, 30);
+        assert_eq!(cache.get(3), Some(30), "{name}");
+        // An overwrite revives an expired key (fresh lifetime).
+        cache.put(1, 11);
+        assert_eq!(cache.get(1), Some(11), "{name}: overwrite must revive");
+    }
+}
+
+#[test]
+fn expired_keys_are_never_returned_batched_get() {
+    for cache in lifetime_lineup() {
+        let name = cache.name();
+        // Interleave born-expired and immortal keys, then read the whole
+        // range through the batched path: expired positions must be None
+        // in input order.
+        for key in 0..200u64 {
+            if key % 3 == 0 {
+                cache.put_with(key, key + 1000, EntryOpts::ttl(Duration::ZERO));
+            } else {
+                cache.put(key, key + 1000);
+            }
+        }
+        let keys: Vec<u64> = (0..200u64).collect();
+        let mut out = Vec::new();
+        cache.get_batch(&keys, &mut out);
+        assert_eq!(out.len(), keys.len(), "{name}");
+        for (i, &key) in keys.iter().enumerate() {
+            let expect = if key % 3 == 0 { None } else { Some(key + 1000) };
+            assert_eq!(out[i], expect, "{name}: position {i} key {key}");
+        }
+    }
+}
+
+#[test]
+fn sweep_expired_reclaims_dead_lines_everywhere() {
+    for cache in lifetime_lineup() {
+        let name = cache.name();
+        for key in 0..100u64 {
+            if key < 50 {
+                cache.put_with(key, key, EntryOpts::ttl(Duration::ZERO));
+            } else {
+                cache.put(key, key);
+            }
+        }
+        let reclaimed = cache.sweep_expired(usize::MAX);
+        assert_eq!(reclaimed, 50, "{name}: full sweep reclaims every dead line");
+        assert_eq!(cache.len(), 50, "{name}");
+        assert_eq!(cache.sweep_expired(usize::MAX), 0, "{name}: second sweep finds nothing");
+    }
+}
+
+/// A scripted interleaving of puts and gets driven by a seeded RNG.
+/// Returns the trace of every get's answer plus the final (len, weight).
+fn drive(cache: &dyn Cache, plain_put: bool, seed: u64) -> (Vec<Option<u64>>, usize, u64) {
+    let mut rng = Rng::new(seed);
+    let mut answers = Vec::new();
+    let mut batch_out = Vec::new();
+    for _ in 0..4000 {
+        let key = rng.below(1024);
+        if rng.chance(0.5) {
+            let value = key.wrapping_mul(31);
+            if plain_put {
+                cache.put(key, value);
+            } else {
+                cache.put_with(key, value, EntryOpts::default());
+            }
+        } else if rng.chance(0.2) {
+            let keys: Vec<u64> = (0..8).map(|_| rng.below(1024)).collect();
+            batch_out.clear();
+            cache.get_batch(&keys, &mut batch_out);
+            answers.extend(batch_out.iter().copied());
+        } else {
+            answers.push(cache.get(key));
+        }
+    }
+    (answers, cache.len(), cache.weight())
+}
+
+#[test]
+fn ttl_infinity_is_bit_identical_to_plain_puts() {
+    // Two twins of every k-way variant, one driven through `put`, one
+    // through `put_with(.., EntryOpts::default())`, over the same
+    // scripted op sequence (capacity 256 so evictions DO happen and the
+    // victim choices are exercised too): every single answer must match.
+    type Mk = fn() -> Box<dyn Cache>;
+    let makers: [(&str, Mk); 4] = [
+        ("KW-WFA", || Box::new(KwWfa::new(256, 8, Policy::Lru))),
+        ("KW-WFSC", || Box::new(KwWfsc::new(256, 8, Policy::Lru))),
+        ("KW-LS", || Box::new(KwLs::new(256, 8, Policy::Lru))),
+        ("sampled", || Box::new(Sampled::new(256, 8, Policy::Lru, 1))),
+    ];
+    for (name, mk) in makers {
+        let via_put = mk();
+        let via_put_with = mk();
+        let (a, len_a, weight_a) = drive(&*via_put, true, 99);
+        let (b, len_b, weight_b) = drive(&*via_put_with, false, 99);
+        assert_eq!(a, b, "{name}: answer traces diverged");
+        assert_eq!(len_a, len_b, "{name}: resident sets diverged");
+        assert_eq!(weight_a, weight_b, "{name}: weights diverged");
+        assert_eq!(weight_a, len_a as u64, "{name}: default weights must be 1");
+        // No TTL ever flowed in, so sweeping reclaims nothing.
+        assert_eq!(via_put_with.sweep_expired(usize::MAX), 0, "{name}");
+    }
+}
+
+/// Concurrent weighted churn: random weights 1..=4 hammered from four
+/// threads, then the per-set weight bound is checked after quiescence.
+fn weighted_churn<C: Cache>(cache: &C, seed: u64) {
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ t);
+                for _ in 0..20_000 {
+                    let key = rng.below(2048);
+                    if rng.chance(0.25) {
+                        let _ = cache.get(key);
+                    } else {
+                        let weight = 1 + rng.below(4) as u32;
+                        cache.put_with(key, key, EntryOpts::default().weighted(weight));
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn weight_never_exceeds_per_set_budget_under_concurrent_churn_wfa() {
+    let cache = KwWfa::new(1024, 8, Policy::Lru);
+    weighted_churn(&cache, 11);
+    let max = cache.max_set_weight();
+    assert!(max <= 8, "KW-WFA: quiesced set weight {max} exceeds the budget of 8");
+    assert!(cache.weight() <= cache.capacity() as u64);
+}
+
+#[test]
+fn weight_never_exceeds_per_set_budget_under_concurrent_churn_wfsc() {
+    let cache = KwWfsc::new(1024, 8, Policy::Lru);
+    weighted_churn(&cache, 22);
+    let max = cache.max_set_weight();
+    assert!(max <= 8, "KW-WFSC: quiesced set weight {max} exceeds the budget of 8");
+    assert!(cache.weight() <= cache.capacity() as u64);
+}
+
+#[test]
+fn weight_never_exceeds_per_set_budget_under_concurrent_churn_ls() {
+    let cache = KwLs::new(1024, 8, Policy::Lru);
+    weighted_churn(&cache, 33);
+    let max = cache.max_set_weight();
+    assert!(max <= 8, "KW-LS: set weight {max} exceeds the budget of 8 (exact under lock)");
+    assert!(cache.weight() <= cache.capacity() as u64);
+}
+
+#[test]
+fn weight_never_exceeds_capacity_under_concurrent_churn_sampled() {
+    // 16 segments of 64 weight units each; the segment lock makes the
+    // per-segment bound exact, so the total is bounded at all times.
+    let cache = Sampled::new(1024, 8, Policy::Lru, 16);
+    weighted_churn(&cache, 44);
+    let w = cache.weight();
+    assert!(w <= 1024, "sampled: weight {w} exceeds capacity 1024");
+}
+
+#[test]
+fn expiring_churn_with_sweeper_thread() {
+    // TTL'd weighted churn racing the incremental sweep hook: no panics,
+    // no phantom values, and after everything expires a full sweep
+    // leaves the cache empty.
+    let cache = KwWfsc::new(1024, 8, Policy::Lru);
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let cache = &cache;
+            scope.spawn(move || {
+                let mut rng = Rng::new(7 ^ t);
+                for _ in 0..10_000 {
+                    let key = rng.below(4096);
+                    if rng.chance(0.4) {
+                        if let Some(v) = cache.get(key) {
+                            assert_eq!(v, key, "phantom value for key {key}");
+                        }
+                    } else {
+                        let opts = EntryOpts::ttl(Duration::from_millis(rng.below(3)))
+                            .weighted(1 + rng.below(3) as u32);
+                        cache.put_with(key, key, opts);
+                    }
+                }
+            });
+        }
+        let cache = &cache;
+        scope.spawn(move || {
+            for _ in 0..200 {
+                cache.sweep_expired(16);
+                std::thread::yield_now();
+            }
+        });
+    });
+    std::thread::sleep(Duration::from_millis(10)); // outlive every TTL (max 2 ms)
+    cache.sweep_expired(usize::MAX);
+    assert_eq!(cache.len(), 0, "everything carried a short TTL; all must be reclaimed");
+}
