@@ -57,7 +57,14 @@ fn main() {
                 let factory =
                     impl_factory(name, capacity, threads, Policy::Lru, AdmissionMode::None)
                         .unwrap();
-                let cfg = RunConfig { threads, duration, repeats, seed: 42, fill: fill.clone() };
+                let cfg = RunConfig {
+                    threads,
+                    duration,
+                    repeats,
+                    seed: 42,
+                    fill: fill.clone(),
+                    ..Default::default()
+                };
                 let r = measure(&*factory, &Workload::Expiring { working_set }, &cfg);
                 println!(
                     "{:10} {:>8} {:>10} {:14} {:>10.2} {:>12} {:>12} {:>8.3}",

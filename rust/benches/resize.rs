@@ -1,0 +1,91 @@
+//! Online elastic resizing (figR* series, the resize extension):
+//! throughput dip and hit-ratio recovery across grow and shrink
+//! transitions, for the three k-way variants and the sampled baseline
+//! (segment re-budgeting), each against a *twin* cache built directly at
+//! the target capacity.
+//!
+//! ```bash
+//! cargo bench --bench resize
+//! KWAY_BENCH_QUICK=1 cargo bench --bench resize
+//! ```
+//!
+//! What to look for (DESIGN.md §Elastic resizing): the `during` column
+//! is the serving-path cost of the migration — the k-way variants keep
+//! serving because the move is per-set and claims lines with the same
+//! CAS/lock protocols as eviction, so the dip should be a fraction, not
+//! a stall. The figR2x acceptance criterion is `hitR ≈ twin`: after a
+//! 2× grow refills, the steady-state hit ratio must match a cache built
+//! at 2× outright. The figRhalf row shows the shrink direction: eviction
+//! by policy order down to the smaller geometry, with the twin as the
+//! honest post-shrink ceiling. `requested` vs `effective` capacities are
+//! printed per implementation because power-of-two set rounding can
+//! inflate the k-way figure up to ~2×.
+
+use kway::figures::{quick_mode, RESIZE_FIGURES};
+use kway::policy::Policy;
+use kway::throughput::{impl_factory, measure_resize};
+use kway::tinylfu::AdmissionMode;
+use std::time::Duration;
+
+fn main() {
+    let quick = quick_mode();
+    let threads = if quick { 2 } else { 4 };
+    let phase = Duration::from_millis(if quick { 80 } else { 300 });
+    let scale = if quick { 8 } else { 1 }; // quick mode shrinks capacities
+    let impls = ["KW-WFA", "KW-WFSC", "KW-LS", "sampled"];
+
+    for fig in RESIZE_FIGURES {
+        let from = (fig.from_capacity / scale).max(1024);
+        let to = (fig.to_capacity / scale).max(1024 * fig.to_capacity / fig.from_capacity);
+        let working_set = (fig.working_set / scale as u64).max(1536);
+        println!(
+            "\n==== {}: resize {} -> {} working set {} threads {} ====",
+            fig.id, from, to, working_set, threads
+        );
+        println!(
+            "{:10} {:14} {:>9} {:>9} {:>9} {:>11} {:>7} {:>7} {:>7} {:>7}  {}",
+            "figure",
+            "impl",
+            "before",
+            "during",
+            "after",
+            "migrate(ms)",
+            "hit0",
+            "hitM",
+            "hitR",
+            "twin",
+            "req->eff"
+        );
+        for name in impls {
+            let factory =
+                impl_factory(name, from, threads, Policy::Lru, AdmissionMode::None).unwrap();
+            let twin = impl_factory(name, to, threads, Policy::Lru, AdmissionMode::None).unwrap();
+            let probe = twin();
+            let (requested, effective) = (probe.requested_capacity(), probe.capacity());
+            let r = measure_resize(&*factory, &*twin, to, working_set, threads, phase, 42);
+            println!(
+                "{:10} {:14} {:>9.2} {:>9.2} {:>9.2} {:>11.1} {:>7.3} {:>7.3} {:>7.3} {:>7.3}  {}->{}",
+                fig.id,
+                name,
+                r.before.mops,
+                r.during.mops,
+                r.after.mops,
+                r.migrate_ms,
+                r.before.hit_ratio,
+                r.during.hit_ratio,
+                r.after.hit_ratio,
+                r.twin_hit,
+                requested,
+                effective
+            );
+        }
+    }
+    println!(
+        "\nReading: before/during/after are Mops/s phases of one online\n\
+         resize; hit0/hitM/hitR the matching hit ratios; twin is a cache\n\
+         built at the target outright. Acceptance (figR2x): hitR recovers\n\
+         to twin after the grow. The during-phase dip is what the\n\
+         migration costs the serving path; migrate(ms) how long the split\n\
+         watermark took to cover every source set."
+    );
+}

@@ -51,6 +51,8 @@ pub struct ServiceMetrics {
     pub put_latency: LatencyHistogram,
     /// Operation and hit counters.
     pub ops: OpCounters,
+    /// Accepted [`CacheService::resize`] admin operations.
+    pub resizes: std::sync::atomic::AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -86,12 +88,20 @@ enum Request {
     Shutdown,
 }
 
+/// How many source sets one background-migration increment moves. Small
+/// enough that the driver never monopolizes a core, large enough that a
+/// grow of 2^19 sets completes in a few thousand increments.
+const RESIZE_STEP_SETS: usize = 64;
+
 /// A running cache service: router + worker pool over a shared cache.
 pub struct CacheService {
     cache: Arc<dyn Cache>,
     senders: Vec<Sender<Request>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<ServiceMetrics>,
+    /// Background migration drivers spawned by [`CacheService::resize`];
+    /// joined on shutdown (each terminates once its migration finishes).
+    migrators: std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Options stamped on puts that do not carry their own (from
     /// [`ServiceConfig::default_ttl`]).
     default_opts: EntryOpts,
@@ -143,7 +153,66 @@ impl CacheService {
                 cache.name()
             );
         }
-        Self { cache, senders, workers, metrics, default_opts }
+        Self {
+            cache,
+            senders,
+            workers,
+            metrics,
+            migrators: std::sync::Mutex::new(Vec::new()),
+            default_opts,
+        }
+    }
+
+    /// Admin operation: resize the cache online to `new_capacity`.
+    /// Returns `false` (and changes nothing) when the underlying cache
+    /// has no resize support. On acceptance the new geometry is installed
+    /// immediately and a **background migration driver** thread is
+    /// spawned to pump [`Cache::resize_step`] until the split watermark
+    /// covers every source set; request traffic keeps flowing throughout
+    /// (reads fall through old→new, writes help migrate their own sets).
+    /// The driver joins at shutdown; a second resize issued while one is
+    /// migrating serializes behind it inside [`Cache::resize`].
+    pub fn resize(&self, new_capacity: usize) -> bool {
+        if !self.cache.supports_resize() {
+            eprintln!(
+                "warning: {} has no resize support; the resize admin op is refused",
+                self.cache.name()
+            );
+            return false;
+        }
+        if !self.cache.resize(new_capacity) {
+            return false;
+        }
+        self.metrics.resizes.fetch_add(1, Ordering::Relaxed);
+        let cache = self.cache.clone();
+        let driver = std::thread::Builder::new()
+            .name("cache-resize-driver".into())
+            .spawn(move || {
+                while cache.resize_pending() {
+                    if cache.resize_step(RESIZE_STEP_SETS) == 0 {
+                        // Another thread claimed the remaining sets (or a
+                        // helping put is mid-drain): don't spin hot.
+                        std::thread::yield_now();
+                    }
+                }
+            })
+            .expect("spawn resize driver");
+        let mut migrators = self.migrators.lock().unwrap();
+        // Reap drivers whose migrations already completed, so a
+        // long-lived service resized periodically (the autoscaling
+        // story) holds at most the in-flight handles, not one per
+        // resize ever issued.
+        migrators.retain(|h| !h.is_finished());
+        migrators.push(driver);
+        true
+    }
+
+    /// Block until no resize migration is pending (test/admin helper; the
+    /// background driver keeps making progress on its own).
+    pub fn wait_for_resize(&self) {
+        while self.cache.resize_pending() {
+            std::thread::yield_now();
+        }
     }
 
     /// Which worker owns a key. Same hash for singles and batches, so
@@ -264,12 +333,20 @@ impl CacheService {
         &self.cache
     }
 
-    /// Stop all workers and join them.
+    /// Stop all workers (and any background migration drivers) and join
+    /// them.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         for tx in &self.senders {
             let _ = tx.send(Request::Shutdown);
         }
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.migrators.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -277,12 +354,7 @@ impl CacheService {
 
 impl Drop for CacheService {
     fn drop(&mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(Request::Shutdown);
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
@@ -539,7 +611,7 @@ mod tests {
         let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
         let s = CacheService::start(
             cache,
-            ServiceConfig { workers: 2, admission: AdmissionMode::TinyLfu },
+            ServiceConfig { workers: 2, admission: AdmissionMode::TinyLfu, ..Default::default() },
         );
         assert_eq!(s.cache().name(), "KW-WFSC+TLFU");
         let secs = drive_clients(&s, 2, 2_000, 2048, 3);
@@ -552,6 +624,34 @@ mod tests {
             s.metrics().ops.hit_ratio()
         );
         s.shutdown();
+    }
+
+    #[test]
+    fn resize_admin_op_migrates_in_the_background() {
+        let cache: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let s = CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() });
+        // 60 keys over 128 sets: no set ever overflows, so the grow must
+        // preserve every one of them.
+        for k in 0..60u64 {
+            s.put(k, k + 1);
+        }
+        for k in 0..60u64 {
+            assert_eq!(s.get(k), Some(k + 1)); // per-key FIFO: puts landed
+        }
+        assert!(s.resize(2048));
+        assert_eq!(s.metrics().resizes.load(Ordering::Relaxed), 1);
+        s.wait_for_resize();
+        assert_eq!(s.cache().capacity(), 2048);
+        for k in 0..60u64 {
+            assert_eq!(s.get(k), Some(k + 1), "key {k} lost across the grow");
+        }
+        s.shutdown();
+        // A fixed-geometry cache refuses the admin op instead of lying.
+        let fixed: Arc<dyn Cache> = Arc::new(crate::products::CaffeineLike::new(256));
+        let s2 = CacheService::start(fixed, ServiceConfig { workers: 1, ..Default::default() });
+        assert!(!s2.resize(512));
+        assert_eq!(s2.metrics().resizes.load(Ordering::Relaxed), 0);
+        s2.shutdown();
     }
 
     #[test]

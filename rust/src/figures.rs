@@ -182,6 +182,38 @@ pub const EXPIRY_FIGURES: &[ExpiryFigure] = &[
     ExpiryFigure { id: "figEWT",  ttl_ms: 250,  weight_dist: "zipf:8" },
 ];
 
+/// An elastic-resize figure (the online-resizing extension, not from the
+/// paper): the [`crate::throughput::measure_resize`] phased measurement —
+/// steady-state throughput and hit ratio before / during / after an
+/// online resize from `from_capacity` to `to_capacity`, against a twin
+/// cache built directly at the target. `benches/resize.rs` iterates this
+/// table; the `kway resize` subcommand sweeps the same dimension
+/// interactively, and `--resize-at/--resize-to` fire the same migration
+/// inside the `throughput`/`synthetic` harness runs.
+#[derive(Debug, Clone)]
+pub struct ResizeFigure {
+    /// Figure id (figR*).
+    pub id: &'static str,
+    /// Capacity the cache is built at.
+    pub from_capacity: usize,
+    /// Capacity the online resize targets.
+    pub to_capacity: usize,
+    /// Uniform get-or-fill working set driven through every phase. Sized
+    /// between the two capacities so the hit ratio is capped before a
+    /// grow and recovers to the twin's after it.
+    pub working_set: u64,
+}
+
+/// All resize figures: a 2× grow (the acceptance scenario: hit ratio
+/// must recover to the twin's), a 4× grow, and a 2× shrink (eviction by
+/// policy order; the twin shows the honest post-shrink ceiling).
+#[rustfmt::skip]
+pub const RESIZE_FIGURES: &[ResizeFigure] = &[
+    ResizeFigure { id: "figR2x",   from_capacity: 1 << 14, to_capacity: 1 << 15, working_set: 3 << 13 },
+    ResizeFigure { id: "figR4x",   from_capacity: 1 << 14, to_capacity: 1 << 16, working_set: 3 << 14 },
+    ResizeFigure { id: "figRhalf", from_capacity: 1 << 15, to_capacity: 1 << 14, working_set: 3 << 13 },
+];
+
 /// Quick-mode flag shared by every bench: set `KWAY_BENCH_QUICK=1` to run
 /// an abbreviated pass (shorter traces, fewer repeats, fewer threads).
 pub fn quick_mode() -> bool {
@@ -240,6 +272,31 @@ mod tests {
         assert!(EXPIRY_FIGURES.iter().any(|f| f.ttl_ms == 0 && f.weight_dist == "unit"));
         assert!(EXPIRY_FIGURES.iter().any(|f| f.ttl_ms > 0));
         assert!(EXPIRY_FIGURES.iter().any(|f| f.weight_dist != "unit"));
+    }
+
+    #[test]
+    fn resize_figures_are_well_formed() {
+        let mut ids: Vec<&str> = RESIZE_FIGURES.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), RESIZE_FIGURES.len(), "figR ids must be unique");
+        for f in RESIZE_FIGURES {
+            assert_ne!(f.from_capacity, f.to_capacity, "{}: a no-op resize measures nothing", f.id);
+            let (lo, hi) = (
+                f.from_capacity.min(f.to_capacity) as u64,
+                f.from_capacity.max(f.to_capacity) as u64,
+            );
+            assert!(
+                f.working_set > lo && f.working_set <= hi,
+                "{}: working set {} must sit between the capacities ({lo}, {hi}]",
+                f.id,
+                f.working_set
+            );
+        }
+        // The acceptance scenario — a 2× grow — must be present, and at
+        // least one shrink keeps the reverse direction honest.
+        assert!(RESIZE_FIGURES.iter().any(|f| f.to_capacity == 2 * f.from_capacity));
+        assert!(RESIZE_FIGURES.iter().any(|f| f.to_capacity < f.from_capacity));
     }
 
     #[test]

@@ -106,11 +106,17 @@ impl Seg {
 /// Concurrent sampled cache (the paper's "sampled" throughput line).
 pub struct Sampled {
     segments: Box<[CachePadded<Mutex<Seg>>]>,
-    seg_capacity: usize,
+    /// Per-segment entry/weight budget. Atomic because online resizing
+    /// re-derives it ([`Cache::resize`] — segment *re-budgeting*): the
+    /// fully-associative segments have no geometry to migrate, so a
+    /// resize is just a budget change plus (when shrinking) an evict-down
+    /// pass under each segment lock.
+    seg_capacity: AtomicUsize,
     policy: Policy,
     sample: usize,
     clock: LogicalClock,
-    capacity: usize,
+    /// Total capacity; atomic for the same resize reason.
+    capacity: AtomicUsize,
     /// Rotating segment cursor for [`Cache::sweep_expired`].
     sweep_cursor: AtomicUsize,
     /// Latched once any put carries a TTL or a non-unit weight; until
@@ -132,14 +138,20 @@ impl Sampled {
             .collect();
         Self {
             segments,
-            seg_capacity,
+            seg_capacity: AtomicUsize::new(seg_capacity),
             policy,
             sample,
             clock: LogicalClock::new(),
-            capacity,
+            capacity: AtomicUsize::new(capacity),
             sweep_cursor: AtomicUsize::new(0),
             lifetimed: AtomicBool::new(false),
         }
+    }
+
+    /// The per-segment entry/weight budget currently in force.
+    #[inline]
+    fn seg_budget(&self) -> usize {
+        self.seg_capacity.load(Ordering::Relaxed)
     }
 
     /// Default segment count used by the evaluation harness.
@@ -201,7 +213,8 @@ impl Cache for Sampled {
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        let budget = self.seg_capacity as u64;
+        let seg_capacity = self.seg_budget();
+        let budget = seg_capacity as u64;
         if opts.weight as u64 > budget {
             return; // heavier than a whole segment: can never fit
         }
@@ -223,7 +236,7 @@ impl Cache for Sampled {
             // baseline semantics, so plain (no-TTL, unit-weight) workloads
             // draw the exact same victims as before this dimension
             // existed; the repair loop below only handles weight overflow.
-            if seg.keys.len() >= self.seg_capacity {
+            if seg.keys.len() >= seg_capacity {
                 let victim = seg.sample_victim(self.policy, self.sample, now, now_ms, None);
                 if let Some(slot) = victim {
                     seg.remove_at(slot);
@@ -242,7 +255,7 @@ impl Cache for Sampled {
         // installed entry is spared so a legal insert never bounces
         // itself; its slot can move when remove_at swap-removes, so it
         // is re-resolved through the index every round.
-        while seg.keys.len() > self.seg_capacity || seg.weight > budget {
+        while seg.keys.len() > seg_capacity || seg.weight > budget {
             let exclude = seg.index.get(&key).copied();
             match seg.sample_victim(self.policy, self.sample, now, now_ms, exclude) {
                 Some(slot) => seg.remove_at(slot),
@@ -252,7 +265,39 @@ impl Cache for Sampled {
     }
 
     fn capacity(&self) -> usize {
-        self.capacity
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    fn supports_resize(&self) -> bool {
+        true
+    }
+
+    fn resize(&self, new_capacity: usize) -> bool {
+        if new_capacity == 0 {
+            return false;
+        }
+        // Segment re-budgeting: publish the new budgets, then (for a
+        // shrink) evict each segment down to its new share by the cache's
+        // own policy — the fully-associative baseline has no geometry to
+        // migrate, so the whole resize completes inside this call and
+        // `resize_step` never has pending work.
+        let nsegs = self.segments.len();
+        let seg_capacity = new_capacity.div_ceil(nsegs).max(1);
+        self.capacity.store(new_capacity, Ordering::Relaxed);
+        self.seg_capacity.store(seg_capacity, Ordering::Relaxed);
+        let budget = seg_capacity as u64;
+        let now = self.clock.now();
+        let now_ms = self.lifetime_now();
+        for segment in self.segments.iter() {
+            let mut seg = segment.lock().unwrap();
+            while seg.keys.len() > seg_capacity || seg.weight > budget {
+                match seg.sample_victim(self.policy, self.sample, now, now_ms, None) {
+                    Some(slot) => seg.remove_at(slot),
+                    None => break,
+                }
+            }
+        }
+        true
     }
 
     fn len(&self) -> usize {
@@ -298,8 +343,9 @@ impl Cache for Sampled {
     fn peek_victim(&self, key: u64) -> Option<u64> {
         let now = self.clock.now();
         let now_ms = self.lifetime_now();
+        let seg_capacity = self.seg_budget();
         let mut seg = self.segment(key).lock().unwrap();
-        if seg.keys.len() >= self.seg_capacity || seg.weight >= self.seg_capacity as u64 {
+        if seg.keys.len() >= seg_capacity || seg.weight >= seg_capacity as u64 {
             let slot = seg.sample_victim(self.policy, self.sample, now, now_ms, None)?;
             if lifetime::is_expired(seg.lives[slot], now_ms) {
                 return None; // an expired line counts as free room
@@ -396,6 +442,28 @@ mod tests {
         assert_eq!(c.get(2), Some(2), "the inserting key is spared");
         c.put_with(9, 9, EntryOpts::weight(9));
         assert_eq!(c.get(9), None, "oversized entries are dropped");
+    }
+
+    #[test]
+    fn resize_rebudgets_segments() {
+        let c = Sampled::new(64, 8, Policy::Lru, 4);
+        for k in 0..64u64 {
+            c.put(k, k);
+        }
+        assert!(c.supports_resize());
+        assert!(c.resize(128));
+        assert_eq!(c.capacity(), 128);
+        assert_eq!(c.requested_capacity(), 128);
+        assert!(!c.resize_pending(), "re-budgeting completes synchronously");
+        assert_eq!(c.resize_step(usize::MAX), 0);
+        for k in 64..128u64 {
+            c.put(k, k);
+        }
+        assert!(c.len() > 64, "grown budgets must admit more entries: {}", c.len());
+        // Shrink evicts down to the new per-segment share immediately.
+        assert!(c.resize(32));
+        assert!(c.len() <= 32, "len {} exceeds the shrunk capacity", c.len());
+        assert!(!c.resize(0), "a zero capacity is refused, not applied");
     }
 
     #[test]

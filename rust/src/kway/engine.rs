@@ -7,7 +7,7 @@
 //! protocol* around those steps differs between designs. This module owns
 //! steps (a)–(c):
 //!
-//! * key preparation — one hash pass yields the set index, the encoded
+//! * key preparation — one hash pass yields the set hash, the encoded
 //!   key word and the fingerprint ([`SetEngine::prepare`]);
 //! * the probe/re-validate read loop ([`SetEngine::probe_get`]);
 //! * policy *touch* semantics on hits, in an atomic flavour for the
@@ -17,7 +17,15 @@
 //! * the batched access driver ([`SetEngine::for_batch`]) that pre-hashes
 //!   a chunk of keys and software-prefetches their set lines before the
 //!   first probe, amortizing hashing and overlapping memory latency —
-//!   the same trick data-plane limited-associativity caches use.
+//!   the same trick data-plane limited-associativity caches use;
+//! * the **elastic-resize machinery** ([`Elastic`] / [`Epoch`]): the
+//!   epoch-stamped geometry pair (old/new set counts plus an atomic
+//!   split watermark) and the claim/finish protocol of the incremental
+//!   linear-hash migration, plus the policy-uniform placement rule for
+//!   migrated entries ([`SetEngine::place_migrated`]). The per-variant
+//!   `migrate_set` bodies live with their storage, but the lifecycle —
+//!   who claims which source sets, when the old table retires — is
+//!   decided once, here (DESIGN.md §Elastic resizing).
 //!
 //! [`KwWfa`](super::KwWfa), [`KwWfsc`](super::KwWfsc) and
 //! [`KwLs`](super::KwLs) are thin storage adapters over this engine: each
@@ -30,7 +38,8 @@ use crate::lifetime::{self, EntryOpts};
 use crate::policy::Policy;
 use crate::util::clock::LogicalClock;
 use crate::util::hash;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Upper bound on ways so victim scans can use stack buffers.
 pub(crate) const MAX_WAYS: usize = 128;
@@ -43,7 +52,8 @@ pub(crate) const BATCH_CHUNK: usize = 32;
 
 /// A key prepared for probing: hashing is done exactly once here, so the
 /// batched paths can amortize it across a whole chunk before touching any
-/// set memory.
+/// set memory, and the resize path can derive the key's set under both
+/// the old and the new geometry from the same hash.
 #[derive(Debug, Clone, Copy, Default)]
 pub(crate) struct PreparedKey {
     /// The user key.
@@ -53,7 +63,11 @@ pub(crate) struct PreparedKey {
     /// Non-zero fingerprint (only WFSC stores it, but it is one `mix64`
     /// to derive, so preparing it unconditionally keeps one code path).
     pub fp: u64,
-    /// Set index.
+    /// Full set hash; any epoch's set index is `hash & (num_sets - 1)`.
+    pub hash: u64,
+    /// Set index under the geometry passed to [`SetEngine::prepare`]
+    /// (used for prefetching; operations re-derive the index from
+    /// `hash` against their own epoch snapshot).
     pub set: usize,
 }
 
@@ -68,17 +82,13 @@ pub(crate) struct VictimChoice {
     pub guard: u64,
 }
 
-/// Geometry + policy + logical clock — the state every variant shares —
-/// plus the probe / touch / victim logic over it.
-///
-/// The engine also owns the *lifetime activity flags*: whether any put so
-/// far carried a TTL or a non-unit weight. Until a flag flips, the
-/// corresponding checks (life-word loads on probes, weight-repair scans
-/// on puts) are skipped entirely, so a cache that never sees
-/// [`EntryOpts`] runs the exact pre-lifetime code path (DESIGN.md
-/// §Expiration: "bit-identical when no TTLs are set").
+/// Policy + logical clock + the lifetime activity flags — the
+/// geometry-independent state every variant shares — plus the probe /
+/// touch / victim logic over it. The *geometry* itself lives in the
+/// variant's [`Elastic`] holder since the resize refactor: it is
+/// epoch-stamped, not frozen.
 pub(crate) struct SetEngine {
-    geo: Geometry,
+    ways: usize,
     policy: Policy,
     clock: LogicalClock,
     /// Any put so far carried a TTL.
@@ -90,11 +100,11 @@ pub(crate) struct SetEngine {
 }
 
 impl SetEngine {
-    /// An engine for (at least) `capacity` slots in sets of `ways`.
-    pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
+    /// An engine for sets of `ways` entries evicting under `policy`.
+    pub fn new(ways: usize, policy: Policy) -> Self {
         assert!(ways <= MAX_WAYS, "ways must be <= {MAX_WAYS}");
         Self {
-            geo: Geometry::new(capacity, ways),
+            ways,
             policy,
             clock: LogicalClock::new(),
             ttl_active: AtomicBool::new(false),
@@ -130,10 +140,18 @@ impl SetEngine {
     /// Per-set weight budget. Capacity is interpreted as the total
     /// *weight* budget, so each set's share is its way count — with unit
     /// weights the bound degenerates to "at most k entries", exactly the
-    /// pre-lifetime semantics (DESIGN.md §Weighted capacity).
+    /// pre-lifetime semantics (DESIGN.md §Weighted capacity). Resizes
+    /// scale the set *count*, never the ways, so the per-set budget is a
+    /// constant of the cache.
     #[inline]
     pub fn set_budget(&self) -> u64 {
-        self.geo.ways() as u64
+        self.ways as u64
+    }
+
+    /// Ways per set (fixed across resizes).
+    #[inline]
+    pub fn ways(&self) -> usize {
+        self.ways
     }
 
     /// Coarse wall-clock for expiry checks: the shared millisecond clock
@@ -149,16 +167,11 @@ impl SetEngine {
     }
 
     /// Hand out the rotating start set for an incremental sweep of
-    /// `max_sets` sets; consecutive calls cover the whole cache.
+    /// `max_sets` of the current `num_sets` sets; consecutive calls cover
+    /// the whole cache.
     #[inline]
-    pub fn sweep_start(&self, max_sets: usize) -> usize {
-        self.sweep_cursor.fetch_add(max_sets, Ordering::Relaxed) % self.geo.num_sets()
-    }
-
-    /// The rounded geometry.
-    #[inline]
-    pub fn geometry(&self) -> Geometry {
-        self.geo
+    pub fn sweep_start(&self, max_sets: usize, num_sets: usize) -> usize {
+        self.sweep_cursor.fetch_add(max_sets, Ordering::Relaxed) % num_sets
     }
 
     /// The eviction policy.
@@ -179,14 +192,18 @@ impl SetEngine {
         self.clock.now()
     }
 
-    /// Hash a key once into everything a probe needs.
+    /// Hash a key once into everything a probe needs. `geo` supplies the
+    /// set mask for the prefetch-facing `set` field; operations re-mask
+    /// `hash` against their own epoch snapshot.
     #[inline]
-    pub fn prepare(&self, key: u64) -> PreparedKey {
+    pub fn prepare(&self, key: u64, geo: Geometry) -> PreparedKey {
+        let hash = Geometry::hash_of(key);
         PreparedKey {
             key,
             ik: Geometry::encode_key(key),
             fp: hash::fingerprint(key),
-            set: self.geo.set_of(key),
+            hash,
+            set: geo.set_of_hash(hash),
         }
     }
 
@@ -306,6 +323,64 @@ impl SetEngine {
         VictimChoice { way, guard: guards[way] }
     }
 
+    /// Placement rule for a migrated entry arriving in a *full* target
+    /// set (the shrink-merge case, or a grown set refilled by concurrent
+    /// churn): the migrated entry competes with the residents under the
+    /// cache's own policy, carrying the metadata it earned in the old
+    /// table. Returns `Some(way)` when a resident loses (replace it) and
+    /// `None` when the migrated entry itself is the policy victim (drop
+    /// it — exactly what the policy would have evicted had the sets
+    /// always been merged). Mid-publish residents (`u64::MAX` metadata)
+    /// are never displaced. For a total-order policy like LRU this greedy
+    /// merge keeps exactly the top-k entries of the merged sets — the
+    /// "shrink evicts by policy order" contract `rust/tests/resize.rs`
+    /// pins.
+    pub fn place_migrated(
+        &self,
+        k: usize,
+        now: u64,
+        metas: &[u64],
+        migrated_meta: u64,
+    ) -> Option<usize> {
+        debug_assert!(k <= MAX_WAYS);
+        // One slot wider than the victim-scan buffers: the migrated
+        // entry competes as a (k+1)-th candidate even at ways == MAX_WAYS.
+        let mut all = [u64::MAX; MAX_WAYS + 1];
+        all[..k].copy_from_slice(&metas[..k]);
+        all[k] = migrated_meta;
+        let pick = self.select_victim(&all[..k + 1], now);
+        (pick != k && metas[pick] != u64::MAX).then_some(pick)
+    }
+
+    /// Drive a batched pass: prepare (hash) a chunk of items up front,
+    /// issue a software prefetch for each item's set line, then run `op`
+    /// per item in input order. Preparing a whole chunk before the first
+    /// probe amortizes hashing and overlaps the set lines' memory latency
+    /// with useful work instead of stalling on each miss in turn. `geo`
+    /// is the batch-entry geometry snapshot; it only steers prefetches,
+    /// so a resize landing mid-batch costs at worst a useless prefetch.
+    #[inline]
+    pub fn for_batch<I>(
+        &self,
+        geo: Geometry,
+        items: &[I],
+        key_of: impl Fn(&I) -> u64,
+        prefetch_set: impl Fn(usize),
+        mut op: impl FnMut(PreparedKey, &I),
+    ) {
+        let mut prepared = [PreparedKey::default(); BATCH_CHUNK];
+        for chunk in items.chunks(BATCH_CHUNK) {
+            for (i, item) in chunk.iter().enumerate() {
+                let pk = self.prepare(key_of(item), geo);
+                prefetch_set(pk.set);
+                prepared[i] = pk;
+            }
+            for (i, item) in chunk.iter().enumerate() {
+                op(prepared[i], item);
+            }
+        }
+    }
+
     /// Shared `peek_victim` (the advisory preview used by TinyLFU
     /// admission). `load_key` must yield the *effective* key word of a
     /// way: [`EMPTY`] when the way is free, [`RESERVED`] when it is
@@ -352,31 +427,197 @@ impl SetEngine {
         let vi = self.select_victim(&metas[..k], now);
         (keys[vi] != RESERVED).then(|| Geometry::decode_key(keys[vi]))
     }
+}
 
-    /// Drive a batched pass: prepare (hash) a chunk of items up front,
-    /// issue a software prefetch for each item's set line, then run `op`
-    /// per item in input order. Preparing a whole chunk before the first
-    /// probe amortizes hashing and overlaps the set lines' memory latency
-    /// with useful work instead of stalling on each miss in turn.
+/// One geometry epoch of an elastic cache: the target geometry, its
+/// storage, and — while a resize is migrating — a pointer back to the
+/// *source* epoch plus the linear-hash split watermark over its sets.
+///
+/// `prev == null` means "not resizing": the epoch is self-contained and
+/// every operation touches only `table`. While `prev` is set, readers
+/// that miss in `table` fall through to the source epoch's table, and
+/// writers drain their key's source set into `table` before inserting
+/// (help-on-write), so no admitted entry is ever lost to the move.
+pub(crate) struct Epoch<T> {
+    /// Target geometry of this epoch.
+    pub geo: Geometry,
+    /// Storage for `geo`. Shared (`Arc`) so the completion epoch can
+    /// reuse the migrated-into table without copying it.
+    pub table: Arc<T>,
+    /// The epoch being migrated *from*; null once migration completed.
+    prev: *const Epoch<T>,
+    /// Next source set a background `resize_step` claims (monotone;
+    /// claims beyond the source set count are harmless no-ops).
+    watermark: AtomicUsize,
+    /// Source sets whose claimed migration step has completed. When this
+    /// reaches the source set count the resize is finished and the old
+    /// table retires from the read path.
+    drained: AtomicUsize,
+}
+
+// SAFETY: `prev` points at an epoch owned by the same `Elastic`'s
+// retired-epoch list, which outlives every reader (epochs are never freed
+// before the Elastic itself drops); all mutable state is atomic.
+unsafe impl<T: Send + Sync> Send for Epoch<T> {}
+unsafe impl<T: Send + Sync> Sync for Epoch<T> {}
+
+impl<T> Epoch<T> {
+    /// The epoch being migrated from, while a resize is in flight.
     #[inline]
-    pub fn for_batch<I>(
-        &self,
-        items: &[I],
-        key_of: impl Fn(&I) -> u64,
-        prefetch_set: impl Fn(usize),
-        mut op: impl FnMut(PreparedKey, &I),
-    ) {
-        let mut prepared = [PreparedKey::default(); BATCH_CHUNK];
-        for chunk in items.chunks(BATCH_CHUNK) {
-            for (i, item) in chunk.iter().enumerate() {
-                let pk = self.prepare(key_of(item));
-                prefetch_set(pk.set);
-                prepared[i] = pk;
-            }
-            for (i, item) in chunk.iter().enumerate() {
-                op(prepared[i], item);
-            }
+    pub fn prev(&self) -> Option<&Epoch<T>> {
+        // SAFETY: see the Send/Sync justification above.
+        unsafe { self.prev.as_ref() }
+    }
+}
+
+/// Holder of an elastic cache's epoch chain: one atomic pointer to the
+/// current epoch, plus ownership of every epoch ever installed.
+///
+/// Epochs are *retired, never freed* while the cache lives: a reader that
+/// snapshotted an epoch just before a transition can keep using it (its
+/// table is still valid memory; at worst it performs a benign stale probe
+/// or an insert that the in-flight migration immediately republishes).
+/// This is the rust answer to the paper's reliance on Java's GC for
+/// node reclamation, applied at table granularity: resizes are rare, so
+/// holding a retired table until drop costs one allocation per resize,
+/// not a hot-path reclamation protocol.
+pub(crate) struct Elastic<T> {
+    current: AtomicPtr<Epoch<T>>,
+    /// Owns every epoch ever installed (including the current one), in
+    /// installation order. Also serializes begin/finish transitions.
+    epochs: Mutex<Vec<Box<Epoch<T>>>>,
+}
+
+impl<T> Elastic<T> {
+    /// A fresh holder whose first epoch is (`geo`, `table`).
+    pub fn new(geo: Geometry, table: T) -> Self {
+        let epoch = Box::new(Epoch {
+            geo,
+            table: Arc::new(table),
+            prev: std::ptr::null(),
+            watermark: AtomicUsize::new(0),
+            drained: AtomicUsize::new(0),
+        });
+        let ptr = &*epoch as *const Epoch<T> as *mut Epoch<T>;
+        Self { current: AtomicPtr::new(ptr), epochs: Mutex::new(vec![epoch]) }
+    }
+
+    /// The current epoch. One atomic load; the reference stays valid for
+    /// the borrow of `self` (epochs are never freed before drop).
+    #[inline]
+    pub fn snapshot(&self) -> &Epoch<T> {
+        // SAFETY: `current` always points into `epochs`, whose boxes are
+        // never dropped while `self` is alive.
+        unsafe { &*self.current.load(Ordering::Acquire) }
+    }
+
+    /// Is a resize migration currently in flight?
+    #[inline]
+    pub fn resizing(&self) -> bool {
+        self.snapshot().prev().is_some()
+    }
+
+    /// Begin a resize toward `new_geo`, building fresh storage through
+    /// `make_table`. Returns `false` when another resize is still
+    /// migrating (finish it first — [`Elastic::step`]); returns `true`
+    /// without starting a migration when the set count is unchanged (the
+    /// geometry is swapped in place: same table, new requested-capacity
+    /// bookkeeping).
+    pub fn begin(&self, new_geo: Geometry, make_table: impl FnOnce(Geometry) -> T) -> bool {
+        let mut epochs = self.epochs.lock().unwrap();
+        let cur_ptr = self.current.load(Ordering::Acquire);
+        // SAFETY: same invariant as `snapshot`.
+        let cur = unsafe { &*cur_ptr };
+        if cur.prev().is_some() {
+            return false;
         }
+        if new_geo == cur.geo {
+            return true;
+        }
+        let (table, prev) = if new_geo.num_sets() == cur.geo.num_sets() {
+            (cur.table.clone(), std::ptr::null()) // same shape: no migration
+        } else {
+            (Arc::new(make_table(new_geo)), cur_ptr as *const Epoch<T>)
+        };
+        let epoch = Box::new(Epoch {
+            geo: new_geo,
+            table,
+            prev,
+            watermark: AtomicUsize::new(0),
+            drained: AtomicUsize::new(0),
+        });
+        let ptr = &*epoch as *const Epoch<T> as *mut Epoch<T>;
+        epochs.push(epoch);
+        self.current.store(ptr, Ordering::Release);
+        true
+    }
+
+    /// One increment of background migration: claim up to `max_sets`
+    /// source sets off the split watermark, drain each through the
+    /// variant's `drain(target, source, set)` and, when the final claimed
+    /// set completes, retire the source epoch. Returns the number of sets
+    /// this call drained (0 when no resize is pending or every set is
+    /// already claimed by other threads).
+    pub fn step(
+        &self,
+        max_sets: usize,
+        mut drain: impl FnMut(&Epoch<T>, &Epoch<T>, usize),
+    ) -> usize {
+        if max_sets == 0 {
+            return 0;
+        }
+        let ep = self.snapshot();
+        let Some(prev) = ep.prev() else { return 0 };
+        let old_n = prev.geo.num_sets();
+        // Clamp before claiming: callers pass usize::MAX as the
+        // "drain everything" idiom, and an unclamped fetch_add would
+        // overflow both the watermark and the `start + max_sets` sum.
+        let max_sets = max_sets.min(old_n);
+        if ep.watermark.load(Ordering::Relaxed) >= old_n {
+            // Everything is claimed; if the claimants are also done, make
+            // sure the epoch closes (the completing thread may have raced
+            // a concurrent step when it checked).
+            if ep.drained.load(Ordering::Acquire) >= old_n {
+                self.finish(ep);
+            }
+            return 0;
+        }
+        let start = ep.watermark.fetch_add(max_sets, Ordering::Relaxed);
+        if start >= old_n {
+            if ep.drained.load(Ordering::Acquire) >= old_n {
+                self.finish(ep);
+            }
+            return 0;
+        }
+        let end = (start + max_sets).min(old_n);
+        for set in start..end {
+            drain(ep, prev, set);
+        }
+        if ep.drained.fetch_add(end - start, Ordering::AcqRel) + (end - start) >= old_n {
+            self.finish(ep);
+        }
+        end - start
+    }
+
+    /// Retire the source epoch of `ep`: install a completion epoch with
+    /// the same geometry and the *same* table, prev = null. Serialized
+    /// with `begin` through the epochs lock; a stale call (the epoch was
+    /// already superseded) is a no-op.
+    fn finish(&self, ep: &Epoch<T>) {
+        let mut epochs = self.epochs.lock().unwrap();
+        if self.current.load(Ordering::Acquire) != ep as *const Epoch<T> as *mut Epoch<T> {
+            return;
+        }
+        let epoch = Box::new(Epoch {
+            geo: ep.geo,
+            table: ep.table.clone(),
+            prev: std::ptr::null(),
+            watermark: AtomicUsize::new(0),
+            drained: AtomicUsize::new(0),
+        });
+        let ptr = &*epoch as *const Epoch<T> as *mut Epoch<T>;
+        epochs.push(epoch);
+        self.current.store(ptr, Ordering::Release);
     }
 }
 
@@ -402,25 +643,28 @@ pub(crate) fn prefetch_read<T>(ptr: *const T) {
 mod tests {
     use super::*;
 
-    fn engine(capacity: usize, ways: usize, policy: Policy) -> SetEngine {
-        SetEngine::new(capacity, ways, policy)
+    fn engine(ways: usize, policy: Policy) -> SetEngine {
+        SetEngine::new(ways, policy)
     }
 
     #[test]
     fn prepare_is_consistent_with_geometry_and_hashing() {
-        let e = engine(1024, 8, Policy::Lru);
+        let e = engine(8, Policy::Lru);
+        let geo = Geometry::new(1024, 8);
         for key in 0..1000u64 {
-            let pk = e.prepare(key);
+            let pk = e.prepare(key, geo);
             assert_eq!(pk.key, key);
             assert_eq!(pk.ik, Geometry::encode_key(key));
             assert_eq!(pk.fp, hash::fingerprint(key));
-            assert_eq!(pk.set, e.geometry().set_of(key));
+            assert_eq!(pk.hash, Geometry::hash_of(key));
+            assert_eq!(pk.set, geo.set_of(key));
+            assert_eq!(geo.set_of_hash(pk.hash), pk.set);
         }
     }
 
     #[test]
     fn probe_get_revalidates() {
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         // A match that disappears between value read and re-validation
         // must be skipped (simulated with a counter-driven closure).
         use std::cell::Cell;
@@ -449,7 +693,7 @@ mod tests {
 
     #[test]
     fn choose_victim_avoids_max_meta_ways() {
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         let metas = [5u64, u64::MAX, 3, 9];
         let guards = [100u64, 101, 102, 103];
         let choice = e.choose_victim(4, 50, |i| (guards[i], metas[i], false));
@@ -459,7 +703,7 @@ mod tests {
 
     #[test]
     fn choose_victim_prefers_expired_lines() {
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         let metas = [5u64, 7, 3, 9];
         let guards = [100u64, 101, 102, 103];
         // Way 3 is expired: it wins over the LRU minimum (way 2).
@@ -474,10 +718,21 @@ mod tests {
     }
 
     #[test]
+    fn place_migrated_is_the_policy_order() {
+        let e = engine(4, Policy::Lru);
+        // Migrated entry older than every resident: it is the victim.
+        assert_eq!(e.place_migrated(4, 100, &[50, 10, 90, 30], 5), None);
+        // Migrated entry fresher than the LRU minimum: that resident loses.
+        assert_eq!(e.place_migrated(4, 100, &[50, 10, 90, 30], 60), Some(1));
+        // A mid-publish resident (u64::MAX meta) is never displaced.
+        assert_eq!(e.place_migrated(2, 100, &[u64::MAX, u64::MAX], 60), None);
+    }
+
+    #[test]
     fn lifetime_flags_latch_and_gate() {
         use crate::lifetime::EntryOpts;
         use std::time::Duration;
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         assert!(!e.ttl_active());
         assert!(!e.weight_active());
         assert_eq!(e.expiry_now(), 0, "TTL-free caches never read the clock");
@@ -492,11 +747,11 @@ mod tests {
 
     #[test]
     fn sweep_start_rotates_over_all_sets() {
-        let e = engine(64, 4, Policy::Lru); // 16 sets
-        let n = e.geometry().num_sets();
+        let e = engine(4, Policy::Lru);
+        let n = 16usize;
         let mut covered = vec![false; n];
         for _ in 0..n {
-            let start = e.sweep_start(1);
+            let start = e.sweep_start(1, n);
             covered[start] = true;
         }
         assert!(covered.iter().all(|&c| c), "cursor must cover every set");
@@ -504,7 +759,7 @@ mod tests {
 
     #[test]
     fn peek_victim_with_contract() {
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         let immortal = crate::lifetime::immortal_unit();
         // Any empty way -> no eviction needed.
         let keys =
@@ -530,7 +785,7 @@ mod tests {
     fn peek_victim_treats_expired_lines_as_free_room() {
         use crate::lifetime::{life_of, EntryOpts};
         use std::time::Duration;
-        let e = engine(64, 4, Policy::Lru);
+        let e = engine(4, Policy::Lru);
         e.note_opts(&EntryOpts::ttl(Duration::ZERO)); // activate TTLs
         let keys = [10u64, 11, 12, 13].map(Geometry::encode_key);
         let metas = [50u64, 10, 90, 30];
@@ -571,11 +826,10 @@ mod tests {
             (4, 141),
         ];
         for policy in Policy::ALL {
-            let e = engine(64, k, policy);
+            let e = engine(k, policy);
             let atomic: Vec<AtomicU64> =
                 (0..k).map(|i| AtomicU64::new(e.initial_meta(10 * i as u64))).collect();
-            let mut plain: Vec<u64> =
-                (0..k).map(|i| e.initial_meta(10 * i as u64)).collect();
+            let mut plain: Vec<u64> = (0..k).map(|i| e.initial_meta(10 * i as u64)).collect();
             for &(way, now) in &script {
                 e.touch_atomic(&atomic[way], now);
                 e.touch_plain(&mut plain[way], now);
@@ -594,19 +848,59 @@ mod tests {
 
     #[test]
     fn for_batch_visits_every_item_in_order_across_chunks() {
-        let e = engine(4096, 8, Policy::Lru);
+        let e = engine(8, Policy::Lru);
+        let geo = Geometry::new(4096, 8);
         let keys: Vec<u64> = (0..(3 * BATCH_CHUNK as u64 + 7)).collect();
         let mut seen = Vec::new();
         e.for_batch(
+            geo,
             &keys,
             |&k| k,
-            |set| assert!(set < e.geometry().num_sets()),
+            |set| assert!(set < geo.num_sets()),
             |pk, &orig| {
                 assert_eq!(pk.key, orig);
                 seen.push(pk.key);
             },
         );
         assert_eq!(seen, keys);
+    }
+
+    #[test]
+    fn elastic_epochs_transition_and_keep_old_tables_alive() {
+        let geo = Geometry::new(64, 4); // 16 sets
+        let elastic: Elastic<Vec<u64>> = Elastic::new(geo, vec![0; geo.capacity()]);
+        assert!(!elastic.resizing());
+        let first = elastic.snapshot().table.clone();
+
+        // Same-shape begin (capacity within the same power of two): the
+        // geometry swaps, the table is shared, no migration starts.
+        assert!(elastic.begin(geo.resized(60), |g| vec![0; g.capacity()]));
+        assert!(!elastic.resizing());
+        assert_eq!(elastic.snapshot().geo.requested_capacity(), 60);
+        assert!(Arc::ptr_eq(&elastic.snapshot().table, &first));
+
+        // A real grow: prev is set, steps drain source sets, the final
+        // step retires the source epoch.
+        let grown = geo.resized(128); // 32 sets
+        assert!(elastic.begin(grown, |g| vec![0; g.capacity()]));
+        assert!(elastic.resizing());
+        assert!(!elastic.begin(grown, |g| vec![0; g.capacity()]), "no overlapping resizes");
+        let mut drained = Vec::new();
+        while elastic.resizing() {
+            elastic.step(3, |ep, prev, set| {
+                assert_eq!(ep.geo.num_sets(), 32);
+                assert_eq!(prev.geo.num_sets(), 16);
+                drained.push(set);
+            });
+        }
+        drained.sort_unstable();
+        assert_eq!(drained, (0..16).collect::<Vec<_>>(), "every source set drained once");
+        assert_eq!(elastic.snapshot().geo, grown);
+        // The retired table is still reachable through the old snapshot
+        // (readers never observe freed memory).
+        assert_eq!(first.len(), geo.capacity());
+        // Steps with no resize pending are no-ops.
+        assert_eq!(elastic.step(4, |_, _, _| panic!("no drain without a resize")), 0);
     }
 
     #[test]

@@ -1,6 +1,15 @@
 //! Cache geometry: capacity → (power-of-two set count, ways), plus the
 //! key→set mapping and the internal key encoding shared by the wait-free
 //! variants.
+//!
+//! Since the elastic-resize refactor a `Geometry` is no longer frozen for
+//! the lifetime of a cache: the k-way variants hold an *epoch-stamped*
+//! geometry (see `engine::Elastic`) and move between geometries by linear
+//! hashing — the set count is a power of two, so doubling it splits set
+//! `s` deterministically into `s` and `s + old_num_sets`, and halving it
+//! merges them back. `ways` stays fixed across resizes (the associativity
+//! threshold literature says scan width, not set count, is the knob that
+//! changes behaviour — PAPERS.md), so only the set count moves.
 
 use crate::util::hash;
 
@@ -11,6 +20,8 @@ use crate::util::hash;
 pub struct Geometry {
     num_sets: usize,
     ways: usize,
+    /// The capacity the caller asked for, before power-of-two rounding.
+    requested: usize,
 }
 
 /// Internal key-word sentinels for the wait-free variants. User keys are
@@ -24,12 +35,19 @@ impl Geometry {
     /// Smallest geometry with at least `capacity` slots and exactly `ways`
     /// ways per set. `capacity` is rounded up so that the set count is a
     /// power of two (the paper's cache sizes are powers of two, so for the
-    /// evaluation this is exact).
+    /// evaluation this is exact); [`Geometry::requested_capacity`] keeps
+    /// the pre-rounding figure so reports can show both.
     pub fn new(capacity: usize, ways: usize) -> Self {
         assert!(ways >= 1, "need at least one way");
         assert!(capacity >= ways, "capacity must be >= ways");
         let num_sets = capacity.div_ceil(ways).next_power_of_two();
-        Self { num_sets, ways }
+        Self { num_sets, ways, requested: capacity }
+    }
+
+    /// The geometry an online resize toward `new_capacity` targets: same
+    /// ways, set count re-derived (and re-rounded) from the new capacity.
+    pub fn resized(&self, new_capacity: usize) -> Self {
+        Self::new(new_capacity.max(self.ways), self.ways)
     }
 
     /// Number of sets (always a power of two).
@@ -44,16 +62,40 @@ impl Geometry {
         self.ways
     }
 
-    /// Total slots = num_sets × ways.
+    /// Total slots = num_sets × ways. Power-of-two rounding of the set
+    /// count can inflate this up to ~2× over the requested capacity.
     #[inline]
     pub fn capacity(&self) -> usize {
         self.num_sets * self.ways
     }
 
+    /// The capacity that was asked for at construction (or as a resize
+    /// target), before power-of-two rounding — the honest figure for
+    /// reports and resize-target bookkeeping.
+    #[inline]
+    pub fn requested_capacity(&self) -> usize {
+        self.requested
+    }
+
+    /// The full 64-bit set hash of a key (mask-independent; see
+    /// [`Geometry::set_of_hash`]).
+    #[inline]
+    pub fn hash_of(key: u64) -> u64 {
+        hash::set_hash(key)
+    }
+
     /// Set index for a key (xxh64, masked).
     #[inline]
     pub fn set_of(&self, key: u64) -> usize {
-        hash::set_index(key, self.num_sets)
+        self.set_of_hash(Self::hash_of(key))
+    }
+
+    /// Set index from an already-computed set hash — the elastic-resize
+    /// path derives a key's set under both the old and the new geometry
+    /// from one hash pass this way.
+    #[inline]
+    pub fn set_of_hash(&self, h: u64) -> usize {
+        (h as usize) & (self.num_sets - 1)
     }
 
     /// Range of flat slot indices for a set (for SoA layouts).
@@ -73,7 +115,6 @@ impl Geometry {
 
     /// Inverse of [`Geometry::encode_key`].
     #[inline]
-    #[allow(dead_code)]
     pub(crate) fn decode_key(word: u64) -> u64 {
         debug_assert!(word >= KEY_OFFSET);
         word - KEY_OFFSET
@@ -89,9 +130,11 @@ mod tests {
         let g = Geometry::new(2048, 8);
         assert_eq!(g.num_sets(), 256);
         assert_eq!(g.capacity(), 2048);
+        assert_eq!(g.requested_capacity(), 2048);
         let g = Geometry::new(1000, 8); // 125 sets -> 128
         assert_eq!(g.num_sets(), 128);
         assert_eq!(g.capacity(), 1024);
+        assert_eq!(g.requested_capacity(), 1000, "rounding must not hide the request");
     }
 
     #[test]
@@ -99,7 +142,27 @@ mod tests {
         let g = Geometry::new(4096, 16);
         for key in 0..10_000u64 {
             assert!(g.set_of(key) < g.num_sets());
+            assert_eq!(g.set_of(key), g.set_of_hash(Geometry::hash_of(key)));
         }
+    }
+
+    #[test]
+    fn resized_doubles_and_halves_by_linear_hashing() {
+        let g = Geometry::new(1024, 8); // 128 sets
+        let grown = g.resized(2048); // 256 sets
+        assert_eq!(grown.num_sets(), 2 * g.num_sets());
+        assert_eq!(grown.ways(), g.ways());
+        assert_eq!(grown.requested_capacity(), 2048);
+        let shrunk = grown.resized(1024);
+        assert_eq!(shrunk.num_sets(), g.num_sets());
+        // Every key's grown set is its old set or old set + old_num_sets.
+        for key in 0..5_000u64 {
+            let s = g.set_of(key);
+            let sg = grown.set_of(key);
+            assert!(sg == s || sg == s + g.num_sets(), "key {key}: {s} -> {sg}");
+        }
+        // Resizing below `ways` clamps instead of violating the invariant.
+        assert_eq!(g.resized(1).num_sets(), 1);
     }
 
     #[test]

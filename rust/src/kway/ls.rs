@@ -15,11 +15,15 @@
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
 //! only the locked plain storage and the upgrade protocol. Because every
 //! mutation happens under the write lock, KW-LS is the *exact* member of
-//! the family for the lifetime dimension: expired entries probe as misses
-//! and are reclaimed in place, and the per-set weight budget is enforced
-//! precisely on every insert (DESIGN.md §Expiration, §Weighted capacity).
+//! the family for the lifetime dimension — and for the **elastic-resize
+//! dimension**: a source set is migrated *entirely under its write lock*
+//! (acquired outright, not by upgrade: migration is an infrastructure
+//! move, not an optional metadata touch), each surviving entry re-locks
+//! its target set for the install, and the lock order is always
+//! source-table-then-target-table, so the migration cannot deadlock
+//! against puts or other drains (DESIGN.md §Elastic resizing).
 
-use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
+use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY};
 use super::stamped::StampedLock;
 use crate::lifetime::{self, BatchEntry, EntryOpts};
@@ -58,26 +62,38 @@ impl LsSet {
     }
 }
 
+/// One geometry epoch's storage: the padded set array.
+struct LsTable {
+    sets: Box<[CachePadded<LsSet>]>,
+}
+
+impl LsTable {
+    fn new(num_sets: usize, ways: usize) -> Self {
+        Self { sets: (0..num_sets).map(|_| CachePadded::new(LsSet::new(ways))).collect() }
+    }
+}
+
 /// Lock-per-set k-way cache.
 pub struct KwLs {
     engine: SetEngine,
-    sets: Box<[CachePadded<LsSet>]>,
+    elastic: Elastic<LsTable>,
 }
 
 impl KwLs {
     /// Build a cache of (at least) `capacity` weight units in sets of
     /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        let engine = SetEngine::new(capacity, ways, policy);
-        let sets = (0..engine.geometry().num_sets())
-            .map(|_| CachePadded::new(LsSet::new(engine.geometry().ways())))
-            .collect();
-        Self { engine, sets }
+        let geo = Geometry::new(capacity, ways);
+        Self {
+            engine: SetEngine::new(ways, policy),
+            elastic: Elastic::new(geo, LsTable::new(geo.num_sets(), geo.ways())),
+        }
     }
 
-    /// The rounded geometry this cache runs with.
+    /// The rounded geometry this cache currently runs with (the resize
+    /// *target* geometry while a migration is in flight).
     pub fn geometry(&self) -> Geometry {
-        self.engine.geometry()
+        self.elastic.snapshot().geo
     }
 
     /// The eviction policy.
@@ -89,8 +105,9 @@ impl KwLs {
     /// weighted-capacity tests; for KW-LS the bound is exact (every
     /// mutation holds the write lock).
     pub fn max_set_weight(&self) -> u64 {
+        let ep = self.elastic.snapshot();
         let mut max = 0u64;
-        for set in self.sets.iter() {
+        for set in ep.table.sets.iter() {
             set.lock.read_lock();
             // SAFETY: read lock held.
             let entries = unsafe { &*set.entries.get() };
@@ -105,13 +122,39 @@ impl KwLs {
         max
     }
 
-    /// `get` with the hashing already done (shared by the scalar and
-    /// batched paths).
-    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
-        let now = self.engine.tick();
+    fn table_len(table: &LsTable) -> usize {
+        let mut n = 0;
+        for set in table.sets.iter() {
+            set.lock.read_lock();
+            // SAFETY: read lock held.
+            let entries = unsafe { &*set.entries.get() };
+            n += entries.iter().filter(|e| e.key != EMPTY).count();
+            set.lock.unlock_read();
+        }
+        n
+    }
+
+    fn table_weight(table: &LsTable) -> u64 {
+        let mut total = 0u64;
+        for set in table.sets.iter() {
+            set.lock.read_lock();
+            // SAFETY: read lock held.
+            let entries = unsafe { &*set.entries.get() };
+            total += entries
+                .iter()
+                .filter(|e| e.key != EMPTY)
+                .map(|e| lifetime::weight_of(e.life))
+                .sum::<u64>();
+            set.lock.unlock_read();
+        }
+        total
+    }
+
+    /// Probe one set of one table under its read lock; touches metadata
+    /// through the upgrade protocol.
+    fn probe_set(&self, set: &LsSet, pk: &PreparedKey, now: u64) -> Option<u64> {
         let ttl_active = self.engine.ttl_active();
         let now_ms = self.engine.expiry_now();
-        let set = &self.sets[pk.set];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
@@ -146,17 +189,38 @@ impl KwLs {
         }
     }
 
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths). Misses fall through old→new while a resize is
+    /// migrating; the two set locks are taken strictly one after the
+    /// other, never nested.
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let ep = self.elastic.snapshot();
+        let set = &ep.table.sets[ep.geo.set_of_hash(pk.hash)];
+        if let Some(value) = self.probe_set(set, &pk, now) {
+            return Some(value);
+        }
+        let prev = ep.prev()?;
+        self.probe_set(&prev.table.sets[prev.geo.set_of_hash(pk.hash)], &pk, now)
+    }
+
     /// `put` with the hashing already done.
     fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
         self.engine.note_opts(&opts);
         if opts.weight as u64 > self.engine.set_budget() {
             return; // heavier than a whole set: can never fit, dropped
         }
+        let ep = self.elastic.snapshot();
+        if let Some(prev) = ep.prev() {
+            // Help-on-write: drain the key's source set (under its write
+            // lock) before inserting, so no second copy can linger.
+            self.migrate_set(ep, prev, prev.geo.set_of_hash(pk.hash));
+        }
         let now = self.engine.tick();
         let now_ms = self.engine.expiry_now();
         let life = lifetime::life_of(&opts, now_ms);
         let ttl_active = self.engine.ttl_active();
-        let set = &self.sets[pk.set];
+        let set = &ep.table.sets[ep.geo.set_of_hash(pk.hash)];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
@@ -202,6 +266,65 @@ impl KwLs {
         entries[target] = Entry { key: pk.ik, value, meta: self.engine.initial_meta(now), life };
         Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
         set.lock.unlock_write();
+    }
+
+    /// Drain one source set of an in-flight resize *exactly*: the source
+    /// set's write lock is held for the whole move, so concurrent puts to
+    /// that set serialize behind the migration and nothing can race the
+    /// copy-out. Each surviving entry is installed into its target set
+    /// under that set's write lock; lock order is always source (old
+    /// table) before target (new table), so drains, puts and the
+    /// background walk cannot deadlock.
+    fn migrate_set(&self, ep: &Epoch<LsTable>, prev: &Epoch<LsTable>, old_set: usize) {
+        let src = &prev.table.sets[old_set];
+        src.lock.write_lock();
+        // SAFETY: write lock held.
+        let entries = unsafe { &mut *src.entries.get() };
+        let now_ms = self.engine.expiry_now();
+        let ttl_active = self.engine.ttl_active();
+        for e in entries.iter_mut() {
+            if e.key == EMPTY {
+                continue;
+            }
+            let moved = *e;
+            *e = Entry::default();
+            if ttl_active && lifetime::is_expired(moved.life, now_ms) {
+                continue; // dead line: reclaim, don't move
+            }
+            let pk = self.engine.prepare(Geometry::decode_key(moved.key), ep.geo);
+            self.install_migrated(ep, &pk, moved);
+        }
+        src.lock.unlock_write();
+    }
+
+    /// Install one migrated entry into its target set under that set's
+    /// write lock, preserving metadata and life word. Placement follows
+    /// the shared contract: a fresher copy wins, a full set (shrink
+    /// merge) resolves through [`SetEngine::place_migrated`], and the
+    /// weight budget is repaired exactly afterwards.
+    fn install_migrated(&self, ep: &Epoch<LsTable>, pk: &PreparedKey, moved: Entry) {
+        let dst = &ep.table.sets[ep.geo.set_of_hash(pk.hash)];
+        dst.lock.write_lock();
+        // SAFETY: write lock held.
+        let entries = unsafe { &mut *dst.entries.get() };
+        let now = self.engine.now();
+        let now_ms = self.engine.expiry_now();
+        if entries.iter().any(|e| e.key == pk.ik) {
+            dst.lock.unlock_write();
+            return; // a fresher insert already landed in the target
+        }
+        let slot = match entries.iter().position(|e| e.key == EMPTY) {
+            Some(i) => Some(i),
+            None => {
+                let metas: Vec<u64> = entries.iter().map(|e| e.meta).collect();
+                self.engine.place_migrated(entries.len(), now, &metas, moved.meta)
+            }
+        };
+        if let Some(i) = slot {
+            entries[i] = Entry { key: pk.ik, ..moved };
+            Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
+        }
+        dst.lock.unlock_write();
     }
 
     /// Exact weighted-capacity repair, run under the write lock: evict
@@ -255,26 +378,32 @@ impl KwLs {
 
 impl Cache for KwLs {
     fn get(&self, key: u64) -> Option<u64> {
-        self.get_prepared(self.engine.prepare(key))
+        self.get_prepared(self.engine.prepare(key, self.elastic.snapshot().geo))
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+        self.put_prepared(
+            self.engine.prepare(key, self.elastic.snapshot().geo),
+            value,
+            EntryOpts::default(),
+        )
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.put_prepared(self.engine.prepare(key), value, opts)
+        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
         out.reserve(keys.len());
+        let ep = self.elastic.snapshot();
         self.engine.for_batch(
+            ep.geo,
             keys,
             |&key| key,
             // Prefetch the set header (lock word + entries pointer); the
             // entries themselves sit behind one more indirection.
             |set| {
-                let header: &LsSet = &self.sets[set];
+                let header: &LsSet = &ep.table.sets[set];
                 engine::prefetch_read(header);
             },
             |pk, _| out.push(self.get_prepared(pk)),
@@ -282,11 +411,13 @@ impl Cache for KwLs {
     }
 
     fn put_batch(&self, items: &[(u64, u64)]) {
+        let ep = self.elastic.snapshot();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.0,
             |set| {
-                let header: &LsSet = &self.sets[set];
+                let header: &LsSet = &ep.table.sets[set];
                 engine::prefetch_read(header);
             },
             |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
@@ -294,11 +425,13 @@ impl Cache for KwLs {
     }
 
     fn put_batch_with(&self, items: &[BatchEntry]) {
+        let ep = self.elastic.snapshot();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.key,
             |set| {
-                let header: &LsSet = &self.sets[set];
+                let header: &LsSet = &ep.table.sets[set];
                 engine::prefetch_read(header);
             },
             |pk, item| self.put_prepared(pk, item.value, item.opts),
@@ -306,17 +439,22 @@ impl Cache for KwLs {
     }
 
     fn capacity(&self) -> usize {
-        self.engine.geometry().capacity()
+        let ep = self.elastic.snapshot();
+        match ep.prev() {
+            Some(prev) => ep.geo.capacity().max(prev.geo.capacity()),
+            None => ep.geo.capacity(),
+        }
+    }
+
+    fn requested_capacity(&self) -> usize {
+        self.elastic.snapshot().geo.requested_capacity()
     }
 
     fn len(&self) -> usize {
-        let mut n = 0;
-        for set in self.sets.iter() {
-            set.lock.read_lock();
-            // SAFETY: read lock held.
-            let entries = unsafe { &*set.entries.get() };
-            n += entries.iter().filter(|e| e.key != EMPTY).count();
-            set.lock.unlock_read();
+        let ep = self.elastic.snapshot();
+        let mut n = Self::table_len(&ep.table);
+        if let Some(prev) = ep.prev() {
+            n += Self::table_len(&prev.table);
         }
         n
     }
@@ -325,17 +463,10 @@ impl Cache for KwLs {
         if !self.engine.weight_active() {
             return self.len() as u64;
         }
-        let mut total = 0u64;
-        for set in self.sets.iter() {
-            set.lock.read_lock();
-            // SAFETY: read lock held.
-            let entries = unsafe { &*set.entries.get() };
-            total += entries
-                .iter()
-                .filter(|e| e.key != EMPTY)
-                .map(|e| lifetime::weight_of(e.life))
-                .sum::<u64>();
-            set.lock.unlock_read();
+        let ep = self.elastic.snapshot();
+        let mut total = Self::table_weight(&ep.table);
+        if let Some(prev) = ep.prev() {
+            total += Self::table_weight(&prev.table);
         }
         total
     }
@@ -348,17 +479,40 @@ impl Cache for KwLs {
         true
     }
 
+    fn supports_resize(&self) -> bool {
+        true
+    }
+
+    fn resize(&self, new_capacity: usize) -> bool {
+        while self.elastic.resizing() {
+            if self.resize_step(64) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        let geo = self.elastic.snapshot().geo;
+        self.elastic.begin(geo.resized(new_capacity), |g| LsTable::new(g.num_sets(), g.ways()))
+    }
+
+    fn resize_step(&self, max_sets: usize) -> usize {
+        self.elastic.step(max_sets, |ep, prev, set| self.migrate_set(ep, prev, set))
+    }
+
+    fn resize_pending(&self) -> bool {
+        self.elastic.resizing()
+    }
+
     fn sweep_expired(&self, max_sets: usize) -> usize {
         if max_sets == 0 || !self.engine.ttl_active() {
             return 0;
         }
-        let num_sets = self.engine.geometry().num_sets();
+        let ep = self.elastic.snapshot();
+        let num_sets = ep.geo.num_sets();
         let span = max_sets.min(num_sets);
-        let start = self.engine.sweep_start(span);
+        let start = self.engine.sweep_start(span, num_sets);
         let now_ms = lifetime::now_ms();
         let mut reclaimed = 0;
         for j in 0..span {
-            let set = &self.sets[(start + j) % num_sets];
+            let set = &ep.table.sets[(start + j) % num_sets];
             set.lock.read_lock();
             // Like every KW-LS mutation: upgrade or give up (the next
             // sweep pass will revisit this set).
@@ -380,7 +534,8 @@ impl Cache for KwLs {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let set = &self.sets[self.engine.geometry().set_of(key)];
+        let ep = self.elastic.snapshot();
+        let set = &ep.table.sets[ep.geo.set_of(key)];
         set.lock.read_lock();
         // SAFETY: read lock held.
         let entries = unsafe { &*set.entries.get() };
@@ -522,6 +677,27 @@ mod tests {
         }
         assert_eq!(c.sweep_expired(c.geometry().num_sets()), 10);
         assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn grow_keeps_every_entry_readable() {
+        // 100 keys over 256 sets: no set can overflow its 8 ways, so a
+        // missing key is a resize bug, not an eviction.
+        let c = KwLs::new(2048, 8, Policy::Lru);
+        for key in 0..100u64 {
+            c.put(key, key + 3);
+        }
+        assert!(c.resize(4096));
+        for key in 0..100u64 {
+            assert_eq!(c.get(key), Some(key + 3), "key {key} lost mid-resize");
+        }
+        while c.resize_pending() {
+            c.resize_step(16);
+        }
+        for key in 0..100u64 {
+            assert_eq!(c.get(key), Some(key + 3), "key {key} lost after migration");
+        }
+        assert_eq!(c.capacity(), 4096);
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //! concurrent TinyLFU admission layer ([`crate::tinylfu::TlfuCache`])
 //! composes on, which is exactly the "limited associativity TinyLFU"
 //! the paper promotes.
+//!
+//! Geometry is **elastic**: all three variants support online resizing
+//! (`Cache::resize` / `Cache::resize_step`) by linear-hash set
+//! splitting — the engine's epoch machinery stamps every operation with
+//! a consistent (geometry, table, watermark) snapshot, reads fall
+//! through old→new mid-migration, and writes drain their key's source
+//! set before inserting (DESIGN.md §Elastic resizing).
 
 mod engine;
 mod geometry;

@@ -17,13 +17,17 @@
 //!
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
 //! only the AoS storage and the CAS claim/publish protocol — including
-//! the lifetime dimension: the `life` word packs the expiry deadline and
-//! the weight, expired lines probe as misses and are the victims of
-//! first resort, and the per-set weight budget is repaired after every
-//! insert while weights are in play (DESIGN.md §Expiration, §Weighted
-//! capacity).
+//! the lifetime dimension (the `life` word packs the expiry deadline and
+//! the weight; DESIGN.md §Expiration, §Weighted capacity) and the
+//! **elastic-resize dimension**: the table lives behind an epoch-stamped
+//! [`Elastic`] holder, a migration *claims* each source line with the
+//! same CAS-to-`RESERVED` protocol an eviction uses and republishes it
+//! into the grown (or shrunk) table, readers that miss in the target
+//! table fall through to the source table while the split watermark is
+//! advancing, and writers drain their key's source set before inserting
+//! so no admitted entry is ever lost (DESIGN.md §Elastic resizing).
 
-use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
+use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
 use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
@@ -50,24 +54,43 @@ impl Way {
     }
 }
 
+/// One geometry epoch's storage: the flat way array.
+struct WfaTable {
+    ways: Box<[Way]>,
+}
+
+impl WfaTable {
+    fn new(capacity: usize) -> Self {
+        Self { ways: (0..capacity).map(|_| Way::new()).collect() }
+    }
+
+    #[inline]
+    fn set(&self, geo: Geometry, set: usize) -> &[Way] {
+        &self.ways[geo.slots_of(set)]
+    }
+}
+
 /// Wait-free array k-way cache.
 pub struct KwWfa {
     engine: SetEngine,
-    ways: Box<[Way]>,
+    elastic: Elastic<WfaTable>,
 }
 
 impl KwWfa {
     /// Build a cache of (at least) `capacity` weight units in sets of
     /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        let engine = SetEngine::new(capacity, ways, policy);
-        let slots = (0..engine.geometry().capacity()).map(|_| Way::new()).collect();
-        Self { engine, ways: slots }
+        let geo = Geometry::new(capacity, ways);
+        Self {
+            engine: SetEngine::new(ways, policy),
+            elastic: Elastic::new(geo, WfaTable::new(geo.capacity())),
+        }
     }
 
-    /// The rounded geometry this cache runs with.
+    /// The rounded geometry this cache currently runs with (the resize
+    /// *target* geometry while a migration is in flight).
     pub fn geometry(&self) -> Geometry {
-        self.engine.geometry()
+        self.elastic.snapshot().geo
     }
 
     /// The eviction policy.
@@ -79,12 +102,12 @@ impl KwWfa {
     /// weighted-capacity tests: after churn quiesces this never exceeds
     /// the per-set budget (= `ways`).
     pub fn max_set_weight(&self) -> u64 {
-        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).max().unwrap_or(0)
+        let ep = self.elastic.snapshot();
+        (0..ep.geo.num_sets()).map(|s| Self::set_weight(ep.table.set(ep.geo, s))).max().unwrap_or(0)
     }
 
-    fn set_weight(&self, set: usize) -> u64 {
-        self.set_ways(set)
-            .iter()
+    fn set_weight(set: &[Way]) -> u64 {
+        set.iter()
             .map(|w| {
                 let key = w.key.load(Ordering::Acquire);
                 if key == EMPTY || key == RESERVED {
@@ -96,30 +119,33 @@ impl KwWfa {
             .sum()
     }
 
-    #[inline]
-    fn set_ways(&self, set: usize) -> &[Way] {
-        &self.ways[self.engine.geometry().slots_of(set)]
+    fn table_len(table: &WfaTable) -> usize {
+        table
+            .ways
+            .iter()
+            .filter(|w| {
+                let k = w.key.load(Ordering::Relaxed);
+                k != EMPTY && k != RESERVED
+            })
+            .count()
     }
 
     /// Prefetch the lines a set scan strides over: a `Way` is 32 bytes, so
     /// an 8-way set spans four cache lines (prefetch first / middle /
     /// last way).
     #[inline]
-    fn prefetch_set(&self, set: usize, ways: usize) {
+    fn prefetch_set(&self, table: &WfaTable, set: usize, ways: usize) {
         let base = set * ways;
-        engine::prefetch_read(&self.ways[base]);
-        engine::prefetch_read(&self.ways[base + ways / 2]);
-        engine::prefetch_read(&self.ways[base + ways - 1]);
+        engine::prefetch_read(&table.ways[base]);
+        engine::prefetch_read(&table.ways[base + ways / 2]);
+        engine::prefetch_read(&table.ways[base + ways - 1]);
     }
 
-    /// `get` with the hashing already done (shared by the scalar and
-    /// batched paths).
+    /// Probe one set of one table; touches the hit's metadata.
     #[inline]
-    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
-        let now = self.engine.tick();
+    fn probe_set(&self, set: &[Way], pk: &PreparedKey, now: u64) -> Option<u64> {
         let ttl_active = self.engine.ttl_active();
         let now_ms = self.engine.expiry_now();
-        let set = self.set_ways(pk.set);
         let (way, value) = self.engine.probe_get(
             set.len(),
             |i| set[i].key.load(Ordering::Acquire) == pk.ik,
@@ -130,6 +156,23 @@ impl KwWfa {
         Some(value)
     }
 
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths). Misses in the target table fall through to the
+    /// source table while a resize is migrating, so entries below the
+    /// split watermark stay readable mid-move.
+    #[inline]
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let ep = self.elastic.snapshot();
+        let set = ep.table.set(ep.geo, ep.geo.set_of_hash(pk.hash));
+        if let Some(value) = self.probe_set(set, &pk, now) {
+            return Some(value);
+        }
+        let prev = ep.prev()?;
+        let old_set = prev.table.set(prev.geo, prev.geo.set_of_hash(pk.hash));
+        self.probe_set(old_set, &pk, now)
+    }
+
     /// `put` with the hashing already done.
     fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
         self.engine.note_opts(&opts);
@@ -138,11 +181,19 @@ impl KwWfa {
             // ("it is a cache" — same as an insert lost to contention).
             return;
         }
+        let ep = self.elastic.snapshot();
+        if let Some(prev) = ep.prev() {
+            // Help-on-write: drain this key's source set before touching
+            // the target table, so the insert below can never create a
+            // second copy of a not-yet-migrated key.
+            self.migrate_set(ep, prev, prev.geo.set_of_hash(pk.hash));
+        }
         let now = self.engine.tick();
         let now_ms = self.engine.expiry_now();
         let life = lifetime::life_of(&opts, now_ms);
         let ttl_active = self.engine.ttl_active();
-        let set = self.set_ways(pk.set);
+        let set_idx = ep.geo.set_of_hash(pk.hash);
+        let set = ep.table.set(ep.geo, set_idx);
 
         // Pass 1 (Alg. 3 lines 3–6): overwrite an existing entry. The
         // life word is refreshed too: an overwrite restarts the TTL.
@@ -153,7 +204,7 @@ impl KwWfa {
             set[i].value.store(value, Ordering::Release);
             set[i].life.store(life, Ordering::Release);
             self.engine.touch_atomic(&set[i].meta, now);
-            self.repair_weight(pk);
+            self.repair_weight(set, pk.ik);
             return;
         }
 
@@ -169,7 +220,7 @@ impl KwWfa {
                 way.meta.store(self.engine.initial_meta(now), Ordering::Release);
                 way.life.store(life, Ordering::Release);
                 way.key.store(pk.ik, Ordering::Release);
-                self.repair_weight(pk);
+                self.repair_weight(set, pk.ik);
                 return;
             }
         }
@@ -204,7 +255,104 @@ impl KwWfa {
             way.life.store(life, Ordering::Release);
             way.key.store(pk.ik, Ordering::Release);
         }
-        self.repair_weight(pk);
+        self.repair_weight(set, pk.ik);
+    }
+
+    /// Drain one source set of an in-flight resize into the target table
+    /// (the linear-hash split step): each live line is *claimed* with the
+    /// usual CAS-to-`RESERVED`, its words are read, the source line is
+    /// freed, and the entry is republished into its target set carrying
+    /// the metadata it earned. Expired lines are dropped instead of
+    /// moved. A claim lost to a concurrent drain or eviction is skipped —
+    /// whoever won the word owns the move. Runs from both the background
+    /// `resize_step` watermark walk and the help-on-write path, and is
+    /// idempotent over already-empty sets.
+    fn migrate_set(&self, ep: &Epoch<WfaTable>, prev: &Epoch<WfaTable>, old_set: usize) {
+        for way in prev.table.set(prev.geo, old_set) {
+            let ik = way.key.load(Ordering::Acquire);
+            if ik == EMPTY || ik == RESERVED {
+                continue;
+            }
+            if way
+                .key
+                .compare_exchange(ik, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue; // lost to a concurrent drain/eviction
+            }
+            let value = way.value.load(Ordering::Acquire);
+            let meta = way.meta.load(Ordering::Relaxed);
+            let life = way.life.load(Ordering::Relaxed);
+            way.key.store(EMPTY, Ordering::Release);
+            if self.engine.ttl_active() && lifetime::is_expired(life, self.engine.expiry_now()) {
+                continue; // dead line: reclaim, don't move
+            }
+            let pk = self.engine.prepare(Geometry::decode_key(ik), ep.geo);
+            self.install_migrated(ep, &pk, value, meta, life);
+        }
+    }
+
+    /// Republish one migrated entry into its target set, preserving its
+    /// policy metadata and life word. A fresher entry already present for
+    /// the key wins (the old copy is simply dropped); a full target set
+    /// (shrink merge) resolves through [`SetEngine::place_migrated`] —
+    /// the policy's own order decides who survives.
+    fn install_migrated(
+        &self,
+        ep: &Epoch<WfaTable>,
+        pk: &PreparedKey,
+        value: u64,
+        meta: u64,
+        life: u64,
+    ) {
+        let set = ep.table.set(ep.geo, ep.geo.set_of_hash(pk.hash));
+        let resident = self
+            .engine
+            .find_match(set.len(), |i| set[i].key.load(Ordering::Acquire) == pk.ik);
+        if resident.is_some() {
+            return; // a fresher insert already landed in the target
+        }
+        for way in set {
+            if way.key.load(Ordering::Acquire) == EMPTY
+                && way
+                    .key
+                    .compare_exchange(EMPTY, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                way.value.store(value, Ordering::Release);
+                way.meta.store(meta, Ordering::Release);
+                way.life.store(life, Ordering::Release);
+                way.key.store(pk.ik, Ordering::Release);
+                self.repair_weight(set, pk.ik);
+                return;
+            }
+        }
+        // Full target set: merge by policy order.
+        let now = self.engine.now();
+        let mut guards = [0u64; MAX_WAYS];
+        let mut metas = [u64::MAX; MAX_WAYS];
+        for (i, way) in set.iter().enumerate() {
+            let key = way.key.load(Ordering::Acquire);
+            guards[i] = key;
+            if key != RESERVED {
+                metas[i] = way.meta.load(Ordering::Relaxed);
+            }
+        }
+        let Some(victim) = self.engine.place_migrated(set.len(), now, &metas, meta) else {
+            return; // the migrated entry is the policy victim: drop it
+        };
+        let way = &set[victim];
+        if way
+            .key
+            .compare_exchange(guards[victim], RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+        {
+            way.value.store(value, Ordering::Release);
+            way.meta.store(meta, Ordering::Release);
+            way.life.store(life, Ordering::Release);
+            way.key.store(pk.ik, Ordering::Release);
+        }
+        self.repair_weight(set, pk.ik);
     }
 
     /// Weighted-capacity repair (DESIGN.md §Weighted capacity): while the
@@ -215,7 +363,7 @@ impl KwWfa {
     /// passes, each freeing one way with a single CAS (a failed CAS
     /// means concurrent churn — the racing put's own repair finishes the
     /// job).
-    fn repair_weight(&self, pk: PreparedKey) {
+    fn repair_weight(&self, set: &[Way], keep_ik: u64) {
         if !self.engine.weight_active() {
             return;
         }
@@ -225,7 +373,6 @@ impl KwWfa {
         // budget (transient overshoot during the race is the usual "it
         // is a cache" window).
         std::sync::atomic::fence(Ordering::SeqCst);
-        let set = self.set_ways(pk.set);
         let budget = self.engine.set_budget();
         let ttl_active = self.engine.ttl_active();
         let k = set.len();
@@ -245,7 +392,7 @@ impl KwWfa {
                 }
                 let life = way.life.load(Ordering::Relaxed);
                 total += lifetime::weight_of(life);
-                if key == pk.ik {
+                if key == keep_ik {
                     continue; // spare the entry this put installed
                 }
                 if expired_pick.is_none() && ttl_active && lifetime::is_expired(life, now_ms) {
@@ -279,67 +426,95 @@ impl KwWfa {
 
 impl Cache for KwWfa {
     fn get(&self, key: u64) -> Option<u64> {
-        self.get_prepared(self.engine.prepare(key))
+        self.get_prepared(self.engine.prepare(key, self.elastic.snapshot().geo))
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+        self.put_prepared(
+            self.engine.prepare(key, self.elastic.snapshot().geo),
+            value,
+            EntryOpts::default(),
+        )
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.put_prepared(self.engine.prepare(key), value, opts)
+        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
         out.reserve(keys.len());
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             keys,
             |&key| key,
-            |set| self.prefetch_set(set, ways),
+            |set| self.prefetch_set(&ep.table, set, ways),
             |pk, _| out.push(self.get_prepared(pk)),
         );
     }
 
     fn put_batch(&self, items: &[(u64, u64)]) {
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.0,
-            |set| self.prefetch_set(set, ways),
+            |set| self.prefetch_set(&ep.table, set, ways),
             |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
         );
     }
 
     fn put_batch_with(&self, items: &[BatchEntry]) {
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.key,
-            |set| self.prefetch_set(set, ways),
+            |set| self.prefetch_set(&ep.table, set, ways),
             |pk, item| self.put_prepared(pk, item.value, item.opts),
         );
     }
 
     fn capacity(&self) -> usize {
-        self.engine.geometry().capacity()
+        let ep = self.elastic.snapshot();
+        match ep.prev() {
+            // Mid-resize both tables are live, so the instantaneous
+            // entry bound is the larger geometry; it converges to the
+            // target when the source epoch retires.
+            Some(prev) => ep.geo.capacity().max(prev.geo.capacity()),
+            None => ep.geo.capacity(),
+        }
+    }
+
+    fn requested_capacity(&self) -> usize {
+        self.elastic.snapshot().geo.requested_capacity()
     }
 
     fn len(&self) -> usize {
-        self.ways
-            .iter()
-            .filter(|w| {
-                let k = w.key.load(Ordering::Relaxed);
-                k != EMPTY && k != RESERVED
-            })
-            .count()
+        let ep = self.elastic.snapshot();
+        let mut n = Self::table_len(&ep.table);
+        if let Some(prev) = ep.prev() {
+            n += Self::table_len(&prev.table);
+        }
+        n
     }
 
     fn weight(&self) -> u64 {
         if !self.engine.weight_active() {
             return self.len() as u64;
         }
-        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).sum()
+        let ep = self.elastic.snapshot();
+        let mut total: u64 =
+            (0..ep.geo.num_sets()).map(|s| Self::set_weight(ep.table.set(ep.geo, s))).sum();
+        if let Some(prev) = ep.prev() {
+            total += (0..prev.geo.num_sets())
+                .map(|s| Self::set_weight(prev.table.set(prev.geo, s)))
+                .sum::<u64>();
+        }
+        total
     }
 
     fn name(&self) -> &'static str {
@@ -350,17 +525,43 @@ impl Cache for KwWfa {
         true
     }
 
+    fn supports_resize(&self) -> bool {
+        true
+    }
+
+    fn resize(&self, new_capacity: usize) -> bool {
+        // An admin op serializes on any in-flight migration: finish it,
+        // then begin the new epoch. Migration itself stays incremental
+        // (resize_step / help-on-write).
+        while self.elastic.resizing() {
+            if self.resize_step(64) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        let geo = self.elastic.snapshot().geo;
+        self.elastic.begin(geo.resized(new_capacity), |g| WfaTable::new(g.capacity()))
+    }
+
+    fn resize_step(&self, max_sets: usize) -> usize {
+        self.elastic.step(max_sets, |ep, prev, set| self.migrate_set(ep, prev, set))
+    }
+
+    fn resize_pending(&self) -> bool {
+        self.elastic.resizing()
+    }
+
     fn sweep_expired(&self, max_sets: usize) -> usize {
         if max_sets == 0 || !self.engine.ttl_active() {
             return 0;
         }
-        let num_sets = self.engine.geometry().num_sets();
+        let ep = self.elastic.snapshot();
+        let num_sets = ep.geo.num_sets();
         let span = max_sets.min(num_sets);
-        let start = self.engine.sweep_start(span);
+        let start = self.engine.sweep_start(span, num_sets);
         let now_ms = lifetime::now_ms();
         let mut reclaimed = 0;
         for j in 0..span {
-            for way in self.set_ways((start + j) % num_sets) {
+            for way in ep.table.set(ep.geo, (start + j) % num_sets) {
                 let key = way.key.load(Ordering::Acquire);
                 if key == EMPTY || key == RESERVED {
                     continue;
@@ -379,7 +580,8 @@ impl Cache for KwWfa {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let set = self.set_ways(self.engine.geometry().set_of(key));
+        let ep = self.elastic.snapshot();
+        let set = ep.table.set(ep.geo, ep.geo.set_of(key));
         self.engine.peek_victim_with(
             set.len(),
             |i| set[i].key.load(Ordering::Acquire),
@@ -562,6 +764,30 @@ mod tests {
         assert_eq!(c.len(), 10);
         for key in 10..20u64 {
             assert_eq!(c.get(key), Some(key), "immortal {key} survives the sweep");
+        }
+    }
+
+    #[test]
+    fn grow_keeps_every_entry_readable() {
+        // 100 keys over 256 sets: no set can overflow its 8 ways, so a
+        // missing key is a resize bug, not an eviction.
+        let c = KwWfa::new(2048, 8, Policy::Lru);
+        for key in 0..100u64 {
+            c.put(key, key + 9);
+        }
+        assert!(c.resize(4096));
+        assert!(c.resize_pending());
+        // Mid-migration reads fall through to the old table.
+        for key in 0..100u64 {
+            assert_eq!(c.get(key), Some(key + 9), "key {key} lost mid-resize");
+        }
+        while c.resize_pending() {
+            c.resize_step(16);
+        }
+        assert_eq!(c.geometry().num_sets(), 512);
+        assert_eq!(c.capacity(), 4096);
+        for key in 0..100u64 {
+            assert_eq!(c.get(key), Some(key + 9), "key {key} lost after migration");
         }
     }
 

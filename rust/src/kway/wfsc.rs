@@ -20,23 +20,31 @@
 //!
 //! The probe / victim / touch logic lives in [`SetEngine`]; this file owns
 //! only the SoA storage and the fingerprint claim/publish protocol —
-//! including the lifetime dimension (expired lines probe as misses, are
-//! the victims of first resort, and the per-set weight budget is
-//! repaired after inserts; DESIGN.md §Expiration, §Weighted capacity).
+//! including the lifetime dimension (DESIGN.md §Expiration, §Weighted
+//! capacity) and the **elastic-resize dimension**: the five arrays live
+//! behind an epoch-stamped [`Elastic`] holder and a migration claims each
+//! source line by CASing its fingerprint to the dedicated [`MIGRATING`]
+//! sentinel (fingerprints are odd by construction, so the even sentinel
+//! can never collide with a probe), republishes the entry into the new
+//! table, and frees the source line (DESIGN.md §Elastic resizing).
 //! The SoA layout also makes WFSC the best batching target: one prefetch
 //! of the set's fingerprint line covers the whole probe.
 
-use super::engine::{self, PreparedKey, SetEngine, MAX_WAYS};
+use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
 use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Wait-free separate-counters k-way cache.
-pub struct KwWfsc {
-    engine: SetEngine,
-    /// Non-zero fingerprint per occupied way; 0 = empty.
+/// Fingerprint-word sentinel of a line claimed by a resize migration.
+/// [`crate::util::hash::fingerprint`] always sets bit 0, so every real
+/// fingerprint is odd and this even value matches no probe.
+const MIGRATING: u64 = 2;
+
+/// One geometry epoch's storage: the five flat atomic arrays.
+struct WfscTable {
+    /// Non-zero fingerprint per occupied way; 0 = empty, 2 = migrating.
     fps: Box<[AtomicU64]>,
     /// Policy metadata (the paper's separate counters array).
     counters: Box<[AtomicU64]>,
@@ -52,25 +60,39 @@ fn atomic_array(n: usize) -> Box<[AtomicU64]> {
     (0..n).map(|_| AtomicU64::new(0)).collect()
 }
 
+impl WfscTable {
+    fn new(capacity: usize) -> Self {
+        Self {
+            fps: atomic_array(capacity),
+            counters: atomic_array(capacity),
+            keys: atomic_array(capacity),
+            values: atomic_array(capacity),
+            lives: atomic_array(capacity),
+        }
+    }
+}
+
+/// Wait-free separate-counters k-way cache.
+pub struct KwWfsc {
+    engine: SetEngine,
+    elastic: Elastic<WfscTable>,
+}
+
 impl KwWfsc {
     /// Build a cache of (at least) `capacity` weight units in sets of
     /// `ways` entries, evicting under `policy`.
     pub fn new(capacity: usize, ways: usize, policy: Policy) -> Self {
-        let engine = SetEngine::new(capacity, ways, policy);
-        let n = engine.geometry().capacity();
+        let geo = Geometry::new(capacity, ways);
         Self {
-            engine,
-            fps: atomic_array(n),
-            counters: atomic_array(n),
-            keys: atomic_array(n),
-            values: atomic_array(n),
-            lives: atomic_array(n),
+            engine: SetEngine::new(ways, policy),
+            elastic: Elastic::new(geo, WfscTable::new(geo.capacity())),
         }
     }
 
-    /// The rounded geometry this cache runs with.
+    /// The rounded geometry this cache currently runs with (the resize
+    /// *target* geometry while a migration is in flight).
     pub fn geometry(&self) -> Geometry {
-        self.engine.geometry()
+        self.elastic.snapshot().geo
     }
 
     /// The eviction policy.
@@ -82,56 +104,91 @@ impl KwWfsc {
     /// weighted-capacity tests: after churn quiesces this never exceeds
     /// the per-set budget (= `ways`).
     pub fn max_set_weight(&self) -> u64 {
-        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).max().unwrap_or(0)
+        let ep = self.elastic.snapshot();
+        (0..ep.geo.num_sets())
+            .map(|s| Self::set_weight(&ep.table, s * ep.geo.ways(), ep.geo.ways()))
+            .max()
+            .unwrap_or(0)
     }
 
-    fn set_weight(&self, set: usize) -> u64 {
-        let start = set * self.engine.geometry().ways();
-        (0..self.engine.geometry().ways())
+    fn set_weight(table: &WfscTable, start: usize, k: usize) -> u64 {
+        (0..k)
             .map(|i| {
-                if self.fps[start + i].load(Ordering::Acquire) == EMPTY {
+                let fp = table.fps[start + i].load(Ordering::Acquire);
+                if fp == EMPTY || fp == MIGRATING {
                     0
                 } else {
-                    lifetime::weight_of(self.lives[start + i].load(Ordering::Relaxed))
+                    lifetime::weight_of(table.lives[start + i].load(Ordering::Relaxed))
                 }
             })
             .sum()
     }
 
+    fn table_len(table: &WfscTable) -> usize {
+        table
+            .fps
+            .iter()
+            .filter(|f| {
+                let fp = f.load(Ordering::Relaxed);
+                fp != EMPTY && fp != MIGRATING
+            })
+            .count()
+    }
+
     /// Publish (value, counter, life, key) into a way whose fingerprint
     /// we own.
     #[inline]
-    fn publish(&self, idx: usize, ik: u64, value: u64, life: u64, now: u64) {
-        self.values[idx].store(value, Ordering::Release);
-        self.counters[idx].store(self.engine.initial_meta(now), Ordering::Release);
-        self.lives[idx].store(life, Ordering::Release);
-        self.keys[idx].store(ik, Ordering::Release);
+    fn publish(table: &WfscTable, idx: usize, ik: u64, value: u64, life: u64, meta: u64) {
+        table.values[idx].store(value, Ordering::Release);
+        table.counters[idx].store(meta, Ordering::Release);
+        table.lives[idx].store(life, Ordering::Release);
+        table.keys[idx].store(ik, Ordering::Release);
     }
 
-    /// `get` with the hashing already done (shared by the scalar and
-    /// batched paths).
+    /// Probe one set of one table; touches the hit's counter.
     #[inline]
-    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
-        let now = self.engine.tick();
+    fn probe_set(
+        &self,
+        table: &WfscTable,
+        start: usize,
+        k: usize,
+        pk: &PreparedKey,
+        now: u64,
+    ) -> Option<u64> {
         let ttl_active = self.engine.ttl_active();
         let now_ms = self.engine.expiry_now();
-        let start = pk.set * self.engine.geometry().ways();
-        let k = self.engine.geometry().ways();
         // Contiguous fingerprint scan (Alg. 5): one cache line for k <= 8.
         let (way, value) = self.engine.probe_get(
             k,
             |i| {
-                self.fps[start + i].load(Ordering::Acquire) == pk.fp
-                    && self.keys[start + i].load(Ordering::Acquire) == pk.ik
+                table.fps[start + i].load(Ordering::Acquire) == pk.fp
+                    && table.keys[start + i].load(Ordering::Acquire) == pk.ik
             },
             |i| {
                 ttl_active
-                    && lifetime::is_expired(self.lives[start + i].load(Ordering::Relaxed), now_ms)
+                    && lifetime::is_expired(table.lives[start + i].load(Ordering::Relaxed), now_ms)
             },
-            |i| self.values[start + i].load(Ordering::Acquire),
+            |i| table.values[start + i].load(Ordering::Acquire),
         )?;
-        self.engine.touch_atomic(&self.counters[start + way], now);
+        self.engine.touch_atomic(&table.counters[start + way], now);
         Some(value)
+    }
+
+    /// `get` with the hashing already done (shared by the scalar and
+    /// batched paths). Misses fall through old→new while a resize is
+    /// migrating, exactly like KW-WFA.
+    #[inline]
+    fn get_prepared(&self, pk: PreparedKey) -> Option<u64> {
+        let now = self.engine.tick();
+        let ep = self.elastic.snapshot();
+        let k = ep.geo.ways();
+        let start = ep.geo.set_of_hash(pk.hash) * k;
+        if let Some(value) = self.probe_set(&ep.table, start, k, &pk, now) {
+            return Some(value);
+        }
+        let prev = ep.prev()?;
+        let old_start = prev.geo.set_of_hash(pk.hash) * k;
+        self.probe_set(&prev.table, old_start, k, &pk, now)
     }
 
     /// `put` with the hashing already done.
@@ -140,35 +197,42 @@ impl KwWfsc {
         if opts.weight as u64 > self.engine.set_budget() {
             return; // heavier than a whole set: can never fit, dropped
         }
+        let ep = self.elastic.snapshot();
+        if let Some(prev) = ep.prev() {
+            // Help-on-write: drain the key's source set first, so the
+            // insert below can never leave a second copy behind.
+            self.migrate_set(ep, prev, prev.geo.set_of_hash(pk.hash));
+        }
         let now = self.engine.tick();
         let now_ms = self.engine.expiry_now();
         let life = lifetime::life_of(&opts, now_ms);
         let ttl_active = self.engine.ttl_active();
-        let start = pk.set * self.engine.geometry().ways();
-        let k = self.engine.geometry().ways();
+        let k = ep.geo.ways();
+        let start = ep.geo.set_of_hash(pk.hash) * k;
+        let table = &*ep.table;
 
         // Pass 1 (Alg. 6 lines 3–9): overwrite an existing entry (and
         // refresh its life word — an overwrite restarts the TTL).
         if let Some(i) = self.engine.find_match(k, |i| {
-            self.fps[start + i].load(Ordering::Acquire) == pk.fp
-                && self.keys[start + i].load(Ordering::Acquire) == pk.ik
+            table.fps[start + i].load(Ordering::Acquire) == pk.fp
+                && table.keys[start + i].load(Ordering::Acquire) == pk.ik
         }) {
-            self.values[start + i].store(value, Ordering::Release);
-            self.lives[start + i].store(life, Ordering::Release);
-            self.engine.touch_atomic(&self.counters[start + i], now);
-            self.repair_weight(pk);
+            table.values[start + i].store(value, Ordering::Release);
+            table.lives[start + i].store(life, Ordering::Release);
+            self.engine.touch_atomic(&table.counters[start + i], now);
+            self.repair_weight(table, start, pk.ik);
             return;
         }
 
         // Pass 2: claim an empty way (fingerprint CAS 0 -> fp).
         for i in 0..k {
-            if self.fps[start + i].load(Ordering::Acquire) == EMPTY
-                && self.fps[start + i]
+            if table.fps[start + i].load(Ordering::Acquire) == EMPTY
+                && table.fps[start + i]
                     .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
-                self.publish(start + i, pk.ik, value, life, now);
-                self.repair_weight(pk);
+                Self::publish(table, start + i, pk.ik, value, life, self.engine.initial_meta(now));
+                self.repair_weight(table, start, pk.ik);
                 return;
             }
         }
@@ -183,25 +247,134 @@ impl KwWfsc {
         // expired), and taking it as the victim of first resort would
         // race the in-flight publish — same rule as repair_weight below.
         let choice = self.engine.choose_victim(k, now, |i| {
-            let fp = self.fps[start + i].load(Ordering::Acquire);
+            let fp = table.fps[start + i].load(Ordering::Acquire);
+            if fp == MIGRATING {
+                return (fp, u64::MAX, false); // mid-migration: never the victim
+            }
             let expired = if ttl_active && fp != EMPTY {
-                let word = self.keys[start + i].load(Ordering::Acquire);
+                let word = table.keys[start + i].load(Ordering::Acquire);
                 word != EMPTY
                     && word != RESERVED
-                    && lifetime::is_expired(self.lives[start + i].load(Ordering::Relaxed), now_ms)
+                    && lifetime::is_expired(table.lives[start + i].load(Ordering::Relaxed), now_ms)
             } else {
                 false
             };
-            (fp, self.counters[start + i].load(Ordering::Relaxed), expired)
+            (fp, table.counters[start + i].load(Ordering::Relaxed), expired)
         });
+        if choice.guard == MIGRATING {
+            return;
+        }
         let idx = start + choice.way;
-        if self.fps[idx]
+        if table.fps[idx]
             .compare_exchange(choice.guard, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
-            self.publish(idx, pk.ik, value, life, now);
+            Self::publish(table, idx, pk.ik, value, life, self.engine.initial_meta(now));
         }
-        self.repair_weight(pk);
+        self.repair_weight(table, start, pk.ik);
+    }
+
+    /// Drain one source set of an in-flight resize into the target table:
+    /// each live line is claimed by CASing its fingerprint to
+    /// [`MIGRATING`] (no probe can match it from that moment), its words
+    /// are read, the source line is freed, and the entry is republished
+    /// carrying its earned metadata. Expired lines are dropped; claims
+    /// lost to concurrent drains or replacements are skipped.
+    fn migrate_set(&self, ep: &Epoch<WfscTable>, prev: &Epoch<WfscTable>, old_set: usize) {
+        let k = prev.geo.ways();
+        let start = old_set * k;
+        let table = &*prev.table;
+        for i in 0..k {
+            let fp = table.fps[start + i].load(Ordering::Acquire);
+            if fp == EMPTY || fp == MIGRATING {
+                continue;
+            }
+            let word = table.keys[start + i].load(Ordering::Acquire);
+            if word == EMPTY || word == RESERVED {
+                continue; // mid-publish: the background walk will retry
+            }
+            if table.fps[start + i]
+                .compare_exchange(fp, MIGRATING, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue; // lost to a concurrent drain/replacement
+            }
+            // We own the line now; re-read the words under the claim. A
+            // fp-colliding republish that raced the claim shows up as a
+            // sentinel key word here — treat it as a dropped insert.
+            let word = table.keys[start + i].load(Ordering::Acquire);
+            let value = table.values[start + i].load(Ordering::Acquire);
+            let meta = table.counters[start + i].load(Ordering::Relaxed);
+            let life = table.lives[start + i].load(Ordering::Relaxed);
+            table.keys[start + i].store(EMPTY, Ordering::Release);
+            table.fps[start + i].store(EMPTY, Ordering::Release);
+            if word == EMPTY || word == RESERVED {
+                continue;
+            }
+            if self.engine.ttl_active() && lifetime::is_expired(life, self.engine.expiry_now()) {
+                continue; // dead line: reclaim, don't move
+            }
+            let pk = self.engine.prepare(Geometry::decode_key(word), ep.geo);
+            self.install_migrated(ep, &pk, value, meta, life);
+        }
+    }
+
+    /// Republish one migrated entry into its target set, preserving its
+    /// counter and life word; see `KwWfa::install_migrated` for the
+    /// placement contract (fresher copy wins, full sets merge by policy
+    /// order through [`SetEngine::place_migrated`]).
+    fn install_migrated(
+        &self,
+        ep: &Epoch<WfscTable>,
+        pk: &PreparedKey,
+        value: u64,
+        meta: u64,
+        life: u64,
+    ) {
+        let k = ep.geo.ways();
+        let start = ep.geo.set_of_hash(pk.hash) * k;
+        let table = &*ep.table;
+        let resident = self.engine.find_match(k, |i| {
+            table.fps[start + i].load(Ordering::Acquire) == pk.fp
+                && table.keys[start + i].load(Ordering::Acquire) == pk.ik
+        });
+        if resident.is_some() {
+            return; // a fresher insert already landed in the target
+        }
+        for i in 0..k {
+            if table.fps[start + i].load(Ordering::Acquire) == EMPTY
+                && table.fps[start + i]
+                    .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                Self::publish(table, start + i, pk.ik, value, life, meta);
+                self.repair_weight(table, start, pk.ik);
+                return;
+            }
+        }
+        // Full target set: merge by policy order.
+        let now = self.engine.now();
+        let mut guards = [0u64; MAX_WAYS];
+        let mut metas = [u64::MAX; MAX_WAYS];
+        for i in 0..k {
+            let fp = table.fps[start + i].load(Ordering::Acquire);
+            guards[i] = fp;
+            let word = table.keys[start + i].load(Ordering::Acquire);
+            if fp != EMPTY && fp != MIGRATING && word != EMPTY && word != RESERVED {
+                metas[i] = table.counters[start + i].load(Ordering::Relaxed);
+            }
+        }
+        let Some(victim) = self.engine.place_migrated(k, now, &metas, meta) else {
+            return; // the migrated entry is the policy victim: drop it
+        };
+        let idx = start + victim;
+        if table.fps[idx]
+            .compare_exchange(guards[victim], pk.fp, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+        {
+            Self::publish(table, idx, pk.ik, value, life, meta);
+        }
+        self.repair_weight(table, start, pk.ik);
     }
 
     /// Weighted-capacity repair: evict victims (expired lines first, the
@@ -210,7 +383,7 @@ impl KwWfsc {
     /// a non-unit weight; see [`KwWfa`](super::KwWfa) for the protocol
     /// discussion — here a way is freed by CASing its fingerprint back
     /// to 0.
-    fn repair_weight(&self, pk: PreparedKey) {
+    fn repair_weight(&self, table: &WfscTable, start: usize, keep_ik: u64) {
         if !self.engine.weight_active() {
             return;
         }
@@ -220,8 +393,7 @@ impl KwWfsc {
         std::sync::atomic::fence(Ordering::SeqCst);
         let budget = self.engine.set_budget();
         let ttl_active = self.engine.ttl_active();
-        let start = pk.set * self.engine.geometry().ways();
-        let k = self.engine.geometry().ways();
+        let k = self.engine.ways();
         for _ in 0..k {
             let now = self.engine.now();
             let now_ms = self.engine.expiry_now();
@@ -232,17 +404,17 @@ impl KwWfsc {
             let mut n = 0usize;
             let mut expired_pick: Option<(usize, u64)> = None;
             for i in 0..k {
-                let fp = self.fps[start + i].load(Ordering::Acquire);
-                if fp == EMPTY {
+                let fp = table.fps[start + i].load(Ordering::Acquire);
+                if fp == EMPTY || fp == MIGRATING {
                     continue;
                 }
-                let key = self.keys[start + i].load(Ordering::Acquire);
+                let key = table.keys[start + i].load(Ordering::Acquire);
                 if key == EMPTY || key == RESERVED {
                     continue; // mid-publish: its own put will repair
                 }
-                let life = self.lives[start + i].load(Ordering::Relaxed);
+                let life = table.lives[start + i].load(Ordering::Relaxed);
                 total += lifetime::weight_of(life);
-                if key == pk.ik {
+                if key == keep_ik {
                     continue; // spare the entry this put installed
                 }
                 if expired_pick.is_none() && ttl_active && lifetime::is_expired(life, now_ms) {
@@ -250,7 +422,7 @@ impl KwWfsc {
                 }
                 eligible[n] = i;
                 guards[n] = fp;
-                metas[n] = self.counters[start + i].load(Ordering::Relaxed);
+                metas[n] = table.counters[start + i].load(Ordering::Relaxed);
                 n += 1;
             }
             if total <= budget {
@@ -264,7 +436,7 @@ impl KwWfsc {
                 }
                 None => return,
             };
-            let _ = self.fps[start + way].compare_exchange(
+            let _ = table.fps[start + way].compare_exchange(
                 guard,
                 EMPTY,
                 Ordering::AcqRel,
@@ -276,21 +448,27 @@ impl KwWfsc {
 
 impl Cache for KwWfsc {
     fn get(&self, key: u64) -> Option<u64> {
-        self.get_prepared(self.engine.prepare(key))
+        self.get_prepared(self.engine.prepare(key, self.elastic.snapshot().geo))
     }
 
     fn put(&self, key: u64, value: u64) {
-        self.put_prepared(self.engine.prepare(key), value, EntryOpts::default())
+        self.put_prepared(
+            self.engine.prepare(key, self.elastic.snapshot().geo),
+            value,
+            EntryOpts::default(),
+        )
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.put_prepared(self.engine.prepare(key), value, opts)
+        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts)
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
         out.reserve(keys.len());
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             keys,
             |&key| key,
             // The lines a get touches: one fingerprint line covers the
@@ -298,59 +476,85 @@ impl Cache for KwWfsc {
             // each land on one more line.
             |set| {
                 let base = set * ways;
-                engine::prefetch_read(&self.fps[base]);
-                engine::prefetch_read(&self.keys[base]);
-                engine::prefetch_read(&self.values[base]);
+                engine::prefetch_read(&ep.table.fps[base]);
+                engine::prefetch_read(&ep.table.keys[base]);
+                engine::prefetch_read(&ep.table.values[base]);
             },
             |pk, _| out.push(self.get_prepared(pk)),
         );
     }
 
     fn put_batch(&self, items: &[(u64, u64)]) {
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.0,
             // The lines a put touches first: fingerprints (pass 1/2 scan +
             // claim), keys (pass-1 validation), counters (victim scan).
             |set| {
                 let base = set * ways;
-                engine::prefetch_read(&self.fps[base]);
-                engine::prefetch_read(&self.keys[base]);
-                engine::prefetch_read(&self.counters[base]);
+                engine::prefetch_read(&ep.table.fps[base]);
+                engine::prefetch_read(&ep.table.keys[base]);
+                engine::prefetch_read(&ep.table.counters[base]);
             },
             |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
         );
     }
 
     fn put_batch_with(&self, items: &[BatchEntry]) {
-        let ways = self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let ways = ep.geo.ways();
         self.engine.for_batch(
+            ep.geo,
             items,
             |item| item.key,
             |set| {
                 let base = set * ways;
-                engine::prefetch_read(&self.fps[base]);
-                engine::prefetch_read(&self.keys[base]);
-                engine::prefetch_read(&self.counters[base]);
+                engine::prefetch_read(&ep.table.fps[base]);
+                engine::prefetch_read(&ep.table.keys[base]);
+                engine::prefetch_read(&ep.table.counters[base]);
             },
             |pk, item| self.put_prepared(pk, item.value, item.opts),
         );
     }
 
     fn capacity(&self) -> usize {
-        self.engine.geometry().capacity()
+        let ep = self.elastic.snapshot();
+        match ep.prev() {
+            Some(prev) => ep.geo.capacity().max(prev.geo.capacity()),
+            None => ep.geo.capacity(),
+        }
+    }
+
+    fn requested_capacity(&self) -> usize {
+        self.elastic.snapshot().geo.requested_capacity()
     }
 
     fn len(&self) -> usize {
-        self.fps.iter().filter(|f| f.load(Ordering::Relaxed) != EMPTY).count()
+        let ep = self.elastic.snapshot();
+        let mut n = Self::table_len(&ep.table);
+        if let Some(prev) = ep.prev() {
+            n += Self::table_len(&prev.table);
+        }
+        n
     }
 
     fn weight(&self) -> u64 {
         if !self.engine.weight_active() {
             return self.len() as u64;
         }
-        (0..self.engine.geometry().num_sets()).map(|s| self.set_weight(s)).sum()
+        let ep = self.elastic.snapshot();
+        let k = ep.geo.ways();
+        let mut total: u64 =
+            (0..ep.geo.num_sets()).map(|s| Self::set_weight(&ep.table, s * k, k)).sum();
+        if let Some(prev) = ep.prev() {
+            total += (0..prev.geo.num_sets())
+                .map(|s| Self::set_weight(&prev.table, s * k, k))
+                .sum::<u64>();
+        }
+        total
     }
 
     fn name(&self) -> &'static str {
@@ -361,28 +565,51 @@ impl Cache for KwWfsc {
         true
     }
 
+    fn supports_resize(&self) -> bool {
+        true
+    }
+
+    fn resize(&self, new_capacity: usize) -> bool {
+        while self.elastic.resizing() {
+            if self.resize_step(64) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        let geo = self.elastic.snapshot().geo;
+        self.elastic.begin(geo.resized(new_capacity), |g| WfscTable::new(g.capacity()))
+    }
+
+    fn resize_step(&self, max_sets: usize) -> usize {
+        self.elastic.step(max_sets, |ep, prev, set| self.migrate_set(ep, prev, set))
+    }
+
+    fn resize_pending(&self) -> bool {
+        self.elastic.resizing()
+    }
+
     fn sweep_expired(&self, max_sets: usize) -> usize {
         if max_sets == 0 || !self.engine.ttl_active() {
             return 0;
         }
-        let geo = self.engine.geometry();
+        let ep = self.elastic.snapshot();
+        let geo = ep.geo;
         let span = max_sets.min(geo.num_sets());
-        let start_set = self.engine.sweep_start(span);
+        let start_set = self.engine.sweep_start(span, geo.num_sets());
         let now_ms = lifetime::now_ms();
         let mut reclaimed = 0;
         for j in 0..span {
             let base = ((start_set + j) % geo.num_sets()) * geo.ways();
             for i in 0..geo.ways() {
-                let fp = self.fps[base + i].load(Ordering::Acquire);
-                if fp == EMPTY {
+                let fp = ep.table.fps[base + i].load(Ordering::Acquire);
+                if fp == EMPTY || fp == MIGRATING {
                     continue;
                 }
-                let key = self.keys[base + i].load(Ordering::Acquire);
+                let key = ep.table.keys[base + i].load(Ordering::Acquire);
                 if key == EMPTY || key == RESERVED {
                     continue; // mid-publish
                 }
-                if lifetime::is_expired(self.lives[base + i].load(Ordering::Relaxed), now_ms)
-                    && self.fps[base + i]
+                if lifetime::is_expired(ep.table.lives[base + i].load(Ordering::Relaxed), now_ms)
+                    && ep.table.fps[base + i]
                         .compare_exchange(fp, EMPTY, Ordering::AcqRel, Ordering::Relaxed)
                         .is_ok()
                 {
@@ -394,17 +621,22 @@ impl Cache for KwWfsc {
     }
 
     fn peek_victim(&self, key: u64) -> Option<u64> {
-        let start = self.engine.geometry().set_of(key) * self.engine.geometry().ways();
+        let ep = self.elastic.snapshot();
+        let start = ep.geo.set_of(key) * ep.geo.ways();
         self.engine.peek_victim_with(
-            self.engine.geometry().ways(),
+            ep.geo.ways(),
             |i| {
                 // Effective key word: EMPTY when the way is free, RESERVED
-                // when the fingerprint is claimed but the key word is not
-                // yet published, the encoded key otherwise.
-                if self.fps[start + i].load(Ordering::Acquire) == EMPTY {
+                // when the fingerprint is claimed (by a publish or a
+                // migration) but the key word is not trustworthy, the
+                // encoded key otherwise.
+                let fp = ep.table.fps[start + i].load(Ordering::Acquire);
+                if fp == EMPTY {
                     EMPTY
+                } else if fp == MIGRATING {
+                    RESERVED
                 } else {
-                    let word = self.keys[start + i].load(Ordering::Acquire);
+                    let word = ep.table.keys[start + i].load(Ordering::Acquire);
                     if word == EMPTY || word == RESERVED {
                         RESERVED
                     } else {
@@ -412,8 +644,8 @@ impl Cache for KwWfsc {
                     }
                 }
             },
-            |i| self.counters[start + i].load(Ordering::Relaxed),
-            |i| self.lives[start + i].load(Ordering::Relaxed),
+            |i| ep.table.counters[start + i].load(Ordering::Relaxed),
+            |i| ep.table.lives[start + i].load(Ordering::Relaxed),
         )
     }
 }
@@ -584,6 +816,33 @@ mod tests {
         }
         assert_eq!(c.sweep_expired(c.geometry().num_sets()), 10);
         assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn grow_and_shrink_round_trip_keeps_working_set() {
+        // 60 keys over 128 sets (1024 capacity, 8 ways) never overflow a
+        // set, before, during or after the round trip.
+        let c = KwWfsc::new(1024, 8, Policy::Lru);
+        for key in 0..60u64 {
+            c.put(key, key * 7);
+        }
+        assert!(c.resize(2048));
+        while c.resize_pending() {
+            c.resize_step(8);
+        }
+        assert_eq!(c.capacity(), 2048);
+        for key in 0..60u64 {
+            assert_eq!(c.get(key), Some(key * 7), "key {key} lost in grow");
+        }
+        assert!(c.resize(1024));
+        while c.resize_pending() {
+            c.resize_step(8);
+        }
+        assert_eq!(c.capacity(), 1024);
+        for key in 0..60u64 {
+            assert_eq!(c.get(key), Some(key * 7), "key {key} lost in shrink");
+        }
+        assert_eq!(c.len(), 60);
     }
 
     #[test]

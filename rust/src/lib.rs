@@ -81,6 +81,31 @@ pub use lifetime::{BatchEntry, EntryOpts, WeightDist};
 /// assert_eq!(cache.get(2), None); // expired keys are never returned
 /// assert_eq!(cache.get(3), Some(30));
 /// ```
+///
+/// # Online elastic resizing
+///
+/// Implementations that report [`Cache::supports_resize`] treat capacity
+/// as a runtime dial: [`Cache::resize`] installs a new geometry
+/// immediately, entries migrate incrementally ([`Cache::resize_step`]
+/// and organically on writes), and reads stay correct mid-migration —
+/// linear hashing over the power-of-two set count makes the split
+/// deterministic (DESIGN.md §Elastic resizing). Fixed-geometry
+/// implementations refuse honestly instead of pretending.
+///
+/// ```
+/// use kway::Cache;
+/// use kway::kway::KwWfsc;
+/// use kway::policy::Policy;
+///
+/// let cache = KwWfsc::new(1 << 10, 8, Policy::Lru);
+/// cache.put(1, 10);
+/// assert!(cache.supports_resize() && cache.resize(1 << 11));
+/// while cache.resize_pending() {
+///     cache.resize_step(64); // the background driver's increment
+/// }
+/// assert_eq!(cache.capacity(), 1 << 11);
+/// assert_eq!(cache.get(1), Some(10)); // no admitted entry is lost
+/// ```
 pub trait Cache: Send + Sync {
     /// Retrieve `key`'s value, updating the policy metadata on a hit.
     fn get(&self, key: u64) -> Option<u64>;
@@ -128,7 +153,52 @@ pub trait Cache: Send + Sync {
     /// Maximum number of entries the cache may hold. For
     /// lifetime-supporting implementations this doubles as the total
     /// *weight* budget: with unit weights the two readings coincide.
+    /// While an online resize is migrating, implementations report the
+    /// larger of the source and target capacities (both tables are live);
+    /// the figure converges to the target once migration completes.
     fn capacity(&self) -> usize;
+    /// The capacity that was *asked for*, before any internal rounding.
+    /// The k-way implementations round the set count to a power of two,
+    /// which can inflate [`Cache::capacity`] up to ~2× — reports should
+    /// show both figures so resize targets stay honest. Defaults to
+    /// [`Cache::capacity`] (exact for implementations that do not round).
+    fn requested_capacity(&self) -> usize {
+        self.capacity()
+    }
+    /// Does this implementation support online resizing
+    /// ([`Cache::resize`] / [`Cache::resize_step`])? `false` (the
+    /// default) is the honest answer for fixed-geometry implementations:
+    /// their `resize` refuses rather than silently dropping the request.
+    fn supports_resize(&self) -> bool {
+        false
+    }
+    /// Begin an online resize toward `new_capacity` and return whether it
+    /// was accepted. Implementations with support change their capacity
+    /// *incrementally*: the call installs the new geometry and returns
+    /// immediately, entries migrate via [`Cache::resize_step`] and
+    /// organically on writes, and reads stay correct throughout
+    /// (DESIGN.md §Elastic resizing). If a previous resize is still
+    /// migrating, the call drives it to completion first (admin ops
+    /// serialize). The default refuses (`false`) — the honest behaviour
+    /// of a fixed-geometry implementation.
+    fn resize(&self, new_capacity: usize) -> bool {
+        let _ = new_capacity;
+        false
+    }
+    /// Drive the migration of an in-flight resize: claim up to `max_sets`
+    /// not-yet-split source sets and move their entries into the new
+    /// table, returning how many sets this call migrated. `0` means no
+    /// resize is pending (or every set is already claimed by concurrent
+    /// steppers — poll [`Cache::resize_pending`] to distinguish). Safe to
+    /// call from any number of threads; the default does nothing.
+    fn resize_step(&self, max_sets: usize) -> usize {
+        let _ = max_sets;
+        0
+    }
+    /// Is a resize migration currently in flight? The default is `false`.
+    fn resize_pending(&self) -> bool {
+        false
+    }
     /// Number of entries currently held (approximate under concurrency).
     fn len(&self) -> usize;
     /// Total weight units currently held (approximate under
@@ -198,6 +268,21 @@ impl Cache for std::sync::Arc<dyn Cache> {
     }
     fn capacity(&self) -> usize {
         (**self).capacity()
+    }
+    fn requested_capacity(&self) -> usize {
+        (**self).requested_capacity()
+    }
+    fn supports_resize(&self) -> bool {
+        (**self).supports_resize()
+    }
+    fn resize(&self, new_capacity: usize) -> bool {
+        (**self).resize(new_capacity)
+    }
+    fn resize_step(&self, max_sets: usize) -> usize {
+        (**self).resize_step(max_sets)
+    }
+    fn resize_pending(&self) -> bool {
+        (**self).resize_pending()
     }
     fn len(&self) -> usize {
         (**self).len()

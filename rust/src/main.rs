@@ -5,6 +5,7 @@
 //!   throughput  multi-threaded trace-replay throughput (Figures 14–26)
 //!   synthetic   synthetic-mix throughput (Figures 27–30)
 //!   batch       batched-get sweep: Mops/s + per-batch p50/p99 vs batch size
+//!   resize      online elastic-resize sweep: before/during/after phases vs a twin
 //!   bench       named benchmark suite; --json writes BENCH_<name>.json
 //!   serve       run the cache service demo (router + workers + metrics)
 //!   validate    cross-check the XLA artifacts against the native engine
@@ -19,6 +20,13 @@
 //! `--weight-dist unit|uniform[:MAX]|zipf[:MAX]` (deterministic per-key
 //! entry weights against the weight-based capacity); `synthetic
 //! --workload expiring` is the dedicated TTL-churn scenario.
+//!
+//! `throughput`, `synthetic` and `serve` additionally take `--resize-at
+//! N --resize-to C`: after N operations the cache is resized online to
+//! capacity C mid-run (the harness — or, on `serve`, the service's
+//! background driver — pumps the migration while traffic keeps flowing);
+//! the dedicated `resize` subcommand measures the before/during/after
+//! phases explicitly against a twin built at the target capacity.
 
 use anyhow::{anyhow, bail, Result};
 use kway::lifetime::{parse_duration, WeightDist};
@@ -44,6 +52,7 @@ fn main() {
         Some("throughput") => cmd_throughput(&args),
         Some("synthetic") => cmd_synthetic(&args),
         Some("batch") => cmd_batch(&args),
+        Some("resize") => cmd_resize(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
@@ -63,11 +72,12 @@ fn main() {
 
 const HELP: &str = "usage: kway <subcommand> [--options]
   hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
-  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
-  synthetic  --workload miss100|hit100|hit95|hit90|expiring [--capacity 2097152] [--threads ...] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C]
+  synthetic  --workload miss100|hit100|hit95|hit90|expiring [--capacity 2097152] [--threads ...] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C]
   batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
   bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--json]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
@@ -95,6 +105,23 @@ fn parse_fill(args: &Args) -> Result<FillSpec> {
             .ok_or_else(|| anyhow!("bad --weight-dist {raw:?} (unit|uniform[:MAX]|zipf[:MAX])"))?,
     };
     Ok(FillSpec { ttl, weight_dist })
+}
+
+/// Parse the shared `--resize-at N --resize-to C` pair (both or
+/// neither) into the harness's mid-run [`ResizeSpec`] trigger.
+fn parse_resize(args: &Args) -> Result<Option<kway::throughput::ResizeSpec>> {
+    match (args.get("resize-at"), args.get("resize-to")) {
+        (None, None) => Ok(None),
+        (Some(at), Some(to)) => {
+            let at_ops: u64 = at.parse().map_err(|_| anyhow!("bad --resize-at {at:?}"))?;
+            let to_capacity: usize = to.parse().map_err(|_| anyhow!("bad --resize-to {to:?}"))?;
+            if to_capacity == 0 {
+                bail!("--resize-to must be positive");
+            }
+            Ok(Some(kway::throughput::ResizeSpec { at_ops, to_capacity }))
+        }
+        _ => bail!("--resize-at and --resize-to must be given together"),
+    }
 }
 
 fn cmd_hitratio(args: &Args) -> Result<()> {
@@ -155,15 +182,20 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --policy"))?;
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
+    let resize = parse_resize(args)?;
 
     println!(
-        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} fill={} (Mops/s)",
+        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} fill={}{} (Mops/s)",
         trace.name,
         capacity,
         duration,
         repeats,
         admission.name(),
-        fill.label()
+        fill.label(),
+        match resize {
+            Some(spec) => format!(" resize@{}ops->{}", spec.at_ops, spec.to_capacity),
+            None => String::new(),
+        }
     );
     print!("{:20}", "impl\\threads");
     for t in &threads {
@@ -178,7 +210,8 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
+            let cfg =
+                RunConfig { threads: t, duration, repeats, seed, fill: fill.clone(), resize };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -208,15 +241,20 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
     let seed = args.get_parsed_or("seed", 42u64)?;
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
+    let resize = parse_resize(args)?;
 
     println!(
-        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} fill={} (Mops/s)",
+        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} fill={}{} (Mops/s)",
         workload.label(),
         capacity,
         duration,
         repeats,
         admission.name(),
-        fill.label()
+        fill.label(),
+        match resize {
+            Some(spec) => format!(" resize@{}ops->{}", spec.at_ops, spec.to_capacity),
+            None => String::new(),
+        }
     );
     print!("{:20}", "impl\\threads");
     for t in &threads {
@@ -230,7 +268,8 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, Policy::Lru, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
+            let cfg =
+                RunConfig { threads: t, duration, repeats, seed, fill: fill.clone(), resize };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -271,7 +310,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let factory = impl_factory(name, capacity, threads, Policy::Lru, admission)
             .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
         let label = format!("{name}{}", admission.label());
-        let cfg = RunConfig { threads, duration, repeats, seed, fill: fill.clone() };
+        let cfg = RunConfig { threads, duration, repeats, seed, fill: fill.clone(), resize: None };
         // Baseline: the same resident-set gets, one key per call.
         let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
         println!(
@@ -297,6 +336,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use kway::coordinator::{CacheService, ServiceConfig};
     use kway::kway::KwWfsc;
+    use std::sync::atomic::{AtomicBool, Ordering};
     let capacity = args.get_parsed_or("capacity", 65_536usize)?;
     let workers = args.get_parsed_or("workers", 4usize)?;
     let clients = args.get_parsed_or("clients", 8usize)?;
@@ -308,9 +348,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --ttl <dur> becomes the service-wide default entry lifetime: every
     // routed put carries it unless the caller passes explicit options.
     let default_ttl = parse_fill(args)?.ttl;
+    // --resize-at N --resize-to C: once the service has executed N
+    // operations, issue the online-resize admin op; the service's
+    // background driver migrates while the clients keep hammering.
+    let resize = parse_resize(args)?;
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
-        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}",
+        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}{}",
         cache.name(),
         admission.label(),
         cache.capacity(),
@@ -318,15 +362,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match default_ttl {
             Some(ttl) => format!(" (ttl {ttl:?})"),
             None => String::new(),
+        },
+        match resize {
+            Some(spec) => format!(" (resize@{}ops->{})", spec.at_ops, spec.to_capacity),
+            None => String::new(),
         }
     );
     let service = CacheService::start(cache, ServiceConfig { workers, admission, default_ttl });
     let keyspace = (capacity * 4) as u64;
-    let secs = if batch > 0 {
-        kway::coordinator::drive_clients_batched(&service, clients, requests, batch, keyspace, 7)
-    } else {
-        kway::coordinator::drive_clients(&service, clients, requests, keyspace, 7)
-    };
+    let done = AtomicBool::new(false);
+    let secs = std::thread::scope(|scope| {
+        if let Some(spec) = resize {
+            let service = &service;
+            let done = &done;
+            scope.spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    let m = service.metrics();
+                    let total =
+                        m.ops.gets.load(Ordering::Relaxed) + m.ops.puts.load(Ordering::Relaxed);
+                    if total >= spec.at_ops {
+                        service.resize(spec.to_capacity);
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            });
+        }
+        let secs = if batch > 0 {
+            kway::coordinator::drive_clients_batched(
+                &service, clients, requests, batch, keyspace, 7,
+            )
+        } else {
+            kway::coordinator::drive_clients(&service, clients, requests, keyspace, 7)
+        };
+        done.store(true, Ordering::Relaxed);
+        secs
+    });
     // Batched clients round the request count up to whole batches.
     let per_client = if batch > 0 { requests.div_ceil(batch) * batch } else { requests };
     let total = (clients * per_client) as f64;
@@ -335,7 +406,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total / secs,
         service.metrics().report()
     );
+    if resize.is_some() {
+        service.wait_for_resize();
+        println!(
+            "resize admin ops: {} (final capacity {}, requested {})",
+            service.metrics().resizes.load(Ordering::Relaxed),
+            service.cache().capacity(),
+            service.cache().requested_capacity()
+        );
+    }
     service.shutdown();
+    Ok(())
+}
+
+/// The elastic-resize sweep: for each implementation, measure the same
+/// uniform get-or-fill workload before / during / after an online resize
+/// from `--from` to `--to`, next to a *twin* cache built directly at the
+/// target capacity. A grow passes when the after-phase hit ratio reaches
+/// the twin's (the figR acceptance criterion); the during-phase column
+/// quantifies the migration's throughput dip.
+fn cmd_resize(args: &Args) -> Result<()> {
+    use kway::throughput::measure_resize;
+    let from = args.get_parsed_or("from", 1usize << 14)?;
+    let to = args.get_parsed_or("to", 1usize << 15)?;
+    if from == 0 || to == 0 {
+        bail!("--from/--to must be positive");
+    }
+    let working_set = args.get_parsed_or("working-set", (from.max(to) / 4 * 3) as u64)?;
+    let threads = args.get_parsed_or("threads", 4usize)?;
+    let phase = Duration::from_millis(args.get_parsed_or("phase-ms", 300u64)?);
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let policy = Policy::parse(&args.get_or("policy", "lru"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    let admission = parse_admission(args)?;
+    let default_impls: Vec<String> =
+        ["KW-WFA", "KW-WFSC", "KW-LS", "sampled"].iter().map(|s| s.to_string()).collect();
+    let impls: Vec<String> = args.get_list_or("impls", &default_impls)?;
+
+    println!(
+        "# resize sweep: {from} -> {to} working_set={working_set} threads={threads} \
+         phase={phase:?} policy={} admission={}",
+        policy.name(),
+        admission.name()
+    );
+    println!(
+        "{:16} {:>10} {:>10} {:>10} {:>11} {:>7} {:>7} {:>7} {:>7}",
+        "impl", "before", "during", "after", "migrate(ms)", "hit0", "hitM", "hitR", "twin"
+    );
+    for name in &impls {
+        let factory = impl_factory(name, from, threads, policy, admission)
+            .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+        let twin = impl_factory(name, to, threads, policy, admission)
+            .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
+        let probe = factory();
+        if !probe.supports_resize() {
+            println!("{:16} (no online-resize support; skipped)", probe.name());
+            continue;
+        }
+        let label = format!("{name}{}", admission.label());
+        let r = measure_resize(&*factory, &*twin, to, working_set, threads, phase, seed);
+        println!(
+            "{:16} {:>10.2} {:>10.2} {:>10.2} {:>11.1} {:>7.3} {:>7.3} {:>7.3} {:>7.3}",
+            label,
+            r.before.mops,
+            r.during.mops,
+            r.after.mops,
+            r.migrate_ms,
+            r.before.hit_ratio,
+            r.during.hit_ratio,
+            r.after.hit_ratio,
+            r.twin_hit
+        );
+    }
+    println!(
+        "\nReading: Mops/s columns are the before/during/after phases of the\n\
+         online resize; hit0/hitM/hitR the matching hit ratios; `twin` is a\n\
+         cache built at the target capacity outright. A grow recovers when\n\
+         hitR reaches twin; `during` vs `before` is the migration's cost to\n\
+         the serving path. Requested capacities are honest figures — the\n\
+         k-way set count rounds to a power of two (see `kway bench --json`\n\
+         requested vs effective capacity)."
+    );
     Ok(())
 }
 
@@ -384,10 +535,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
     let mut rows: Vec<Json> = Vec::new();
     for impl_name in &impls {
+        // The capacity the built cache actually holds: power-of-two set
+        // rounding can inflate the request up to ~2×, and the JSON
+        // reports both so resize targets stay honest. Probed once per
+        // implementation — it depends on (capacity, ways), not threads.
+        let mut effective_capacity = 0usize;
         for &t in &threads {
             let factory = impl_factory(impl_name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {impl_name:?}"))?;
-            let cfg = RunConfig { threads: t, duration, repeats, seed, fill: fill.clone() };
+            if effective_capacity == 0 {
+                effective_capacity = factory().capacity();
+            }
+            let cfg = RunConfig {
+                threads: t,
+                duration,
+                repeats,
+                seed,
+                fill: fill.clone(),
+                resize: None,
+            };
             let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
             let label = format!("{impl_name}{}", admission.label());
             println!(
@@ -402,6 +568,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             rows.push(Json::Object(vec![
                 ("impl".to_string(), Json::Str(label)),
                 ("threads".to_string(), Json::Int(t as i64)),
+                ("effective_capacity".to_string(), Json::Int(effective_capacity as i64)),
                 ("mops_mean".to_string(), Json::Float(r.mops.mean())),
                 ("mops_stddev".to_string(), Json::Float(r.mops.stddev())),
                 ("p50_ns".to_string(), Json::Int(r.lat_p50_ns as i64)),
@@ -411,14 +578,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     if args.has_flag("json") {
-        // Schema v2 = v1 plus the fill options (ttl_ms 0 = immortal);
-        // see DESIGN.md §Bench JSON.
+        // Schema v3 = v2 plus the honest capacity pair: top-level
+        // `requested_capacity` (the CLI figure) and per-row
+        // `effective_capacity` (post-rounding); see DESIGN.md §Bench
+        // JSON. `capacity` stays for v2-reader continuity.
         let ttl_ms = fill.ttl.map_or(0, |d| d.as_millis() as i64);
         let doc = Json::Object(vec![
-            ("schema".to_string(), Json::Str("kway-bench-v2".to_string())),
+            ("schema".to_string(), Json::Str(kway::util::json::BENCH_SCHEMA.to_string())),
             ("name".to_string(), Json::Str(name.clone())),
             ("trace".to_string(), Json::Str(trace.name.clone())),
             ("capacity".to_string(), Json::Int(capacity as i64)),
+            ("requested_capacity".to_string(), Json::Int(capacity as i64)),
             ("policy".to_string(), Json::Str(policy.name().to_string())),
             ("admission".to_string(), Json::Str(admission.name().to_string())),
             ("ttl_ms".to_string(), Json::Int(ttl_ms)),
@@ -428,6 +598,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ("seed".to_string(), Json::Int(seed as i64)),
             ("results".to_string(), Json::Array(rows)),
         ]);
+        // A document that fails its own schema check is a bug, not an
+        // artifact: refuse to write it.
+        kway::util::json::check_bench_schema(&doc)
+            .map_err(|e| anyhow!("bench JSON failed the {} check: {e}", "kway-bench-v3"))?;
         let path = format!("BENCH_{name}.json");
         std::fs::write(&path, format!("{doc}\n"))
             .map_err(|e| anyhow!("writing {path}: {e}"))?;

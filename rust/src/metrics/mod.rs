@@ -68,7 +68,12 @@ impl LatencyHistogram {
         }
     }
 
-    /// Approximate percentile (upper bound of the containing bucket).
+    /// Approximate percentile: the **lower bound** of the bucket holding
+    /// the q-th sample. Every sample in a bucket is `>=` its lower bound,
+    /// so the reported figure never exceeds the true percentile by more
+    /// than rounding — the previous upper-bound convention overstated
+    /// p50/p99 by up to one bucket width (~6% at 4 sub-bucket bits),
+    /// which is exactly the margin resize-dip comparisons care about.
     pub fn percentile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -81,13 +86,14 @@ impl LatencyHistogram {
             if seen >= target {
                 let bucket = i / SUB;
                 let sub = i % SUB;
+                if (bucket as u32) < SUB_BITS {
+                    // Sub-16ns values index by their own low bits: the
+                    // sub-bucket *is* the exact recorded value.
+                    return sub as u64;
+                }
                 let base = 1u64 << bucket;
-                let width = if bucket as u32 >= SUB_BITS {
-                    1u64 << (bucket as u32 - SUB_BITS)
-                } else {
-                    1
-                };
-                return base + (sub as u64 + 1) * width;
+                let width = 1u64 << (bucket as u32 - SUB_BITS);
+                return base + sub as u64 * width;
             }
         }
         u64::MAX
@@ -147,6 +153,42 @@ mod tests {
         assert!((2_500..=10_500).contains(&p50), "p50={p50}");
         assert!(p99 >= 9_000, "p99={p99}");
         assert!((h.mean() - 5000.5).abs() < 100.0);
+    }
+
+    #[test]
+    fn percentile_reports_the_bucket_lower_bound() {
+        // A point distribution pins the bound exactly: 1000 ns lands in
+        // bucket 9 (width 32), whose containing sub-bucket spans
+        // [992, 1024). Every percentile of a point mass at 1000 must
+        // report 992 — *at most* the true value — where the old
+        // upper-bound convention said 1024, overstating by a bucket
+        // width.
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record(1000);
+        }
+        for q in [1.0, 50.0, 99.0, 99.9] {
+            let p = h.percentile(q);
+            assert_eq!(p, 992, "q={q}: expected the bucket lower bound");
+            assert!(p <= 1000, "q={q}: a percentile must never exceed the sample");
+        }
+        // Small exact buckets (< 16 ns) report the exact value.
+        let h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record(5);
+        }
+        assert_eq!(h.percentile(50.0), 5);
+        // A two-point distribution keeps the quantile semantics: the
+        // median of 900 ones and 100 large samples is the ones' bucket.
+        let h = LatencyHistogram::new();
+        for _ in 0..900 {
+            h.record(1);
+        }
+        for _ in 0..100 {
+            h.record(1_000_000);
+        }
+        assert_eq!(h.percentile(50.0), 1);
+        assert!(h.percentile(95.0) >= 900_000, "p95 sits in the large bucket");
     }
 
     #[test]

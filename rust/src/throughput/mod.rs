@@ -139,6 +139,21 @@ impl Workload {
     }
 }
 
+/// A mid-run online resize trigger (the CLI's `--resize-at N
+/// --resize-to C`): once the workers have issued `at_ops` operations,
+/// the harness calls [`Cache::resize`]`(to_capacity)` and then acts as
+/// the background migration driver (pumping [`Cache::resize_step`])
+/// until the split watermark covers every source set — all while the
+/// workers keep hammering the cache. Caches without resize support get
+/// one warning and run unresized.
+#[derive(Debug, Clone, Copy)]
+pub struct ResizeSpec {
+    /// Total worker operations after which the resize fires.
+    pub at_ops: u64,
+    /// Capacity the resize targets.
+    pub to_capacity: usize,
+}
+
 /// Harness configuration.
 #[derive(Clone)]
 pub struct RunConfig {
@@ -152,6 +167,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// TTL/weight options applied to every fill (see [`FillSpec`]).
     pub fill: FillSpec,
+    /// Optional mid-run online resize (see [`ResizeSpec`]).
+    pub resize: Option<ResizeSpec>,
 }
 
 impl Default for RunConfig {
@@ -162,6 +179,7 @@ impl Default for RunConfig {
             repeats: 5,
             seed: 1,
             fill: FillSpec::default(),
+            resize: None,
         }
     }
 }
@@ -215,6 +233,12 @@ pub fn measure(
                 cache.name()
             );
         }
+        if rep == 0 && cfg.resize.is_some() && !cache.supports_resize() {
+            eprintln!(
+                "warning: {} has no resize support; --resize-at/--resize-to are ignored",
+                cache.name()
+            );
+        }
         let (ops, hits, gets, secs) = one_run(cache, workload, cfg, rep as u64, &latency);
         mops.add(ops as f64 / secs / 1e6);
         total_hits += hits;
@@ -227,6 +251,156 @@ pub fn measure(
         lat_p99_ns: latency.percentile(99.0),
         lat_mean_ns: latency.mean(),
     }
+}
+
+/// Throughput and hit ratio over one wall-clock phase of the resize
+/// measurement ([`measure_resize`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseStats {
+    /// Mops/s over the phase.
+    pub mops: f64,
+    /// hits / gets over the phase.
+    pub hit_ratio: f64,
+}
+
+/// Result of a [`measure_resize`] run: the same workload measured before
+/// the resize fires, *during* the migration, and after it completes,
+/// plus the steady-state hit ratio of a *twin* cache built directly at
+/// the target capacity — the yardstick the after-phase must recover to
+/// (the figR acceptance criterion).
+#[derive(Debug, Clone)]
+pub struct ResizeRunResult {
+    /// Steady state at the initial capacity.
+    pub before: PhaseStats,
+    /// While the migration driver is pumping `resize_step`.
+    pub during: PhaseStats,
+    /// Steady state after the migration completed.
+    pub after: PhaseStats,
+    /// Wall-clock milliseconds from `resize()` to watermark completion.
+    pub migrate_ms: f64,
+    /// Steady-state hit ratio of the twin built at the target capacity.
+    pub twin_hit: f64,
+}
+
+/// Drive `threads` get-or-fill workers (uniform keys below
+/// `working_set`) against `cache` for `duration`; returns the phase's
+/// throughput and hit ratio. The fill value of key `k` is always
+/// `k.wrapping_mul(31)`, so phases compose (an entry installed in one
+/// phase hits in the next).
+pub fn drive_phase(
+    cache: &Arc<dyn Cache>,
+    working_set: u64,
+    threads: usize,
+    duration: Duration,
+    seed: u64,
+) -> PhaseStats {
+    let stop = AtomicBool::new(false);
+    let ops = AtomicU64::new(0);
+    let hits = AtomicU64::new(0);
+    let gets = AtomicU64::new(0);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let cache = cache.clone();
+            let stop = &stop;
+            let ops = &ops;
+            let hits = &hits;
+            let gets = &gets;
+            scope.spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(seed ^ (0xA11CE << 8) ^ t as u64);
+                let mut local = (0u64, 0u64, 0u64);
+                loop {
+                    for _ in 0..256 {
+                        let key = rng.below(working_set);
+                        local.2 += 1;
+                        if cache.get(key).is_some() {
+                            local.1 += 1;
+                            local.0 += 1;
+                        } else {
+                            cache.put(key, key.wrapping_mul(31));
+                            local.0 += 2;
+                        }
+                    }
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+                ops.fetch_add(local.0, Ordering::Relaxed);
+                hits.fetch_add(local.1, Ordering::Relaxed);
+                gets.fetch_add(local.2, Ordering::Relaxed);
+            });
+        }
+        std::thread::sleep(duration);
+        stop.store(true, Ordering::Release);
+    });
+    let secs = start.elapsed().as_secs_f64();
+    let g = gets.load(Ordering::Relaxed);
+    PhaseStats {
+        mops: ops.load(Ordering::Relaxed) as f64 / secs / 1e6,
+        hit_ratio: if g > 0 { hits.load(Ordering::Relaxed) as f64 / g as f64 } else { 0.0 },
+    }
+}
+
+/// Measure an online resize end to end (the `kway resize` sweep and
+/// `benches/resize.rs`): warm a cache built by `factory` to steady state
+/// on a uniform get-or-fill working set, measure the **before** phase,
+/// fire `resize(to_capacity)` with a concurrent background driver while
+/// measuring the **during** phase, let the working set re-reach steady
+/// state, measure the **after** phase, and finally measure a *twin*
+/// cache built by `twin_factory` directly at the target capacity. A grow
+/// recovers when `after.hit_ratio` reaches the twin's; the during-phase
+/// Mops/s dip quantifies what the migration costs the serving path.
+pub fn measure_resize(
+    factory: &dyn Fn() -> Arc<dyn Cache>,
+    twin_factory: &dyn Fn() -> Arc<dyn Cache>,
+    to_capacity: usize,
+    working_set: u64,
+    threads: usize,
+    phase_duration: Duration,
+    seed: u64,
+) -> ResizeRunResult {
+    let warm = |cache: &Arc<dyn Cache>| {
+        for k in 0..working_set {
+            if cache.get(k).is_none() {
+                cache.put(k, k.wrapping_mul(31));
+            }
+        }
+        drive_phase(cache, working_set, threads, phase_duration, seed ^ 0x77);
+    };
+
+    let cache = factory();
+    warm(&cache);
+    let before = drive_phase(&cache, working_set, threads, phase_duration, seed);
+
+    let t0 = Instant::now();
+    let accepted = cache.resize(to_capacity);
+    let driver = {
+        let cache = cache.clone();
+        std::thread::spawn(move || {
+            while cache.resize_pending() {
+                if cache.resize_step(64) == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+    };
+    let during = drive_phase(&cache, working_set, threads, phase_duration, seed ^ 1);
+    let migrate_ms = driver.join().expect("resize driver panicked");
+    if !accepted {
+        eprintln!("warning: {} refused the resize; phases ran unresized", cache.name());
+    }
+
+    // Let the (possibly grown) cache refill to steady state, then
+    // measure the recovery phase.
+    warm(&cache);
+    let after = drive_phase(&cache, working_set, threads, phase_duration, seed ^ 2);
+
+    let twin = twin_factory();
+    warm(&twin);
+    let twin_hit = drive_phase(&twin, working_set, threads, phase_duration, seed ^ 3).hit_ratio;
+
+    ResizeRunResult { before, during, after, migrate_ms, twin_hit }
 }
 
 fn one_run(
@@ -274,9 +448,10 @@ fn one_run(
             }
             warm_done.wait();
             barrier.wait();
-            let (ops, hits, gets) =
-                worker(&*cache, &workload, &fill, &stop, t, threads, seed, &latency);
-            total_ops.fetch_add(ops, Ordering::Relaxed);
+            // `worker` publishes its op count progressively through the
+            // pacer (into `total_ops`), so only hits/gets remain to add.
+            let (_ops, hits, gets) =
+                worker(&*cache, &workload, &fill, &stop, &total_ops, t, threads, seed, &latency);
             total_hits.fetch_add(hits, Ordering::Relaxed);
             total_gets.fetch_add(gets, Ordering::Relaxed);
         }));
@@ -305,7 +480,30 @@ fn one_run(
 
     barrier.wait();
     let start = std::time::Instant::now();
-    std::thread::sleep(cfg.duration);
+    match cfg.resize {
+        Some(spec) if cache.supports_resize() => {
+            // Poll cheaply until the op-count trigger (or the window
+            // ends), fire the resize, then serve as the background
+            // migration driver while the workers keep running.
+            let deadline = start + cfg.duration;
+            while Instant::now() < deadline && total_ops.load(Ordering::Relaxed) < spec.at_ops {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            if Instant::now() < deadline {
+                cache.resize(spec.to_capacity);
+                while cache.resize_pending() && Instant::now() < deadline {
+                    if cache.resize_step(64) == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            let now = Instant::now();
+            if now < deadline {
+                std::thread::sleep(deadline - now);
+            }
+        }
+        _ => std::thread::sleep(cfg.duration),
+    }
     stop.store(true, Ordering::Release);
     for h in handles {
         h.join().unwrap();
@@ -317,6 +515,28 @@ fn one_run(
         total_gets.load(Ordering::Relaxed),
         secs,
     )
+}
+
+/// Paces a worker's outer loop: at every stop-flag poll (once per
+/// `CHECK_EVERY` accesses) it also publishes the ops performed since the
+/// last poll into the shared progress counter, so the main thread can
+/// watch the run advance — the `--resize-at N` trigger fires off exactly
+/// this counter. One relaxed `fetch_add` per 256 accesses per thread:
+/// noise next to the accesses themselves, and identical across
+/// implementations.
+struct Pacer<'a> {
+    stop: &'a AtomicBool,
+    progress: &'a AtomicU64,
+    published: u64,
+}
+
+impl Pacer<'_> {
+    #[inline]
+    fn should_stop(&mut self, ops: u64) -> bool {
+        self.progress.fetch_add(ops - self.published, Ordering::Relaxed);
+        self.published = ops;
+        self.stop.load(Ordering::Acquire)
+    }
 }
 
 /// Times one op in [`SAMPLE_EVERY`] into the shared histogram; the other
@@ -349,13 +569,17 @@ impl<'a> Sampler<'a> {
 /// The worker loop; returns (ops, hits, gets). An "op" is a get or a put,
 /// matching the paper's Get/Put operations-per-second metric (every key of
 /// a batched get counts as one op). Every fill goes through `fill`, which
-/// routes to the plain put path unless the run carries TTLs or weights.
+/// routes to the plain put path unless the run carries TTLs or weights;
+/// `progress` receives the running op count once per check interval (the
+/// final figure is exact — the last poll before returning publishes the
+/// remainder).
 #[allow(clippy::too_many_arguments)]
 fn worker(
     cache: &dyn Cache,
     workload: &Workload,
     fill: &FillSpec,
     stop: &AtomicBool,
+    progress: &AtomicU64,
     thread_id: usize,
     threads: usize,
     seed: u64,
@@ -365,6 +589,7 @@ fn worker(
     let mut ops = 0u64;
     let mut hits = 0u64;
     let mut gets = 0u64;
+    let mut pacer = Pacer { stop, progress, published: 0 };
     let mut sampler = Sampler::new(latency);
     match workload {
         Workload::TraceReplay(trace) => {
@@ -394,7 +619,7 @@ fn worker(
                         ops += 2;
                     }
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -417,7 +642,7 @@ fn worker(
                     ops += 2;
                     next += 1;
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -433,7 +658,7 @@ fn worker(
                     }
                     ops += 1;
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -460,7 +685,7 @@ fn worker(
                         ops += 1;
                     }
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -485,7 +710,7 @@ fn worker(
                     ops += batch as u64;
                     hits += out.iter().filter(|v| v.is_some()).count() as u64;
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -516,7 +741,7 @@ fn worker(
                         ops += 2;
                     }
                 }
-                if stop.load(Ordering::Acquire) {
+                if pacer.should_stop(ops) {
                     return (ops, hits, gets);
                 }
             }
@@ -769,6 +994,51 @@ mod tests {
         let r = measure(&kw_factory(4096), &Workload::Expiring { working_set: 512 }, &cfg);
         assert!(r.mops.mean() > 0.0);
         assert!(r.hit_ratio > 0.0, "weighted resident set should still hit");
+    }
+
+    #[test]
+    fn mid_run_resize_spec_grows_the_cache() {
+        use std::sync::Mutex;
+        let last: Arc<Mutex<Option<Arc<dyn Cache>>>> = Arc::new(Mutex::new(None));
+        let last2 = last.clone();
+        let factory = move || -> Arc<dyn Cache> {
+            let c: Arc<dyn Cache> = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+            *last2.lock().unwrap() = Some(c.clone());
+            c
+        };
+        let cfg = RunConfig {
+            threads: 2,
+            duration: Duration::from_millis(150),
+            repeats: 1,
+            seed: 7,
+            resize: Some(ResizeSpec { at_ops: 1, to_capacity: 4096 }),
+            ..Default::default()
+        };
+        let r = measure(&factory, &Workload::AllHit { working_set: 256 }, &cfg);
+        assert!(r.mops.mean() > 0.0);
+        let cache = last.lock().unwrap().clone().unwrap();
+        assert!(!cache.resize_pending(), "the harness drives the migration to completion");
+        assert_eq!(cache.capacity(), 4096, "the mid-run resize must have landed");
+    }
+
+    #[test]
+    fn measure_resize_recovers_the_twin_hit_ratio() {
+        // Working set 3× the initial capacity: capped hit ratio before,
+        // near-twin hit ratio after the grow refills. This is the
+        // acceptance criterion of the figR figures in miniature.
+        let factory = || -> Arc<dyn Cache> { Arc::new(KwWfsc::new(1024, 8, Policy::Lru)) };
+        let twin = || -> Arc<dyn Cache> { Arc::new(KwWfsc::new(4096, 8, Policy::Lru)) };
+        let r = measure_resize(&factory, &twin, 4096, 3072, 2, Duration::from_millis(80), 3);
+        assert!(r.before.hit_ratio < 0.8, "3× working set must overflow: {}", r.before.hit_ratio);
+        assert!(r.twin_hit > 0.85, "twin at target capacity should mostly hit: {}", r.twin_hit);
+        assert!(
+            r.after.hit_ratio > r.twin_hit - 0.05,
+            "grow must recover the twin's steady state: {} vs twin {}",
+            r.after.hit_ratio,
+            r.twin_hit
+        );
+        assert!(r.before.mops > 0.0 && r.during.mops > 0.0 && r.after.mops > 0.0);
+        assert!(r.migrate_ms >= 0.0);
     }
 
     #[test]

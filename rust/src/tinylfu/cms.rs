@@ -49,7 +49,9 @@ pub struct FrequencySketch {
     /// Accesses recorded since the last reset.
     additions: AtomicU64,
     /// Reset period (the TinyLFU "sample size", W = 10·C by default).
-    sample_size: u64,
+    /// Atomic so an online cache resize can re-derive it from the new
+    /// capacity ([`FrequencySketch::rescale`]).
+    sample_size: AtomicU64,
     /// Completed aging passes — the aging epoch.
     resets: AtomicU64,
     /// Aging mutual exclusion: non-zero while a halving pass runs.
@@ -71,7 +73,7 @@ impl FrequencySketch {
             door: (0..door_bits / 64).map(|_| AtomicU64::new(0)).collect(),
             door_mask: door_bits - 1,
             additions: AtomicU64::new(0),
-            sample_size: 10 * capacity as u64,
+            sample_size: AtomicU64::new(10 * capacity as u64),
             resets: AtomicU64::new(0),
             aging: AtomicU64::new(0),
         }
@@ -133,7 +135,9 @@ impl FrequencySketch {
                 }
             }
         }
-        if self.additions.fetch_add(1, Ordering::Relaxed) + 1 >= self.sample_size {
+        if self.additions.fetch_add(1, Ordering::Relaxed) + 1
+            >= self.sample_size.load(Ordering::Relaxed)
+        {
             self.try_reset();
         }
     }
@@ -169,10 +173,31 @@ impl FrequencySketch {
         {
             return; // another thread is aging right now
         }
-        if self.additions.load(Ordering::Relaxed) >= self.sample_size {
-            self.additions.fetch_sub(self.sample_size, Ordering::Relaxed);
+        let sample_size = self.sample_size.load(Ordering::Relaxed);
+        if self.additions.load(Ordering::Relaxed) >= sample_size {
+            self.additions.fetch_sub(sample_size, Ordering::Relaxed);
             self.reset();
         }
+        self.aging.store(0, Ordering::Release);
+    }
+
+    /// Re-derive the sample size from a resized cache capacity and run
+    /// one immediate aging pass (halve every counter, clear the
+    /// doorkeeper). Called on a *grow*: the frequencies the sketch
+    /// accumulated were competitive against the old, smaller resident
+    /// set, so aging them keeps admission from rejecting the fresh keys
+    /// the grown cache now has room for. The counter *width* stays as
+    /// sized at construction — estimates remain sound, just coarser
+    /// relative to the larger sample (DESIGN.md §Elastic resizing).
+    pub fn rescale(&self, capacity: usize) {
+        self.sample_size.store(10 * capacity.max(16) as u64, Ordering::Relaxed);
+        // Claim the aging flag like any other aging pass; spinning is
+        // fine here (resizes are admin-rare, passes are short).
+        while self.aging.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
+            std::hint::spin_loop();
+        }
+        self.additions.store(0, Ordering::Relaxed);
+        self.reset();
         self.aging.store(0, Ordering::Release);
     }
 
@@ -245,6 +270,27 @@ mod tests {
             s.record(1);
         }
         assert!(s.estimate(1) <= COUNTER_MAX + 1);
+    }
+
+    #[test]
+    fn rescale_ages_and_updates_sample_size() {
+        let s = FrequencySketch::new(64);
+        for _ in 0..12 {
+            s.record(5);
+        }
+        let before = s.estimate(5);
+        assert!(before >= 6, "hot key should be sketch-hot: {before}");
+        let resets_before = s.resets();
+        s.rescale(256); // grow: one immediate aging pass
+        assert_eq!(s.resets(), resets_before + 1);
+        let after = s.estimate(5);
+        assert!(after < before, "aging must halve the estimate: {before} -> {after}");
+        // The new sample size is in force: capacity 256 -> 2560 records
+        // before the next natural aging pass.
+        for i in 0..2_000u64 {
+            s.record(10_000 + i);
+        }
+        assert_eq!(s.resets(), resets_before + 1, "below the grown sample size: no aging yet");
     }
 
     #[test]

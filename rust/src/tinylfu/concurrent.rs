@@ -256,6 +256,40 @@ impl<C: Cache> Cache for TlfuCache<C> {
         self.inner.capacity()
     }
 
+    fn requested_capacity(&self) -> usize {
+        self.inner.requested_capacity()
+    }
+
+    fn supports_resize(&self) -> bool {
+        self.inner.supports_resize()
+    }
+
+    fn resize(&self, new_capacity: usize) -> bool {
+        // Forward to the inner cache; on a successful *grow*, re-age the
+        // sketch: its frequencies were competitive against the old,
+        // smaller resident set, and stale high counts would keep
+        // rejecting the fresh keys the grown cache now has room for. A
+        // shrink keeps the sketch as-is — the survivors' frequencies are
+        // exactly the signal the tighter admission fight needs. Compared
+        // against the *requested* capacity: while a previous resize is
+        // still migrating, `capacity()` reports the larger live geometry,
+        // which would mis-classify a real grow as a shrink.
+        let grew = new_capacity > self.inner.requested_capacity();
+        let accepted = self.inner.resize(new_capacity);
+        if accepted && grew {
+            self.sketch.rescale(new_capacity);
+        }
+        accepted
+    }
+
+    fn resize_step(&self, max_sets: usize) -> usize {
+        self.inner.resize_step(max_sets)
+    }
+
+    fn resize_pending(&self) -> bool {
+        self.inner.resize_pending()
+    }
+
     fn len(&self) -> usize {
         self.inner.len()
     }
@@ -417,6 +451,33 @@ mod tests {
             let expect = if k % 2 == 0 { None } else { Some(k + 1) };
             assert_eq!(c.get(k), expect, "key {k}");
         }
+    }
+
+    #[test]
+    fn resize_forwards_and_reages_the_sketch_on_grow() {
+        let c = TlfuCache::new(KwWfsc::new(256, 8, Policy::Lru), 256);
+        assert!(c.supports_resize(), "k-way support must forward through the wrapper");
+        for _ in 0..10 {
+            let _ = c.get(42); // build sketch frequency
+        }
+        let hot_before = c.sketch().estimate(42);
+        assert!(hot_before >= 5);
+        let resets_before = c.sketch().resets();
+        assert!(c.resize(512));
+        while c.resize_pending() {
+            c.resize_step(16);
+        }
+        assert_eq!(c.capacity(), 512);
+        assert_eq!(c.requested_capacity(), 512);
+        assert_eq!(c.sketch().resets(), resets_before + 1, "grow must re-age the sketch");
+        assert!(c.sketch().estimate(42) < hot_before);
+        // A shrink forwards but does not re-age.
+        let resets = c.sketch().resets();
+        assert!(c.resize(256));
+        while c.resize_pending() {
+            c.resize_step(16);
+        }
+        assert_eq!(c.sketch().resets(), resets, "shrink keeps the sketch as-is");
     }
 
     #[test]

@@ -119,12 +119,23 @@ pub fn mix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// The full 64-bit set hash of a key. Exposed separately from
+/// [`set_index`] so the elastic-resize path can derive a key's set index
+/// under *two* geometries (old and new set count) from one hash pass:
+/// for any power-of-two `num_sets`, `set_hash(key) & (num_sets - 1)` is
+/// the set index, and doubling `num_sets` splits set `s` into `s` and
+/// `s + num_sets` — classic linear hashing.
+#[inline(always)]
+pub fn set_hash(key: u64) -> u64 {
+    xxh64_u64(key, 0)
+}
+
 /// Map a key to a set index. `num_sets` must be a power of two (mirrors
 /// `hash(key) & (numberOfSets-1)` in the paper's Algorithms 2–9).
 #[inline(always)]
 pub fn set_index(key: u64, num_sets: usize) -> usize {
     debug_assert!(num_sets.is_power_of_two());
-    (xxh64_u64(key, 0) as usize) & (num_sets - 1)
+    (set_hash(key) as usize) & (num_sets - 1)
 }
 
 /// Non-zero fingerprint for a key (0 is the empty-slot sentinel in WFSC).
@@ -172,6 +183,20 @@ mod tests {
         // Every set should be within 3x of uniform for sequential keys.
         for &c in &counts {
             assert!(c > expect / 3 && c < expect * 3, "skewed set load {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn set_hash_splits_linearly_on_doubling() {
+        // Doubling the set count must split set `s` into `s` and
+        // `s + old_num_sets` — the property elastic resizing leans on.
+        for key in 0..10_000u64 {
+            let h = set_hash(key) as usize;
+            let small = h & (128 - 1);
+            let big = h & (256 - 1);
+            assert!(big == small || big == small + 128, "key {key}: {small} -> {big}");
+            assert_eq!(set_index(key, 128), small);
+            assert_eq!(set_index(key, 256), big);
         }
     }
 

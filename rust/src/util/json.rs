@@ -306,6 +306,53 @@ fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
     }
 }
 
+/// Current `kway bench --json` schema tag (DESIGN.md §Bench JSON).
+/// v3 = v2 plus the honest capacity pair: a top-level
+/// `requested_capacity` (the CLI figure, pre-rounding) and a per-row
+/// `effective_capacity` (what the built implementation actually holds —
+/// power-of-two set rounding can inflate it up to ~2×).
+pub const BENCH_SCHEMA: &str = "kway-bench-v3";
+
+/// Validate a bench document against [`BENCH_SCHEMA`]. `cmd_bench` runs
+/// this before writing (a malformed document is a bug, not an artifact)
+/// and CI keeps it honest through the unit tests below.
+pub fn check_bench_schema(doc: &Json) -> Result<()> {
+    let field = |key: &str| doc.get(key).ok_or_else(|| anyhow!("missing field {key:?}"));
+    let schema = field("schema")?.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+    if schema != BENCH_SCHEMA {
+        bail!("schema {schema:?} != {BENCH_SCHEMA:?}");
+    }
+    for key in ["name", "trace", "policy", "admission", "weight_dist"] {
+        if field(key)?.as_str().is_none() {
+            bail!("field {key:?} must be a string");
+        }
+    }
+    for key in ["capacity", "requested_capacity", "ttl_ms", "duration_ms", "repeats", "seed"] {
+        if field(key)?.as_i64().is_none() {
+            bail!("field {key:?} must be an integer");
+        }
+    }
+    let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
+    for (i, row) in results.iter().enumerate() {
+        let rfield =
+            |key: &str| row.get(key).ok_or_else(|| anyhow!("results[{i}]: missing {key:?}"));
+        if rfield("impl")?.as_str().is_none() {
+            bail!("results[{i}]: impl must be a string");
+        }
+        for key in ["threads", "effective_capacity", "p50_ns", "p99_ns"] {
+            if rfield(key)?.as_i64().is_none() {
+                bail!("results[{i}]: {key:?} must be an integer");
+            }
+        }
+        for key in ["mops_mean", "mops_stddev", "hit_ratio"] {
+            if rfield(key)?.as_f64().is_none() {
+                bail!("results[{i}]: {key:?} must be numeric");
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +398,44 @@ mod tests {
         let src = r#"{"a":[1,2.5,"x\n"],"b":{"c":true,"d":null}}"#;
         let v = parse(src).unwrap();
         assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    fn bench_doc(schema: &str) -> Json {
+        parse(&format!(
+            r#"{{"schema":"{schema}","name":"oltp","trace":"oltp",
+                "capacity":2048,"requested_capacity":2000,"policy":"lru",
+                "admission":"none","ttl_ms":0,"weight_dist":"unit",
+                "duration_ms":300,"repeats":3,"seed":42,
+                "results":[{{"impl":"KW-WFSC","threads":4,
+                  "effective_capacity":2048,"mops_mean":12.3,
+                  "mops_stddev":0.5,"p50_ns":180,"p99_ns":2100,
+                  "hit_ratio":0.9}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn bench_schema_v3_accepts_and_rejects() {
+        assert_eq!(BENCH_SCHEMA, "kway-bench-v3", "schema bumps must update this check");
+        check_bench_schema(&bench_doc("kway-bench-v3")).unwrap();
+        // Stale schema strings are rejected — the check is version-pinned.
+        assert!(check_bench_schema(&bench_doc("kway-bench-v2")).is_err());
+        // Dropping a v3 field (the honest capacity pair) is rejected.
+        let mut doc = bench_doc("kway-bench-v3");
+        if let Json::Object(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "requested_capacity");
+        }
+        assert!(check_bench_schema(&doc).is_err());
+        let mut doc = bench_doc("kway-bench-v3");
+        if let Json::Object(fields) = &mut doc {
+            let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
+            if let Some(Json::Array(rows)) = results {
+                if let Json::Object(row) = &mut rows[0] {
+                    row.retain(|(k, _)| k != "effective_capacity");
+                }
+            }
+        }
+        assert!(check_bench_schema(&doc).is_err());
     }
 
     #[test]
