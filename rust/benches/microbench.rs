@@ -6,20 +6,33 @@
 //!   WFSC (structure-of-arrays) — the paper's §3 locality argument;
 //! * the KW-LS upgrade path vs the wait-free paths;
 //! * hash function cost (xxh64 vs mix64) and victim-select cost per
-//!   policy — the "one hash vs K PRNG draws" comparison of §1.1.
+//!   policy — the "one hash vs K PRNG draws" comparison of §1.1;
+//! * the **probe path** (DESIGN.md §Hot path): KW-WFSC resident-set gets
+//!   under every available fingerprint-probe kernel
+//!   (avx2/sse2/swar/scalar) × thread counts, core-pinned, reporting
+//!   ns/op *and* cycles/op — the SIMD-speedup figure of the hot-path
+//!   work. `--json` writes the rows to `BENCH_hotpath.json`
+//!   (schema `kway-hotpath-v1`).
 //!
 //! ```bash
-//! cargo bench --bench microbench
+//! cargo bench --bench microbench              # full run
+//! cargo bench --bench microbench -- --smoke   # seconds-scale CI smoke
+//! cargo bench --bench microbench -- --json    # also write BENCH_hotpath.json
+//! KWAY_BENCH_QUICK=1 cargo bench --bench microbench
 //! ```
 
 use kway::fully::Sampled;
+use kway::kway::simd::{self, ProbeKind};
 use kway::kway::{KwLs, KwWfa, KwWfsc};
 use kway::policy::Policy;
 use kway::products::{CaffeineLike, GuavaLike};
-use kway::util::clock::Stopwatch;
+use kway::util::clock::{self, Stopwatch};
 use kway::util::hash;
 use kway::util::rng::Rng;
+use kway::util::{affinity, cli::Args, json::Json};
 use kway::Cache;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
 
 fn ns_per_op(total_ops: u64, secs: f64) -> f64 {
     secs * 1e9 / total_ops as f64
@@ -53,12 +66,161 @@ fn bench_cache(c: &dyn Cache, label: &str, iters: u64) {
     println!("{label:14} get-hit {hit_ns:7.1} ns   miss+put {miss_ns:7.1} ns   (sink {sink})");
 }
 
+/// One measured (probe kernel, thread count) point of the probe-path
+/// bench; serialized into `BENCH_hotpath.json`.
+struct ProbeRow {
+    probe: &'static str,
+    threads: usize,
+    mops: f64,
+    ns_per_op: f64,
+    cycles_per_op: f64,
+}
+
+/// The hot-path measurement: KW-WFSC resident-set gets (the workload
+/// where the fingerprint probe *is* the work), repeated under every
+/// available probe kernel so the avx2/sse2/swar rows read directly
+/// against the scalar baseline. Workers are core-pinned; ns/op and
+/// cycles/op are per-thread sums over total ops (scheduler-migration-
+/// and frequency-honest respectively), Mops/s is over the wall clock.
+fn bench_probe_path(iters_per_thread: u64, thread_counts: &[usize]) -> Vec<ProbeRow> {
+    const CAPACITY: usize = 1 << 18;
+    let working = (CAPACITY / 2) as u64;
+    let mut rows = Vec::new();
+    println!(
+        "{:8} {:>8} {:>10} {:>10} {:>12}",
+        "probe", "threads", "Mops/s", "ns/op", "cycles/op"
+    );
+    for kind in ProbeKind::available() {
+        simd::force(Some(kind));
+        for &threads in thread_counts {
+            let cache = Arc::new(KwWfsc::new(CAPACITY, 8, Policy::Lru));
+            for k in 0..working {
+                cache.put(k, k);
+            }
+            let barrier = Barrier::new(threads);
+            let busy_ns = AtomicU64::new(0);
+            let cycles = AtomicU64::new(0);
+            let wall = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let cache = cache.clone();
+                        let barrier = &barrier;
+                        let busy_ns = &busy_ns;
+                        let cycles = &cycles;
+                        scope.spawn(move || {
+                            affinity::pin_to_core(t);
+                            let mut rng = Rng::new(17 ^ t as u64);
+                            barrier.wait();
+                            let sw = Stopwatch::start();
+                            let tsc0 = clock::cycles_now();
+                            let mut sink = 0u64;
+                            for _ in 0..iters_per_thread {
+                                sink ^= cache.get(rng.below(working)).unwrap_or(0);
+                            }
+                            let tsc1 = clock::cycles_now();
+                            std::hint::black_box(sink);
+                            busy_ns.fetch_add(sw.elapsed_nanos() as u64, Ordering::Relaxed);
+                            cycles.fetch_add(tsc1.wrapping_sub(tsc0), Ordering::Relaxed);
+                        })
+                    })
+                    .collect();
+                let sw = Stopwatch::start();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                sw.elapsed_secs()
+            });
+            let ops = iters_per_thread * threads as u64;
+            let row = ProbeRow {
+                probe: kind.name(),
+                threads,
+                mops: ops as f64 / wall / 1e6,
+                ns_per_op: busy_ns.load(Ordering::Relaxed) as f64 / ops as f64,
+                cycles_per_op: cycles.load(Ordering::Relaxed) as f64 / ops as f64,
+            };
+            println!(
+                "{:8} {:>8} {:>10.2} {:>10.2} {:>12.1}",
+                row.probe, row.threads, row.mops, row.ns_per_op, row.cycles_per_op
+            );
+            rows.push(row);
+        }
+    }
+    simd::force(None);
+    rows
+}
+
+/// Write the probe-path rows as `BENCH_hotpath.json` (schema
+/// `kway-hotpath-v1`), refusing a document that fails its own check.
+fn write_hotpath_json(rows: &[ProbeRow], duration_ms: i64) {
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Object(vec![
+                ("probe".to_string(), Json::Str(r.probe.to_string())),
+                ("threads".to_string(), Json::Int(r.threads as i64)),
+                ("mops".to_string(), Json::Float(r.mops)),
+                ("ns_per_op".to_string(), Json::Float(r.ns_per_op)),
+                ("cycles_per_op".to_string(), Json::Float(r.cycles_per_op)),
+            ])
+        })
+        .collect();
+    let doc = Json::Object(vec![
+        ("schema".to_string(), Json::Str(kway::util::json::HOTPATH_SCHEMA.to_string())),
+        ("impl".to_string(), Json::Str("KW-WFSC".to_string())),
+        ("workload".to_string(), Json::Str("hit100".to_string())),
+        ("capacity".to_string(), Json::Int(1 << 18)),
+        ("ways".to_string(), Json::Int(8)),
+        ("working_set".to_string(), Json::Int(1 << 17)),
+        ("duration_ms".to_string(), Json::Int(duration_ms)),
+        ("seed".to_string(), Json::Int(17)),
+        ("pinned".to_string(), Json::Bool(true)),
+        ("provenance".to_string(), Json::Str("measured".to_string())),
+        ("results".to_string(), Json::Array(json_rows)),
+    ]);
+    if let Err(e) = kway::util::json::check_hotpath_schema(&doc) {
+        eprintln!("refusing to write malformed BENCH_hotpath.json: {e:#}");
+        return;
+    }
+    match std::fs::write("BENCH_hotpath.json", format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("writing BENCH_hotpath.json: {e}"),
+    }
+}
+
 fn main() {
-    let quick = kway::figures::quick_mode();
-    let iters: u64 = if quick { 200_000 } else { 1_000_000 };
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let smoke = args.has_flag("smoke");
+    let quick = smoke || kway::figures::quick_mode();
+    let iters: u64 = if smoke {
+        50_000
+    } else if quick {
+        200_000
+    } else {
+        1_000_000
+    };
     let capacity = 1 << 16;
 
-    println!("== per-op latency (capacity 2^16, 8 ways / sample 8) ==");
+    println!(
+        "== probe path: KW-WFSC resident-set gets per probe kernel (pinned) ==\n\
+         active auto-dispatch: {}",
+        simd::active_kind().name()
+    );
+    let probe_threads: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    let probe_iters = if smoke { 100_000 } else { 2_000_000 };
+    let sw = Stopwatch::start();
+    let rows = bench_probe_path(probe_iters, probe_threads);
+    let probe_ms = (sw.elapsed_secs() * 1e3) as i64;
+    if args.has_flag("json") {
+        write_hotpath_json(&rows, probe_ms);
+    }
+    if smoke {
+        // CI smoke: the probe path ran under every kernel; the rest of
+        // the suite is long-form ablation, not needed for a health check.
+        println!("\n(smoke mode: skipping the long-form ablation sections)");
+        return;
+    }
+
+    println!("\n== per-op latency (capacity 2^16, 8 ways / sample 8) ==");
     bench_cache(&KwWfa::new(capacity, 8, Policy::Lru), "KW-WFA", iters);
     bench_cache(&KwWfsc::new(capacity, 8, Policy::Lru), "KW-WFSC", iters);
     bench_cache(&KwLs::new(capacity, 8, Policy::Lru), "KW-LS", iters);

@@ -1,0 +1,123 @@
+//! Cache-line-aligned table storage for the k-way variants.
+//!
+//! The paper's §3 locality argument — a limited-associativity probe
+//! touches one contiguous set line — only holds if a set's slice of a
+//! flat array never *straddles* cache lines it did not have to. `Vec`
+//! (and `Box<[T]>` built from an iterator) aligns to `align_of::<T>()`,
+//! which for `AtomicU64` is 8: a 64-byte set (8 ways × 8 bytes) can start
+//! anywhere in a line and span two. [`AlignedSlice`] allocates the whole
+//! table at [`CACHE_LINE`] alignment instead, so for any power-of-two way
+//! count a set's `ways * size_of::<T>()` bytes begin at a multiple of
+//! their own span, and a k ≤ 8 fingerprint scan is guaranteed to be a
+//! single-line — and, for the SIMD probe, a single aligned-vector —
+//! access.
+
+use super::geometry::CACHE_LINE;
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::Deref;
+use std::ptr::NonNull;
+
+/// A heap slice of `T` whose base address is [`CACHE_LINE`]-aligned.
+///
+/// Functionally a `Box<[T]>` (derefs to `[T]`, frees on drop) with a
+/// stronger alignment guarantee and zero-fill construction. Used for the
+/// WFSC structure-of-arrays slices and the WFA way array.
+pub(crate) struct AlignedSlice<T> {
+    ptr: NonNull<T>,
+    len: usize,
+}
+
+// SAFETY: AlignedSlice owns its allocation exclusively (same aliasing
+// story as Box<[T]>), so Send/Sync reduce to T's.
+unsafe impl<T: Send> Send for AlignedSlice<T> {}
+unsafe impl<T: Sync> Sync for AlignedSlice<T> {}
+
+impl<T> AlignedSlice<T> {
+    /// Allocate `len` zero-initialized `T`s at cache-line alignment.
+    ///
+    /// # Safety
+    ///
+    /// The all-zero bit pattern must be a valid `T`, and `T` must not
+    /// need `Drop` (elements are deallocated without being dropped).
+    /// Both hold for the atomic table words (`AtomicU64` zero = the
+    /// `EMPTY` sentinel) and for the WFA `Way` quadruple.
+    pub unsafe fn new_zeroed(len: usize) -> Self {
+        debug_assert!(!std::mem::needs_drop::<T>());
+        if len == 0 {
+            return Self { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        let raw = unsafe { alloc_zeroed(layout) } as *mut T;
+        let Some(ptr) = NonNull::new(raw) else { handle_alloc_error(layout) };
+        Self { ptr, len }
+    }
+
+    fn layout(len: usize) -> Layout {
+        let size = len.checked_mul(std::mem::size_of::<T>()).expect("table size overflow");
+        let align = CACHE_LINE.max(std::mem::align_of::<T>());
+        Layout::from_size_align(size, align).expect("bad table layout")
+    }
+}
+
+impl<T> Deref for AlignedSlice<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        // SAFETY: `ptr` covers `len` initialized (zeroed, valid-by-the
+        // constructor-contract) elements for as long as `self` lives.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T> Drop for AlignedSlice<T> {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `new_zeroed` with exactly this layout;
+            // the constructor contract says T needs no drop.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn base_is_cache_line_aligned_and_zeroed() {
+        for len in [1usize, 7, 8, 64, 1000, 1 << 16] {
+            let s: AlignedSlice<AtomicU64> = unsafe { AlignedSlice::new_zeroed(len) };
+            assert_eq!(s.as_ptr() as usize % CACHE_LINE, 0, "len {len}");
+            assert_eq!(s.len(), len);
+            assert!(s.iter().all(|w| w.load(Ordering::Relaxed) == 0));
+            // Writable through the usual atomic API.
+            s[len / 2].store(42, Ordering::Relaxed);
+            assert_eq!(s[len / 2].load(Ordering::Relaxed), 42);
+        }
+    }
+
+    #[test]
+    fn empty_slice_is_fine() {
+        let s: AlignedSlice<AtomicU64> = unsafe { AlignedSlice::new_zeroed(0) };
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn no_set_straddles_a_line_for_power_of_two_ways() {
+        // The invariant the WFSC probe (and its SIMD path) leans on: with
+        // a 64-aligned base, a set of w ≤ 8 ways (w a power of two) lies
+        // inside one cache line; wider sets span whole lines exactly.
+        let s: AlignedSlice<AtomicU64> = unsafe { AlignedSlice::new_zeroed(1 << 10) };
+        let base = s.as_ptr() as usize;
+        for ways in [1usize, 2, 4, 8, 16] {
+            let span = ways * 8;
+            for set in 0..(s.len() / ways) {
+                let start = base + set * span;
+                let lines = (start + span - 1) / CACHE_LINE - start / CACHE_LINE + 1;
+                assert_eq!(lines, span.div_ceil(CACHE_LINE), "ways {ways} set {set}");
+            }
+        }
+    }
+}

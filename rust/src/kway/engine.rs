@@ -240,10 +240,59 @@ impl SetEngine {
         None
     }
 
+    /// [`SetEngine::probe_get`] over a precomputed candidate bitmask (bit
+    /// `i` ⇔ way `i` may match, from `simd::match_mask` over the set's
+    /// fingerprint words). The mask is a *prefilter*: each candidate is
+    /// still verified through `matches` (the full atomic key comparison)
+    /// and re-validated after the value read, so a stale mask bit is
+    /// harmless — exactly the same protocol as the scalar loop, minus the
+    /// per-way fingerprint loads for non-candidates.
+    #[inline]
+    pub fn probe_get_masked(
+        &self,
+        mut mask: u128,
+        matches: impl Fn(usize) -> bool,
+        expired: impl Fn(usize) -> bool,
+        read_value: impl Fn(usize) -> u64,
+    ) -> Option<(usize, u64)> {
+        while mask != 0 {
+            let i = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            if matches(i) {
+                if expired(i) {
+                    continue;
+                }
+                let value = read_value(i);
+                if matches(i) {
+                    return Some((i, value));
+                }
+            }
+        }
+        None
+    }
+
     /// Pass-1 scan of a put: the way already holding this key, if any.
     #[inline]
     pub fn find_match(&self, k: usize, matches: impl Fn(usize) -> bool) -> Option<usize> {
         (0..k).find(|&i| matches(i))
+    }
+
+    /// [`SetEngine::find_match`] over a candidate bitmask; same prefilter
+    /// contract as [`SetEngine::probe_get_masked`].
+    #[inline]
+    pub fn find_match_masked(
+        &self,
+        mut mask: u128,
+        matches: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        while mask != 0 {
+            let i = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            if matches(i) {
+                return Some(i);
+            }
+        }
+        None
     }
 
     /// Apply the policy's on-hit metadata update with the cheapest atomic

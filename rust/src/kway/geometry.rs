@@ -31,6 +31,14 @@ pub(crate) const EMPTY: u64 = 0;
 pub(crate) const RESERVED: u64 = 1;
 const KEY_OFFSET: u64 = 2;
 
+/// Assumed cache-line size in bytes. The SoA/AoS table slices are
+/// allocated at this alignment (see `kway::alloc`) so that, with the
+/// power-of-two way counts [`Geometry::new`] produces, a set of up to 8
+/// u64 words occupies exactly one line and a wider set spans whole lines —
+/// the layout invariant both the paper's §3 locality argument and the
+/// SIMD fingerprint probe (`kway::simd`) rely on.
+pub(crate) const CACHE_LINE: usize = 64;
+
 impl Geometry {
     /// Smallest geometry with at least `capacity` slots and exactly `ways`
     /// ways per set. `capacity` is rounded up so that the set count is a

@@ -34,9 +34,11 @@
 //! through old→new mid-migration, and writes drain their key's source
 //! set before inserting (DESIGN.md §Elastic resizing).
 
+mod alloc;
 mod engine;
 mod geometry;
 mod ls;
+pub mod simd;
 mod stamped;
 mod wfa;
 mod wfsc;

@@ -1,0 +1,368 @@
+//! Vectorized fingerprint probing for KW-WFSC.
+//!
+//! A WFSC probe first scans the set's `ways` fingerprint words for
+//! `fingerprint(key)`; only matching ways pay for the key/value loads.
+//! This module turns that scan into a single pass that compares every way
+//! at once and returns a bitmask of candidate ways (bit `i` set ⇔ way `i`
+//! equals the needle). Four flavours are always compiled:
+//!
+//! * [`ProbeKind::Scalar`] — the plain per-word loop (the pre-SIMD code).
+//! * [`ProbeKind::Swar`] — portable "SIMD within a register": per-word
+//!   XOR with the needle, then a branch-free is-zero reduction. No
+//!   target-feature requirements; the default on non-x86_64.
+//! * [`ProbeKind::Sse2`] — 2 ways per `__m128i`. SSE2 is part of the
+//!   x86_64 baseline, so this needs no runtime detection. SSE2 has no
+//!   64-bit compare, so equality is built from `cmpeq_epi32` + a lane
+//!   swap + AND (both 32-bit halves must match).
+//! * [`ProbeKind::Avx2`] — 4 ways per `__m256i` via `cmpeq_epi64`,
+//!   behind cached `is_x86_feature_detected!("avx2")`.
+//!
+//! [`match_mask`] dispatches to the best available flavour; the `simd`
+//! cargo feature (on by default) only controls *dispatch* — with it
+//! disabled every probe takes the scalar loop, which is what the
+//! differential tests compare the vector flavours against.
+//!
+//! # Safety argument: relaxed loads and vector loads over atomics
+//!
+//! The fingerprint array is `[AtomicU64]` and is written concurrently.
+//! The mask produced here is a **prefilter, not a truth**: every caller
+//! (see `engine::SetEngine::probe_get_masked` and the wfsc put passes)
+//! re-reads each candidate way through the normal atomic protocol (key
+//! word Acquire, value re-validation) before acting, and stale *misses*
+//! are acceptable by the same argument as the scalar scan — a concurrent
+//! writer racing a reader may always be ordered after it. Therefore:
+//!
+//! * The scalar and SWAR flavours use `Relaxed` atomic loads: no
+//!   happens-before edge is needed from a prefilter.
+//! * The SSE2/AVX2 flavours read the words with plain vector loads
+//!   (`_mm_load_si128`/`_mm256_loadu_si256`) over the atomic storage.
+//!   Each 8-byte lane is naturally aligned, and on x86_64 an aligned
+//!   8-byte load is single-copy atomic at the hardware level, so a lane
+//!   observes some value actually stored there — never a torn mix.
+//!   Rust's memory model does not bless mixed-size/non-atomic access to
+//!   atomics, so this is the one deliberate, documented divergence —
+//!   confined to these two `unsafe` functions, justified by (a) the
+//!   hardware guarantee above and (b) the fact that every lane that
+//!   matters is re-verified through a genuine atomic load before use.
+//!   The differential test in `tests/hotpath.rs` pins all flavours to
+//!   identical results on quiescent sets, including the `MIGRATING`
+//!   sentinel and colliding fingerprints.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Which probe kernel to use for fingerprint scans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeKind {
+    /// Plain per-word scalar loop.
+    Scalar,
+    /// Portable branch-free SWAR reduction.
+    Swar,
+    /// SSE2, 2 ways per vector (x86_64 baseline).
+    Sse2,
+    /// AVX2, 4 ways per vector (runtime-detected).
+    Avx2,
+}
+
+impl ProbeKind {
+    /// All flavours supported on the running CPU, for tests and benches.
+    pub fn available() -> Vec<ProbeKind> {
+        let mut v = vec![ProbeKind::Scalar, ProbeKind::Swar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            v.push(ProbeKind::Sse2);
+            if avx2_available() {
+                v.push(ProbeKind::Avx2);
+            }
+        }
+        v
+    }
+
+    /// Canonical label for bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeKind::Scalar => "scalar",
+            ProbeKind::Swar => "swar",
+            ProbeKind::Sse2 => "sse2",
+            ProbeKind::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a bench-flag string.
+    pub fn parse(s: &str) -> Option<ProbeKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(ProbeKind::Scalar),
+            "swar" => Some(ProbeKind::Swar),
+            "sse2" => Some(ProbeKind::Sse2),
+            "avx2" => Some(ProbeKind::Avx2),
+            _ => None,
+        }
+    }
+}
+
+// Encoding of the FORCED override: 0 = auto, else ProbeKind as u8 + 1.
+const AUTO: u8 = 0;
+static FORCED: AtomicU8 = AtomicU8::new(AUTO);
+
+/// Force every subsequent [`match_mask`] call process-wide onto one
+/// flavour (`None` restores auto-detection). Bench/test hook: the global
+/// is process-wide, so under `cargo test`'s threaded runner only one test
+/// function may use it (see `tests/hotpath.rs`).
+pub fn force(kind: Option<ProbeKind>) {
+    let code = match kind {
+        None => AUTO,
+        Some(ProbeKind::Scalar) => 1,
+        Some(ProbeKind::Swar) => 2,
+        Some(ProbeKind::Sse2) => 3,
+        Some(ProbeKind::Avx2) => 4,
+    };
+    FORCED.store(code, Ordering::Relaxed);
+}
+
+/// The flavour [`match_mask`] currently dispatches to.
+pub fn active_kind() -> ProbeKind {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => ProbeKind::Scalar,
+        2 => ProbeKind::Swar,
+        3 => ProbeKind::Sse2,
+        4 => ProbeKind::Avx2,
+        _ => auto_kind(),
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn auto_kind() -> ProbeKind {
+    if avx2_available() {
+        ProbeKind::Avx2
+    } else {
+        ProbeKind::Sse2
+    }
+}
+
+#[cfg(all(feature = "simd", not(target_arch = "x86_64")))]
+#[inline]
+fn auto_kind() -> ProbeKind {
+    ProbeKind::Swar
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn auto_kind() -> ProbeKind {
+    ProbeKind::Scalar
+}
+
+/// Cached AVX2 runtime detection (0 = unknown, 1 = no, 2 = yes).
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = std::is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Bitmask of ways in `words` equal to `needle` (bit `i` ⇔ `words[i]`),
+/// using the active flavour. `words` is one set's slice of a table array;
+/// `u128` covers the engine's `MAX_WAYS = 128`.
+#[inline]
+pub fn match_mask(words: &[AtomicU64], needle: u64) -> u128 {
+    match_mask_kind(active_kind(), words, needle)
+}
+
+/// [`match_mask`] pinned to a specific flavour — the entry point the
+/// differential tests use so they never touch the process-wide override.
+/// Falls back to SWAR if `kind` is not supported on this target.
+#[inline]
+pub fn match_mask_kind(kind: ProbeKind, words: &[AtomicU64], needle: u64) -> u128 {
+    debug_assert!(words.len() <= 128, "mask is u128");
+    match kind {
+        ProbeKind::Scalar => mask_scalar(words, needle),
+        ProbeKind::Swar => mask_swar(words, needle),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86_64 baseline.
+        ProbeKind::Sse2 => unsafe { mask_sse2(words, needle) },
+        #[cfg(target_arch = "x86_64")]
+        ProbeKind::Avx2 => {
+            if avx2_available() {
+                // SAFETY: AVX2 presence just checked.
+                unsafe { mask_avx2(words, needle) }
+            } else {
+                mask_swar(words, needle)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => mask_swar(words, needle),
+    }
+}
+
+/// The pre-SIMD loop, kept as the reference semantics.
+fn mask_scalar(words: &[AtomicU64], needle: u64) -> u128 {
+    let mut mask = 0u128;
+    for (i, w) in words.iter().enumerate() {
+        if w.load(Ordering::Relaxed) == needle {
+            mask |= 1u128 << i;
+        }
+    }
+    mask
+}
+
+/// Branch-free SWAR: `x == needle` ⇔ `x ^ needle == 0`, and
+/// `is_zero(d) = 1 - ((d | -d) >> 63)` — `d | d.wrapping_neg()` has its
+/// top bit set for every non-zero `d` and clear only for zero.
+fn mask_swar(words: &[AtomicU64], needle: u64) -> u128 {
+    let mut mask = 0u128;
+    for (i, w) in words.iter().enumerate() {
+        let d = w.load(Ordering::Relaxed) ^ needle;
+        let nz = (d | d.wrapping_neg()) >> 63; // 1 if d != 0
+        mask |= ((nz ^ 1) as u128) << i;
+    }
+    mask
+}
+
+/// SSE2 kernel: 2 ways per 128-bit vector. See the module-level safety
+/// argument for why plain vector loads over `[AtomicU64]` are acceptable
+/// here.
+///
+/// # Safety
+///
+/// Caller must be on x86_64 (SSE2 is baseline there).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn mask_sse2(words: &[AtomicU64], needle: u64) -> u128 {
+    use std::arch::x86_64::*;
+    let n = _mm_set1_epi64x(needle as i64);
+    let mut mask = 0u128;
+    let mut i = 0usize;
+    while i + 2 <= words.len() {
+        let p = words.as_ptr().add(i) as *const __m128i;
+        // Table slices are 64B-aligned and sets start at way multiples,
+        // so a pair beginning at an even way index is 16B-aligned; probe
+        // callers always pass whole sets (even i here), but use loadu to
+        // stay correct for arbitrary sub-slices in tests.
+        let v = _mm_loadu_si128(p);
+        // No _mm_cmpeq_epi64 in SSE2: compare 32-bit halves, then AND
+        // each half with its partner (swapped via shuffle 0b10_11_00_01)
+        // so a lane is all-ones iff both halves matched.
+        let eq32 = _mm_cmpeq_epi32(v, n);
+        let both = _mm_and_si128(eq32, _mm_shuffle_epi32(eq32, 0b1011_0001));
+        // movemask_pd extracts one bit per 64-bit lane's sign bit.
+        let m = _mm_movemask_pd(_mm_castsi128_pd(both)) as u32;
+        mask |= (m as u128) << i;
+        i += 2;
+    }
+    if i < words.len() {
+        mask |= mask_swar(&words[i..], needle) << i;
+    }
+    mask
+}
+
+/// AVX2 kernel: 4 ways per 256-bit vector.
+///
+/// # Safety
+///
+/// Caller must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mask_avx2(words: &[AtomicU64], needle: u64) -> u128 {
+    use std::arch::x86_64::*;
+    let n = _mm256_set1_epi64x(needle as i64);
+    let mut mask = 0u128;
+    let mut i = 0usize;
+    while i + 4 <= words.len() {
+        let p = words.as_ptr().add(i) as *const __m256i;
+        let v = _mm256_loadu_si256(p);
+        let eq = _mm256_cmpeq_epi64(v, n);
+        let m = _mm256_movemask_pd(_mm256_castsi256_pd(eq)) as u32;
+        mask |= (m as u128) << i;
+        i += 4;
+    }
+    if i < words.len() {
+        mask |= mask_swar(&words[i..], needle) << i;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn atomics(vals: &[u64]) -> Vec<AtomicU64> {
+        vals.iter().map(|&v| AtomicU64::new(v)).collect()
+    }
+
+    #[test]
+    fn scalar_reference_semantics() {
+        let ws = atomics(&[5, 0, 5, 7]);
+        assert_eq!(mask_scalar(&ws, 5), 0b0101);
+        assert_eq!(mask_scalar(&ws, 0), 0b0010);
+        assert_eq!(mask_scalar(&ws, 9), 0);
+        assert_eq!(mask_scalar(&[], 5), 0);
+    }
+
+    #[test]
+    fn all_kinds_agree_on_edge_values() {
+        // Sentinels and extremes: EMPTY (0), MIGRATING (2), odd real
+        // fingerprints, u64::MAX, and values differing in only one half
+        // (the SSE2 32-bit-halves trap).
+        let vals =
+            [0u64, 2, 1, u64::MAX, 0xFFFF_FFFF_0000_0000, 0x0000_0000_FFFF_FFFF, 5, 5, 6, 0];
+        let ws = atomics(&vals);
+        for needle in [0u64, 1, 2, 5, u64::MAX, 0xFFFF_FFFF_0000_0000, 99] {
+            let want = mask_scalar(&ws, needle);
+            for kind in ProbeKind::available() {
+                assert_eq!(
+                    match_mask_kind(kind, &ws, needle),
+                    want,
+                    "kind {} needle {needle:#x}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_kinds_agree_on_random_sets() {
+        let mut rng = crate::util::rng::Rng::new(0x51D_77);
+        for len in 0..=16usize {
+            for _ in 0..200 {
+                let vals: Vec<u64> = (0..len)
+                    .map(|_| if rng.next_u64() % 3 == 0 { 5 } else { rng.next_u64() })
+                    .collect();
+                let ws = atomics(&vals);
+                let needle = if rng.next_u64() % 2 == 0 { 5 } else { rng.next_u64() };
+                let want = mask_scalar(&ws, needle);
+                for kind in ProbeKind::available() {
+                    let got = match_mask_kind(kind, &ws, needle);
+                    assert_eq!(got, want, "len {len} {}", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_ways_mask_fits() {
+        // 128 ways exercises the top bit of the u128 mask.
+        let vals: Vec<u64> = (0..128).map(|i| if i % 7 == 0 { 42 } else { i }).collect();
+        let ws = atomics(&vals);
+        let want = mask_scalar(&ws, 42);
+        assert_ne!(want & (1u128 << 126), 0, "way 126 is a multiple of 7");
+        for kind in ProbeKind::available() {
+            assert_eq!(match_mask_kind(kind, &ws, 42), want, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_names_roundtrip() {
+        for kind in
+            [ProbeKind::Scalar, ProbeKind::Swar, ProbeKind::Sse2, ProbeKind::Avx2]
+        {
+            assert_eq!(ProbeKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ProbeKind::parse("bogus"), None);
+    }
+}

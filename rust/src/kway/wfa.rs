@@ -26,7 +26,36 @@
 //! table fall through to the source table while the split watermark is
 //! advancing, and writers drain their key's source set before inserting
 //! so no admitted entry is ever lost (DESIGN.md §Elastic resizing).
+//!
+//! # Memory ordering (safety argument)
+//!
+//! The full per-edge derivation lives in the `wfsc` module doc; WFA is
+//! the same protocol with the key word playing both roles (claim guard
+//! *and* identity), which makes the mapping:
+//!
+//! * **Publish**: value `Release` (probe re-validation anchor), meta and
+//!   life `Relaxed`, key `Release` last — the trailing key-Release
+//!   covers the Relaxed stores for any thread that key-Acquires.
+//! * **Probe**: key `Acquire` / value `Acquire`, match re-verified after
+//!   the value read. The value-Release/Acquire edge makes a replacer's
+//!   CAS-to-`RESERVED` (sequenced before its value store) visible to
+//!   the re-validation, which is what rejects torn reads.
+//! * **Claims**: every CAS on the key word is `AcqRel`. The Acquire
+//!   half does double duty here: it pins the subsequent publish stores
+//!   after ownership *and*, because the claimed word is the very word
+//!   the previous publisher Release-stored last, it hands the claimer a
+//!   happens-before edge to the old entry's value/meta/life — so a
+//!   migration may read them `Relaxed` once its claim CAS succeeds.
+//!   Pre-CAS peeks are `Relaxed` (the CAS re-verifies).
+//! * **Snapshots** (victim scan, repair, sweep, peek): the key word
+//!   stays `Acquire` wherever a non-sentinel key gates interpreting the
+//!   life or meta words; quiesced diagnostics use `Relaxed`.
+//! * **`repair_weight`'s `SeqCst` fence** is irreducible — see
+//!   `KwWfsc::repair_weight` for the store-buffer argument; it is the
+//!   only SeqCst in either wait-free variant and never runs on the
+//!   unit-weight path.
 
+use super::alloc::AlignedSlice;
 use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
 use crate::lifetime::{self, BatchEntry, EntryOpts};
@@ -43,25 +72,19 @@ struct Way {
     life: AtomicU64,
 }
 
-impl Way {
-    fn new() -> Self {
-        Self {
-            key: AtomicU64::new(EMPTY),
-            value: AtomicU64::new(0),
-            meta: AtomicU64::new(0),
-            life: AtomicU64::new(0),
-        }
-    }
-}
-
-/// One geometry epoch's storage: the flat way array.
+/// One geometry epoch's storage: the flat way array, cache-line-aligned
+/// (`kway::alloc`) so a set of 32-byte `Way`s starts on a line boundary
+/// and the stride scan touches exactly `ways/2` lines, never a straddling
+/// extra one.
 struct WfaTable {
-    ways: Box<[Way]>,
+    ways: AlignedSlice<Way>,
 }
 
 impl WfaTable {
     fn new(capacity: usize) -> Self {
-        Self { ways: (0..capacity).map(|_| Way::new()).collect() }
+        // SAFETY: an all-zero `Way` is exactly the initial state (key =
+        // EMPTY = 0, value/meta/life 0), and `Way` has no Drop.
+        Self { ways: unsafe { AlignedSlice::new_zeroed(capacity) } }
     }
 
     #[inline]
@@ -109,7 +132,9 @@ impl KwWfa {
     fn set_weight(set: &[Way]) -> u64 {
         set.iter()
             .map(|w| {
-                let key = w.key.load(Ordering::Acquire);
+                // Quiesced-state diagnostic: Relaxed is exact once
+                // writers have joined (coherence).
+                let key = w.key.load(Ordering::Relaxed);
                 if key == EMPTY || key == RESERVED {
                     0
                 } else {
@@ -197,28 +222,33 @@ impl KwWfa {
 
         // Pass 1 (Alg. 3 lines 3–6): overwrite an existing entry. The
         // life word is refreshed too: an overwrite restarts the TTL.
+        // Relaxed resident check (ik-equality only) and Relaxed life
+        // refresh — module-level ordering argument; the value store
+        // keeps Release as the probe's re-validation anchor.
         if let Some(i) = self
             .engine
-            .find_match(set.len(), |i| set[i].key.load(Ordering::Acquire) == pk.ik)
+            .find_match(set.len(), |i| set[i].key.load(Ordering::Relaxed) == pk.ik)
         {
             set[i].value.store(value, Ordering::Release);
-            set[i].life.store(life, Ordering::Release);
+            set[i].life.store(life, Ordering::Relaxed);
             self.engine.touch_atomic(&set[i].meta, now);
             self.repair_weight(set, pk.ik);
             return;
         }
 
-        // Pass 2 (Alg. 3 lines 12–16): claim an empty way.
+        // Pass 2 (Alg. 3 lines 12–16): claim an empty way (Relaxed peek,
+        // the AcqRel CAS re-verifies; trailing key-Release covers the
+        // Relaxed meta/life stores).
         for way in set {
-            if way.key.load(Ordering::Acquire) == EMPTY
+            if way.key.load(Ordering::Relaxed) == EMPTY
                 && way
                     .key
                     .compare_exchange(EMPTY, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
                 way.value.store(value, Ordering::Release);
-                way.meta.store(self.engine.initial_meta(now), Ordering::Release);
-                way.life.store(life, Ordering::Release);
+                way.meta.store(self.engine.initial_meta(now), Ordering::Relaxed);
+                way.life.store(life, Ordering::Relaxed);
                 way.key.store(pk.ik, Ordering::Release);
                 self.repair_weight(set, pk.ik);
                 return;
@@ -251,8 +281,8 @@ impl KwWfa {
             .is_ok()
         {
             way.value.store(value, Ordering::Release);
-            way.meta.store(self.engine.initial_meta(now), Ordering::Release);
-            way.life.store(life, Ordering::Release);
+            way.meta.store(self.engine.initial_meta(now), Ordering::Relaxed);
+            way.life.store(life, Ordering::Relaxed);
             way.key.store(pk.ik, Ordering::Release);
         }
         self.repair_weight(set, pk.ik);
@@ -269,7 +299,8 @@ impl KwWfa {
     /// idempotent over already-empty sets.
     fn migrate_set(&self, ep: &Epoch<WfaTable>, prev: &Epoch<WfaTable>, old_set: usize) {
         for way in prev.table.set(prev.geo, old_set) {
-            let ik = way.key.load(Ordering::Acquire);
+            // Relaxed peek: the claim CAS re-verifies the key word.
+            let ik = way.key.load(Ordering::Relaxed);
             if ik == EMPTY || ik == RESERVED {
                 continue;
             }
@@ -280,7 +311,10 @@ impl KwWfa {
             {
                 continue; // lost to a concurrent drain/eviction
             }
-            let value = way.value.load(Ordering::Acquire);
+            // The CAS acquired the publisher's trailing key-Release (the
+            // claimed word IS the last-published word), so the entry's
+            // other words may be read Relaxed (module-level argument).
+            let value = way.value.load(Ordering::Relaxed);
             let meta = way.meta.load(Ordering::Relaxed);
             let life = way.life.load(Ordering::Relaxed);
             way.key.store(EMPTY, Ordering::Release);
@@ -306,22 +340,23 @@ impl KwWfa {
         life: u64,
     ) {
         let set = ep.table.set(ep.geo, ep.geo.set_of_hash(pk.hash));
+        // Resident check decides only ik-equality: Relaxed (see pass 1).
         let resident = self
             .engine
-            .find_match(set.len(), |i| set[i].key.load(Ordering::Acquire) == pk.ik);
+            .find_match(set.len(), |i| set[i].key.load(Ordering::Relaxed) == pk.ik);
         if resident.is_some() {
             return; // a fresher insert already landed in the target
         }
         for way in set {
-            if way.key.load(Ordering::Acquire) == EMPTY
+            if way.key.load(Ordering::Relaxed) == EMPTY
                 && way
                     .key
                     .compare_exchange(EMPTY, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
             {
                 way.value.store(value, Ordering::Release);
-                way.meta.store(meta, Ordering::Release);
-                way.life.store(life, Ordering::Release);
+                way.meta.store(meta, Ordering::Relaxed);
+                way.life.store(life, Ordering::Relaxed);
                 way.key.store(pk.ik, Ordering::Release);
                 self.repair_weight(set, pk.ik);
                 return;
@@ -348,8 +383,8 @@ impl KwWfa {
             .is_ok()
         {
             way.value.store(value, Ordering::Release);
-            way.meta.store(meta, Ordering::Release);
-            way.life.store(life, Ordering::Release);
+            way.meta.store(meta, Ordering::Relaxed);
+            way.life.store(life, Ordering::Relaxed);
             way.key.store(pk.ik, Ordering::Release);
         }
         self.repair_weight(set, pk.ik);
@@ -371,7 +406,11 @@ impl KwWfa {
         // the set: whichever racing put finishes *last* then observes
         // every earlier insert, so the quiesced set always fits its
         // budget (transient overshoot during the race is the usual "it
-        // is a cache" window).
+        // is a cache" window). This fence is irreducible — with only
+        // Release/Acquire the two racing repairs form a store-buffer
+        // litmus and can both under-count; see KwWfsc::repair_weight for
+        // the full argument. Gated on weight_active, so the unit-weight
+        // hot path never pays for it.
         std::sync::atomic::fence(Ordering::SeqCst);
         let budget = self.engine.set_budget();
         let ttl_active = self.engine.ttl_active();

@@ -28,10 +28,84 @@
 //! can never collide with a probe), republishes the entry into the new
 //! table, and frees the source line (DESIGN.md §Elastic resizing).
 //! The SoA layout also makes WFSC the best batching target: one prefetch
-//! of the set's fingerprint line covers the whole probe.
+//! of the set's fingerprint line covers the whole probe — the arrays are
+//! allocated cache-line-aligned (`kway::alloc`) so that claim holds by
+//! construction, and the fingerprint scan itself is vectorized
+//! (`kway::simd`): the set's fingerprint words are compared against the
+//! probe fingerprint in one SIMD/SWAR pass that yields a candidate
+//! bitmask, and only candidate ways pay for atomic verification.
+//!
+//! # Memory ordering (safety argument)
+//!
+//! Every ordering below is the weakest that preserves the protocol; this
+//! section is the per-site justification the hot-path audit (DESIGN.md
+//! §Hot path) demands. Notation: a way's words are F(ingerprint),
+//! K(ey), V(alue), C(ounter), L(ife).
+//!
+//! * **Publish** ([`KwWfsc::publish`]): V is stored `Release`, C and L
+//!   `Relaxed`, K `Release` *last*. The trailing K-Release covers the
+//!   Relaxed C/L stores: any thread that loads K with `Acquire` and sees
+//!   the published key word gets a happens-before edge to everything
+//!   sequenced before the K store, so its subsequent C/L loads (even
+//!   `Relaxed` ones) cannot read older values (happens-before +
+//!   per-word coherence). V additionally carries its own `Release` —
+//!   see the re-validation argument next.
+//! * **Get probe** ([`KwWfsc::probe_set`]): the SIMD fingerprint mask is
+//!   a *prefilter with no ordering role* (see `kway::simd`); each
+//!   candidate is verified by `F==fp (Relaxed) && K==ik (Acquire)`,
+//!   V is loaded `Acquire`, and the match is re-verified. Two edges are
+//!   load-bearing. (a) K-Acquire ⇒ the V load observes at least the V
+//!   the publisher stored before K, so a verified hit can never return
+//!   a value older than its key word. (b) The *re-validation* detects
+//!   mid-replace phantoms: a replacement CASes F to the new
+//!   fingerprint, then stores V'. If the probe's V load returned V', the
+//!   V'-Release/V-Acquire edge makes the F CAS (sequenced before V' in
+//!   the replacer) happen-before the probe's re-validation F load, which
+//!   therefore reads the new fingerprint and rejects the torn
+//!   (old key, new value) pair. This is why the F load in verification
+//!   may be `Relaxed` (coherence under happens-before is enough) but
+//!   the V load/store pair must stay `Acquire`/`Release`.
+//! * **Claim CASes** (empty claim, victim claim, `MIGRATING` claim,
+//!   repair free): all `AcqRel` on success. The Release half publishes
+//!   the fingerprint transition; the Acquire half pins the *subsequent
+//!   publish stores* after the claim in program order, so a way is never
+//!   written before it is owned (an Acquire load forbids later memory
+//!   operations from moving before it). Pre-CAS peeks are `Relaxed`
+//!   everywhere: the CAS re-verifies the peeked value, so a stale peek
+//!   costs at worst a skipped way, never a safety violation.
+//! * **Victim / repair / sweep snapshots**: F is loaded `Relaxed` (any
+//!   action on the way is guarded by a CAS on F); K stays `Acquire`
+//!   because a non-sentinel K *gates the interpretation of L and C* —
+//!   the K-Acquire edge is what makes the Relaxed L/C loads read the
+//!   published entry's words rather than a predecessor's (the publish
+//!   argument above).
+//! * **Pass-1 overwrite**: the resident check uses `F (Relaxed) &&
+//!   K (Relaxed)` — equality with our own ik is all that is decided, no
+//!   other word is interpreted, and coherence alone keeps the check
+//!   exact once racing publishes quiesce. The value overwrite stays
+//!   `Release` (re-validation anchor, above); the L refresh is `Relaxed`
+//!   — a racing reader may briefly pair the new value with the old life
+//!   word, which only blurs lazy expiry by one access, the same
+//!   tolerance the TTL design already grants (DESIGN.md §Expiration).
+//! * **The one SeqCst** ([`KwWfsc::repair_weight`]): the publish/repair
+//!   fence is *irreducible*, see that function's comment. Everything
+//!   else in this file is Release/Acquire/Relaxed.
+//!
+//! Known (pre-existing, unaffected by this audit) narrow race: a pass-1
+//! overwrite that loses a race with a pass-3 replacement of the same way
+//! can store its value over the replacement's publish, pairing the
+//! replacement's key with the overwriter's value until the next write to
+//! the way. Both orderings of the two writers are sequentially plausible
+//! (the overwrite's key *was* resident when pass 1 ran), readers still
+//! never return a value for a key that was never put, and no ordering
+//! strengthening short of a per-way lock removes it — it is the
+//! documented cost of wait-free puts, not a consequence of the relaxed
+//! orderings introduced here.
 
+use super::alloc::AlignedSlice;
 use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
+use super::simd;
 use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
@@ -42,22 +116,28 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// fingerprint is odd and this even value matches no probe.
 const MIGRATING: u64 = 2;
 
-/// One geometry epoch's storage: the five flat atomic arrays.
+/// One geometry epoch's storage: the five flat atomic arrays. Each array
+/// is cache-line-aligned ([`AlignedSlice`]), so with the power-of-two way
+/// counts geometry produces no set's slice of any array straddles a line
+/// it did not have to — one prefetch per array covers a whole set, and
+/// the SIMD probe reads the fingerprint set as one aligned vector span.
 struct WfscTable {
     /// Non-zero fingerprint per occupied way; 0 = empty, 2 = migrating.
-    fps: Box<[AtomicU64]>,
+    fps: AlignedSlice<AtomicU64>,
     /// Policy metadata (the paper's separate counters array).
-    counters: Box<[AtomicU64]>,
+    counters: AlignedSlice<AtomicU64>,
     /// Encoded key words (validation + exact identification).
-    keys: Box<[AtomicU64]>,
+    keys: AlignedSlice<AtomicU64>,
     /// Values.
-    values: Box<[AtomicU64]>,
+    values: AlignedSlice<AtomicU64>,
     /// Packed (weight, expiry) life words.
-    lives: Box<[AtomicU64]>,
+    lives: AlignedSlice<AtomicU64>,
 }
 
-fn atomic_array(n: usize) -> Box<[AtomicU64]> {
-    (0..n).map(|_| AtomicU64::new(0)).collect()
+fn atomic_array(n: usize) -> AlignedSlice<AtomicU64> {
+    // SAFETY: the all-zero AtomicU64 is exactly the EMPTY sentinel every
+    // slot must start as, and AtomicU64 has no Drop.
+    unsafe { AlignedSlice::new_zeroed(n) }
 }
 
 impl WfscTable {
@@ -114,7 +194,10 @@ impl KwWfsc {
     fn set_weight(table: &WfscTable, start: usize, k: usize) -> u64 {
         (0..k)
             .map(|i| {
-                let fp = table.fps[start + i].load(Ordering::Acquire);
+                // Quiesced-state diagnostic: Relaxed reads are exact once
+                // writers have joined (coherence), which is the only state
+                // the weight-bound tests assert about.
+                let fp = table.fps[start + i].load(Ordering::Relaxed);
                 if fp == EMPTY || fp == MIGRATING {
                     0
                 } else {
@@ -136,12 +219,14 @@ impl KwWfsc {
     }
 
     /// Publish (value, counter, life, key) into a way whose fingerprint
-    /// we own.
+    /// we own. Orderings per the module-level argument: the trailing
+    /// key-word Release covers the Relaxed counter/life stores, and the
+    /// value keeps its own Release as the probe's re-validation anchor.
     #[inline]
     fn publish(table: &WfscTable, idx: usize, ik: u64, value: u64, life: u64, meta: u64) {
         table.values[idx].store(value, Ordering::Release);
-        table.counters[idx].store(meta, Ordering::Release);
-        table.lives[idx].store(life, Ordering::Release);
+        table.counters[idx].store(meta, Ordering::Relaxed);
+        table.lives[idx].store(life, Ordering::Relaxed);
         table.keys[idx].store(ik, Ordering::Release);
     }
 
@@ -157,11 +242,16 @@ impl KwWfsc {
     ) -> Option<u64> {
         let ttl_active = self.engine.ttl_active();
         let now_ms = self.engine.expiry_now();
-        // Contiguous fingerprint scan (Alg. 5): one cache line for k <= 8.
-        let (way, value) = self.engine.probe_get(
-            k,
+        // Contiguous fingerprint scan (Alg. 5): one cache line for k <= 8,
+        // compared in a single SIMD/SWAR pass. The mask is only a
+        // prefilter; every candidate is re-verified atomically below (see
+        // the module-level ordering argument for why F may be Relaxed
+        // there while K stays Acquire and V Acquire/Release).
+        let mask = simd::match_mask(&table.fps[start..start + k], pk.fp);
+        let (way, value) = self.engine.probe_get_masked(
+            mask,
             |i| {
-                table.fps[start + i].load(Ordering::Acquire) == pk.fp
+                table.fps[start + i].load(Ordering::Relaxed) == pk.fp
                     && table.keys[start + i].load(Ordering::Acquire) == pk.ik
             },
             |i| {
@@ -212,24 +302,33 @@ impl KwWfsc {
         let table = &*ep.table;
 
         // Pass 1 (Alg. 6 lines 3–9): overwrite an existing entry (and
-        // refresh its life word — an overwrite restarts the TTL).
-        if let Some(i) = self.engine.find_match(k, |i| {
-            table.fps[start + i].load(Ordering::Acquire) == pk.fp
-                && table.keys[start + i].load(Ordering::Acquire) == pk.ik
+        // refresh its life word — an overwrite restarts the TTL). The
+        // resident check decides only ik-equality, so Relaxed loads
+        // suffice (module-level argument); the mask prefilter narrows it
+        // to fingerprint candidates first.
+        let pass1 = simd::match_mask(&table.fps[start..start + k], pk.fp);
+        if let Some(i) = self.engine.find_match_masked(pass1, |i| {
+            table.fps[start + i].load(Ordering::Relaxed) == pk.fp
+                && table.keys[start + i].load(Ordering::Relaxed) == pk.ik
         }) {
             table.values[start + i].store(value, Ordering::Release);
-            table.lives[start + i].store(life, Ordering::Release);
+            table.lives[start + i].store(life, Ordering::Relaxed);
             self.engine.touch_atomic(&table.counters[start + i], now);
             self.repair_weight(table, start, pk.ik);
             return;
         }
 
-        // Pass 2: claim an empty way (fingerprint CAS 0 -> fp).
-        for i in 0..k {
-            if table.fps[start + i].load(Ordering::Acquire) == EMPTY
-                && table.fps[start + i]
-                    .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
-                    .is_ok()
+        // Pass 2: claim an empty way (fingerprint CAS 0 -> fp). The empty
+        // scan is the same vector compare with EMPTY as the needle; the
+        // AcqRel CAS re-verifies every candidate, so the mask being a
+        // stale prefilter is harmless.
+        let mut empties = simd::match_mask(&table.fps[start..start + k], EMPTY);
+        while empties != 0 {
+            let i = empties.trailing_zeros() as usize;
+            empties &= empties - 1;
+            if table.fps[start + i]
+                .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
             {
                 Self::publish(table, start + i, pk.ik, value, life, self.engine.initial_meta(now));
                 self.repair_weight(table, start, pk.ik);
@@ -247,7 +346,10 @@ impl KwWfsc {
         // expired), and taking it as the victim of first resort would
         // race the in-flight publish — same rule as repair_weight below.
         let choice = self.engine.choose_victim(k, now, |i| {
-            let fp = table.fps[start + i].load(Ordering::Acquire);
+            // F Relaxed: the victim claim CAS below re-verifies it. K
+            // stays Acquire — it gates trusting the life word (module-
+            // level ordering argument).
+            let fp = table.fps[start + i].load(Ordering::Relaxed);
             if fp == MIGRATING {
                 return (fp, u64::MAX, false); // mid-migration: never the victim
             }
@@ -285,11 +387,14 @@ impl KwWfsc {
         let start = old_set * k;
         let table = &*prev.table;
         for i in 0..k {
-            let fp = table.fps[start + i].load(Ordering::Acquire);
+            // Pre-claim peeks are Relaxed: the MIGRATING CAS re-verifies
+            // the fingerprint, and a stale peek only skips a line the
+            // background walk retries.
+            let fp = table.fps[start + i].load(Ordering::Relaxed);
             if fp == EMPTY || fp == MIGRATING {
                 continue;
             }
-            let word = table.keys[start + i].load(Ordering::Acquire);
+            let word = table.keys[start + i].load(Ordering::Relaxed);
             if word == EMPTY || word == RESERVED {
                 continue; // mid-publish: the background walk will retry
             }
@@ -301,12 +406,16 @@ impl KwWfsc {
             }
             // We own the line now; re-read the words under the claim. A
             // fp-colliding republish that raced the claim shows up as a
-            // sentinel key word here — treat it as a dropped insert.
+            // sentinel key word here — treat it as a dropped insert. The
+            // K Acquire synchronizes with the publisher's trailing
+            // K-Release, covering the Relaxed V/C/L reads below.
             let word = table.keys[start + i].load(Ordering::Acquire);
-            let value = table.values[start + i].load(Ordering::Acquire);
+            let value = table.values[start + i].load(Ordering::Relaxed);
             let meta = table.counters[start + i].load(Ordering::Relaxed);
             let life = table.lives[start + i].load(Ordering::Relaxed);
-            table.keys[start + i].store(EMPTY, Ordering::Release);
+            // Free the line: K cleared first (Relaxed), then F Released —
+            // the F-Release covers the K clear for the next claimer.
+            table.keys[start + i].store(EMPTY, Ordering::Relaxed);
             table.fps[start + i].store(EMPTY, Ordering::Release);
             if word == EMPTY || word == RESERVED {
                 continue;
@@ -334,30 +443,37 @@ impl KwWfsc {
         let k = ep.geo.ways();
         let start = ep.geo.set_of_hash(pk.hash) * k;
         let table = &*ep.table;
-        let resident = self.engine.find_match(k, |i| {
-            table.fps[start + i].load(Ordering::Acquire) == pk.fp
-                && table.keys[start + i].load(Ordering::Acquire) == pk.ik
-        });
+        // Resident check decides only ik-equality: Relaxed (see pass 1).
+        let resident = self.engine.find_match_masked(
+            simd::match_mask(&table.fps[start..start + k], pk.fp),
+            |i| {
+                table.fps[start + i].load(Ordering::Relaxed) == pk.fp
+                    && table.keys[start + i].load(Ordering::Relaxed) == pk.ik
+            },
+        );
         if resident.is_some() {
             return; // a fresher insert already landed in the target
         }
-        for i in 0..k {
-            if table.fps[start + i].load(Ordering::Acquire) == EMPTY
-                && table.fps[start + i]
-                    .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
-                    .is_ok()
+        let mut empties = simd::match_mask(&table.fps[start..start + k], EMPTY);
+        while empties != 0 {
+            let i = empties.trailing_zeros() as usize;
+            empties &= empties - 1;
+            if table.fps[start + i]
+                .compare_exchange(EMPTY, pk.fp, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
             {
                 Self::publish(table, start + i, pk.ik, value, life, meta);
                 self.repair_weight(table, start, pk.ik);
                 return;
             }
         }
-        // Full target set: merge by policy order.
+        // Full target set: merge by policy order. F Relaxed (the claim
+        // CAS re-verifies), K Acquire (gates trusting the counter).
         let now = self.engine.now();
         let mut guards = [0u64; MAX_WAYS];
         let mut metas = [u64::MAX; MAX_WAYS];
         for i in 0..k {
-            let fp = table.fps[start + i].load(Ordering::Acquire);
+            let fp = table.fps[start + i].load(Ordering::Relaxed);
             guards[i] = fp;
             let word = table.keys[start + i].load(Ordering::Acquire);
             if fp != EMPTY && fp != MIGRATING && word != EMPTY && word != RESERVED {
@@ -387,9 +503,21 @@ impl KwWfsc {
         if !self.engine.weight_active() {
             return;
         }
-        // Publish-then-snapshot ordering: see KwWfa::repair_weight — the
-        // fence guarantees the last racing put's repair sees every
-        // earlier insert, so the quiesced set always fits its budget.
+        // Publish-then-snapshot: this fence is the one deliberately
+        // SeqCst site left by the hot-path ordering audit, and it is
+        // irreducible. With only Release/Acquire, two racing puts can
+        // each publish, then each snapshot the set *before* observing the
+        // other's publish (the classic store-buffer outcome): both
+        // repairs compute `total <= budget`, neither evicts, and the
+        // quiesced set ends over budget — the PR 3 weight-bound claim
+        // would silently become "eventual". SeqCst fences are totally
+        // ordered ([atomics.fences]): whichever racing repair's fence is
+        // last in that order happens-after every earlier publish-fence
+        // pair, so its snapshot counts all racing inserts and restores
+        // the budget. Hence the quiesced bound stays *exact* under the
+        // weakened publish orderings — the re-derivation demanded by the
+        // audit (DESIGN.md §Hot path). Note the fence is gated on
+        // weight_active: the unit-weight hot path never executes it.
         std::sync::atomic::fence(Ordering::SeqCst);
         let budget = self.engine.set_budget();
         let ttl_active = self.engine.ttl_active();
@@ -404,7 +532,9 @@ impl KwWfsc {
             let mut n = 0usize;
             let mut expired_pick: Option<(usize, u64)> = None;
             for i in 0..k {
-                let fp = table.fps[start + i].load(Ordering::Acquire);
+                // F Relaxed (the eviction CAS re-verifies the guard);
+                // K Acquire gates trusting the life/counter words.
+                let fp = table.fps[start + i].load(Ordering::Relaxed);
                 if fp == EMPTY || fp == MIGRATING {
                     continue;
                 }
@@ -600,7 +730,9 @@ impl Cache for KwWfsc {
         for j in 0..span {
             let base = ((start_set + j) % geo.num_sets()) * geo.ways();
             for i in 0..geo.ways() {
-                let fp = ep.table.fps[base + i].load(Ordering::Acquire);
+                // F Relaxed (the reclaim CAS re-verifies); K Acquire
+                // gates trusting the life word.
+                let fp = ep.table.fps[base + i].load(Ordering::Relaxed);
                 if fp == EMPTY || fp == MIGRATING {
                     continue;
                 }
@@ -629,8 +761,9 @@ impl Cache for KwWfsc {
                 // Effective key word: EMPTY when the way is free, RESERVED
                 // when the fingerprint is claimed (by a publish or a
                 // migration) but the key word is not trustworthy, the
-                // encoded key otherwise.
-                let fp = ep.table.fps[start + i].load(Ordering::Acquire);
+                // encoded key otherwise. Advisory preview: F Relaxed, K
+                // Acquire (gates the life/counter reads).
+                let fp = ep.table.fps[start + i].load(Ordering::Relaxed);
                 if fp == EMPTY {
                     EMPTY
                 } else if fp == MIGRATING {

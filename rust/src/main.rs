@@ -72,11 +72,11 @@ fn main() {
 
 const HELP: &str = "usage: kway <subcommand> [--options]
   hitratio   --trace oltp --capacity 2048 [--series lru|lfu|products|hyperbolic|all] [--len N]
-  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C]
-  synthetic  --workload miss100|hit100|hit95|hit90|expiring [--capacity 2097152] [--threads ...] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C]
-  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8]
+  throughput --trace f1 [--impls KW-WFSC,sampled,...] [--threads 1,2,4,8] [--duration-ms 500] [--repeats 5] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C] [--pin] [--numa-interleave]
+  synthetic  --workload miss100|hit100|hit95|hit90|expiring [--capacity 2097152] [--threads ...] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--resize-at N --resize-to C] [--pin] [--numa-interleave]
+  batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave]
   resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
-  bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--json]
+  bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave] [--json]
   serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
@@ -105,6 +105,15 @@ fn parse_fill(args: &Args) -> Result<FillSpec> {
             .ok_or_else(|| anyhow!("bad --weight-dist {raw:?} (unit|uniform[:MAX]|zipf[:MAX])"))?,
     };
     Ok(FillSpec { ttl, weight_dist })
+}
+
+/// Parse the shared `--pin` / `--numa-interleave` measurement toggles:
+/// `--pin` pins worker `t` to core `t mod num_cores`, `--numa-interleave`
+/// spreads table pages round-robin across NUMA nodes before each
+/// repeat's cache is built. Both are best-effort (see
+/// `kway::util::affinity`).
+fn parse_pinning(args: &Args) -> (bool, bool) {
+    (args.has_flag("pin"), args.has_flag("numa-interleave"))
 }
 
 /// Parse the shared `--resize-at N --resize-to C` pair (both or
@@ -183,15 +192,17 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
     let resize = parse_resize(args)?;
+    let (pin, numa_interleave) = parse_pinning(args);
 
     println!(
-        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} fill={}{} (Mops/s)",
+        "# throughput: trace={} capacity={} duration={:?} repeats={} admission={} fill={}{}{} (Mops/s)",
         trace.name,
         capacity,
         duration,
         repeats,
         admission.name(),
         fill.label(),
+        if pin { " pinned" } else { "" },
         match resize {
             Some(spec) => format!(" resize@{}ops->{}", spec.at_ops, spec.to_capacity),
             None => String::new(),
@@ -210,8 +221,16 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, policy, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg =
-                RunConfig { threads: t, duration, repeats, seed, fill: fill.clone(), resize };
+            let cfg = RunConfig {
+                threads: t,
+                duration,
+                repeats,
+                seed,
+                fill: fill.clone(),
+                resize,
+                pin,
+                numa_interleave,
+            };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -242,15 +261,17 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
     let resize = parse_resize(args)?;
+    let (pin, numa_interleave) = parse_pinning(args);
 
     println!(
-        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} fill={}{} (Mops/s)",
+        "# synthetic {}: capacity={} duration={:?} repeats={} admission={} fill={}{}{} (Mops/s)",
         workload.label(),
         capacity,
         duration,
         repeats,
         admission.name(),
         fill.label(),
+        if pin { " pinned" } else { "" },
         match resize {
             Some(spec) => format!(" resize@{}ops->{}", spec.at_ops, spec.to_capacity),
             None => String::new(),
@@ -268,8 +289,16 @@ fn cmd_synthetic(args: &Args) -> Result<()> {
         for &t in &threads {
             let factory = impl_factory(name, capacity, t, Policy::Lru, admission)
                 .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
-            let cfg =
-                RunConfig { threads: t, duration, repeats, seed, fill: fill.clone(), resize };
+            let cfg = RunConfig {
+                threads: t,
+                duration,
+                repeats,
+                seed,
+                fill: fill.clone(),
+                resize,
+                pin,
+                numa_interleave,
+            };
             let r = measure(&*factory, &workload, &cfg);
             last_lat = (r.lat_p50_ns, r.lat_p99_ns);
             print!(" {:10.2}", r.mops.mean());
@@ -295,12 +324,14 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let seed = args.get_parsed_or("seed", 42u64)?;
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
+    let (pin, numa_interleave) = parse_pinning(args);
 
     println!(
         "# batch sweep: capacity={capacity} working_set={working_set} threads={threads} \
-         duration={duration:?} repeats={repeats} admission={} fill={}",
+         duration={duration:?} repeats={repeats} admission={} fill={}{}",
         admission.name(),
-        fill.label()
+        fill.label(),
+        if pin { " pinned" } else { "" }
     );
     println!(
         "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
@@ -310,7 +341,16 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let factory = impl_factory(name, capacity, threads, Policy::Lru, admission)
             .ok_or_else(|| anyhow!("unknown impl {name:?}"))?;
         let label = format!("{name}{}", admission.label());
-        let cfg = RunConfig { threads, duration, repeats, seed, fill: fill.clone(), resize: None };
+        let cfg = RunConfig {
+            threads,
+            duration,
+            repeats,
+            seed,
+            fill: fill.clone(),
+            resize: None,
+            pin,
+            numa_interleave,
+        };
         // Baseline: the same resident-set gets, one key per call.
         let base = measure(&*factory, &Workload::AllHit { working_set }, &cfg);
         println!(
@@ -513,6 +553,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --policy"))?;
     let admission = parse_admission(args)?;
     let fill = parse_fill(args)?;
+    let (pin, numa_interleave) = parse_pinning(args);
     // Sanitize the run name: it becomes part of the BENCH_<name>.json
     // path, and trace specs may carry ':' / '/' (e.g. plain:/data/t.txt).
     let name: String = args
@@ -523,15 +564,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     println!(
         "# bench {name}: trace={} capacity={capacity} policy={} admission={} fill={} \
-         duration={duration:?} repeats={repeats}",
+         duration={duration:?} repeats={repeats} probe={}{}",
         trace.name,
         policy.name(),
         admission.name(),
-        fill.label()
+        fill.label(),
+        kway::kway::simd::active_kind().name(),
+        if pin { " pinned" } else { "" }
     );
     println!(
-        "{:20} {:>8} {:>10} {:>12} {:>12} {:>8}",
-        "impl", "threads", "Mops/s", "p50(ns)", "p99(ns)", "hit"
+        "{:20} {:>8} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "impl", "threads", "Mops/s", "p50(ns)", "p99(ns)", "cyc/op", "hit"
     );
     let mut rows: Vec<Json> = Vec::new();
     for impl_name in &impls {
@@ -553,16 +596,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 seed,
                 fill: fill.clone(),
                 resize: None,
+                pin,
+                numa_interleave,
             };
             let r = measure(&*factory, &Workload::TraceReplay(trace.clone()), &cfg);
             let label = format!("{impl_name}{}", admission.label());
             println!(
-                "{:20} {:>8} {:>10.2} {:>12} {:>12} {:>8.3}",
+                "{:20} {:>8} {:>10.2} {:>12} {:>12} {:>10.1} {:>8.3}",
                 label,
                 t,
                 r.mops.mean(),
                 r.lat_p50_ns,
                 r.lat_p99_ns,
+                r.cycles_per_op,
                 r.hit_ratio
             );
             rows.push(Json::Object(vec![
@@ -573,15 +619,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 ("mops_stddev".to_string(), Json::Float(r.mops.stddev())),
                 ("p50_ns".to_string(), Json::Int(r.lat_p50_ns as i64)),
                 ("p99_ns".to_string(), Json::Int(r.lat_p99_ns as i64)),
+                ("cycles_per_op".to_string(), Json::Float(r.cycles_per_op)),
                 ("hit_ratio".to_string(), Json::Float(r.hit_ratio)),
             ]));
         }
     }
     if args.has_flag("json") {
-        // Schema v3 = v2 plus the honest capacity pair: top-level
-        // `requested_capacity` (the CLI figure) and per-row
-        // `effective_capacity` (post-rounding); see DESIGN.md §Bench
-        // JSON. `capacity` stays for v2-reader continuity.
+        // Schema v4 = v3 plus the hot-path figures: per-row
+        // `cycles_per_op` and top-level `probe_kind`/`pinned`, so a
+        // bench artifact records which probe kernel produced it; see
+        // DESIGN.md §Bench JSON. `capacity` stays for v2-reader
+        // continuity, `requested_capacity`/`effective_capacity` from v3.
         let ttl_ms = fill.ttl.map_or(0, |d| d.as_millis() as i64);
         let doc = Json::Object(vec![
             ("schema".to_string(), Json::Str(kway::util::json::BENCH_SCHEMA.to_string())),
@@ -596,12 +644,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
             ("repeats".to_string(), Json::Int(repeats as i64)),
             ("seed".to_string(), Json::Int(seed as i64)),
+            (
+                "probe_kind".to_string(),
+                Json::Str(kway::kway::simd::active_kind().name().to_string()),
+            ),
+            ("pinned".to_string(), Json::Bool(pin)),
             ("results".to_string(), Json::Array(rows)),
         ]);
         // A document that fails its own schema check is a bug, not an
         // artifact: refuse to write it.
         kway::util::json::check_bench_schema(&doc)
-            .map_err(|e| anyhow!("bench JSON failed the {} check: {e}", "kway-bench-v3"))?;
+            .map_err(|e| anyhow!("bench JSON failed the {} check: {e}", "kway-bench-v4"))?;
         let path = format!("BENCH_{name}.json");
         std::fs::write(&path, format!("{doc}\n"))
             .map_err(|e| anyhow!("writing {path}: {e}"))?;
@@ -658,6 +711,15 @@ fn cmd_info() -> Result<()> {
     println!("trace models: {}", paper::ALL.join(", "));
     println!("implementations: {}", IMPLS.join(", "));
     println!("policies: lru, lfu, fifo, random, hyperbolic");
+    println!(
+        "probe kernel: {} (available: {})",
+        kway::kway::simd::active_kind().name(),
+        kway::kway::simd::ProbeKind::available()
+            .iter()
+            .map(|k| k.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     match kway::runtime::XlaRuntime::load("artifacts") {
         Ok(rt) => println!("artifacts ({}): {:?}", rt.platform(), rt.entry_names()),
         Err(_) => println!("artifacts: not built (run `make artifacts`)"),

@@ -169,6 +169,14 @@ pub struct RunConfig {
     pub fill: FillSpec,
     /// Optional mid-run online resize (see [`ResizeSpec`]).
     pub resize: Option<ResizeSpec>,
+    /// Pin worker `t` to core `t mod num_cores` before the warm-up, so
+    /// scheduler migrations never land inside the measured window (the
+    /// CLI's `--pin`; see [`crate::util::affinity`]).
+    pub pin: bool,
+    /// Install `MPOL_INTERLEAVE` before building each repeat's cache so
+    /// its table pages spread round-robin across NUMA nodes (the CLI's
+    /// `--numa-interleave`). Harmless on single-node machines.
+    pub numa_interleave: bool,
 }
 
 impl Default for RunConfig {
@@ -180,6 +188,8 @@ impl Default for RunConfig {
             seed: 1,
             fill: FillSpec::default(),
             resize: None,
+            pin: false,
+            numa_interleave: false,
         }
     }
 }
@@ -200,6 +210,12 @@ pub struct RunResult {
     pub lat_p99_ns: u64,
     /// Sampled per-op latency: mean, nanoseconds.
     pub lat_mean_ns: f64,
+    /// CPU cycles per operation: the sum of each worker's TSC delta over
+    /// its measured loop (warm-up excluded) divided by total ops, across
+    /// all repeats. 0 where [`crate::util::clock::cycles_supported`] is
+    /// false. Unlike ns/op this is invariant under frequency scaling of
+    /// the measurement clock, so it isolates the probe path's work.
+    pub cycles_per_op: f64,
 }
 
 /// Keys guaranteed not to collide with trace keys or resident sets
@@ -222,6 +238,13 @@ pub fn measure(
     let latency = Arc::new(LatencyHistogram::new());
     let mut total_hits = 0u64;
     let mut total_gets = 0u64;
+    let mut total_ops_all = 0u64;
+    let mut total_cycles = 0u64;
+    if cfg.numa_interleave {
+        // Install the interleave policy before the factory allocates the
+        // tables, so their pages spread as they are first touched.
+        crate::util::affinity::interleave_allocations();
+    }
     for rep in 0..cfg.repeats {
         let cache = factory();
         // A TTL/weight fill against a cache without lifetime support is
@@ -239,10 +262,12 @@ pub fn measure(
                 cache.name()
             );
         }
-        let (ops, hits, gets, secs) = one_run(cache, workload, cfg, rep as u64, &latency);
+        let (ops, hits, gets, cycles, secs) = one_run(cache, workload, cfg, rep as u64, &latency);
         mops.add(ops as f64 / secs / 1e6);
         total_hits += hits;
         total_gets += gets;
+        total_ops_all += ops;
+        total_cycles += cycles;
     }
     RunResult {
         mops,
@@ -250,6 +275,11 @@ pub fn measure(
         lat_p50_ns: latency.percentile(50.0),
         lat_p99_ns: latency.percentile(99.0),
         lat_mean_ns: latency.mean(),
+        cycles_per_op: if total_ops_all > 0 {
+            total_cycles as f64 / total_ops_all as f64
+        } else {
+            0.0
+        },
     }
 }
 
@@ -409,7 +439,7 @@ fn one_run(
     cfg: &RunConfig,
     rep: u64,
     latency: &Arc<LatencyHistogram>,
-) -> (u64, u64, u64, f64) {
+) -> (u64, u64, u64, u64, f64) {
     let capacity = cache.capacity();
     // Warm-up phase 1: main thread fills with non-trace keys.
     for i in 0..capacity as u64 {
@@ -425,6 +455,7 @@ fn one_run(
     let total_ops = Arc::new(AtomicU64::new(0));
     let total_hits = Arc::new(AtomicU64::new(0));
     let total_gets = Arc::new(AtomicU64::new(0));
+    let total_cycles = Arc::new(AtomicU64::new(0));
 
     let mut handles = Vec::new();
     for t in 0..cfg.threads {
@@ -435,12 +466,19 @@ fn one_run(
         let total_ops = total_ops.clone();
         let total_hits = total_hits.clone();
         let total_gets = total_gets.clone();
+        let total_cycles = total_cycles.clone();
         let latency = latency.clone();
         let workload = workload.clone();
         let threads = cfg.threads;
         let seed = cfg.seed ^ (rep << 32) ^ t as u64;
         let fill = cfg.fill.clone();
+        let pin = cfg.pin;
         handles.push(std::thread::spawn(move || {
+            // Pin before the warm-up so even the warm traffic runs where
+            // the measurement will (first-touch page placement included).
+            if pin {
+                crate::util::affinity::pin_to_core(t);
+            }
             // Warm-up phase 2: per-thread non-trace inserts.
             let per = (cache.capacity() / threads).max(1) as u64;
             for i in 0..per {
@@ -448,10 +486,17 @@ fn one_run(
             }
             warm_done.wait();
             barrier.wait();
+            // The TSC window brackets exactly the measured loop — after
+            // the start barrier, before the counter publication — so
+            // warm-up cycles never pollute cycles-per-op. Per-thread
+            // deltas are summed, never differenced across threads.
+            let tsc0 = crate::util::clock::cycles_now();
             // `worker` publishes its op count progressively through the
             // pacer (into `total_ops`), so only hits/gets remain to add.
             let (_ops, hits, gets) =
                 worker(&*cache, &workload, &fill, &stop, &total_ops, t, threads, seed, &latency);
+            let tsc1 = crate::util::clock::cycles_now();
+            total_cycles.fetch_add(tsc1.wrapping_sub(tsc0), Ordering::Relaxed);
             total_hits.fetch_add(hits, Ordering::Relaxed);
             total_gets.fetch_add(gets, Ordering::Relaxed);
         }));
@@ -513,6 +558,7 @@ fn one_run(
         total_ops.load(Ordering::Relaxed),
         total_hits.load(Ordering::Relaxed),
         total_gets.load(Ordering::Relaxed),
+        total_cycles.load(Ordering::Relaxed),
         secs,
     )
 }
@@ -1039,6 +1085,32 @@ mod tests {
         );
         assert!(r.before.mops > 0.0 && r.during.mops > 0.0 && r.after.mops > 0.0);
         assert!(r.migrate_ms >= 0.0);
+    }
+
+    #[test]
+    fn pinned_run_measures_and_reports_cycles() {
+        // `pin` + `numa_interleave` must not disturb the measurement
+        // (both are best-effort), and on x86_64 the summed TSC deltas
+        // must produce a positive cycles-per-op figure.
+        let cfg = RunConfig { pin: true, numa_interleave: true, ..quick_cfg(2) };
+        let r = measure(&kw_factory(4096), &Workload::AllHit { working_set: 256 }, &cfg);
+        assert!(r.mops.mean() > 0.0);
+        assert!(r.hit_ratio > 0.95, "hit ratio {}", r.hit_ratio);
+        if crate::util::clock::cycles_supported() {
+            assert!(r.cycles_per_op > 0.0, "cycles/op {}", r.cycles_per_op);
+        } else {
+            assert_eq!(r.cycles_per_op, 0.0);
+        }
+    }
+
+    #[test]
+    fn unpinned_run_still_reports_cycles() {
+        // cycles-per-op is sampled whether or not the run pins: the TSC
+        // bracket lives in the worker path, not behind the flag.
+        let r = measure(&kw_factory(1024), &Workload::AllMiss, &quick_cfg(1));
+        if crate::util::clock::cycles_supported() {
+            assert!(r.cycles_per_op > 0.0, "cycles/op {}", r.cycles_per_op);
+        }
     }
 
     #[test]

@@ -311,7 +311,12 @@ fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
 /// `requested_capacity` (the CLI figure, pre-rounding) and a per-row
 /// `effective_capacity` (what the built implementation actually holds —
 /// power-of-two set rounding can inflate it up to ~2×).
-pub const BENCH_SCHEMA: &str = "kway-bench-v3";
+/// v4 = v3 plus the hot-path figures: a per-row `cycles_per_op` (summed
+/// worker TSC deltas / total ops; 0 off x86_64), and top-level
+/// `probe_kind` (which fingerprint-probe kernel ran: avx2/sse2/swar/
+/// scalar) and `pinned` (whether workers were core-pinned) — without
+/// them a bench artifact is not comparable across machines or builds.
+pub const BENCH_SCHEMA: &str = "kway-bench-v4";
 
 /// Validate a bench document against [`BENCH_SCHEMA`]. `cmd_bench` runs
 /// this before writing (a malformed document is a bug, not an artifact)
@@ -322,7 +327,7 @@ pub fn check_bench_schema(doc: &Json) -> Result<()> {
     if schema != BENCH_SCHEMA {
         bail!("schema {schema:?} != {BENCH_SCHEMA:?}");
     }
-    for key in ["name", "trace", "policy", "admission", "weight_dist"] {
+    for key in ["name", "trace", "policy", "admission", "weight_dist", "probe_kind"] {
         if field(key)?.as_str().is_none() {
             bail!("field {key:?} must be a string");
         }
@@ -331,6 +336,9 @@ pub fn check_bench_schema(doc: &Json) -> Result<()> {
         if field(key)?.as_i64().is_none() {
             bail!("field {key:?} must be an integer");
         }
+    }
+    if field("pinned")?.as_bool().is_none() {
+        bail!("field \"pinned\" must be a boolean");
     }
     let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
     for (i, row) in results.iter().enumerate() {
@@ -344,7 +352,55 @@ pub fn check_bench_schema(doc: &Json) -> Result<()> {
                 bail!("results[{i}]: {key:?} must be an integer");
             }
         }
-        for key in ["mops_mean", "mops_stddev", "hit_ratio"] {
+        for key in ["mops_mean", "mops_stddev", "hit_ratio", "cycles_per_op"] {
+            if rfield(key)?.as_f64().is_none() {
+                bail!("results[{i}]: {key:?} must be numeric");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Schema tag of `BENCH_hotpath.json`, the probe-path microbench artifact
+/// (`cargo bench --bench microbench -- --json`; DESIGN.md §Hot path).
+/// One row per (probe kernel, thread count): ns/op, cycles/op and
+/// Mops/s for the same resident-set get loop, so the SIMD speedup is a
+/// same-file comparison of the avx2/sse2/swar rows against the scalar
+/// row. A `provenance` string records how the numbers were produced.
+pub const HOTPATH_SCHEMA: &str = "kway-hotpath-v1";
+
+/// Validate a hot-path document against [`HOTPATH_SCHEMA`]; the
+/// microbench runs it before writing, like [`check_bench_schema`].
+pub fn check_hotpath_schema(doc: &Json) -> Result<()> {
+    let field = |key: &str| doc.get(key).ok_or_else(|| anyhow!("missing field {key:?}"));
+    let schema = field("schema")?.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+    if schema != HOTPATH_SCHEMA {
+        bail!("schema {schema:?} != {HOTPATH_SCHEMA:?}");
+    }
+    for key in ["impl", "workload", "provenance"] {
+        if field(key)?.as_str().is_none() {
+            bail!("field {key:?} must be a string");
+        }
+    }
+    for key in ["capacity", "ways", "working_set", "duration_ms", "seed"] {
+        if field(key)?.as_i64().is_none() {
+            bail!("field {key:?} must be an integer");
+        }
+    }
+    if field("pinned")?.as_bool().is_none() {
+        bail!("field \"pinned\" must be a boolean");
+    }
+    let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
+    for (i, row) in results.iter().enumerate() {
+        let rfield =
+            |key: &str| row.get(key).ok_or_else(|| anyhow!("results[{i}]: missing {key:?}"));
+        if rfield("probe")?.as_str().is_none() {
+            bail!("results[{i}]: probe must be a string");
+        }
+        if rfield("threads")?.as_i64().is_none() {
+            bail!("results[{i}]: threads must be an integer");
+        }
+        for key in ["mops", "ns_per_op", "cycles_per_op"] {
             if rfield(key)?.as_f64().is_none() {
                 bail!("results[{i}]: {key:?} must be numeric");
             }
@@ -406,36 +462,95 @@ mod tests {
                 "capacity":2048,"requested_capacity":2000,"policy":"lru",
                 "admission":"none","ttl_ms":0,"weight_dist":"unit",
                 "duration_ms":300,"repeats":3,"seed":42,
+                "probe_kind":"avx2","pinned":false,
                 "results":[{{"impl":"KW-WFSC","threads":4,
                   "effective_capacity":2048,"mops_mean":12.3,
                   "mops_stddev":0.5,"p50_ns":180,"p99_ns":2100,
-                  "hit_ratio":0.9}}]}}"#
+                  "cycles_per_op":410.5,"hit_ratio":0.9}}]}}"#
         ))
         .unwrap()
     }
 
     #[test]
-    fn bench_schema_v3_accepts_and_rejects() {
-        assert_eq!(BENCH_SCHEMA, "kway-bench-v3", "schema bumps must update this check");
-        check_bench_schema(&bench_doc("kway-bench-v3")).unwrap();
+    fn bench_schema_v4_accepts_and_rejects() {
+        assert_eq!(BENCH_SCHEMA, "kway-bench-v4", "schema bumps must update this check");
+        check_bench_schema(&bench_doc("kway-bench-v4")).unwrap();
         // Stale schema strings are rejected — the check is version-pinned.
-        assert!(check_bench_schema(&bench_doc("kway-bench-v2")).is_err());
+        assert!(check_bench_schema(&bench_doc("kway-bench-v3")).is_err());
         // Dropping a v3 field (the honest capacity pair) is rejected.
-        let mut doc = bench_doc("kway-bench-v3");
+        let mut doc = bench_doc("kway-bench-v4");
         if let Json::Object(fields) = &mut doc {
             fields.retain(|(k, _)| k != "requested_capacity");
         }
         assert!(check_bench_schema(&doc).is_err());
-        let mut doc = bench_doc("kway-bench-v3");
+        // Dropping a v4 field is rejected: the probe-kernel tag...
+        let mut doc = bench_doc("kway-bench-v4");
         if let Json::Object(fields) = &mut doc {
-            let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
-            if let Some(Json::Array(rows)) = results {
-                if let Json::Object(row) = &mut rows[0] {
-                    row.retain(|(k, _)| k != "effective_capacity");
+            fields.retain(|(k, _)| k != "probe_kind");
+        }
+        assert!(check_bench_schema(&doc).is_err());
+        // ...the pinned flag (must be an actual boolean)...
+        let mut doc = bench_doc("kway-bench-v4");
+        if let Json::Object(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "pinned" {
+                    *v = Json::Str("false".into());
                 }
             }
         }
         assert!(check_bench_schema(&doc).is_err());
+        // ...and the per-row figures (cycles_per_op like the v3 capacity).
+        for key in ["effective_capacity", "cycles_per_op"] {
+            let mut doc = bench_doc("kway-bench-v4");
+            if let Json::Object(fields) = &mut doc {
+                let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
+                if let Some(Json::Array(rows)) = results {
+                    if let Json::Object(row) = &mut rows[0] {
+                        row.retain(|(k, _)| k != key);
+                    }
+                }
+            }
+            assert!(check_bench_schema(&doc).is_err(), "dropping {key} must fail");
+        }
+    }
+
+    fn hotpath_doc(schema: &str) -> Json {
+        parse(&format!(
+            r#"{{"schema":"{schema}","impl":"KW-WFSC","workload":"hit100",
+                "capacity":262144,"ways":8,"working_set":131072,
+                "duration_ms":300,"seed":42,"pinned":true,
+                "provenance":"measured",
+                "results":[{{"probe":"scalar","threads":1,"mops":31.0,
+                  "ns_per_op":32.2,"cycles_per_op":96.1}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn hotpath_schema_v1_accepts_and_rejects() {
+        assert_eq!(HOTPATH_SCHEMA, "kway-hotpath-v1", "schema bumps must update this check");
+        check_hotpath_schema(&hotpath_doc("kway-hotpath-v1")).unwrap();
+        assert!(check_hotpath_schema(&hotpath_doc("kway-hotpath-v0")).is_err());
+        // Every row figure is load-bearing: dropping any one is rejected.
+        for key in ["probe", "threads", "mops", "ns_per_op", "cycles_per_op"] {
+            let mut doc = hotpath_doc("kway-hotpath-v1");
+            if let Json::Object(fields) = &mut doc {
+                let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
+                if let Some(Json::Array(rows)) = results {
+                    if let Json::Object(row) = &mut rows[0] {
+                        row.retain(|(k, _)| k != key);
+                    }
+                }
+            }
+            assert!(check_hotpath_schema(&doc).is_err(), "dropping {key} must fail");
+        }
+        // A provenance-less artifact is rejected: numbers without an
+        // origin story are not comparable.
+        let mut doc = hotpath_doc("kway-hotpath-v1");
+        if let Json::Object(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "provenance");
+        }
+        assert!(check_hotpath_schema(&doc).is_err());
     }
 
     #[test]

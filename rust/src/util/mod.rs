@@ -6,6 +6,7 @@
 //! unit tests (hash against xxHash reference vectors, Zipf against
 //! frequency-law checks, JSON against round-trips).
 
+pub mod affinity;
 pub mod check;
 pub mod cli;
 pub mod clock;

@@ -297,8 +297,10 @@ fn weighted_churn_across_a_grow_respects_budgets() {
         for w in workers {
             w.join().unwrap();
         }
-        // Quiesced: the SeqCst publish/repair protocol makes the weight
-        // bound exact again (same contract as rust/tests/expiry.rs, now
+        // Quiesced: the publish/repair protocol (Release/Acquire
+        // publishes + the irreducible SeqCst repair fence — see the
+        // ordering argument atop kway/wfsc.rs) makes the weight bound
+        // exact again (same contract as rust/tests/expiry.rs, now
         // across a geometry change).
         assert!(
             c.weight() <= c.capacity() as u64,
