@@ -12,12 +12,14 @@
 //!   (avx2/sse2/swar/scalar) × thread counts, core-pinned, reporting
 //!   ns/op *and* cycles/op — the SIMD-speedup figure of the hot-path
 //!   work. `--json` writes the rows to `BENCH_hotpath.json`
-//!   (schema `kway-hotpath-v1`).
+//!   (schema `kway-hotpath-v2`); `--hugepages` madvises the tables onto
+//!   transparent huge pages first, and the artifact records which.
 //!
 //! ```bash
 //! cargo bench --bench microbench              # full run
 //! cargo bench --bench microbench -- --smoke   # seconds-scale CI smoke
 //! cargo bench --bench microbench -- --json    # also write BENCH_hotpath.json
+//! cargo bench --bench microbench -- --hugepages --json   # THP-backed tables
 //! KWAY_BENCH_QUICK=1 cargo bench --bench microbench
 //! ```
 
@@ -150,7 +152,7 @@ fn bench_probe_path(iters_per_thread: u64, thread_counts: &[usize]) -> Vec<Probe
 }
 
 /// Write the probe-path rows as `BENCH_hotpath.json` (schema
-/// `kway-hotpath-v1`), refusing a document that fails its own check.
+/// `kway-hotpath-v2`), refusing a document that fails its own check.
 fn write_hotpath_json(rows: &[ProbeRow], duration_ms: i64) {
     let json_rows: Vec<Json> = rows
         .iter()
@@ -174,6 +176,7 @@ fn write_hotpath_json(rows: &[ProbeRow], duration_ms: i64) {
         ("duration_ms".to_string(), Json::Int(duration_ms)),
         ("seed".to_string(), Json::Int(17)),
         ("pinned".to_string(), Json::Bool(true)),
+        ("hugepages".to_string(), Json::Bool(kway::kway::hugepages_enabled())),
         ("provenance".to_string(), Json::Str("measured".to_string())),
         ("results".to_string(), Json::Array(json_rows)),
     ]);
@@ -189,6 +192,12 @@ fn write_hotpath_json(rows: &[ProbeRow], duration_ms: i64) {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    // Before any table is allocated, so every cache under test gets the
+    // advised backing; the JSON artifact records the setting.
+    if args.has_flag("hugepages") {
+        kway::kway::set_hugepages(true);
+        println!("(tables madvise(MADV_HUGEPAGE)-backed)");
+    }
     let smoke = args.has_flag("smoke");
     let quick = smoke || kway::figures::quick_mode();
     let iters: u64 = if smoke {

@@ -1,0 +1,177 @@
+//! Wire-serving benchmark: the connections × pipeline-depth × threads
+//! sweep behind `BENCH_serve.json` (schema `kway-serve-v1`).
+//!
+//! Starts the TCP front end in-process on a loopback ephemeral port over
+//! a [`CacheService`], then drives it with the crate's own pipelined
+//! load generator for every (proto, connections, pipeline) point. The
+//! headline comparison is the pipeline axis at equal connections: a
+//! P-deep pipeline amortizes syscalls per request *and* lets the
+//! per-connection accumulator hand P-wide scatter/gather batches to the
+//! cache workers, so pipeline=16 rows should clearly beat pipeline=1.
+//!
+//! ```bash
+//! cargo bench --bench serve                    # full sweep
+//! cargo bench --bench serve -- --smoke         # seconds-scale CI smoke
+//! cargo bench --bench serve -- --json          # also write BENCH_serve.json
+//! cargo bench --bench serve -- --hugepages     # THP-backed cache tables
+//! ```
+//!
+//! On targets without the epoll backend the bench prints a skip notice
+//! and exits cleanly (the JSON is only written from a real run).
+//!
+//! [`CacheService`]: kway::coordinator::CacheService
+
+use kway::coordinator::{CacheService, ServiceConfig};
+use kway::kway::KwWfsc;
+use kway::net::loadgen::{self, LoadgenConfig, LoadgenResult, WireProto};
+use kway::net::{Server, ServerConfig};
+use kway::policy::Policy;
+use kway::tinylfu::AdmissionMode;
+use kway::util::cli::Args;
+use kway::util::json::{check_serve_schema, Json, SERVE_SCHEMA};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SEED: u64 = 42;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    if args.has_flag("hugepages") {
+        kway::kway::set_hugepages(true);
+    }
+    let smoke = args.has_flag("smoke") || kway::figures::quick_mode();
+    let pin = args.has_flag("pin");
+    let duration = Duration::from_millis(if smoke { 200 } else { 1000 });
+    let conn_axis: &[usize] = if smoke { &[2] } else { &[4, 16] };
+    let pipe_axis: &[usize] = &[1, 16];
+    let threads = if smoke { 1 } else { 2 };
+    let keyspace = 1u64 << 15;
+
+    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(1 << 16, 8, Policy::Lru));
+    let service = Arc::new(CacheService::start(
+        cache,
+        ServiceConfig { workers: 2, admission: AdmissionMode::None, default_ttl: None },
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback");
+    let server =
+        match Server::start(listener, Arc::clone(&service), ServerConfig { io_threads: 2 }) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("serve bench skipped: wire front end unavailable on this target ({e})");
+                return;
+            }
+        };
+    let addr = server.local_addr().to_string();
+    println!("== wire serving: {addr}, duration {duration:?}, threads {threads} ==");
+    println!(
+        "{:>10} {:>12} {:>9} {:>8} {:>9} {:>7} {:>9} {:>9} {:>7}",
+        "proto", "connections", "pipeline", "threads", "Mops/s", "hit", "p50_ns", "p99_ns", "errs"
+    );
+
+    let mut rows: Vec<(LoadgenConfig, LoadgenResult)> = Vec::new();
+    for proto in [WireProto::Memcached, WireProto::Resp] {
+        for &connections in conn_axis {
+            for &pipeline in pipe_axis {
+                let cfg = LoadgenConfig {
+                    addr: addr.clone(),
+                    proto,
+                    connections,
+                    pipeline,
+                    threads: threads.min(connections),
+                    duration,
+                    keyspace,
+                    set_every: 8,
+                    ttl: None,
+                    zipf_alpha: None,
+                    seed: SEED,
+                    pin,
+                };
+                match loadgen::run(&cfg) {
+                    Ok(r) => {
+                        println!(
+                            "{:>10} {:>12} {:>9} {:>8} {:>9.3} {:>7.3} {:>9} {:>9} {:>7}",
+                            proto.name(),
+                            connections,
+                            pipeline,
+                            cfg.threads,
+                            r.mops(),
+                            r.hit_ratio(),
+                            r.p50_ns,
+                            r.p99_ns,
+                            r.errors
+                        );
+                        rows.push((cfg, r));
+                    }
+                    Err(e) => eprintln!("{} c={connections} p={pipeline}: {e:#}", proto.name()),
+                }
+            }
+        }
+    }
+
+    // The tentpole claim, read straight off the sweep: deep pipelines
+    // beat depth-1 at equal connections.
+    for proto in [WireProto::Memcached, WireProto::Resp] {
+        for &connections in conn_axis {
+            let at = |p: usize| {
+                rows.iter()
+                    .find(|(c, _)| {
+                        c.proto == proto && c.connections == connections && c.pipeline == p
+                    })
+                    .map(|(_, r)| r.mops())
+            };
+            if let (Some(deep), Some(shallow)) = (at(16), at(1)) {
+                if shallow > 0.0 {
+                    println!(
+                        "{:>10} c={connections}: pipeline 16 vs 1 = {:.2}x",
+                        proto.name(),
+                        deep / shallow
+                    );
+                }
+            }
+        }
+    }
+
+    if args.has_flag("json") && !rows.is_empty() {
+        let json_rows: Vec<Json> = rows
+            .iter()
+            .map(|(cfg, r)| {
+                Json::Object(vec![
+                    ("proto".to_string(), Json::Str(cfg.proto.name().to_string())),
+                    ("connections".to_string(), Json::Int(cfg.connections as i64)),
+                    ("pipeline".to_string(), Json::Int(cfg.pipeline as i64)),
+                    ("threads".to_string(), Json::Int(cfg.threads as i64)),
+                    ("ops".to_string(), Json::Int(r.ops as i64)),
+                    ("mops".to_string(), Json::Float(r.mops())),
+                    ("hit_ratio".to_string(), Json::Float(r.hit_ratio())),
+                    ("p50_ns".to_string(), Json::Int(r.p50_ns as i64)),
+                    ("p99_ns".to_string(), Json::Int(r.p99_ns as i64)),
+                    ("errors".to_string(), Json::Int(r.errors as i64)),
+                ])
+            })
+            .collect();
+        let doc = Json::Object(vec![
+            ("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string())),
+            ("addr".to_string(), Json::Str(addr.clone())),
+            ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
+            ("keyspace".to_string(), Json::Int(keyspace as i64)),
+            ("seed".to_string(), Json::Int(SEED as i64)),
+            ("pinned".to_string(), Json::Bool(pin)),
+            ("provenance".to_string(), Json::Str("measured".to_string())),
+            ("results".to_string(), Json::Array(json_rows)),
+        ]);
+        if let Err(e) = check_serve_schema(&doc) {
+            eprintln!("refusing to write malformed BENCH_serve.json: {e:#}");
+        } else {
+            match std::fs::write("BENCH_serve.json", format!("{doc}\n")) {
+                Ok(()) => println!("\nwrote BENCH_serve.json"),
+                Err(e) => eprintln!("writing BENCH_serve.json: {e}"),
+            }
+        }
+    }
+
+    server.stop();
+    if let Ok(service) = Arc::try_unwrap(service) {
+        service.shutdown();
+    }
+}

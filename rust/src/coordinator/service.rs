@@ -333,6 +333,13 @@ impl CacheService {
         &self.cache
     }
 
+    /// The entry options un-optioned puts receive (from
+    /// [`ServiceConfig::default_ttl`]). The wire front end uses this so
+    /// a plain `set` stores exactly like an in-process `put`.
+    pub fn default_opts(&self) -> EntryOpts {
+        self.default_opts
+    }
+
     /// Stop all workers (and any background migration drivers) and join
     /// them.
     pub fn shutdown(mut self) {

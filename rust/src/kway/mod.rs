@@ -43,6 +43,7 @@ mod stamped;
 mod wfa;
 mod wfsc;
 
+pub use alloc::{hugepages_enabled, set_hugepages};
 pub use geometry::Geometry;
 pub use ls::KwLs;
 pub use stamped::StampedLock;

@@ -44,6 +44,7 @@ pub mod throughput;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
+pub mod net;
 pub mod analysis;
 
 pub use lifetime::{BatchEntry, EntryOpts, WeightDist};

@@ -7,10 +7,16 @@
 //!   batch       batched-get sweep: Mops/s + per-batch p50/p99 vs batch size
 //!   resize      online elastic-resize sweep: before/during/after phases vs a twin
 //!   bench       named benchmark suite; --json writes BENCH_<name>.json
-//!   serve       run the cache service demo (router + workers + metrics)
+//!   serve       run the cache service demo (router + workers + metrics);
+//!               with --listen <addr>, serve memcached text + RESP over TCP
+//!   loadgen     pipelined TCP load generator against a running server
 //!   validate    cross-check the XLA artifacts against the native engine
 //!   ballsbins   Theorem 4.1 bound vs Monte-Carlo
 //!   info        list trace models, implementations and artifacts
+//!
+//! The global `--hugepages` flag asks the kernel (via
+//! `madvise(MADV_HUGEPAGE)`) to back every subsequently allocated cache
+//! table with transparent huge pages; bench JSON records the setting.
 //!
 //! `throughput`, `synthetic`, `batch`, `bench` and `serve` all take
 //! `--admission none|tlfu`: `tlfu` layers the concurrent TinyLFU
@@ -47,6 +53,9 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.has_flag("hugepages") {
+        kway::kway::set_hugepages(true);
+    }
     let result = match args.command.as_deref() {
         Some("hitratio") => cmd_hitratio(&args),
         Some("throughput") => cmd_throughput(&args),
@@ -55,6 +64,7 @@ fn main() {
         Some("resize") => cmd_resize(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("validate") => cmd_validate(&args),
         Some("ballsbins") => cmd_ballsbins(&args),
         Some("info") => cmd_info(),
@@ -78,6 +88,8 @@ const HELP: &str = "usage: kway <subcommand> [--options]
   resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
   bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave] [--json]
   serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C]
+             [--listen 127.0.0.1:11211 [--io-threads 2]]  (memcached text + RESP over TCP)
+  loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--seed 42] [--pin] [--smoke] [--json]
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
@@ -392,6 +404,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // operations, issue the online-resize admin op; the service's
     // background driver migrates while the clients keep hammering.
     let resize = parse_resize(args)?;
+    // --listen <addr> switches from the in-process demo clients to the
+    // TCP wire front end (memcached text + RESP); it serves until killed.
+    if let Some(listen) = args.get("listen") {
+        return serve_tcp(args, listen, capacity, workers, admission, default_ttl, resize);
+    }
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
         "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}{}",
@@ -456,6 +473,155 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     service.shutdown();
+    Ok(())
+}
+
+/// `kway serve --listen <addr>`: the TCP wire front end. One port speaks
+/// both the memcached text protocol and the RESP subset (sniffed from the
+/// first byte of each connection); pipelined requests are fused into
+/// `get_batch`/`put_batch` calls against the [`CacheService`]. Serves
+/// until the process is killed. `--resize-at N --resize-to C` still
+/// works: a poll loop fires the online resize once the service's op
+/// counters cross the threshold, while connections keep flowing.
+fn serve_tcp(
+    args: &Args,
+    listen: &str,
+    capacity: usize,
+    workers: usize,
+    admission: AdmissionMode,
+    default_ttl: Option<Duration>,
+    resize: Option<kway::throughput::ResizeSpec>,
+) -> Result<()> {
+    use kway::coordinator::{CacheService, ServiceConfig};
+    use kway::kway::KwWfsc;
+    use kway::net::{Server, ServerConfig};
+    use std::sync::atomic::Ordering;
+    let io_threads = args.get_parsed_or("io-threads", 2usize)?;
+    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
+    let service =
+        Arc::new(CacheService::start(cache, ServiceConfig { workers, admission, default_ttl }));
+    let listener =
+        std::net::TcpListener::bind(listen).map_err(|e| anyhow!("binding {listen}: {e}"))?;
+    let server = Server::start(listener, Arc::clone(&service), ServerConfig { io_threads })
+        .map_err(|e| anyhow!("starting the wire front end: {e}"))?;
+    println!(
+        "kway: listening on {} (memcached text + RESP; workers={workers} io-threads={io_threads})",
+        server.local_addr()
+    );
+    println!(
+        "kway: cache={}{} capacity={}{}",
+        service.cache().name(),
+        admission.label(),
+        service.cache().capacity(),
+        match default_ttl {
+            Some(ttl) => format!(" default-ttl={ttl:?}"),
+            None => String::new(),
+        }
+    );
+    let mut resize_pending = resize;
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if let Some(spec) = resize_pending {
+            let m = service.metrics();
+            let total = m.ops.gets.load(Ordering::Relaxed) + m.ops.puts.load(Ordering::Relaxed);
+            if total >= spec.at_ops {
+                println!(
+                    "kway: resize trigger hit ({total} ops) — resizing to {}",
+                    spec.to_capacity
+                );
+                service.resize(spec.to_capacity);
+                resize_pending = None;
+            }
+        }
+    }
+}
+
+/// `kway loadgen`: pipelined TCP load generator for a running
+/// `kway serve --listen` instance. Reuses the crate's Zipf/uniform key
+/// machinery and `--pin` affinity, reports Mops/s, hit ratio and
+/// reservoir-sampled per-op latency percentiles; `--json` writes a
+/// `kway-serve-v1` document to `BENCH_serve-<proto>.json`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use kway::net::loadgen::{self, LoadgenConfig, WireProto};
+    use kway::util::json::{check_serve_schema, Json, SERVE_SCHEMA};
+    let addr = args.get_or("addr", "127.0.0.1:11211");
+    let proto_raw = args.get_or("proto", "memcached");
+    let proto = WireProto::parse(&proto_raw)
+        .ok_or_else(|| anyhow!("bad --proto {proto_raw:?} (memcached|resp)"))?;
+    let cfg = if args.has_flag("smoke") {
+        LoadgenConfig::smoke(&addr, proto)
+    } else {
+        LoadgenConfig {
+            addr: addr.clone(),
+            proto,
+            connections: args.get_parsed_or("connections", 8usize)?,
+            pipeline: args.get_parsed_or("pipeline", 16usize)?,
+            threads: args.get_parsed_or("threads", 2usize)?,
+            duration: Duration::from_millis(args.get_parsed_or("duration-ms", 1000u64)?),
+            keyspace: args.get_parsed_or("keyspace", 65_536u64)?,
+            set_every: args.get_parsed_or("set-every", 10u64)?,
+            ttl: parse_fill(args)?.ttl,
+            zipf_alpha: match args.get("zipf") {
+                None => None,
+                Some(raw) => Some(raw.parse::<f64>().map_err(|_| anyhow!("bad --zipf {raw:?}"))?),
+            },
+            seed: args.get_parsed_or("seed", 42u64)?,
+            pin: args.has_flag("pin"),
+        }
+    };
+    println!(
+        "loadgen: addr={} proto={} connections={} pipeline={} threads={} duration={:?}",
+        cfg.addr,
+        cfg.proto.name(),
+        cfg.connections,
+        cfg.pipeline,
+        cfg.threads,
+        cfg.duration
+    );
+    let r = loadgen::run(&cfg)?;
+    println!(
+        "{:.3} Mops/s — ops={} hits={}/{} gets ({:.3}) errors={} p50={}ns p99={}ns mean={:.0}ns",
+        r.mops(),
+        r.ops,
+        r.hits,
+        r.gets,
+        r.hit_ratio(),
+        r.errors,
+        r.p50_ns,
+        r.p99_ns,
+        r.mean_ns
+    );
+    if args.has_flag("json") {
+        let row = Json::Object(vec![
+            ("proto".into(), Json::Str(cfg.proto.name().into())),
+            ("connections".into(), Json::Int(cfg.connections as i64)),
+            ("pipeline".into(), Json::Int(cfg.pipeline as i64)),
+            ("threads".into(), Json::Int(cfg.threads as i64)),
+            ("ops".into(), Json::Int(r.ops as i64)),
+            ("mops".into(), Json::Float(r.mops())),
+            ("hit_ratio".into(), Json::Float(r.hit_ratio())),
+            ("p50_ns".into(), Json::Int(r.p50_ns as i64)),
+            ("p99_ns".into(), Json::Int(r.p99_ns as i64)),
+            ("errors".into(), Json::Int(r.errors as i64)),
+        ]);
+        let doc = Json::Object(vec![
+            ("schema".into(), Json::Str(SERVE_SCHEMA.into())),
+            ("addr".into(), Json::Str(cfg.addr.clone())),
+            ("duration_ms".into(), Json::Int(cfg.duration.as_millis() as i64)),
+            ("keyspace".into(), Json::Int(cfg.keyspace as i64)),
+            ("seed".into(), Json::Int(cfg.seed as i64)),
+            ("pinned".into(), Json::Bool(cfg.pin)),
+            (
+                "provenance".into(),
+                Json::Str(format!("kway loadgen against {}", cfg.addr)),
+            ),
+            ("results".into(), Json::Array(vec![row])),
+        ]);
+        check_serve_schema(&doc)?;
+        let path = format!("BENCH_serve-{}.json", cfg.proto.name());
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

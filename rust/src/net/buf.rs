@@ -1,0 +1,298 @@
+//! Per-connection byte buffers: a compacting read accumulator and a
+//! vectored write queue.
+//!
+//! [`ReadBuf`] holds bytes between socket reads so partial frames can
+//! straddle reads: the codecs consume complete requests from the front
+//! and leave incomplete tails for the next read. [`WriteQueue`] holds
+//! queued response chunks and drains them with one `write_vectored`
+//! (`writev`) call — each pipeline-fusion cycle produces a single chunk,
+//! so a busy connection's responses go out in few syscalls.
+
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
+
+/// How many bytes one `fill_from` call tries to read.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Compact when the consumed prefix passes this *and* dominates the
+/// buffer (compaction is O(live bytes); do it when the copy is small
+/// relative to the space reclaimed).
+const COMPACT_THRESHOLD: usize = 64 * 1024;
+
+/// Max IoSlices per `writev` (the kernel caps at IOV_MAX = 1024; 64 is
+/// plenty — chunks are whole fusion cycles, not individual responses).
+const MAX_IOVECS: usize = 64;
+
+/// Read-side accumulator: bytes arrive at the tail, codecs consume from
+/// the head, incomplete frames persist across socket reads.
+#[derive(Debug, Default)]
+pub struct ReadBuf {
+    data: Vec<u8>,
+    start: usize,
+}
+
+impl ReadBuf {
+    /// An empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The unconsumed bytes (what the codecs parse).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data[self.start..]
+    }
+
+    /// Number of unconsumed bytes.
+    pub fn len(&self) -> usize {
+        self.data.len() - self.start
+    }
+
+    /// Whether no unconsumed bytes remain.
+    pub fn is_empty(&self) -> bool {
+        self.start == self.data.len()
+    }
+
+    /// Mark `n` bytes as consumed. Compacts lazily once the dead prefix
+    /// is both large and at least half the buffer.
+    pub fn consume(&mut self, n: usize) {
+        self.start += n;
+        debug_assert!(self.start <= self.data.len());
+        if self.start == self.data.len() {
+            self.data.clear();
+            self.start = 0;
+        } else if self.start >= COMPACT_THRESHOLD && self.start >= self.data.len() / 2 {
+            self.data.copy_within(self.start.., 0);
+            self.data.truncate(self.data.len() - self.start);
+            self.start = 0;
+        }
+    }
+
+    /// Append bytes directly (tests and in-process feeding).
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.data.extend_from_slice(bytes);
+    }
+
+    /// Read once from `r` into the tail. Returns the byte count (0 =
+    /// EOF). `WouldBlock`/`Interrupted` are *not* errors here — they
+    /// propagate so the caller can distinguish "drained" from EOF.
+    pub fn fill_from<R: Read>(&mut self, r: &mut R) -> io::Result<usize> {
+        let old = self.data.len();
+        self.data.resize(old + READ_CHUNK, 0);
+        match r.read(&mut self.data[old..]) {
+            Ok(n) => {
+                self.data.truncate(old + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.data.truncate(old);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Write-side queue: response chunks drain via vectored writes, with a
+/// byte offset into the head chunk for partial-write resumption.
+#[derive(Debug, Default)]
+pub struct WriteQueue {
+    chunks: VecDeque<Vec<u8>>,
+    /// Bytes of the head chunk already written.
+    head: usize,
+    /// Total unwritten bytes across all chunks.
+    queued: usize,
+}
+
+impl WriteQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue a response chunk (empty chunks are dropped).
+    pub fn push(&mut self, chunk: Vec<u8>) {
+        if !chunk.is_empty() {
+            self.queued += chunk.len();
+            self.chunks.push_back(chunk);
+        }
+    }
+
+    /// Unwritten bytes still queued.
+    pub fn queued_bytes(&self) -> usize {
+        self.queued
+    }
+
+    /// Whether everything queued has been written.
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Drain as much as the socket accepts via `write_vectored`.
+    /// Returns `Ok(true)` when the queue is fully drained, `Ok(false)`
+    /// when the socket would block (register write interest and retry
+    /// on writability). A zero-length write is an error (peer gone).
+    pub fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        while !self.is_empty() {
+            let count = self.chunks.len().min(MAX_IOVECS);
+            let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(count);
+            for (i, chunk) in self.chunks.iter().take(MAX_IOVECS).enumerate() {
+                let from = if i == 0 { self.head } else { 0 };
+                slices.push(IoSlice::new(&chunk[from..]));
+            }
+            match w.write_vectored(&slices) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => self.advance(n),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+
+    fn advance(&mut self, mut n: usize) {
+        debug_assert!(n <= self.queued);
+        self.queued -= n;
+        while n > 0 {
+            let remaining = self.chunks[0].len() - self.head;
+            if n >= remaining {
+                n -= remaining;
+                self.head = 0;
+                self.chunks.pop_front();
+            } else {
+                self.head += n;
+                n = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readbuf_accumulates_and_consumes() {
+        let mut rb = ReadBuf::new();
+        assert!(rb.is_empty());
+        rb.push(b"hello ");
+        rb.push(b"world");
+        assert_eq!(rb.bytes(), b"hello world");
+        rb.consume(6);
+        assert_eq!(rb.bytes(), b"world");
+        assert_eq!(rb.len(), 5);
+        rb.consume(5);
+        assert!(rb.is_empty());
+        // A full consume resets the backing storage.
+        rb.push(b"x");
+        assert_eq!(rb.bytes(), b"x");
+    }
+
+    #[test]
+    fn readbuf_compacts_without_losing_bytes() {
+        let mut rb = ReadBuf::new();
+        // Push well past the compaction threshold, consume most of it in
+        // steps, and verify the tail stays intact throughout.
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        rb.push(&big);
+        rb.consume(150_000);
+        assert_eq!(rb.bytes(), &big[150_000..]);
+        rb.consume(1);
+        assert_eq!(rb.bytes(), &big[150_001..]);
+    }
+
+    #[test]
+    fn readbuf_fill_from_reader() {
+        let mut rb = ReadBuf::new();
+        let mut src: &[u8] = b"abc";
+        assert_eq!(rb.fill_from(&mut src).unwrap(), 3);
+        assert_eq!(rb.bytes(), b"abc");
+        // Source exhausted: EOF is Ok(0), buffer unchanged.
+        assert_eq!(rb.fill_from(&mut src).unwrap(), 0);
+        assert_eq!(rb.bytes(), b"abc");
+    }
+
+    /// A writer that accepts at most `cap` bytes per call — exercises
+    /// partial-write resumption across chunk boundaries.
+    struct Dribble {
+        out: Vec<u8>,
+        cap: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let n = buf.len().min(self.cap);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writequeue_drains_across_partial_writes() {
+        let mut wq = WriteQueue::new();
+        wq.push(b"END\r\n".to_vec());
+        wq.push(Vec::new()); // dropped
+        wq.push(b"STORED\r\n".to_vec());
+        wq.push(b"VALUE k 0 1\r\n7\r\nEND\r\n".to_vec());
+        assert_eq!(wq.queued_bytes(), 5 + 8 + 22);
+
+        let mut w = Dribble { out: Vec::new(), cap: 3 };
+        assert!(wq.flush(&mut w).unwrap());
+        assert!(wq.is_empty());
+        assert_eq!(w.out, b"END\r\nSTORED\r\nVALUE k 0 1\r\n7\r\nEND\r\n");
+    }
+
+    struct Blocky {
+        accepted: usize,
+    }
+
+    impl Write for Blocky {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.accepted == 0 {
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "full"))
+            } else {
+                let n = buf.len().min(self.accepted);
+                self.accepted -= n;
+                Ok(n)
+            }
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writequeue_reports_wouldblock_and_resumes() {
+        let mut wq = WriteQueue::new();
+        wq.push(b"0123456789".to_vec());
+        let mut w = Blocky { accepted: 4 };
+        assert!(!wq.flush(&mut w).unwrap(), "partial drain must report not-done");
+        assert_eq!(wq.queued_bytes(), 6);
+        let mut w2 = Dribble { out: Vec::new(), cap: 100 };
+        assert!(wq.flush(&mut w2).unwrap());
+        assert_eq!(w2.out, b"456789");
+    }
+
+    #[test]
+    fn writequeue_zero_write_is_an_error() {
+        struct Zero;
+        impl Write for Zero {
+            fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wq = WriteQueue::new();
+        wq.push(b"x".to_vec());
+        assert!(wq.flush(&mut Zero).is_err());
+    }
+}

@@ -1,0 +1,686 @@
+//! Connection state machine: protocol sniffing, pipeline→batch fusion,
+//! and the socket-facing read/flush driver.
+//!
+//! [`Session`] is the socket-free core (unit-testable with byte
+//! slices): it drains every complete request the read buffer holds,
+//! *fuses* runs of consecutive reads into one
+//! [`CacheService::get_batch`] and runs of consecutive unconditional
+//! writes (with identical entry options) into one
+//! [`CacheService::put_batch_with`], and appends the responses — in
+//! request order — to one output chunk. A pipeline of P `get`s thus
+//! costs one scatter/gather walk instead of P channel round-trips,
+//! which is the whole point of the front end (ISSUE 7).
+//!
+//! Ordering argument: at most one accumulator (reads *or* writes) is
+//! open at any moment. Opening the other kind — or hitting a
+//! read-modify-write, which executes unfused — first flushes the open
+//! one. Unconditional stores answer `STORED`/`+OK` at accumulation
+//! time (their outcome does not depend on execution), so emitted
+//! response order always equals request order, and a later read of a
+//! fused key observes the write because the write batch executes
+//! before the read batch is issued.
+//!
+//! [`Connection`] wraps a `TcpStream` around a session: level-triggered
+//! readiness, read-until-`WouldBlock` with a per-cycle byte cap,
+//! vectored response flushing, and half-close handling.
+//!
+//! [`CacheService::get_batch`]: crate::coordinator::CacheService::get_batch
+//! [`CacheService::put_batch_with`]: crate::coordinator::CacheService::put_batch_with
+
+use super::buf::{ReadBuf, WriteQueue};
+use super::memcached::{self, MemcachedDecoder};
+use super::resp::{self, RespDecoder};
+use super::{Command, WireKey};
+use crate::coordinator::CacheService;
+use crate::lifetime::EntryOpts;
+use std::io;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Max bytes consumed from one socket per event-loop cycle, so one
+/// fire-hosing connection cannot starve the rest of an io thread.
+const READ_CYCLE_CAP: usize = 256 * 1024;
+
+/// Wire protocol spoken by a connection, sniffed from its first byte
+/// (`*` opens a RESP array; memcached text never starts with `*`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    /// Memcached text protocol.
+    Memcached,
+    /// RESP (redis serialization protocol) arrays-of-bulk-strings.
+    Resp,
+}
+
+/// What a drain pass decided about the connection's future.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// Keep serving.
+    Continue,
+    /// Close once queued responses have flushed (`quit`, fatal protocol
+    /// error — the error response is already in the output chunk).
+    Close,
+}
+
+/// Protocol session: decoders plus the fusion executor. Socket-free —
+/// the driver ([`Connection`] or a test) owns the buffers.
+#[derive(Debug, Default)]
+pub struct Session {
+    proto: Option<Proto>,
+    mc: MemcachedDecoder,
+    resp: RespDecoder,
+}
+
+impl Session {
+    /// A fresh session; the protocol is sniffed from the first byte.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The sniffed protocol, once at least one byte has arrived.
+    pub fn proto(&self) -> Option<Proto> {
+        self.proto
+    }
+
+    /// Decode and execute every complete request in `rbuf`, appending
+    /// responses to `out` in request order. Incomplete tail bytes stay
+    /// in `rbuf` for the next socket read.
+    pub fn drain(
+        &mut self,
+        rbuf: &mut ReadBuf,
+        service: &CacheService,
+        out: &mut Vec<u8>,
+    ) -> DrainOutcome {
+        if self.proto.is_none() {
+            let Some(&first) = rbuf.bytes().first() else {
+                return DrainOutcome::Continue;
+            };
+            self.proto = Some(if first == b'*' { Proto::Resp } else { Proto::Memcached });
+        }
+        let proto = self.proto.expect("sniffed above");
+
+        let mut fuser = Fuser::new(service, proto, out);
+        let outcome = loop {
+            let decoded = match proto {
+                Proto::Memcached => self.mc.decode(rbuf.bytes()),
+                Proto::Resp => self.resp.decode(rbuf.bytes()),
+            };
+            match decoded {
+                Ok(None) => break DrainOutcome::Continue,
+                Ok(Some((cmd, n))) => {
+                    rbuf.consume(n);
+                    if fuser.execute(cmd) == DrainOutcome::Close {
+                        break DrainOutcome::Close;
+                    }
+                }
+                Err(fatal) => {
+                    fuser.flush_all();
+                    match proto {
+                        Proto::Memcached => {
+                            memcached::encode_line(fuser.out, &format!("CLIENT_ERROR {}", fatal.0))
+                        }
+                        Proto::Resp => {
+                            resp::encode_error(fuser.out, &format!("-ERR {}", fatal.0))
+                        }
+                    }
+                    break DrainOutcome::Close;
+                }
+            }
+        };
+        fuser.flush_all();
+        outcome
+    }
+}
+
+/// One queued read command awaiting the fused `get_batch`.
+struct ReadReq {
+    keys: Vec<WireKey>,
+    cas: bool,
+    single: bool,
+}
+
+/// The pipeline→batch fusion executor. Holds at most one open
+/// accumulator: pending reads *or* pending writes, never both.
+struct Fuser<'a> {
+    service: &'a CacheService,
+    proto: Proto,
+    out: &'a mut Vec<u8>,
+    reads: Vec<ReadReq>,
+    read_keys: Vec<u64>,
+    writes: Vec<(u64, u64)>,
+    write_opts: EntryOpts,
+}
+
+impl<'a> Fuser<'a> {
+    fn new(service: &'a CacheService, proto: Proto, out: &'a mut Vec<u8>) -> Self {
+        Self {
+            service,
+            proto,
+            out,
+            reads: Vec::new(),
+            read_keys: Vec::new(),
+            writes: Vec::new(),
+            write_opts: service.default_opts(),
+        }
+    }
+
+    /// Execute one command (accumulating fusable ones). `Close` stops
+    /// the drain loop.
+    fn execute(&mut self, cmd: Command) -> DrainOutcome {
+        match cmd {
+            Command::Read { keys, cas, single } => {
+                self.flush_writes();
+                self.read_keys.extend(keys.iter().map(|k| k.id));
+                self.reads.push(ReadReq { keys, cas, single });
+            }
+            Command::Write { key, value, ttl, add_only, noreply } => {
+                if add_only {
+                    self.flush_all();
+                    self.exec_add(key, value, ttl, noreply);
+                } else {
+                    let opts = self.opts_for(ttl);
+                    self.accumulate_write(key.id, value, opts);
+                    match self.proto {
+                        Proto::Memcached => {
+                            if !noreply {
+                                memcached::encode_line(self.out, "STORED");
+                            }
+                        }
+                        Proto::Resp => resp::encode_ok(self.out),
+                    }
+                }
+            }
+            Command::WriteMany { items } => {
+                let opts = self.service.default_opts();
+                for (key, value) in items {
+                    self.accumulate_write(key.id, value, opts);
+                }
+                resp::encode_ok(self.out);
+            }
+            Command::Delete { keys, noreply } => {
+                self.flush_all();
+                self.exec_delete(&keys, noreply);
+            }
+            Command::Touch { key, ttl, noreply } => {
+                self.flush_all();
+                self.exec_touch(&key, ttl, noreply);
+            }
+            // The remaining commands answer immediately, so any open
+            // accumulator must flush first to keep responses in
+            // request order.
+            Command::Ping => {
+                self.flush_all();
+                resp::encode_pong(self.out);
+            }
+            Command::Version => {
+                self.flush_all();
+                memcached::encode_line(self.out, concat!("VERSION ", env!("CARGO_PKG_VERSION")));
+            }
+            Command::Quit => {
+                self.flush_all();
+                if self.proto == Proto::Resp {
+                    resp::encode_ok(self.out);
+                }
+                return DrainOutcome::Close;
+            }
+            Command::Bad { line } => {
+                self.flush_all();
+                match self.proto {
+                    Proto::Memcached => memcached::encode_line(self.out, &line),
+                    Proto::Resp => resp::encode_error(self.out, &line),
+                }
+            }
+        }
+        DrainOutcome::Continue
+    }
+
+    fn opts_for(&self, ttl: Option<Duration>) -> EntryOpts {
+        match ttl {
+            Some(t) => EntryOpts::ttl(t),
+            None => self.service.default_opts(),
+        }
+    }
+
+    /// Add a store to the write accumulator, flushing first if the open
+    /// accumulator is reads or carries different entry options.
+    fn accumulate_write(&mut self, key: u64, value: u64, opts: EntryOpts) {
+        self.flush_reads();
+        if !self.writes.is_empty() && opts != self.write_opts {
+            self.flush_writes();
+        }
+        self.write_opts = opts;
+        self.writes.push((key, value));
+    }
+
+    fn flush_all(&mut self) {
+        self.flush_reads();
+        self.flush_writes();
+    }
+
+    /// Issue the fused `get_batch` and emit each queued read's response
+    /// from its slice of the result, in request order.
+    fn flush_reads(&mut self) {
+        if self.reads.is_empty() {
+            return;
+        }
+        let values = self.service.get_batch(std::mem::take(&mut self.read_keys));
+        let mut at = 0;
+        for req in self.reads.drain(..) {
+            let hits = &values[at..at + req.keys.len()];
+            at += req.keys.len();
+            match self.proto {
+                Proto::Memcached => {
+                    for (key, value) in req.keys.iter().zip(hits) {
+                        if let Some(v) = value {
+                            memcached::encode_value(self.out, &key.text, *v, req.cas);
+                        }
+                    }
+                    memcached::encode_end(self.out);
+                }
+                Proto::Resp => {
+                    if req.single {
+                        resp::encode_bulk(self.out, hits[0]);
+                    } else {
+                        resp::encode_array_header(self.out, hits.len());
+                        for v in hits {
+                            resp::encode_bulk(self.out, *v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Issue the fused `put_batch_with` (responses were emitted at
+    /// accumulation time).
+    fn flush_writes(&mut self) {
+        if self.writes.is_empty() {
+            return;
+        }
+        self.service.put_batch_with(std::mem::take(&mut self.writes), self.write_opts);
+    }
+
+    /// memcached `add`: store only if absent. Executes unfused; the
+    /// presence check and store are not atomic under concurrent writers
+    /// (documented best-effort, like the rest of the RMW surface).
+    fn exec_add(&mut self, key: WireKey, value: u64, ttl: Option<Duration>, noreply: bool) {
+        let line = if self.service.get(key.id).is_some() {
+            "NOT_STORED"
+        } else {
+            let opts = self.opts_for(ttl);
+            self.service.put_with(key.id, value, opts);
+            "STORED"
+        };
+        if !noreply {
+            memcached::encode_line(self.out, line);
+        }
+    }
+
+    /// Delete by tombstone: overwrite with a born-expired entry, which
+    /// probes as a miss and is the victim of first resort. Requires a
+    /// lifetime-capable cache (all k-way variants are; a cache without
+    /// TTL support answers a server error instead of lying).
+    fn exec_delete(&mut self, keys: &[WireKey], noreply: bool) {
+        if !self.service.cache().supports_lifetime() {
+            match self.proto {
+                Proto::Memcached => {
+                    if !noreply {
+                        memcached::encode_line(
+                            self.out,
+                            "SERVER_ERROR delete needs a lifetime-capable cache",
+                        );
+                    }
+                }
+                Proto::Resp => resp::encode_error(
+                    self.out,
+                    "-ERR delete needs a lifetime-capable cache",
+                ),
+            }
+            return;
+        }
+        let mut removed = 0i64;
+        for key in keys {
+            if self.service.get(key.id).is_some() {
+                removed += 1;
+            }
+            self.service.put_with(key.id, 0, EntryOpts::ttl(Duration::ZERO));
+        }
+        match self.proto {
+            Proto::Memcached => {
+                if !noreply {
+                    let line = if removed > 0 { "DELETED" } else { "NOT_FOUND" };
+                    memcached::encode_line(self.out, line);
+                }
+            }
+            Proto::Resp => resp::encode_int(self.out, removed),
+        }
+    }
+
+    /// Touch/EXPIRE: re-store the current value under a new TTL
+    /// (get + put_with; best-effort under concurrency).
+    fn exec_touch(&mut self, key: &WireKey, ttl: Option<Duration>, noreply: bool) {
+        let found = match self.service.get(key.id) {
+            Some(value) => {
+                let opts = match ttl {
+                    Some(t) => EntryOpts::ttl(t),
+                    None => EntryOpts::IMMORTAL,
+                };
+                self.service.put_with(key.id, value, opts);
+                true
+            }
+            None => false,
+        };
+        match self.proto {
+            Proto::Memcached => {
+                if !noreply {
+                    let line = if found { "TOUCHED" } else { "NOT_FOUND" };
+                    memcached::encode_line(self.out, line);
+                }
+            }
+            Proto::Resp => resp::encode_int(self.out, if found { 1 } else { 0 }),
+        }
+    }
+}
+
+/// Result of one [`Connection::handle`] cycle, telling the event loop
+/// how to update its registration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoStatus {
+    /// Connection still open; `false` = deregister and drop.
+    pub open: bool,
+    /// Responses remain queued: register write interest.
+    pub want_write: bool,
+}
+
+/// A served TCP connection: socket + buffers + session.
+#[derive(Debug)]
+pub struct Connection {
+    stream: TcpStream,
+    rbuf: ReadBuf,
+    wq: WriteQueue,
+    session: Session,
+    /// Peer sent EOF (half-close): serve what's buffered, then close.
+    peer_closed: bool,
+    /// Close once the write queue drains (quit / fatal error).
+    closing: bool,
+}
+
+impl Connection {
+    /// Wrap an accepted (nonblocking) stream.
+    pub fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            rbuf: ReadBuf::new(),
+            wq: WriteQueue::new(),
+            session: Session::new(),
+            peer_closed: false,
+            closing: false,
+        }
+    }
+
+    /// The raw fd, for poller registration (`-1` on platforms without
+    /// unix fds — unreachable in practice, since the server fails fast
+    /// there before registering anything).
+    pub fn raw_fd(&self) -> i32 {
+        #[cfg(unix)]
+        {
+            use std::os::fd::AsRawFd;
+            self.stream.as_raw_fd()
+        }
+        #[cfg(not(unix))]
+        {
+            -1
+        }
+    }
+
+    /// One event-loop cycle: flush pending responses, read whatever the
+    /// socket holds (up to [`READ_CYCLE_CAP`]), drain complete requests
+    /// through the fusion path, flush again.
+    pub fn handle(&mut self, readable: bool, service: &CacheService) -> IoStatus {
+        // Flush first: write readiness may be the only reason we woke.
+        if !self.flush() {
+            return IoStatus { open: false, want_write: false };
+        }
+
+        if readable && !self.peer_closed && !self.closing {
+            let mut read = 0;
+            loop {
+                match self.rbuf.fill_from(&mut self.stream) {
+                    Ok(0) => {
+                        self.peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        read += n;
+                        if read >= READ_CYCLE_CAP {
+                            break; // fairness: resume next cycle
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return IoStatus { open: false, want_write: false },
+                }
+            }
+        }
+
+        if !self.closing && !self.rbuf.is_empty() {
+            let mut out = Vec::new();
+            let outcome = self.session.drain(&mut self.rbuf, service, &mut out);
+            self.wq.push(out);
+            if outcome == DrainOutcome::Close {
+                self.closing = true;
+            }
+        }
+
+        if !self.flush() {
+            return IoStatus { open: false, want_write: false };
+        }
+
+        let drained = self.wq.is_empty();
+        if drained && (self.closing || self.peer_closed) {
+            return IoStatus { open: false, want_write: false };
+        }
+        IoStatus { open: true, want_write: !drained }
+    }
+
+    /// Drain the write queue; `false` = connection is dead.
+    fn flush(&mut self) -> bool {
+        self.wq.flush(&mut self.stream).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CacheService, ServiceConfig};
+    use crate::kway::KwWfsc;
+    use crate::policy::Policy;
+    use std::sync::Arc;
+
+    fn service() -> CacheService {
+        let cache = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        CacheService::start(cache, ServiceConfig { workers: 2, ..ServiceConfig::default() })
+    }
+
+    fn run(session: &mut Session, service: &CacheService, wire: &[u8]) -> (Vec<u8>, DrainOutcome) {
+        let mut rbuf = ReadBuf::new();
+        rbuf.push(wire);
+        let mut out = Vec::new();
+        let outcome = session.drain(&mut rbuf, service, &mut out);
+        (out, outcome)
+    }
+
+    #[test]
+    fn memcached_set_then_get_roundtrip() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, oc) = run(&mut s, &svc, b"set 7 0 0 2\r\n42\r\nget 7\r\n");
+        assert_eq!(oc, DrainOutcome::Continue);
+        assert_eq!(out, b"STORED\r\nVALUE 7 0 2\r\n42\r\nEND\r\n");
+        assert_eq!(s.proto(), Some(Proto::Memcached));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pipelined_reads_fuse_but_answer_in_order() {
+        let svc = service();
+        let mut s = Session::new();
+        let (_, _) = run(&mut s, &svc, b"set 1 0 0 2\r\n10\r\nset 2 0 0 2\r\n20\r\n");
+        // Three pipelined gets drain as one get_batch; responses keep
+        // request order (1, missing 99, 2).
+        let (out, _) = run(&mut s, &svc, b"get 1\r\nget 99\r\nget 2\r\n");
+        assert_eq!(
+            out,
+            b"VALUE 1 0 2\r\n10\r\nEND\r\nEND\r\nVALUE 2 0 2\r\n20\r\nEND\r\n".to_vec()
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn interleaved_reads_and_writes_keep_order() {
+        let svc = service();
+        let mut s = Session::new();
+        // write → read of the same key in one pipeline: the read must
+        // observe the write (write batch flushes before the read batch).
+        let wire = b"set 5 0 0 1\r\n9\r\nget 5\r\nset 5 0 0 1\r\n8\r\nget 5\r\n";
+        let (out, _) = run(&mut s, &svc, wire);
+        assert_eq!(
+            out,
+            b"STORED\r\nVALUE 5 0 1\r\n9\r\nEND\r\nSTORED\r\nVALUE 5 0 1\r\n8\r\nEND\r\n".to_vec()
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn memcached_add_delete_touch() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"add 3 0 0 1\r\n7\r\nadd 3 0 0 1\r\n8\r\nget 3\r\n");
+        assert_eq!(out, b"STORED\r\nNOT_STORED\r\nVALUE 3 0 1\r\n7\r\nEND\r\n");
+        let (out, _) = run(&mut s, &svc, b"delete 3\r\ndelete 3\r\nget 3\r\n");
+        assert_eq!(out, b"DELETED\r\nNOT_FOUND\r\nEND\r\n");
+        let (out, _) = run(&mut s, &svc, b"touch 3 60\r\nset 4 0 0 1\r\n5\r\ntouch 4 60\r\n");
+        assert_eq!(out, b"NOT_FOUND\r\nSTORED\r\nTOUCHED\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn immediate_commands_flush_pending_reads_first() {
+        let svc = service();
+        let mut s = Session::new();
+        let (_, _) = run(&mut s, &svc, b"set 1 0 0 1\r\n5\r\n");
+        // `version` answers inline; the pipelined `get` before it must
+        // still answer first.
+        let (out, _) = run(&mut s, &svc, b"get 1\r\nversion\r\n");
+        assert!(
+            out.starts_with(b"VALUE 1 0 1\r\n5\r\nEND\r\nVERSION "),
+            "{:?}",
+            String::from_utf8_lossy(&out)
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn memcached_noreply_suppresses_responses() {
+        let svc = service();
+        let mut s = Session::new();
+        let wire = b"set 1 0 0 1 noreply\r\n5\r\ndelete 1 noreply\r\nget 1\r\n";
+        let (out, _) = run(&mut s, &svc, wire);
+        assert_eq!(out, b"END\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn memcached_quit_closes_after_responses() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, oc) = run(&mut s, &svc, b"version\r\nquit\r\nget 1\r\n");
+        assert_eq!(oc, DrainOutcome::Close);
+        assert!(out.starts_with(b"VERSION "));
+        assert!(!out.ends_with(b"END\r\n"), "commands after quit must not execute");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resp_set_get_mget_roundtrip() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, _) = run(
+            &mut s,
+            &svc,
+            b"*3\r\n$3\r\nSET\r\n$1\r\n1\r\n$2\r\n10\r\n*2\r\n$3\r\nGET\r\n$1\r\n1\r\n",
+        );
+        assert_eq!(out, b"+OK\r\n$2\r\n10\r\n");
+        assert_eq!(s.proto(), Some(Proto::Resp));
+        let (out, _) = run(&mut s, &svc, b"*3\r\n$4\r\nMGET\r\n$1\r\n1\r\n$2\r\n99\r\n");
+        assert_eq!(out, b"*2\r\n$2\r\n10\r\n$-1\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resp_mset_del_expire_ping() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, _) = run(
+            &mut s,
+            &svc,
+            b"*5\r\n$4\r\nMSET\r\n$1\r\n1\r\n$2\r\n10\r\n$1\r\n2\r\n$2\r\n20\r\n",
+        );
+        assert_eq!(out, b"+OK\r\n");
+        let (out, _) = run(&mut s, &svc, b"*3\r\n$3\r\nDEL\r\n$1\r\n1\r\n$2\r\n99\r\n");
+        assert_eq!(out, b":1\r\n");
+        let (out, _) = run(&mut s, &svc, b"*3\r\n$6\r\nEXPIRE\r\n$1\r\n2\r\n$2\r\n60\r\n");
+        assert_eq!(out, b":1\r\n");
+        let (out, _) = run(&mut s, &svc, b"*1\r\n$4\r\nPING\r\n");
+        assert_eq!(out, b"+PONG\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resp_set_with_ttl_expires() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, _) = run(
+            &mut s,
+            &svc,
+            b"*5\r\n$3\r\nSET\r\n$1\r\n9\r\n$1\r\n5\r\n$2\r\nPX\r\n$2\r\n30\r\n",
+        );
+        assert_eq!(out, b"+OK\r\n");
+        let (out, _) = run(&mut s, &svc, b"*2\r\n$3\r\nGET\r\n$1\r\n9\r\n");
+        assert_eq!(out, b"$1\r\n5\r\n");
+        std::thread::sleep(Duration::from_millis(60));
+        let (out, _) = run(&mut s, &svc, b"*2\r\n$3\r\nGET\r\n$1\r\n9\r\n");
+        assert_eq!(out, b"$-1\r\n", "entry must expire after its PX ttl");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fatal_error_reports_and_closes() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, oc) = run(&mut s, &svc, b"set 1 0 0 zz\r\n");
+        assert_eq!(oc, DrainOutcome::Close);
+        assert!(out.starts_with(b"CLIENT_ERROR"), "{:?}", String::from_utf8_lossy(&out));
+        // RESP flavour.
+        let mut s = Session::new();
+        let (out, oc) = run(&mut s, &svc, b"*1\r\n+oops\r\n");
+        assert_eq!(oc, DrainOutcome::Close);
+        assert!(out.starts_with(b"-ERR"), "{:?}", String::from_utf8_lossy(&out));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn partial_tail_stays_buffered_across_drains() {
+        let svc = service();
+        let mut s = Session::new();
+        let mut rbuf = ReadBuf::new();
+        let mut out = Vec::new();
+        rbuf.push(b"set 1 0 0 2\r\n4");
+        assert_eq!(s.drain(&mut rbuf, &svc, &mut out), DrainOutcome::Continue);
+        assert!(out.is_empty(), "no complete request yet");
+        rbuf.push(b"2\r\nget 1\r\n");
+        s.drain(&mut rbuf, &svc, &mut out);
+        assert_eq!(out, b"STORED\r\nVALUE 1 0 2\r\n42\r\nEND\r\n");
+        assert!(rbuf.is_empty());
+        svc.shutdown();
+    }
+}

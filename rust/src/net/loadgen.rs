@@ -1,0 +1,401 @@
+//! Pipelined TCP load generator (`kway loadgen`).
+//!
+//! Drives a running `kway serve` endpoint over either wire protocol
+//! with `--connections C × --pipeline P × --threads T`: each thread
+//! owns its share of the connections, writes P requests per connection
+//! per round (one `write_all`, so the server sees a genuine pipeline),
+//! then collects the P responses — send-all-then-read-all across the
+//! thread's connections keeps every pipeline in flight while earlier
+//! ones are being read. Keys reuse the synthetic workload machinery
+//! (uniform or Zipf over `--keyspace`, the harness's `Rng`/`Zipf`),
+//! a `1/set_every` fraction of requests are stores (optionally with
+//! `--ttl`, exercising the expiry path over the wire), and `--pin`
+//! pins generator threads to cores like the in-process harness.
+//!
+//! Latency: the round-trip of each P-deep pipeline is measured and
+//! recorded as P amortized per-op samples in a per-thread
+//! [`Reservoir`] (10K samples, Snippet 3 methodology), so reported
+//! p50/p99 are per-op figures comparable across pipeline depths.
+//!
+//! The generator is blocking `std::net` on purpose: it needs C
+//! concurrent pipelines, not an event loop, and portable clients keep
+//! the smoke test runnable where the epoll server itself cannot run.
+
+use crate::util::affinity;
+use crate::util::rng::{Rng, Zipf};
+use crate::util::stats::{percentile_u64, Reservoir};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Per-thread reservoir capacity (SNIPPETS.md Snippet 3: 10K per
+/// thread is plenty for stable p50/p95/p99).
+const RESERVOIR_CAP: usize = 10_000;
+
+/// Which wire protocol to speak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireProto {
+    /// Memcached text protocol.
+    Memcached,
+    /// RESP arrays-of-bulk-strings.
+    Resp,
+}
+
+impl WireProto {
+    /// Parse a `--proto` argument.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "memcached" | "mc" => Some(Self::Memcached),
+            "resp" | "redis" => Some(Self::Resp),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (JSON rows, report lines).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Memcached => "memcached",
+            Self::Resp => "resp",
+        }
+    }
+}
+
+/// Load-generator configuration (CLI defaults live in `main.rs`).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:11211`.
+    pub addr: String,
+    /// Wire protocol to speak.
+    pub proto: WireProto,
+    /// Total client connections, dealt round-robin to threads.
+    pub connections: usize,
+    /// Requests per pipeline round per connection.
+    pub pipeline: usize,
+    /// Generator threads.
+    pub threads: usize,
+    /// How long to drive load.
+    pub duration: Duration,
+    /// Keys are drawn from `0..keyspace`.
+    pub keyspace: u64,
+    /// Every `set_every`-th request is a store (0 = read-only).
+    pub set_every: u64,
+    /// TTL attached to stores (`exptime`/`EX`/`PX`); `None` = immortal.
+    pub ttl: Option<Duration>,
+    /// Zipf skew for key sampling; `None` = uniform.
+    pub zipf_alpha: Option<f64>,
+    /// RNG seed (thread t forks seed + t).
+    pub seed: u64,
+    /// Pin generator threads to cores.
+    pub pin: bool,
+}
+
+impl LoadgenConfig {
+    /// The CI smoke preset: small, fast, deterministic — two
+    /// connections, a real pipeline, a keyspace that warms quickly.
+    pub fn smoke(addr: &str, proto: WireProto) -> Self {
+        Self {
+            addr: addr.to_string(),
+            proto,
+            connections: 2,
+            pipeline: 8,
+            threads: 1,
+            duration: Duration::from_millis(300),
+            keyspace: 512,
+            set_every: 4,
+            ttl: None,
+            zipf_alpha: None,
+            seed: 42,
+            pin: false,
+        }
+    }
+}
+
+/// Aggregated outcome of one loadgen run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenResult {
+    /// Requests sent (gets + sets).
+    pub ops: u64,
+    /// Read requests.
+    pub gets: u64,
+    /// Read requests answered with a value.
+    pub hits: u64,
+    /// Store requests.
+    pub sets: u64,
+    /// Error responses (protocol errors, unexpected replies).
+    pub errors: u64,
+    /// Wall-clock seconds of the drive phase.
+    pub secs: f64,
+    /// Amortized per-op latency, 50th percentile (ns).
+    pub p50_ns: u64,
+    /// Amortized per-op latency, 99th percentile (ns).
+    pub p99_ns: u64,
+    /// Amortized per-op latency, mean (ns).
+    pub mean_ns: f64,
+}
+
+impl LoadgenResult {
+    /// Million requests per second.
+    pub fn mops(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.ops as f64 / self.secs / 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Hit ratio over read requests (0 when nothing was read).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets > 0 {
+            self.hits as f64 / self.gets as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Drive `cfg.addr` and aggregate counters + latency percentiles.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenResult> {
+    if cfg.connections == 0 || cfg.pipeline == 0 || cfg.threads == 0 {
+        bail!("connections, pipeline, and threads must all be >= 1");
+    }
+    let threads = cfg.threads.min(cfg.connections);
+    let started = Instant::now();
+    let mut merged = LoadgenResult::default();
+    let mut samples: Vec<u64> = Vec::new();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            handles.push(scope.spawn(move || worker(cfg, t, threads)));
+        }
+        for h in handles {
+            let (stats, reservoir) = h.join().expect("loadgen thread panicked")?;
+            merged.ops += stats.ops;
+            merged.gets += stats.gets;
+            merged.hits += stats.hits;
+            merged.sets += stats.sets;
+            merged.errors += stats.errors;
+            samples.extend_from_slice(reservoir.samples());
+        }
+        Ok(())
+    })?;
+
+    merged.secs = started.elapsed().as_secs_f64();
+    if !samples.is_empty() {
+        merged.mean_ns = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        merged.p50_ns = percentile_u64(&mut samples, 50.0);
+        merged.p99_ns = percentile_u64(&mut samples, 99.0);
+    }
+    Ok(merged)
+}
+
+#[derive(Debug, Default)]
+struct ThreadStats {
+    ops: u64,
+    gets: u64,
+    hits: u64,
+    sets: u64,
+    errors: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ReqKind {
+    Get,
+    Set,
+}
+
+struct ClientConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Request kinds of the in-flight round, for response parsing.
+    kinds: Vec<ReqKind>,
+    /// Reusable request build buffer.
+    wire: Vec<u8>,
+}
+
+fn worker(
+    cfg: &LoadgenConfig,
+    thread_id: usize,
+    threads: usize,
+) -> Result<(ThreadStats, Reservoir)> {
+    if cfg.pin {
+        affinity::pin_to_core(thread_id);
+    }
+    // Connections dealt round-robin: thread t owns conns t, t+T, ...
+    let mut conns = Vec::new();
+    for c in (thread_id..cfg.connections).step_by(threads) {
+        let stream = TcpStream::connect(&cfg.addr)
+            .with_context(|| format!("connecting conn {c} to {}", cfg.addr))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .context("setting read timeout")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        conns.push(ClientConn { stream, reader, kinds: Vec::new(), wire: Vec::new() });
+    }
+
+    let thread_seed = cfg.seed.wrapping_add(thread_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(thread_seed);
+    let zipf = cfg.zipf_alpha.map(|a| Zipf::new(cfg.keyspace.max(1), a));
+    let mut stats = ThreadStats::default();
+    let mut reservoir = Reservoir::new(RESERVOIR_CAP, cfg.seed.wrapping_add(thread_id as u64));
+    let mut req_counter: u64 = 0;
+    let deadline = Instant::now() + cfg.duration;
+
+    while Instant::now() < deadline {
+        // Send phase: queue a full pipeline on every connection.
+        for conn in conns.iter_mut() {
+            conn.wire.clear();
+            conn.kinds.clear();
+            for _ in 0..cfg.pipeline {
+                let key = match &zipf {
+                    Some(z) => z.sample(&mut rng),
+                    None => rng.below(cfg.keyspace.max(1)),
+                };
+                let is_set = cfg.set_every > 0 && req_counter % cfg.set_every == 0;
+                req_counter += 1;
+                if is_set {
+                    encode_set(cfg, &mut conn.wire, key, key + 1);
+                    conn.kinds.push(ReqKind::Set);
+                } else {
+                    encode_get(cfg, &mut conn.wire, key);
+                    conn.kinds.push(ReqKind::Get);
+                }
+            }
+            conn.stream.write_all(&conn.wire).context("writing pipeline")?;
+        }
+
+        // Read phase: collect every connection's responses; record the
+        // pipeline round-trip as amortized per-op samples.
+        for conn in conns.iter_mut() {
+            let round_start = Instant::now();
+            for i in 0..conn.kinds.len() {
+                let kind = conn.kinds[i];
+                match kind {
+                    ReqKind::Get => read_get_response(cfg, conn, &mut stats)?,
+                    ReqKind::Set => read_set_response(cfg, conn, &mut stats)?,
+                }
+            }
+            let per_op = round_start.elapsed().as_nanos() as u64 / cfg.pipeline as u64;
+            for _ in 0..cfg.pipeline {
+                reservoir.record(per_op);
+            }
+            stats.ops += conn.kinds.len() as u64;
+        }
+    }
+    Ok((stats, reservoir))
+}
+
+fn encode_get(cfg: &LoadgenConfig, wire: &mut Vec<u8>, key: u64) {
+    match cfg.proto {
+        WireProto::Memcached => {
+            wire.extend_from_slice(b"get ");
+            wire.extend_from_slice(key.to_string().as_bytes());
+            wire.extend_from_slice(b"\r\n");
+        }
+        WireProto::Resp => {
+            let k = key.to_string();
+            wire.extend_from_slice(
+                format!("*2\r\n$3\r\nGET\r\n${}\r\n{}\r\n", k.len(), k).as_bytes(),
+            );
+        }
+    }
+}
+
+fn encode_set(cfg: &LoadgenConfig, wire: &mut Vec<u8>, key: u64, value: u64) {
+    let k = key.to_string();
+    let v = value.to_string();
+    match cfg.proto {
+        WireProto::Memcached => {
+            // exptime is relative seconds; sub-second TTLs round up so a
+            // TTL'd smoke run still exercises the expiry path.
+            let exptime = cfg.ttl.map(|t| t.as_secs().max(1)).unwrap_or(0);
+            wire.extend_from_slice(
+                format!("set {k} 0 {exptime} {}\r\n{v}\r\n", v.len()).as_bytes(),
+            );
+        }
+        WireProto::Resp => match cfg.ttl {
+            None => {
+                wire.extend_from_slice(
+                    format!("*3\r\n$3\r\nSET\r\n${}\r\n{k}\r\n${}\r\n{v}\r\n", k.len(), v.len())
+                        .as_bytes(),
+                );
+            }
+            Some(t) => {
+                let ms = t.as_millis().max(1).to_string();
+                wire.extend_from_slice(
+                    format!(
+                        "*5\r\n$3\r\nSET\r\n${}\r\n{k}\r\n${}\r\n{v}\r\n$2\r\nPX\r\n${}\r\n{ms}\r\n",
+                        k.len(),
+                        v.len(),
+                        ms.len()
+                    )
+                    .as_bytes(),
+                );
+            }
+        },
+    }
+}
+
+fn read_line(conn: &mut ClientConn) -> Result<String> {
+    let mut line = String::new();
+    let n = conn.reader.read_line(&mut line).context("reading response line")?;
+    if n == 0 {
+        bail!("server closed the connection mid-response");
+    }
+    Ok(line.trim_end().to_string())
+}
+
+fn read_get_response(
+    cfg: &LoadgenConfig,
+    conn: &mut ClientConn,
+    stats: &mut ThreadStats,
+) -> Result<()> {
+    stats.gets += 1;
+    match cfg.proto {
+        WireProto::Memcached => loop {
+            let line = read_line(conn)?;
+            if line == "END" {
+                return Ok(());
+            } else if line.starts_with("VALUE ") {
+                stats.hits += 1;
+                read_line(conn)?; // the data line
+            } else {
+                // ERROR / CLIENT_ERROR / SERVER_ERROR: no END follows.
+                stats.errors += 1;
+                return Ok(());
+            }
+        },
+        WireProto::Resp => {
+            let line = read_line(conn)?;
+            if line == "$-1" {
+                Ok(())
+            } else if line.starts_with('$') {
+                stats.hits += 1;
+                read_line(conn)?; // the bulk payload
+                Ok(())
+            } else {
+                stats.errors += 1;
+                Ok(())
+            }
+        }
+    }
+}
+
+fn read_set_response(
+    cfg: &LoadgenConfig,
+    conn: &mut ClientConn,
+    stats: &mut ThreadStats,
+) -> Result<()> {
+    stats.sets += 1;
+    let line = read_line(conn)?;
+    let ok = match cfg.proto {
+        WireProto::Memcached => line == "STORED",
+        WireProto::Resp => line == "+OK",
+    };
+    if !ok {
+        stats.errors += 1;
+    }
+    Ok(())
+}

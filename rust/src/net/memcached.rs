@@ -1,0 +1,437 @@
+//! Memcached text-protocol codec.
+//!
+//! Supported subset (DESIGN.md §Network front end): `get`/`gets`
+//! (multi-key), `set`, `add`, `delete`, `touch`, `version`, `quit`,
+//! all with `noreply` where the protocol defines it. `cas`/`incr`/
+//! `decr`/`append`/`prepend` answer `ERROR` like any unknown command.
+//!
+//! The decoder is *stateless across calls*: a storage command is two
+//! frames (command line + `<bytes>\r\n`-terminated data block), and
+//! when the block has not fully arrived the decoder consumes nothing —
+//! the connection's [`super::buf::ReadBuf`] retains the header line and
+//! the next read reparses it (a handful of bytes; re-framing state
+//! would buy nothing). Malformed storage headers with a parseable byte
+//! count are re-framed by discarding the announced data block (the
+//! connection survives with `CLIENT_ERROR`); an unparseable byte count
+//! loses framing and is fatal.
+//!
+//! Deviations from memcached, chosen for a fixed-width `u64` cache and
+//! documented here and in DESIGN.md: `exptime` is always relative
+//! seconds (no unix-timestamp reinterpretation past 30 days); flags are
+//! accepted but not stored (echoed as `0`); the `gets` cas token is the
+//! value itself (values are immutable words, so value-equality is
+//! exactly cas-equality).
+
+use super::{
+    exptime_to_ttl, parse_value, Command, FatalProtocolError, WireKey, MAX_KEY_LEN, MAX_LINE_LEN,
+    MAX_VALUE_LEN,
+};
+
+/// Memcached text decoder (kept as a struct for codec-API symmetry with
+/// future stateful protocols; currently carries no state).
+#[derive(Debug, Default)]
+pub struct MemcachedDecoder;
+
+impl MemcachedDecoder {
+    /// A fresh decoder.
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Try to decode one command from the front of `buf`. Returns the
+    /// command plus the bytes consumed, `Ok(None)` when the frame is
+    /// incomplete (consume nothing, wait for more bytes), or a fatal
+    /// error when framing is lost.
+    pub fn decode(&mut self, buf: &[u8]) -> Result<Option<(Command, usize)>, FatalProtocolError> {
+        let Some(nl) = buf.iter().position(|&b| b == b'\n') else {
+            if buf.len() > MAX_LINE_LEN {
+                return Err(FatalProtocolError(format!(
+                    "command line exceeds {MAX_LINE_LEN} bytes without a newline"
+                )));
+            }
+            return Ok(None);
+        };
+        let consumed = nl + 1;
+        let mut line = &buf[..nl];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+
+        let mut tokens = line.split(|&b| b == b' ').filter(|t| !t.is_empty());
+        let Some(verb) = tokens.next() else {
+            // Blank line: harmless, answer ERROR like memcached does.
+            return Ok(Some((Command::Bad { line: "ERROR".into() }, consumed)));
+        };
+        let rest: Vec<&[u8]> = tokens.collect();
+
+        let cmd = match verb {
+            b"get" | b"gets" => decode_get(verb == b"gets", &rest),
+            b"set" | b"add" => {
+                return decode_storage(verb == b"add", &rest, consumed, buf);
+            }
+            b"delete" => decode_delete(&rest),
+            b"touch" => decode_touch(&rest),
+            b"version" => Command::Version,
+            b"quit" => Command::Quit,
+            _ => Command::Bad { line: "ERROR".into() },
+        };
+        Ok(Some((cmd, consumed)))
+    }
+}
+
+fn decode_get(cas: bool, rest: &[&[u8]]) -> Command {
+    if rest.is_empty() {
+        return Command::Bad { line: "ERROR".into() };
+    }
+    let mut keys = Vec::with_capacity(rest.len());
+    for raw in rest {
+        if raw.len() > MAX_KEY_LEN {
+            return Command::Bad { line: "CLIENT_ERROR key too long".into() };
+        }
+        keys.push(WireKey::from_bytes(raw));
+    }
+    Command::Read { keys, cas, single: false }
+}
+
+fn decode_delete(rest: &[&[u8]]) -> Command {
+    // delete <key> [noreply]
+    let noreply = rest.last() == Some(&&b"noreply"[..]);
+    let args = if noreply { &rest[..rest.len() - 1] } else { rest };
+    match args {
+        [key] if key.len() <= MAX_KEY_LEN => {
+            Command::Delete { keys: vec![WireKey::from_bytes(key)], noreply }
+        }
+        [_key] => Command::Bad { line: "CLIENT_ERROR key too long".into() },
+        _ => Command::Bad { line: "ERROR".into() },
+    }
+}
+
+fn decode_touch(rest: &[&[u8]]) -> Command {
+    // touch <key> <exptime> [noreply]
+    let noreply = rest.last() == Some(&&b"noreply"[..]);
+    let args = if noreply { &rest[..rest.len() - 1] } else { rest };
+    match args {
+        [key, exptime] => {
+            if key.len() > MAX_KEY_LEN {
+                return Command::Bad { line: "CLIENT_ERROR key too long".into() };
+            }
+            let Some(exp) = parse_i64(exptime) else {
+                return Command::Bad { line: "CLIENT_ERROR invalid exptime argument".into() };
+            };
+            Command::Touch { key: WireKey::from_bytes(key), ttl: exptime_to_ttl(exp), noreply }
+        }
+        _ => Command::Bad { line: "ERROR".into() },
+    }
+}
+
+/// `set|add <key> <flags> <exptime> <bytes> [noreply]` plus its data
+/// block. The byte count frames the block, so it must parse even when
+/// the rest of the header is bad; if it doesn't, the stream is lost.
+fn decode_storage(
+    add_only: bool,
+    rest: &[&[u8]],
+    header_len: usize,
+    buf: &[u8],
+) -> Result<Option<(Command, usize)>, FatalProtocolError> {
+    let noreply = rest.last() == Some(&&b"noreply"[..]);
+    let args = if noreply { &rest[..rest.len() - 1] } else { rest };
+    let [key, _flags, exptime, bytes] = args else {
+        // No trustworthy byte count → cannot skip the data block.
+        return Err(FatalProtocolError(
+            "malformed storage command (cannot re-frame data block)".into(),
+        ));
+    };
+    let Some(nbytes) = parse_value(bytes).map(|n| n as usize) else {
+        return Err(FatalProtocolError("unparseable byte count in storage command".into()));
+    };
+    if nbytes > MAX_VALUE_LEN {
+        return Err(FatalProtocolError(format!(
+            "data block of {nbytes} bytes exceeds the {MAX_VALUE_LEN}-byte cap"
+        )));
+    }
+
+    // Wait (consuming nothing) until the whole block + CRLF is buffered.
+    let total = header_len + nbytes + 2;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let data = &buf[header_len..header_len + nbytes];
+    if &buf[header_len + nbytes..total] != b"\r\n" {
+        return Err(FatalProtocolError(
+            "data block not terminated by CRLF (bad byte count?)".into(),
+        ));
+    }
+
+    // Header errors are detected *after* framing so the connection
+    // survives them: the block is consumed either way.
+    let cmd = if key.len() > MAX_KEY_LEN {
+        Command::Bad { line: "CLIENT_ERROR key too long".into() }
+    } else if let Some(exp) = parse_i64(exptime) {
+        match parse_value(data) {
+            Some(value) => Command::Write {
+                key: WireKey::from_bytes(key),
+                value,
+                ttl: exptime_to_ttl(exp),
+                add_only,
+                noreply,
+            },
+            None => Command::Bad {
+                line: "CLIENT_ERROR bad data chunk (value must be a decimal u64)".into(),
+            },
+        }
+    } else {
+        Command::Bad { line: "CLIENT_ERROR invalid exptime argument".into() }
+    };
+    Ok(Some((cmd, total)))
+}
+
+fn parse_i64(bytes: &[u8]) -> Option<i64> {
+    std::str::from_utf8(bytes).ok().and_then(|s| s.parse::<i64>().ok())
+}
+
+/// Append a `VALUE` response block for one hit. `cas` echoes the value
+/// as the cas token (values are immutable words; see module docs).
+pub fn encode_value(out: &mut Vec<u8>, key_text: &[u8], value: u64, cas: bool) {
+    let body = value.to_string();
+    out.extend_from_slice(b"VALUE ");
+    out.extend_from_slice(key_text);
+    out.extend_from_slice(b" 0 ");
+    out.extend_from_slice(body.len().to_string().as_bytes());
+    if cas {
+        out.push(b' ');
+        out.extend_from_slice(body.as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append the `END` line that closes a `get`/`gets` response.
+pub fn encode_end(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Append a bare response line (`STORED`, `DELETED`, `ERROR`, …) with
+/// its CRLF.
+pub fn encode_line(out: &mut Vec<u8>, line: &str) {
+    out.extend_from_slice(line.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn decode_all(dec: &mut MemcachedDecoder, mut buf: &[u8]) -> Vec<Command> {
+        let mut out = Vec::new();
+        while let Some((cmd, n)) = dec.decode(buf).expect("no fatal error") {
+            buf = &buf[n..];
+            out.push(cmd);
+        }
+        out
+    }
+
+    #[test]
+    fn get_single_and_multi() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"get 7\r\nget 1 2 3\r\ngets 9\r\n");
+        assert_eq!(cmds.len(), 3);
+        match &cmds[0] {
+            Command::Read { keys, cas, single } => {
+                assert_eq!(keys[0].id, 7);
+                assert!(!cas && !single);
+            }
+            c => panic!("expected Read, got {c:?}"),
+        }
+        match &cmds[1] {
+            Command::Read { keys, .. } => {
+                assert_eq!(keys.iter().map(|k| k.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+            }
+            c => panic!("expected Read, got {c:?}"),
+        }
+        assert!(matches!(&cmds[2], Command::Read { cas: true, .. }));
+    }
+
+    #[test]
+    fn set_roundtrip_with_ttl_and_noreply() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"set 5 0 30 2\r\n42\r\nset 6 0 0 1 noreply\r\n9\r\n");
+        assert_eq!(cmds.len(), 2);
+        assert_eq!(
+            cmds[0],
+            Command::Write {
+                key: WireKey::from_bytes(b"5"),
+                value: 42,
+                ttl: Some(Duration::from_secs(30)),
+                add_only: false,
+                noreply: false,
+            }
+        );
+        assert_eq!(
+            cmds[1],
+            Command::Write {
+                key: WireKey::from_bytes(b"6"),
+                value: 9,
+                ttl: None,
+                add_only: false,
+                noreply: true,
+            }
+        );
+    }
+
+    #[test]
+    fn add_sets_the_flag() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"add 1 0 0 1\r\n5\r\n");
+        assert!(matches!(&cmds[0], Command::Write { add_only: true, .. }));
+    }
+
+    #[test]
+    fn split_reads_reassemble_across_arbitrary_boundaries() {
+        // Feed one byte at a time: every frame straddles "reads".
+        let stream = b"set 10 0 0 3\r\n123\r\nget 10 11\r\ndelete 10\r\n";
+        let mut dec = MemcachedDecoder::new();
+        let mut buf = Vec::new();
+        let mut cmds = Vec::new();
+        for &b in stream.iter() {
+            buf.push(b);
+            while let Some((cmd, n)) = dec.decode(&buf).unwrap() {
+                buf.drain(..n);
+                cmds.push(cmd);
+            }
+        }
+        assert!(buf.is_empty());
+        assert_eq!(cmds.len(), 3);
+        assert!(matches!(&cmds[0], Command::Write { value: 123, .. }));
+        assert!(matches!(&cmds[1], Command::Read { .. }));
+        assert!(matches!(&cmds[2], Command::Delete { .. }));
+    }
+
+    #[test]
+    fn incomplete_frames_consume_nothing() {
+        let mut dec = MemcachedDecoder::new();
+        assert_eq!(dec.decode(b"get 1").unwrap(), None);
+        assert_eq!(dec.decode(b"").unwrap(), None);
+        // A storage command with a short data block stays unconsumed
+        // until the whole block (and CRLF) has arrived.
+        assert_eq!(dec.decode(b"set 1 0 0 5\r\n12").unwrap(), None);
+        assert_eq!(dec.decode(b"set 1 0 0 5\r\n12345").unwrap(), None);
+        let (cmd, n) = dec.decode(b"set 1 0 0 5\r\n12345\r\n").unwrap().unwrap();
+        assert!(matches!(cmd, Command::Write { value: 12345, .. }));
+        assert_eq!(n, 20);
+    }
+
+    #[test]
+    fn non_numeric_value_is_a_client_error_not_fatal() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"set 1 0 0 3\r\nabc\r\nget 1\r\n");
+        assert!(
+            matches!(&cmds[0], Command::Bad { line } if line.starts_with("CLIENT_ERROR")),
+            "{cmds:?}"
+        );
+        // Framing survived: the following get still parses.
+        assert!(matches!(&cmds[1], Command::Read { .. }));
+    }
+
+    #[test]
+    fn bad_exptime_discards_data_block_and_reframes() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"set 1 0 zzz 3\r\nxyz\r\nversion\r\n");
+        assert!(matches!(&cmds[0], Command::Bad { line } if line.contains("exptime")));
+        assert!(matches!(&cmds[1], Command::Version));
+    }
+
+    #[test]
+    fn oversized_key_is_rejected_per_command() {
+        let mut dec = MemcachedDecoder::new();
+        let big = vec![b'k'; MAX_KEY_LEN + 1];
+        let mut wire = b"get ".to_vec();
+        wire.extend_from_slice(&big);
+        wire.extend_from_slice(b"\r\nget 1\r\n");
+        let cmds = decode_all(&mut dec, &wire);
+        assert!(matches!(&cmds[0], Command::Bad { line } if line.contains("key too long")));
+        assert!(matches!(&cmds[1], Command::Read { .. }));
+    }
+
+    #[test]
+    fn oversized_set_key_reframes_via_byte_count() {
+        let mut dec = MemcachedDecoder::new();
+        let big = vec![b'k'; MAX_KEY_LEN + 1];
+        let mut wire = b"set ".to_vec();
+        wire.extend_from_slice(&big);
+        wire.extend_from_slice(b" 0 0 3\r\nxyz\r\nversion\r\n");
+        let cmds = decode_all(&mut dec, &wire);
+        assert!(matches!(&cmds[0], Command::Bad { line } if line.contains("key too long")));
+        assert!(matches!(&cmds[1], Command::Version));
+    }
+
+    #[test]
+    fn unknown_command_answers_error() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"incr 1 5\r\nstats\r\n");
+        assert_eq!(cmds.len(), 2);
+        for c in &cmds {
+            assert!(matches!(c, Command::Bad { line } if line == "ERROR"));
+        }
+    }
+
+    #[test]
+    fn fatal_errors_lose_the_connection() {
+        // Unparseable byte count: framing is unrecoverable.
+        let mut dec = MemcachedDecoder::new();
+        assert!(dec.decode(b"set 1 0 0 huge\r\n").is_err());
+
+        // Data block bigger than the cap.
+        let mut dec = MemcachedDecoder::new();
+        assert!(dec.decode(b"set 1 0 0 999999\r\n").is_err());
+
+        // Endless line with no newline.
+        let mut dec = MemcachedDecoder::new();
+        let long = vec![b'a'; MAX_LINE_LEN + 2];
+        assert!(dec.decode(&long).is_err());
+
+        // Byte count that does not match the actual CRLF position.
+        let mut dec = MemcachedDecoder::new();
+        assert!(dec.decode(b"set 1 0 0 2\r\n12345\r\n").is_err());
+    }
+
+    #[test]
+    fn delete_touch_version_quit_parse() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"delete 4 noreply\r\ntouch 4 60\r\ntouch 4 0\r\nquit\r\n");
+        assert_eq!(
+            cmds[0],
+            Command::Delete { keys: vec![WireKey::from_bytes(b"4")], noreply: true }
+        );
+        assert_eq!(
+            cmds[1],
+            Command::Touch {
+                key: WireKey::from_bytes(b"4"),
+                ttl: Some(Duration::from_secs(60)),
+                noreply: false,
+            }
+        );
+        assert_eq!(
+            cmds[2],
+            Command::Touch { key: WireKey::from_bytes(b"4"), ttl: None, noreply: false }
+        );
+        assert_eq!(cmds[3], Command::Quit);
+    }
+
+    #[test]
+    fn encoders_produce_protocol_lines() {
+        let mut out = Vec::new();
+        encode_value(&mut out, b"12", 345, false);
+        encode_end(&mut out);
+        assert_eq!(out, b"VALUE 12 0 3\r\n345\r\nEND\r\n");
+
+        let mut out = Vec::new();
+        encode_value(&mut out, b"12", 345, true);
+        assert_eq!(out, b"VALUE 12 0 3 345\r\n345\r\n");
+
+        let mut out = Vec::new();
+        encode_line(&mut out, "STORED");
+        assert_eq!(out, b"STORED\r\n");
+    }
+}

@@ -1,0 +1,263 @@
+//! TCP wire-protocol front end: pipelined memcached/RESP serving fused
+//! with the batched cache path.
+//!
+//! The paper's throughput claims are about *serving* concurrent traffic;
+//! this module gives the reproduction its network path. `kway serve
+//! --listen <addr>` runs a non-blocking TCP server that speaks two
+//! protocols on the same port (auto-detected from the first byte of a
+//! connection: `*` opens a RESP frame, anything else is a memcached text
+//! line):
+//!
+//! * **memcached text** — `get`/`gets` (multi-key), `set`, `add`,
+//!   `delete`, `touch`, `version`, `quit`, with `noreply`;
+//! * **RESP** (the redis serialization protocol, arrays-of-bulk-strings
+//!   subset) — `GET`, `SET [EX s|PX ms]`, `MGET`, `MSET`, `DEL`,
+//!   `EXPIRE`, `PING`, `QUIT`.
+//!
+//! The core performance move is **pipeline→batch fusion** ([`conn`]):
+//! one socket read drains *every* complete pipelined request into a
+//! command stream, and consecutive reads (resp. writes) are accumulated
+//! and executed as a single [`CacheService::get_batch`] /
+//! [`CacheService::put_batch_with`] scatter/gather call — so TCP
+//! pipelining composes with the cache's prefetching SIMD-probed batched
+//! path, admission, TTL and resize. Responses are queued per connection
+//! and flushed with vectored `writev` ([`buf::WriteQueue`]).
+//!
+//! The event loop ([`server`]) runs on raw-syscall epoll ([`poll`], in
+//! the style of [`crate::util::affinity`] — the offline build has no
+//! `libc`/`mio`), one poller per io thread, connections handed out
+//! round-robin by a non-blocking acceptor. [`poll::Poller`] is the
+//! backend seam: an io_uring flavour can slot in behind the same
+//! five-call surface without touching the connection layer. Off
+//! linux/x86_64 the server honestly reports itself unsupported; the
+//! codecs, buffers and the load generator ([`loadgen`]) are pure
+//! `std::net` and run everywhere.
+//!
+//! Wire keys and values map onto the crate's `u64`-keyed caches as
+//! follows (DESIGN.md §Network front end): a key that is plain ASCII
+//! decimal (and < 2^63) is used numerically, any other key is hashed
+//! (xxh64) with the top bit forced so the two spaces cannot collide;
+//! values must be ASCII-decimal `u64` — anything else is a client
+//! error, because the cache stores fixed-width words (the variable-size
+//! value store is future work, see ROADMAP.md).
+//!
+//! [`CacheService::get_batch`]: crate::coordinator::CacheService::get_batch
+//! [`CacheService::put_batch_with`]: crate::coordinator::CacheService::put_batch_with
+
+pub mod buf;
+pub mod conn;
+pub mod loadgen;
+pub mod memcached;
+pub mod poll;
+pub mod resp;
+pub mod server;
+
+pub use conn::Connection;
+pub use loadgen::{LoadgenConfig, LoadgenResult, WireProto};
+pub use server::{Server, ServerConfig};
+
+use std::time::Duration;
+
+/// Longest accepted key, in bytes (memcached's protocol limit, adopted
+/// for both protocols so one cap bounds every per-key allocation).
+pub const MAX_KEY_LEN: usize = 250;
+
+/// Longest accepted command line (memcached) before the decoder declares
+/// the stream desynchronized and drops the connection.
+pub const MAX_LINE_LEN: usize = 8 * 1024;
+
+/// Largest accepted `set` data block / RESP bulk string. Values are
+/// ASCII-decimal `u64` (≤ 20 digits), so this is generous; it exists to
+/// bound memory for malformed or hostile frames, not to fit real values.
+pub const MAX_VALUE_LEN: usize = 1024;
+
+/// A key as it appeared on the wire, plus its `u64` cache identity.
+///
+/// The original bytes are retained because memcached `VALUE` response
+/// lines must echo the key text verbatim; the cache itself only ever
+/// sees [`WireKey::id`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireKey {
+    /// The cache key: the decimal value for numeric keys, else a hash
+    /// with the top bit forced (see [`WireKey::from_bytes`]).
+    pub id: u64,
+    /// The verbatim wire bytes, echoed in memcached `VALUE` lines.
+    pub text: Vec<u8>,
+}
+
+impl WireKey {
+    /// Map wire bytes to a cache key. ASCII-decimal keys below 2^63 map
+    /// to their numeric value (so `kway loadgen` and the in-process
+    /// harnesses address the same keyspace); everything else maps to
+    /// `xxh64(bytes) | 1<<63` — the forced top bit keeps hashed keys
+    /// disjoint from the numeric space, at the cost of (astronomically
+    /// unlikely) hash collisions *within* the non-numeric space.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let numeric = std::str::from_utf8(bytes)
+            .ok()
+            .filter(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()))
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&n| n < (1u64 << 63));
+        let id = match numeric {
+            Some(n) => n,
+            None => crate::util::hash::xxh64(bytes, 0xF00D) | (1u64 << 63),
+        };
+        Self { id, text: bytes.to_vec() }
+    }
+}
+
+/// Parse an ASCII-decimal `u64` value payload (the only value encoding
+/// the fixed-width cache words can hold).
+pub fn parse_value(bytes: &[u8]) -> Option<u64> {
+    std::str::from_utf8(bytes)
+        .ok()
+        .filter(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()))
+        .and_then(|s| s.parse::<u64>().ok())
+}
+
+/// One decoded request, shared by both protocol codecs so the fusion
+/// executor ([`conn`]) is written once.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    /// A read of one or more keys: memcached `get`/`gets`, RESP
+    /// `GET`/`MGET`. Consecutive `Read`s fuse into one `get_batch`.
+    Read {
+        /// Keys in request order.
+        keys: Vec<WireKey>,
+        /// memcached `gets`: echo a cas token on each `VALUE` line.
+        cas: bool,
+        /// RESP `GET` (single bulk reply) vs `MGET` (array reply).
+        single: bool,
+    },
+    /// An unconditional store: memcached `set`, RESP `SET`. Consecutive
+    /// `Write`s with identical effective options fuse into one
+    /// `put_batch_with`.
+    Write {
+        /// The key to store under.
+        key: WireKey,
+        /// The (decimal `u64`) value.
+        value: u64,
+        /// Entry TTL; `None` defers to the service default.
+        ttl: Option<Duration>,
+        /// memcached `add`: store only if the key is absent (read-
+        /// modify-write; executes unfused).
+        add_only: bool,
+        /// memcached `noreply`: suppress the response line.
+        noreply: bool,
+    },
+    /// RESP `MSET`: unconditional stores of several pairs (one fused
+    /// `put_batch_with`).
+    WriteMany {
+        /// `(key, value)` pairs in request order.
+        items: Vec<(WireKey, u64)>,
+    },
+    /// memcached `delete` (one key) / RESP `DEL` (many): tombstone
+    /// present keys with a born-expired entry (DESIGN.md §Network
+    /// front end).
+    Delete {
+        /// Keys to remove.
+        keys: Vec<WireKey>,
+        /// memcached `noreply`.
+        noreply: bool,
+    },
+    /// memcached `touch` / RESP `EXPIRE`: re-stamp a present entry's
+    /// TTL (get + put_with; best-effort under concurrency).
+    Touch {
+        /// The key to re-stamp.
+        key: WireKey,
+        /// New TTL; `None` makes the entry immortal (memcached
+        /// `touch <key> 0`).
+        ttl: Option<Duration>,
+        /// memcached `noreply`.
+        noreply: bool,
+    },
+    /// RESP `PING` → `+PONG`.
+    Ping,
+    /// memcached `version` → `VERSION <crate version>`.
+    Version,
+    /// Close the connection after flushing queued responses.
+    Quit,
+    /// A recoverable protocol error: respond with `line` and keep the
+    /// connection (framing was re-synchronized by the decoder).
+    Bad {
+        /// The full response line, without the trailing CRLF.
+        line: String,
+    },
+}
+
+/// A protocol violation after which the byte stream cannot be re-framed
+/// (overlong line, corrupt RESP header, …). The connection reports the
+/// error and closes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FatalProtocolError(pub String);
+
+impl std::fmt::Display for FatalProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fatal protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for FatalProtocolError {}
+
+/// Convert a memcached `exptime` (relative seconds) to an entry TTL:
+/// `0` = immortal, negative = already expired (a born-dead tombstone).
+/// Deviation from memcached: values > 30 days are *not* reinterpreted
+/// as absolute unix timestamps — the harness has no use for wall-clock
+/// expiry and the relative reading keeps loadgen runs reproducible.
+pub fn exptime_to_ttl(exptime: i64) -> Option<Duration> {
+    match exptime {
+        0 => None,
+        t if t < 0 => Some(Duration::ZERO),
+        t => Some(Duration::from_secs(t as u64)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_keys_map_to_their_value() {
+        assert_eq!(WireKey::from_bytes(b"0").id, 0);
+        assert_eq!(WireKey::from_bytes(b"42").id, 42);
+        assert_eq!(WireKey::from_bytes(b"9007199254740993").id, 9007199254740993);
+        assert_eq!(WireKey::from_bytes(b"123").text, b"123".to_vec());
+    }
+
+    #[test]
+    fn non_numeric_keys_hash_into_the_high_space() {
+        for raw in [&b"user:42"[..], b"", b"-1", b"+5", b"18446744073709551615", b"abc"] {
+            let k = WireKey::from_bytes(raw);
+            assert!(k.id >= (1u64 << 63), "{raw:?} must land in the hashed space");
+        }
+        // Same bytes, same id; different bytes, (almost surely) different id.
+        assert_eq!(WireKey::from_bytes(b"user:42").id, WireKey::from_bytes(b"user:42").id);
+        assert_ne!(WireKey::from_bytes(b"user:42").id, WireKey::from_bytes(b"user:43").id);
+    }
+
+    #[test]
+    fn numeric_keys_at_the_boundary() {
+        // 2^63 - 1 is the last direct-mapped key; 2^63 and up hash.
+        assert_eq!(WireKey::from_bytes(b"9223372036854775807").id, (1u64 << 63) - 1);
+        assert!(WireKey::from_bytes(b"9223372036854775808").id >= (1u64 << 63));
+    }
+
+    #[test]
+    fn value_parsing_is_strict_decimal() {
+        assert_eq!(parse_value(b"0"), Some(0));
+        assert_eq!(parse_value(b"18446744073709551615"), Some(u64::MAX));
+        assert_eq!(parse_value(b""), None);
+        assert_eq!(parse_value(b"-1"), None);
+        assert_eq!(parse_value(b"+1"), None);
+        assert_eq!(parse_value(b"1.5"), None);
+        assert_eq!(parse_value(b"abc"), None);
+        assert_eq!(parse_value(b"18446744073709551616"), None); // u64::MAX + 1
+    }
+
+    #[test]
+    fn exptime_mapping() {
+        assert_eq!(exptime_to_ttl(0), None);
+        assert_eq!(exptime_to_ttl(-1), Some(Duration::ZERO));
+        assert_eq!(exptime_to_ttl(5), Some(Duration::from_secs(5)));
+    }
+}

@@ -1,0 +1,477 @@
+//! RESP (redis serialization protocol) codec — the arrays-of-bulk-
+//! strings request subset.
+//!
+//! Supported commands (case-insensitive): `PING`, `GET`, `SET key value
+//! [EX seconds | PX milliseconds]`, `MGET`, `MSET`, `DEL` (multi-key,
+//! replies the removed count), `EXPIRE key seconds` (replies `:1`/`:0`),
+//! `QUIT`. Everything else answers `-ERR unknown command`.
+//!
+//! Requests must be RESP arrays of bulk strings (`*n` then `$len` pairs)
+//! — the inline-command form is not accepted; a connection whose first
+//! byte is not `*` is handled as memcached text by the protocol sniffer
+//! in [`super::conn`]. The parser is stateless: an incomplete frame
+//! consumes nothing and is retried when more bytes arrive; structurally
+//! corrupt framing (non-`*` start, bad length digits, missing CRLF,
+//! oversized counts) is fatal because the stream cannot be re-framed.
+
+use super::{parse_value, Command, FatalProtocolError, WireKey, MAX_KEY_LEN, MAX_VALUE_LEN};
+
+/// Max elements in one request array (MSET of 512 pairs fits).
+const MAX_ARRAY: usize = 1024;
+
+/// Stateless RESP request decoder (struct for codec-API symmetry).
+#[derive(Debug, Default)]
+pub struct RespDecoder;
+
+impl RespDecoder {
+    /// A fresh decoder.
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Try to decode one request array from the front of `buf`.
+    /// `Ok(None)` = incomplete (consume nothing); `Err` = framing lost.
+    pub fn decode(&mut self, buf: &[u8]) -> Result<Option<(Command, usize)>, FatalProtocolError> {
+        let Some((args, consumed)) = parse_array(buf)? else {
+            return Ok(None);
+        };
+        Ok(Some((interpret(&args), consumed)))
+    }
+}
+
+/// Parse `*n\r\n` followed by `n` bulk strings. Returns the argument
+/// vector and the total bytes consumed, or `None` if incomplete.
+fn parse_array(buf: &[u8]) -> Result<Option<(Vec<Vec<u8>>, usize)>, FatalProtocolError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] != b'*' {
+        return Err(FatalProtocolError(format!(
+            "expected '*' to open a RESP array, got byte {:#04x}",
+            buf[0]
+        )));
+    }
+    let Some((count, mut pos)) = parse_length(&buf[1..], 1)? else {
+        return Ok(None);
+    };
+    if count == 0 || count > MAX_ARRAY {
+        return Err(FatalProtocolError(format!(
+            "RESP array of {count} elements outside 1..={MAX_ARRAY}"
+        )));
+    }
+    let mut args = Vec::with_capacity(count);
+    for _ in 0..count {
+        if pos >= buf.len() {
+            return Ok(None);
+        }
+        if buf[pos] != b'$' {
+            return Err(FatalProtocolError(format!(
+                "expected '$' bulk string, got byte {:#04x}",
+                buf[pos]
+            )));
+        }
+        let Some((len, data_start)) = parse_length(&buf[pos + 1..], pos + 1)? else {
+            return Ok(None);
+        };
+        if len > MAX_VALUE_LEN.max(MAX_KEY_LEN) {
+            return Err(FatalProtocolError(format!("bulk string of {len} bytes exceeds caps")));
+        }
+        let data_end = data_start + len;
+        if buf.len() < data_end + 2 {
+            return Ok(None);
+        }
+        if &buf[data_end..data_end + 2] != b"\r\n" {
+            return Err(FatalProtocolError("bulk string not terminated by CRLF".into()));
+        }
+        args.push(buf[data_start..data_end].to_vec());
+        pos = data_end + 2;
+    }
+    Ok(Some((args, pos)))
+}
+
+/// Parse a decimal length followed by CRLF starting at `buf[0]`;
+/// `base` is the absolute offset of `buf[0]` in the original frame.
+/// Returns `(length, absolute offset past the CRLF)`.
+fn parse_length(
+    buf: &[u8],
+    base: usize,
+) -> Result<Option<(usize, usize)>, FatalProtocolError> {
+    // Longest sane length is 7 digits (caps are ≤ MAX_VALUE_LEN); a
+    // digit run past that is corrupt, not incomplete.
+    const MAX_DIGITS: usize = 7;
+    let mut n: usize = 0;
+    let mut i = 0;
+    while i < buf.len() && buf[i].is_ascii_digit() {
+        if i >= MAX_DIGITS {
+            return Err(FatalProtocolError("unreasonably long RESP length field".into()));
+        }
+        n = n * 10 + (buf[i] - b'0') as usize;
+        i += 1;
+    }
+    if i == 0 && !buf.is_empty() {
+        return Err(FatalProtocolError(format!(
+            "RESP length must start with a digit, got byte {:#04x}",
+            buf[0]
+        )));
+    }
+    // Need the CRLF after the digits.
+    if buf.len() < i + 2 {
+        return Ok(None);
+    }
+    if &buf[i..i + 2] != b"\r\n" {
+        return Err(FatalProtocolError("RESP length not terminated by CRLF".into()));
+    }
+    Ok(Some((n, base + i + 2)))
+}
+
+/// Map a parsed argument vector onto the shared [`Command`] enum.
+fn interpret(args: &[Vec<u8>]) -> Command {
+    let verb = args[0].to_ascii_uppercase();
+    match verb.as_slice() {
+        b"PING" => Command::Ping,
+        b"QUIT" => Command::Quit,
+        b"GET" => match args {
+            [_, key] => match wire_key(key) {
+                Ok(k) => Command::Read { keys: vec![k], cas: false, single: true },
+                Err(e) => e,
+            },
+            _ => err("wrong number of arguments for 'GET'"),
+        },
+        b"MGET" => {
+            if args.len() < 2 {
+                return err("wrong number of arguments for 'MGET'");
+            }
+            let mut keys = Vec::with_capacity(args.len() - 1);
+            for raw in &args[1..] {
+                match wire_key(raw) {
+                    Ok(k) => keys.push(k),
+                    Err(e) => return e,
+                }
+            }
+            Command::Read { keys, cas: false, single: false }
+        }
+        b"SET" => interpret_set(args),
+        b"MSET" => {
+            if args.len() < 3 || args.len() % 2 == 0 {
+                return err("wrong number of arguments for 'MSET'");
+            }
+            let mut items = Vec::with_capacity(args.len() / 2);
+            for pair in args[1..].chunks_exact(2) {
+                let key = match wire_key(&pair[0]) {
+                    Ok(k) => k,
+                    Err(e) => return e,
+                };
+                let Some(value) = parse_value(&pair[1]) else {
+                    return err("value is not a decimal u64");
+                };
+                items.push((key, value));
+            }
+            Command::WriteMany { items }
+        }
+        b"DEL" => {
+            if args.len() < 2 {
+                return err("wrong number of arguments for 'DEL'");
+            }
+            let mut keys = Vec::with_capacity(args.len() - 1);
+            for raw in &args[1..] {
+                match wire_key(raw) {
+                    Ok(k) => keys.push(k),
+                    Err(e) => return e,
+                }
+            }
+            Command::Delete { keys, noreply: false }
+        }
+        b"EXPIRE" => match args {
+            [_, key, secs] => {
+                let k = match wire_key(key) {
+                    Ok(k) => k,
+                    Err(e) => return e,
+                };
+                let Some(s) = parse_value(secs) else {
+                    return err("value is not an integer or out of range");
+                };
+                Command::Touch {
+                    key: k,
+                    ttl: Some(std::time::Duration::from_secs(s)),
+                    noreply: false,
+                }
+            }
+            _ => err("wrong number of arguments for 'EXPIRE'"),
+        },
+        _ => err("unknown command"),
+    }
+}
+
+fn interpret_set(args: &[Vec<u8>]) -> Command {
+    // SET key value [EX seconds | PX milliseconds]
+    let (key_raw, value_raw, ttl_args) = match args {
+        [_, k, v] => (k, v, &args[3..]),
+        [_, k, v, _, _] => (k, v, &args[3..]),
+        _ => return err("wrong number of arguments for 'SET'"),
+    };
+    let key = match wire_key(key_raw) {
+        Ok(k) => k,
+        Err(e) => return e,
+    };
+    let Some(value) = parse_value(value_raw) else {
+        return err("value is not a decimal u64");
+    };
+    let ttl = match ttl_args {
+        [] => None,
+        [unit, amount] => {
+            let Some(n) = parse_value(amount) else {
+                return err("value is not an integer or out of range");
+            };
+            match unit.to_ascii_uppercase().as_slice() {
+                b"EX" => Some(std::time::Duration::from_secs(n)),
+                b"PX" => Some(std::time::Duration::from_millis(n)),
+                _ => return err("syntax error"),
+            }
+        }
+        _ => return err("syntax error"),
+    };
+    Command::Write { key, value, ttl, add_only: false, noreply: false }
+}
+
+fn wire_key(raw: &[u8]) -> Result<WireKey, Command> {
+    if raw.len() > MAX_KEY_LEN {
+        return Err(err("key too long"));
+    }
+    Ok(WireKey::from_bytes(raw))
+}
+
+fn err(msg: &str) -> Command {
+    Command::Bad { line: format!("-ERR {msg}") }
+}
+
+/// Append `+OK`.
+pub fn encode_ok(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"+OK\r\n");
+}
+
+/// Append `+PONG`.
+pub fn encode_pong(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"+PONG\r\n");
+}
+
+/// Append an integer reply `:n`.
+pub fn encode_int(out: &mut Vec<u8>, n: i64) {
+    out.push(b':');
+    out.extend_from_slice(n.to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append a bulk-string reply: the value's decimal text, or the null
+/// bulk `$-1` for a miss.
+pub fn encode_bulk(out: &mut Vec<u8>, value: Option<u64>) {
+    match value {
+        None => out.extend_from_slice(b"$-1\r\n"),
+        Some(v) => {
+            let body = v.to_string();
+            out.push(b'$');
+            out.extend_from_slice(body.len().to_string().as_bytes());
+            out.extend_from_slice(b"\r\n");
+            out.extend_from_slice(body.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+    }
+}
+
+/// Append an array header `*n` (elements follow as bulk replies).
+pub fn encode_array_header(out: &mut Vec<u8>, n: usize) {
+    out.push(b'*');
+    out.extend_from_slice(n.to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append an error line (caller supplies the leading `-`).
+pub fn encode_error(out: &mut Vec<u8>, line: &str) {
+    out.extend_from_slice(line.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn frame(parts: &[&[u8]]) -> Vec<u8> {
+        let mut f = format!("*{}\r\n", parts.len()).into_bytes();
+        for p in parts {
+            f.extend_from_slice(format!("${}\r\n", p.len()).as_bytes());
+            f.extend_from_slice(p);
+            f.extend_from_slice(b"\r\n");
+        }
+        f
+    }
+
+    fn one(wire: &[u8]) -> Command {
+        let mut dec = RespDecoder::new();
+        let (cmd, n) = dec.decode(wire).expect("no fatal").expect("complete");
+        assert_eq!(n, wire.len(), "must consume the whole frame");
+        cmd
+    }
+
+    #[test]
+    fn ping_get_set_parse() {
+        assert_eq!(one(&frame(&[b"PING"])), Command::Ping);
+        assert_eq!(one(&frame(&[b"ping"])), Command::Ping, "case-insensitive");
+        assert_eq!(
+            one(&frame(&[b"GET", b"42"])),
+            Command::Read { keys: vec![WireKey::from_bytes(b"42")], cas: false, single: true }
+        );
+        assert_eq!(
+            one(&frame(&[b"SET", b"42", b"7"])),
+            Command::Write {
+                key: WireKey::from_bytes(b"42"),
+                value: 7,
+                ttl: None,
+                add_only: false,
+                noreply: false,
+            }
+        );
+    }
+
+    #[test]
+    fn set_with_ex_and_px() {
+        assert_eq!(
+            one(&frame(&[b"SET", b"1", b"2", b"EX", b"30"])),
+            Command::Write {
+                key: WireKey::from_bytes(b"1"),
+                value: 2,
+                ttl: Some(Duration::from_secs(30)),
+                add_only: false,
+                noreply: false,
+            }
+        );
+        assert_eq!(
+            one(&frame(&[b"SET", b"1", b"2", b"px", b"1500"])),
+            Command::Write {
+                key: WireKey::from_bytes(b"1"),
+                value: 2,
+                ttl: Some(Duration::from_millis(1500)),
+                add_only: false,
+                noreply: false,
+            }
+        );
+        assert!(matches!(
+            one(&frame(&[b"SET", b"1", b"2", b"XX", b"5"])),
+            Command::Bad { .. }
+        ));
+    }
+
+    #[test]
+    fn mget_mset_del_expire_parse() {
+        assert_eq!(
+            one(&frame(&[b"MGET", b"1", b"2"])),
+            Command::Read {
+                keys: vec![WireKey::from_bytes(b"1"), WireKey::from_bytes(b"2")],
+                cas: false,
+                single: false,
+            }
+        );
+        assert_eq!(
+            one(&frame(&[b"MSET", b"1", b"10", b"2", b"20"])),
+            Command::WriteMany {
+                items: vec![
+                    (WireKey::from_bytes(b"1"), 10),
+                    (WireKey::from_bytes(b"2"), 20),
+                ],
+            }
+        );
+        assert_eq!(
+            one(&frame(&[b"DEL", b"1", b"2"])),
+            Command::Delete {
+                keys: vec![WireKey::from_bytes(b"1"), WireKey::from_bytes(b"2")],
+                noreply: false,
+            }
+        );
+        assert_eq!(
+            one(&frame(&[b"EXPIRE", b"1", b"60"])),
+            Command::Touch {
+                key: WireKey::from_bytes(b"1"),
+                ttl: Some(Duration::from_secs(60)),
+                noreply: false,
+            }
+        );
+    }
+
+    #[test]
+    fn arity_and_value_errors_are_recoverable() {
+        for bad in [
+            frame(&[b"GET"]),
+            frame(&[b"GET", b"1", b"2"]),
+            frame(&[b"SET", b"1"]),
+            frame(&[b"MSET", b"1", b"10", b"2"]),
+            frame(&[b"EXPIRE", b"1"]),
+            frame(&[b"SET", b"1", b"not-a-number"]),
+            frame(&[b"FLUSHALL"]),
+        ] {
+            assert!(
+                matches!(one(&bad), Command::Bad { line } if line.starts_with("-ERR")),
+                "{:?}",
+                String::from_utf8_lossy(&bad)
+            );
+        }
+    }
+
+    #[test]
+    fn partial_frames_consume_nothing() {
+        let full = frame(&[b"SET", b"1", b"2"]);
+        let mut dec = RespDecoder::new();
+        // Every strict prefix must return None without consuming.
+        for cut in 0..full.len() {
+            assert_eq!(dec.decode(&full[..cut]).unwrap(), None, "prefix of {cut} bytes");
+        }
+        let (cmd, n) = dec.decode(&full).unwrap().unwrap();
+        assert_eq!(n, full.len());
+        assert!(matches!(cmd, Command::Write { value: 2, .. }));
+    }
+
+    #[test]
+    fn pipelined_frames_decode_back_to_back() {
+        let mut wire = frame(&[b"SET", b"1", b"10"]);
+        wire.extend_from_slice(&frame(&[b"GET", b"1"]));
+        wire.extend_from_slice(&frame(&[b"PING"]));
+        let mut dec = RespDecoder::new();
+        let mut rest = &wire[..];
+        let mut cmds = Vec::new();
+        while let Some((cmd, n)) = dec.decode(rest).unwrap() {
+            rest = &rest[n..];
+            cmds.push(cmd);
+        }
+        assert!(rest.is_empty());
+        assert_eq!(cmds.len(), 3);
+        assert!(matches!(cmds[2], Command::Ping));
+    }
+
+    #[test]
+    fn corrupt_framing_is_fatal() {
+        let mut dec = RespDecoder::new();
+        assert!(dec.decode(b"GET 1\r\n").is_err(), "inline commands are not RESP arrays");
+        assert!(dec.decode(b"*2\r\n+OK\r\n").is_err(), "non-bulk element");
+        assert!(dec.decode(b"*x\r\n").is_err(), "non-digit count");
+        assert!(dec.decode(b"*2000\r\n").is_err(), "count beyond cap");
+        assert!(dec.decode(b"*1\r\n$99999999\r\n").is_err(), "length beyond digits cap");
+        assert!(dec.decode(b"*1\r\n$3\r\nabcd\r\n").is_err(), "bulk not CRLF-terminated");
+    }
+
+    #[test]
+    fn oversized_key_is_recoverable() {
+        let big = vec![b'k'; MAX_KEY_LEN + 1];
+        let cmd = one(&frame(&[b"GET", &big]));
+        assert!(matches!(cmd, Command::Bad { line } if line.contains("key too long")));
+    }
+
+    #[test]
+    fn encoders_produce_protocol_frames() {
+        let mut out = Vec::new();
+        encode_ok(&mut out);
+        encode_pong(&mut out);
+        encode_int(&mut out, 2);
+        encode_bulk(&mut out, Some(42));
+        encode_bulk(&mut out, None);
+        encode_array_header(&mut out, 2);
+        assert_eq!(out, b"+OK\r\n+PONG\r\n:2\r\n$2\r\n42\r\n$-1\r\n*2\r\n");
+    }
+}

@@ -1,0 +1,310 @@
+//! The TCP server: acceptor + N epoll io threads over one
+//! [`CacheService`].
+//!
+//! Threading model (DESIGN.md §Network front end): one acceptor thread
+//! runs a non-blocking `accept` loop and deals accepted sockets
+//! round-robin to `io_threads` event-loop threads over channels; each
+//! io thread owns a [`Poller`] and its connections outright, so there
+//! is no cross-thread connection state, no locks on the hot path, and
+//! a connection's requests stay ordered trivially. Cache-side
+//! concurrency comes from [`CacheService`]'s own worker shards — the
+//! io threads only decode, fuse, and encode.
+//!
+//! Level-triggered readiness: a connection that still has buffered
+//! request bytes after a read-cycle cap keeps its fd readable, so the
+//! next `epoll_wait` re-delivers it — no starvation bookkeeping. Write
+//! interest is registered only while a connection has queued response
+//! bytes (the common case — responses fit the socket buffer — never
+//! touches `epoll_ctl`).
+//!
+//! [`CacheService`]: crate::coordinator::CacheService
+
+use super::conn::Connection;
+use super::poll::Poller;
+use crate::coordinator::CacheService;
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Event-loop threads (the acceptor is a separate, mostly-idle
+    /// thread). Cache work happens on [`CacheService`]'s own workers,
+    /// so a small number of io threads goes a long way.
+    ///
+    /// [`CacheService`]: crate::coordinator::CacheService
+    pub io_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { io_threads: 2 }
+    }
+}
+
+/// A running server: join handles plus the shared shutdown flag.
+#[derive(Debug)]
+pub struct Server {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    accepted: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Start serving `listener`'s accepted connections against
+    /// `service`. Fails fast (before accepting anything) if the
+    /// platform has no poller backend or thread spawn fails.
+    pub fn start(
+        listener: TcpListener,
+        service: Arc<CacheService>,
+        cfg: ServerConfig,
+    ) -> io::Result<Server> {
+        let io_threads = cfg.io_threads.max(1);
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        // Build every poller up front so an unsupported platform (or
+        // fd exhaustion) errors here, not inside a spawned thread.
+        let mut pollers = Vec::with_capacity(io_threads);
+        for _ in 0..io_threads {
+            pollers.push(Poller::new()?);
+        }
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::with_capacity(io_threads + 1);
+        let mut senders = Vec::with_capacity(io_threads);
+
+        for (i, poller) in pollers.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Connection>();
+            senders.push(tx);
+            let service = Arc::clone(&service);
+            let shutdown = Arc::clone(&shutdown);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("kway-io-{i}"))
+                    .spawn(move || io_loop(poller, rx, service, shutdown))?,
+            );
+        }
+
+        {
+            let shutdown = Arc::clone(&shutdown);
+            let accepted = Arc::clone(&accepted);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("kway-accept".into())
+                    .spawn(move || accept_loop(listener, senders, shutdown, accepted))?,
+            );
+        }
+
+        Ok(Server { local_addr, shutdown, threads, accepted })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Connections accepted so far.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Signal every thread to wind down and join them. Open
+    /// connections are dropped (the harness has no draining story —
+    /// clients are the load generator and the smoke tests).
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Safety net for early-return paths; `stop()` drains `threads`
+        // so a normal stop makes this a no-op.
+        self.shutdown.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Accept loop: non-blocking accepts, round-robin dispatch.
+fn accept_loop(
+    listener: TcpListener,
+    senders: Vec<mpsc::Sender<Connection>>,
+    shutdown: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+) {
+    let mut next = 0usize;
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                // Request/response protocols on loopback: Nagle only
+                // adds latency. Best-effort.
+                let _ = stream.set_nodelay(true);
+                accepted.fetch_add(1, Ordering::Relaxed);
+                if senders[next % senders.len()].send(Connection::new(stream)).is_err() {
+                    return; // io thread gone: shutting down
+                }
+                next = next.wrapping_add(1);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// A registered connection slot. The slot index is the poller token.
+struct Slot {
+    conn: Connection,
+    fd: i32,
+    want_write: bool,
+}
+
+/// One io thread: register incoming connections, poll, drive.
+fn io_loop(
+    poller: Poller,
+    rx: mpsc::Receiver<Connection>,
+    service: Arc<CacheService>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut slots: Vec<Option<Slot>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut events = Vec::new();
+
+    while !shutdown.load(Ordering::Relaxed) {
+        // Adopt newly accepted connections.
+        while let Ok(conn) = rx.try_recv() {
+            let fd = conn.raw_fd();
+            let token = match free.pop() {
+                Some(i) => {
+                    slots[i] = Some(Slot { conn, fd, want_write: false });
+                    i
+                }
+                None => {
+                    slots.push(Some(Slot { conn, fd, want_write: false }));
+                    slots.len() - 1
+                }
+            };
+            if poller.add(fd, token as u64, false).is_err() {
+                slots[token] = None;
+                free.push(token);
+            }
+        }
+
+        if poller.wait(&mut events, 20).is_err() {
+            // A broken poller cannot recover; drop the thread's
+            // connections and exit rather than spin.
+            return;
+        }
+
+        for ev in &events {
+            let token = ev.token as usize;
+            let Some(slot) = slots.get_mut(token).and_then(|s| s.as_mut()) else {
+                continue; // raced with removal
+            };
+            let readable = ev.readable || ev.closed;
+            let status = slot.conn.handle(readable, &service);
+            let fd = slot.fd;
+            let prev_want_write = slot.want_write;
+            if !status.open {
+                let _ = poller.delete(fd);
+                slots[token] = None;
+                free.push(token);
+            } else if status.want_write != prev_want_write {
+                if poller.modify(fd, token as u64, status.want_write).is_ok() {
+                    slot.want_write = status.want_write;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::kway::KwWfsc;
+    use crate::policy::Policy;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    fn start_server() -> (Server, Arc<CacheService>) {
+        let cache = Arc::new(KwWfsc::new(4096, 8, Policy::Lru));
+        let service = Arc::new(CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, ..ServiceConfig::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server =
+            Server::start(listener, Arc::clone(&service), ServerConfig::default()).unwrap();
+        (server, service)
+    }
+
+    #[test]
+    fn serves_memcached_over_loopback() {
+        let (server, _service) = start_server();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        stream.write_all(b"set 7 0 0 2\r\n42\r\nget 7\r\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for _ in 0..4 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line.trim_end().to_string());
+        }
+        assert_eq!(lines, vec!["STORED", "VALUE 7 0 2", "42", "END"]);
+        assert!(server.accepted() >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn serves_resp_and_memcached_concurrently() {
+        let (server, _service) = start_server();
+        let addr = server.local_addr();
+
+        let mut resp = TcpStream::connect(addr).unwrap();
+        resp.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        resp.write_all(b"*3\r\n$3\r\nSET\r\n$2\r\n10\r\n$2\r\n99\r\n").unwrap();
+        let mut buf = [0u8; 64];
+        let n = std::io::Read::read(&mut resp, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"+OK\r\n");
+
+        let mut mc = TcpStream::connect(addr).unwrap();
+        mc.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        mc.write_all(b"get 10\r\n").unwrap();
+        let mut reader = BufReader::new(mc.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line.trim_end().to_string());
+        }
+        assert_eq!(lines, vec!["VALUE 10 0 2", "99", "END"]);
+        server.stop();
+    }
+
+    #[test]
+    fn stop_is_idempotent_and_drops_open_connections() {
+        let (server, _service) = start_server();
+        let _open = TcpStream::connect(server.local_addr()).unwrap();
+        server.stop();
+    }
+}

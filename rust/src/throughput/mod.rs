@@ -17,21 +17,24 @@
 //! [`Cache::get_batch`] in fixed-size batches, the workload the `batch`
 //! sweep and `benches/batched.rs` measure.
 //!
-//! Besides Mops/s, every run samples operation latency (one op in
-//! `SAMPLE_EVERY` per worker, so sampling does not perturb what it
-//! measures) into a [`LatencyHistogram`]; [`RunResult`] reports the p50
-//! and p99 next to the throughput summary. For batched workloads the
-//! sample is the latency of one whole batch — the latency a batched
-//! caller actually observes.
+//! Besides Mops/s, every run samples operation latency into a
+//! per-thread [`Reservoir`] (~10K samples each): individual ops are
+//! timed at randomized intervals (mean one in `SAMPLE_MEAN_GAP`, so the
+//! cadence cannot alias against periodic contention and sampling does
+//! not perturb what it measures), and the reservoir keeps a uniform
+//! subset no matter how long the run is. [`RunResult`] reports
+//! nearest-rank p50/p99 over the merged samples next to the throughput
+//! summary. For batched workloads the sample is the latency of one whole
+//! batch — the latency a batched caller actually observes.
 
 use crate::lifetime::{EntryOpts, WeightDist};
-use crate::metrics::LatencyHistogram;
 use crate::tinylfu::AdmissionMode;
 use crate::trace::Trace;
-use crate::util::stats::Summary;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile_u64, Reservoir, Summary};
 use crate::Cache;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 /// How every fill (the put on a miss, and the resident-set install) is
@@ -196,8 +199,8 @@ impl Default for RunConfig {
 
 /// Result of one measurement: throughput summary in Mops/s, the hit ratio
 /// aggregated over *all* repeats (total hits / total gets, so every repeat
-/// counts — not just the last one), and latency percentiles from the
-/// sampled per-op histogram (nanoseconds; per *batch* for
+/// counts — not just the last one), and nearest-rank latency percentiles
+/// over the merged per-thread reservoirs (nanoseconds; per *batch* for
 /// [`Workload::Batched`]).
 pub struct RunResult {
     /// Throughput summary (Mops/s over the repeats).
@@ -224,8 +227,15 @@ const WARM_BASE: u64 = 1 << 48;
 /// Fresh-miss key space for the synthetic workloads.
 const FRESH_BASE: u64 = 1 << 49;
 
-/// One op in this many is individually timed into the latency histogram.
-const SAMPLE_EVERY: u32 = 64;
+/// Mean gap between individually timed ops per worker. Actual gaps are
+/// drawn uniformly from `[1, 2*mean - 1]`, so the sampling cadence has
+/// no fixed period to alias against; one timed op in ~64 keeps the
+/// `Instant::now` overhead invisible next to the accesses themselves.
+const SAMPLE_MEAN_GAP: u64 = 64;
+
+/// Per-thread latency reservoir capacity: ~10K samples per worker keep
+/// p50/p99 stable while bounding memory regardless of run length.
+const RESERVOIR_CAP: usize = 10_000;
 
 /// Measure a cache implementation under a workload. `factory` builds a
 /// fresh cache per repeat (so runs are independent, like the paper's).
@@ -235,7 +245,7 @@ pub fn measure(
     cfg: &RunConfig,
 ) -> RunResult {
     let mut mops = Summary::new();
-    let latency = Arc::new(LatencyHistogram::new());
+    let latency: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
     let mut total_hits = 0u64;
     let mut total_gets = 0u64;
     let mut total_ops_all = 0u64;
@@ -269,12 +279,18 @@ pub fn measure(
         total_ops_all += ops;
         total_cycles += cycles;
     }
+    let mut samples = std::mem::take(&mut *latency.lock().unwrap());
+    let lat_mean_ns = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<u64>() as f64 / samples.len() as f64
+    };
     RunResult {
         mops,
         hit_ratio: if total_gets > 0 { total_hits as f64 / total_gets as f64 } else { 0.0 },
-        lat_p50_ns: latency.percentile(50.0),
-        lat_p99_ns: latency.percentile(99.0),
-        lat_mean_ns: latency.mean(),
+        lat_p50_ns: percentile_u64(&mut samples, 50.0),
+        lat_p99_ns: percentile_u64(&mut samples, 99.0),
+        lat_mean_ns,
         cycles_per_op: if total_ops_all > 0 {
             total_cycles as f64 / total_ops_all as f64
         } else {
@@ -438,7 +454,7 @@ fn one_run(
     workload: &Workload,
     cfg: &RunConfig,
     rep: u64,
-    latency: &Arc<LatencyHistogram>,
+    latency: &Arc<Mutex<Vec<u64>>>,
 ) -> (u64, u64, u64, u64, f64) {
     let capacity = cache.capacity();
     // Warm-up phase 1: main thread fills with non-trace keys.
@@ -585,26 +601,33 @@ impl Pacer<'_> {
     }
 }
 
-/// Times one op in [`SAMPLE_EVERY`] into the shared histogram; the other
+/// Times the occasional op into a per-thread [`Reservoir`]; the other
 /// ops run untimed so the measurement does not perturb the hot loop.
+/// The gap to the next timed op is drawn uniformly from
+/// `[1, 2*SAMPLE_MEAN_GAP - 1]` — same mean rate as the old fixed
+/// stride, but with no period for the workload to alias against — and
+/// the reservoir keeps a uniform subset of the timed ops, so the
+/// retained sample is unbiased however long the run lasts.
 struct Sampler<'a> {
-    hist: &'a LatencyHistogram,
-    countdown: u32,
+    res: &'a mut Reservoir,
+    gap_rng: Rng,
+    countdown: u64,
 }
 
 impl<'a> Sampler<'a> {
-    fn new(hist: &'a LatencyHistogram) -> Self {
-        Self { hist, countdown: 1 } // sample the first op, then 1-in-N
+    fn new(res: &'a mut Reservoir, gap_seed: u64) -> Self {
+        // Sample the first op, then at randomized gaps.
+        Self { res, gap_rng: Rng::new(gap_seed), countdown: 1 }
     }
 
     #[inline]
     fn run<T>(&mut self, op: impl FnOnce() -> T) -> T {
         self.countdown -= 1;
         if self.countdown == 0 {
-            self.countdown = SAMPLE_EVERY;
+            self.countdown = self.gap_rng.range_u64(1, 2 * SAMPLE_MEAN_GAP - 1);
             let start = Instant::now();
             let out = op();
-            self.hist.record(start.elapsed().as_nanos() as u64);
+            self.res.record(start.elapsed().as_nanos() as u64);
             out
         } else {
             op()
@@ -629,14 +652,37 @@ fn worker(
     thread_id: usize,
     threads: usize,
     seed: u64,
-    latency: &LatencyHistogram,
+    latency: &Mutex<Vec<u64>>,
+) -> (u64, u64, u64) {
+    // Per-thread reservoir + sampler, merged into the shared sink once at
+    // the end — zero cross-thread traffic on the measured path.
+    let mut reservoir = Reservoir::new(RESERVOIR_CAP, seed ^ 0x5EED_0F_5A3B);
+    let mut sampler = Sampler::new(&mut reservoir, seed ^ 0x6A9);
+    let result =
+        worker_loop(cache, workload, fill, stop, progress, thread_id, threads, seed, &mut sampler);
+    latency.lock().unwrap().extend_from_slice(reservoir.samples());
+    result
+}
+
+/// The measured loop proper; split from [`worker`] so every workload
+/// arm's early return still funnels through the one reservoir merge.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    cache: &dyn Cache,
+    workload: &Workload,
+    fill: &FillSpec,
+    stop: &AtomicBool,
+    progress: &AtomicU64,
+    thread_id: usize,
+    threads: usize,
+    seed: u64,
+    sampler: &mut Sampler<'_>,
 ) -> (u64, u64, u64) {
     const CHECK_EVERY: u64 = 256;
     let mut ops = 0u64;
     let mut hits = 0u64;
     let mut gets = 0u64;
     let mut pacer = Pacer { stop, progress, published: 0 };
-    let mut sampler = Sampler::new(latency);
     match workload {
         Workload::TraceReplay(trace) => {
             let n = trace.len();

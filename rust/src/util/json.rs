@@ -367,7 +367,10 @@ pub fn check_bench_schema(doc: &Json) -> Result<()> {
 /// Mops/s for the same resident-set get loop, so the SIMD speedup is a
 /// same-file comparison of the avx2/sse2/swar rows against the scalar
 /// row. A `provenance` string records how the numbers were produced.
-pub const HOTPATH_SCHEMA: &str = "kway-hotpath-v1";
+/// v2 = v1 plus a top-level `hugepages` boolean: whether the cache
+/// tables were `madvise(MADV_HUGEPAGE)`-backed — TLB pressure moves the
+/// probe numbers, so the setting is part of the artifact's identity.
+pub const HOTPATH_SCHEMA: &str = "kway-hotpath-v2";
 
 /// Validate a hot-path document against [`HOTPATH_SCHEMA`]; the
 /// microbench runs it before writing, like [`check_bench_schema`].
@@ -387,8 +390,10 @@ pub fn check_hotpath_schema(doc: &Json) -> Result<()> {
             bail!("field {key:?} must be an integer");
         }
     }
-    if field("pinned")?.as_bool().is_none() {
-        bail!("field \"pinned\" must be a boolean");
+    for key in ["pinned", "hugepages"] {
+        if field(key)?.as_bool().is_none() {
+            bail!("field {key:?} must be a boolean");
+        }
     }
     let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
     for (i, row) in results.iter().enumerate() {
@@ -401,6 +406,58 @@ pub fn check_hotpath_schema(doc: &Json) -> Result<()> {
             bail!("results[{i}]: threads must be an integer");
         }
         for key in ["mops", "ns_per_op", "cycles_per_op"] {
+            if rfield(key)?.as_f64().is_none() {
+                bail!("results[{i}]: {key:?} must be numeric");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Schema tag of the wire-serving artifacts (`BENCH_serve*.json`): the
+/// connections × pipeline-depth × threads sweep emitted by
+/// `cargo bench --bench serve -- --json` and by `kway loadgen --json`
+/// (DESIGN.md §Network front end). One row per (proto, connections,
+/// pipeline, threads) point; the pipeline axis is the tentpole claim —
+/// deep pipelines amortize syscalls AND widen the scatter/gather batches
+/// handed to the cache workers, so pipeline=16 must beat pipeline=1 at
+/// equal connections.
+pub const SERVE_SCHEMA: &str = "kway-serve-v1";
+
+/// Validate a wire-serving document against [`SERVE_SCHEMA`]; writers
+/// run it before touching disk, like [`check_bench_schema`].
+pub fn check_serve_schema(doc: &Json) -> Result<()> {
+    let field = |key: &str| doc.get(key).ok_or_else(|| anyhow!("missing field {key:?}"));
+    let schema = field("schema")?.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+    if schema != SERVE_SCHEMA {
+        bail!("schema {schema:?} != {SERVE_SCHEMA:?}");
+    }
+    for key in ["addr", "provenance"] {
+        if field(key)?.as_str().is_none() {
+            bail!("field {key:?} must be a string");
+        }
+    }
+    for key in ["duration_ms", "keyspace", "seed"] {
+        if field(key)?.as_i64().is_none() {
+            bail!("field {key:?} must be an integer");
+        }
+    }
+    if field("pinned")?.as_bool().is_none() {
+        bail!("field \"pinned\" must be a boolean");
+    }
+    let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
+    for (i, row) in results.iter().enumerate() {
+        let rfield =
+            |key: &str| row.get(key).ok_or_else(|| anyhow!("results[{i}]: missing {key:?}"));
+        if rfield("proto")?.as_str().is_none() {
+            bail!("results[{i}]: proto must be a string");
+        }
+        for key in ["connections", "pipeline", "threads", "ops", "p50_ns", "p99_ns", "errors"] {
+            if rfield(key)?.as_i64().is_none() {
+                bail!("results[{i}]: {key:?} must be an integer");
+            }
+        }
+        for key in ["mops", "hit_ratio"] {
             if rfield(key)?.as_f64().is_none() {
                 bail!("results[{i}]: {key:?} must be numeric");
             }
@@ -518,7 +575,7 @@ mod tests {
         parse(&format!(
             r#"{{"schema":"{schema}","impl":"KW-WFSC","workload":"hit100",
                 "capacity":262144,"ways":8,"working_set":131072,
-                "duration_ms":300,"seed":42,"pinned":true,
+                "duration_ms":300,"seed":42,"pinned":true,"hugepages":false,
                 "provenance":"measured",
                 "results":[{{"probe":"scalar","threads":1,"mops":31.0,
                   "ns_per_op":32.2,"cycles_per_op":96.1}}]}}"#
@@ -527,13 +584,29 @@ mod tests {
     }
 
     #[test]
-    fn hotpath_schema_v1_accepts_and_rejects() {
-        assert_eq!(HOTPATH_SCHEMA, "kway-hotpath-v1", "schema bumps must update this check");
-        check_hotpath_schema(&hotpath_doc("kway-hotpath-v1")).unwrap();
-        assert!(check_hotpath_schema(&hotpath_doc("kway-hotpath-v0")).is_err());
+    fn hotpath_schema_v2_accepts_and_rejects() {
+        assert_eq!(HOTPATH_SCHEMA, "kway-hotpath-v2", "schema bumps must update this check");
+        check_hotpath_schema(&hotpath_doc("kway-hotpath-v2")).unwrap();
+        assert!(check_hotpath_schema(&hotpath_doc("kway-hotpath-v1")).is_err());
+        // The v2 field: dropping the hugepages flag is rejected, and it
+        // must be an actual boolean, not a string.
+        let mut doc = hotpath_doc("kway-hotpath-v2");
+        if let Json::Object(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "hugepages");
+        }
+        assert!(check_hotpath_schema(&doc).is_err());
+        let mut doc = hotpath_doc("kway-hotpath-v2");
+        if let Json::Object(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "hugepages" {
+                    *v = Json::Str("false".into());
+                }
+            }
+        }
+        assert!(check_hotpath_schema(&doc).is_err());
         // Every row figure is load-bearing: dropping any one is rejected.
         for key in ["probe", "threads", "mops", "ns_per_op", "cycles_per_op"] {
-            let mut doc = hotpath_doc("kway-hotpath-v1");
+            let mut doc = hotpath_doc("kway-hotpath-v2");
             if let Json::Object(fields) = &mut doc {
                 let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
                 if let Some(Json::Array(rows)) = results {
@@ -546,11 +619,63 @@ mod tests {
         }
         // A provenance-less artifact is rejected: numbers without an
         // origin story are not comparable.
-        let mut doc = hotpath_doc("kway-hotpath-v1");
+        let mut doc = hotpath_doc("kway-hotpath-v2");
         if let Json::Object(fields) = &mut doc {
             fields.retain(|(k, _)| k != "provenance");
         }
         assert!(check_hotpath_schema(&doc).is_err());
+    }
+
+    fn serve_doc(schema: &str) -> Json {
+        parse(&format!(
+            r#"{{"schema":"{schema}","addr":"127.0.0.1:11211",
+                "duration_ms":1000,"keyspace":65536,"seed":42,
+                "pinned":false,"provenance":"measured",
+                "results":[{{"proto":"memcached","connections":8,
+                  "pipeline":16,"threads":2,"ops":100000,"mops":1.5,
+                  "hit_ratio":0.92,"p50_ns":800,"p99_ns":9000,
+                  "errors":0}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_schema_v1_accepts_and_rejects() {
+        assert_eq!(SERVE_SCHEMA, "kway-serve-v1", "schema bumps must update this check");
+        check_serve_schema(&serve_doc("kway-serve-v1")).unwrap();
+        assert!(check_serve_schema(&serve_doc("kway-serve-v0")).is_err());
+        // Every row figure is load-bearing: dropping any one is rejected.
+        for key in [
+            "proto",
+            "connections",
+            "pipeline",
+            "threads",
+            "ops",
+            "mops",
+            "hit_ratio",
+            "p50_ns",
+            "p99_ns",
+            "errors",
+        ] {
+            let mut doc = serve_doc("kway-serve-v1");
+            if let Json::Object(fields) = &mut doc {
+                let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
+                if let Some(Json::Array(rows)) = results {
+                    if let Json::Object(row) = &mut rows[0] {
+                        row.retain(|(k, _)| k != key);
+                    }
+                }
+            }
+            assert!(check_serve_schema(&doc).is_err(), "dropping {key} must fail");
+        }
+        // Top-level provenance and the pinned boolean are required.
+        for key in ["provenance", "pinned", "addr"] {
+            let mut doc = serve_doc("kway-serve-v1");
+            if let Json::Object(fields) = &mut doc {
+                fields.retain(|(k, _)| k != key);
+            }
+            assert!(check_serve_schema(&doc).is_err(), "dropping {key} must fail");
+        }
     }
 
     #[test]

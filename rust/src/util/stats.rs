@@ -1,5 +1,10 @@
 //! Summary statistics for the repeated-run benchmark methodology
-//! (§5.1.2 of the paper: each point is the mean over 11 runs).
+//! (§5.1.2 of the paper: each point is the mean over 11 runs), plus
+//! the reservoir sampler the latency harnesses use to keep an unbiased
+//! fixed-memory sample of per-op timings (SNIPPETS.md Snippet 3's
+//! methodology: ~10K samples per thread for p50/p95/p99).
+
+use crate::util::rng::Rng;
 
 /// Running mean/variance via Welford's algorithm plus retained samples for
 /// percentiles.
@@ -113,6 +118,87 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// Classic reservoir sampler (Algorithm R) over `u64` observations.
+///
+/// After `seen` observations, each one is retained with probability
+/// `cap / seen` — so the reservoir is a uniform random subset of the
+/// whole stream regardless of its length, and percentiles computed
+/// from it are unbiased no matter how the stream's tail differs from
+/// its head. This replaces the fixed-stride latency sampler, whose
+/// every-Nth cadence could alias against periodic contention patterns
+/// and systematically miss (or over-count) the slow tail.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<u64>,
+    cap: usize,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    /// A reservoir keeping at most `cap` samples; `seed` makes runs
+    /// reproducible.
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "a zero-capacity reservoir keeps nothing");
+        Self { samples: Vec::with_capacity(cap.min(1 << 16)), cap, seen: 0, rng: Rng::new(seed) }
+    }
+
+    /// Offer one observation.
+    pub fn record(&mut self, value: u64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(value);
+        } else {
+            // Keep with probability cap/seen: replace a uniformly
+            // random slot iff the random index lands inside the
+            // reservoir.
+            let idx = self.rng.below(self.seen);
+            if (idx as usize) < self.cap {
+                self.samples[idx as usize] = value;
+            }
+        }
+    }
+
+    /// Total observations offered (not just retained).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Number of retained samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The retained samples (unordered).
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
+    /// Consume the reservoir, yielding its samples.
+    pub fn into_samples(self) -> Vec<u64> {
+        self.samples
+    }
+}
+
+/// Nearest-rank percentile over integer samples (`q` in [0, 100]);
+/// sorts `samples` in place. Returns 0 for an empty slice — callers
+/// report zero-filled rows rather than poisoning JSON with NaN.
+pub fn percentile_u64(samples: &mut [u64], q: f64) -> u64 {
+    assert!((0.0..=100.0).contains(&q));
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let rank = ((q / 100.0 * n as f64).ceil() as usize).max(1);
+    samples[rank.min(n) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +236,70 @@ mod tests {
     fn empty_is_nan_percentile() {
         let s = Summary::new();
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn reservoir_fills_then_caps() {
+        let mut r = Reservoir::new(100, 1);
+        for v in 0..50u64 {
+            r.record(v);
+        }
+        assert_eq!(r.len(), 50, "below cap everything is kept");
+        for v in 50..10_000u64 {
+            r.record(v);
+        }
+        assert_eq!(r.len(), 100, "reservoir never exceeds its cap");
+        assert_eq!(r.seen(), 10_000);
+    }
+
+    #[test]
+    fn reservoir_sample_is_unbiased() {
+        // Stream 1..=10_000 through a 1_000-slot reservoir: the sample
+        // mean must land near the stream mean (5000.5). A fixed-stride
+        // sampler would pass this too, but a broken replacement rule
+        // (e.g. always replacing, which biases toward the tail) fails.
+        let mut r = Reservoir::new(1_000, 42);
+        for v in 1..=10_000u64 {
+            r.record(v);
+        }
+        let mean = r.samples().iter().sum::<u64>() as f64 / r.len() as f64;
+        assert!(
+            (mean - 5000.5).abs() < 500.0,
+            "reservoir mean {mean} too far from stream mean 5000.5"
+        );
+        // And it must retain observations from both halves.
+        assert!(r.samples().iter().any(|&v| v <= 2_500));
+        assert!(r.samples().iter().any(|&v| v >= 7_500));
+    }
+
+    #[test]
+    fn reservoir_seeds_are_reproducible() {
+        let mut a = Reservoir::new(10, 7);
+        let mut b = Reservoir::new(10, 7);
+        for v in 0..1_000u64 {
+            a.record(v);
+            b.record(v);
+        }
+        assert_eq!(a.samples(), b.samples());
+    }
+
+    #[test]
+    fn percentile_u64_nearest_rank_exactness() {
+        let mut v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_u64(&mut v, 50.0), 50);
+        assert_eq!(percentile_u64(&mut v, 99.0), 99);
+        assert_eq!(percentile_u64(&mut v, 100.0), 100);
+        assert_eq!(percentile_u64(&mut v, 0.0), 1);
+
+        let mut single = vec![7u64];
+        assert_eq!(percentile_u64(&mut single, 50.0), 7);
+        assert_eq!(percentile_u64(&mut single, 99.0), 7);
+
+        let mut empty: Vec<u64> = Vec::new();
+        assert_eq!(percentile_u64(&mut empty, 99.0), 0);
+
+        // Unsorted input is handled (the function sorts in place).
+        let mut shuffled = vec![30u64, 10, 20];
+        assert_eq!(percentile_u64(&mut shuffled, 50.0), 20);
     }
 }

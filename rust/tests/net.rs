@@ -1,0 +1,287 @@
+//! End-to-end tests of the TCP wire front end: a real [`Server`] on a
+//! loopback ephemeral port over a real [`CacheService`], driven with
+//! plain blocking sockets. Both protocols, the TTL path, pipelined
+//! multi-key reads (the batch-fusion path), protocol-error handling and
+//! the in-process loadgen smoke all run here; byte-level codec corner
+//! cases (split reads, frames straddling buffers, malformed commands)
+//! live in the `net::memcached` / `net::resp` unit tests.
+//!
+//! The epoll backend is Linux/x86_64 only, so the server-spawning tests
+//! are gated on that target; elsewhere this file checks that starting
+//! the server reports a clean `Unsupported` error instead.
+//!
+//! [`Server`]: kway::net::Server
+//! [`CacheService`]: kway::coordinator::CacheService
+
+use kway::coordinator::{CacheService, ServiceConfig};
+use kway::kway::KwWfsc;
+use kway::policy::Policy;
+use kway::tinylfu::AdmissionMode;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_service(default_ttl: Option<Duration>) -> Arc<CacheService> {
+    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(4096, 8, Policy::Lru));
+    Arc::new(CacheService::start(
+        cache,
+        ServiceConfig { workers: 2, admission: AdmissionMode::None, default_ttl },
+    ))
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+mod unsupported {
+    use super::*;
+    use kway::net::{Server, ServerConfig};
+    use std::net::TcpListener;
+
+    #[test]
+    fn server_start_reports_unsupported() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = Server::start(listener, start_service(None), ServerConfig::default())
+            .expect_err("no epoll backend on this target");
+        assert_eq!(err.kind(), std::io::ErrorKind::Unsupported);
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod loopback {
+    use super::*;
+    use kway::net::loadgen::{self, LoadgenConfig, WireProto};
+    use kway::net::{Server, ServerConfig};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn start_server(service: Arc<CacheService>) -> Server {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        Server::start(listener, service, ServerConfig { io_threads: 2 }).unwrap()
+    }
+
+    fn connect(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    fn expect_lines(reader: &mut BufReader<TcpStream>, expected: &[&str]) {
+        for want in expected {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim_end_matches(['\r', '\n']), *want);
+        }
+    }
+
+    /// Encode one RESP array-of-bulk-strings command.
+    fn resp(parts: &[&str]) -> Vec<u8> {
+        let mut out = format!("*{}\r\n", parts.len()).into_bytes();
+        for p in parts {
+            out.extend_from_slice(format!("${}\r\n{p}\r\n", p.len()).as_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn memcached_full_command_set() {
+        let server = start_server(start_service(None));
+        let (mut s, mut r) = connect(&server);
+
+        s.write_all(b"set 7 0 0 2\r\n42\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get 7\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE 7 0 2", "42", "END"]);
+        // gets: the cas token is the value itself (documented deviation).
+        s.write_all(b"gets 7\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE 7 0 2 42", "42", "END"]);
+        // add: refused on a present key, stored on an absent one.
+        s.write_all(b"add 7 0 0 1\r\n9\r\n").unwrap();
+        expect_lines(&mut r, &["NOT_STORED"]);
+        s.write_all(b"add 8 0 0 1\r\n9\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"touch 7 100\r\n").unwrap();
+        expect_lines(&mut r, &["TOUCHED"]);
+        s.write_all(b"delete 7\r\n").unwrap();
+        expect_lines(&mut r, &["DELETED"]);
+        s.write_all(b"get 7\r\n").unwrap();
+        expect_lines(&mut r, &["END"]);
+        s.write_all(b"delete 7\r\n").unwrap();
+        expect_lines(&mut r, &["NOT_FOUND"]);
+        // Non-numeric keys hash into the high key space and still work.
+        s.write_all(b"set user:alice 0 0 4\r\n1234\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get user:alice\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE user:alice 0 4", "1234", "END"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn memcached_pipelined_multiget_is_order_preserving() {
+        let server = start_server(start_service(None));
+        let (mut s, mut r) = connect(&server);
+
+        for k in 1..=6u64 {
+            s.write_all(format!("set {k} 0 0 2\r\n1{k}\r\n").as_bytes()).unwrap();
+            expect_lines(&mut r, &["STORED"]);
+        }
+        // One write carrying a whole pipeline: a multi-key get, another
+        // get, an immediate command, and a trailing set. Responses must
+        // come back in request order even though the reads are fused
+        // into one get_batch and the set is answered at accumulation.
+        let mut burst = Vec::new();
+        burst.extend_from_slice(b"get 1 2 3 4\r\n");
+        burst.extend_from_slice(b"get 5 6 999\r\n");
+        burst.extend_from_slice(b"version\r\n");
+        burst.extend_from_slice(b"set 9 0 0 2\r\n19\r\n");
+        s.write_all(&burst).unwrap();
+        expect_lines(
+            &mut r,
+            &[
+                "VALUE 1 0 2",
+                "11",
+                "VALUE 2 0 2",
+                "12",
+                "VALUE 3 0 2",
+                "13",
+                "VALUE 4 0 2",
+                "14",
+                "END",
+                "VALUE 5 0 2",
+                "15",
+                "VALUE 6 0 2",
+                "16",
+                "END",
+            ],
+        );
+        let mut version = String::new();
+        r.read_line(&mut version).unwrap();
+        assert!(version.starts_with("VERSION"), "got {version:?}");
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get 9\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE 9 0 2", "19", "END"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn memcached_service_ttl_expires_over_the_wire() {
+        let server = start_server(start_service(Some(Duration::from_millis(50))));
+        let (mut s, mut r) = connect(&server);
+
+        s.write_all(b"set 3 0 0 1\r\n7\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get 3\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE 3 0 1", "7", "END"]);
+        std::thread::sleep(Duration::from_millis(90));
+        s.write_all(b"get 3\r\n").unwrap();
+        expect_lines(&mut r, &["END"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn resp_full_command_set() {
+        let server = start_server(start_service(None));
+        let (mut s, mut r) = connect(&server);
+
+        s.write_all(&resp(&["PING"])).unwrap();
+        expect_lines(&mut r, &["+PONG"]);
+        s.write_all(&resp(&["SET", "5", "99"])).unwrap();
+        expect_lines(&mut r, &["+OK"]);
+        s.write_all(&resp(&["GET", "5"])).unwrap();
+        expect_lines(&mut r, &["$2", "99"]);
+        s.write_all(&resp(&["GET", "404"])).unwrap();
+        expect_lines(&mut r, &["$-1"]);
+        s.write_all(&resp(&["MSET", "6", "16", "7", "17"])).unwrap();
+        expect_lines(&mut r, &["+OK"]);
+        s.write_all(&resp(&["MGET", "5", "6", "404"])).unwrap();
+        expect_lines(&mut r, &["*3", "$2", "99", "$2", "16", "$-1"]);
+        s.write_all(&resp(&["DEL", "6"])).unwrap();
+        expect_lines(&mut r, &[":1"]);
+        s.write_all(&resp(&["GET", "6"])).unwrap();
+        expect_lines(&mut r, &["$-1"]);
+        s.write_all(&resp(&["EXPIRE", "7", "100"])).unwrap();
+        expect_lines(&mut r, &[":1"]);
+        s.write_all(&resp(&["EXPIRE", "404", "100"])).unwrap();
+        expect_lines(&mut r, &[":0"]);
+        // SET PX: the entry must expire.
+        s.write_all(&resp(&["SET", "8", "1", "PX", "40"])).unwrap();
+        expect_lines(&mut r, &["+OK"]);
+        std::thread::sleep(Duration::from_millis(80));
+        s.write_all(&resp(&["GET", "8"])).unwrap();
+        expect_lines(&mut r, &["$-1"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn both_protocols_share_one_port() {
+        let server = start_server(start_service(None));
+        let (mut mc, mut mc_r) = connect(&server);
+        let (mut rd, mut rd_r) = connect(&server);
+
+        mc.write_all(b"set 11 0 0 2\r\n66\r\n").unwrap();
+        expect_lines(&mut mc_r, &["STORED"]);
+        // The RESP client reads what the memcached client stored.
+        rd.write_all(&resp(&["GET", "11"])).unwrap();
+        expect_lines(&mut rd_r, &["$2", "66"]);
+        rd.write_all(&resp(&["SET", "12", "77"])).unwrap();
+        expect_lines(&mut rd_r, &["+OK"]);
+        mc.write_all(b"get 12\r\n").unwrap();
+        expect_lines(&mut mc_r, &["VALUE 12 0 2", "77", "END"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn recoverable_errors_keep_the_connection() {
+        let server = start_server(start_service(None));
+        let (mut s, mut r) = connect(&server);
+
+        // Unknown verb: ERROR, then the connection keeps serving.
+        s.write_all(b"frobnicate 1 2 3\r\n").unwrap();
+        expect_lines(&mut r, &["ERROR"]);
+        // Oversized key: client error, still recoverable.
+        let long_key = "k".repeat(300);
+        s.write_all(format!("get {long_key}\r\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("CLIENT_ERROR"), "got {line:?}");
+        s.write_all(b"set 2 0 0 1\r\n5\r\nget 2\r\n").unwrap();
+        expect_lines(&mut r, &["STORED", "VALUE 2 0 1", "5", "END"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn fatal_protocol_error_answers_then_closes() {
+        let server = start_server(start_service(None));
+        let (mut s, mut r) = connect(&server);
+
+        // An unparseable byte count cannot be re-framed: the decoder
+        // cannot know where the data block ends, so the server answers
+        // once and hangs up.
+        s.write_all(b"set 1 0 0 notanumber\r\nleftover\r\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("CLIENT_ERROR"), "got {line:?}");
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "connection must be closed after a fatal error");
+
+        server.stop();
+    }
+
+    #[test]
+    fn loadgen_smoke_both_protocols() {
+        let server = start_server(start_service(None));
+        let addr = server.local_addr().to_string();
+        for proto in [WireProto::Memcached, WireProto::Resp] {
+            let result = loadgen::run(&LoadgenConfig::smoke(&addr, proto)).unwrap();
+            assert!(result.ops > 0, "{}: no requests completed", proto.name());
+            assert_eq!(result.errors, 0, "{}: wire errors", proto.name());
+            assert!(result.sets > 0 && result.gets > 0);
+            assert!(result.p99_ns >= result.p50_ns);
+        }
+        server.stop();
+    }
+}
