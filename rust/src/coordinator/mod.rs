@@ -16,5 +16,6 @@
 mod service;
 
 pub use service::{
-    drive_clients, drive_clients_batched, CacheService, ServiceConfig, ServiceMetrics,
+    drive_clients, drive_clients_batched, CacheService, DegradedPolicy, ServiceConfig,
+    ServiceError, ServiceMetrics,
 };

@@ -8,15 +8,66 @@
 //! ([`crate::Cache::get_batch`]), instead of one worker serializing the
 //! whole batch. See DESIGN.md §Batched access path.
 
+use crate::fault::FaultPlan;
 use crate::lifetime::{BatchEntry, EntryOpts};
 use crate::metrics::{LatencyHistogram, OpCounters};
 use crate::tinylfu::AdmissionMode;
 use crate::util::hash;
 use crate::Cache;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// What the convenience ops ([`CacheService::get`] & co.) degrade to
+/// when a worker or the whole service is down, and what the wire front
+/// end answers for a degraded request. Never a panic — that was the
+/// pre-resilience behaviour this enum replaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradedPolicy {
+    /// Serve a miss (gets → `None`, puts dropped): availability over
+    /// accuracy — a cache miss is always a *correct* answer for a cache.
+    /// The default.
+    #[default]
+    MissThrough,
+    /// Surface the failure: the wire front end answers
+    /// `SERVER_ERROR unavailable` / `-ERR unavailable` instead of a miss,
+    /// for deployments that prefer visible errors to silent miss storms.
+    Error,
+}
+
+impl DegradedPolicy {
+    /// Parse `miss-through` / `error` (CLI `--degraded`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "miss-through" | "miss_through" | "miss" => Some(Self::MissThrough),
+            "error" => Some(Self::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Why a routed operation could not be served ([`CacheService::try_get`]
+/// & co.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The service has been halted / shut down (every op will fail).
+    Stopped,
+    /// The owning worker died mid-request (dropped the reply channel);
+    /// the supervisor restarts it, so a retry usually succeeds.
+    WorkerDown,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Stopped => write!(f, "cache service stopped"),
+            Self::WorkerDown => write!(f, "cache worker down (restarting)"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -34,11 +85,30 @@ pub struct ServiceConfig {
     /// [`CacheService::put_with`]. `None` (the default) keeps entries
     /// immortal — the pre-lifetime behaviour.
     pub default_ttl: Option<Duration>,
+    /// What degraded requests observe when a worker or the service is
+    /// down (see [`DegradedPolicy`]).
+    pub degraded: DegradedPolicy,
+    /// Load-shedding threshold: when more than this many requests are
+    /// queued across the worker channels, [`CacheService::overloaded`]
+    /// reports `true` and the wire front end answers `busy` instead of
+    /// queueing more work. `0` (the default) disables shedding — the
+    /// pre-resilience unbounded-queue behaviour.
+    pub shed_queue_depth: usize,
+    /// Fault-injection plan for chaos testing (worker panics); `None`
+    /// (the default) injects nothing. See [`crate::fault`].
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 4, admission: AdmissionMode::None, default_ttl: None }
+        Self {
+            workers: 4,
+            admission: AdmissionMode::None,
+            default_ttl: None,
+            degraded: DegradedPolicy::MissThrough,
+            shed_queue_depth: 0,
+            faults: None,
+        }
     }
 }
 
@@ -52,20 +122,61 @@ pub struct ServiceMetrics {
     /// Operation and hit counters.
     pub ops: OpCounters,
     /// Accepted [`CacheService::resize`] admin operations.
-    pub resizes: std::sync::atomic::AtomicU64,
+    pub resizes: AtomicU64,
+    /// Panicked workers restarted by the supervisor loop.
+    pub worker_restarts: AtomicU64,
+    /// Requests answered `busy` by load shedding instead of queueing.
+    pub shed: AtomicU64,
+    /// Connections evicted because their write queue exceeded the
+    /// slow-client byte cap (`--max-wq-bytes`).
+    pub evicted_slow: AtomicU64,
+    /// Connections refused at accept because `--max-conns` was reached.
+    pub rejected_conns: AtomicU64,
+    /// Convenience ops that degraded (to a miss / dropped put) because a
+    /// worker or the service was down.
+    pub degraded_ops: AtomicU64,
 }
 
 impl ServiceMetrics {
     /// Multi-line human-readable summary of all service metrics.
     pub fn report(&self) -> String {
         format!(
-            "gets={} puts={} hit_ratio={:.3}\n  get latency: {}\n  put latency: {}",
+            "gets={} puts={} hit_ratio={:.3}\n  get latency: {}\n  put latency: {}\n  \
+             resilience: shed={} evicted_slow={} rejected_conns={} worker_restarts={} \
+             degraded_ops={}",
             self.ops.gets.load(Ordering::Relaxed),
             self.ops.puts.load(Ordering::Relaxed),
             self.ops.hit_ratio(),
             self.get_latency.summary(),
             self.put_latency.summary(),
+            self.shed.load(Ordering::Relaxed),
+            self.evicted_slow.load(Ordering::Relaxed),
+            self.rejected_conns.load(Ordering::Relaxed),
+            self.worker_restarts.load(Ordering::Relaxed),
+            self.degraded_ops.load(Ordering::Relaxed),
         )
+    }
+
+    /// `(name, value)` pairs of every counter, for the wire-level
+    /// memcached `stats` / RESP `INFO` commands. Latencies are reported
+    /// as nanosecond percentiles.
+    pub fn stat_pairs(&self, queue_depth: usize) -> Vec<(&'static str, u64)> {
+        vec![
+            ("gets", self.ops.gets.load(Ordering::Relaxed)),
+            ("puts", self.ops.puts.load(Ordering::Relaxed)),
+            ("hits", self.ops.hits.load(Ordering::Relaxed)),
+            ("get_p50_ns", self.get_latency.percentile(50.0)),
+            ("get_p99_ns", self.get_latency.percentile(99.0)),
+            ("put_p50_ns", self.put_latency.percentile(50.0)),
+            ("put_p99_ns", self.put_latency.percentile(99.0)),
+            ("resizes", self.resizes.load(Ordering::Relaxed)),
+            ("queue_depth", queue_depth as u64),
+            ("shed", self.shed.load(Ordering::Relaxed)),
+            ("evicted_slow_clients", self.evicted_slow.load(Ordering::Relaxed)),
+            ("rejected_conns", self.rejected_conns.load(Ordering::Relaxed)),
+            ("worker_restarts", self.worker_restarts.load(Ordering::Relaxed)),
+            ("degraded_ops", self.degraded_ops.load(Ordering::Relaxed)),
+        ]
     }
 }
 
@@ -97,7 +208,9 @@ const RESIZE_STEP_SETS: usize = 64;
 pub struct CacheService {
     cache: Arc<dyn Cache>,
     senders: Vec<Sender<Request>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Worker handles, behind a mutex so [`CacheService::halt`] can join
+    /// from `&self` (the wire front end holds the service in an `Arc`).
+    workers: std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>,
     metrics: Arc<ServiceMetrics>,
     /// Background migration drivers spawned by [`CacheService::resize`];
     /// joined on shutdown (each terminates once its migration finishes).
@@ -105,6 +218,15 @@ pub struct CacheService {
     /// Options stamped on puts that do not carry their own (from
     /// [`ServiceConfig::default_ttl`]).
     default_opts: EntryOpts,
+    /// Requests currently queued across all worker channels (incremented
+    /// at send, decremented at dequeue) — the shedding signal.
+    depth: Arc<AtomicUsize>,
+    /// Set by [`CacheService::halt`]; once true every op degrades
+    /// ([`ServiceError::Stopped`]) instead of panicking.
+    stopped: Arc<AtomicBool>,
+    degraded: DegradedPolicy,
+    shed_queue_depth: usize,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl CacheService {
@@ -129,6 +251,8 @@ impl CacheService {
         assert!(cfg.workers >= 1);
         let cache = cfg.admission.wrap(cache);
         let metrics = Arc::new(ServiceMetrics::default());
+        let depth = Arc::new(AtomicUsize::new(0));
+        let stopped = Arc::new(AtomicBool::new(false));
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -136,10 +260,36 @@ impl CacheService {
             senders.push(tx);
             let cache = cache.clone();
             let metrics = metrics.clone();
+            let depth = depth.clone();
+            let stopped = stopped.clone();
+            let faults = cfg.faults.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cache-worker-{w}"))
-                    .spawn(move || worker_loop(rx, cache, metrics))
+                    .spawn(move || {
+                        // Supervisor: a clean return (Shutdown received or
+                        // the service dropped its sender) ends the thread;
+                        // a panic is caught and the loop re-entered on the
+                        // *same* receiver, so requests queued behind the
+                        // poisoned one survive the restart. The shared
+                        // cache is lock-free (atomics, no poisonable
+                        // state), so the restarted worker serves the same
+                        // shard safely.
+                        loop {
+                            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || worker_loop(&rx, &cache, &metrics, &depth, faults.as_deref()),
+                            ));
+                            match run {
+                                Ok(()) => return,
+                                Err(_) => {
+                                    metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                                    if stopped.load(Ordering::Acquire) {
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -156,10 +306,15 @@ impl CacheService {
         Self {
             cache,
             senders,
-            workers,
+            workers: std::sync::Mutex::new(workers),
             metrics,
             migrators: std::sync::Mutex::new(Vec::new()),
             default_opts,
+            depth,
+            stopped,
+            degraded: cfg.degraded,
+            shed_queue_depth: cfg.shed_queue_depth,
+            faults: cfg.faults,
         }
     }
 
@@ -222,38 +377,78 @@ impl CacheService {
         (hash::xxh64_u64(key, 0x40F7E4) as usize) % self.senders.len()
     }
 
-    /// Synchronous get through the service (router → worker → reply).
-    pub fn get(&self, key: u64) -> Option<u64> {
+    /// Route one request to `worker`, tracking queue depth. Fails only
+    /// once the service is halted (workers hold their receivers across
+    /// panics, so a live service never loses its channel).
+    fn route(&self, worker: usize, req: Request) -> Result<(), ServiceError> {
+        if self.stopped.load(Ordering::Acquire) {
+            return Err(ServiceError::Stopped);
+        }
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.senders[worker].send(req).map_err(|_| {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            ServiceError::Stopped
+        })
+    }
+
+    /// Synchronous get through the service (router → worker → reply),
+    /// surfacing failure instead of degrading: `Err(Stopped)` after
+    /// [`CacheService::halt`], `Err(WorkerDown)` when the owning worker
+    /// panicked mid-request (the supervisor restarts it, so a retry
+    /// usually succeeds).
+    pub fn try_get(&self, key: u64) -> Result<Option<u64>, ServiceError> {
         let (reply, rx) = channel();
-        self.senders[self.worker_of(key)]
-            .send(Request::Get { key, enqueued: Instant::now(), reply })
-            .expect("service stopped");
-        rx.recv().expect("worker dropped reply")
+        self.route(self.worker_of(key), Request::Get { key, enqueued: Instant::now(), reply })?;
+        rx.recv().map_err(|_| ServiceError::WorkerDown)
+    }
+
+    /// Synchronous get through the service (router → worker → reply).
+    /// Degrades to a miss (never panics) when a worker or the service is
+    /// down; use [`CacheService::try_get`] to observe the failure.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        self.try_get(key).unwrap_or_else(|_| self.degraded(None))
     }
 
     /// Fire-and-forget put (the common cache-fill pattern). Carries the
     /// service's default entry lifetime ([`ServiceConfig::default_ttl`]).
+    /// Dropped (never a panic) when the service is down.
     pub fn put(&self, key: u64, value: u64) {
         self.put_with(key, value, self.default_opts);
     }
 
-    /// Fire-and-forget put with explicit lifetime/weight options,
-    /// overriding the service default.
-    pub fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.senders[self.worker_of(key)]
-            .send(Request::Put { key, value, opts, enqueued: Instant::now() })
-            .expect("service stopped");
+    /// [`CacheService::put_with`] surfacing failure instead of silently
+    /// dropping the put.
+    pub fn try_put_with(&self, key: u64, value: u64, opts: EntryOpts) -> Result<(), ServiceError> {
+        self.route(
+            self.worker_of(key),
+            Request::Put { key, value, opts, enqueued: Instant::now() },
+        )
     }
 
-    /// Batched get with scatter/gather: keys are split by owning worker,
-    /// every involved worker probes its sub-batch concurrently (through
-    /// the cache's batched path), and the partial results are stitched
-    /// back so `result[i]` always answers `keys[i]`. One queue crossing
-    /// per worker instead of one per key.
-    pub fn get_batch(&self, keys: Vec<u64>) -> Vec<Option<u64>> {
+    /// Fire-and-forget put with explicit lifetime/weight options,
+    /// overriding the service default. Dropped (never a panic) when the
+    /// service is down.
+    pub fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
+        if self.try_put_with(key, value, opts).is_err() {
+            self.degraded(());
+        }
+    }
+
+    /// Count one degraded convenience op and produce its miss value.
+    fn degraded<T>(&self, miss: T) -> T {
+        self.metrics.degraded_ops.fetch_add(1, Ordering::Relaxed);
+        miss
+    }
+
+    /// Batched get with scatter/gather, surfacing failure:
+    /// `Err(Stopped)` when the service is halted before any sub-batch is
+    /// sent, `Err(WorkerDown)` when a worker panicked before answering
+    /// its sub-batch (partial results are discarded — the caller decides
+    /// whether to retry or degrade).
+    pub fn try_get_batch(&self, keys: Vec<u64>) -> Result<Vec<Option<u64>>, ServiceError> {
         let n = keys.len();
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let workers = self.senders.len();
         // Scatter: group keys by owning worker, remembering each key's
@@ -272,41 +467,61 @@ impl CacheService {
                 continue;
             }
             outstanding += 1;
-            self.senders[w]
-                .send(Request::GetBatch {
+            self.route(
+                w,
+                Request::GetBatch {
                     keys: std::mem::take(sub),
                     enqueued: Instant::now(),
                     worker: w,
                     reply: reply.clone(),
-                })
-                .expect("service stopped");
+                },
+            )?;
         }
         drop(reply);
         // Gather: sub-results arrive in any order; positions restore the
-        // input order exactly.
+        // input order exactly. A worker that panics mid-batch drops its
+        // reply clone without sending; once every live sender is gone
+        // `recv` errs and the missing sub-batch surfaces as WorkerDown.
         let mut out = vec![None; n];
         for _ in 0..outstanding {
-            let (w, values) = rx.recv().expect("worker dropped batch reply");
+            let (w, values) = rx.recv().map_err(|_| ServiceError::WorkerDown)?;
             debug_assert_eq!(values.len(), sub_positions[w].len());
             for (&pos, value) in sub_positions[w].iter().zip(values) {
                 out[pos] = value;
             }
         }
-        out
+        Ok(out)
+    }
+
+    /// Batched get with scatter/gather: keys are split by owning worker,
+    /// every involved worker probes its sub-batch concurrently (through
+    /// the cache's batched path), and the partial results are stitched
+    /// back so `result[i]` always answers `keys[i]`. One queue crossing
+    /// per worker instead of one per key. Degrades to all-misses (never
+    /// panics) when a worker or the service is down; use
+    /// [`CacheService::try_get_batch`] to observe the failure.
+    pub fn get_batch(&self, keys: Vec<u64>) -> Vec<Option<u64>> {
+        let n = keys.len();
+        self.try_get_batch(keys).unwrap_or_else(|_| self.degraded(vec![None; n]))
     }
 
     /// Batched fire-and-forget put, scattered by owning worker like
     /// [`CacheService::get_batch`]. Carries the service's default entry
     /// lifetime; use [`CacheService::put_batch_with`] to override it.
+    /// Dropped (never a panic) when the service is down.
     pub fn put_batch(&self, items: Vec<(u64, u64)>) {
         self.put_batch_with(items, self.default_opts);
     }
 
-    /// [`CacheService::put_batch`] with explicit lifetime/weight options
-    /// applied to every item of the batch.
-    pub fn put_batch_with(&self, items: Vec<(u64, u64)>, opts: EntryOpts) {
+    /// [`CacheService::put_batch_with`] surfacing failure instead of
+    /// silently dropping the remainder of the batch.
+    pub fn try_put_batch_with(
+        &self,
+        items: Vec<(u64, u64)>,
+        opts: EntryOpts,
+    ) -> Result<(), ServiceError> {
         if items.is_empty() {
-            return;
+            return Ok(());
         }
         let workers = self.senders.len();
         let mut sub: Vec<Vec<(u64, u64)>> = vec![Vec::new(); workers];
@@ -317,10 +532,46 @@ impl CacheService {
             if items.is_empty() {
                 continue;
             }
-            self.senders[w]
-                .send(Request::PutBatch { items, opts, enqueued: Instant::now() })
-                .expect("service stopped");
+            self.route(w, Request::PutBatch { items, opts, enqueued: Instant::now() })?;
         }
+        Ok(())
+    }
+
+    /// [`CacheService::put_batch`] with explicit lifetime/weight options
+    /// applied to every item of the batch. Dropped (never a panic) when
+    /// the service is down.
+    pub fn put_batch_with(&self, items: Vec<(u64, u64)>, opts: EntryOpts) {
+        if self.try_put_batch_with(items, opts).is_err() {
+            self.degraded(());
+        }
+    }
+
+    /// Requests currently queued across all worker channels.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Should new wire requests be shed right now? True when the queued
+    /// request count exceeds [`ServiceConfig::shed_queue_depth`] (when
+    /// enabled), or when a `shed_test` fault is armed.
+    pub fn overloaded(&self) -> bool {
+        if let Some(f) = &self.faults {
+            if f.shed_forced() {
+                return true;
+            }
+        }
+        self.shed_queue_depth > 0 && self.queue_depth() > self.shed_queue_depth
+    }
+
+    /// The configured degraded-mode policy (the wire front end consults
+    /// this to pick between serving misses and protocol errors).
+    pub fn degraded_policy(&self) -> DegradedPolicy {
+        self.degraded
+    }
+
+    /// Has [`CacheService::halt`] (or shutdown) been called?
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
     }
 
     /// Service-level metrics (latencies include queueing).
@@ -342,15 +593,23 @@ impl CacheService {
 
     /// Stop all workers (and any background migration drivers) and join
     /// them.
-    pub fn shutdown(mut self) {
-        self.stop();
+    pub fn shutdown(self) {
+        self.halt();
     }
 
-    fn stop(&mut self) {
+    /// [`CacheService::shutdown`] callable through a shared reference
+    /// (the wire front end holds the service in an `Arc`). Idempotent;
+    /// after it returns every op degrades per [`DegradedPolicy`] instead
+    /// of panicking.
+    pub fn halt(&self) {
+        // Release-publish the stop before the Shutdown messages so a
+        // restarting supervisor that catches a concurrent panic observes
+        // it and exits instead of re-entering its loop.
+        self.stopped.store(true, Ordering::Release);
         for tx in &self.senders {
             let _ = tx.send(Request::Shutdown);
         }
-        for h in self.workers.drain(..) {
+        for h in self.workers.lock().unwrap().drain(..) {
             let _ = h.join();
         }
         for h in self.migrators.lock().unwrap().drain(..) {
@@ -361,12 +620,32 @@ impl CacheService {
 
 impl Drop for CacheService {
     fn drop(&mut self) {
-        self.stop();
+        self.halt();
     }
 }
 
-fn worker_loop(rx: Receiver<Request>, cache: Arc<dyn Cache>, metrics: Arc<ServiceMetrics>) {
+fn worker_loop(
+    rx: &Receiver<Request>,
+    cache: &Arc<dyn Cache>,
+    metrics: &Arc<ServiceMetrics>,
+    depth: &AtomicUsize,
+    faults: Option<&FaultPlan>,
+) {
     while let Ok(req) = rx.recv() {
+        if matches!(req, Request::Shutdown) {
+            return;
+        }
+        // Dequeued: this request no longer occupies the shed budget
+        // (Shutdown messages are never counted, see `route`).
+        depth.fetch_sub(1, Ordering::Relaxed);
+        if let Some(f) = faults {
+            if f.worker_should_panic() {
+                // The panic unwinds out of this frame holding `req` — the
+                // reply sender drops unsent, so the blocked caller sees
+                // WorkerDown, and the supervisor restarts the loop.
+                panic!("injected fault: worker_panic");
+            }
+        }
         match req {
             Request::Get { key, enqueued, reply } => {
                 let value = cache.get(key);
@@ -410,7 +689,7 @@ fn worker_loop(rx: Receiver<Request>, cache: Arc<dyn Cache>, metrics: Arc<Servic
                 metrics.ops.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
                 metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
             }
-            Request::Shutdown => return,
+            Request::Shutdown => unreachable!("handled before dequeue accounting"),
         }
     }
 }

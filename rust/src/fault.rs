@@ -1,0 +1,321 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is parsed from a `--faults` spec string and threaded
+//! (as an `Arc`) into the components that host injection points: the
+//! service worker loop (`worker_panic`), the io threads (`io_stall`),
+//! the load generator (`conn_drop`) and the shedding check
+//! (`shed_test`). See DESIGN.md §Overload & fault tolerance for the
+//! grammar and the semantics of each fault.
+//!
+//! **Zero cost when off.** The injection *types* always compile (so
+//! configs can carry an `Option<Arc<FaultPlan>>` on every feature
+//! graph), but the injection *checks* are compiled to constant
+//! `false`/`None` unless the `fault-inject` cargo feature is enabled —
+//! the branches dead-code-eliminate out of the hot paths. The feature
+//! is on by default so plain `cargo test` exercises the chaos suite;
+//! production builds that want the checks erased compile with
+//! `--no-default-features --features simd`.
+//!
+//! Every probabilistic site draws from the *caller's* deterministic
+//! [`crate::util::rng::Rng`], so a chaos run is reproducible from its
+//! seed.
+
+use crate::lifetime::parse_duration;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// An `io_stall:DUR:pPROB` clause: with probability `prob`, an io thread
+/// sleeps for `stall` before processing its next event batch —
+/// simulating scheduling hiccups / packet-processing stalls.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IoStall {
+    /// How long one injected stall lasts.
+    pub stall: Duration,
+    /// Per-event-loop-iteration probability of stalling.
+    pub prob: f64,
+}
+
+/// A parsed fault plan: which faults to inject, with their parameters.
+///
+/// Construct with [`FaultPlan::parse`], share via `Arc`, then [`arm`]
+/// it when the faulty window opens. Injection points are inert until
+/// armed, so a server can carry a plan from startup and a chaos driver
+/// can open/close the fault window around a measured phase.
+///
+/// [`arm`]: FaultPlan::arm
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// `worker_panic@DUR`: one worker thread panics `DUR` after the plan
+    /// is armed (one-shot per arming).
+    pub worker_panic_after: Option<Duration>,
+    /// `io_stall:DUR:pPROB`: io threads randomly stall (see [`IoStall`]).
+    pub io_stall: Option<IoStall>,
+    /// `conn_drop:pPROB`: the load generator drops its connection with
+    /// this probability per pipeline round, then reconnects — simulating
+    /// flaky clients / network resets.
+    pub conn_drop: Option<f64>,
+    /// `shed_test`: force the service to report itself overloaded, so
+    /// every shed path answers `busy` regardless of real queue depth.
+    pub shed_test: bool,
+    /// The spec string this plan was parsed from (for reports).
+    spec: String,
+    /// When the plan was armed; `None` = disarmed (all checks inert).
+    armed_at: Mutex<Option<Instant>>,
+    /// One-shot latch for `worker_panic` (reset by [`FaultPlan::arm`]).
+    panic_fired: AtomicBool,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault spec, e.g.
+    /// `worker_panic@300ms,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test`.
+    ///
+    /// Grammar (clauses in any order, each at most once):
+    /// - `worker_panic@DUR` — DUR as in [`parse_duration`] (`300ms`, `5s`)
+    /// - `io_stall:DUR:pPROB` — PROB a float in `[0,1]` after a literal `p`
+    /// - `conn_drop:pPROB`
+    /// - `shed_test`
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::empty(spec);
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(dur) = clause.strip_prefix("worker_panic@") {
+                if plan.worker_panic_after.is_some() {
+                    bail!("duplicate worker_panic clause in {spec:?}");
+                }
+                plan.worker_panic_after = Some(
+                    parse_duration(dur)
+                        .ok_or_else(|| anyhow!("bad duration {dur:?} in {clause:?}"))?,
+                );
+            } else if let Some(rest) = clause.strip_prefix("io_stall:") {
+                if plan.io_stall.is_some() {
+                    bail!("duplicate io_stall clause in {spec:?}");
+                }
+                let (dur, prob) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("io_stall needs DUR:pPROB, got {clause:?}"))?;
+                plan.io_stall = Some(IoStall {
+                    stall: parse_duration(dur)
+                        .ok_or_else(|| anyhow!("bad duration {dur:?} in {clause:?}"))?,
+                    prob: parse_prob(prob, clause)?,
+                });
+            } else if let Some(prob) = clause.strip_prefix("conn_drop:") {
+                if plan.conn_drop.is_some() {
+                    bail!("duplicate conn_drop clause in {spec:?}");
+                }
+                plan.conn_drop = Some(parse_prob(prob, clause)?);
+            } else if clause == "shed_test" {
+                plan.shed_test = true;
+            } else {
+                bail!(
+                    "unknown fault clause {clause:?} (expected worker_panic@DUR, \
+                     io_stall:DUR:pPROB, conn_drop:pPROB or shed_test)"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// A plan with no faults (all checks inert even when armed).
+    pub fn empty(spec: &str) -> Self {
+        Self {
+            worker_panic_after: None,
+            io_stall: None,
+            conn_drop: None,
+            shed_test: false,
+            spec: spec.to_string(),
+            armed_at: Mutex::new(None),
+            panic_fired: AtomicBool::new(false),
+        }
+    }
+
+    /// The spec string this plan was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Open the fault window: injection points become live, the
+    /// `worker_panic` one-shot is re-armed.
+    pub fn arm(&self) {
+        self.panic_fired.store(false, Ordering::Relaxed);
+        *self.armed_at.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// Close the fault window: every injection point goes inert again.
+    pub fn disarm(&self) {
+        *self.armed_at.lock().unwrap() = None;
+    }
+
+    /// Is the fault window currently open?
+    pub fn armed(&self) -> bool {
+        self.armed_at.lock().unwrap().is_some()
+    }
+
+    /// Seconds since the window opened (`None` when disarmed).
+    fn armed_elapsed(&self) -> Option<Duration> {
+        self.armed_at.lock().unwrap().map(|t| t.elapsed())
+    }
+
+    /// Worker-loop injection point: should the calling worker panic now?
+    /// Fires at most once per [`FaultPlan::arm`] across all workers.
+    #[inline]
+    pub fn worker_should_panic(&self) -> bool {
+        #[cfg(feature = "fault-inject")]
+        {
+            let Some(after) = self.worker_panic_after else { return false };
+            if self.panic_fired.load(Ordering::Relaxed) {
+                return false;
+            }
+            match self.armed_elapsed() {
+                Some(elapsed) if elapsed >= after => {
+                    // One-shot: exactly one worker wins the swap.
+                    !self.panic_fired.swap(true, Ordering::Relaxed)
+                }
+                _ => false,
+            }
+        }
+        #[cfg(not(feature = "fault-inject"))]
+        false
+    }
+
+    /// Io-thread injection point: how long to stall before this event
+    /// batch, if at all.
+    #[inline]
+    pub fn io_stall_for(&self, rng: &mut Rng) -> Option<Duration> {
+        #[cfg(feature = "fault-inject")]
+        {
+            let stall = self.io_stall?;
+            if self.armed() && rng.chance(stall.prob) {
+                return Some(stall.stall);
+            }
+            None
+        }
+        #[cfg(not(feature = "fault-inject"))]
+        {
+            let _ = rng;
+            None
+        }
+    }
+
+    /// Loadgen injection point: drop the connection before this round?
+    #[inline]
+    pub fn should_drop_conn(&self, rng: &mut Rng) -> bool {
+        #[cfg(feature = "fault-inject")]
+        {
+            match self.conn_drop {
+                Some(p) => self.armed() && rng.chance(p),
+                None => false,
+            }
+        }
+        #[cfg(not(feature = "fault-inject"))]
+        {
+            let _ = rng;
+            false
+        }
+    }
+
+    /// Shed-check injection point: pretend the service is overloaded?
+    #[inline]
+    pub fn shed_forced(&self) -> bool {
+        #[cfg(feature = "fault-inject")]
+        {
+            self.shed_test && self.armed()
+        }
+        #[cfg(not(feature = "fault-inject"))]
+        false
+    }
+}
+
+fn parse_prob(s: &str, clause: &str) -> Result<f64> {
+    let digits = s
+        .strip_prefix('p')
+        .ok_or_else(|| anyhow!("probability must look like p0.01 in {clause:?}"))?;
+    let p: f64 = digits
+        .parse()
+        .map_err(|e| anyhow!("bad probability {digits:?} in {clause:?}: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("probability {p} out of [0,1] in {clause:?}");
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("worker_panic@5s,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test")
+            .unwrap();
+        assert_eq!(p.worker_panic_after, Some(Duration::from_secs(5)));
+        assert_eq!(
+            p.io_stall,
+            Some(IoStall { stall: Duration::from_millis(3), prob: 0.01 })
+        );
+        assert_eq!(p.conn_drop, Some(0.001));
+        assert!(p.shed_test);
+        assert_eq!(p.spec(), "worker_panic@5s,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test");
+    }
+
+    #[test]
+    fn empty_and_partial_specs() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.worker_panic_after.is_none() && p.io_stall.is_none());
+        assert!(p.conn_drop.is_none() && !p.shed_test);
+        let p = FaultPlan::parse("conn_drop:p0.5").unwrap();
+        assert_eq!(p.conn_drop, Some(0.5));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "worker_panic@never",
+            "io_stall:3ms",
+            "io_stall:3ms:0.01", // missing the p prefix
+            "conn_drop:p1.5",
+            "conn_drop:pNaN",
+            "explode",
+            "shed_test,shed_test,conn_drop:p0.1,conn_drop:p0.1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn injection_points_are_inert_until_armed() {
+        let p = FaultPlan::parse("worker_panic@0ms,conn_drop:p1.0,shed_test").unwrap();
+        let mut rng = Rng::new(7);
+        assert!(!p.worker_should_panic());
+        assert!(!p.should_drop_conn(&mut rng));
+        assert!(!p.shed_forced());
+        p.arm();
+        assert!(p.shed_forced());
+        assert!(p.should_drop_conn(&mut rng));
+        // worker_panic is one-shot: exactly one true per arming.
+        assert!(p.worker_should_panic());
+        assert!(!p.worker_should_panic());
+        p.arm(); // re-arming resets the one-shot
+        assert!(p.worker_should_panic());
+        p.disarm();
+        assert!(!p.shed_forced() && !p.should_drop_conn(&mut rng));
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn io_stall_draws_from_caller_rng() {
+        let p = FaultPlan::parse("io_stall:2ms:p1.0").unwrap();
+        let mut rng = Rng::new(1);
+        assert_eq!(p.io_stall_for(&mut rng), None, "disarmed plan must not stall");
+        p.arm();
+        assert_eq!(p.io_stall_for(&mut rng), Some(Duration::from_millis(2)));
+        let never = FaultPlan::parse("io_stall:2ms:p0.0").unwrap();
+        never.arm();
+        assert_eq!(never.io_stall_for(&mut rng), None);
+    }
+}

@@ -30,6 +30,7 @@
 
 #![warn(missing_docs)]
 
+pub mod fault;
 pub mod figures;
 pub mod lifetime;
 pub mod util;

@@ -10,6 +10,8 @@
 //!   serve       run the cache service demo (router + workers + metrics);
 //!               with --listen <addr>, serve memcached text + RESP over TCP
 //!   loadgen     pipelined TCP load generator against a running server
+//!   chaos       fault-injection drill: availability before/during/after
+//!               worker panics, conn drops, io stalls, forced shedding
 //!   validate    cross-check the XLA artifacts against the native engine
 //!   ballsbins   Theorem 4.1 bound vs Monte-Carlo
 //!   info        list trace models, implementations and artifacts
@@ -35,6 +37,8 @@
 //! phases explicitly against a twin built at the target capacity.
 
 use anyhow::{anyhow, bail, Result};
+use kway::coordinator::DegradedPolicy;
+use kway::fault::FaultPlan;
 use kway::lifetime::{parse_duration, WeightDist};
 use kway::policy::Policy;
 use kway::sim::{self, Config};
@@ -65,6 +69,7 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("validate") => cmd_validate(&args),
         Some("ballsbins") => cmd_ballsbins(&args),
         Some("info") => cmd_info(),
@@ -87,9 +92,11 @@ const HELP: &str = "usage: kway <subcommand> [--options]
   batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave]
   resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
   bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave] [--json]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C]
-             [--listen 127.0.0.1:11211 [--io-threads 2]]  (memcached text + RESP over TCP)
-  loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--seed 42] [--pin] [--smoke] [--json]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C] [--degraded miss|error] [--shed-depth N] [--faults SPEC]
+             [--listen 127.0.0.1:11211 [--io-threads 2] [--max-conns N] [--max-wq-bytes N] [--idle-timeout 30s] [--request-deadline 5s]]  (memcached text + RESP over TCP)
+  loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--seed 42] [--max-reconnects 1024] [--pin] [--smoke] [--json]
+  chaos      [--smoke] [--seed 42] [--phase-ms 600] [--faults SPEC]  (fault drill; writes BENCH_chaos.json)
+             SPEC e.g. worker_panic@5s,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test
   validate   [--artifacts artifacts] [--trace oltp]
   ballsbins  [--trials 500]
   info";
@@ -142,6 +149,35 @@ fn parse_resize(args: &Args) -> Result<Option<kway::throughput::ResizeSpec>> {
             Ok(Some(kway::throughput::ResizeSpec { at_ops, to_capacity }))
         }
         _ => bail!("--resize-at and --resize-to must be given together"),
+    }
+}
+
+/// Parse the shared resilience options of `serve` (both the in-process
+/// demo and `--listen`): `--degraded miss|error` (what a request sees
+/// while its worker is down — a served miss, or an explicit error),
+/// `--shed-depth N` (answer `busy` once more than N requests are queued;
+/// 0 = never shed) and `--faults SPEC` (a [`FaultPlan`] for chaos
+/// drills; armed immediately so the spec is live from process start).
+fn parse_resilience(args: &Args) -> Result<(DegradedPolicy, usize, Option<Arc<FaultPlan>>)> {
+    let raw = args.get_or("degraded", "miss");
+    let degraded = DegradedPolicy::parse(&raw)
+        .ok_or_else(|| anyhow!("bad --degraded {raw:?} (miss|error)"))?;
+    let shed_queue_depth = args.get_parsed_or("shed-depth", 0usize)?;
+    let faults = match args.get("faults") {
+        None => None,
+        Some(spec) => Some(Arc::new(FaultPlan::parse(spec)?)),
+    };
+    Ok((degraded, shed_queue_depth, faults))
+}
+
+/// Parse an optional duration-valued option (e.g. `--idle-timeout 30s`);
+/// absent means the guard is off.
+fn parse_opt_duration(args: &Args, key: &str) -> Result<Option<Duration>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(raw) => Ok(Some(parse_duration(raw).ok_or_else(|| {
+            anyhow!("bad --{key} {raw:?} (e.g. 500ms, 30s, 2m)")
+        })?)),
     }
 }
 
@@ -409,6 +445,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(listen) = args.get("listen") {
         return serve_tcp(args, listen, capacity, workers, admission, default_ttl, resize);
     }
+    let (degraded, shed_queue_depth, faults) = parse_resilience(args)?;
+    if let Some(plan) = &faults {
+        plan.arm();
+    }
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
     println!(
         "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}{}",
@@ -425,7 +465,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => String::new(),
         }
     );
-    let service = CacheService::start(cache, ServiceConfig { workers, admission, default_ttl });
+    let service = CacheService::start(
+        cache,
+        ServiceConfig { workers, admission, default_ttl, degraded, shed_queue_depth, faults },
+    );
     let keyspace = (capacity * 4) as u64;
     let done = AtomicBool::new(false);
     let secs = std::thread::scope(|scope| {
@@ -497,13 +540,34 @@ fn serve_tcp(
     use kway::net::{Server, ServerConfig};
     use std::sync::atomic::Ordering;
     let io_threads = args.get_parsed_or("io-threads", 2usize)?;
+    let (degraded, shed_queue_depth, faults) = parse_resilience(args)?;
+    let max_conns = args.get_parsed_or("max-conns", 0usize)?;
+    let max_wq_bytes = args.get_parsed_or("max-wq-bytes", 0usize)?;
+    let idle_timeout = parse_opt_duration(args, "idle-timeout")?;
+    let request_deadline = parse_opt_duration(args, "request-deadline")?;
+    if let Some(plan) = &faults {
+        plan.arm();
+    }
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
-    let service =
-        Arc::new(CacheService::start(cache, ServiceConfig { workers, admission, default_ttl }));
+    let service = Arc::new(CacheService::start(
+        cache,
+        ServiceConfig {
+            workers,
+            admission,
+            default_ttl,
+            degraded,
+            shed_queue_depth,
+            faults: faults.clone(),
+        },
+    ));
     let listener =
         std::net::TcpListener::bind(listen).map_err(|e| anyhow!("binding {listen}: {e}"))?;
-    let server = Server::start(listener, Arc::clone(&service), ServerConfig { io_threads })
-        .map_err(|e| anyhow!("starting the wire front end: {e}"))?;
+    let server = Server::start(
+        listener,
+        Arc::clone(&service),
+        ServerConfig { io_threads, max_conns, max_wq_bytes, idle_timeout, request_deadline, faults },
+    )
+    .map_err(|e| anyhow!("starting the wire front end: {e}"))?;
     println!(
         "kway: listening on {} (memcached text + RESP; workers={workers} io-threads={io_threads})",
         server.local_addr()
@@ -518,6 +582,12 @@ fn serve_tcp(
             None => String::new(),
         }
     );
+    if max_conns > 0 || max_wq_bytes > 0 || idle_timeout.is_some() || request_deadline.is_some() {
+        println!(
+            "kway: guards max-conns={max_conns} max-wq-bytes={max_wq_bytes} \
+             idle-timeout={idle_timeout:?} request-deadline={request_deadline:?} (0/None = off)"
+        );
+    }
     let mut resize_pending = resize;
     loop {
         std::thread::sleep(Duration::from_millis(100));
@@ -567,6 +637,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             },
             seed: args.get_parsed_or("seed", 42u64)?,
             pin: args.has_flag("pin"),
+            max_reconnects: args.get_parsed_or("max-reconnects", 1024u64)?,
+            faults: None,
         }
     };
     println!(
@@ -580,13 +652,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     );
     let r = loadgen::run(&cfg)?;
     println!(
-        "{:.3} Mops/s — ops={} hits={}/{} gets ({:.3}) errors={} p50={}ns p99={}ns mean={:.0}ns",
+        "{:.3} Mops/s — ops={} hits={}/{} gets ({:.3}) errors={} reconnects={} p50={}ns \
+         p99={}ns mean={:.0}ns",
         r.mops(),
         r.ops,
         r.hits,
         r.gets,
         r.hit_ratio(),
         r.errors,
+        r.reconnects,
         r.p50_ns,
         r.p99_ns,
         r.mean_ns
@@ -622,6 +696,149 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// `kway chaos`: the availability-under-faults drill. For each scenario
+/// — a fault-free baseline, one per injection point, plus `--faults
+/// SPEC` as a custom extra — it boots a loopback serving stack
+/// (KW-WFSC behind the [`kway::coordinator::CacheService`] router
+/// behind the TCP front end) and drives three loadgen phases: `before`
+/// (plan disarmed), `during` (armed) and `after` (disarmed again).
+/// Writes `BENCH_chaos.json` (`kway-chaos-v1`, schema-checked before
+/// writing) with per-phase ops/errors/reconnects/availability, the
+/// service's resilience counters, and a `recovered` verdict — the
+/// after-phase served without a single error. `--smoke` shortens the
+/// phases for CI. Without the `fault-inject` feature the drill still
+/// runs, but the injection points are compiled-out no-ops, so every
+/// scenario degenerates to the baseline.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use kway::coordinator::{CacheService, ServiceConfig};
+    use kway::kway::KwWfsc;
+    use kway::net::loadgen::{self, LoadgenConfig, LoadgenResult, WireProto};
+    use kway::net::{Server, ServerConfig};
+    use kway::util::json::{check_chaos_schema, Json, CHAOS_SCHEMA};
+    use std::sync::atomic::Ordering;
+
+    // Fraction of sent requests answered successfully. Conservative:
+    // io-level failures count against it even though those requests
+    // never completed a round trip.
+    fn availability(r: &LoadgenResult) -> f64 {
+        if r.ops == 0 {
+            return 0.0;
+        }
+        r.ops.saturating_sub(r.errors) as f64 / r.ops as f64
+    }
+    fn phase_row(name: &str, r: &LoadgenResult) -> Json {
+        Json::Object(vec![
+            ("phase".into(), Json::Str(name.into())),
+            ("ops".into(), Json::Int(r.ops as i64)),
+            ("errors".into(), Json::Int(r.errors as i64)),
+            ("reconnects".into(), Json::Int(r.reconnects as i64)),
+            ("availability".into(), Json::Float(availability(r))),
+        ])
+    }
+
+    let smoke = args.has_flag("smoke");
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let phase_ms = args.get_parsed_or("phase-ms", if smoke { 150u64 } else { 600u64 })?;
+    let mut scenarios: Vec<(&str, Arc<FaultPlan>)> = vec![
+        ("baseline", Arc::new(FaultPlan::empty(""))),
+        ("worker_panic", Arc::new(FaultPlan::parse("worker_panic@20ms")?)),
+        ("conn_drop", Arc::new(FaultPlan::parse("conn_drop:p0.05")?)),
+        ("io_stall", Arc::new(FaultPlan::parse("io_stall:1ms:p0.05")?)),
+        ("shed", Arc::new(FaultPlan::parse("shed_test")?)),
+    ];
+    if let Some(spec) = args.get("faults") {
+        scenarios.push(("custom", Arc::new(FaultPlan::parse(spec)?)));
+    }
+
+    println!(
+        "# chaos drill: {} scenarios, 3 x {phase_ms}ms phases each, seed {seed}{}",
+        scenarios.len(),
+        if smoke { " (smoke)" } else { "" }
+    );
+    println!(
+        "{:14} {:>7} {:>7} {:>7} {:>9} {:>6} {:>9} {:>10}",
+        "scenario", "before", "during", "after", "restarts", "shed", "degraded", "recovered"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for (name, plan) in &scenarios {
+        let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(16_384, 8, Policy::Lru));
+        let service = Arc::new(CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, faults: Some(Arc::clone(plan)), ..Default::default() },
+        ));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| anyhow!("binding a loopback port: {e}"))?;
+        let server = Server::start(
+            listener,
+            Arc::clone(&service),
+            ServerConfig { io_threads: 2, faults: Some(Arc::clone(plan)), ..Default::default() },
+        )
+        .map_err(|e| anyhow!("starting the {name} scenario server: {e}"))?;
+        let mut cfg = LoadgenConfig::smoke(&server.local_addr().to_string(), WireProto::Memcached);
+        cfg.duration = Duration::from_millis(phase_ms);
+        cfg.seed = seed;
+        cfg.max_reconnects = 10_000;
+        cfg.faults = Some(Arc::clone(plan));
+        let before = loadgen::run(&cfg)?;
+        plan.arm();
+        let during = loadgen::run(&cfg)?;
+        plan.disarm();
+        let after = loadgen::run(&cfg)?;
+        server.stop();
+        service.halt();
+        let m = service.metrics();
+        let restarts = m.worker_restarts.load(Ordering::Relaxed);
+        let shed = m.shed.load(Ordering::Relaxed);
+        let degraded_ops = m.degraded_ops.load(Ordering::Relaxed);
+        let rejected = m.rejected_conns.load(Ordering::Relaxed);
+        let evicted = m.evicted_slow.load(Ordering::Relaxed);
+        let recovered = after.errors == 0 && after.ops > 0;
+        println!(
+            "{name:14} {:>7.3} {:>7.3} {:>7.3} {restarts:>9} {shed:>6} {degraded_ops:>9} \
+             {recovered:>10}",
+            availability(&before),
+            availability(&during),
+            availability(&after),
+        );
+        rows.push(Json::Object(vec![
+            ("name".into(), Json::Str((*name).into())),
+            ("faults".into(), Json::Str(plan.spec().into())),
+            (
+                "phases".into(),
+                Json::Array(vec![
+                    phase_row("before", &before),
+                    phase_row("during", &during),
+                    phase_row("after", &after),
+                ]),
+            ),
+            ("worker_restarts".into(), Json::Int(restarts as i64)),
+            ("shed".into(), Json::Int(shed as i64)),
+            ("degraded_ops".into(), Json::Int(degraded_ops as i64)),
+            ("rejected_conns".into(), Json::Int(rejected as i64)),
+            ("evicted_slow_clients".into(), Json::Int(evicted as i64)),
+            ("recovered".into(), Json::Bool(recovered)),
+        ]));
+    }
+    let doc = Json::Object(vec![
+        ("schema".into(), Json::Str(CHAOS_SCHEMA.into())),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("seed".into(), Json::Int(seed as i64)),
+        (
+            "provenance".into(),
+            Json::Str("kway chaos: loopback serve + loadgen fault drill".into()),
+        ),
+        ("scenarios".into(), Json::Array(rows)),
+    ]);
+    // A document that fails its own schema check is a bug, not an
+    // artifact: refuse to write it.
+    check_chaos_schema(&doc)
+        .map_err(|e| anyhow!("chaos JSON failed the {CHAOS_SCHEMA} check: {e}"))?;
+    let path = "BENCH_chaos.json";
+    std::fs::write(path, format!("{doc}\n")).map_err(|e| anyhow!("writing {path}: {e}"))?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -31,10 +31,11 @@ use super::buf::{ReadBuf, WriteQueue};
 use super::memcached::{self, MemcachedDecoder};
 use super::resp::{self, RespDecoder};
 use super::{Command, WireKey};
-use crate::coordinator::CacheService;
+use crate::coordinator::{CacheService, DegradedPolicy};
 use crate::lifetime::EntryOpts;
 use std::io;
 use std::net::TcpStream;
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 /// Max bytes consumed from one socket per event-loop cycle, so one
@@ -167,6 +168,30 @@ impl<'a> Fuser<'a> {
     /// the drain loop.
     fn execute(&mut self, cmd: Command) -> DrainOutcome {
         match cmd {
+            // Degraded mode under the Error policy: once the service is
+            // halted, every data command answers `unavailable` instead
+            // of a fabricated miss/STORED (stores answer at accumulation
+            // time, so this must be decided before answering).
+            Command::Read { .. }
+            | Command::Write { .. }
+            | Command::WriteMany { .. }
+            | Command::Delete { .. }
+            | Command::Touch { .. }
+                if self.strictly_unavailable() =>
+            {
+                self.refuse(&cmd, "unavailable");
+                self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+            }
+            // Load shedding: over the queue-depth threshold (or under a
+            // `shed_test` fault) answer `busy` instead of queueing more
+            // work — a bounded, protocol-level refusal the client can
+            // retry, rather than unbounded latency.
+            Command::Read { .. } | Command::Write { .. } | Command::WriteMany { .. }
+                if self.service.overloaded() =>
+            {
+                self.refuse(&cmd, "busy");
+                self.service.metrics().shed.fetch_add(1, Ordering::Relaxed);
+            }
             Command::Read { keys, cas, single } => {
                 self.flush_writes();
                 self.read_keys.extend(keys.iter().map(|k| k.id));
@@ -204,6 +229,28 @@ impl<'a> Fuser<'a> {
                 self.flush_all();
                 self.exec_touch(&key, ttl, noreply);
             }
+            Command::Stats => {
+                self.flush_all();
+                let pairs = self.service.metrics().stat_pairs(self.service.queue_depth());
+                match self.proto {
+                    Proto::Memcached => {
+                        for (name, value) in pairs {
+                            memcached::encode_line(self.out, &format!("STAT {name} {value}"));
+                        }
+                        memcached::encode_end(self.out);
+                    }
+                    Proto::Resp => {
+                        let mut body = String::new();
+                        for (name, value) in pairs {
+                            body.push_str(name);
+                            body.push(':');
+                            body.push_str(&value.to_string());
+                            body.push_str("\r\n");
+                        }
+                        resp::encode_bulk_str(self.out, &body);
+                    }
+                }
+            }
             // The remaining commands answer immediately, so any open
             // accumulator must flush first to keep responses in
             // request order.
@@ -233,6 +280,32 @@ impl<'a> Fuser<'a> {
         DrainOutcome::Continue
     }
 
+    /// Is the service halted *and* configured to surface that as errors?
+    fn strictly_unavailable(&self) -> bool {
+        self.service.degraded_policy() == DegradedPolicy::Error && self.service.is_stopped()
+    }
+
+    /// Answer a refused data command (`busy` shed or `unavailable`
+    /// degraded mode) without executing it. Flushes open accumulators
+    /// first so responses keep request order; honours `noreply`.
+    fn refuse(&mut self, cmd: &Command, why: &str) {
+        self.flush_all();
+        let noreply = matches!(
+            cmd,
+            Command::Write { noreply: true, .. }
+                | Command::Delete { noreply: true, .. }
+                | Command::Touch { noreply: true, .. }
+        );
+        match self.proto {
+            Proto::Memcached => {
+                if !noreply {
+                    memcached::encode_line(self.out, &format!("SERVER_ERROR {why}"));
+                }
+            }
+            Proto::Resp => resp::encode_error(self.out, &format!("-ERR {why}")),
+        }
+    }
+
     fn opts_for(&self, ttl: Option<Duration>) -> EntryOpts {
         match ttl {
             Some(t) => EntryOpts::ttl(t),
@@ -257,12 +330,33 @@ impl<'a> Fuser<'a> {
     }
 
     /// Issue the fused `get_batch` and emit each queued read's response
-    /// from its slice of the result, in request order.
+    /// from its slice of the result, in request order. When a worker or
+    /// the service is down, degrades per [`DegradedPolicy`]: misses
+    /// (MissThrough) or one error reply per queued read (Error).
     fn flush_reads(&mut self) {
         if self.reads.is_empty() {
             return;
         }
-        let values = self.service.get_batch(std::mem::take(&mut self.read_keys));
+        let keys = std::mem::take(&mut self.read_keys);
+        let n = keys.len();
+        let values = match self.service.try_get_batch(keys) {
+            Ok(values) => values,
+            Err(_) => {
+                self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+                if self.service.degraded_policy() == DegradedPolicy::Error {
+                    for _ in self.reads.drain(..) {
+                        match self.proto {
+                            Proto::Memcached => {
+                                memcached::encode_line(self.out, "SERVER_ERROR unavailable")
+                            }
+                            Proto::Resp => resp::encode_error(self.out, "-ERR unavailable"),
+                        }
+                    }
+                    return;
+                }
+                vec![None; n]
+            }
+        };
         let mut at = 0;
         for req in self.reads.drain(..) {
             let hits = &values[at..at + req.keys.len()];
@@ -291,12 +385,18 @@ impl<'a> Fuser<'a> {
     }
 
     /// Issue the fused `put_batch_with` (responses were emitted at
-    /// accumulation time).
+    /// accumulation time — a batch the stopped service drops is counted
+    /// as degraded; the Error policy refuses *before* answering, in
+    /// [`Fuser::execute`], so this silent drop only happens under
+    /// MissThrough or when the service halts mid-pipeline).
     fn flush_writes(&mut self) {
         if self.writes.is_empty() {
             return;
         }
-        self.service.put_batch_with(std::mem::take(&mut self.writes), self.write_opts);
+        let batch = std::mem::take(&mut self.writes);
+        if self.service.try_put_batch_with(batch, self.write_opts).is_err() {
+            self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// memcached `add`: store only if absent. Executes unfused; the
@@ -486,6 +586,20 @@ impl Connection {
     fn flush(&mut self) -> bool {
         self.wq.flush(&mut self.stream).is_ok()
     }
+
+    /// Bytes of queued, unflushed responses — the event loop's
+    /// slow-client signal (a peer that stops reading while we keep
+    /// answering accumulates here).
+    pub fn queued_bytes(&self) -> usize {
+        self.wq.queued_bytes()
+    }
+
+    /// Whether a partial request is sitting in the read buffer — the
+    /// event loop's per-request-deadline signal (a complete request
+    /// would have been drained and answered by [`Connection::handle`]).
+    pub fn has_buffered_request(&self) -> bool {
+        !self.rbuf.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -665,6 +779,98 @@ mod tests {
         let (out, oc) = run(&mut s, &svc, b"*1\r\n+oops\r\n");
         assert_eq!(oc, DrainOutcome::Close);
         assert!(out.starts_with(b"-ERR"), "{:?}", String::from_utf8_lossy(&out));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_answers_in_both_protocols() {
+        let svc = service();
+        let mut s = Session::new();
+        let (_, _) = run(&mut s, &svc, b"set 1 0 0 2\r\n10\r\nget 1\r\n");
+        let (out, oc) = run(&mut s, &svc, b"stats\r\n");
+        assert_eq!(oc, DrainOutcome::Continue);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("STAT gets 1\r\n"), "{text:?}");
+        assert!(text.contains("STAT puts 1\r\n"), "{text:?}");
+        assert!(text.contains("STAT hits 1\r\n"), "{text:?}");
+        assert!(text.contains("STAT shed 0\r\n"), "{text:?}");
+        assert!(text.contains("STAT worker_restarts 0\r\n"), "{text:?}");
+        assert!(text.ends_with("END\r\n"), "{text:?}");
+        // RESP INFO: same pairs as one name:value bulk string.
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"*1\r\n$4\r\nINFO\r\n");
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with('$'), "{text:?}");
+        assert!(text.contains("gets:1\r\n"), "{text:?}");
+        assert!(text.contains("queue_depth:0\r\n"), "{text:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn halted_service_answers_misses_under_miss_through() {
+        let svc = service();
+        let mut s = Session::new();
+        let (_, _) = run(&mut s, &svc, b"set 1 0 0 2\r\n10\r\n");
+        svc.halt();
+        // Reads degrade to misses, stores still answer STORED (the put
+        // is dropped and counted); the connection stays usable.
+        let (out, oc) = run(&mut s, &svc, b"get 1\r\nset 2 0 0 1\r\n5\r\n");
+        assert_eq!(oc, DrainOutcome::Continue);
+        assert_eq!(out, b"END\r\nSTORED\r\n");
+        assert!(svc.metrics().degraded_ops.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn halted_service_answers_errors_under_error_policy() {
+        use crate::coordinator::DegradedPolicy;
+        let cache = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let svc = CacheService::start(
+            cache,
+            ServiceConfig {
+                workers: 2,
+                degraded: DegradedPolicy::Error,
+                ..ServiceConfig::default()
+            },
+        );
+        svc.halt();
+        let mut s = Session::new();
+        let wire = b"get 1\r\nset 2 0 0 1\r\n5\r\nset 3 0 0 1 noreply\r\n6\r\nversion\r\n";
+        let (out, _) = run(&mut s, &svc, wire);
+        let text = String::from_utf8(out).unwrap();
+        assert!(
+            text.starts_with("SERVER_ERROR unavailable\r\nSERVER_ERROR unavailable\r\nVERSION "),
+            "noreply suppresses its error line too: {text:?}"
+        );
+        // RESP flavour.
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"*2\r\n$3\r\nGET\r\n$1\r\n1\r\n");
+        assert_eq!(out, b"-ERR unavailable\r\n");
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn shed_test_fault_forces_busy_answers() {
+        use crate::fault::FaultPlan;
+        let cache = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        let faults = Arc::new(FaultPlan::parse("shed_test").unwrap());
+        let svc = CacheService::start(
+            cache,
+            ServiceConfig {
+                workers: 2,
+                faults: Some(Arc::clone(&faults)),
+                ..ServiceConfig::default()
+            },
+        );
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"set 1 0 0 2\r\n10\r\n");
+        assert_eq!(out, b"STORED\r\n");
+        faults.arm();
+        let (out, _) = run(&mut s, &svc, b"get 1\r\nset 2 0 0 1\r\n5\r\n");
+        assert_eq!(out, b"SERVER_ERROR busy\r\nSERVER_ERROR busy\r\n");
+        assert_eq!(svc.metrics().shed.load(Ordering::Relaxed), 2);
+        faults.disarm();
+        let (out, _) = run(&mut s, &svc, b"get 1\r\n");
+        assert_eq!(out, b"VALUE 1 0 2\r\n10\r\nEND\r\n", "disarm restores service");
         svc.shutdown();
     }
 

@@ -21,12 +21,14 @@
 //! concurrent pipelines, not an event loop, and portable clients keep
 //! the smoke test runnable where the epoll server itself cannot run.
 
+use crate::fault::FaultPlan;
 use crate::util::affinity;
 use crate::util::rng::{Rng, Zipf};
 use crate::util::stats::{percentile_u64, Reservoir};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-thread reservoir capacity (SNIPPETS.md Snippet 3: 10K per
@@ -88,6 +90,15 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Pin generator threads to cores.
     pub pin: bool,
+    /// Per-thread budget of reconnect attempts. A mid-run io error
+    /// (reset, timeout, server restart) counts into `errors` and the
+    /// connection is re-dialed with jittered exponential backoff; only
+    /// an exhausted budget fails the run. `0` restores the historical
+    /// fail-fast behaviour.
+    pub max_reconnects: u64,
+    /// Fault plan for the client-side injection point (`conn_drop`);
+    /// inert unless armed.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl LoadgenConfig {
@@ -107,6 +118,8 @@ impl LoadgenConfig {
             zipf_alpha: None,
             seed: 42,
             pin: false,
+            max_reconnects: 64,
+            faults: None,
         }
     }
 }
@@ -122,8 +135,12 @@ pub struct LoadgenResult {
     pub hits: u64,
     /// Store requests.
     pub sets: u64,
-    /// Error responses (protocol errors, unexpected replies).
+    /// Error responses (protocol errors, unexpected replies) plus
+    /// mid-run connection failures that forced a reconnect.
     pub errors: u64,
+    /// Connections re-dialed mid-run (after an io error or an injected
+    /// `conn_drop`).
+    pub reconnects: u64,
     /// Wall-clock seconds of the drive phase.
     pub secs: f64,
     /// Amortized per-op latency, 50th percentile (ns).
@@ -176,6 +193,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenResult> {
             merged.hits += stats.hits;
             merged.sets += stats.sets;
             merged.errors += stats.errors;
+            merged.reconnects += stats.reconnects;
             samples.extend_from_slice(reservoir.samples());
         }
         Ok(())
@@ -197,6 +215,7 @@ struct ThreadStats {
     hits: u64,
     sets: u64,
     errors: u64,
+    reconnects: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -225,14 +244,7 @@ fn worker(
     // Connections dealt round-robin: thread t owns conns t, t+T, ...
     let mut conns = Vec::new();
     for c in (thread_id..cfg.connections).step_by(threads) {
-        let stream = TcpStream::connect(&cfg.addr)
-            .with_context(|| format!("connecting conn {c} to {}", cfg.addr))?;
-        stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(Duration::from_secs(10)))
-            .context("setting read timeout")?;
-        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        conns.push(ClientConn { stream, reader, kinds: Vec::new(), wire: Vec::new() });
+        conns.push(connect(cfg).with_context(|| format!("connecting conn {c}"))?);
     }
 
     let thread_seed = cfg.seed.wrapping_add(thread_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -243,9 +255,19 @@ fn worker(
     let mut req_counter: u64 = 0;
     let deadline = Instant::now() + cfg.duration;
 
+    let plan = cfg.faults.as_deref();
+
     while Instant::now() < deadline {
-        // Send phase: queue a full pipeline on every connection.
+        // Send phase: queue a full pipeline on every connection. An io
+        // error mid-run is a counted, survivable event — re-dial and
+        // carry on — not a run-fatal one (ISSUE 8: the torture test
+        // kills connections on purpose).
         for conn in conns.iter_mut() {
+            // Injected flaky client: drop the connection (the server
+            // sees an abrupt close mid-stream) and re-dial.
+            if plan.is_some_and(|p| p.should_drop_conn(&mut rng)) {
+                *conn = reconnect(cfg, &mut rng, &mut stats)?;
+            }
             conn.wire.clear();
             conn.kinds.clear();
             for _ in 0..cfg.pipeline {
@@ -263,19 +285,38 @@ fn worker(
                     conn.kinds.push(ReqKind::Get);
                 }
             }
-            conn.stream.write_all(&conn.wire).context("writing pipeline")?;
+            if conn.stream.write_all(&conn.wire).is_err() {
+                stats.errors += 1;
+                conn.kinds.clear(); // nothing reached the server whole
+                *conn = reconnect(cfg, &mut rng, &mut stats)?;
+            }
         }
 
         // Read phase: collect every connection's responses; record the
-        // pipeline round-trip as amortized per-op samples.
+        // pipeline round-trip as amortized per-op samples. A read error
+        // abandons the round's remaining responses (the replacement
+        // connection has no history to collect).
         for conn in conns.iter_mut() {
+            if conn.kinds.is_empty() {
+                continue; // send failed: nothing in flight
+            }
             let round_start = Instant::now();
+            let mut failed = false;
             for i in 0..conn.kinds.len() {
-                let kind = conn.kinds[i];
-                match kind {
-                    ReqKind::Get => read_get_response(cfg, conn, &mut stats)?,
-                    ReqKind::Set => read_set_response(cfg, conn, &mut stats)?,
+                let result = match conn.kinds[i] {
+                    ReqKind::Get => read_get_response(cfg, conn, &mut stats),
+                    ReqKind::Set => read_set_response(cfg, conn, &mut stats),
+                };
+                if result.is_err() {
+                    stats.errors += 1;
+                    failed = true;
+                    break;
                 }
+            }
+            if failed {
+                conn.kinds.clear();
+                *conn = reconnect(cfg, &mut rng, &mut stats)?;
+                continue;
             }
             let per_op = round_start.elapsed().as_nanos() as u64 / cfg.pipeline as u64;
             for _ in 0..cfg.pipeline {
@@ -285,6 +326,41 @@ fn worker(
         }
     }
     Ok((stats, reservoir))
+}
+
+/// Dial one client connection.
+fn connect(cfg: &LoadgenConfig) -> Result<ClientConn> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to {}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).context("setting read timeout")?;
+    let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    Ok(ClientConn { stream, reader, kinds: Vec::new(), wire: Vec::new() })
+}
+
+/// Re-dial after a drop or io error, with jittered exponential backoff
+/// between failed attempts. Fails only when the per-thread
+/// `max_reconnects` budget is exhausted.
+fn reconnect(cfg: &LoadgenConfig, rng: &mut Rng, stats: &mut ThreadStats) -> Result<ClientConn> {
+    let mut backoff = Duration::from_millis(1);
+    loop {
+        if stats.reconnects >= cfg.max_reconnects {
+            bail!("reconnect budget exhausted ({}) against {}", cfg.max_reconnects, cfg.addr);
+        }
+        stats.reconnects += 1;
+        match connect(cfg) {
+            Ok(conn) => return Ok(conn),
+            Err(e) => {
+                if stats.reconnects >= cfg.max_reconnects {
+                    return Err(e).context("last reconnect attempt failed");
+                }
+                // Jitter de-synchronizes threads hammering a reviving
+                // server; the cap keeps the generator responsive.
+                std::thread::sleep(backoff + Duration::from_micros(rng.below(500)));
+                backoff = (backoff * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
 }
 
 fn encode_get(cfg: &LoadgenConfig, wire: &mut Vec<u8>, key: u64) {

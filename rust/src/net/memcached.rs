@@ -71,6 +71,7 @@ impl MemcachedDecoder {
             }
             b"delete" => decode_delete(&rest),
             b"touch" => decode_touch(&rest),
+            b"stats" => Command::Stats,
             b"version" => Command::Version,
             b"quit" => Command::Quit,
             _ => Command::Bad { line: "ERROR".into() },
@@ -369,11 +370,18 @@ mod tests {
     #[test]
     fn unknown_command_answers_error() {
         let mut dec = MemcachedDecoder::new();
-        let cmds = decode_all(&mut dec, b"incr 1 5\r\nstats\r\n");
+        let cmds = decode_all(&mut dec, b"incr 1 5\r\nflush_all\r\n");
         assert_eq!(cmds.len(), 2);
         for c in &cmds {
             assert!(matches!(c, Command::Bad { line } if line == "ERROR"));
         }
+    }
+
+    #[test]
+    fn stats_parses() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"stats\r\n");
+        assert_eq!(cmds, vec![Command::Stats]);
     }
 
     #[test]

@@ -171,6 +171,11 @@ pub enum Command {
         /// memcached `noreply`.
         noreply: bool,
     },
+    /// memcached `stats` / RESP `INFO`: dump the service metrics
+    /// ([`crate::coordinator::ServiceMetrics::stat_pairs`]) as `STAT
+    /// name value` lines + `END` (memcached) or one `name:value`-lines
+    /// bulk string (RESP).
+    Stats,
     /// RESP `PING` → `+PONG`.
     Ping,
     /// memcached `version` → `VERSION <crate version>`.

@@ -130,6 +130,7 @@ fn interpret(args: &[Vec<u8>]) -> Command {
     match verb.as_slice() {
         b"PING" => Command::Ping,
         b"QUIT" => Command::Quit,
+        b"INFO" => Command::Stats,
         b"GET" => match args {
             [_, key] => match wire_key(key) {
                 Ok(k) => Command::Read { keys: vec![k], cas: false, single: true },
@@ -275,6 +276,16 @@ pub fn encode_bulk(out: &mut Vec<u8>, value: Option<u64>) {
             out.extend_from_slice(b"\r\n");
         }
     }
+}
+
+/// Append a bulk-string reply carrying arbitrary text (the `INFO`
+/// response body).
+pub fn encode_bulk_str(out: &mut Vec<u8>, body: &str) {
+    out.push(b'$');
+    out.extend_from_slice(body.len().to_string().as_bytes());
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body.as_bytes());
+    out.extend_from_slice(b"\r\n");
 }
 
 /// Append an array header `*n` (elements follow as bulk replies).
@@ -473,5 +484,14 @@ mod tests {
         encode_bulk(&mut out, None);
         encode_array_header(&mut out, 2);
         assert_eq!(out, b"+OK\r\n+PONG\r\n:2\r\n$2\r\n42\r\n$-1\r\n*2\r\n");
+        let mut out = Vec::new();
+        encode_bulk_str(&mut out, "gets:1\r\n");
+        assert_eq!(out, b"$8\r\ngets:1\r\n\r\n");
+    }
+
+    #[test]
+    fn info_parses_to_stats() {
+        assert_eq!(one(&frame(&[b"INFO"])), Command::Stats);
+        assert_eq!(one(&frame(&[b"info"])), Command::Stats);
     }
 }

@@ -22,14 +22,25 @@
 use super::conn::Connection;
 use super::poll::Poller;
 use crate::coordinator::CacheService;
-use std::io;
+use crate::fault::FaultPlan;
+use crate::util::rng::Rng;
+use std::io::{self, Write};
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Server tuning knobs.
+/// Sweep idle/deadline-expired connections every this many poll waits
+/// (each wait times out after 20ms, so a sweep runs roughly every
+/// quarter second — coarse on purpose, timeouts here are seconds-scale
+/// overload guards, not precision timers).
+const SWEEP_TICKS: u32 = 12;
+
+/// Server tuning knobs. The guard fields all default to *off* (`0` /
+/// `None`), so a default-configured server behaves exactly like the
+/// pre-guard one; `kway serve` wires them to `--max-conns`,
+/// `--max-wq-bytes`, `--idle-timeout` and `--request-deadline`.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Event-loop threads (the acceptor is a separate, mostly-idle
@@ -38,11 +49,41 @@ pub struct ServerConfig {
     ///
     /// [`CacheService`]: crate::coordinator::CacheService
     pub io_threads: usize,
+    /// Max simultaneously served connections; `0` = unlimited. Over the
+    /// limit the acceptor answers `SERVER_ERROR too many connections`
+    /// and closes — an explicit refusal the client can see, instead of
+    /// an ever-growing accept backlog. (The protocol is sniffed from a
+    /// connection's first byte, which has not arrived at accept time,
+    /// so the refusal line is memcached-style on both protocols — a
+    /// RESP client sees a malformed reply then EOF, which its framing
+    /// treats as a connection error. Documented deviation.)
+    pub max_conns: usize,
+    /// Per-connection cap on queued unflushed response bytes; `0` =
+    /// unlimited. A peer that stops reading while we keep answering is
+    /// a *slow client* holding server memory hostage; past the cap the
+    /// connection is evicted and counted in `evicted_slow_clients`.
+    pub max_wq_bytes: usize,
+    /// Close connections with no socket activity for this long.
+    pub idle_timeout: Option<Duration>,
+    /// Close connections that leave a request *partially* sent for
+    /// this long (slowloris-style dribble); complete requests are
+    /// answered in the same event cycle and never wait on this.
+    pub request_deadline: Option<Duration>,
+    /// Fault plan for the io-thread injection points (`io_stall`);
+    /// inert unless armed, absent in production configs.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { io_threads: 2 }
+        Self {
+            io_threads: 2,
+            max_conns: 0,
+            max_wq_bytes: 0,
+            idle_timeout: None,
+            request_deadline: None,
+            faults: None,
+        }
     }
 }
 
@@ -77,6 +118,7 @@ impl Server {
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let accepted = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
         let mut threads = Vec::with_capacity(io_threads + 1);
         let mut senders = Vec::with_capacity(io_threads);
 
@@ -85,20 +127,23 @@ impl Server {
             senders.push(tx);
             let service = Arc::clone(&service);
             let shutdown = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            let live = Arc::clone(&live);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("kway-io-{i}"))
-                    .spawn(move || io_loop(poller, rx, service, shutdown))?,
+                    .spawn(move || io_loop(poller, rx, service, shutdown, cfg, live, i as u64))?,
             );
         }
 
         {
             let shutdown = Arc::clone(&shutdown);
             let accepted = Arc::clone(&accepted);
+            let max_conns = cfg.max_conns;
             threads.push(
-                std::thread::Builder::new()
-                    .name("kway-accept".into())
-                    .spawn(move || accept_loop(listener, senders, shutdown, accepted))?,
+                std::thread::Builder::new().name("kway-accept".into()).spawn(move || {
+                    accept_loop(listener, senders, shutdown, accepted, service, max_conns, live)
+                })?,
             );
         }
 
@@ -137,17 +182,23 @@ impl Drop for Server {
     }
 }
 
-/// Accept loop: non-blocking accepts, round-robin dispatch.
+/// Accept loop: non-blocking accepts, round-robin dispatch, max-conns
+/// refusal. `live` counts dispatched-but-not-yet-closed connections
+/// (incremented here, decremented by the owning io thread on every
+/// close path).
 fn accept_loop(
     listener: TcpListener,
     senders: Vec<mpsc::Sender<Connection>>,
     shutdown: Arc<AtomicBool>,
     accepted: Arc<AtomicU64>,
+    service: Arc<CacheService>,
+    max_conns: usize,
+    live: Arc<AtomicUsize>,
 ) {
     let mut next = 0usize;
     while !shutdown.load(Ordering::Relaxed) {
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
                 if stream.set_nonblocking(true).is_err() {
                     continue;
                 }
@@ -155,6 +206,15 @@ fn accept_loop(
                 // adds latency. Best-effort.
                 let _ = stream.set_nodelay(true);
                 accepted.fetch_add(1, Ordering::Relaxed);
+                if max_conns > 0 && live.load(Ordering::Relaxed) >= max_conns {
+                    // Answer-then-close: a fresh socket's send buffer is
+                    // empty, so the nonblocking write virtually always
+                    // lands whole; failure just means a silent close.
+                    let _ = stream.write_all(b"SERVER_ERROR too many connections\r\n");
+                    service.metrics().rejected_conns.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                live.fetch_add(1, Ordering::Relaxed);
                 if senders[next % senders.len()].send(Connection::new(stream)).is_err() {
                     return; // io thread gone: shutting down
                 }
@@ -174,43 +234,74 @@ struct Slot {
     conn: Connection,
     fd: i32,
     want_write: bool,
+    /// Last socket event on this connection (idle-timeout clock).
+    last_activity: Instant,
+    /// When the read buffer first held a partial request with no
+    /// complete one to answer (request-deadline clock); cleared as
+    /// soon as the buffer empties.
+    partial_since: Option<Instant>,
 }
 
-/// One io thread: register incoming connections, poll, drive.
+/// One io thread: register incoming connections, poll, drive, and —
+/// when configured — evict slow clients (write-queue byte cap) and
+/// sweep idle / deadline-expired connections off the 20ms wait tick.
 fn io_loop(
     poller: Poller,
     rx: mpsc::Receiver<Connection>,
     service: Arc<CacheService>,
     shutdown: Arc<AtomicBool>,
+    cfg: ServerConfig,
+    live: Arc<AtomicUsize>,
+    seed: u64,
 ) {
     let mut slots: Vec<Option<Slot>> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
     let mut events = Vec::new();
+    // Per-thread deterministic rng for the io_stall injection point.
+    let mut rng = Rng::new(0xC4A0_5EED ^ seed);
+    let mut ticks: u32 = 0;
+    let sweeping = cfg.idle_timeout.is_some() || cfg.request_deadline.is_some();
 
     while !shutdown.load(Ordering::Relaxed) {
         // Adopt newly accepted connections.
         while let Ok(conn) = rx.try_recv() {
             let fd = conn.raw_fd();
+            let slot = Slot {
+                conn,
+                fd,
+                want_write: false,
+                last_activity: Instant::now(),
+                partial_since: None,
+            };
             let token = match free.pop() {
                 Some(i) => {
-                    slots[i] = Some(Slot { conn, fd, want_write: false });
+                    slots[i] = Some(slot);
                     i
                 }
                 None => {
-                    slots.push(Some(Slot { conn, fd, want_write: false }));
+                    slots.push(Some(slot));
                     slots.len() - 1
                 }
             };
             if poller.add(fd, token as u64, false).is_err() {
                 slots[token] = None;
                 free.push(token);
+                live.fetch_sub(1, Ordering::Relaxed);
             }
         }
 
         if poller.wait(&mut events, 20).is_err() {
             // A broken poller cannot recover; drop the thread's
             // connections and exit rather than spin.
-            return;
+            break;
+        }
+
+        // Injected scheduling hiccup before this event batch (inert
+        // unless a fault plan is armed; see `kway::fault`).
+        if let Some(faults) = &cfg.faults {
+            if let Some(stall) = faults.io_stall_for(&mut rng) {
+                std::thread::sleep(stall);
+            }
         }
 
         for ev in &events {
@@ -220,18 +311,59 @@ fn io_loop(
             };
             let readable = ev.readable || ev.closed;
             let status = slot.conn.handle(readable, &service);
+            slot.last_activity = Instant::now();
+            slot.partial_since = if slot.conn.has_buffered_request() {
+                slot.partial_since.or(Some(slot.last_activity))
+            } else {
+                None
+            };
             let fd = slot.fd;
             let prev_want_write = slot.want_write;
-            if !status.open {
+            // A peer that will not read while responses pile up is a
+            // slow client; past the byte cap it forfeits the connection
+            // (its queued responses are dropped with it).
+            let too_slow = cfg.max_wq_bytes > 0 && slot.conn.queued_bytes() > cfg.max_wq_bytes;
+            if !status.open || too_slow {
+                if status.open {
+                    service.metrics().evicted_slow.fetch_add(1, Ordering::Relaxed);
+                }
                 let _ = poller.delete(fd);
                 slots[token] = None;
                 free.push(token);
+                live.fetch_sub(1, Ordering::Relaxed);
             } else if status.want_write != prev_want_write {
                 if poller.modify(fd, token as u64, status.want_write).is_ok() {
                     slot.want_write = status.want_write;
                 }
             }
         }
+
+        ticks = ticks.wrapping_add(1);
+        if sweeping && ticks % SWEEP_TICKS == 0 {
+            let now = Instant::now();
+            for i in 0..slots.len() {
+                let Some(slot) = &slots[i] else { continue };
+                let idle = cfg
+                    .idle_timeout
+                    .is_some_and(|t| now.duration_since(slot.last_activity) > t);
+                let stalled = cfg.request_deadline.is_some_and(|t| {
+                    slot.partial_since.is_some_and(|since| now.duration_since(since) > t)
+                });
+                if idle || stalled {
+                    let _ = poller.delete(slot.fd);
+                    slots[i] = None;
+                    free.push(i);
+                    live.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    // Surrender this thread's live-count share so a restarted server
+    // sharing the counter (not a thing today, but cheap insurance)
+    // never sees phantom connections.
+    for _ in slots.iter().flatten() {
+        live.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -305,6 +437,79 @@ mod tests {
     fn stop_is_idempotent_and_drops_open_connections() {
         let (server, _service) = start_server();
         let _open = TcpStream::connect(server.local_addr()).unwrap();
+        server.stop();
+    }
+
+    fn start_with(cfg: ServerConfig) -> (Server, Arc<CacheService>) {
+        let cache = Arc::new(KwWfsc::new(4096, 8, Policy::Lru));
+        let service = Arc::new(CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, ..ServiceConfig::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = Server::start(listener, Arc::clone(&service), cfg).unwrap();
+        (server, service)
+    }
+
+    #[test]
+    fn over_limit_connections_are_refused_with_an_answer() {
+        let (server, service) =
+            start_with(ServerConfig { max_conns: 1, ..ServerConfig::default() });
+        // Occupy the single slot and prove it is being served.
+        let mut first = TcpStream::connect(server.local_addr()).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        first.write_all(b"version\r\n").unwrap();
+        let mut reader = BufReader::new(first.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("VERSION"), "{line:?}");
+        // The next connection must be answered then closed.
+        let second = TcpStream::connect(server.local_addr()).unwrap();
+        second.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(second);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "SERVER_ERROR too many connections");
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "then EOF");
+        assert!(service.metrics().rejected_conns.load(Ordering::Relaxed) >= 1);
+        drop(first);
+        server.stop();
+    }
+
+    #[test]
+    fn idle_connections_are_reaped() {
+        let (server, _service) = start_with(ServerConfig {
+            idle_timeout: Some(Duration::from_millis(50)),
+            ..ServerConfig::default()
+        });
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        c.write_all(b"version\r\n").unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("VERSION"), "{line:?}");
+        // Go quiet: the sweep must close us well within the read timeout.
+        let mut buf = [0u8; 16];
+        let n = std::io::Read::read(&mut c, &mut buf).unwrap();
+        assert_eq!(n, 0, "server must close the idle connection");
+        server.stop();
+    }
+
+    #[test]
+    fn stalled_partial_requests_hit_the_deadline() {
+        let (server, _service) = start_with(ServerConfig {
+            request_deadline: Some(Duration::from_millis(50)),
+            ..ServerConfig::default()
+        });
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // A request that never completes (no CRLF) — slowloris dribble.
+        c.write_all(b"get 1").unwrap();
+        let mut buf = [0u8; 16];
+        let n = std::io::Read::read(&mut c, &mut buf).unwrap();
+        assert_eq!(n, 0, "server must drop the stalled request");
         server.stop();
     }
 }

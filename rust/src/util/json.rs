@@ -466,6 +466,81 @@ pub fn check_serve_schema(doc: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Schema tag of `BENCH_chaos.json`, the availability-under-faults
+/// artifact written by `kway chaos` (DESIGN.md §Overload & fault
+/// tolerance). One scenario per injected fault (plus a fault-free
+/// baseline); each scenario reports the before/during/after loadgen
+/// phases around the armed fault window — ops, errors, reconnects and
+/// the derived availability — plus the service's resilience counters
+/// and a `recovered` verdict (the after-phase served cleanly).
+pub const CHAOS_SCHEMA: &str = "kway-chaos-v1";
+
+/// Validate a chaos document against [`CHAOS_SCHEMA`]; `kway chaos`
+/// runs it before writing, like [`check_bench_schema`], and the CI
+/// chaos-smoke job re-validates the emitted file.
+pub fn check_chaos_schema(doc: &Json) -> Result<()> {
+    let field = |key: &str| doc.get(key).ok_or_else(|| anyhow!("missing field {key:?}"));
+    let schema = field("schema")?.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+    if schema != CHAOS_SCHEMA {
+        bail!("schema {schema:?} != {CHAOS_SCHEMA:?}");
+    }
+    if field("provenance")?.as_str().is_none() {
+        bail!("field \"provenance\" must be a string");
+    }
+    if field("seed")?.as_i64().is_none() {
+        bail!("field \"seed\" must be an integer");
+    }
+    if field("smoke")?.as_bool().is_none() {
+        bail!("field \"smoke\" must be a boolean");
+    }
+    let scenarios =
+        field("scenarios")?.as_array().ok_or_else(|| anyhow!("scenarios: not an array"))?;
+    if scenarios.is_empty() {
+        bail!("scenarios must not be empty");
+    }
+    for (i, sc) in scenarios.iter().enumerate() {
+        let sfield =
+            |key: &str| sc.get(key).ok_or_else(|| anyhow!("scenarios[{i}]: missing {key:?}"));
+        for key in ["name", "faults"] {
+            if sfield(key)?.as_str().is_none() {
+                bail!("scenarios[{i}]: {key:?} must be a string");
+            }
+        }
+        for key in
+            ["worker_restarts", "shed", "degraded_ops", "rejected_conns", "evicted_slow_clients"]
+        {
+            if sfield(key)?.as_i64().is_none() {
+                bail!("scenarios[{i}]: {key:?} must be an integer");
+            }
+        }
+        if sfield("recovered")?.as_bool().is_none() {
+            bail!("scenarios[{i}]: \"recovered\" must be a boolean");
+        }
+        let phases =
+            sfield("phases")?.as_array().ok_or_else(|| anyhow!("scenarios[{i}]: phases"))?;
+        if phases.len() != 3 {
+            bail!("scenarios[{i}]: expected 3 phases (before/during/after), got {}", phases.len());
+        }
+        for (j, ph) in phases.iter().enumerate() {
+            let pfield = |key: &str| {
+                ph.get(key).ok_or_else(|| anyhow!("scenarios[{i}].phases[{j}]: missing {key:?}"))
+            };
+            if pfield("phase")?.as_str().is_none() {
+                bail!("scenarios[{i}].phases[{j}]: phase must be a string");
+            }
+            for key in ["ops", "errors", "reconnects"] {
+                if pfield(key)?.as_i64().is_none() {
+                    bail!("scenarios[{i}].phases[{j}]: {key:?} must be an integer");
+                }
+            }
+            if pfield("availability")?.as_f64().is_none() {
+                bail!("scenarios[{i}].phases[{j}]: availability must be numeric");
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -676,6 +751,71 @@ mod tests {
             }
             assert!(check_serve_schema(&doc).is_err(), "dropping {key} must fail");
         }
+    }
+
+    fn chaos_doc(schema: &str) -> Json {
+        parse(&format!(
+            r#"{{"schema":"{schema}","smoke":true,"seed":42,
+                "provenance":"kway chaos, loopback serve + loadgen",
+                "scenarios":[{{"name":"worker_panic",
+                  "faults":"worker_panic@50ms",
+                  "phases":[
+                    {{"phase":"before","ops":1000,"errors":0,"reconnects":0,"availability":1.0}},
+                    {{"phase":"during","ops":900,"errors":12,"reconnects":1,"availability":0.987}},
+                    {{"phase":"after","ops":1000,"errors":0,"reconnects":0,"availability":1.0}}],
+                  "worker_restarts":1,"shed":0,"degraded_ops":3,
+                  "rejected_conns":0,"evicted_slow_clients":0,
+                  "recovered":true}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn chaos_schema_v1_accepts_and_rejects() {
+        assert_eq!(CHAOS_SCHEMA, "kway-chaos-v1", "schema bumps must update this check");
+        check_chaos_schema(&chaos_doc("kway-chaos-v1")).unwrap();
+        assert!(check_chaos_schema(&chaos_doc("kway-chaos-v0")).is_err());
+        // An empty scenario list is not an artifact.
+        let mut doc = chaos_doc("kway-chaos-v1");
+        if let Json::Object(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "scenarios" {
+                    *v = Json::Array(vec![]);
+                }
+            }
+        }
+        assert!(check_chaos_schema(&doc).is_err());
+        // Every scenario counter and the recovered verdict are required.
+        for key in ["name", "faults", "worker_restarts", "recovered", "phases"] {
+            let mut doc = chaos_doc("kway-chaos-v1");
+            if let Json::Object(fields) = &mut doc {
+                let scenarios = fields.iter_mut().find(|(k, _)| k == "scenarios").map(|(_, v)| v);
+                if let Some(Json::Array(rows)) = scenarios {
+                    if let Json::Object(row) = &mut rows[0] {
+                        row.retain(|(k, _)| k != key);
+                    }
+                }
+            }
+            assert!(check_chaos_schema(&doc).is_err(), "dropping {key} must fail");
+        }
+        // A fault window without its recovery phase is rejected: the
+        // whole point of the artifact is the before/during/after arc.
+        let mut doc = chaos_doc("kway-chaos-v1");
+        if let Json::Object(fields) = &mut doc {
+            let scenarios = fields.iter_mut().find(|(k, _)| k == "scenarios").map(|(_, v)| v);
+            if let Some(Json::Array(rows)) = scenarios {
+                if let Json::Object(row) = &mut rows[0] {
+                    for (k, v) in row.iter_mut() {
+                        if k == "phases" {
+                            if let Json::Array(phases) = v {
+                                phases.pop();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(check_chaos_schema(&doc).is_err());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! The loopback torture test: one serving stack driven through every
+//! overload and fault path at once — pipelined load with a worker panic
+//! mid-run, a slow client that stops reading, and a connection storm
+//! past `--max-conns` — then checked for the only things that matter
+//! under chaos: no deadlock (the test finishes), no admitted put lost
+//! once the fault window closes, counters that match what clients saw,
+//! and a clean shutdown.
+//!
+//! The epoll backend is Linux/x86_64 only, and the injected worker
+//! panic needs the `fault-inject` feature; the guard-only phases run
+//! without it.
+
+#![cfg(all(target_os = "linux", target_arch = "x86_64"))]
+
+mod torture {
+    use kway::coordinator::{CacheService, ServiceConfig};
+    use kway::kway::KwWfsc;
+    use kway::net::{Server, ServerConfig};
+    use kway::policy::Policy;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[cfg(feature = "fault-inject")]
+    const MAX_CONNS: usize = 32;
+    #[cfg(feature = "fault-inject")]
+    const SEEDED: std::ops::Range<u64> = 900_000..900_200;
+
+    fn connect(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    fn expect_lines(reader: &mut BufReader<TcpStream>, expected: &[String]) {
+        for want in expected {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim_end_matches(['\r', '\n']), want);
+        }
+    }
+
+    /// Read `stats` output into (name, value) pairs, consuming `END`.
+    #[cfg(feature = "fault-inject")]
+    fn read_stats(reader: &mut BufReader<TcpStream>) -> Vec<(String, u64)> {
+        let mut pairs = Vec::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let line = line.trim_end_matches(['\r', '\n']);
+            if line == "END" {
+                return pairs;
+            }
+            let mut parts = line.splitn(3, ' ');
+            assert_eq!(parts.next(), Some("STAT"), "unexpected stats line {line:?}");
+            let name = parts.next().unwrap().to_string();
+            let value: u64 = parts.next().unwrap().parse().unwrap();
+            pairs.push((name, value));
+        }
+    }
+
+    #[test]
+    #[cfg(feature = "fault-inject")]
+    fn torture_survives_panics_slow_clients_and_conn_storms() {
+        use kway::fault::FaultPlan;
+        use kway::net::loadgen::{self, LoadgenConfig, WireProto};
+        // Capacity far above the resident set (~2.3k keys over 8k sets of
+        // 8 ways) so no admitted put can be evicted by load: any lost key
+        // at the end is a real durability bug, not cache policy.
+        let plan = Arc::new(FaultPlan::parse("worker_panic@30ms").unwrap());
+        let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(65_536, 8, Policy::Lru));
+        let service = Arc::new(CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, faults: Some(plan.clone()), ..Default::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = Server::start(
+            listener,
+            Arc::clone(&service),
+            ServerConfig {
+                io_threads: 2,
+                max_conns: MAX_CONNS,
+                max_wq_bytes: 32 * 1024,
+                idle_timeout: Some(Duration::from_secs(30)),
+                request_deadline: Some(Duration::from_secs(30)),
+                faults: Some(plan.clone()),
+            },
+        )
+        .unwrap();
+        let metrics = service.metrics();
+
+        // Phase 1 — seed: admitted puts, each acknowledged STORED. These
+        // must all still be readable after the chaos.
+        let (mut seed, mut seed_r) = connect(&server);
+        for k in SEEDED {
+            seed.write_all(format!("set {k} 0 0 8\r\n{k:08}\r\n").as_bytes()).unwrap();
+            expect_lines(&mut seed_r, &["STORED".to_string()]);
+        }
+        drop(seed);
+        drop(seed_r);
+
+        // Phase 2 — pipelined load with a worker panic mid-run. Each
+        // arm() opens one one-shot panic window; retry a few times in
+        // case a run lands no op inside it (never seen in practice).
+        let mut cfg = LoadgenConfig::smoke(&server.local_addr().to_string(), WireProto::Memcached);
+        cfg.connections = 4;
+        cfg.pipeline = 16;
+        cfg.threads = 2;
+        cfg.duration = Duration::from_millis(400);
+        cfg.keyspace = 2048;
+        cfg.set_every = 4;
+        cfg.max_reconnects = 10_000;
+        cfg.faults = Some(plan.clone());
+        let mut result = None;
+        for _ in 0..5 {
+            plan.arm();
+            result = Some(loadgen::run(&cfg).unwrap());
+            plan.disarm();
+            if metrics.worker_restarts.load(Ordering::Relaxed) > 0 {
+                break;
+            }
+        }
+        let result = result.unwrap();
+        assert!(result.ops > 0, "pipelined load made no progress");
+        let restarts = metrics.worker_restarts.load(Ordering::Relaxed);
+        assert!(restarts >= 1, "worker panic was injected but never survived a restart");
+        // Degraded answers are misses, not protocol errors: the wire
+        // stayed clean through the panic.
+        assert_eq!(result.errors, 0, "worker panic leaked protocol errors to clients");
+
+        // Phase 3 — slow client: pipelines thousands of gets and never
+        // reads. Once the kernel buffers fill, the queued response bytes
+        // cross max_wq_bytes and the server cuts the connection loose.
+        let (mut slow, _slow_r) = connect(&server);
+        let burst = "get 1\r\n".repeat(40_000);
+        let _ = slow.write_all(burst.as_bytes());
+        let mut evicted = 0;
+        for _ in 0..300 {
+            evicted = metrics.evicted_slow.load(Ordering::Relaxed);
+            if evicted > 0 {
+                break;
+            }
+            let _ = slow.write_all(b"get 1\r\n");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(evicted >= 1, "slow client was never evicted past the write-queue cap");
+        drop(slow);
+
+        // Phase 4 — connection storm: 3x the accept limit, held open.
+        // Refused connections still get an answer before the close.
+        let mut held = Vec::new();
+        let mut served = 0u64;
+        let mut refused = 0u64;
+        for _ in 0..3 * MAX_CONNS {
+            let mut s = TcpStream::connect(server.local_addr()).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let _ = s.write_all(b"version\r\n");
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            match r.read_line(&mut line) {
+                Ok(n) if n > 0 && line.starts_with("VERSION") => {
+                    served += 1;
+                    held.push((s, r));
+                }
+                _ => {
+                    assert!(
+                        line.is_empty() || line.starts_with("SERVER_ERROR too many connections"),
+                        "refusal must be explicit, got {line:?}"
+                    );
+                    refused += 1;
+                }
+            }
+        }
+        assert!(served >= 1, "storm starved every connection");
+        assert!(refused >= 1, "storm never tripped max-conns");
+        // Counters match: the server refused at least every refusal a
+        // client observed (it may also have counted ones whose answer
+        // was lost in the close race).
+        assert!(metrics.rejected_conns.load(Ordering::Relaxed) >= refused);
+        drop(held);
+        std::thread::sleep(Duration::from_millis(200));
+
+        // Phase 5 — recovery: every admitted put from before the chaos
+        // is still there, byte for byte.
+        let (mut check, mut check_r) = connect(&server);
+        for k in SEEDED {
+            check.write_all(format!("get {k}\r\n").as_bytes()).unwrap();
+            expect_lines(
+                &mut check_r,
+                &[format!("VALUE {k} 0 8"), format!("{k:08}"), "END".to_string()],
+            );
+        }
+
+        // Counters over the wire agree with the in-process metrics.
+        check.write_all(b"stats\r\n").unwrap();
+        let pairs = read_stats(&mut check_r);
+        let stat = |name: &str| {
+            pairs
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("stats missing {name}"))
+                .1
+        };
+        assert_eq!(stat("worker_restarts"), metrics.worker_restarts.load(Ordering::Relaxed));
+        assert_eq!(stat("rejected_conns"), metrics.rejected_conns.load(Ordering::Relaxed));
+        assert_eq!(stat("evicted_slow_clients"), metrics.evicted_slow.load(Ordering::Relaxed));
+        assert!(stat("gets") > 0 && stat("puts") > 0);
+        drop(check);
+        drop(check_r);
+
+        // Phase 6 — clean shutdown: stop() joins the io threads, halt()
+        // joins the workers; nothing hangs, and late ops degrade.
+        server.stop();
+        service.halt();
+        assert_eq!(service.get(SEEDED.start), None, "post-shutdown op must degrade to a miss");
+    }
+
+    /// The overload guards alone (no fault injection): exceeding the
+    /// accept limit refuses with an answer, and the stack still serves
+    /// and shuts down cleanly afterwards.
+    #[test]
+    fn accept_limit_holds_without_fault_injection() {
+        let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(4096, 8, Policy::Lru));
+        let service = Arc::new(CacheService::start(
+            cache,
+            ServiceConfig { workers: 2, ..Default::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = Server::start(
+            listener,
+            Arc::clone(&service),
+            ServerConfig { io_threads: 1, max_conns: 2, ..Default::default() },
+        )
+        .unwrap();
+        let (mut a, mut a_r) = connect(&server);
+        let (_b, _b_r) = connect(&server);
+        a.write_all(b"set 1 0 0 1\r\n7\r\n").unwrap();
+        expect_lines(&mut a_r, &["STORED".to_string()]);
+        // Third connection: over the limit, answered then closed.
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut c_r = BufReader::new(c.try_clone().unwrap());
+        let _ = c.write_all(b"version\r\n");
+        let mut line = String::new();
+        let _ = c_r.read_line(&mut line);
+        assert!(
+            line.is_empty() || line.starts_with("SERVER_ERROR too many connections"),
+            "got {line:?}"
+        );
+        // The admitted connections keep serving.
+        a.write_all(b"get 1\r\n").unwrap();
+        expect_lines(&mut a_r, &["VALUE 1 0 1".to_string(), "7".to_string(), "END".to_string()]);
+        assert!(service.metrics().rejected_conns.load(Ordering::Relaxed) >= 1);
+        server.stop();
+        service.halt();
+    }
+}

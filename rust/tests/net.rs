@@ -24,7 +24,12 @@ fn start_service(default_ttl: Option<Duration>) -> Arc<CacheService> {
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(4096, 8, Policy::Lru));
     Arc::new(CacheService::start(
         cache,
-        ServiceConfig { workers: 2, admission: AdmissionMode::None, default_ttl },
+        ServiceConfig {
+            workers: 2,
+            admission: AdmissionMode::None,
+            default_ttl,
+            ..Default::default()
+        },
     ))
 }
 
@@ -53,7 +58,8 @@ mod loopback {
 
     fn start_server(service: Arc<CacheService>) -> Server {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        Server::start(listener, service, ServerConfig { io_threads: 2 }).unwrap()
+        Server::start(listener, service, ServerConfig { io_threads: 2, ..Default::default() })
+            .unwrap()
     }
 
     fn connect(server: &Server) -> (TcpStream, BufReader<TcpStream>) {

@@ -1,7 +1,7 @@
 //! Coordinator integration: the cache service end-to-end over each
 //! concurrent cache implementation.
 
-use kway::coordinator::{drive_clients, CacheService, ServiceConfig};
+use kway::coordinator::{drive_clients, CacheService, DegradedPolicy, ServiceConfig, ServiceError};
 use kway::kway::{build, Variant};
 use kway::policy::Policy;
 use kway::products::SegmentedCaffeine;
@@ -131,6 +131,76 @@ fn batched_drive_clients_hits_like_scalar() {
         "batched gets are counted per key"
     );
     assert!(m.ops.hit_ratio() > 0.05, "zipf batched workload should hit");
+    service.shutdown();
+}
+
+#[test]
+fn ops_after_halt_degrade_instead_of_panicking() {
+    // The shutdown-then-op regression: a service whose workers are gone
+    // must answer every op shape as a degraded miss/no-op — never panic,
+    // never block.
+    let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 1024, 8, Policy::Lru));
+    let service = CacheService::start(cache, ServiceConfig { workers: 2, ..Default::default() });
+    service.put(1, 10);
+    assert_eq!(service.get(1), Some(10));
+    service.halt();
+    assert_eq!(service.get(1), None);
+    service.put(2, 20);
+    assert_eq!(service.get_batch(vec![1, 2, 3]), vec![None, None, None]);
+    service.put_batch(vec![(4, 40), (5, 50)]);
+    assert!(matches!(service.try_get(1), Err(ServiceError::Stopped)));
+    let degraded = service.metrics().degraded_ops.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(degraded >= 4, "expected every infallible op counted, got {degraded}");
+    // halt is idempotent, and shutdown after halt is a clean no-op join.
+    service.halt();
+    service.shutdown();
+}
+
+#[test]
+fn error_policy_is_visible_on_the_fallible_paths() {
+    let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 1024, 8, Policy::Lru));
+    let service = CacheService::start(
+        cache,
+        ServiceConfig { workers: 2, degraded: DegradedPolicy::Error, ..Default::default() },
+    );
+    assert_eq!(service.degraded_policy(), DegradedPolicy::Error);
+    service.halt();
+    assert!(matches!(service.try_get(7), Err(ServiceError::Stopped)));
+    assert!(matches!(service.try_get_batch(vec![1, 2]), Err(ServiceError::Stopped)));
+    // The infallible entry points still answer misses regardless of the
+    // policy — Error only changes what the *wire layer* tells clients.
+    assert_eq!(service.get(7), None);
+    service.shutdown();
+}
+
+#[cfg(feature = "fault-inject")]
+#[test]
+fn panicked_workers_are_restarted_and_service_recovers() {
+    use kway::fault::FaultPlan;
+    use std::time::{Duration, Instant};
+    let plan = Arc::new(FaultPlan::parse("worker_panic@1ms").unwrap());
+    let cache: Arc<dyn Cache> = Arc::from(build(Variant::Wfsc, 1024, 8, Policy::Lru));
+    let service = CacheService::start(
+        cache,
+        ServiceConfig { workers: 2, faults: Some(plan.clone()), ..Default::default() },
+    );
+    for key in 0..100u64 {
+        service.put(key, key);
+    }
+    plan.arm();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while service.metrics().worker_restarts.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "no worker restart within 5s");
+        for key in 0..50u64 {
+            service.put(key, key);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    plan.disarm();
+    // The restarted worker serves its shard again: a fresh put lands and
+    // reads back, end to end.
+    service.put(5, 123);
+    assert_eq!(service.get(5), Some(123));
     service.shutdown();
 }
 
