@@ -51,17 +51,25 @@ fn main() {
     let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(1 << 16, 8, Policy::Lru));
     let service = Arc::new(CacheService::start(
         cache,
-        ServiceConfig { workers: 2, admission: AdmissionMode::None, default_ttl: None },
+        ServiceConfig {
+            workers: 2,
+            admission: AdmissionMode::None,
+            default_ttl: None,
+            ..Default::default()
+        },
     ));
     let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback");
-    let server =
-        match Server::start(listener, Arc::clone(&service), ServerConfig { io_threads: 2 }) {
-            Ok(s) => s,
-            Err(e) => {
-                println!("serve bench skipped: wire front end unavailable on this target ({e})");
-                return;
-            }
-        };
+    let server = match Server::start(
+        listener,
+        Arc::clone(&service),
+        ServerConfig { io_threads: 2, ..Default::default() },
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("serve bench skipped: wire front end unavailable on this target ({e})");
+            return;
+        }
+    };
     let addr = server.local_addr().to_string();
     println!("== wire serving: {addr}, duration {duration:?}, threads {threads} ==");
     println!(
@@ -84,8 +92,11 @@ fn main() {
                     set_every: 8,
                     ttl: None,
                     zipf_alpha: None,
+                    value_dist: kway::lifetime::ValueDist::Word,
                     seed: SEED,
                     pin,
+                    max_reconnects: 1024,
+                    faults: None,
                 };
                 match loadgen::run(&cfg) {
                     Ok(r) => {

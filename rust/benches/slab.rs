@@ -1,0 +1,237 @@
+//! Byte-value slab benchmark: the (variant × value distribution)
+//! sweep behind `BENCH_slab.json` (schema `kway-slab-v1`).
+//!
+//! Every K-Way variant is built over a slab value store
+//! (`build_with_values`) and driven with a get-or-fill loop whose
+//! payloads come from a deterministic [`ValueDist`]: fixed sizes pin a
+//! single slab class, `uniform`/`zipf` straddle many classes at once —
+//! the allocation pattern the free lists must absorb. Each row reports
+//! throughput, hit ratio, sampled per-op latency, and the slab bytes
+//! the cache actually held when the run quiesced (`value_bytes`, the
+//! weight-honesty column: DESIGN.md §Value store).
+//!
+//! ```bash
+//! cargo bench --bench slab                    # full sweep
+//! cargo bench --bench slab -- --smoke         # seconds-scale CI smoke
+//! cargo bench --bench slab -- --json          # also write BENCH_slab.json
+//! ```
+//!
+//! [`ValueDist`]: kway::lifetime::ValueDist
+
+use kway::kway::{build_with_values, Variant};
+use kway::lifetime::ValueDist;
+use kway::policy::Policy;
+use kway::util::cli::Args;
+use kway::util::json::{check_slab_schema, Json, SLAB_SCHEMA};
+use kway::util::rng::Rng;
+use kway::util::stats::{percentile_u64, Reservoir};
+use kway::Cache;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 42;
+
+/// One sampled op in ~64 keeps the `Instant::now` cost off the hot path.
+const SAMPLE_GAP: u64 = 64;
+
+/// One measured row of the sweep.
+struct Row {
+    impl_name: &'static str,
+    dist: ValueDist,
+    threads: usize,
+    ops: u64,
+    mops: f64,
+    hit_ratio: f64,
+    p50_ns: u64,
+    p99_ns: u64,
+    value_bytes: u64,
+}
+
+/// Drive `threads` get-or-fill workers with `dist`-shaped byte payloads
+/// over a uniform working set for `duration`.
+fn run_point(
+    cache: &Arc<dyn Cache>,
+    dist: ValueDist,
+    working_set: u64,
+    threads: usize,
+    duration: Duration,
+) -> (u64, f64, f64, u64, u64) {
+    // Pre-install the resident set so the measured window starts warm.
+    let mut payload = Vec::new();
+    for key in 0..working_set {
+        dist.fill(key, &mut payload);
+        cache.put_bytes(key, &payload);
+    }
+    let stop = AtomicBool::new(false);
+    let ops = AtomicU64::new(0);
+    let hits = AtomicU64::new(0);
+    let gets = AtomicU64::new(0);
+    let samples: std::sync::Mutex<Vec<u64>> = std::sync::Mutex::new(Vec::new());
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let cache = Arc::clone(cache);
+            let stop = &stop;
+            let ops = &ops;
+            let hits = &hits;
+            let gets = &gets;
+            let samples = &samples;
+            scope.spawn(move || {
+                let mut rng = Rng::new(SEED ^ (0x51AB << 8) ^ t as u64);
+                let mut reservoir = Reservoir::new(10_000, SEED ^ 0x5A3B ^ t as u64);
+                let mut payload = Vec::new();
+                let mut local = (0u64, 0u64, 0u64);
+                let mut countdown = 1u64;
+                loop {
+                    for _ in 0..256 {
+                        let key = rng.below(working_set);
+                        local.2 += 1;
+                        countdown -= 1;
+                        let timed = countdown == 0;
+                        let t0 = if timed { Some(Instant::now()) } else { None };
+                        match cache.get_bytes(key) {
+                            Some(_) => {
+                                local.1 += 1;
+                                local.0 += 1;
+                            }
+                            None => {
+                                dist.fill(key, &mut payload);
+                                cache.put_bytes(key, &payload);
+                                local.0 += 2;
+                            }
+                        }
+                        if let Some(t0) = t0 {
+                            reservoir.record(t0.elapsed().as_nanos() as u64);
+                            countdown = rng.range_u64(1, 2 * SAMPLE_GAP - 1);
+                        }
+                    }
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+                ops.fetch_add(local.0, Ordering::Relaxed);
+                hits.fetch_add(local.1, Ordering::Relaxed);
+                gets.fetch_add(local.2, Ordering::Relaxed);
+                samples.lock().unwrap().extend_from_slice(reservoir.samples());
+            });
+        }
+        std::thread::sleep(duration);
+        stop.store(true, Ordering::Release);
+    });
+    let secs = start.elapsed().as_secs_f64();
+    let total_ops = ops.load(Ordering::Relaxed);
+    let total_gets = gets.load(Ordering::Relaxed);
+    let hit_ratio = if total_gets > 0 {
+        hits.load(Ordering::Relaxed) as f64 / total_gets as f64
+    } else {
+        0.0
+    };
+    let mut lat = std::mem::take(&mut *samples.lock().unwrap());
+    (
+        total_ops,
+        total_ops as f64 / secs / 1e6,
+        hit_ratio,
+        percentile_u64(&mut lat, 50.0),
+        percentile_u64(&mut lat, 99.0),
+    )
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let smoke = args.has_flag("smoke") || kway::figures::quick_mode();
+    let duration = Duration::from_millis(if smoke { 150 } else { 1000 });
+    let capacity: usize = if smoke { 1 << 12 } else { 1 << 14 };
+    let value_budget: usize = if smoke { 1 << 22 } else { 1 << 26 };
+    let threads = if smoke { 2 } else { 4 };
+    let working_set = (capacity / 2) as u64;
+    let dists: &[ValueDist] = if smoke {
+        &[ValueDist::Fixed { len: 64 }, ValueDist::Zipf { max: 4096 }]
+    } else {
+        &[
+            ValueDist::Fixed { len: 64 },
+            ValueDist::Fixed { len: 1024 },
+            ValueDist::Uniform { max: 4096 },
+            ValueDist::Zipf { max: 16384 },
+        ]
+    };
+
+    println!(
+        "== slab byte values: capacity {capacity}, budget {value_budget}B, \
+         threads {threads}, duration {duration:?} =="
+    );
+    println!(
+        "{:>10} {:>14} {:>8} {:>9} {:>7} {:>9} {:>9} {:>12}",
+        "impl", "values", "threads", "Mops/s", "hit", "p50_ns", "p99_ns", "value_bytes"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for variant in Variant::ALL {
+        for &dist in dists {
+            let cache: Arc<dyn Cache> =
+                Arc::from(build_with_values(variant, capacity, 8, Policy::Lru, value_budget));
+            let (ops, mops, hit_ratio, p50_ns, p99_ns) =
+                run_point(&cache, dist, working_set, threads, duration);
+            let value_bytes = cache.value_bytes();
+            println!(
+                "{:>10} {:>14} {:>8} {:>9.3} {:>7.3} {:>9} {:>9} {:>12}",
+                variant.name(),
+                dist.name(),
+                threads,
+                mops,
+                hit_ratio,
+                p50_ns,
+                p99_ns,
+                value_bytes
+            );
+            rows.push(Row {
+                impl_name: variant.name(),
+                dist,
+                threads,
+                ops,
+                mops,
+                hit_ratio,
+                p50_ns,
+                p99_ns,
+                value_bytes,
+            });
+        }
+    }
+
+    if args.has_flag("json") && !rows.is_empty() {
+        let json_rows: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::Object(vec![
+                    ("impl".to_string(), Json::Str(r.impl_name.to_string())),
+                    ("value_dist".to_string(), Json::Str(r.dist.name())),
+                    ("threads".to_string(), Json::Int(r.threads as i64)),
+                    ("ops".to_string(), Json::Int(r.ops as i64)),
+                    ("mops".to_string(), Json::Float(r.mops)),
+                    ("hit_ratio".to_string(), Json::Float(r.hit_ratio)),
+                    ("p50_ns".to_string(), Json::Int(r.p50_ns as i64)),
+                    ("p99_ns".to_string(), Json::Int(r.p99_ns as i64)),
+                    ("value_bytes".to_string(), Json::Int(r.value_bytes as i64)),
+                ])
+            })
+            .collect();
+        let doc = Json::Object(vec![
+            ("schema".to_string(), Json::Str(SLAB_SCHEMA.to_string())),
+            ("smoke".to_string(), Json::Bool(smoke)),
+            ("seed".to_string(), Json::Int(SEED as i64)),
+            ("capacity".to_string(), Json::Int(capacity as i64)),
+            ("value_budget".to_string(), Json::Int(value_budget as i64)),
+            ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
+            ("provenance".to_string(), Json::Str("measured".to_string())),
+            ("results".to_string(), Json::Array(json_rows)),
+        ]);
+        if let Err(e) = check_slab_schema(&doc) {
+            eprintln!("refusing to write malformed BENCH_slab.json: {e:#}");
+        } else {
+            match std::fs::write("BENCH_slab.json", format!("{doc}\n")) {
+                Ok(()) => println!("\nwrote BENCH_slab.json"),
+                Err(e) => eprintln!("writing BENCH_slab.json: {e}"),
+            }
+        }
+    }
+}

@@ -196,6 +196,20 @@ enum Request {
     /// One worker's share of a scattered batched put (fire-and-forget);
     /// `opts` applies to every item of the sub-batch.
     PutBatch { items: Vec<(u64, u64)>, opts: EntryOpts, enqueued: Instant },
+    /// Byte-value get ([`crate::Cache::get_bytes`]); answers `None` on a
+    /// word-only cache exactly like a miss.
+    GetBytes { key: u64, enqueued: Instant, reply: Sender<Option<Vec<u8>>> },
+    /// Byte-value put; the worker reports whether the cache accepted it.
+    PutBytes { key: u64, value: Vec<u8>, opts: EntryOpts, enqueued: Instant },
+    /// One worker's share of a scattered byte-value batched get.
+    GetBytesBatch {
+        keys: Vec<u64>,
+        enqueued: Instant,
+        worker: usize,
+        reply: Sender<(usize, Vec<Option<Vec<u8>>>)>,
+    },
+    /// One worker's share of a scattered byte-value batched put.
+    PutBytesBatch { items: Vec<(u64, Vec<u8>)>, opts: EntryOpts, enqueued: Instant },
     Shutdown,
 }
 
@@ -438,6 +452,144 @@ impl CacheService {
     fn degraded<T>(&self, miss: T) -> T {
         self.metrics.degraded_ops.fetch_add(1, Ordering::Relaxed);
         miss
+    }
+
+    /// Does the underlying cache store byte values? When `false`, every
+    /// byte op below degrades to a miss / dropped put (the same answer a
+    /// word-only cache gives in-process).
+    pub fn supports_values(&self) -> bool {
+        self.cache.supports_values()
+    }
+
+    /// Synchronous byte-value get through the service, surfacing failure
+    /// like [`CacheService::try_get`].
+    pub fn try_get_bytes(&self, key: u64) -> Result<Option<Vec<u8>>, ServiceError> {
+        let (reply, rx) = channel();
+        self.route(
+            self.worker_of(key),
+            Request::GetBytes { key, enqueued: Instant::now(), reply },
+        )?;
+        rx.recv().map_err(|_| ServiceError::WorkerDown)
+    }
+
+    /// Synchronous byte-value get; degrades to a miss when a worker or
+    /// the service is down.
+    pub fn get_bytes(&self, key: u64) -> Option<Vec<u8>> {
+        self.try_get_bytes(key).unwrap_or_else(|_| self.degraded(None))
+    }
+
+    /// [`CacheService::put_bytes_with`] surfacing failure instead of
+    /// silently dropping the put.
+    pub fn try_put_bytes_with(
+        &self,
+        key: u64,
+        value: Vec<u8>,
+        opts: EntryOpts,
+    ) -> Result<(), ServiceError> {
+        self.route(
+            self.worker_of(key),
+            Request::PutBytes { key, value, opts, enqueued: Instant::now() },
+        )
+    }
+
+    /// Fire-and-forget byte-value put carrying the service's default
+    /// entry lifetime. Dropped (never a panic) when the service is down.
+    pub fn put_bytes(&self, key: u64, value: Vec<u8>) {
+        self.put_bytes_with(key, value, self.default_opts);
+    }
+
+    /// Fire-and-forget byte-value put with explicit options.
+    pub fn put_bytes_with(&self, key: u64, value: Vec<u8>, opts: EntryOpts) {
+        if self.try_put_bytes_with(key, value, opts).is_err() {
+            self.degraded(());
+        }
+    }
+
+    /// Byte-value batched get with scatter/gather, surfacing failure
+    /// like [`CacheService::try_get_batch`].
+    pub fn try_get_bytes_batch(
+        &self,
+        keys: Vec<u64>,
+    ) -> Result<Vec<Option<Vec<u8>>>, ServiceError> {
+        let n = keys.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.senders.len();
+        let mut sub_keys: Vec<Vec<u64>> = vec![Vec::new(); workers];
+        let mut sub_positions: Vec<Vec<usize>> = vec![Vec::new(); workers];
+        for (pos, &key) in keys.iter().enumerate() {
+            let w = self.worker_of(key);
+            sub_keys[w].push(key);
+            sub_positions[w].push(pos);
+        }
+        let (reply, rx) = channel();
+        let mut outstanding = 0usize;
+        for (w, sub) in sub_keys.iter_mut().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            outstanding += 1;
+            self.route(
+                w,
+                Request::GetBytesBatch {
+                    keys: std::mem::take(sub),
+                    enqueued: Instant::now(),
+                    worker: w,
+                    reply: reply.clone(),
+                },
+            )?;
+        }
+        drop(reply);
+        let mut out: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+        for _ in 0..outstanding {
+            let (w, values) = rx.recv().map_err(|_| ServiceError::WorkerDown)?;
+            debug_assert_eq!(values.len(), sub_positions[w].len());
+            for (&pos, value) in sub_positions[w].iter().zip(values) {
+                out[pos] = value;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Byte-value batched get; degrades to all-misses when a worker or
+    /// the service is down.
+    pub fn get_bytes_batch(&self, keys: Vec<u64>) -> Vec<Option<Vec<u8>>> {
+        let n = keys.len();
+        self.try_get_bytes_batch(keys)
+            .unwrap_or_else(|_| self.degraded((0..n).map(|_| None).collect()))
+    }
+
+    /// [`CacheService::put_bytes_batch`] surfacing failure instead of
+    /// silently dropping the remainder of the batch.
+    pub fn try_put_bytes_batch_with(
+        &self,
+        items: Vec<(u64, Vec<u8>)>,
+        opts: EntryOpts,
+    ) -> Result<(), ServiceError> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let workers = self.senders.len();
+        let mut sub: Vec<Vec<(u64, Vec<u8>)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (key, value) in items {
+            sub[self.worker_of(key)].push((key, value));
+        }
+        for (w, items) in sub.into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            self.route(w, Request::PutBytesBatch { items, opts, enqueued: Instant::now() })?;
+        }
+        Ok(())
+    }
+
+    /// Batched fire-and-forget byte-value put, scattered by owning
+    /// worker and carrying the service's default entry lifetime.
+    pub fn put_bytes_batch(&self, items: Vec<(u64, Vec<u8>)>) {
+        if self.try_put_bytes_batch_with(items, self.default_opts).is_err() {
+            self.degraded(());
+        }
     }
 
     /// Batched get with scatter/gather, surfacing failure:
@@ -685,6 +837,40 @@ fn worker_loop(
                         .map(|&(key, value)| BatchEntry::new(key, value, opts))
                         .collect();
                     cache.put_batch_with(&entries);
+                }
+                metrics.ops.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
+                metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
+            }
+            Request::GetBytes { key, enqueued, reply } => {
+                let value = cache.get_bytes(key);
+                metrics.ops.gets.fetch_add(1, Ordering::Relaxed);
+                if value.is_some() {
+                    metrics.ops.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.get_latency.record(enqueued.elapsed().as_nanos() as u64);
+                let _ = reply.send(value);
+            }
+            Request::PutBytes { key, value, opts, enqueued } => {
+                cache.put_bytes_with(key, &value, opts);
+                metrics.ops.puts.fetch_add(1, Ordering::Relaxed);
+                metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
+            }
+            Request::GetBytesBatch { keys, enqueued, worker, reply } => {
+                // No batched byte probe on the trait (handles resolve
+                // per-key through the slab anyway): the worker loops, so
+                // the batch still costs one queue crossing, not one per
+                // key.
+                let values: Vec<Option<Vec<u8>>> =
+                    keys.iter().map(|&k| cache.get_bytes(k)).collect();
+                let hits = values.iter().filter(|v| v.is_some()).count() as u64;
+                metrics.ops.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                metrics.ops.hits.fetch_add(hits, Ordering::Relaxed);
+                metrics.get_latency.record(enqueued.elapsed().as_nanos() as u64);
+                let _ = reply.send((worker, values));
+            }
+            Request::PutBytesBatch { items, opts, enqueued } => {
+                for (key, value) in &items {
+                    cache.put_bytes_with(*key, value, opts);
                 }
                 metrics.ops.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
                 metrics.put_latency.record(enqueued.elapsed().as_nanos() as u64);
@@ -938,6 +1124,40 @@ mod tests {
         assert!(!s2.resize(512));
         assert_eq!(s2.metrics().resizes.load(Ordering::Relaxed), 0);
         s2.shutdown();
+    }
+
+    #[test]
+    fn byte_values_route_and_scatter() {
+        let cache: Arc<dyn Cache> =
+            Arc::new(KwWfsc::with_value_store(4096, 8, Policy::Lru, 1 << 22));
+        let s = CacheService::start(cache, ServiceConfig { workers: 3, ..Default::default() });
+        assert!(s.supports_values());
+        // Per-key FIFO: the get queues behind the put on the same worker.
+        s.put_bytes(1, b"routed blob".to_vec());
+        assert_eq!(s.get_bytes(1).as_deref(), Some(&b"routed blob"[..]));
+        assert_eq!(s.get_bytes(2), None);
+        // Scattered byte batches come back input-ordered.
+        let items: Vec<(u64, Vec<u8>)> =
+            (0..50u64).map(|k| (k, vec![k as u8; 1 + k as usize])).collect();
+        s.put_bytes_batch(items.clone());
+        for &(k, _) in &items {
+            assert!(s.get_bytes(k).is_some(), "key {k}"); // flush worker FIFO
+        }
+        let out = s.get_bytes_batch((0..50u64).rev().collect());
+        for (i, k) in (0..50u64).rev().enumerate() {
+            assert_eq!(out[i].as_deref(), Some(&vec![k as u8; 1 + k as usize][..]), "key {k}");
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn byte_ops_on_word_cache_degrade_to_misses() {
+        let s = service(2);
+        assert!(!s.supports_values());
+        s.put_bytes(1, b"dropped".to_vec());
+        assert_eq!(s.get_bytes(1), None);
+        assert!(s.get_bytes_batch(vec![1, 2]).iter().all(|v| v.is_none()));
+        s.shutdown();
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! else. See DESIGN.md §Set engine.
 
 use super::geometry::{Geometry, EMPTY, RESERVED};
+use super::slab::SlabStore;
 use super::with_thread_rng;
 use crate::lifetime::{self, EntryOpts};
 use crate::policy::Policy;
@@ -97,6 +98,16 @@ pub(crate) struct SetEngine {
     weight_active: AtomicBool,
     /// Rotating start position for the incremental expiry sweep.
     sweep_cursor: AtomicUsize,
+    /// The byte-value slab store, when this cache stores byte blobs
+    /// instead of bare words (fixed at construction — plain field, no
+    /// hot-path atomic). `None` keeps the word path bit-identical.
+    values: Option<Arc<SlabStore>>,
+    /// Per-way weight budget in slab granules. 1 for word caches (so
+    /// `set_budget` degenerates to the pre-slab "ways" bound); byte
+    /// caches set it to `value_bytes / capacity / GRANULE` so the total
+    /// budget meters real memory and scales with the set count across
+    /// resizes (shrink ⇒ smaller budget ⇒ evict-then-reclaim).
+    budget_per_way: AtomicU64,
 }
 
 impl SetEngine {
@@ -110,7 +121,67 @@ impl SetEngine {
             ttl_active: AtomicBool::new(false),
             weight_active: AtomicBool::new(false),
             sweep_cursor: AtomicUsize::new(0),
+            values: None,
+            budget_per_way: AtomicU64::new(1),
         }
+    }
+
+    /// Attach a byte-value store at construction time (before the engine
+    /// is shared). `budget_per_way` is the per-way granule budget; byte
+    /// puts latch `weight_active`, so the weight-repair machinery runs
+    /// whenever byte values exist.
+    pub fn attach_values(&mut self, store: Arc<SlabStore>, budget_per_way: u64) {
+        self.values = Some(store);
+        self.budget_per_way = AtomicU64::new(budget_per_way.max(1));
+    }
+
+    /// The attached byte-value store, if any.
+    #[inline]
+    pub fn values(&self) -> Option<&Arc<SlabStore>> {
+        self.values.as_ref()
+    }
+
+    /// Does this cache store byte values? One branch on a plain field;
+    /// `false` keeps every word path exactly as before.
+    #[inline]
+    pub fn values_active(&self) -> bool {
+        self.values.is_some()
+    }
+
+    /// Recycle the slab item behind a displaced value word. No-op for
+    /// word caches, for the zero "no bytes" word and for words that do
+    /// not decode to a live handle. Callers must own `word` exclusively —
+    /// obtained via `swap` or read under a claimed (RESERVED / locked)
+    /// line — so no handle is ever freed twice.
+    #[inline]
+    pub fn release_value(&self, word: u64) {
+        if let Some(store) = &self.values {
+            store.free(word);
+        }
+    }
+
+    /// Retune the per-way granule budget (used when the caller changes
+    /// the byte capacity of an attached value store).
+    pub fn set_budget_per_way(&self, granules: u64) {
+        self.budget_per_way.store(granules.max(1), Ordering::Relaxed);
+    }
+
+    /// Store `value` into the slab store and derive the entry options a
+    /// byte put publishes with: the caller's TTL, but the weight forced
+    /// to the item's granule count — the bytes the slab *actually*
+    /// holds, which is what makes `weight()` honest accounting. `None`
+    /// when no store is attached, the value exceeds the largest class,
+    /// or the store is out of memory. On `Some`, the caller owns the
+    /// returned handle and must [`SetEngine::release_value`] it if the
+    /// publish fails.
+    pub fn alloc_value(&self, value: &[u8], opts: EntryOpts) -> Option<(u64, EntryOpts)> {
+        let store = self.values.as_ref()?;
+        let granules = store.granules_for(value.len())?;
+        if granules > lifetime::MAX_WEIGHT as u64 {
+            return None;
+        }
+        let handle = store.alloc(value)?;
+        Some((handle, EntryOpts { ttl: opts.ttl, weight: granules as u32 }))
     }
 
     /// Record which lifetime dimensions `opts` activates (latching —
@@ -138,14 +209,17 @@ impl SetEngine {
     }
 
     /// Per-set weight budget. Capacity is interpreted as the total
-    /// *weight* budget, so each set's share is its way count — with unit
-    /// weights the bound degenerates to "at most k entries", exactly the
-    /// pre-lifetime semantics (DESIGN.md §Weighted capacity). Resizes
-    /// scale the set *count*, never the ways, so the per-set budget is a
-    /// constant of the cache.
+    /// *weight* budget, so each set's share is its way count times the
+    /// per-way granule budget — with unit weights (word caches) the
+    /// multiplier is 1 and the bound degenerates to "at most k entries",
+    /// exactly the pre-lifetime semantics (DESIGN.md §Weighted
+    /// capacity). With a byte-value store the multiplier meters slab
+    /// granules, so the budget is real memory. Resizes scale the set
+    /// *count*, never the ways, so the per-set budget is a constant of
+    /// the cache and the *total* budget tracks the set count.
     #[inline]
     pub fn set_budget(&self) -> u64 {
-        self.ways as u64
+        self.ways as u64 * self.budget_per_way.load(Ordering::Relaxed)
     }
 
     /// Ways per set (fixed across resizes).
@@ -792,6 +866,23 @@ mod tests {
         e.note_opts(&EntryOpts::weight(3));
         assert!(e.weight_active());
         assert_eq!(e.set_budget(), 4);
+    }
+
+    #[test]
+    fn byte_mode_budget_scales_per_way() {
+        let mut e = engine(4, Policy::Lru);
+        assert!(!e.values_active());
+        assert_eq!(e.set_budget(), 4, "word caches keep the k-entries bound");
+        e.release_value(0x1234); // word cache: must be a no-op
+        let store = Arc::new(SlabStore::new(1 << 22));
+        e.attach_values(store, 16);
+        assert!(e.values_active());
+        assert_eq!(e.set_budget(), 64, "ways x per-way granules");
+        e.set_budget_per_way(8);
+        assert_eq!(e.set_budget(), 32);
+        e.set_budget_per_way(0);
+        assert_eq!(e.set_budget(), 4, "budget is clamped to >= 1 granule per way");
+        e.release_value(0); // the no-bytes word is never freed
     }
 
     #[test]

@@ -22,15 +22,24 @@
 //! its target set for the install, and the lock order is always
 //! source-table-then-target-table, so the migration cannot deadlock
 //! against puts or other drains (DESIGN.md §Elastic resizing).
+//!
+//! Byte values (DESIGN.md §Value store) are the easy case here: every
+//! mutation already holds the write lock, so a displaced slab handle is
+//! owned by construction — each site that overwrites or clears a live
+//! entry releases its value word first, and the word path stays exactly
+//! the paper's protocol ([`SetEngine::release_value`] is a no-op with no
+//! store attached).
 
 use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY};
+use super::slab::SlabStore;
 use super::stamped::StampedLock;
 use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
+use std::sync::Arc;
 
 /// One entry: encoded key word (0 = empty), value, policy metadata and
 /// the packed (weight, expiry) life word.
@@ -88,6 +97,29 @@ impl KwLs {
             engine: SetEngine::new(ways, policy),
             elastic: Elastic::new(geo, LsTable::new(geo.num_sets(), geo.ways())),
         }
+    }
+
+    /// Build a byte-value cache: `capacity` entry slots backed by (about)
+    /// `value_bytes` of slab value memory; see `KwWfa::with_value_store`
+    /// for the budget arithmetic (DESIGN.md §Value store).
+    pub fn with_value_store(
+        capacity: usize,
+        ways: usize,
+        policy: Policy,
+        value_bytes: usize,
+    ) -> Self {
+        let geo = Geometry::new(capacity, ways);
+        let store = Arc::new(SlabStore::for_budget(value_bytes));
+        let per_way = SlabStore::budget_per_way(value_bytes, geo.capacity());
+        let mut engine = SetEngine::new(ways, policy);
+        engine.attach_values(store, per_way);
+        Self { engine, elastic: Elastic::new(geo, LsTable::new(geo.num_sets(), geo.ways())) }
+    }
+
+    /// The attached byte-value store, when built by
+    /// [`KwLs::with_value_store`].
+    pub fn value_store(&self) -> Option<&Arc<SlabStore>> {
+        self.engine.values()
     }
 
     /// The rounded geometry this cache currently runs with (the resize
@@ -204,11 +236,14 @@ impl KwLs {
         self.probe_set(&prev.table.sets[prev.geo.set_of_hash(pk.hash)], &pk, now)
     }
 
-    /// `put` with the hashing already done.
-    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
+    /// `put` with the hashing already done. Returns whether the entry
+    /// was installed — a `false` means the insert was dropped (heavier
+    /// than a set, or a failed lock upgrade), and in byte mode tells the
+    /// caller it still owns the freshly allocated handle.
+    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) -> bool {
         self.engine.note_opts(&opts);
         if opts.weight as u64 > self.engine.set_budget() {
-            return; // heavier than a whole set: can never fit, dropped
+            return false; // heavier than a whole set: can never fit, dropped
         }
         let ep = self.elastic.snapshot();
         if let Some(prev) = ep.prev() {
@@ -231,16 +266,19 @@ impl KwLs {
             if set.lock.try_convert_to_write() {
                 // SAFETY: write lock held.
                 let entries = unsafe { &mut *set.entries.get() };
+                // Byte mode: the write lock owns the displaced handle.
+                let old = entries[i].value;
                 entries[i].value = value;
                 entries[i].life = life;
                 self.engine.touch_plain(&mut entries[i].meta, now);
+                self.engine.release_value(old);
                 Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
                 set.lock.unlock_write();
-            } else {
-                // Paper: give up when the upgrade fails.
-                set.lock.unlock_read();
+                return true;
             }
-            return;
+            // Paper: give up when the upgrade fails.
+            set.lock.unlock_read();
+            return false;
         }
 
         // Miss path (Alg. 9 lines 15–27): upgrade, then fill an empty way
@@ -248,7 +286,7 @@ impl KwLs {
         // otherwise).
         if !set.lock.try_convert_to_write() {
             set.lock.unlock_read();
-            return;
+            return false;
         }
         // SAFETY: write lock held.
         let entries = unsafe { &mut *set.entries.get() };
@@ -263,9 +301,13 @@ impl KwLs {
                     .way
             }
         };
+        // An empty way's value word is 0, so this frees exactly the
+        // replaced victim's slab item (and nothing on a clean fill).
+        self.engine.release_value(entries[target].value);
         entries[target] = Entry { key: pk.ik, value, meta: self.engine.initial_meta(now), life };
         Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
         set.lock.unlock_write();
+        true
     }
 
     /// Drain one source set of an in-flight resize *exactly*: the source
@@ -289,7 +331,10 @@ impl KwLs {
             let moved = *e;
             *e = Entry::default();
             if ttl_active && lifetime::is_expired(moved.life, now_ms) {
-                continue; // dead line: reclaim, don't move
+                // Dead line: reclaim, don't move — and recycle its slab
+                // item (the write lock made this thread the owner).
+                self.engine.release_value(moved.value);
+                continue;
             }
             let pk = self.engine.prepare(Geometry::decode_key(moved.key), ep.geo);
             self.install_migrated(ep, &pk, moved);
@@ -311,7 +356,10 @@ impl KwLs {
         let now_ms = self.engine.expiry_now();
         if entries.iter().any(|e| e.key == pk.ik) {
             dst.lock.unlock_write();
-            return; // a fresher insert already landed in the target
+            // A fresher insert already landed in the target: the old
+            // copy is dropped, and this thread owns its handle.
+            self.engine.release_value(moved.value);
+            return;
         }
         let slot = match entries.iter().position(|e| e.key == EMPTY) {
             Some(i) => Some(i),
@@ -321,8 +369,15 @@ impl KwLs {
             }
         };
         if let Some(i) = slot {
+            // Displacing a live victim (shrink merge) frees its item;
+            // an empty way's value word is 0 and frees nothing.
+            self.engine.release_value(entries[i].value);
             entries[i] = Entry { key: pk.ik, ..moved };
             Self::repair_weight_locked(&self.engine, entries, pk.ik, now, now_ms);
+        } else {
+            // The migrated entry is the policy victim: drop it (and
+            // recycle its slab item — this thread owns the handle).
+            self.engine.release_value(moved.value);
         }
         dst.lock.unlock_write();
     }
@@ -371,6 +426,7 @@ impl KwLs {
                 None if n > 0 => eligible[engine.select_victim(&metas[..n], now)],
                 None => return, // only the spared entry remains
             };
+            engine.release_value(entries[target].value);
             entries[target] = Entry::default();
         }
     }
@@ -386,11 +442,42 @@ impl Cache for KwLs {
             self.engine.prepare(key, self.elastic.snapshot().geo),
             value,
             EntryOpts::default(),
-        )
+        );
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts)
+        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts);
+    }
+
+    fn supports_values(&self) -> bool {
+        self.engine.values_active()
+    }
+
+    fn put_bytes_with(&self, key: u64, value: &[u8], opts: EntryOpts) -> bool {
+        let Some((handle, opts)) = self.engine.alloc_value(value, opts) else {
+            return false;
+        };
+        let pk = self.engine.prepare(key, self.elastic.snapshot().geo);
+        if self.put_prepared(pk, handle, opts) {
+            true
+        } else {
+            // The insert was dropped (upgrade failure / over-budget): the
+            // fresh item never became reachable, recycle it here.
+            self.engine.release_value(handle);
+            false
+        }
+    }
+
+    fn get_bytes(&self, key: u64) -> Option<Vec<u8>> {
+        let store = self.engine.values()?;
+        // The hit's value word is a generation-stamped handle; a slot
+        // recycled between the probe and this read fails the generation
+        // check and reports the eviction as a miss.
+        store.read(self.get(key)?)
+    }
+
+    fn value_bytes(&self) -> u64 {
+        self.engine.values().map_or(0, |s| s.used_bytes())
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -420,7 +507,9 @@ impl Cache for KwLs {
                 let header: &LsSet = &ep.table.sets[set];
                 engine::prefetch_read(header);
             },
-            |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
+            |pk, item| {
+                self.put_prepared(pk, item.1, EntryOpts::default());
+            },
         );
     }
 
@@ -434,7 +523,9 @@ impl Cache for KwLs {
                 let header: &LsSet = &ep.table.sets[set];
                 engine::prefetch_read(header);
             },
-            |pk, item| self.put_prepared(pk, item.value, item.opts),
+            |pk, item| {
+                self.put_prepared(pk, item.value, item.opts);
+            },
         );
     }
 
@@ -524,6 +615,7 @@ impl Cache for KwLs {
             let entries = unsafe { &mut *set.entries.get() };
             for e in entries.iter_mut() {
                 if e.key != EMPTY && lifetime::is_expired(e.life, now_ms) {
+                    self.engine.release_value(e.value);
                     *e = Entry::default();
                     reclaimed += 1;
                 }
@@ -722,6 +814,51 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn byte_values_roundtrip_and_recycle() {
+        // Word caches refuse the byte API outright.
+        let c = KwLs::new(64, 4, Policy::Lru);
+        assert!(!c.supports_values());
+        assert!(!c.put_bytes(1, b"nope"));
+        assert_eq!(c.get_bytes(1), None);
+
+        let c = KwLs::with_value_store(64, 4, Policy::Lru, 1 << 22);
+        assert!(c.supports_values());
+        assert!(c.put_bytes(1, b"hello slab"));
+        assert_eq!(c.get_bytes(1).as_deref(), Some(&b"hello slab"[..]));
+        let store = c.value_store().unwrap();
+        assert_eq!(store.used_bytes(), 64, "10 bytes occupy one 64-byte item");
+        // An overwrite recycles the displaced item: ledger swaps to the
+        // new size instead of accumulating.
+        assert!(c.put_bytes(1, &[7u8; 300]));
+        assert_eq!(c.get_bytes(1).unwrap(), vec![7u8; 300]);
+        assert_eq!(store.used_bytes(), 320, "300 bytes land in the 320-byte class");
+        assert_eq!(c.value_bytes(), 320);
+        // The word-path tombstone (put 0) frees the blob too.
+        c.put(1, 0);
+        assert_eq!(c.get_bytes(1), None);
+        assert_eq!(store.used_bytes(), 0, "tombstoned blob recycled");
+    }
+
+    #[test]
+    fn byte_eviction_recycles_items() {
+        // Single set of 4 ways: inserting 40 distinct keys forces ~36
+        // victim replacements; every displaced handle must come back to
+        // the free list (ledger == live residents only).
+        let c = KwLs::with_value_store(4, 4, Policy::Lru, 1 << 20);
+        for key in 0..40u64 {
+            c.put_bytes(key, &[key as u8; 100]);
+        }
+        let store = c.value_store().unwrap();
+        let live = (0..40u64).filter(|&k| c.get_bytes(k).is_some()).count() as u64;
+        assert!(live <= 4);
+        assert_eq!(store.used_bytes(), live * 128, "only residents hold items");
+        let stats = store.stats();
+        for cl in &stats.classes {
+            assert_eq!(cl.carved, cl.live + cl.free, "free-list ledger balances");
+        }
     }
 
     #[test]

@@ -33,12 +33,21 @@
 //! a consistent (geometry, table, watermark) snapshot, reads fall
 //! through old→new mid-migration, and writes drain their key's source
 //! set before inserting (DESIGN.md §Elastic resizing).
+//!
+//! Values are **bytes-capable**: attaching a [`slab`] store
+//! (`with_value_store` on any variant) turns the u64 value word into a
+//! generation-stamped handle into slab-class item memory, enabling
+//! `Cache::put_bytes` / `Cache::get_bytes` with real byte-based weight
+//! accounting (DESIGN.md §Value store). Word-valued caches are
+//! bit-identical to before: no store attached, no handle decode, no
+//! extra atomics on the hot path.
 
 mod alloc;
 mod engine;
 mod geometry;
 mod ls;
 pub mod simd;
+pub mod slab;
 mod stamped;
 mod wfa;
 mod wfsc;
@@ -46,6 +55,7 @@ mod wfsc;
 pub use alloc::{hugepages_enabled, set_hugepages};
 pub use geometry::Geometry;
 pub use ls::KwLs;
+pub use slab::{SlabConfig, SlabStats, SlabStore};
 pub use stamped::StampedLock;
 pub use wfa::KwWfa;
 pub use wfsc::KwWfsc;
@@ -94,6 +104,24 @@ pub fn build(variant: Variant, capacity: usize, ways: usize, policy: Policy) -> 
         Variant::Wfa => Box::new(KwWfa::new(capacity, ways, policy)),
         Variant::Wfsc => Box::new(KwWfsc::new(capacity, ways, policy)),
         Variant::Ls => Box::new(KwLs::new(capacity, ways, policy)),
+    }
+}
+
+/// Construct a byte-value k-way cache of the given variant: `capacity`
+/// entry slots backed by (about) `value_bytes` of slab value memory
+/// (DESIGN.md §Value store). The word API keeps working unchanged;
+/// `put_bytes`/`get_bytes` become live.
+pub fn build_with_values(
+    variant: Variant,
+    capacity: usize,
+    ways: usize,
+    policy: Policy,
+    value_bytes: usize,
+) -> Box<dyn Cache> {
+    match variant {
+        Variant::Wfa => Box::new(KwWfa::with_value_store(capacity, ways, policy, value_bytes)),
+        Variant::Wfsc => Box::new(KwWfsc::with_value_store(capacity, ways, policy, value_bytes)),
+        Variant::Ls => Box::new(KwLs::with_value_store(capacity, ways, policy, value_bytes)),
     }
 }
 

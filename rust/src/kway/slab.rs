@@ -1,0 +1,702 @@
+//! Slab-class byte-value store: the variable-size value memory behind
+//! `Cache::put_bytes` / `Cache::get_bytes`.
+//!
+//! The k-way set lines store fixed 64-bit words; real caches store byte
+//! blobs of wildly varying size. This module adds the missing half the
+//! memcached way (SNIPPETS.md Snippet 1): **slab classes** — a geometric
+//! ladder of fixed item sizes (64 B base × 1.25 growth by default, every
+//! size rounded up to the 64-byte [`GRANULE`]) — each class carving its
+//! items out of large slab allocations and recycling them through a
+//! lock-free Treiber free list. A stored value occupies exactly one item
+//! of the smallest class that fits it, so internal fragmentation is
+//! bounded by the growth factor and — crucially for the weight-accounting
+//! honesty this PR pins — *known*: the entry's weight is the item size in
+//! granules, not the requested length, so the per-set weight budget
+//! meters bytes the slab actually holds.
+//!
+//! ## Handles
+//!
+//! The cache's existing u64 value word carries a packed **handle**
+//! instead of a payload:
+//!
+//! ```text
+//!   63      58 57                    32 31                     0
+//!  +----------+------------------------+-----------------------+
+//!  | class+1  |   generation (26 bit)  |     slot index        |
+//!  +----------+------------------------+-----------------------+
+//! ```
+//!
+//! `class+1` keeps every handle non-zero (so 0 stays the "no bytes"
+//! word), and the generation makes recycling detectable: every `free`
+//! bumps the slot's generation, so a reader holding a stale handle can
+//! never mistake a recycled slot's new bytes for its own value. All
+//! three k-way claim protocols publish the handle word exactly as they
+//! publish word values today — the set-line protocol is untouched.
+//!
+//! ## Why a torn or recycled read is impossible
+//!
+//! Each slot leads with a header word `(generation:32 | len:32)` and the
+//! read side is a seqlock over it:
+//!
+//! * **alloc** (exclusive owner via free-list pop): write payload words
+//!   (Relaxed), then `header.store(gen|len, Release)`. The handle only
+//!   reaches readers through a cache value word published *after* that
+//!   store (Release→Acquire through the set line), so a reader that
+//!   obtained the handle sees the full payload.
+//! * **read**: `h1 = header.load(Acquire)`; bail unless `h1`'s
+//!   generation matches the handle; copy payload words (Relaxed);
+//!   `fence(Acquire)`; `h2 = header.load(Relaxed)`; accept iff
+//!   `h2 == h1`.
+//! * **free** (exclusive owner via the cache's claim protocol):
+//!   `header.store(gen+1 << 32, Relaxed)`; `fence(Release)`; only *then*
+//!   link the slot into the free list (scribbling the payload) — and any
+//!   later alloc's scribbles are ordered after the pop that saw the push.
+//!
+//! The fences give store→store order on the writer side and load→load
+//! order on the reader side, so if any copy observed a post-free
+//! scribble, the re-load observes the generation bump and the read is
+//! discarded — the classic seqlock argument, in the same
+//! fence-to-fence style as the wfsc publish audit (DESIGN.md §Hot
+//! path). A reader that validates against the *old* generation returns
+//! the *old intact* bytes, which linearizes the read before the
+//! eviction — exactly what the differential test demands. The 26-bit
+//! generation would need 2^26 recycles of one slot *during a single
+//! read* to ABA, which no real schedule approaches.
+//!
+//! Slab memory is grow-only while the store lives (slabs are published
+//! to a lock-free pointer table and never unmapped, mirroring the
+//! engine's retired-never-freed epochs); a shrink reduces the *budget*
+//! so evictions drain items back onto free lists as reuse capacity.
+
+use super::alloc::AlignedSlice;
+use std::sync::atomic::{fence, AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Accounting granule: weights meter value memory in units of 64 bytes,
+/// so the 16-bit weight field of the life word spans 64 B … 4 MiB and a
+/// 1 MiB item is 16384 granules. Every class size is a multiple of this,
+/// which is what makes `weight × GRANULE == bytes held` exact.
+pub const GRANULE: usize = 64;
+
+/// Target bytes per slab allocation (the memcached page size). Classes
+/// whose item outgrows this get one item per slab.
+const SLAB_BYTES: usize = 1 << 20;
+
+/// Handle field widths.
+const SLOT_BITS: u32 = 32;
+const GEN_BITS: u32 = 26;
+const GEN_MASK: u64 = (1 << GEN_BITS) - 1;
+
+/// Geometry of the class ladder and the store's hard memory cap.
+#[derive(Debug, Clone, Copy)]
+pub struct SlabConfig {
+    /// Smallest item size in bytes (rounded up to [`GRANULE`]).
+    pub base: usize,
+    /// Growth factor numerator (item sizes grow by `num/den` per class,
+    /// rounded up to [`GRANULE`]).
+    pub growth_num: usize,
+    /// Growth factor denominator.
+    pub growth_den: usize,
+    /// Largest value length the store accepts; the ladder's last class
+    /// is the first size ≥ this.
+    pub max_item: usize,
+    /// Hard cap on total carved slab bytes; allocation fails rather than
+    /// carve past it (the cache's weight budget governs steady state,
+    /// this bounds worst-case footprint).
+    pub max_bytes: usize,
+}
+
+impl Default for SlabConfig {
+    fn default() -> Self {
+        Self {
+            base: GRANULE,
+            growth_num: 5,
+            growth_den: 4,
+            max_item: 1 << 20,
+            max_bytes: 1 << 30,
+        }
+    }
+}
+
+/// One size class: its fixed item size, the slabs carved for it, and the
+/// Treiber free list of recycled items.
+struct SlabClass {
+    /// Payload capacity of one item, bytes (multiple of [`GRANULE`]).
+    item_bytes: usize,
+    /// Words per slot: 1 header + item_bytes / 8 payload words.
+    slot_words: usize,
+    /// Slots carved per slab allocation (fixed per class).
+    slots_per_slab: usize,
+    /// Free-list head: `(aba_tag:32) << 32 | (slot_index + 1):32`;
+    /// low half 0 ⇔ empty.
+    free_head: AtomicU64,
+    /// Free-list length (meters the carved = live + free balance the
+    /// torture test asserts).
+    free_len: AtomicU64,
+    /// Successful allocations / frees, ever.
+    allocs: AtomicU64,
+    frees: AtomicU64,
+    /// Slots carved out of slabs, ever.
+    carved: AtomicU64,
+    /// Lock-free slab pointer table for readers: `published[i]` is the
+    /// first word of slab `i`, null until that slab exists. Pointees are
+    /// owned by `slabs` and live until the store drops.
+    published: Vec<AtomicPtr<AtomicU64>>,
+    /// Owns every slab allocation; also serializes carving.
+    slabs: Mutex<Vec<AlignedSlice<AtomicU64>>>,
+}
+
+impl SlabClass {
+    /// Word `w` of slot `idx`, or `None` for an index beyond the
+    /// published slabs (a stale or forged handle).
+    #[inline]
+    fn word(&self, idx: usize, w: usize) -> Option<&AtomicU64> {
+        let slab = idx / self.slots_per_slab;
+        let ptr = self.published.get(slab)?.load(Ordering::Acquire);
+        if ptr.is_null() {
+            return None;
+        }
+        let off = (idx % self.slots_per_slab) * self.slot_words + w;
+        // SAFETY: `ptr` was published from an AlignedSlice of
+        // `slots_per_slab * slot_words` words that `slabs` keeps alive
+        // for the store's lifetime, and `off` is in range by the modulo.
+        Some(unsafe { &*ptr.add(off) })
+    }
+
+    /// Pop a recycled slot off the free list (lock-free).
+    fn pop_free(&self) -> Option<usize> {
+        loop {
+            let head = self.free_head.load(Ordering::Acquire);
+            let enc = head & 0xFFFF_FFFF;
+            if enc == 0 {
+                return None;
+            }
+            let idx = (enc - 1) as usize;
+            // The next link lives in payload word 1 of the free slot;
+            // visible via the Release CAS that pushed it.
+            let next = self.word(idx, 1)?.load(Ordering::Acquire) & 0xFFFF_FFFF;
+            let tag = head >> 32;
+            let new = ((tag + 1) & 0xFFFF_FFFF) << 32 | next;
+            if self
+                .free_head
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.free_len.fetch_sub(1, Ordering::Relaxed);
+                return Some(idx);
+            }
+        }
+    }
+
+    /// Push a slot onto the free list. Caller owns the slot exclusively
+    /// and has already bumped its generation behind a Release fence.
+    fn push_free(&self, idx: usize) {
+        let link = self.word(idx, 1).expect("pushing a slot that was never carved");
+        loop {
+            let head = self.free_head.load(Ordering::Acquire);
+            link.store(head & 0xFFFF_FFFF, Ordering::Relaxed);
+            let tag = head >> 32;
+            let new = ((tag + 1) & 0xFFFF_FFFF) << 32 | (idx as u64 + 1);
+            if self
+                .free_head
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.free_len.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+/// Per-class snapshot for tests and the slab bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassStats {
+    /// Fixed item size of the class, bytes.
+    pub item_bytes: usize,
+    /// Slots ever carved out of slabs.
+    pub carved: u64,
+    /// Live items (allocs − frees).
+    pub live: u64,
+    /// Items sitting on the free list.
+    pub free: u64,
+}
+
+/// Whole-store snapshot: per-class stats plus the byte ledgers.
+#[derive(Debug, Clone)]
+pub struct SlabStats {
+    /// One row per class, smallest first.
+    pub classes: Vec<ClassStats>,
+    /// Item bytes held by live allocations (Σ live × item_bytes).
+    pub used_bytes: u64,
+    /// Total bytes carved into slabs (grow-only).
+    pub carved_bytes: u64,
+    /// The hard cap carving respects.
+    pub max_bytes: u64,
+}
+
+/// The concurrent byte-value store. See the module docs for the handle
+/// layout and the seqlock protocol; the public surface is
+/// `alloc` / `read` / `free` plus accounting.
+pub struct SlabStore {
+    classes: Vec<SlabClass>,
+    /// Item bytes held by live allocations.
+    used_bytes: AtomicU64,
+    /// Bytes carved into slabs, ever.
+    carved_bytes: AtomicU64,
+    max_bytes: usize,
+    max_item: usize,
+}
+
+impl SlabStore {
+    /// A store with the default ladder (64 B × 1.25 up to 1 MiB items)
+    /// capped at `max_bytes` of carved slab memory.
+    pub fn new(max_bytes: usize) -> Self {
+        Self::with_config(SlabConfig { max_bytes, ..SlabConfig::default() })
+    }
+
+    /// A store sized for a cache whose total value-weight budget is
+    /// `value_bytes`: the carve cap is twice the budget (headroom for
+    /// transient overshoot and free-list retention — free items are
+    /// reuse capacity, not returned memory), floored so at least a few
+    /// largest-class items always fit.
+    pub fn for_budget(value_bytes: usize) -> Self {
+        Self::new(value_bytes.saturating_mul(2).max(4 * SLAB_BYTES))
+    }
+
+    /// The per-way granule budget for a cache of `capacity` entry slots
+    /// sharing `value_bytes` of value memory (at least 1 granule).
+    pub fn budget_per_way(value_bytes: usize, capacity: usize) -> u64 {
+        ((value_bytes / capacity.max(1)) / GRANULE).max(1) as u64
+    }
+
+    /// A store with an explicit class ladder.
+    pub fn with_config(cfg: SlabConfig) -> Self {
+        assert!(cfg.growth_num > cfg.growth_den && cfg.growth_den > 0, "growth must be > 1");
+        assert!(cfg.max_item >= 1, "max_item must be positive");
+        let mut sizes = Vec::new();
+        let mut cur = cfg.base.max(1).div_ceil(GRANULE) * GRANULE;
+        loop {
+            sizes.push(cur);
+            if cur >= cfg.max_item {
+                break;
+            }
+            let grown = (cur * cfg.growth_num).div_ceil(cfg.growth_den);
+            cur = (grown.div_ceil(GRANULE) * GRANULE).max(cur + GRANULE);
+        }
+        // 6 handle bits hold class+1, so at most 62 classes (1..=63
+        // leaves the all-ones pattern unused as a guard).
+        assert!(sizes.len() <= 62, "class ladder too deep: {}", sizes.len());
+        let classes = sizes
+            .iter()
+            .map(|&item_bytes| {
+                let slot_words = 1 + item_bytes / 8;
+                let slots_per_slab = (SLAB_BYTES / (slot_words * 8)).max(1);
+                let slab_bytes = slots_per_slab * slot_words * 8;
+                // Enough pointer table for this class to consume the
+                // whole byte cap on its own, plus one for rounding.
+                let max_slabs = cfg.max_bytes.div_ceil(slab_bytes) + 1;
+                SlabClass {
+                    item_bytes,
+                    slot_words,
+                    slots_per_slab,
+                    free_head: AtomicU64::new(0),
+                    free_len: AtomicU64::new(0),
+                    allocs: AtomicU64::new(0),
+                    frees: AtomicU64::new(0),
+                    carved: AtomicU64::new(0),
+                    published: (0..max_slabs)
+                        .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+                        .collect(),
+                    slabs: Mutex::new(Vec::new()),
+                }
+            })
+            .collect();
+        Self {
+            classes,
+            used_bytes: AtomicU64::new(0),
+            carved_bytes: AtomicU64::new(0),
+            max_bytes: cfg.max_bytes,
+            max_item: cfg.max_item,
+        }
+    }
+
+    /// Number of size classes in the ladder.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// The ladder's item sizes, smallest first (tests sweep these).
+    pub fn class_sizes(&self) -> Vec<usize> {
+        self.classes.iter().map(|c| c.item_bytes).collect()
+    }
+
+    /// Largest value length [`SlabStore::alloc`] accepts.
+    pub fn max_item_bytes(&self) -> usize {
+        self.max_item
+    }
+
+    /// Index of the smallest class fitting `len` bytes.
+    fn class_of(&self, len: usize) -> Option<usize> {
+        if len > self.max_item {
+            return None;
+        }
+        self.classes.iter().position(|c| c.item_bytes >= len)
+    }
+
+    /// The item size a value of `len` bytes would occupy — the *honest*
+    /// footprint, internal fragmentation included.
+    pub fn item_bytes_for(&self, len: usize) -> Option<usize> {
+        self.class_of(len).map(|c| self.classes[c].item_bytes)
+    }
+
+    /// The weight (in [`GRANULE`]s) a value of `len` bytes costs.
+    pub fn granules_for(&self, len: usize) -> Option<u64> {
+        self.item_bytes_for(len).map(|b| (b / GRANULE) as u64)
+    }
+
+    /// Item bytes currently held by live allocations.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes ever carved into slabs (grow-only).
+    pub fn carved_bytes(&self) -> u64 {
+        self.carved_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the per-class ledgers. Only *quiescent* snapshots are
+    /// exactly consistent (concurrent alloc/free can be mid-count).
+    pub fn stats(&self) -> SlabStats {
+        SlabStats {
+            classes: self
+                .classes
+                .iter()
+                .map(|c| ClassStats {
+                    item_bytes: c.item_bytes,
+                    carved: c.carved.load(Ordering::Relaxed),
+                    live: c.allocs.load(Ordering::Relaxed) - c.frees.load(Ordering::Relaxed),
+                    free: c.free_len.load(Ordering::Relaxed),
+                })
+                .collect(),
+            used_bytes: self.used_bytes(),
+            carved_bytes: self.carved_bytes(),
+            max_bytes: self.max_bytes as u64,
+        }
+    }
+
+    /// Store `value` into a fresh item and return its packed handle, or
+    /// `None` when the value exceeds the largest class or carving another
+    /// slab would break the byte cap and no recycled item is free.
+    pub fn alloc(&self, value: &[u8]) -> Option<u64> {
+        let ci = self.class_of(value.len())?;
+        let class = &self.classes[ci];
+        let idx = match class.pop_free() {
+            Some(idx) => idx,
+            None => self.carve(ci)?,
+        };
+        // Exclusive owner of slot `idx` from here to the header publish.
+        let header = class.word(idx, 0).expect("carved slot must resolve");
+        let gen = header.load(Ordering::Relaxed) >> 32;
+        // Payload: whole little-endian words, the last one zero-padded.
+        let mut w = 1usize;
+        let mut chunks = value.chunks_exact(8);
+        for chunk in &mut chunks {
+            let word = u64::from_le_bytes(chunk.try_into().unwrap());
+            class.word(idx, w).expect("payload word in range").store(word, Ordering::Relaxed);
+            w += 1;
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            class
+                .word(idx, w)
+                .expect("payload word in range")
+                .store(u64::from_le_bytes(buf), Ordering::Relaxed);
+        }
+        // Publish length under the slot's current generation. Release
+        // orders the payload stores before it; the cache's own value-word
+        // publish (also Release) then carries the whole chain to readers.
+        header.store(gen << 32 | value.len() as u64, Ordering::Release);
+        class.allocs.fetch_add(1, Ordering::Relaxed);
+        self.used_bytes.fetch_add(class.item_bytes as u64, Ordering::Relaxed);
+        Some(pack_handle(ci, gen, idx))
+    }
+
+    /// Carve a fresh slot for class `ci`, allocating a new slab when
+    /// needed; surplus slots of the new slab go straight onto the free
+    /// list. Returns `None` when the byte cap is exhausted.
+    fn carve(&self, ci: usize) -> Option<usize> {
+        let class = &self.classes[ci];
+        let mut slabs = class.slabs.lock().unwrap();
+        // Someone may have freed or carved while we waited for the lock.
+        if let Some(idx) = class.pop_free() {
+            return Some(idx);
+        }
+        let slab_i = slabs.len();
+        let slab_words = class.slots_per_slab * class.slot_words;
+        let slab_bytes = slab_words * 8;
+        if slab_i >= class.published.len()
+            || self.carved_bytes.load(Ordering::Relaxed) + slab_bytes as u64
+                > self.max_bytes as u64
+        {
+            return None;
+        }
+        // SAFETY: AtomicU64's all-zero pattern is valid and Drop-free;
+        // zeroed headers mean generation 0, length 0.
+        let slab: AlignedSlice<AtomicU64> = unsafe { AlignedSlice::new_zeroed(slab_words) };
+        class.published[slab_i].store(slab.as_ptr() as *mut AtomicU64, Ordering::Release);
+        slabs.push(slab);
+        self.carved_bytes.fetch_add(slab_bytes as u64, Ordering::Relaxed);
+        class.carved.fetch_add(class.slots_per_slab as u64, Ordering::Relaxed);
+        let base = slab_i * class.slots_per_slab;
+        for idx in base + 1..base + class.slots_per_slab {
+            class.push_free(idx);
+        }
+        Some(base)
+    }
+
+    /// Read the value `handle` refers to, or `None` when the slot was
+    /// recycled (the entry was evicted between the set-line probe and
+    /// this read — a correct miss) or the handle is malformed.
+    pub fn read(&self, handle: u64) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        self.read_into(handle, &mut out).then_some(out)
+    }
+
+    /// [`SlabStore::read`] into a caller-supplied buffer (cleared first);
+    /// `false` ⇔ miss. This is the seqlock read described in the module
+    /// docs.
+    pub fn read_into(&self, handle: u64, out: &mut Vec<u8>) -> bool {
+        out.clear();
+        let Some((ci, gen, idx)) = self.unpack(handle) else { return false };
+        let class = &self.classes[ci];
+        let Some(header) = class.word(idx, 0) else { return false };
+        let h1 = header.load(Ordering::Acquire);
+        if (h1 >> 32) & GEN_MASK != gen {
+            return false;
+        }
+        let len = (h1 & 0xFFFF_FFFF) as usize;
+        if len > class.item_bytes {
+            return false; // malformed header: never trust it
+        }
+        out.reserve(len);
+        let words = len.div_ceil(8);
+        for w in 0..words {
+            let Some(word) = class.word(idx, 1 + w) else { return false };
+            let bytes = word.load(Ordering::Relaxed).to_le_bytes();
+            let take = (len - w * 8).min(8);
+            out.extend_from_slice(&bytes[..take]);
+        }
+        // Load→load order against the re-check; pairs with the freer's
+        // Release fence (module docs: the seqlock argument).
+        fence(Ordering::Acquire);
+        if header.load(Ordering::Relaxed) != h1 {
+            out.clear();
+            return false;
+        }
+        true
+    }
+
+    /// Recycle the item behind `handle`. The caller must own the handle
+    /// exclusively (it was swapped or claimed out of a set line), and
+    /// must not free the same handle twice — the cache variants guarantee
+    /// both by only freeing words obtained via `swap` or under a claimed
+    /// (RESERVED / locked) line.
+    pub fn free(&self, handle: u64) {
+        let Some((ci, gen, idx)) = self.unpack(handle) else { return };
+        let class = &self.classes[ci];
+        let Some(header) = class.word(idx, 0) else { return };
+        let cur = header.load(Ordering::Relaxed);
+        debug_assert_eq!(
+            (cur >> 32) & GEN_MASK,
+            gen,
+            "freeing a stale handle (double free?)"
+        );
+        // Invalidate first — generation bump, length 0 — then the
+        // Release fence orders the bump before the free-list scribbles.
+        header.store((cur >> 32).wrapping_add(1) << 32, Ordering::Relaxed);
+        fence(Ordering::Release);
+        class.push_free(idx);
+        class.frees.fetch_add(1, Ordering::Relaxed);
+        self.used_bytes.fetch_sub(class.item_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Decode a handle; `None` for words that are not live-looking
+    /// handles (class bits out of range).
+    fn unpack(&self, handle: u64) -> Option<(usize, u64, usize)> {
+        let class_plus1 = (handle >> (SLOT_BITS + GEN_BITS)) as usize;
+        if class_plus1 == 0 || class_plus1 > self.classes.len() {
+            return None;
+        }
+        let gen = (handle >> SLOT_BITS) & GEN_MASK;
+        let idx = (handle & 0xFFFF_FFFF) as usize;
+        Some((class_plus1 - 1, gen, idx))
+    }
+}
+
+/// Pack (class, generation, slot) into the non-zero handle word.
+fn pack_handle(class: usize, gen: u64, idx: usize) -> u64 {
+    ((class as u64 + 1) << (SLOT_BITS + GEN_BITS)) | ((gen & GEN_MASK) << SLOT_BITS) | idx as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_granular_monotone_and_covers_max_item() {
+        let s = SlabStore::new(1 << 26);
+        let sizes = s.class_sizes();
+        assert_eq!(sizes[0], GRANULE);
+        for w in sizes.windows(2) {
+            assert!(w[1] > w[0]);
+            assert_eq!(w[1] % GRANULE, 0, "class sizes must be granule multiples");
+            // Growth stays within [+1 granule, ~1.34x]: the configured
+            // 1.25 plus granule rounding.
+            assert!(w[1] <= w[0] * 4 / 3 + GRANULE as usize, "{} -> {}", w[0], w[1]);
+        }
+        assert!(*sizes.last().unwrap() >= s.max_item_bytes());
+        assert!(sizes.len() <= 62);
+    }
+
+    #[test]
+    fn roundtrip_every_class_boundary_and_edges() {
+        let s = SlabStore::new(1 << 26);
+        let mut lens: Vec<usize> = vec![0, 1, 7, 8, 9];
+        for &size in &s.class_sizes() {
+            if size > 4096 {
+                break; // keep the unit test fast; big blobs run in tests/slab.rs
+            }
+            lens.extend([size - 1, size, size + 1]);
+        }
+        for len in lens {
+            let value: Vec<u8> = (0..len).map(|i| (i * 31 + len) as u8).collect();
+            let h = s.alloc(&value).unwrap();
+            assert_ne!(h, 0, "handles are never the no-bytes word");
+            assert_eq!(s.read(h).as_deref(), Some(&value[..]), "len {len}");
+            s.free(h);
+            assert_eq!(s.read(h), None, "freed handle must read as a miss");
+        }
+        assert_eq!(s.used_bytes(), 0, "alloc/free must balance the ledger");
+    }
+
+    #[test]
+    fn oversized_values_are_refused() {
+        let s = SlabStore::new(1 << 26);
+        assert!(s.alloc(&vec![0u8; s.max_item_bytes() + 1]).is_none());
+        assert_eq!(s.granules_for(s.max_item_bytes() + 1), None);
+    }
+
+    #[test]
+    fn weight_is_item_size_not_requested_size() {
+        let s = SlabStore::new(1 << 26);
+        // A 65-byte value lands in the 128-byte class: 2 granules held.
+        assert_eq!(s.item_bytes_for(65), Some(128));
+        assert_eq!(s.granules_for(65), Some(2));
+        assert_eq!(s.granules_for(0), Some(1), "zero-length still holds one item");
+        let h = s.alloc(&[7u8; 65]).unwrap();
+        assert_eq!(s.used_bytes(), 128, "ledger meters the item, not the request");
+        s.free(h);
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn recycling_reuses_slots_and_generations_differ() {
+        let s = SlabStore::new(1 << 26);
+        let h1 = s.alloc(b"first").unwrap();
+        s.free(h1);
+        let h2 = s.alloc(b"second").unwrap();
+        assert_ne!(h1, h2, "recycled slot must carry a new generation");
+        assert_eq!(h1 & 0xFFFF_FFFF, h2 & 0xFFFF_FFFF, "same slot is reused");
+        assert_eq!(s.read(h1), None, "stale handle misses");
+        assert_eq!(s.read(h2).as_deref(), Some(&b"second"[..]));
+        s.free(h2);
+    }
+
+    #[test]
+    fn byte_cap_refuses_carving_but_recycles() {
+        // Cap small enough for exactly one smallest-class slab.
+        let one_slab = (SLAB_BYTES / ((1 + GRANULE / 8) * 8)) * (1 + GRANULE / 8) * 8;
+        let s = SlabStore::with_config(SlabConfig { max_bytes: one_slab, ..Default::default() });
+        let mut handles = Vec::new();
+        while let Some(h) = s.alloc(b"x") {
+            handles.push(h);
+        }
+        assert!(!handles.is_empty());
+        assert!(s.carved_bytes() <= one_slab as u64);
+        // Can't grow, but freeing one item makes one alloc succeed.
+        assert!(s.alloc(b"y").is_none());
+        s.free(handles.pop().unwrap());
+        assert!(s.alloc(b"y").is_some());
+    }
+
+    #[test]
+    fn stats_balance_at_quiesce() {
+        let s = SlabStore::new(1 << 26);
+        let mut handles = Vec::new();
+        for len in [0usize, 63, 64, 65, 500, 4000] {
+            handles.push(s.alloc(&vec![1u8; len]).unwrap());
+        }
+        for h in handles.drain(..3) {
+            s.free(h);
+        }
+        let stats = s.stats();
+        let mut live_bytes = 0u64;
+        for c in &stats.classes {
+            assert_eq!(c.carved, c.live + c.free, "carved = live + free per class");
+            live_bytes += c.live * c.item_bytes as u64;
+        }
+        assert_eq!(live_bytes, stats.used_bytes);
+        for h in handles {
+            s.free(h);
+        }
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn forged_words_never_read() {
+        let s = SlabStore::new(1 << 26);
+        for word in [0u64, 1, 42, u64::MAX, 1 << 58, 63 << 58] {
+            assert_eq!(s.read(word), None, "word {word:#x}");
+            s.free(word); // must be a harmless no-op, not a panic
+        }
+    }
+
+    #[test]
+    fn concurrent_churn_holds_the_ledger() {
+        use std::sync::Arc;
+        let s = Arc::new(SlabStore::new(1 << 26));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let s = Arc::clone(&s);
+                scope.spawn(move || {
+                    let mut held: Vec<(u64, Vec<u8>)> = Vec::new();
+                    for i in 0..2000usize {
+                        let len = (i * 37 + t * 101) % 700;
+                        let value: Vec<u8> = (0..len).map(|j| (j ^ i ^ t) as u8).collect();
+                        if let Some(h) = s.alloc(&value) {
+                            held.push((h, value));
+                        }
+                        if held.len() > 32 {
+                            let (h, v) = held.swap_remove(i % held.len());
+                            assert_eq!(s.read(h).as_deref(), Some(&v[..]), "torn read");
+                            s.free(h);
+                        }
+                    }
+                    for (h, v) in held {
+                        assert_eq!(s.read(h).as_deref(), Some(&v[..]));
+                        s.free(h);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.used_bytes(), 0);
+        let stats = s.stats();
+        for c in &stats.classes {
+            assert_eq!(c.carved, c.free, "everything freed: carved slots all on free lists");
+            assert_eq!(c.live, 0);
+        }
+    }
+}

@@ -58,10 +58,12 @@
 use super::alloc::AlignedSlice;
 use super::engine::{self, Elastic, Epoch, PreparedKey, SetEngine, MAX_WAYS};
 use super::geometry::{Geometry, EMPTY, RESERVED};
+use super::slab::SlabStore;
 use crate::lifetime::{self, BatchEntry, EntryOpts};
 use crate::policy::Policy;
 use crate::Cache;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 struct Way {
     key: AtomicU64,
@@ -108,6 +110,33 @@ impl KwWfa {
             engine: SetEngine::new(ways, policy),
             elastic: Elastic::new(geo, WfaTable::new(geo.capacity())),
         }
+    }
+
+    /// Build a byte-value cache: `capacity` entry slots backed by (about)
+    /// `value_bytes` of slab value memory (DESIGN.md §Value store). The
+    /// per-way weight budget becomes `value_bytes / capacity` in 64-byte
+    /// granules, so eviction meters real memory; the slab itself is
+    /// capped at twice the budget as a hard backstop (free items are
+    /// retained as reuse capacity, mirroring the engine's
+    /// retired-never-freed epochs).
+    pub fn with_value_store(
+        capacity: usize,
+        ways: usize,
+        policy: Policy,
+        value_bytes: usize,
+    ) -> Self {
+        let geo = Geometry::new(capacity, ways);
+        let store = Arc::new(SlabStore::for_budget(value_bytes));
+        let per_way = SlabStore::budget_per_way(value_bytes, geo.capacity());
+        let mut engine = SetEngine::new(ways, policy);
+        engine.attach_values(store, per_way);
+        Self { engine, elastic: Elastic::new(geo, WfaTable::new(geo.capacity())) }
+    }
+
+    /// The attached byte-value store, when built by
+    /// [`KwWfa::with_value_store`] (tests assert its ledgers directly).
+    pub fn value_store(&self) -> Option<&Arc<SlabStore>> {
+        self.engine.values()
     }
 
     /// The rounded geometry this cache currently runs with (the resize
@@ -198,13 +227,16 @@ impl KwWfa {
         self.probe_set(old_set, &pk, now)
     }
 
-    /// `put` with the hashing already done.
-    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) {
+    /// `put` with the hashing already done. Returns whether the value
+    /// word was published (word callers ignore it; `put_bytes` frees its
+    /// freshly allocated handle on `false` so a dropped insert never
+    /// leaks a slab item).
+    fn put_prepared(&self, pk: PreparedKey, value: u64, opts: EntryOpts) -> bool {
         self.engine.note_opts(&opts);
         if opts.weight as u64 > self.engine.set_budget() {
             // Heavier than a whole set's budget: can never fit, dropped
             // ("it is a cache" — same as an insert lost to contention).
-            return;
+            return false;
         }
         let ep = self.elastic.snapshot();
         if let Some(prev) = ep.prev() {
@@ -229,11 +261,29 @@ impl KwWfa {
             .engine
             .find_match(set.len(), |i| set[i].key.load(Ordering::Relaxed) == pk.ik)
         {
-            set[i].value.store(value, Ordering::Release);
-            set[i].life.store(life, Ordering::Relaxed);
+            if self.engine.values_active() {
+                // Byte mode: claim the line for the overwrite, so the
+                // displaced handle is obtained exclusively (never freed
+                // twice) and the new one can never land in a line a
+                // concurrent evictor just recycled to another key.
+                if set[i]
+                    .key
+                    .compare_exchange(pk.ik, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_err()
+                {
+                    return false; // line mid-churn: drop ("it is a cache")
+                }
+                let old = set[i].value.swap(value, Ordering::Release);
+                set[i].life.store(life, Ordering::Relaxed);
+                set[i].key.store(pk.ik, Ordering::Release);
+                self.engine.release_value(old);
+            } else {
+                set[i].value.store(value, Ordering::Release);
+                set[i].life.store(life, Ordering::Relaxed);
+            }
             self.engine.touch_atomic(&set[i].meta, now);
             self.repair_weight(set, pk.ik);
-            return;
+            return true;
         }
 
         // Pass 2 (Alg. 3 lines 12–16): claim an empty way (Relaxed peek,
@@ -251,7 +301,7 @@ impl KwWfa {
                 way.life.store(life, Ordering::Relaxed);
                 way.key.store(pk.ik, Ordering::Release);
                 self.repair_weight(set, pk.ik);
-                return;
+                return true;
             }
         }
 
@@ -272,20 +322,28 @@ impl KwWfa {
             }
         });
         if choice.guard == RESERVED {
-            return;
+            return false;
         }
         let way = &set[choice.way];
-        if way
+        let installed = way
             .key
             .compare_exchange(choice.guard, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
-            .is_ok()
-        {
-            way.value.store(value, Ordering::Release);
+            .is_ok();
+        if installed {
+            if self.engine.values_active() {
+                // The claim made this thread the victim's exclusive
+                // owner: swapping hands it the old handle to recycle.
+                let old = way.value.swap(value, Ordering::Release);
+                self.engine.release_value(old);
+            } else {
+                way.value.store(value, Ordering::Release);
+            }
             way.meta.store(self.engine.initial_meta(now), Ordering::Relaxed);
             way.life.store(life, Ordering::Relaxed);
             way.key.store(pk.ik, Ordering::Release);
         }
         self.repair_weight(set, pk.ik);
+        installed
     }
 
     /// Drain one source set of an in-flight resize into the target table
@@ -319,7 +377,10 @@ impl KwWfa {
             let life = way.life.load(Ordering::Relaxed);
             way.key.store(EMPTY, Ordering::Release);
             if self.engine.ttl_active() && lifetime::is_expired(life, self.engine.expiry_now()) {
-                continue; // dead line: reclaim, don't move
+                // Dead line: reclaim, don't move — and recycle its slab
+                // item (the claim made this thread the handle's owner).
+                self.engine.release_value(value);
+                continue;
             }
             let pk = self.engine.prepare(Geometry::decode_key(ik), ep.geo);
             self.install_migrated(ep, &pk, value, meta, life);
@@ -345,7 +406,10 @@ impl KwWfa {
             .engine
             .find_match(set.len(), |i| set[i].key.load(Ordering::Relaxed) == pk.ik);
         if resident.is_some() {
-            return; // a fresher insert already landed in the target
+            // A fresher insert already landed in the target: the old
+            // copy is dropped, and this thread owns its handle.
+            self.engine.release_value(value);
+            return;
         }
         for way in set {
             if way.key.load(Ordering::Relaxed) == EMPTY
@@ -374,7 +438,10 @@ impl KwWfa {
             }
         }
         let Some(victim) = self.engine.place_migrated(set.len(), now, &metas, meta) else {
-            return; // the migrated entry is the policy victim: drop it
+            // The migrated entry is the policy victim: drop it (and
+            // recycle its slab item — this thread owns the handle).
+            self.engine.release_value(value);
+            return;
         };
         let way = &set[victim];
         if way
@@ -382,10 +449,18 @@ impl KwWfa {
             .compare_exchange(guards[victim], RESERVED, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
-            way.value.store(value, Ordering::Release);
+            if self.engine.values_active() {
+                let old = way.value.swap(value, Ordering::Release);
+                self.engine.release_value(old);
+            } else {
+                way.value.store(value, Ordering::Release);
+            }
             way.meta.store(meta, Ordering::Relaxed);
             way.life.store(life, Ordering::Relaxed);
             way.key.store(pk.ik, Ordering::Release);
+        } else {
+            // Lost the displacement race: the migrated copy is dropped.
+            self.engine.release_value(value);
         }
         self.repair_weight(set, pk.ik);
     }
@@ -453,12 +528,28 @@ impl KwWfa {
                 }
                 None => return, // nothing evictable besides the new entry
             };
-            let _ = set[way].key.compare_exchange(
-                guard,
-                EMPTY,
-                Ordering::AcqRel,
-                Ordering::Relaxed,
-            );
+            if self.engine.values_active() {
+                // Byte mode evicts through a full claim: swap the value
+                // word to 0 *before* releasing the line to EMPTY, so the
+                // handle is freed exactly once and a later claimer of
+                // the empty line never sees (or frees) a stale handle.
+                if set[way]
+                    .key
+                    .compare_exchange(guard, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    let old = set[way].value.swap(0, Ordering::Relaxed);
+                    self.engine.release_value(old);
+                    set[way].key.store(EMPTY, Ordering::Release);
+                }
+            } else {
+                let _ = set[way].key.compare_exchange(
+                    guard,
+                    EMPTY,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+            }
         }
     }
 }
@@ -473,11 +564,42 @@ impl Cache for KwWfa {
             self.engine.prepare(key, self.elastic.snapshot().geo),
             value,
             EntryOpts::default(),
-        )
+        );
     }
 
     fn put_with(&self, key: u64, value: u64, opts: EntryOpts) {
-        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts)
+        self.put_prepared(self.engine.prepare(key, self.elastic.snapshot().geo), value, opts);
+    }
+
+    fn supports_values(&self) -> bool {
+        self.engine.values_active()
+    }
+
+    fn put_bytes_with(&self, key: u64, value: &[u8], opts: EntryOpts) -> bool {
+        let Some((handle, opts)) = self.engine.alloc_value(value, opts) else {
+            return false;
+        };
+        let pk = self.engine.prepare(key, self.elastic.snapshot().geo);
+        if self.put_prepared(pk, handle, opts) {
+            true
+        } else {
+            // The insert was dropped (contention / over-budget): the
+            // fresh item never became reachable, recycle it here.
+            self.engine.release_value(handle);
+            false
+        }
+    }
+
+    fn get_bytes(&self, key: u64) -> Option<Vec<u8>> {
+        let store = self.engine.values()?;
+        // The hit's value word is a generation-stamped handle; a slot
+        // recycled between the probe and this read fails the generation
+        // check and reports the eviction as a miss.
+        store.read(self.get(key)?)
+    }
+
+    fn value_bytes(&self) -> u64 {
+        self.engine.values().map_or(0, |s| s.used_bytes())
     }
 
     fn get_batch(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
@@ -501,7 +623,9 @@ impl Cache for KwWfa {
             items,
             |item| item.0,
             |set| self.prefetch_set(&ep.table, set, ways),
-            |pk, item| self.put_prepared(pk, item.1, EntryOpts::default()),
+            |pk, item| {
+                self.put_prepared(pk, item.1, EntryOpts::default());
+            },
         );
     }
 
@@ -513,7 +637,9 @@ impl Cache for KwWfa {
             items,
             |item| item.key,
             |set| self.prefetch_set(&ep.table, set, ways),
-            |pk, item| self.put_prepared(pk, item.value, item.opts),
+            |pk, item| {
+                self.put_prepared(pk, item.value, item.opts);
+            },
         );
     }
 
@@ -605,11 +731,25 @@ impl Cache for KwWfa {
                 if key == EMPTY || key == RESERVED {
                     continue;
                 }
-                if lifetime::is_expired(way.life.load(Ordering::Relaxed), now_ms)
-                    && way
+                if !lifetime::is_expired(way.life.load(Ordering::Relaxed), now_ms) {
+                    continue;
+                }
+                if self.engine.values_active() {
+                    // Same claim-then-zero discipline as repair_weight.
+                    if way
                         .key
-                        .compare_exchange(key, EMPTY, Ordering::AcqRel, Ordering::Relaxed)
+                        .compare_exchange(key, RESERVED, Ordering::AcqRel, Ordering::Relaxed)
                         .is_ok()
+                    {
+                        let old = way.value.swap(0, Ordering::Relaxed);
+                        self.engine.release_value(old);
+                        way.key.store(EMPTY, Ordering::Release);
+                        reclaimed += 1;
+                    }
+                } else if way
+                    .key
+                    .compare_exchange(key, EMPTY, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
                 {
                     reclaimed += 1;
                 }
@@ -853,6 +993,51 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn byte_values_roundtrip_and_recycle() {
+        // Word caches refuse the byte API outright.
+        let c = KwWfa::new(64, 4, Policy::Lru);
+        assert!(!c.supports_values());
+        assert!(!c.put_bytes(1, b"nope"));
+        assert_eq!(c.get_bytes(1), None);
+
+        let c = KwWfa::with_value_store(64, 4, Policy::Lru, 1 << 22);
+        assert!(c.supports_values());
+        assert!(c.put_bytes(1, b"hello slab"));
+        assert_eq!(c.get_bytes(1).as_deref(), Some(&b"hello slab"[..]));
+        let store = c.value_store().unwrap();
+        assert_eq!(store.used_bytes(), 64, "10 bytes occupy one 64-byte item");
+        // An overwrite recycles the displaced item: ledger swaps to the
+        // new size instead of accumulating.
+        assert!(c.put_bytes(1, &[7u8; 300]));
+        assert_eq!(c.get_bytes(1).unwrap(), vec![7u8; 300]);
+        assert_eq!(store.used_bytes(), 320, "300 bytes land in the 320-byte class");
+        assert_eq!(c.value_bytes(), 320);
+        // The word-path tombstone (put 0) frees the blob too.
+        c.put(1, 0);
+        assert_eq!(c.get_bytes(1), None);
+        assert_eq!(store.used_bytes(), 0, "tombstoned blob recycled");
+    }
+
+    #[test]
+    fn byte_eviction_recycles_items() {
+        // Single set of 4 ways: inserting 40 distinct keys forces ~36
+        // evictions; every displaced handle must come back to the free
+        // list (ledger == live residents only).
+        let c = KwWfa::with_value_store(4, 4, Policy::Lru, 1 << 20);
+        for key in 0..40u64 {
+            c.put_bytes(key, &[key as u8; 100]);
+        }
+        let store = c.value_store().unwrap();
+        let live = (0..40u64).filter(|&k| c.get_bytes(k).is_some()).count() as u64;
+        assert!(live <= 4);
+        assert_eq!(store.used_bytes(), live * 128, "only residents hold items");
+        let stats = store.stats();
+        for cl in &stats.classes {
+            assert_eq!(cl.carved, cl.live + cl.free, "free-list ledger balances");
+        }
     }
 
     #[test]

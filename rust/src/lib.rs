@@ -48,7 +48,7 @@ pub mod metrics;
 pub mod net;
 pub mod analysis;
 
-pub use lifetime::{BatchEntry, EntryOpts, WeightDist};
+pub use lifetime::{BatchEntry, EntryOpts, ValueDist, WeightDist};
 
 /// Common cache interface shared by every implementation in this crate.
 ///
@@ -240,6 +240,47 @@ pub trait Cache: Send + Sync {
     fn peek_victim(&self, _key: u64) -> Option<u64> {
         None
     }
+    /// Does this cache store byte-blob values ([`Cache::put_bytes`] /
+    /// [`Cache::get_bytes`])? `false` (the default) is the honest answer
+    /// for word-valued caches: their byte methods refuse instead of
+    /// corrupting the word space. The k-way variants report `true` when
+    /// built with an attached slab store (`with_value_store`), which
+    /// turns the value word into a generation-stamped handle into slab
+    /// item memory and makes entry weight the item's *actual* bytes
+    /// (DESIGN.md §Value store). A byte-mode cache still accepts word
+    /// puts of `0` (the tombstone idiom) but other word values are
+    /// reserved for handles.
+    fn supports_values(&self) -> bool {
+        false
+    }
+    /// Store a byte value under `key`, immortal. Returns whether the
+    /// value was admitted — `false` when the implementation has no byte
+    /// support (the default), the value exceeds the largest slab class,
+    /// the store is out of memory, or the insert lost to contention
+    /// ("it is a cache").
+    fn put_bytes(&self, key: u64, value: &[u8]) -> bool {
+        self.put_bytes_with(key, value, EntryOpts::default())
+    }
+    /// [`Cache::put_bytes`] with explicit lifetime options. The entry's
+    /// weight is always the slab item's size in 64-byte granules —
+    /// callers cannot understate what the value actually holds.
+    fn put_bytes_with(&self, key: u64, value: &[u8], opts: EntryOpts) -> bool {
+        let _ = (key, value, opts);
+        false
+    }
+    /// Retrieve `key`'s byte value. `None` on miss, expiry, eviction
+    /// racing the read (the generation check turns a recycled slot into
+    /// a clean miss — never torn bytes), or no byte support.
+    fn get_bytes(&self, key: u64) -> Option<Vec<u8>> {
+        let _ = key;
+        None
+    }
+    /// Slab bytes currently held by live values (0 for word caches).
+    /// Exact at quiesce; approximate under concurrency, like
+    /// [`Cache::weight`].
+    fn value_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// Forward the full `Cache` surface through a shared pointer, so wrapper
@@ -306,6 +347,21 @@ impl Cache for std::sync::Arc<dyn Cache> {
     }
     fn peek_victim(&self, key: u64) -> Option<u64> {
         (**self).peek_victim(key)
+    }
+    fn supports_values(&self) -> bool {
+        (**self).supports_values()
+    }
+    fn put_bytes(&self, key: u64, value: &[u8]) -> bool {
+        (**self).put_bytes(key, value)
+    }
+    fn put_bytes_with(&self, key: u64, value: &[u8], opts: EntryOpts) -> bool {
+        (**self).put_bytes_with(key, value, opts)
+    }
+    fn get_bytes(&self, key: u64) -> Option<Vec<u8>> {
+        (**self).get_bytes(key)
+    }
+    fn value_bytes(&self) -> u64 {
+        (**self).value_bytes()
     }
 }
 

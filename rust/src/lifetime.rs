@@ -250,6 +250,120 @@ impl WeightDist {
     }
 }
 
+/// Deterministic per-key value-*length* distributions for byte-value
+/// workloads (`--value-dist` on the CLI; the slab bench and loadgen).
+/// Like [`WeightDist`], lengths are a pure function of the key, so the
+/// payload a key carries — and therefore the slab class it lands in —
+/// is identical across threads, repeats and processes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ValueDist {
+    /// Word values only — the byte path stays disabled.
+    #[default]
+    Word,
+    /// Every value is exactly `len` bytes.
+    Fixed {
+        /// Payload length in bytes.
+        len: u32,
+    },
+    /// Uniform lengths in `1..=max` — exercises every slab class below
+    /// `max` about equally.
+    Uniform {
+        /// Largest length drawn.
+        max: u32,
+    },
+    /// Pareto-skewed lengths in `1..=max` (most values small, a heavy
+    /// tail of large blobs — the size shape of real object caches).
+    Zipf {
+        /// Cap on the heavy tail.
+        max: u32,
+    },
+}
+
+impl ValueDist {
+    /// Parse a CLI spelling: `word`, `fixed:N`, `uniform:MAX`,
+    /// `zipf:MAX` (default N/MAX = 128).
+    pub fn parse(s: &str) -> Option<ValueDist> {
+        let (name, n) = match s.split_once(':') {
+            Some((n, m)) => (n, m.parse::<u32>().ok()?),
+            None => (s, 128),
+        };
+        let name = name.to_ascii_lowercase();
+        if name == "word" || name == "none" {
+            return Some(ValueDist::Word);
+        }
+        if n == 0 {
+            return None;
+        }
+        match name.as_str() {
+            "fixed" => Some(ValueDist::Fixed { len: n }),
+            "uniform" => Some(ValueDist::Uniform { max: n }),
+            "zipf" | "pareto" => Some(ValueDist::Zipf { max: n }),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling (inverse of [`ValueDist::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            ValueDist::Word => "word".into(),
+            ValueDist::Fixed { len } => format!("fixed:{len}"),
+            ValueDist::Uniform { max } => format!("uniform:{max}"),
+            ValueDist::Zipf { max } => format!("zipf:{max}"),
+        }
+    }
+
+    /// Whether this distribution produces byte values at all.
+    pub fn is_bytes(&self) -> bool {
+        !matches!(self, ValueDist::Word)
+    }
+
+    /// The largest length this distribution can produce (0 for `Word`).
+    pub fn max_len(&self) -> usize {
+        match self {
+            ValueDist::Word => 0,
+            ValueDist::Fixed { len } => *len as usize,
+            ValueDist::Uniform { max } | ValueDist::Zipf { max } => *max as usize,
+        }
+    }
+
+    /// The value length of `key` under this distribution (deterministic;
+    /// 0 for `Word`).
+    pub fn len_of(&self, key: u64) -> usize {
+        match self {
+            ValueDist::Word => 0,
+            ValueDist::Fixed { len } => *len as usize,
+            ValueDist::Uniform { max } => {
+                1 + (crate::util::hash::mix64(key ^ 0xB10B_517E) % *max as u64) as usize
+            }
+            ValueDist::Zipf { max } => {
+                // Pareto(α = 1) via inverse transform, clamped: most keys
+                // draw small blobs, the tail reaches `max` fast enough to
+                // touch the top slab classes in a short run.
+                let h = crate::util::hash::mix64(key ^ 0x0B1A_B10B);
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+                let len = 1.0 / (1.0 - u);
+                (len as u64).clamp(1, *max as u64) as usize
+            }
+        }
+    }
+
+    /// Fill `buf` with the deterministic payload of `key`: the drawn
+    /// length, every byte derived from the key (so a torture test can
+    /// verify a returned blob really belongs to the key it asked for).
+    pub fn fill(&self, key: u64, buf: &mut Vec<u8>) {
+        buf.clear();
+        let len = self.len_of(key);
+        buf.reserve(len);
+        let mut word = crate::util::hash::mix64(key ^ 0xF1_11_ED);
+        for i in 0..len {
+            if i % 8 == 0 {
+                word = crate::util::hash::mix64(word.wrapping_add(i as u64));
+            }
+            buf.push((word >> ((i % 8) * 8)) as u8);
+        }
+    }
+}
+
 /// Parse a human duration: `0`, `250us`, `100ms`, `2s`, `5m` (bare
 /// numbers are milliseconds). Used by the `--ttl` CLI option.
 pub fn parse_duration(s: &str) -> Option<Duration> {
@@ -370,6 +484,57 @@ mod tests {
         assert!(small > 6_500, "only {small}/10000 small weights");
         let heavy = (0..10_000u64).filter(|&k| dist.weight_of(k) >= 8).count();
         assert!(heavy > 20, "no heavy tail: {heavy}");
+    }
+
+    #[test]
+    fn value_dist_parse_and_name_round_trip() {
+        for spec in ["word", "fixed:64", "uniform:4096", "zipf:1048576"] {
+            let d = ValueDist::parse(spec).unwrap();
+            assert_eq!(d.name(), spec);
+        }
+        assert_eq!(ValueDist::parse("fixed"), Some(ValueDist::Fixed { len: 128 }));
+        assert_eq!(ValueDist::parse("none"), Some(ValueDist::Word));
+        assert_eq!(ValueDist::parse("fixed:0"), None);
+        assert_eq!(ValueDist::parse("bogus"), None);
+    }
+
+    #[test]
+    fn value_lengths_are_deterministic_and_in_range() {
+        for dist in [
+            ValueDist::Fixed { len: 100 },
+            ValueDist::Uniform { max: 500 },
+            ValueDist::Zipf { max: 500 },
+        ] {
+            for key in 0..2000u64 {
+                let len = dist.len_of(key);
+                assert_eq!(len, dist.len_of(key), "{dist:?} key {key} not deterministic");
+                assert!((1..=500).contains(&len), "{dist:?} key {key} len {len}");
+            }
+        }
+        assert_eq!(ValueDist::Word.len_of(7), 0);
+        assert!(!ValueDist::Word.is_bytes());
+        assert!(ValueDist::Fixed { len: 1 }.is_bytes());
+    }
+
+    #[test]
+    fn value_fill_is_key_stamped() {
+        let dist = ValueDist::Uniform { max: 300 };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        dist.fill(1, &mut a);
+        dist.fill(1, &mut b);
+        assert_eq!(a, b, "same key, same payload");
+        dist.fill(2, &mut b);
+        assert_ne!(a, b, "different keys draw different payloads");
+        assert_eq!(a.len(), dist.len_of(1));
+    }
+
+    #[test]
+    fn zipf_value_lengths_span_the_classes() {
+        let dist = ValueDist::Zipf { max: 1 << 20 };
+        let small = (0..10_000u64).filter(|&k| dist.len_of(k) <= 64).count();
+        assert!(small > 8_000, "only {small}/10000 small blobs");
+        let big = (0..10_000u64).filter(|&k| dist.len_of(k) >= 4096).count();
+        assert!(big > 0, "no heavy tail");
     }
 
     #[test]

@@ -35,6 +35,12 @@
 //! background driver — pumps the migration while traffic keeps flowing);
 //! the dedicated `resize` subcommand measures the before/during/after
 //! phases explicitly against a twin built at the target capacity.
+//!
+//! Byte values (DESIGN.md §Value store): `serve --value-bytes N` backs
+//! the cache with an N-byte slab value store, turning wire payloads into
+//! binary-safe blobs; `loadgen --value-dist fixed:N|uniform:MAX|zipf:MAX`
+//! drives it with deterministic key-stamped byte payloads (`word`, the
+//! default, keeps the decimal-`u64` workload).
 
 use anyhow::{anyhow, bail, Result};
 use kway::coordinator::DegradedPolicy;
@@ -92,9 +98,9 @@ const HELP: &str = "usage: kway <subcommand> [--options]
   batch      [--batch 1,8,32,128] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 4] [--capacity 262144] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave]
   resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
   bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave] [--json]
-  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--resize-at N --resize-to C] [--degraded miss|error] [--shed-depth N] [--faults SPEC]
+  serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--value-bytes N] [--resize-at N --resize-to C] [--degraded miss|error] [--shed-depth N] [--faults SPEC]
              [--listen 127.0.0.1:11211 [--io-threads 2] [--max-conns N] [--max-wq-bytes N] [--idle-timeout 30s] [--request-deadline 5s]]  (memcached text + RESP over TCP)
-  loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--seed 42] [--max-reconnects 1024] [--pin] [--smoke] [--json]
+  loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--value-dist word|fixed:N|uniform:MAX|zipf:MAX] [--seed 42] [--max-reconnects 1024] [--pin] [--smoke] [--json]
   chaos      [--smoke] [--seed 42] [--phase-ms 600] [--faults SPEC]  (fault drill; writes BENCH_chaos.json)
              SPEC e.g. worker_panic@5s,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test
   validate   [--artifacts artifacts] [--trace oltp]
@@ -107,9 +113,11 @@ fn parse_admission(args: &Args) -> Result<AdmissionMode> {
     AdmissionMode::parse(&raw).ok_or_else(|| anyhow!("bad --admission {raw:?} (none|tlfu)"))
 }
 
-/// Parse the shared `--ttl <dur>` / `--weight-dist <dist>` fill options
-/// (e.g. `--ttl 100ms --weight-dist zipf:8`). Absent options leave the
-/// fill plain: immortal entries of weight 1, the pre-lifetime behaviour.
+/// Parse the shared `--ttl <dur>` / `--weight-dist <dist>` /
+/// `--value-dist <dist>` fill options (e.g. `--ttl 100ms --weight-dist
+/// zipf:8 --value-dist zipf:4096`). Absent options leave the fill
+/// plain: immortal word entries of weight 1, the pre-lifetime
+/// behaviour.
 fn parse_fill(args: &Args) -> Result<FillSpec> {
     let ttl = match args.get("ttl") {
         None => None,
@@ -123,7 +131,7 @@ fn parse_fill(args: &Args) -> Result<FillSpec> {
         Some(raw) => WeightDist::parse(raw)
             .ok_or_else(|| anyhow!("bad --weight-dist {raw:?} (unit|uniform[:MAX]|zipf[:MAX])"))?,
     };
-    Ok(FillSpec { ttl, weight_dist })
+    Ok(FillSpec { ttl, weight_dist, value_dist: parse_value_dist(args)? })
 }
 
 /// Parse the shared `--pin` / `--numa-interleave` measurement toggles:
@@ -168,6 +176,29 @@ fn parse_resilience(args: &Args) -> Result<(DegradedPolicy, usize, Option<Arc<Fa
         Some(spec) => Some(Arc::new(FaultPlan::parse(spec)?)),
     };
     Ok((degraded, shed_queue_depth, faults))
+}
+
+/// Parse `--value-dist word|fixed:N|uniform:MAX|zipf:MAX` (loadgen's
+/// store-payload axis); absent means decimal words.
+fn parse_value_dist(args: &Args) -> Result<kway::lifetime::ValueDist> {
+    match args.get("value-dist") {
+        None => Ok(kway::lifetime::ValueDist::Word),
+        Some(raw) => kway::lifetime::ValueDist::parse(raw).ok_or_else(|| {
+            anyhow!("bad --value-dist {raw:?} (word|fixed:N|uniform:MAX|zipf:MAX)")
+        }),
+    }
+}
+
+/// Build the serving cache: plain KW-WFSC, or — with `--value-bytes N`
+/// — the same variant over an N-byte slab value store (DESIGN.md §Value
+/// store), which makes the wire protocols binary-safe.
+fn build_serve_cache(capacity: usize, value_bytes: usize) -> Arc<dyn kway::Cache> {
+    use kway::kway::{build_with_values, KwWfsc, Variant};
+    if value_bytes > 0 {
+        Arc::from(build_with_values(Variant::Wfsc, capacity, 8, Policy::Lru, value_bytes))
+    } else {
+        Arc::new(KwWfsc::new(capacity, 8, Policy::Lru))
+    }
 }
 
 /// Parse an optional duration-valued option (e.g. `--idle-timeout 30s`);
@@ -423,9 +454,11 @@ fn cmd_batch(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use kway::coordinator::{CacheService, ServiceConfig};
-    use kway::kway::KwWfsc;
     use std::sync::atomic::{AtomicBool, Ordering};
     let capacity = args.get_parsed_or("capacity", 65_536usize)?;
+    // --value-bytes N > 0 backs the cache with an N-byte slab value
+    // store: wire payloads become binary-safe byte blobs.
+    let value_bytes = args.get_parsed_or("value-bytes", 0usize)?;
     let workers = args.get_parsed_or("workers", 4usize)?;
     let clients = args.get_parsed_or("clients", 8usize)?;
     let requests = args.get_parsed_or("requests", 20_000usize)?;
@@ -443,18 +476,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --listen <addr> switches from the in-process demo clients to the
     // TCP wire front end (memcached text + RESP); it serves until killed.
     if let Some(listen) = args.get("listen") {
-        return serve_tcp(args, listen, capacity, workers, admission, default_ttl, resize);
+        return serve_tcp(
+            args, listen, capacity, value_bytes, workers, admission, default_ttl, resize,
+        );
     }
     let (degraded, shed_queue_depth, faults) = parse_resilience(args)?;
     if let Some(plan) = &faults {
         plan.arm();
     }
-    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
+    let cache = build_serve_cache(capacity, value_bytes);
     println!(
-        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}{}",
+        "serving: cache={}{} capacity={} workers={workers} clients={clients} x {requests} reqs{}{}{}{}",
         cache.name(),
         admission.label(),
         cache.capacity(),
+        if value_bytes > 0 { format!(" (values {value_bytes}B slab)") } else { String::new() },
         if batch > 0 { format!(" (batched x{batch})") } else { String::new() },
         match default_ttl {
             Some(ttl) => format!(" (ttl {ttl:?})"),
@@ -526,17 +562,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// until the process is killed. `--resize-at N --resize-to C` still
 /// works: a poll loop fires the online resize once the service's op
 /// counters cross the threshold, while connections keep flowing.
+#[allow(clippy::too_many_arguments)]
 fn serve_tcp(
     args: &Args,
     listen: &str,
     capacity: usize,
+    value_bytes: usize,
     workers: usize,
     admission: AdmissionMode,
     default_ttl: Option<Duration>,
     resize: Option<kway::throughput::ResizeSpec>,
 ) -> Result<()> {
     use kway::coordinator::{CacheService, ServiceConfig};
-    use kway::kway::KwWfsc;
     use kway::net::{Server, ServerConfig};
     use std::sync::atomic::Ordering;
     let io_threads = args.get_parsed_or("io-threads", 2usize)?;
@@ -548,7 +585,7 @@ fn serve_tcp(
     if let Some(plan) = &faults {
         plan.arm();
     }
-    let cache: Arc<dyn kway::Cache> = Arc::new(KwWfsc::new(capacity, 8, Policy::Lru));
+    let cache = build_serve_cache(capacity, value_bytes);
     let service = Arc::new(CacheService::start(
         cache,
         ServiceConfig {
@@ -573,10 +610,15 @@ fn serve_tcp(
         server.local_addr()
     );
     println!(
-        "kway: cache={}{} capacity={}{}",
+        "kway: cache={}{} capacity={}{}{}",
         service.cache().name(),
         admission.label(),
         service.cache().capacity(),
+        if value_bytes > 0 {
+            format!(" value-store={value_bytes}B (binary-safe payloads)")
+        } else {
+            String::new()
+        },
         match default_ttl {
             Some(ttl) => format!(" default-ttl={ttl:?}"),
             None => String::new(),
@@ -618,7 +660,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let proto_raw = args.get_or("proto", "memcached");
     let proto = WireProto::parse(&proto_raw)
         .ok_or_else(|| anyhow!("bad --proto {proto_raw:?} (memcached|resp)"))?;
-    let cfg = if args.has_flag("smoke") {
+    let value_dist = parse_value_dist(args)?;
+    let mut cfg = if args.has_flag("smoke") {
         LoadgenConfig::smoke(&addr, proto)
     } else {
         LoadgenConfig {
@@ -635,20 +678,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 None => None,
                 Some(raw) => Some(raw.parse::<f64>().map_err(|_| anyhow!("bad --zipf {raw:?}"))?),
             },
+            value_dist,
             seed: args.get_parsed_or("seed", 42u64)?,
             pin: args.has_flag("pin"),
             max_reconnects: args.get_parsed_or("max-reconnects", 1024u64)?,
             faults: None,
         }
     };
+    // --value-dist applies even under --smoke (smoke defaults to words).
+    cfg.value_dist = value_dist;
     println!(
-        "loadgen: addr={} proto={} connections={} pipeline={} threads={} duration={:?}",
+        "loadgen: addr={} proto={} connections={} pipeline={} threads={} duration={:?} values={}",
         cfg.addr,
         cfg.proto.name(),
         cfg.connections,
         cfg.pipeline,
         cfg.threads,
-        cfg.duration
+        cfg.duration,
+        cfg.value_dist.name()
     );
     let r = loadgen::run(&cfg)?;
     println!(

@@ -20,9 +20,20 @@
 //! fused key observes the write because the write batch executes
 //! before the read batch is issued.
 //!
+//! Values are executed in one of two modes, chosen once per service:
+//! when the cache holds byte values ([`CacheService::supports_values`]),
+//! raw wire payloads flow through the byte batch path
+//! (`get_bytes_batch` / `put_bytes_batch_with`) untouched — binary-safe
+//! end to end; over a word-only cache the executor decimal-parses each
+//! payload at accumulation time (answering `CLIENT_ERROR` / `-ERR` for
+//! non-decimal values, exactly the pre-slab behaviour, now decided here
+//! instead of in the codecs).
+//!
 //! [`Connection`] wraps a `TcpStream` around a session: level-triggered
 //! readiness, read-until-`WouldBlock` with a per-cycle byte cap,
 //! vectored response flushing, and half-close handling.
+//!
+//! [`CacheService::supports_values`]: crate::coordinator::CacheService::supports_values
 //!
 //! [`CacheService::get_batch`]: crate::coordinator::CacheService::get_batch
 //! [`CacheService::put_batch_with`]: crate::coordinator::CacheService::put_batch_with
@@ -30,7 +41,7 @@
 use super::buf::{ReadBuf, WriteQueue};
 use super::memcached::{self, MemcachedDecoder};
 use super::resp::{self, RespDecoder};
-use super::{Command, WireKey};
+use super::{parse_value, Command, WireKey};
 use crate::coordinator::{CacheService, DegradedPolicy};
 use crate::lifetime::EntryOpts;
 use std::io;
@@ -41,6 +52,11 @@ use std::time::Duration;
 /// Max bytes consumed from one socket per event-loop cycle, so one
 /// fire-hosing connection cannot starve the rest of an io thread.
 const READ_CYCLE_CAP: usize = 256 * 1024;
+
+/// Word-cache refusal of a non-decimal payload, memcached flavour.
+const BAD_WORD_VALUE_MC: &str = "CLIENT_ERROR bad data chunk (value must be a decimal u64)";
+/// Word-cache refusal of a non-decimal payload, RESP flavour.
+const BAD_WORD_VALUE_RESP: &str = "-ERR value is not a decimal u64";
 
 /// Wire protocol spoken by a connection, sniffed from its first byte
 /// (`*` opens a RESP array; memcached text never starts with `*`).
@@ -144,10 +160,13 @@ struct ReadReq {
 struct Fuser<'a> {
     service: &'a CacheService,
     proto: Proto,
+    /// Byte-value mode: the cache stores blobs, payloads ride raw.
+    bytes_mode: bool,
     out: &'a mut Vec<u8>,
     reads: Vec<ReadReq>,
     read_keys: Vec<u64>,
     writes: Vec<(u64, u64)>,
+    byte_writes: Vec<(u64, Vec<u8>)>,
     write_opts: EntryOpts,
 }
 
@@ -156,10 +175,12 @@ impl<'a> Fuser<'a> {
         Self {
             service,
             proto,
+            bytes_mode: service.supports_values(),
             out,
             reads: Vec::new(),
             read_keys: Vec::new(),
             writes: Vec::new(),
+            byte_writes: Vec::new(),
             write_opts: service.default_opts(),
         }
     }
@@ -203,23 +224,70 @@ impl<'a> Fuser<'a> {
                     self.exec_add(key, value, ttl, noreply);
                 } else {
                     let opts = self.opts_for(ttl);
-                    self.accumulate_write(key.id, value, opts);
-                    match self.proto {
-                        Proto::Memcached => {
+                    let stored = if self.bytes_mode {
+                        self.accumulate_write_bytes(key.id, value, opts);
+                        true
+                    } else if let Some(word) = parse_value(&value) {
+                        self.accumulate_write(key.id, word, opts);
+                        true
+                    } else {
+                        false
+                    };
+                    match (stored, self.proto) {
+                        (true, Proto::Memcached) => {
                             if !noreply {
                                 memcached::encode_line(self.out, "STORED");
                             }
                         }
-                        Proto::Resp => resp::encode_ok(self.out),
+                        (true, Proto::Resp) => resp::encode_ok(self.out),
+                        (false, proto) => {
+                            // Word cache, non-decimal payload: refuse at
+                            // accumulation so the error keeps request
+                            // order (the connection survives).
+                            self.flush_all();
+                            match proto {
+                                Proto::Memcached => {
+                                    if !noreply {
+                                        memcached::encode_line(self.out, BAD_WORD_VALUE_MC);
+                                    }
+                                }
+                                Proto::Resp => resp::encode_error(self.out, BAD_WORD_VALUE_RESP),
+                            }
+                        }
                     }
                 }
             }
             Command::WriteMany { items } => {
                 let opts = self.service.default_opts();
-                for (key, value) in items {
-                    self.accumulate_write(key.id, value, opts);
+                if self.bytes_mode {
+                    for (key, value) in items {
+                        self.accumulate_write_bytes(key.id, value, opts);
+                    }
+                    resp::encode_ok(self.out);
+                } else {
+                    // All-or-nothing decimal check before accumulating,
+                    // so a half-bad MSET stores nothing.
+                    let mut words = Vec::with_capacity(items.len());
+                    let mut ok = true;
+                    for (key, value) in &items {
+                        match parse_value(value) {
+                            Some(w) => words.push((key.id, w)),
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        for (key, word) in words {
+                            self.accumulate_write(key, word, opts);
+                        }
+                        resp::encode_ok(self.out);
+                    } else {
+                        self.flush_all();
+                        resp::encode_error(self.out, BAD_WORD_VALUE_RESP);
+                    }
                 }
-                resp::encode_ok(self.out);
             }
             Command::Delete { keys, noreply } => {
                 self.flush_all();
@@ -324,6 +392,17 @@ impl<'a> Fuser<'a> {
         self.writes.push((key, value));
     }
 
+    /// Byte-mode twin of [`Fuser::accumulate_write`]: raw payloads fuse
+    /// into one `put_bytes_batch_with`.
+    fn accumulate_write_bytes(&mut self, key: u64, value: Vec<u8>, opts: EntryOpts) {
+        self.flush_reads();
+        if !self.byte_writes.is_empty() && opts != self.write_opts {
+            self.flush_writes();
+        }
+        self.write_opts = opts;
+        self.byte_writes.push((key, value));
+    }
+
     fn flush_all(&mut self) {
         self.flush_reads();
         self.flush_writes();
@@ -337,6 +416,15 @@ impl<'a> Fuser<'a> {
         if self.reads.is_empty() {
             return;
         }
+        if self.bytes_mode {
+            self.flush_reads_bytes();
+        } else {
+            self.flush_reads_words();
+        }
+    }
+
+    /// Word-mode fused read: values encode as decimal text.
+    fn flush_reads_words(&mut self) {
         let keys = std::mem::take(&mut self.read_keys);
         let n = keys.len();
         let values = match self.service.try_get_batch(keys) {
@@ -384,31 +472,93 @@ impl<'a> Fuser<'a> {
         }
     }
 
-    /// Issue the fused `put_batch_with` (responses were emitted at
-    /// accumulation time — a batch the stopped service drops is counted
-    /// as degraded; the Error policy refuses *before* answering, in
-    /// [`Fuser::execute`], so this silent drop only happens under
-    /// MissThrough or when the service halts mid-pipeline).
-    fn flush_writes(&mut self) {
-        if self.writes.is_empty() {
-            return;
+    /// Byte-mode fused read: one `get_bytes_batch`, raw length-framed
+    /// payloads in the responses (binary-safe both protocols).
+    fn flush_reads_bytes(&mut self) {
+        let keys = std::mem::take(&mut self.read_keys);
+        let n = keys.len();
+        let values = match self.service.try_get_bytes_batch(keys) {
+            Ok(values) => values,
+            Err(_) => {
+                self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+                if self.service.degraded_policy() == DegradedPolicy::Error {
+                    for _ in self.reads.drain(..) {
+                        match self.proto {
+                            Proto::Memcached => {
+                                memcached::encode_line(self.out, "SERVER_ERROR unavailable")
+                            }
+                            Proto::Resp => resp::encode_error(self.out, "-ERR unavailable"),
+                        }
+                    }
+                    return;
+                }
+                (0..n).map(|_| None).collect()
+            }
+        };
+        let mut at = 0;
+        for req in self.reads.drain(..) {
+            let hits = &values[at..at + req.keys.len()];
+            at += req.keys.len();
+            match self.proto {
+                Proto::Memcached => {
+                    for (key, value) in req.keys.iter().zip(hits) {
+                        if let Some(v) = value {
+                            memcached::encode_value_bytes(self.out, &key.text, v, req.cas);
+                        }
+                    }
+                    memcached::encode_end(self.out);
+                }
+                Proto::Resp => {
+                    if req.single {
+                        resp::encode_bulk_bytes(self.out, hits[0].as_deref());
+                    } else {
+                        resp::encode_array_header(self.out, hits.len());
+                        for v in hits {
+                            resp::encode_bulk_bytes(self.out, v.as_deref());
+                        }
+                    }
+                }
+            }
         }
-        let batch = std::mem::take(&mut self.writes);
-        if self.service.try_put_batch_with(batch, self.write_opts).is_err() {
-            self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Issue the fused `put_batch_with` / `put_bytes_batch_with`
+    /// (responses were emitted at accumulation time — a batch the
+    /// stopped service drops is counted as degraded; the Error policy
+    /// refuses *before* answering, in [`Fuser::execute`], so this silent
+    /// drop only happens under MissThrough or when the service halts
+    /// mid-pipeline).
+    fn flush_writes(&mut self) {
+        if !self.writes.is_empty() {
+            let batch = std::mem::take(&mut self.writes);
+            if self.service.try_put_batch_with(batch, self.write_opts).is_err() {
+                self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if !self.byte_writes.is_empty() {
+            let batch = std::mem::take(&mut self.byte_writes);
+            if self.service.try_put_bytes_batch_with(batch, self.write_opts).is_err() {
+                self.service.metrics().degraded_ops.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
     /// memcached `add`: store only if absent. Executes unfused; the
     /// presence check and store are not atomic under concurrent writers
     /// (documented best-effort, like the rest of the RMW surface).
-    fn exec_add(&mut self, key: WireKey, value: u64, ttl: Option<Duration>, noreply: bool) {
+    fn exec_add(&mut self, key: WireKey, value: Vec<u8>, ttl: Option<Duration>, noreply: bool) {
         let line = if self.service.get(key.id).is_some() {
             "NOT_STORED"
-        } else {
+        } else if self.bytes_mode {
             let opts = self.opts_for(ttl);
-            self.service.put_with(key.id, value, opts);
+            self.service.put_bytes_with(key.id, value, opts);
             "STORED"
+        } else if let Some(word) = parse_value(&value) {
+            let opts = self.opts_for(ttl);
+            self.service.put_with(key.id, word, opts);
+            "STORED"
+        } else {
+            BAD_WORD_VALUE_MC
         };
         if !noreply {
             memcached::encode_line(self.out, line);
@@ -456,18 +606,31 @@ impl<'a> Fuser<'a> {
     }
 
     /// Touch/EXPIRE: re-store the current value under a new TTL
-    /// (get + put_with; best-effort under concurrency).
+    /// (get + put_with; best-effort under concurrency). Byte mode
+    /// re-stores through the byte path — the value word is a slab
+    /// handle there, and re-publishing it verbatim would double-free
+    /// the item, so the bytes are fetched and re-allocated instead.
     fn exec_touch(&mut self, key: &WireKey, ttl: Option<Duration>, noreply: bool) {
-        let found = match self.service.get(key.id) {
-            Some(value) => {
-                let opts = match ttl {
-                    Some(t) => EntryOpts::ttl(t),
-                    None => EntryOpts::IMMORTAL,
-                };
-                self.service.put_with(key.id, value, opts);
-                true
+        let opts = match ttl {
+            Some(t) => EntryOpts::ttl(t),
+            None => EntryOpts::IMMORTAL,
+        };
+        let found = if self.bytes_mode {
+            match self.service.get_bytes(key.id) {
+                Some(value) => {
+                    self.service.put_bytes_with(key.id, value, opts);
+                    true
+                }
+                None => false,
             }
-            None => false,
+        } else {
+            match self.service.get(key.id) {
+                Some(value) => {
+                    self.service.put_with(key.id, value, opts);
+                    true
+                }
+                None => false,
+            }
         };
         match self.proto {
             Proto::Memcached => {
@@ -612,6 +775,17 @@ mod tests {
 
     fn service() -> CacheService {
         let cache = Arc::new(KwWfsc::new(1024, 8, Policy::Lru));
+        CacheService::start(cache, ServiceConfig { workers: 2, ..ServiceConfig::default() })
+    }
+
+    fn byte_service() -> CacheService {
+        let cache: Arc<dyn crate::Cache> = Arc::from(crate::kway::build_with_values(
+            crate::kway::Variant::Wfsc,
+            1024,
+            8,
+            Policy::Lru,
+            1 << 22,
+        ));
         CacheService::start(cache, ServiceConfig { workers: 2, ..ServiceConfig::default() })
     }
 
@@ -871,6 +1045,84 @@ mod tests {
         faults.disarm();
         let (out, _) = run(&mut s, &svc, b"get 1\r\n");
         assert_eq!(out, b"VALUE 1 0 2\r\n10\r\nEND\r\n", "disarm restores service");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn memcached_byte_values_roundtrip() {
+        let svc = byte_service();
+        let mut s = Session::new();
+        let payload = b"bin\r\n\0\xff!";
+        let mut wire = format!("set 7 0 0 {}\r\n", payload.len()).into_bytes();
+        wire.extend_from_slice(payload);
+        wire.extend_from_slice(b"\r\nget 7\r\n");
+        let (out, oc) = run(&mut s, &svc, &wire);
+        assert_eq!(oc, DrainOutcome::Continue);
+        let mut want = b"STORED\r\nVALUE 7 0 8\r\n".to_vec();
+        want.extend_from_slice(payload);
+        want.extend_from_slice(b"\r\nEND\r\n");
+        assert_eq!(out, want, "binary payload must round-trip verbatim");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resp_byte_values_roundtrip() {
+        let svc = byte_service();
+        let mut s = Session::new();
+        let (out, _) = run(
+            &mut s,
+            &svc,
+            b"*3\r\n$3\r\nSET\r\n$1\r\n1\r\n$5\r\na\r\n\0b\r\n*2\r\n$3\r\nGET\r\n$1\r\n1\r\n",
+        );
+        assert_eq!(out, b"+OK\r\n$5\r\na\r\n\0b\r\n");
+        // MSET/MGET fuse through the byte batch path too.
+        let (out, _) = run(
+            &mut s,
+            &svc,
+            b"*5\r\n$4\r\nMSET\r\n$1\r\n2\r\n$2\r\nxy\r\n$1\r\n3\r\n$1\r\n\0\r\n\
+              *3\r\n$4\r\nMGET\r\n$1\r\n2\r\n$1\r\n3\r\n",
+        );
+        assert_eq!(out, b"+OK\r\n*2\r\n$2\r\nxy\r\n$1\r\n\0\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn byte_mode_add_delete_touch() {
+        let svc = byte_service();
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"add 3 0 0 3\r\nnew\r\nadd 3 0 0 3\r\nnah\r\nget 3\r\n");
+        assert_eq!(out, b"STORED\r\nNOT_STORED\r\nVALUE 3 0 3\r\nnew\r\nEND\r\n");
+        let (out, _) = run(&mut s, &svc, b"touch 3 60\r\nget 3\r\n");
+        assert_eq!(out, b"TOUCHED\r\nVALUE 3 0 3\r\nnew\r\nEND\r\n");
+        let (out, _) = run(&mut s, &svc, b"delete 3\r\nget 3\r\n");
+        assert_eq!(out, b"DELETED\r\nEND\r\n");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn word_cache_refuses_non_decimal_at_execution() {
+        let svc = service();
+        let mut s = Session::new();
+        // The decoder accepts the binary-safe block; the executor
+        // refuses it for a word cache and the connection survives.
+        let (out, oc) = run(&mut s, &svc, b"set 1 0 0 3\r\nabc\r\nget 1\r\n");
+        assert_eq!(oc, DrainOutcome::Continue);
+        assert_eq!(
+            out,
+            b"CLIENT_ERROR bad data chunk (value must be a decimal u64)\r\nEND\r\n".to_vec()
+        );
+        // RESP flavour, including a half-bad MSET that stores nothing.
+        let mut s = Session::new();
+        let wire = b"*3\r\n$3\r\nSET\r\n$1\r\n1\r\n$3\r\nabc\r\n\
+                     *5\r\n$4\r\nMSET\r\n$1\r\n2\r\n$1\r\n5\r\n$1\r\n3\r\n$1\r\nz\r\n\
+                     *3\r\n$4\r\nMGET\r\n$1\r\n2\r\n$1\r\n3\r\n";
+        let (out, _) = run(&mut s, &svc, wire);
+        assert_eq!(
+            out,
+            b"-ERR value is not a decimal u64\r\n-ERR value is not a decimal u64\r\n\
+              *2\r\n$-1\r\n$-1\r\n"
+                .to_vec()
+        );
         svc.shutdown();
     }
 

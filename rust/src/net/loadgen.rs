@@ -12,6 +12,14 @@
 //! `--ttl`, exercising the expiry path over the wire), and `--pin`
 //! pins generator threads to cores like the in-process harness.
 //!
+//! `--value-dist` picks the store payloads: `word` (decimal `key+1`,
+//! the pre-slab default) or a byte distribution (`fixed:N`,
+//! `uniform:MAX`, `zipf:MAX` — [`crate::lifetime::ValueDist`]), whose
+//! deterministic key-stamped blobs drive a byte-value server. Response
+//! reads are length-driven either way — the memcached `VALUE` header's
+//! byte count and the RESP `$len` prefix frame the data block, which is
+//! never scanned for CRLF — so binary payloads round-trip cleanly.
+//!
 //! Latency: the round-trip of each P-deep pipeline is measured and
 //! recorded as P amortized per-op samples in a per-thread
 //! [`Reservoir`] (10K samples, Snippet 3 methodology), so reported
@@ -22,11 +30,12 @@
 //! the smoke test runnable where the epoll server itself cannot run.
 
 use crate::fault::FaultPlan;
+use crate::lifetime::ValueDist;
 use crate::util::affinity;
 use crate::util::rng::{Rng, Zipf};
 use crate::util::stats::{percentile_u64, Reservoir};
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -84,6 +93,9 @@ pub struct LoadgenConfig {
     pub set_every: u64,
     /// TTL attached to stores (`exptime`/`EX`/`PX`); `None` = immortal.
     pub ttl: Option<Duration>,
+    /// Store payload distribution: decimal words (default) or
+    /// deterministic key-stamped byte blobs.
+    pub value_dist: ValueDist,
     /// Zipf skew for key sampling; `None` = uniform.
     pub zipf_alpha: Option<f64>,
     /// RNG seed (thread t forks seed + t).
@@ -115,6 +127,7 @@ impl LoadgenConfig {
             keyspace: 512,
             set_every: 4,
             ttl: None,
+            value_dist: ValueDist::Word,
             zipf_alpha: None,
             seed: 42,
             pin: false,
@@ -252,6 +265,7 @@ fn worker(
     let zipf = cfg.zipf_alpha.map(|a| Zipf::new(cfg.keyspace.max(1), a));
     let mut stats = ThreadStats::default();
     let mut reservoir = Reservoir::new(RESERVOIR_CAP, cfg.seed.wrapping_add(thread_id as u64));
+    let mut payload: Vec<u8> = Vec::new();
     let mut req_counter: u64 = 0;
     let deadline = Instant::now() + cfg.duration;
 
@@ -278,7 +292,7 @@ fn worker(
                 let is_set = cfg.set_every > 0 && req_counter % cfg.set_every == 0;
                 req_counter += 1;
                 if is_set {
-                    encode_set(cfg, &mut conn.wire, key, key + 1);
+                    encode_set(cfg, &mut conn.wire, &mut payload, key, key + 1);
                     conn.kinds.push(ReqKind::Set);
                 } else {
                     encode_get(cfg, &mut conn.wire, key);
@@ -379,38 +393,42 @@ fn encode_get(cfg: &LoadgenConfig, wire: &mut Vec<u8>, key: u64) {
     }
 }
 
-fn encode_set(cfg: &LoadgenConfig, wire: &mut Vec<u8>, key: u64, value: u64) {
+fn encode_set(cfg: &LoadgenConfig, wire: &mut Vec<u8>, payload: &mut Vec<u8>, key: u64, value: u64) {
+    // Payload: the word path sends decimal `key+1` (so hits are
+    // verifiable); byte distributions send deterministic key-stamped
+    // blobs ([`ValueDist::fill`]) that may contain CRLF/NUL — the
+    // framing below is length-prefixed either way.
+    if cfg.value_dist.is_bytes() {
+        cfg.value_dist.fill(key, payload);
+    } else {
+        payload.clear();
+        payload.extend_from_slice(value.to_string().as_bytes());
+    }
     let k = key.to_string();
-    let v = value.to_string();
     match cfg.proto {
         WireProto::Memcached => {
             // exptime is relative seconds; sub-second TTLs round up so a
             // TTL'd smoke run still exercises the expiry path.
             let exptime = cfg.ttl.map(|t| t.as_secs().max(1)).unwrap_or(0);
             wire.extend_from_slice(
-                format!("set {k} 0 {exptime} {}\r\n{v}\r\n", v.len()).as_bytes(),
+                format!("set {k} 0 {exptime} {}\r\n", payload.len()).as_bytes(),
             );
+            wire.extend_from_slice(payload);
+            wire.extend_from_slice(b"\r\n");
         }
-        WireProto::Resp => match cfg.ttl {
-            None => {
-                wire.extend_from_slice(
-                    format!("*3\r\n$3\r\nSET\r\n${}\r\n{k}\r\n${}\r\n{v}\r\n", k.len(), v.len())
-                        .as_bytes(),
-                );
-            }
-            Some(t) => {
-                let ms = t.as_millis().max(1).to_string();
-                wire.extend_from_slice(
-                    format!(
-                        "*5\r\n$3\r\nSET\r\n${}\r\n{k}\r\n${}\r\n{v}\r\n$2\r\nPX\r\n${}\r\n{ms}\r\n",
-                        k.len(),
-                        v.len(),
-                        ms.len()
-                    )
+        WireProto::Resp => {
+            let argc = if cfg.ttl.is_some() { 5 } else { 3 };
+            wire.extend_from_slice(
+                format!("*{argc}\r\n$3\r\nSET\r\n${}\r\n{k}\r\n${}\r\n", k.len(), payload.len())
                     .as_bytes(),
-                );
+            );
+            wire.extend_from_slice(payload);
+            wire.extend_from_slice(b"\r\n");
+            if let Some(t) = cfg.ttl {
+                let ms = t.as_millis().max(1).to_string();
+                wire.extend_from_slice(format!("$2\r\nPX\r\n${}\r\n{ms}\r\n", ms.len()).as_bytes());
             }
-        },
+        }
     }
 }
 
@@ -421,6 +439,17 @@ fn read_line(conn: &mut ClientConn) -> Result<String> {
         bail!("server closed the connection mid-response");
     }
     Ok(line.trim_end().to_string())
+}
+
+/// Consume a length-framed data block plus its trailing CRLF. Binary-
+/// safe by construction: `len` rules, the block is never line-scanned.
+fn read_data_block(conn: &mut ClientConn, len: usize) -> Result<()> {
+    let mut buf = vec![0u8; len + 2];
+    conn.reader.read_exact(&mut buf).context("reading data block")?;
+    if &buf[len..] != b"\r\n" {
+        bail!("data block not terminated by CRLF");
+    }
+    Ok(())
 }
 
 fn read_get_response(
@@ -434,9 +463,16 @@ fn read_get_response(
             let line = read_line(conn)?;
             if line == "END" {
                 return Ok(());
-            } else if line.starts_with("VALUE ") {
+            } else if let Some(rest) = line.strip_prefix("VALUE ") {
                 stats.hits += 1;
-                read_line(conn)?; // the data line
+                // VALUE <key> <flags> <len> [<cas>]: the byte count
+                // frames the data block.
+                let len: usize = rest
+                    .split_ascii_whitespace()
+                    .nth(2)
+                    .and_then(|t| t.parse().ok())
+                    .context("unparseable VALUE header length")?;
+                read_data_block(conn, len)?;
             } else {
                 // ERROR / CLIENT_ERROR / SERVER_ERROR: no END follows.
                 stats.errors += 1;
@@ -447,9 +483,11 @@ fn read_get_response(
             let line = read_line(conn)?;
             if line == "$-1" {
                 Ok(())
-            } else if line.starts_with('$') {
+            } else if let Some(lenstr) = line.strip_prefix('$') {
                 stats.hits += 1;
-                read_line(conn)?; // the bulk payload
+                let len: usize =
+                    lenstr.parse().context("unparseable RESP bulk length")?;
+                read_data_block(conn, len)?;
                 Ok(())
             } else {
                 stats.errors += 1;

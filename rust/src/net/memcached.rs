@@ -15,12 +15,19 @@
 //! connection survives with `CLIENT_ERROR`); an unparseable byte count
 //! loses framing and is fatal.
 //!
-//! Deviations from memcached, chosen for a fixed-width `u64` cache and
-//! documented here and in DESIGN.md: `exptime` is always relative
-//! seconds (no unix-timestamp reinterpretation past 30 days); flags are
-//! accepted but not stored (echoed as `0`); the `gets` cas token is the
-//! value itself (values are immutable words, so value-equality is
-//! exactly cas-equality).
+//! Data blocks are **binary-safe**: the byte count in the storage
+//! header frames the block, the decoder never scans it for CRLF, and
+//! the raw bytes ride in [`Command::Write`] untouched — whether they
+//! are storable is the executor's business (a byte-value cache takes
+//! anything up to [`MAX_VALUE_LEN`]; a word cache requires decimal).
+//!
+//! Deviations from memcached, documented here and in DESIGN.md:
+//! `exptime` is always relative seconds (no unix-timestamp
+//! reinterpretation past 30 days); flags are accepted but not stored
+//! (echoed as `0`); the `gets` cas token is the value itself on a word
+//! cache and `xxh64(bytes)` on a byte-value cache (values are
+//! immutable once stored, so value-equality is exactly cas-equality
+//! either way).
 
 use super::{
     exptime_to_ttl, parse_value, Command, FatalProtocolError, WireKey, MAX_KEY_LEN, MAX_LINE_LEN,
@@ -168,17 +175,12 @@ fn decode_storage(
     let cmd = if key.len() > MAX_KEY_LEN {
         Command::Bad { line: "CLIENT_ERROR key too long".into() }
     } else if let Some(exp) = parse_i64(exptime) {
-        match parse_value(data) {
-            Some(value) => Command::Write {
-                key: WireKey::from_bytes(key),
-                value,
-                ttl: exptime_to_ttl(exp),
-                add_only,
-                noreply,
-            },
-            None => Command::Bad {
-                line: "CLIENT_ERROR bad data chunk (value must be a decimal u64)".into(),
-            },
+        Command::Write {
+            key: WireKey::from_bytes(key),
+            value: data.to_vec(),
+            ttl: exptime_to_ttl(exp),
+            add_only,
+            noreply,
         }
     } else {
         Command::Bad { line: "CLIENT_ERROR invalid exptime argument".into() }
@@ -204,6 +206,25 @@ pub fn encode_value(out: &mut Vec<u8>, key_text: &[u8], value: u64, cas: bool) {
     }
     out.extend_from_slice(b"\r\n");
     out.extend_from_slice(body.as_bytes());
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append a `VALUE` response block for one byte-value hit. The data
+/// block is length-framed and written verbatim — CRLF, NUL, anything
+/// goes. `cas` echoes `xxh64(value)` as the cas token (values are
+/// immutable once stored, so byte-equality is exactly cas-equality).
+pub fn encode_value_bytes(out: &mut Vec<u8>, key_text: &[u8], value: &[u8], cas: bool) {
+    out.extend_from_slice(b"VALUE ");
+    out.extend_from_slice(key_text);
+    out.extend_from_slice(b" 0 ");
+    out.extend_from_slice(value.len().to_string().as_bytes());
+    if cas {
+        out.push(b' ');
+        let token = crate::util::hash::xxh64(value, 0xCA5);
+        out.extend_from_slice(token.to_string().as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(value);
     out.extend_from_slice(b"\r\n");
 }
 
@@ -263,7 +284,7 @@ mod tests {
             cmds[0],
             Command::Write {
                 key: WireKey::from_bytes(b"5"),
-                value: 42,
+                value: b"42".to_vec(),
                 ttl: Some(Duration::from_secs(30)),
                 add_only: false,
                 noreply: false,
@@ -273,7 +294,7 @@ mod tests {
             cmds[1],
             Command::Write {
                 key: WireKey::from_bytes(b"6"),
-                value: 9,
+                value: b"9".to_vec(),
                 ttl: None,
                 add_only: false,
                 noreply: true,
@@ -304,7 +325,7 @@ mod tests {
         }
         assert!(buf.is_empty());
         assert_eq!(cmds.len(), 3);
-        assert!(matches!(&cmds[0], Command::Write { value: 123, .. }));
+        assert!(matches!(&cmds[0], Command::Write { value, .. } if value == b"123"));
         assert!(matches!(&cmds[1], Command::Read { .. }));
         assert!(matches!(&cmds[2], Command::Delete { .. }));
     }
@@ -319,19 +340,22 @@ mod tests {
         assert_eq!(dec.decode(b"set 1 0 0 5\r\n12").unwrap(), None);
         assert_eq!(dec.decode(b"set 1 0 0 5\r\n12345").unwrap(), None);
         let (cmd, n) = dec.decode(b"set 1 0 0 5\r\n12345\r\n").unwrap().unwrap();
-        assert!(matches!(cmd, Command::Write { value: 12345, .. }));
+        assert!(matches!(cmd, Command::Write { value, .. } if value == b"12345"));
         assert_eq!(n, 20);
     }
 
     #[test]
-    fn non_numeric_value_is_a_client_error_not_fatal() {
+    fn data_blocks_are_binary_safe() {
+        // CRLF, NUL and high bytes inside the block must not confuse
+        // framing: the byte count rules, the block is never CRLF-scanned.
         let mut dec = MemcachedDecoder::new();
-        let cmds = decode_all(&mut dec, b"set 1 0 0 3\r\nabc\r\nget 1\r\n");
-        assert!(
-            matches!(&cmds[0], Command::Bad { line } if line.starts_with("CLIENT_ERROR")),
-            "{cmds:?}"
-        );
-        // Framing survived: the following get still parses.
+        let payload = b"a\r\nb\0c\xffd";
+        let mut wire = format!("set 1 0 0 {}\r\n", payload.len()).into_bytes();
+        wire.extend_from_slice(payload);
+        wire.extend_from_slice(b"\r\nget 1\r\n");
+        let cmds = decode_all(&mut dec, &wire);
+        assert_eq!(cmds.len(), 2);
+        assert!(matches!(&cmds[0], Command::Write { value, .. } if value == payload));
         assert!(matches!(&cmds[1], Command::Read { .. }));
     }
 
@@ -441,5 +465,23 @@ mod tests {
         let mut out = Vec::new();
         encode_line(&mut out, "STORED");
         assert_eq!(out, b"STORED\r\n");
+    }
+
+    #[test]
+    fn byte_value_encoder_is_length_framed() {
+        let mut out = Vec::new();
+        encode_value_bytes(&mut out, b"k", b"x\r\ny\0", false);
+        assert_eq!(out, b"VALUE k 0 5\r\nx\r\ny\0\r\n");
+
+        // cas token is a function of the bytes alone.
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        encode_value_bytes(&mut a, b"k1", b"same", true);
+        encode_value_bytes(&mut b, b"k2", b"same", true);
+        let tok = |buf: &[u8]| {
+            let line = buf.split(|&c| c == b'\n').next().unwrap();
+            line.rsplit(|&c| c == b' ').next().unwrap().to_vec()
+        };
+        assert_eq!(tok(&a), tok(&b));
     }
 }

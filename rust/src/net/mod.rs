@@ -36,10 +36,14 @@
 //! Wire keys and values map onto the crate's `u64`-keyed caches as
 //! follows (DESIGN.md §Network front end): a key that is plain ASCII
 //! decimal (and < 2^63) is used numerically, any other key is hashed
-//! (xxh64) with the top bit forced so the two spaces cannot collide;
-//! values must be ASCII-decimal `u64` — anything else is a client
-//! error, because the cache stores fixed-width words (the variable-size
-//! value store is future work, see ROADMAP.md).
+//! (xxh64) with the top bit forced so the two spaces cannot collide.
+//! Values are **binary-safe bytes**: over a byte-value cache
+//! (`--value-bytes`, DESIGN.md §Value store) any payload up to
+//! [`MAX_VALUE_LEN`] round-trips verbatim — memcached data blocks are
+//! length-framed (never CRLF-scanned) and RESP bulk strings are length-
+//! prefixed by construction. Over a word-only cache the pre-slab
+//! contract still holds: values must be ASCII-decimal `u64`, anything
+//! else is a client error, because the cache stores fixed-width words.
 //!
 //! [`CacheService::get_batch`]: crate::coordinator::CacheService::get_batch
 //! [`CacheService::put_batch_with`]: crate::coordinator::CacheService::put_batch_with
@@ -66,10 +70,10 @@ pub const MAX_KEY_LEN: usize = 250;
 /// the stream desynchronized and drops the connection.
 pub const MAX_LINE_LEN: usize = 8 * 1024;
 
-/// Largest accepted `set` data block / RESP bulk string. Values are
-/// ASCII-decimal `u64` (≤ 20 digits), so this is generous; it exists to
-/// bound memory for malformed or hostile frames, not to fit real values.
-pub const MAX_VALUE_LEN: usize = 1024;
+/// Largest accepted `set` data block / RESP bulk string: 1 MiB, the
+/// slab store's largest item class (memcached's classic default cap).
+/// Bounds per-frame memory for malformed or hostile frames too.
+pub const MAX_VALUE_LEN: usize = 1 << 20;
 
 /// A key as it appeared on the wire, plus its `u64` cache identity.
 ///
@@ -135,8 +139,10 @@ pub enum Command {
     Write {
         /// The key to store under.
         key: WireKey,
-        /// The (decimal `u64`) value.
-        value: u64,
+        /// The raw value payload (binary-safe). A byte-value cache
+        /// stores it verbatim; a word-only cache requires ASCII-decimal
+        /// `u64` (checked at execution, not decode).
+        value: Vec<u8>,
         /// Entry TTL; `None` defers to the service default.
         ttl: Option<Duration>,
         /// memcached `add`: store only if the key is absent (read-
@@ -148,8 +154,8 @@ pub enum Command {
     /// RESP `MSET`: unconditional stores of several pairs (one fused
     /// `put_batch_with`).
     WriteMany {
-        /// `(key, value)` pairs in request order.
-        items: Vec<(WireKey, u64)>,
+        /// `(key, raw value)` pairs in request order.
+        items: Vec<(WireKey, Vec<u8>)>,
     },
     /// memcached `delete` (one key) / RESP `DEL` (many): tombstone
     /// present keys with a born-expired entry (DESIGN.md §Network

@@ -13,6 +13,12 @@
 //! consumes nothing and is retried when more bytes arrive; structurally
 //! corrupt framing (non-`*` start, bad length digits, missing CRLF,
 //! oversized counts) is fatal because the stream cannot be re-framed.
+//!
+//! Values are **binary-safe** end to end: bulk strings are length-
+//! prefixed by construction, so `SET`/`MSET` payloads ride through as
+//! raw bytes (up to [`MAX_VALUE_LEN`]) and `GET`/`MGET` replies are
+//! emitted as raw bulks — whether a payload is storable is decided at
+//! execution (word caches still require ASCII-decimal `u64`).
 
 use super::{parse_value, Command, FatalProtocolError, WireKey, MAX_KEY_LEN, MAX_VALUE_LEN};
 
@@ -162,10 +168,7 @@ fn interpret(args: &[Vec<u8>]) -> Command {
                     Ok(k) => k,
                     Err(e) => return e,
                 };
-                let Some(value) = parse_value(&pair[1]) else {
-                    return err("value is not a decimal u64");
-                };
-                items.push((key, value));
+                items.push((key, pair[1].clone()));
             }
             Command::WriteMany { items }
         }
@@ -214,9 +217,6 @@ fn interpret_set(args: &[Vec<u8>]) -> Command {
         Ok(k) => k,
         Err(e) => return e,
     };
-    let Some(value) = parse_value(value_raw) else {
-        return err("value is not a decimal u64");
-    };
     let ttl = match ttl_args {
         [] => None,
         [unit, amount] => {
@@ -231,7 +231,7 @@ fn interpret_set(args: &[Vec<u8>]) -> Command {
         }
         _ => return err("syntax error"),
     };
-    Command::Write { key, value, ttl, add_only: false, noreply: false }
+    Command::Write { key, value: value_raw.clone(), ttl, add_only: false, noreply: false }
 }
 
 fn wire_key(raw: &[u8]) -> Result<WireKey, Command> {
@@ -273,6 +273,22 @@ pub fn encode_bulk(out: &mut Vec<u8>, value: Option<u64>) {
             out.extend_from_slice(body.len().to_string().as_bytes());
             out.extend_from_slice(b"\r\n");
             out.extend_from_slice(body.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+    }
+}
+
+/// Append a bulk-string reply carrying raw bytes (a byte-value `GET`
+/// hit), or the null bulk `$-1` for a miss. Binary-safe: the length
+/// prefix frames the payload, CRLF/NUL inside it are fine.
+pub fn encode_bulk_bytes(out: &mut Vec<u8>, value: Option<&[u8]>) {
+    match value {
+        None => out.extend_from_slice(b"$-1\r\n"),
+        Some(v) => {
+            out.push(b'$');
+            out.extend_from_slice(v.len().to_string().as_bytes());
+            out.extend_from_slice(b"\r\n");
+            out.extend_from_slice(v);
             out.extend_from_slice(b"\r\n");
         }
     }
@@ -335,7 +351,7 @@ mod tests {
             one(&frame(&[b"SET", b"42", b"7"])),
             Command::Write {
                 key: WireKey::from_bytes(b"42"),
-                value: 7,
+                value: b"7".to_vec(),
                 ttl: None,
                 add_only: false,
                 noreply: false,
@@ -349,7 +365,7 @@ mod tests {
             one(&frame(&[b"SET", b"1", b"2", b"EX", b"30"])),
             Command::Write {
                 key: WireKey::from_bytes(b"1"),
-                value: 2,
+                value: b"2".to_vec(),
                 ttl: Some(Duration::from_secs(30)),
                 add_only: false,
                 noreply: false,
@@ -359,7 +375,7 @@ mod tests {
             one(&frame(&[b"SET", b"1", b"2", b"px", b"1500"])),
             Command::Write {
                 key: WireKey::from_bytes(b"1"),
-                value: 2,
+                value: b"2".to_vec(),
                 ttl: Some(Duration::from_millis(1500)),
                 add_only: false,
                 noreply: false,
@@ -385,8 +401,8 @@ mod tests {
             one(&frame(&[b"MSET", b"1", b"10", b"2", b"20"])),
             Command::WriteMany {
                 items: vec![
-                    (WireKey::from_bytes(b"1"), 10),
-                    (WireKey::from_bytes(b"2"), 20),
+                    (WireKey::from_bytes(b"1"), b"10".to_vec()),
+                    (WireKey::from_bytes(b"2"), b"20".to_vec()),
                 ],
             }
         );
@@ -415,7 +431,6 @@ mod tests {
             frame(&[b"SET", b"1"]),
             frame(&[b"MSET", b"1", b"10", b"2"]),
             frame(&[b"EXPIRE", b"1"]),
-            frame(&[b"SET", b"1", b"not-a-number"]),
             frame(&[b"FLUSHALL"]),
         ] {
             assert!(
@@ -436,7 +451,25 @@ mod tests {
         }
         let (cmd, n) = dec.decode(&full).unwrap().unwrap();
         assert_eq!(n, full.len());
-        assert!(matches!(cmd, Command::Write { value: 2, .. }));
+        assert!(matches!(cmd, Command::Write { value, .. } if value == b"2"));
+    }
+
+    #[test]
+    fn bulk_values_are_binary_safe() {
+        // CRLF/NUL/high bytes inside a bulk payload do not disturb
+        // framing: the $len prefix rules.
+        let payload = b"a\r\nb\0c\xffd";
+        let cmd = one(&frame(&[b"SET", b"1", payload]));
+        assert!(matches!(&cmd, Command::Write { value, .. } if value == payload));
+
+        let cmd = one(&frame(&[b"MSET", b"1", payload, b"2", b"\r\n\r\n"]));
+        match cmd {
+            Command::WriteMany { items } => {
+                assert_eq!(items[0].1, payload.to_vec());
+                assert_eq!(items[1].1, b"\r\n\r\n".to_vec());
+            }
+            c => panic!("expected WriteMany, got {c:?}"),
+        }
     }
 
     #[test]
@@ -487,6 +520,11 @@ mod tests {
         let mut out = Vec::new();
         encode_bulk_str(&mut out, "gets:1\r\n");
         assert_eq!(out, b"$8\r\ngets:1\r\n\r\n");
+
+        let mut out = Vec::new();
+        encode_bulk_bytes(&mut out, Some(b"x\r\n\0y"));
+        encode_bulk_bytes(&mut out, None);
+        assert_eq!(out, b"$5\r\nx\r\n\0y\r\n$-1\r\n");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! summary. For batched workloads the sample is the latency of one whole
 //! batch — the latency a batched caller actually observes.
 
-use crate::lifetime::{EntryOpts, WeightDist};
+use crate::lifetime::{EntryOpts, ValueDist, WeightDist};
 use crate::tinylfu::AdmissionMode;
 use crate::trace::Trace;
 use crate::util::rng::Rng;
@@ -38,23 +38,31 @@ use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 /// How every fill (the put on a miss, and the resident-set install) is
-/// performed: which TTL the entry carries and which per-key weight
-/// distribution sizes it. The default (`ttl: None`, unit weights) routes
-/// through the plain [`Cache::put`] path, so TTL-free measurements are
-/// bit-identical to the pre-lifetime harness. Built from the CLI's
-/// `--ttl` / `--weight-dist` options.
+/// performed: which TTL the entry carries, which per-key weight
+/// distribution sizes it, and whether the value is a word or a slab
+/// byte blob. The default (`ttl: None`, unit weights, word values)
+/// routes through the plain [`Cache::put`] path, so TTL-free
+/// measurements are bit-identical to the pre-lifetime harness. Built
+/// from the CLI's `--ttl` / `--weight-dist` / `--value-dist` options.
 #[derive(Debug, Clone, Default)]
 pub struct FillSpec {
     /// TTL stamped on every filled entry; `None` = immortal.
     pub ttl: Option<Duration>,
     /// Deterministic per-key weight distribution.
     pub weight_dist: WeightDist,
+    /// Deterministic per-key value payloads: [`ValueDist::Word`] keeps
+    /// the classic u64 fills; byte distributions route every fill
+    /// through [`Cache::put_bytes_with`] (entry weight then becomes the
+    /// slab bytes actually held, overriding `weight_dist`).
+    pub value_dist: ValueDist,
 }
 
 impl FillSpec {
     /// True when fills are indistinguishable from plain puts.
     pub fn is_plain(&self) -> bool {
-        self.ttl.is_none() && self.weight_dist == WeightDist::Unit
+        self.ttl.is_none()
+            && self.weight_dist == WeightDist::Unit
+            && self.value_dist == ValueDist::Word
     }
 
     /// The [`EntryOpts`] a fill of `key` carries.
@@ -62,10 +70,18 @@ impl FillSpec {
         EntryOpts { ttl: self.ttl, weight: self.weight_dist.weight_of(key) }
     }
 
-    /// Perform one fill through the cheapest matching path.
+    /// Perform one fill through the cheapest matching path. Byte
+    /// distributions reuse a thread-local scratch buffer, so the hot
+    /// loop allocates only when a key's payload outgrows it.
     #[inline]
     pub fn fill(&self, cache: &dyn Cache, key: u64, value: u64) {
-        if self.is_plain() {
+        if self.value_dist.is_bytes() {
+            BYTE_SCRATCH.with(|scratch| {
+                let buf = &mut *scratch.borrow_mut();
+                self.value_dist.fill(key, buf);
+                cache.put_bytes_with(key, buf, self.opts_for(key));
+            });
+        } else if self.is_plain() {
             cache.put(key, value);
         } else {
             cache.put_with(key, value, self.opts_for(key));
@@ -74,12 +90,23 @@ impl FillSpec {
 
     /// Human-readable summary for table headers.
     pub fn label(&self) -> String {
-        match self.ttl {
-            None if self.weight_dist == WeightDist::Unit => "immortal".into(),
+        let base = match self.ttl {
+            None if self.weight_dist == WeightDist::Unit => "immortal".to_string(),
             None => format!("immortal/{}", self.weight_dist.name()),
             Some(ttl) => format!("ttl={ttl:?}/{}", self.weight_dist.name()),
+        };
+        if self.value_dist.is_bytes() {
+            format!("{base}/values={}", self.value_dist.name())
+        } else {
+            base
         }
     }
+}
+
+std::thread_local! {
+    /// Per-thread payload scratch for byte-distribution fills.
+    static BYTE_SCRATCH: std::cell::RefCell<Vec<u8>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// What the workers execute.
@@ -263,6 +290,15 @@ pub fn measure(
         if rep == 0 && !cfg.fill.is_plain() && !cache.supports_lifetime() {
             eprintln!(
                 "warning: {} has no lifetime support; --ttl/--weight-dist fills are immortal",
+                cache.name()
+            );
+        }
+        // Byte-distribution fills against a word-only cache are rejected
+        // puts (`put_bytes_with` returns false): every access would miss.
+        if rep == 0 && cfg.fill.value_dist.is_bytes() && !cache.supports_values() {
+            eprintln!(
+                "warning: {} has no byte-value store; --value-dist fills are dropped \
+                 (build the cache with a value budget)",
                 cache.name()
             );
         }
@@ -1086,6 +1122,26 @@ mod tests {
         let r = measure(&kw_factory(4096), &Workload::Expiring { working_set: 512 }, &cfg);
         assert!(r.mops.mean() > 0.0);
         assert!(r.hit_ratio > 0.0, "weighted resident set should still hit");
+    }
+
+    #[test]
+    fn byte_value_fills_run_end_to_end() {
+        use crate::lifetime::ValueDist;
+        // A byte-dist fill against a value-store cache: the resident set
+        // is installed as slab blobs, the word-path `get` probe still
+        // sees the published handles, so the hit loop behaves normally.
+        let factory = || -> Arc<dyn Cache> {
+            Arc::from(crate::kway::build_with_values(Variant::Wfsc, 4096, 8, Policy::Lru, 1 << 22))
+        };
+        let cfg = RunConfig {
+            fill: FillSpec { value_dist: ValueDist::Zipf { max: 512 }, ..Default::default() },
+            ..quick_cfg(2)
+        };
+        assert_eq!(cfg.fill.label(), "immortal/values=zipf:512");
+        assert!(!cfg.fill.is_plain());
+        let r = measure(&factory, &Workload::Expiring { working_set: 512 }, &cfg);
+        assert!(r.mops.mean() > 0.0);
+        assert!(r.hit_ratio > 0.5, "byte resident set should hit: {}", r.hit_ratio);
     }
 
     #[test]

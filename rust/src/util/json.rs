@@ -541,6 +541,62 @@ pub fn check_chaos_schema(doc: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Schema tag of `BENCH_slab.json`, the byte-value slab artifact
+/// written by `cargo bench --bench slab -- --json` (DESIGN.md §Value
+/// store). One row per (implementation, value distribution, thread
+/// count): get-or-fill throughput with slab-backed byte payloads, plus
+/// the slab bytes the cache actually held at the end of the run — the
+/// weight-honesty figure that makes rows at different value sizes
+/// comparable. `value_budget` records the per-cache slab budget the
+/// sweep ran under.
+pub const SLAB_SCHEMA: &str = "kway-slab-v1";
+
+/// Validate a slab document against [`SLAB_SCHEMA`]; the bench runs it
+/// before writing, like [`check_bench_schema`], and the CI slab-smoke
+/// job re-validates the emitted file.
+pub fn check_slab_schema(doc: &Json) -> Result<()> {
+    let field = |key: &str| doc.get(key).ok_or_else(|| anyhow!("missing field {key:?}"));
+    let schema = field("schema")?.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+    if schema != SLAB_SCHEMA {
+        bail!("schema {schema:?} != {SLAB_SCHEMA:?}");
+    }
+    if field("provenance")?.as_str().is_none() {
+        bail!("field \"provenance\" must be a string");
+    }
+    for key in ["capacity", "value_budget", "duration_ms", "seed"] {
+        if field(key)?.as_i64().is_none() {
+            bail!("field {key:?} must be an integer");
+        }
+    }
+    if field("smoke")?.as_bool().is_none() {
+        bail!("field \"smoke\" must be a boolean");
+    }
+    let results = field("results")?.as_array().ok_or_else(|| anyhow!("results: not an array"))?;
+    if results.is_empty() {
+        bail!("results must not be empty");
+    }
+    for (i, row) in results.iter().enumerate() {
+        let rfield =
+            |key: &str| row.get(key).ok_or_else(|| anyhow!("results[{i}]: missing {key:?}"));
+        for key in ["impl", "value_dist"] {
+            if rfield(key)?.as_str().is_none() {
+                bail!("results[{i}]: {key:?} must be a string");
+            }
+        }
+        for key in ["threads", "ops", "p50_ns", "p99_ns", "value_bytes"] {
+            if rfield(key)?.as_i64().is_none() {
+                bail!("results[{i}]: {key:?} must be an integer");
+            }
+        }
+        for key in ["mops", "hit_ratio"] {
+            if rfield(key)?.as_f64().is_none() {
+                bail!("results[{i}]: {key:?} must be numeric");
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -816,6 +872,68 @@ mod tests {
             }
         }
         assert!(check_chaos_schema(&doc).is_err());
+    }
+
+    fn slab_doc(schema: &str) -> Json {
+        parse(&format!(
+            r#"{{"schema":"{schema}","smoke":true,"seed":42,
+                "capacity":4096,"value_budget":4194304,"duration_ms":100,
+                "provenance":"cargo bench --bench slab",
+                "results":[{{"impl":"KW-WFSC","value_dist":"zipf:4096",
+                  "threads":4,"ops":100000,"mops":2.1,"hit_ratio":0.88,
+                  "p50_ns":400,"p99_ns":5200,"value_bytes":1048576}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn slab_schema_v1_accepts_and_rejects() {
+        assert_eq!(SLAB_SCHEMA, "kway-slab-v1", "schema bumps must update this check");
+        check_slab_schema(&slab_doc("kway-slab-v1")).unwrap();
+        // Stale schema strings are rejected — the check is version-pinned.
+        assert!(check_slab_schema(&slab_doc("kway-slab-v0")).is_err());
+        // An empty sweep is not an artifact.
+        let mut doc = slab_doc("kway-slab-v1");
+        if let Json::Object(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "results" {
+                    *v = Json::Array(vec![]);
+                }
+            }
+        }
+        assert!(check_slab_schema(&doc).is_err());
+        // Every row figure is load-bearing — value_bytes especially, the
+        // weight-honesty column: dropping any one is rejected.
+        for key in [
+            "impl",
+            "value_dist",
+            "threads",
+            "ops",
+            "mops",
+            "hit_ratio",
+            "p50_ns",
+            "p99_ns",
+            "value_bytes",
+        ] {
+            let mut doc = slab_doc("kway-slab-v1");
+            if let Json::Object(fields) = &mut doc {
+                let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
+                if let Some(Json::Array(rows)) = results {
+                    if let Json::Object(row) = &mut rows[0] {
+                        row.retain(|(k, _)| k != key);
+                    }
+                }
+            }
+            assert!(check_slab_schema(&doc).is_err(), "dropping {key} must fail");
+        }
+        // Top-level provenance, budget and the smoke flag are required.
+        for key in ["provenance", "value_budget", "smoke", "capacity"] {
+            let mut doc = slab_doc("kway-slab-v1");
+            if let Json::Object(fields) = &mut doc {
+                fields.retain(|(k, _)| k != key);
+            }
+            assert!(check_slab_schema(&doc).is_err(), "dropping {key} must fail");
+        }
     }
 
     #[test]

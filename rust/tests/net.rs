@@ -1,8 +1,10 @@
 //! End-to-end tests of the TCP wire front end: a real [`Server`] on a
 //! loopback ephemeral port over a real [`CacheService`], driven with
 //! plain blocking sockets. Both protocols, the TTL path, pipelined
-//! multi-key reads (the batch-fusion path), protocol-error handling and
-//! the in-process loadgen smoke all run here; byte-level codec corner
+//! multi-key reads (the batch-fusion path), protocol-error handling,
+//! binary payload safety over a slab-backed byte cache (CRLF/NUL/1MiB
+//! blobs, length-framed, never CRLF-scanned) and the in-process
+//! loadgen smoke all run here; byte-level codec corner
 //! cases (split reads, frames straddling buffers, malformed commands)
 //! live in the `net::memcached` / `net::resp` unit tests.
 //!
@@ -84,6 +86,88 @@ mod loopback {
             out.extend_from_slice(format!("${}\r\n{p}\r\n", p.len()).as_bytes());
         }
         out
+    }
+
+    /// Encode one RESP command whose arguments are raw bytes — bulk
+    /// strings are length-prefixed, so payloads may contain anything.
+    fn resp_bin(parts: &[&[u8]]) -> Vec<u8> {
+        let mut out = format!("*{}\r\n", parts.len()).into_bytes();
+        for p in parts {
+            out.extend_from_slice(format!("${}\r\n", p.len()).as_bytes());
+            out.extend_from_slice(p);
+            out.extend_from_slice(b"\r\n");
+        }
+        out
+    }
+
+    /// A service over a byte-value (slab-backed) cache. The weight
+    /// budget is per-way `(value_bytes / capacity) / GRANULE` granules,
+    /// so a small capacity with a wide budget keeps a full
+    /// `MAX_VALUE_LEN` entry admissible in a single set.
+    fn start_byte_service() -> Arc<CacheService> {
+        use kway::kway::{build_with_values, Variant};
+        let cache: Arc<dyn kway::Cache> =
+            Arc::from(build_with_values(Variant::Wfsc, 256, 8, Policy::Lru, 1 << 26));
+        Arc::new(CacheService::start(
+            cache,
+            ServiceConfig {
+                workers: 2,
+                admission: AdmissionMode::None,
+                default_ttl: None,
+                ..Default::default()
+            },
+        ))
+    }
+
+    /// Deterministic byte blob: an LCG stream, so every byte value
+    /// (CR, LF, NUL, ...) shows up and the content is reproducible.
+    fn blob(seed: u64, len: usize) -> Vec<u8> {
+        let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+        let mut out = Vec::with_capacity(len + 8);
+        while out.len() < len {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// Read one memcached `VALUE <key> <flags> <len>` response,
+    /// length-driven: the data block is consumed by byte count, never
+    /// scanned for CRLF, then the trailing `END` is checked.
+    fn read_mc_value(reader: &mut BufReader<TcpStream>, key: &str) -> Vec<u8> {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim_end_matches(['\r', '\n']);
+        let mut parts = header.split(' ');
+        assert_eq!(parts.next(), Some("VALUE"), "bad header {header:?}");
+        assert_eq!(parts.next(), Some(key), "bad header {header:?}");
+        let _flags = parts.next().expect("flags field");
+        let len: usize = parts.next().expect("length field").parse().unwrap();
+        let mut data = vec![0u8; len + 2];
+        reader.read_exact(&mut data).unwrap();
+        assert_eq!(&data[len..], b"\r\n", "data block must end in CRLF");
+        data.truncate(len);
+        expect_lines(reader, &["END"]);
+        data
+    }
+
+    /// Read one RESP bulk-string reply, length-driven via the `$len`
+    /// prefix.
+    fn read_resp_bulk(reader: &mut BufReader<TcpStream>) -> Vec<u8> {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim_end_matches(['\r', '\n']);
+        let len: usize = header
+            .strip_prefix('$')
+            .unwrap_or_else(|| panic!("expected bulk string, got {header:?}"))
+            .parse()
+            .unwrap();
+        let mut data = vec![0u8; len + 2];
+        reader.read_exact(&mut data).unwrap();
+        assert_eq!(&data[len..], b"\r\n");
+        data.truncate(len);
+        data
     }
 
     #[test]
@@ -273,6 +357,109 @@ mod loopback {
         let mut rest = Vec::new();
         r.read_to_end(&mut rest).unwrap();
         assert!(rest.is_empty(), "connection must be closed after a fatal error");
+
+        server.stop();
+    }
+
+    #[test]
+    fn memcached_binary_payloads_are_length_framed() {
+        let server = start_server(start_byte_service());
+        let (mut s, mut r) = connect(&server);
+
+        // Payloads chosen to break any CRLF-scanning decoder: embedded
+        // line endings, NULs, and memcached's own framing vocabulary.
+        let hostile: [&[u8]; 4] = [
+            b"\r\n",
+            b"\0\0\0",
+            b"END\r\nVALUE 9 0 2\r\nhi\r\n",
+            b"a\0b\r\nc\rd\ne",
+        ];
+        for (i, payload) in hostile.iter().enumerate() {
+            let key = format!("bin{i}");
+            let mut cmd = format!("set {key} 0 0 {}\r\n", payload.len()).into_bytes();
+            cmd.extend_from_slice(payload);
+            cmd.extend_from_slice(b"\r\n");
+            s.write_all(&cmd).unwrap();
+            expect_lines(&mut r, &["STORED"]);
+            s.write_all(format!("get {key}\r\n").as_bytes()).unwrap();
+            assert_eq!(read_mc_value(&mut r, &key), *payload, "payload {i} must round-trip");
+        }
+        // The connection is still framed correctly after all of that.
+        s.write_all(b"version\r\n").unwrap();
+        let mut version = String::new();
+        r.read_line(&mut version).unwrap();
+        assert!(version.starts_with("VERSION"), "got {version:?}");
+
+        server.stop();
+    }
+
+    #[test]
+    fn resp_binary_payloads_round_trip() {
+        let server = start_server(start_byte_service());
+        let (mut s, mut r) = connect(&server);
+
+        let hostile: [&[u8]; 3] = [b"\r\n\r\n", b"\0binary\0", b"*2\r\n$3\r\nGET\r\n"];
+        for (i, payload) in hostile.iter().enumerate() {
+            let key = format!("rbin{i}");
+            s.write_all(&resp_bin(&[b"SET", key.as_bytes(), payload])).unwrap();
+            expect_lines(&mut r, &["+OK"]);
+            s.write_all(&resp_bin(&[b"GET", key.as_bytes()])).unwrap();
+            assert_eq!(read_resp_bulk(&mut r), *payload, "payload {i} must round-trip");
+        }
+        // Zero-length values are legal and distinct from a miss.
+        s.write_all(&resp_bin(&[b"SET", b"empty", b""])).unwrap();
+        expect_lines(&mut r, &["+OK"]);
+        s.write_all(&resp(&["GET", "empty"])).unwrap();
+        expect_lines(&mut r, &["$0", ""]);
+        s.write_all(&resp(&["GET", "nosuch"])).unwrap();
+        expect_lines(&mut r, &["$-1"]);
+
+        server.stop();
+    }
+
+    #[test]
+    fn megabyte_blob_round_trips_both_protocols() {
+        let server = start_server(start_byte_service());
+        let (mut mc, mut mc_r) = connect(&server);
+        let (mut rd, mut rd_r) = connect(&server);
+
+        let payload = blob(0xB10B, kway::net::MAX_VALUE_LEN);
+        assert!(payload.windows(2).any(|w| w == b"\r\n"), "blob must contain CRLF");
+        assert!(payload.contains(&0), "blob must contain NUL");
+
+        // Stored over memcached, read back over memcached *and* RESP:
+        // both protocols see the same slab bytes, length-framed.
+        let mut cmd = format!("set 77 0 0 {}\r\n", payload.len()).into_bytes();
+        cmd.extend_from_slice(&payload);
+        cmd.extend_from_slice(b"\r\n");
+        mc.write_all(&cmd).unwrap();
+        expect_lines(&mut mc_r, &["STORED"]);
+        mc.write_all(b"get 77\r\n").unwrap();
+        assert_eq!(read_mc_value(&mut mc_r, "77"), payload);
+        rd.write_all(&resp(&["GET", "77"])).unwrap();
+        assert_eq!(read_resp_bulk(&mut rd_r), payload);
+
+        // And the reverse direction: stored over RESP, read over both.
+        let payload2 = blob(0xB10C, kway::net::MAX_VALUE_LEN);
+        rd.write_all(&resp_bin(&[b"SET", b"78", &payload2])).unwrap();
+        expect_lines(&mut rd_r, &["+OK"]);
+        rd.write_all(&resp(&["GET", "78"])).unwrap();
+        assert_eq!(read_resp_bulk(&mut rd_r), payload2);
+        mc.write_all(b"get 78\r\n").unwrap();
+        assert_eq!(read_mc_value(&mut mc_r, "78"), payload2);
+
+        // One byte past the cap is refused before the block is ever
+        // buffered; an oversize count can't be re-framed, so the server
+        // answers once and hangs up.
+        let mut over = format!("set 79 0 0 {}\r\n", kway::net::MAX_VALUE_LEN + 1).into_bytes();
+        over.extend_from_slice(&payload[..16]);
+        mc.write_all(&over).unwrap();
+        let mut line = String::new();
+        mc_r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("CLIENT_ERROR"), "got {line:?}");
+        let mut rest = Vec::new();
+        mc_r.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "oversize count is fatal: connection must close");
 
         server.stop();
     }

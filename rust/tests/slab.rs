@@ -1,0 +1,309 @@
+//! The proof layer for byte-blob values on the slab store
+//! (DESIGN.md §Value store): a differential test against a
+//! `HashMap<u64, Vec<u8>>` reference model, a concurrent torture test
+//! that churns slab classes while an online shrink-resize runs, the
+//! weight-honesty regression (reported weight ⇔ slab bytes held), and
+//! the word-path twin drive (a byte-capable cache whose byte API is
+//! never used must behave bit-identically to a plain word cache).
+//!
+//! The invariants these tests pin:
+//!
+//! * a `get_bytes` hit returns exactly the bytes last stored for that
+//!   key — never torn, never another slot's recycled bytes;
+//! * deletes (the TTL-zero tombstone idiom) and expiries read as
+//!   misses, never stale values;
+//! * at quiesce every slab class balances `carved = live + free`, the
+//!   byte ledger equals Σ live × item_bytes, and carving never exceeds
+//!   the configured cap;
+//! * `Cache::weight() × 64 == Cache::value_bytes()` when every entry
+//!   is a byte entry — the per-set weight budget meters bytes the slab
+//!   actually holds.
+
+use kway::kway::slab::GRANULE;
+use kway::kway::{build_with_values, KwLs, KwWfa, KwWfsc, SlabStore, Variant};
+use kway::lifetime::{EntryOpts, ValueDist};
+use kway::policy::Policy;
+use kway::util::rng::Rng;
+use kway::Cache;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic payload for (key, version): differential puts change
+/// the value on every overwrite, so a stale read cannot masquerade as
+/// the current one.
+fn payload(key: u64, version: u64, len: usize) -> Vec<u8> {
+    let mut state = key ^ version.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ len as u64;
+    (0..len)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 56) as u8
+        })
+        .collect()
+}
+
+/// Lengths spanning the bottom of the class ladder: zero-length, both
+/// sides of the 64 B and 128 B class boundaries, mid-ladder sizes and a
+/// multi-KiB blob. All fit the differential cache's per-set budget.
+const DIFF_LENS: [usize; 12] = [0, 1, 63, 64, 65, 100, 128, 129, 500, 1000, 4000, 16384];
+
+/// 20k random get/put/delete ops against a reference `HashMap`: every
+/// hit must be byte-identical to the reference; misses are always legal
+/// ("it is a cache"). Runs per variant — all three publish protocols
+/// (wfa claim, wfsc two-pass, ls lock) free and recycle handles.
+fn differential(variant: Variant) {
+    let cache = build_with_values(variant, 1024, 8, Policy::Lru, 1 << 24);
+    assert!(cache.supports_values(), "{}", cache.name());
+    let mut reference: HashMap<u64, Vec<u8>> = HashMap::new();
+    let mut rng = Rng::new(0xD1FF ^ variant as u64);
+    let mut version = 0u64;
+    let mut hits = 0u64;
+    for _ in 0..20_000 {
+        let key = rng.below(512);
+        match rng.below(10) {
+            0..=5 => {
+                let len = DIFF_LENS[rng.below(DIFF_LENS.len() as u64) as usize];
+                version += 1;
+                let value = payload(key, version, len);
+                if cache.put_bytes(key, &value) {
+                    reference.insert(key, value);
+                }
+                // On refusal the old entry (if any) stays acceptable:
+                // the reference is left untouched.
+            }
+            6..=8 => {
+                if let Some(got) = cache.get_bytes(key) {
+                    hits += 1;
+                    match reference.get(&key) {
+                        Some(expect) => assert_eq!(
+                            &got, expect,
+                            "{}: key {key} returned foreign/stale/torn bytes",
+                            cache.name()
+                        ),
+                        None => panic!(
+                            "{}: key {key} hit after delete (len {})",
+                            cache.name(),
+                            got.len()
+                        ),
+                    }
+                }
+            }
+            _ => {
+                // Delete = the TTL-zero tombstone idiom; publishing the
+                // tombstone releases the displaced slab handle.
+                cache.put_with(key, 0, EntryOpts::ttl(Duration::ZERO));
+                reference.remove(&key);
+            }
+        }
+    }
+    assert!(hits > 1000, "{}: differential never hit ({hits})", cache.name());
+    assert!(cache.value_bytes() > 0, "{}: live blobs must meter bytes", cache.name());
+}
+
+#[test]
+fn differential_vs_hashmap_wfa() {
+    differential(Variant::Wfa);
+}
+
+#[test]
+fn differential_vs_hashmap_wfsc() {
+    differential(Variant::Wfsc);
+}
+
+#[test]
+fn differential_vs_hashmap_ls() {
+    differential(Variant::Ls);
+}
+
+#[test]
+fn zero_length_and_max_size_roundtrip() {
+    // A tiny key space over a generous budget: the per-way granule
+    // budget admits even the largest (1 MiB) class.
+    for variant in Variant::ALL {
+        let cache = build_with_values(variant, 64, 8, Policy::Lru, 1 << 26);
+        assert!(cache.put_bytes(1, b""), "{}: zero-length refused", cache.name());
+        assert_eq!(cache.get_bytes(1).as_deref(), Some(&b""[..]), "{}", cache.name());
+        let big = payload(2, 0, 1 << 20);
+        assert!(cache.put_bytes(2, &big), "{}: 1 MiB refused", cache.name());
+        assert_eq!(cache.get_bytes(2), Some(big), "{}", cache.name());
+        let over = payload(3, 0, (1 << 20) + 1);
+        assert!(!cache.put_bytes(3, &over), "{}: oversize must be refused", cache.name());
+    }
+}
+
+#[test]
+fn ttl_expiry_reads_as_miss_never_stale() {
+    for variant in Variant::ALL {
+        let cache = build_with_values(variant, 256, 8, Policy::Lru, 1 << 22);
+        let value = payload(7, 0, 300);
+        assert!(cache.put_bytes_with(7, &value, EntryOpts::ttl(Duration::from_millis(40))));
+        assert_eq!(cache.get_bytes(7), Some(value), "{}: live before expiry", cache.name());
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(cache.get_bytes(7), None, "{}: expired blob must miss", cache.name());
+    }
+}
+
+/// The word-path twin drive: the same word-only op sequence against a
+/// plain cache and a byte-capable cache must be bit-identical — and the
+/// byte cache's slab must stay completely unused.
+#[test]
+fn word_path_is_bit_identical_when_slab_unused() {
+    for variant in Variant::ALL {
+        let plain = kway::kway::build(variant, 1024, 8, Policy::Lru);
+        let byted = build_with_values(variant, 1024, 8, Policy::Lru, 1 << 22);
+        let mut rng = Rng::new(0x7 ^ variant as u64);
+        for _ in 0..30_000 {
+            let key = rng.below(2048);
+            if rng.below(3) == 0 {
+                let value = key.wrapping_mul(0x9E37);
+                plain.put(key, value);
+                byted.put(key, value);
+            } else {
+                assert_eq!(plain.get(key), byted.get(key), "{}: twin diverged", plain.name());
+            }
+        }
+        assert_eq!(plain.len(), byted.len(), "{}", plain.name());
+        assert_eq!(plain.weight(), byted.weight(), "{}", plain.name());
+        assert_eq!(byted.value_bytes(), 0, "{}: word drive must not touch the slab", plain.name());
+    }
+}
+
+/// Weight honesty: with only byte entries resident, the cache's
+/// reported weight ×64 is exactly the slab bytes held — internal
+/// fragmentation included, understating impossible.
+#[test]
+fn reported_weight_equals_slab_bytes_held() {
+    for variant in Variant::ALL {
+        let cache = build_with_values(variant, 4096, 8, Policy::Lru, 1 << 24);
+        for (i, &len) in DIFF_LENS.iter().enumerate() {
+            assert!(cache.put_bytes(i as u64, &payload(i as u64, 0, len)));
+        }
+        assert!(cache.value_bytes() > 0);
+        assert_eq!(
+            cache.weight() * GRANULE as u64,
+            cache.value_bytes(),
+            "{}: weight must meter slab bytes, not requested lengths",
+            cache.name()
+        );
+        // And the fragmentation is the *known* ladder fragmentation: a
+        // 65-byte value costs the 128-byte class.
+        let store = SlabStore::new(1 << 22);
+        assert_eq!(store.granules_for(65), Some(2));
+        assert_eq!(store.granules_for(0), Some(1));
+    }
+}
+
+/// The concurrent slab torture: churn threads overwrite, read-verify
+/// and tombstone keys whose payload sizes straddle class boundaries
+/// while the cache shrinks online (evictions + migration both free
+/// handles); then at quiesce the ledgers must balance exactly.
+fn torture(cache: Arc<dyn Cache>, store: Arc<SlabStore>) {
+    const KEYS: u64 = 4096;
+    // Uniform lengths 0..=2048 span the bottom ~15 slab classes.
+    let dist = ValueDist::Uniform { max: 2048 };
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let cache = Arc::clone(&cache);
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x70 ^ t);
+                let mut buf = Vec::new();
+                let mut expect = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    for _ in 0..128 {
+                        let key = rng.below(KEYS);
+                        match rng.below(10) {
+                            0..=5 => {
+                                // Key-stamped payload: every writer of
+                                // `key` stores identical bytes, so any
+                                // hit is verifiable below.
+                                dist.fill(key, &mut buf);
+                                cache.put_bytes(key, &buf);
+                            }
+                            6..=8 => {
+                                if let Some(got) = cache.get_bytes(key) {
+                                    dist.fill(key, &mut expect);
+                                    assert_eq!(
+                                        got, expect,
+                                        "key {key}: foreign/torn/recycled bytes"
+                                    );
+                                }
+                            }
+                            _ => {
+                                cache.put_with(key, 0, EntryOpts::ttl(Duration::ZERO));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // Shrink online while the churn runs: migration re-homes live
+        // handles and evicts the overflow, freeing their items.
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(cache.resize(cache.capacity() / 2), "shrink refused");
+        let deadline = std::time::Instant::now() + Duration::from_millis(400);
+        while cache.resize_pending() && std::time::Instant::now() < deadline {
+            cache.resize_step(32);
+        }
+        std::thread::sleep(Duration::from_millis(40));
+        stop.store(true, Ordering::Release);
+    });
+    // Drive any resize tail to completion now that churn has stopped.
+    while cache.resize_pending() {
+        if cache.resize_step(64) == 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    // Quiesce: every surviving blob still verifies against its key.
+    let mut expect = Vec::new();
+    let mut live_hits = 0u64;
+    for key in 0..KEYS {
+        if let Some(got) = cache.get_bytes(key) {
+            dist.fill(key, &mut expect);
+            assert_eq!(got, expect, "key {key} corrupt at quiesce");
+            live_hits += 1;
+        }
+    }
+    assert!(live_hits > 0, "torture ended with an empty cache");
+
+    // Ledger balance: nothing leaked, nothing double-freed.
+    let stats = store.stats();
+    let mut live_bytes = 0u64;
+    for c in &stats.classes {
+        assert_eq!(
+            c.carved,
+            c.live + c.free,
+            "class {}B: carved != live + free (leak or double free)",
+            c.item_bytes
+        );
+        live_bytes += c.live * c.item_bytes as u64;
+    }
+    assert_eq!(live_bytes, stats.used_bytes, "byte ledger out of balance");
+    assert_eq!(stats.used_bytes, cache.value_bytes(), "cache ledger != store ledger");
+    assert!(stats.used_bytes <= stats.carved_bytes, "live bytes exceed carved memory");
+    assert!(stats.carved_bytes <= stats.max_bytes, "carving broke the byte cap");
+}
+
+#[test]
+fn torture_shrink_resize_wfa() {
+    let c = KwWfa::with_value_store(2048, 8, Policy::Lru, 1 << 24);
+    let store = Arc::clone(c.value_store().expect("byte cache has a store"));
+    torture(Arc::new(c), store);
+}
+
+#[test]
+fn torture_shrink_resize_wfsc() {
+    let c = KwWfsc::with_value_store(2048, 8, Policy::Lru, 1 << 24);
+    let store = Arc::clone(c.value_store().expect("byte cache has a store"));
+    torture(Arc::new(c), store);
+}
+
+#[test]
+fn torture_shrink_resize_ls() {
+    let c = KwLs::with_value_store(2048, 8, Policy::Lru, 1 << 24);
+    let store = Arc::clone(c.value_store().expect("byte cache has a store"));
+    torture(Arc::new(c), store);
+}
