@@ -1,13 +1,21 @@
-//! Wire-serving benchmark: the connections × pipeline-depth × threads
-//! sweep behind `BENCH_serve.json` (schema `kway-serve-v1`).
+//! Wire-serving benchmark: the backend × connections × pipeline-depth
+//! × threads sweep behind `BENCH_serve.json` (schema `kway-serve-v2`).
 //!
 //! Starts the TCP front end in-process on a loopback ephemeral port over
-//! a [`CacheService`], then drives it with the crate's own pipelined
-//! load generator for every (proto, connections, pipeline) point. The
-//! headline comparison is the pipeline axis at equal connections: a
-//! P-deep pipeline amortizes syscalls per request *and* lets the
-//! per-connection accumulator hand P-wide scatter/gather batches to the
-//! cache workers, so pipeline=16 rows should clearly beat pipeline=1.
+//! a [`CacheService`] — once per event-loop backend (epoll readiness
+//! mode, io_uring completion mode) — then drives it with the crate's
+//! own pipelined load generator for every (proto, connections,
+//! pipeline) point. Two headline comparisons fall out of the sweep:
+//!
+//! * the pipeline axis at equal connections: a P-deep pipeline
+//!   amortizes syscalls per request *and* lets the per-connection
+//!   accumulator hand P-wide scatter/gather batches to the cache
+//!   workers, so pipeline=16 rows should clearly beat pipeline=1;
+//! * the backend axis at equal pipeline: completion mode submits one
+//!   `io_uring_enter` per tick where readiness mode pays
+//!   epoll_wait + read + writev per ready connection, so uring rows
+//!   should show a lower measured `syscalls_per_op` (read off the
+//!   server's own io-syscall ledger, not asserted).
 //!
 //! ```bash
 //! cargo bench --bench serve                    # full sweep
@@ -17,23 +25,33 @@
 //! ```
 //!
 //! On targets without the epoll backend the bench prints a skip notice
-//! and exits cleanly (the JSON is only written from a real run).
+//! and exits cleanly; on kernels without io_uring the uring rows are
+//! skipped with a notice and the epoll rows still run (the JSON is
+//! only written from a real run).
 //!
 //! [`CacheService`]: kway::coordinator::CacheService
 
 use kway::coordinator::{CacheService, ServiceConfig};
 use kway::kway::KwWfsc;
 use kway::net::loadgen::{self, LoadgenConfig, LoadgenResult, WireProto};
-use kway::net::{Server, ServerConfig};
+use kway::net::{BackendChoice, Server, ServerConfig};
 use kway::policy::Policy;
 use kway::tinylfu::AdmissionMode;
 use kway::util::cli::Args;
 use kway::util::json::{check_serve_schema, Json, SERVE_SCHEMA};
 use std::net::TcpListener;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
 const SEED: u64 = 42;
+
+struct Row {
+    backend: &'static str,
+    cfg: LoadgenConfig,
+    result: LoadgenResult,
+    syscalls_per_op: f64,
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
@@ -58,87 +76,164 @@ fn main() {
             ..Default::default()
         },
     ));
-    let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback");
-    let server = match Server::start(
-        listener,
-        Arc::clone(&service),
-        ServerConfig { io_threads: 2, ..Default::default() },
-    ) {
-        Ok(s) => s,
-        Err(e) => {
-            println!("serve bench skipped: wire front end unavailable on this target ({e})");
-            return;
-        }
-    };
-    let addr = server.local_addr().to_string();
-    println!("== wire serving: {addr}, duration {duration:?}, threads {threads} ==");
+    println!("== wire serving: loopback, duration {duration:?}, threads {threads} ==");
     println!(
-        "{:>10} {:>12} {:>9} {:>8} {:>9} {:>7} {:>9} {:>9} {:>7}",
-        "proto", "connections", "pipeline", "threads", "Mops/s", "hit", "p50_ns", "p99_ns", "errs"
+        "{:>10} {:>8} {:>12} {:>9} {:>8} {:>9} {:>7} {:>9} {:>9} {:>7} {:>8}",
+        "proto",
+        "backend",
+        "connections",
+        "pipeline",
+        "threads",
+        "Mops/s",
+        "hit",
+        "p50_ns",
+        "p99_ns",
+        "errs",
+        "sys/op"
     );
 
-    let mut rows: Vec<(LoadgenConfig, LoadgenResult)> = Vec::new();
-    for proto in [WireProto::Memcached, WireProto::Resp] {
-        for &connections in conn_axis {
-            for &pipeline in pipe_axis {
-                let cfg = LoadgenConfig {
-                    addr: addr.clone(),
-                    proto,
-                    connections,
-                    pipeline,
-                    threads: threads.min(connections),
-                    duration,
-                    keyspace,
-                    set_every: 8,
-                    ttl: None,
-                    zipf_alpha: None,
-                    value_dist: kway::lifetime::ValueDist::Word,
-                    seed: SEED,
-                    pin,
-                    max_reconnects: 1024,
-                    faults: None,
-                };
-                match loadgen::run(&cfg) {
-                    Ok(r) => {
-                        println!(
-                            "{:>10} {:>12} {:>9} {:>8} {:>9.3} {:>7.3} {:>9} {:>9} {:>7}",
+    let mut rows: Vec<Row> = Vec::new();
+    let mut served_any = false;
+    for backend in [BackendChoice::Epoll, BackendChoice::Uring] {
+        // A fresh server per backend over the same service: the cache
+        // stays warm across backends (both measure the same traffic),
+        // and per-row syscall figures come from metric *deltas*, so the
+        // shared counters do not bleed between rows.
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback");
+        let server = match Server::start(
+            listener,
+            Arc::clone(&service),
+            ServerConfig { io_threads: 2, backend, ..Default::default() },
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                println!(
+                    "{} rows skipped: backend unavailable on this target ({e})",
+                    backend.name()
+                );
+                continue;
+            }
+        };
+        served_any = true;
+        let addr = server.local_addr().to_string();
+        for proto in [WireProto::Memcached, WireProto::Resp] {
+            for &connections in conn_axis {
+                for &pipeline in pipe_axis {
+                    let cfg = LoadgenConfig {
+                        addr: addr.clone(),
+                        proto,
+                        connections,
+                        pipeline,
+                        threads: threads.min(connections),
+                        duration,
+                        keyspace,
+                        set_every: 8,
+                        ttl: None,
+                        zipf_alpha: None,
+                        value_dist: kway::lifetime::ValueDist::Word,
+                        seed: SEED,
+                        pin,
+                        max_reconnects: 1024,
+                        faults: None,
+                    };
+                    let m = service.metrics();
+                    let ops_at = |m: &kway::coordinator::ServiceMetrics| {
+                        m.ops.gets.load(Ordering::Relaxed) + m.ops.puts.load(Ordering::Relaxed)
+                    };
+                    let sys_before = m.io_syscalls.load(Ordering::Relaxed);
+                    let ops_before = ops_at(m);
+                    match loadgen::run(&cfg) {
+                        Ok(r) => {
+                            let sys = m.io_syscalls.load(Ordering::Relaxed) - sys_before;
+                            let ops = ops_at(m) - ops_before;
+                            let spo = if ops > 0 { sys as f64 / ops as f64 } else { 0.0 };
+                            println!(
+                                "{:>10} {:>8} {:>12} {:>9} {:>8} {:>9.3} {:>7.3} {:>9} {:>9} \
+                                 {:>7} {:>8.4}",
+                                proto.name(),
+                                backend.name(),
+                                connections,
+                                pipeline,
+                                cfg.threads,
+                                r.mops(),
+                                r.hit_ratio(),
+                                r.p50_ns,
+                                r.p99_ns,
+                                r.errors,
+                                spo
+                            );
+                            rows.push(Row {
+                                backend: backend.name(),
+                                cfg,
+                                result: r,
+                                syscalls_per_op: spo,
+                            });
+                        }
+                        Err(e) => eprintln!(
+                            "{} {} c={connections} p={pipeline}: {e:#}",
                             proto.name(),
-                            connections,
-                            pipeline,
-                            cfg.threads,
-                            r.mops(),
-                            r.hit_ratio(),
-                            r.p50_ns,
-                            r.p99_ns,
-                            r.errors
-                        );
-                        rows.push((cfg, r));
+                            backend.name()
+                        ),
                     }
-                    Err(e) => eprintln!("{} c={connections} p={pipeline}: {e:#}", proto.name()),
+                }
+            }
+        }
+        server.stop();
+    }
+    if !served_any {
+        println!("serve bench skipped: no event-loop backend available on this target");
+        return;
+    }
+
+    // Headline claim #1: deep pipelines beat depth-1 at equal
+    // connections (per backend).
+    for backend in ["epoll", "uring"] {
+        for proto in [WireProto::Memcached, WireProto::Resp] {
+            for &connections in conn_axis {
+                let at = |p: usize| {
+                    rows.iter()
+                        .find(|row| {
+                            row.backend == backend
+                                && row.cfg.proto == proto
+                                && row.cfg.connections == connections
+                                && row.cfg.pipeline == p
+                        })
+                        .map(|row| row.result.mops())
+                };
+                if let (Some(deep), Some(shallow)) = (at(16), at(1)) {
+                    if shallow > 0.0 {
+                        println!(
+                            "{:>10} {backend} c={connections}: pipeline 16 vs 1 = {:.2}x",
+                            proto.name(),
+                            deep / shallow
+                        );
+                    }
                 }
             }
         }
     }
 
-    // The tentpole claim, read straight off the sweep: deep pipelines
-    // beat depth-1 at equal connections.
+    // Headline claim #2: completion mode spends fewer syscalls per op
+    // than readiness mode at the deep-pipeline point.
     for proto in [WireProto::Memcached, WireProto::Resp] {
         for &connections in conn_axis {
-            let at = |p: usize| {
+            let at = |b: &str| {
                 rows.iter()
-                    .find(|(c, _)| {
-                        c.proto == proto && c.connections == connections && c.pipeline == p
+                    .find(|row| {
+                        row.backend == b
+                            && row.cfg.proto == proto
+                            && row.cfg.connections == connections
+                            && row.cfg.pipeline == 16
                     })
-                    .map(|(_, r)| r.mops())
+                    .map(|row| row.syscalls_per_op)
             };
-            if let (Some(deep), Some(shallow)) = (at(16), at(1)) {
-                if shallow > 0.0 {
-                    println!(
-                        "{:>10} c={connections}: pipeline 16 vs 1 = {:.2}x",
-                        proto.name(),
-                        deep / shallow
-                    );
-                }
+            if let (Some(uring), Some(epoll)) = (at("uring"), at("epoll")) {
+                println!(
+                    "{:>10} c={connections} p=16: syscalls/op uring {uring:.4} vs epoll \
+                     {epoll:.4}{}",
+                    proto.name(),
+                    if uring < epoll { "" } else { "  (!! uring not cheaper)" }
+                );
             }
         }
     }
@@ -146,24 +241,26 @@ fn main() {
     if args.has_flag("json") && !rows.is_empty() {
         let json_rows: Vec<Json> = rows
             .iter()
-            .map(|(cfg, r)| {
+            .map(|row| {
                 Json::Object(vec![
-                    ("proto".to_string(), Json::Str(cfg.proto.name().to_string())),
-                    ("connections".to_string(), Json::Int(cfg.connections as i64)),
-                    ("pipeline".to_string(), Json::Int(cfg.pipeline as i64)),
-                    ("threads".to_string(), Json::Int(cfg.threads as i64)),
-                    ("ops".to_string(), Json::Int(r.ops as i64)),
-                    ("mops".to_string(), Json::Float(r.mops())),
-                    ("hit_ratio".to_string(), Json::Float(r.hit_ratio())),
-                    ("p50_ns".to_string(), Json::Int(r.p50_ns as i64)),
-                    ("p99_ns".to_string(), Json::Int(r.p99_ns as i64)),
-                    ("errors".to_string(), Json::Int(r.errors as i64)),
+                    ("proto".to_string(), Json::Str(row.cfg.proto.name().to_string())),
+                    ("backend".to_string(), Json::Str(row.backend.to_string())),
+                    ("connections".to_string(), Json::Int(row.cfg.connections as i64)),
+                    ("pipeline".to_string(), Json::Int(row.cfg.pipeline as i64)),
+                    ("threads".to_string(), Json::Int(row.cfg.threads as i64)),
+                    ("ops".to_string(), Json::Int(row.result.ops as i64)),
+                    ("mops".to_string(), Json::Float(row.result.mops())),
+                    ("hit_ratio".to_string(), Json::Float(row.result.hit_ratio())),
+                    ("p50_ns".to_string(), Json::Int(row.result.p50_ns as i64)),
+                    ("p99_ns".to_string(), Json::Int(row.result.p99_ns as i64)),
+                    ("errors".to_string(), Json::Int(row.result.errors as i64)),
+                    ("syscalls_per_op".to_string(), Json::Float(row.syscalls_per_op)),
                 ])
             })
             .collect();
         let doc = Json::Object(vec![
             ("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string())),
-            ("addr".to_string(), Json::Str(addr.clone())),
+            ("addr".to_string(), Json::Str("127.0.0.1:0 (per-backend ephemeral)".to_string())),
             ("duration_ms".to_string(), Json::Int(duration.as_millis() as i64)),
             ("keyspace".to_string(), Json::Int(keyspace as i64)),
             ("seed".to_string(), Json::Int(SEED as i64)),
@@ -181,7 +278,6 @@ fn main() {
         }
     }
 
-    server.stop();
     if let Ok(service) = Arc::try_unwrap(service) {
         service.shutdown();
     }

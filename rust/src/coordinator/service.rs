@@ -135,6 +135,15 @@ pub struct ServiceMetrics {
     /// Convenience ops that degraded (to a miss / dropped put) because a
     /// worker or the service was down.
     pub degraded_ops: AtomicU64,
+    /// Socket/ring syscalls issued by the io threads (epoll waits +
+    /// reads + writes in readiness mode; `io_uring_enter`s in
+    /// completion mode). `syscalls_per_op` — this over `gets + puts` —
+    /// is the number the io_uring backend exists to shrink.
+    pub io_syscalls: AtomicU64,
+    /// Which event-loop backend the server resolved to: 0 = none
+    /// serving, 1 = epoll, 2 = io_uring (see
+    /// [`ServiceMetrics::set_io_backend`]).
+    pub io_backend: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -157,25 +166,63 @@ impl ServiceMetrics {
         )
     }
 
+    /// Record which event-loop backend is serving (`"epoll"` /
+    /// `"uring"`); anything else resets to "none".
+    pub fn set_io_backend(&self, name: &str) {
+        let code = match name {
+            "epoll" => 1,
+            "uring" => 2,
+            _ => 0,
+        };
+        self.io_backend.store(code, Ordering::Relaxed);
+    }
+
+    /// The serving backend's name, as recorded by
+    /// [`ServiceMetrics::set_io_backend`].
+    pub fn io_backend_name(&self) -> &'static str {
+        match self.io_backend.load(Ordering::Relaxed) {
+            1 => "epoll",
+            2 => "uring",
+            _ => "none",
+        }
+    }
+
+    /// Syscalls per completed cache operation — the io_uring backend's
+    /// headline number. `0` until traffic has been served.
+    pub fn syscalls_per_op(&self) -> f64 {
+        let ops = self.ops.gets.load(Ordering::Relaxed) + self.ops.puts.load(Ordering::Relaxed);
+        if ops == 0 {
+            return 0.0;
+        }
+        self.io_syscalls.load(Ordering::Relaxed) as f64 / ops as f64
+    }
+
     /// `(name, value)` pairs of every counter, for the wire-level
     /// memcached `stats` / RESP `INFO` commands. Latencies are reported
-    /// as nanosecond percentiles.
-    pub fn stat_pairs(&self, queue_depth: usize) -> Vec<(&'static str, u64)> {
+    /// as nanosecond percentiles. Values are pre-rendered strings
+    /// because not every stat is integral (`syscalls_per_op`) or
+    /// numeric (`io_backend`); new pairs append at the end so clients
+    /// that prefix-match keep working.
+    pub fn stat_pairs(&self, queue_depth: usize) -> Vec<(&'static str, String)> {
+        let int = |v: u64| v.to_string();
         vec![
-            ("gets", self.ops.gets.load(Ordering::Relaxed)),
-            ("puts", self.ops.puts.load(Ordering::Relaxed)),
-            ("hits", self.ops.hits.load(Ordering::Relaxed)),
-            ("get_p50_ns", self.get_latency.percentile(50.0)),
-            ("get_p99_ns", self.get_latency.percentile(99.0)),
-            ("put_p50_ns", self.put_latency.percentile(50.0)),
-            ("put_p99_ns", self.put_latency.percentile(99.0)),
-            ("resizes", self.resizes.load(Ordering::Relaxed)),
-            ("queue_depth", queue_depth as u64),
-            ("shed", self.shed.load(Ordering::Relaxed)),
-            ("evicted_slow_clients", self.evicted_slow.load(Ordering::Relaxed)),
-            ("rejected_conns", self.rejected_conns.load(Ordering::Relaxed)),
-            ("worker_restarts", self.worker_restarts.load(Ordering::Relaxed)),
-            ("degraded_ops", self.degraded_ops.load(Ordering::Relaxed)),
+            ("gets", int(self.ops.gets.load(Ordering::Relaxed))),
+            ("puts", int(self.ops.puts.load(Ordering::Relaxed))),
+            ("hits", int(self.ops.hits.load(Ordering::Relaxed))),
+            ("get_p50_ns", int(self.get_latency.percentile(50.0))),
+            ("get_p99_ns", int(self.get_latency.percentile(99.0))),
+            ("put_p50_ns", int(self.put_latency.percentile(50.0))),
+            ("put_p99_ns", int(self.put_latency.percentile(99.0))),
+            ("resizes", int(self.resizes.load(Ordering::Relaxed))),
+            ("queue_depth", int(queue_depth as u64)),
+            ("shed", int(self.shed.load(Ordering::Relaxed))),
+            ("evicted_slow_clients", int(self.evicted_slow.load(Ordering::Relaxed))),
+            ("rejected_conns", int(self.rejected_conns.load(Ordering::Relaxed))),
+            ("worker_restarts", int(self.worker_restarts.load(Ordering::Relaxed))),
+            ("degraded_ops", int(self.degraded_ops.load(Ordering::Relaxed))),
+            ("io_syscalls", int(self.io_syscalls.load(Ordering::Relaxed))),
+            ("syscalls_per_op", format!("{:.4}", self.syscalls_per_op())),
+            ("io_backend", self.io_backend_name().to_string()),
         ]
     }
 }

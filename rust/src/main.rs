@@ -99,7 +99,7 @@ const HELP: &str = "usage: kway <subcommand> [--options]
   resize     [--from 16384] [--to 32768] [--working-set N] [--impls KW-WFA,KW-WFSC,KW-LS,sampled] [--threads 4] [--phase-ms 300] [--policy lru] [--admission none|tlfu]
   bench      [--name oltp] [--trace oltp] [--impls KW-WFA,KW-WFSC,KW-LS] [--threads 1,4] [--policy lru] [--admission none|tlfu] [--ttl 100ms] [--weight-dist zipf:8] [--pin] [--numa-interleave] [--json]
   serve      [--capacity 65536] [--workers 4] [--clients 8] [--requests 20000] [--batch 0] [--admission none|tlfu] [--ttl 100ms] [--value-bytes N] [--resize-at N --resize-to C] [--degraded miss|error] [--shed-depth N] [--faults SPEC]
-             [--listen 127.0.0.1:11211 [--io-threads 2] [--max-conns N] [--max-wq-bytes N] [--idle-timeout 30s] [--request-deadline 5s]]  (memcached text + RESP over TCP)
+             [--listen 127.0.0.1:11211 [--backend auto|epoll|uring] [--io-threads 2] [--max-conns N] [--max-wq-bytes N] [--idle-timeout 30s] [--request-deadline 5s]]  (memcached text + RESP over TCP)
   loadgen    [--addr 127.0.0.1:11211] [--proto memcached|resp] [--connections 8] [--pipeline 16] [--threads 2] [--duration-ms 1000] [--keyspace 65536] [--set-every 10] [--zipf 0.99] [--ttl 100ms] [--value-dist word|fixed:N|uniform:MAX|zipf:MAX] [--seed 42] [--max-reconnects 1024] [--pin] [--smoke] [--json]
   chaos      [--smoke] [--seed 42] [--phase-ms 600] [--faults SPEC]  (fault drill; writes BENCH_chaos.json)
              SPEC e.g. worker_panic@5s,io_stall:3ms:p0.01,conn_drop:p0.001,shed_test
@@ -574,9 +574,12 @@ fn serve_tcp(
     resize: Option<kway::throughput::ResizeSpec>,
 ) -> Result<()> {
     use kway::coordinator::{CacheService, ServiceConfig};
-    use kway::net::{Server, ServerConfig};
+    use kway::net::{BackendChoice, Server, ServerConfig};
     use std::sync::atomic::Ordering;
     let io_threads = args.get_parsed_or("io-threads", 2usize)?;
+    let backend_raw = args.get_or("backend", "auto");
+    let backend = BackendChoice::parse(&backend_raw)
+        .ok_or_else(|| anyhow!("bad --backend {backend_raw:?} (auto|epoll|uring)"))?;
     let (degraded, shed_queue_depth, faults) = parse_resilience(args)?;
     let max_conns = args.get_parsed_or("max-conns", 0usize)?;
     let max_wq_bytes = args.get_parsed_or("max-wq-bytes", 0usize)?;
@@ -602,12 +605,22 @@ fn serve_tcp(
     let server = Server::start(
         listener,
         Arc::clone(&service),
-        ServerConfig { io_threads, max_conns, max_wq_bytes, idle_timeout, request_deadline, faults },
+        ServerConfig {
+            io_threads,
+            max_conns,
+            max_wq_bytes,
+            idle_timeout,
+            request_deadline,
+            faults,
+            backend,
+        },
     )
     .map_err(|e| anyhow!("starting the wire front end: {e}"))?;
     println!(
-        "kway: listening on {} (memcached text + RESP; workers={workers} io-threads={io_threads})",
-        server.local_addr()
+        "kway: listening on {} (memcached text + RESP; backend={} workers={workers} \
+         io-threads={io_threads})",
+        server.local_addr(),
+        server.backend().name()
     );
     println!(
         "kway: cache={}{} capacity={}{}{}",
@@ -652,7 +665,9 @@ fn serve_tcp(
 /// `kway serve --listen` instance. Reuses the crate's Zipf/uniform key
 /// machinery and `--pin` affinity, reports Mops/s, hit ratio and
 /// reservoir-sampled per-op latency percentiles; `--json` writes a
-/// `kway-serve-v1` document to `BENCH_serve-<proto>.json`.
+/// `kway-serve-v2` document to `BENCH_serve-<proto>.json`, with the
+/// serving backend and measured `syscalls_per_op` pulled from the
+/// server's `stats` deltas around the run.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use kway::net::loadgen::{self, LoadgenConfig, WireProto};
     use kway::util::json::{check_serve_schema, Json, SERVE_SCHEMA};
@@ -697,7 +712,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg.duration,
         cfg.value_dist.name()
     );
+    // Server-side stats snapshots bracket the run so the JSON row can
+    // carry a *measured* syscalls/op for the serving backend (both
+    // best-effort: an old server without these stats still loadgens).
+    let stats_before = loadgen::fetch_stats(&cfg.addr).ok();
     let r = loadgen::run(&cfg)?;
+    let stats_after = loadgen::fetch_stats(&cfg.addr).ok();
     println!(
         "{:.3} Mops/s — ops={} hits={}/{} gets ({:.3}) errors={} reconnects={} p50={}ns \
          p99={}ns mean={:.0}ns",
@@ -713,8 +733,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         r.mean_ns
     );
     if args.has_flag("json") {
+        let (backend, syscalls_per_op) = serve_stats_delta(&stats_before, &stats_after);
         let row = Json::Object(vec![
             ("proto".into(), Json::Str(cfg.proto.name().into())),
+            ("backend".into(), Json::Str(backend)),
             ("connections".into(), Json::Int(cfg.connections as i64)),
             ("pipeline".into(), Json::Int(cfg.pipeline as i64)),
             ("threads".into(), Json::Int(cfg.threads as i64)),
@@ -724,6 +746,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ("p50_ns".into(), Json::Int(r.p50_ns as i64)),
             ("p99_ns".into(), Json::Int(r.p99_ns as i64)),
             ("errors".into(), Json::Int(r.errors as i64)),
+            ("syscalls_per_op".into(), Json::Float(syscalls_per_op)),
         ]);
         let doc = Json::Object(vec![
             ("schema".into(), Json::Str(SERVE_SCHEMA.into())),
@@ -744,6 +767,42 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Derive `(backend, syscalls_per_op)` for a loadgen JSON row from the
+/// `stats` snapshots taken around the run: the serving backend comes
+/// from the after-snapshot, and syscalls/op is the io-syscall delta
+/// over the op-count delta (so only *this run's* traffic counts).
+/// Degrades to `("unknown", 0.0)` when either snapshot is missing —
+/// e.g. an older server without these stats.
+#[allow(clippy::type_complexity)]
+fn serve_stats_delta(
+    before: &Option<Vec<(String, String)>>,
+    after: &Option<Vec<(String, String)>>,
+) -> (String, f64) {
+    fn stat_u64(stats: &[(String, String)], name: &str) -> Option<u64> {
+        stats.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.parse().ok())
+    }
+    fn ops(stats: &[(String, String)]) -> Option<u64> {
+        Some(stat_u64(stats, "gets")? + stat_u64(stats, "puts")?)
+    }
+    let (Some(before), Some(after)) = (before, after) else {
+        return ("unknown".into(), 0.0);
+    };
+    let backend = after
+        .iter()
+        .find(|(n, _)| n == "io_backend")
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "unknown".into());
+    let syscalls = stat_u64(after, "io_syscalls")
+        .zip(stat_u64(before, "io_syscalls"))
+        .map(|(a, b)| a.saturating_sub(b));
+    let ops_delta = ops(after).zip(ops(before)).map(|(a, b)| a.saturating_sub(b));
+    let spo = match (syscalls, ops_delta) {
+        (Some(s), Some(o)) if o > 0 => s as f64 / o as f64,
+        _ => 0.0,
+    };
+    (backend, spo)
 }
 
 /// `kway chaos`: the availability-under-faults drill. For each scenario

@@ -131,6 +131,14 @@ impl WriteQueue {
     /// when the socket would block (register write interest and retry
     /// on writability). A zero-length write is an error (peer gone).
     pub fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        self.flush_counted(w, &mut 0)
+    }
+
+    /// [`WriteQueue::flush`], also counting every `write_vectored`
+    /// *call* (i.e. every attempted syscall, `WouldBlock` and
+    /// `Interrupted` included) into `syscalls` — the readiness-mode
+    /// feed for the server's `syscalls_per_op` accounting.
+    pub fn flush_counted<W: Write>(&mut self, w: &mut W, syscalls: &mut u64) -> io::Result<bool> {
         while !self.is_empty() {
             let count = self.chunks.len().min(MAX_IOVECS);
             let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(count);
@@ -138,6 +146,7 @@ impl WriteQueue {
                 let from = if i == 0 { self.head } else { 0 };
                 slices.push(IoSlice::new(&chunk[from..]));
             }
+            *syscalls += 1;
             match w.write_vectored(&slices) {
                 Ok(0) => {
                     return Err(io::Error::new(
@@ -154,7 +163,23 @@ impl WriteQueue {
         Ok(true)
     }
 
-    fn advance(&mut self, mut n: usize) {
+    /// The unwritten slices, up to `max` of them, head-chunk offset
+    /// applied — what a completion-mode backend points its gather-write
+    /// at. The returned slices stay valid (and their storage unmoved)
+    /// until the next [`WriteQueue::advance`]/`flush`/`push` on this
+    /// queue mutates it.
+    pub fn peek_slices(&self, max: usize) -> impl Iterator<Item = &[u8]> {
+        let head = self.head;
+        self.chunks.iter().take(max).enumerate().map(move |(i, chunk)| {
+            let from = if i == 0 { head } else { 0 };
+            &chunk[from..]
+        })
+    }
+
+    /// Record `n` bytes as written by an external writer (a
+    /// completion-mode backend's `writev` CQE); pops fully written
+    /// chunks and moves the head offset into the next.
+    pub fn advance(&mut self, mut n: usize) {
         debug_assert!(n <= self.queued);
         self.queued -= n;
         while n > 0 {
@@ -278,6 +303,42 @@ mod tests {
         let mut w2 = Dribble { out: Vec::new(), cap: 100 };
         assert!(wq.flush(&mut w2).unwrap());
         assert_eq!(w2.out, b"456789");
+    }
+
+    #[test]
+    fn peek_slices_and_external_advance() {
+        let mut wq = WriteQueue::new();
+        wq.push(b"abcde".to_vec());
+        wq.push(b"fg".to_vec());
+        let slices: Vec<&[u8]> = wq.peek_slices(8).collect();
+        assert_eq!(slices, vec![&b"abcde"[..], &b"fg"[..]]);
+        // A completion-mode writer reports progress via advance; the
+        // head chunk's written prefix must drop out of the next peek.
+        wq.advance(3);
+        let slices: Vec<&[u8]> = wq.peek_slices(8).collect();
+        assert_eq!(slices, vec![&b"de"[..], &b"fg"[..]]);
+        assert_eq!(wq.queued_bytes(), 4);
+        // `max` caps the iovec count without losing later chunks.
+        assert_eq!(wq.peek_slices(1).count(), 1);
+        wq.advance(4);
+        assert!(wq.is_empty());
+        assert_eq!(wq.peek_slices(8).count(), 0);
+    }
+
+    #[test]
+    fn flush_counted_counts_attempted_syscalls() {
+        let mut wq = WriteQueue::new();
+        wq.push(b"0123456789".to_vec());
+        let mut syscalls = 0u64;
+        // 3-byte dribble: 10 bytes take 4 write_vectored calls.
+        let mut w = Dribble { out: Vec::new(), cap: 3 };
+        assert!(wq.flush_counted(&mut w, &mut syscalls).unwrap());
+        assert_eq!(syscalls, 4);
+        // A WouldBlock answer still cost a syscall.
+        wq.push(b"xy".to_vec());
+        let mut blocked = Blocky { accepted: 0 };
+        assert!(!wq.flush_counted(&mut blocked, &mut syscalls).unwrap());
+        assert_eq!(syscalls, 5);
     }
 
     #[test]

@@ -29,9 +29,17 @@
 //! non-decimal values, exactly the pre-slab behaviour, now decided here
 //! instead of in the codecs).
 //!
-//! [`Connection`] wraps a `TcpStream` around a session: level-triggered
-//! readiness, read-until-`WouldBlock` with a per-cycle byte cap,
-//! vectored response flushing, and half-close handling.
+//! [`Connection`] wraps a `TcpStream` around a session and drives it in
+//! one of two modes, chosen by the server backend (DESIGN.md §Network
+//! front end, "Event-loop backends"): *readiness* mode
+//! ([`Connection::handle`], the epoll path — level-triggered, read-
+//! until-`WouldBlock` with a per-cycle byte cap, vectored response
+//! flushing, half-close handling) and *completion* mode
+//! ([`Connection::ingest`] + [`Connection::output_iovecs`], the
+//! io_uring path — the backend performs all socket io and feeds
+//! received bytes in / takes queued response slices out). Both modes
+//! run the identical [`Session`] fusion core, which is what makes the
+//! two backends byte-identical on the wire.
 //!
 //! [`CacheService::supports_values`]: crate::coordinator::CacheService::supports_values
 //!
@@ -41,6 +49,7 @@
 use super::buf::{ReadBuf, WriteQueue};
 use super::memcached::{self, MemcachedDecoder};
 use super::resp::{self, RespDecoder};
+use super::uring::IoVec;
 use super::{parse_value, Command, WireKey};
 use crate::coordinator::{CacheService, DegradedPolicy};
 use crate::lifetime::EntryOpts;
@@ -196,6 +205,7 @@ impl<'a> Fuser<'a> {
             Command::Read { .. }
             | Command::Write { .. }
             | Command::WriteMany { .. }
+            | Command::Cas { .. }
             | Command::Delete { .. }
             | Command::Touch { .. }
                 if self.strictly_unavailable() =>
@@ -207,7 +217,10 @@ impl<'a> Fuser<'a> {
             // `shed_test` fault) answer `busy` instead of queueing more
             // work — a bounded, protocol-level refusal the client can
             // retry, rather than unbounded latency.
-            Command::Read { .. } | Command::Write { .. } | Command::WriteMany { .. }
+            Command::Read { .. }
+            | Command::Write { .. }
+            | Command::WriteMany { .. }
+            | Command::Cas { .. }
                 if self.service.overloaded() =>
             {
                 self.refuse(&cmd, "busy");
@@ -289,6 +302,10 @@ impl<'a> Fuser<'a> {
                     }
                 }
             }
+            Command::Cas { key, value, ttl, token, noreply } => {
+                self.flush_all();
+                self.exec_cas(key, value, ttl, token, noreply);
+            }
             Command::Delete { keys, noreply } => {
                 self.flush_all();
                 self.exec_delete(&keys, noreply);
@@ -312,7 +329,7 @@ impl<'a> Fuser<'a> {
                         for (name, value) in pairs {
                             body.push_str(name);
                             body.push(':');
-                            body.push_str(&value.to_string());
+                            body.push_str(&value);
                             body.push_str("\r\n");
                         }
                         resp::encode_bulk_str(self.out, &body);
@@ -361,6 +378,7 @@ impl<'a> Fuser<'a> {
         let noreply = matches!(
             cmd,
             Command::Write { noreply: true, .. }
+                | Command::Cas { noreply: true, .. }
                 | Command::Delete { noreply: true, .. }
                 | Command::Touch { noreply: true, .. }
         );
@@ -473,10 +491,19 @@ impl<'a> Fuser<'a> {
     }
 
     /// Byte-mode fused read: one `get_bytes_batch`, raw length-framed
-    /// payloads in the responses (binary-safe both protocols).
+    /// payloads in the responses (binary-safe both protocols). When any
+    /// queued read is a `gets`, a second fused word batch fetches the
+    /// per-entry version tokens — the stored words themselves, i.e. the
+    /// generation-stamped slab handles (DESIGN.md §Network front end) —
+    /// which is what [`Fuser::exec_cas`] later compares against.
     fn flush_reads_bytes(&mut self) {
         let keys = std::mem::take(&mut self.read_keys);
         let n = keys.len();
+        let tokens: Vec<Option<u64>> = if self.reads.iter().any(|r| r.cas) {
+            self.service.try_get_batch(keys.clone()).unwrap_or_else(|_| vec![None; n])
+        } else {
+            Vec::new()
+        };
         let values = match self.service.try_get_bytes_batch(keys) {
             Ok(values) => values,
             Err(_) => {
@@ -497,13 +524,23 @@ impl<'a> Fuser<'a> {
         };
         let mut at = 0;
         for req in self.reads.drain(..) {
-            let hits = &values[at..at + req.keys.len()];
+            let base = at;
+            let hits = &values[base..base + req.keys.len()];
             at += req.keys.len();
             match self.proto {
                 Proto::Memcached => {
-                    for (key, value) in req.keys.iter().zip(hits) {
+                    for (i, (key, value)) in req.keys.iter().zip(hits).enumerate() {
                         if let Some(v) = value {
-                            memcached::encode_value_bytes(self.out, &key.text, v, req.cas);
+                            // A hit whose token fetch raced an eviction
+                            // falls back to a value hash: a token no
+                            // live entry can match, so a cas against it
+                            // answers EXISTS (the safe answer).
+                            let token = req.cas.then(|| {
+                                tokens.get(base + i).copied().flatten().unwrap_or_else(|| {
+                                    crate::util::hash::xxh64(v, 0xCA5)
+                                })
+                            });
+                            memcached::encode_value_bytes(self.out, &key.text, v, token);
                         }
                     }
                     memcached::encode_end(self.out);
@@ -559,6 +596,45 @@ impl<'a> Fuser<'a> {
             "STORED"
         } else {
             BAD_WORD_VALUE_MC
+        };
+        if !noreply {
+            memcached::encode_line(self.out, line);
+        }
+    }
+
+    /// memcached `cas`: store only if the entry's version token still
+    /// matches the one a prior `gets` handed out. The token is the
+    /// entry's stored word: in byte mode a generation-stamped slab
+    /// handle (the generation bumps on every free, so any overwrite or
+    /// eviction invalidates outstanding tokens); on a word cache the
+    /// value itself (immutable words — value equality is exactly
+    /// version equality). Like `add`, this executes unfused and the
+    /// check + store are not atomic under concurrent writers
+    /// (documented best-effort RMW; the slab generation ABA window is
+    /// 2^26 frees of one slot, astronomically past the race window).
+    fn exec_cas(
+        &mut self,
+        key: WireKey,
+        value: Vec<u8>,
+        ttl: Option<Duration>,
+        token: u64,
+        noreply: bool,
+    ) {
+        let line = match self.service.get(key.id) {
+            None => "NOT_FOUND",
+            Some(word) if word != token => "EXISTS",
+            Some(_) => {
+                let opts = self.opts_for(ttl);
+                if self.bytes_mode {
+                    self.service.put_bytes_with(key.id, value, opts);
+                    "STORED"
+                } else if let Some(word) = parse_value(&value) {
+                    self.service.put_with(key.id, word, opts);
+                    "STORED"
+                } else {
+                    BAD_WORD_VALUE_MC
+                }
+            }
         };
         if !noreply {
             memcached::encode_line(self.out, line);
@@ -665,6 +741,10 @@ pub struct Connection {
     peer_closed: bool,
     /// Close once the write queue drains (quit / fatal error).
     closing: bool,
+    /// Read/write syscalls attempted on this connection's socket in
+    /// readiness mode (completion-mode connections do no syscalls of
+    /// their own; the ring's `io_uring_enter` count lives in the loop).
+    syscalls: u64,
 }
 
 impl Connection {
@@ -677,6 +757,7 @@ impl Connection {
             session: Session::new(),
             peer_closed: false,
             closing: false,
+            syscalls: 0,
         }
     }
 
@@ -707,6 +788,7 @@ impl Connection {
         if readable && !self.peer_closed && !self.closing {
             let mut read = 0;
             loop {
+                self.syscalls += 1;
                 match self.rbuf.fill_from(&mut self.stream) {
                     Ok(0) => {
                         self.peer_closed = true;
@@ -747,7 +829,7 @@ impl Connection {
 
     /// Drain the write queue; `false` = connection is dead.
     fn flush(&mut self) -> bool {
-        self.wq.flush(&mut self.stream).is_ok()
+        self.wq.flush_counted(&mut self.stream, &mut self.syscalls).is_ok()
     }
 
     /// Bytes of queued, unflushed responses — the event loop's
@@ -762,6 +844,76 @@ impl Connection {
     /// would have been drained and answered by [`Connection::handle`]).
     pub fn has_buffered_request(&self) -> bool {
         !self.rbuf.is_empty()
+    }
+
+    // ---- completion-mode surface -----------------------------------
+    //
+    // The io_uring loop never touches the socket directly: the kernel
+    // delivers received bytes (fed back via [`Connection::ingest`]) and
+    // writes whatever [`Connection::output_iovecs`] describes, then
+    // reports progress through [`Connection::advance_output`]. The
+    // session/fusion core in between is the exact same code path the
+    // readiness loop runs, which is what makes the two backends
+    // byte-identical on the wire.
+
+    /// Feed bytes received by the kernel through the same parse →
+    /// fuse → respond path as readiness mode. Returns `false` once the
+    /// session decided to close (quit / fatal protocol error): the
+    /// caller should stop arming receives and drain the write queue.
+    pub fn ingest(&mut self, bytes: &[u8], service: &CacheService) -> bool {
+        if self.closing {
+            return false;
+        }
+        self.rbuf.push(bytes);
+        let mut out = Vec::new();
+        let outcome = self.session.drain(&mut self.rbuf, service, &mut out);
+        self.wq.push(out);
+        if outcome == DrainOutcome::Close {
+            self.closing = true;
+        }
+        !self.closing
+    }
+
+    /// Record a zero-length receive completion (peer EOF).
+    pub fn note_peer_closed(&mut self) {
+        self.peer_closed = true;
+    }
+
+    /// Responses are queued and a writev SQE should be armed.
+    pub fn has_output(&self) -> bool {
+        !self.wq.is_empty()
+    }
+
+    /// Describe up to `max` queued response chunks as iovecs for a
+    /// writev SQE. The returned pointers borrow the write queue: they
+    /// stay valid until [`Connection::advance_output`] /
+    /// [`WriteQueue::push`] next mutate it, so the event loop must keep
+    /// exactly one write in flight per connection.
+    pub fn output_iovecs(&self, out: &mut Vec<IoVec>, max: usize) {
+        out.clear();
+        out.extend(self.wq.peek_slices(max).map(IoVec::from_slice));
+    }
+
+    /// Record `n` bytes written by the kernel.
+    pub fn advance_output(&mut self, n: usize) {
+        self.wq.advance(n);
+    }
+
+    /// Everything this connection will ever say has been said: it is
+    /// closing (or the peer already did) and the write queue is empty.
+    pub fn done(&self) -> bool {
+        (self.closing || self.peer_closed) && self.wq.is_empty()
+    }
+
+    /// Session decided to close — stop arming receives.
+    pub fn closing(&self) -> bool {
+        self.closing
+    }
+
+    /// Drain the readiness-mode syscall counter (for per-tick metrics
+    /// flushes; always zero for completion-mode connections).
+    pub fn take_syscalls(&mut self) -> u64 {
+        std::mem::take(&mut self.syscalls)
     }
 }
 
@@ -848,6 +1000,70 @@ mod tests {
         assert_eq!(out, b"DELETED\r\nNOT_FOUND\r\nEND\r\n");
         let (out, _) = run(&mut s, &svc, b"touch 3 60\r\nset 4 0 0 1\r\n5\r\ntouch 4 60\r\n");
         assert_eq!(out, b"NOT_FOUND\r\nSTORED\r\nTOUCHED\r\n");
+        svc.shutdown();
+    }
+
+    /// Pull the cas token off the first `VALUE <key> 0 <len> <token>`
+    /// line of a `gets` response.
+    fn gets_token(out: &[u8]) -> u64 {
+        let line = out.split(|&b| b == b'\n').next().expect("a VALUE line");
+        let line = std::str::from_utf8(line).unwrap().trim_end();
+        line.rsplit(' ').next().unwrap().parse().expect("decimal cas token")
+    }
+
+    #[test]
+    fn memcached_cas_on_word_cache() {
+        let svc = service();
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"set 7 0 0 2\r\n42\r\ngets 7\r\n");
+        assert_eq!(out, b"STORED\r\nVALUE 7 0 2 42\r\n42\r\nEND\r\n");
+        let token = gets_token(&out[8..]);
+        assert_eq!(token, 42, "word-cache cas token is the value itself");
+
+        // Matching token stores; the stale token then answers EXISTS;
+        // a missing key answers NOT_FOUND; noreply suppresses the line.
+        let wire = format!(
+            "cas 7 0 0 2 {token}\r\n43\r\ncas 7 0 0 2 {token}\r\n44\r\n\
+             cas 99 0 0 1 5\r\n6\r\ncas 7 0 0 2 43 noreply\r\n45\r\nget 7\r\n"
+        );
+        let (out, _) = run(&mut s, &svc, wire.as_bytes());
+        assert_eq!(
+            out,
+            b"STORED\r\nEXISTS\r\nNOT_FOUND\r\nVALUE 7 0 2\r\n45\r\nEND\r\n".to_vec()
+        );
+
+        // A non-decimal value on a word cache costs the command only.
+        let (out, _) = run(&mut s, &svc, b"cas 7 0 0 3 45\r\nabc\r\n");
+        assert_eq!(out, format!("{BAD_WORD_VALUE_MC}\r\n").into_bytes());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn memcached_cas_on_byte_cache_uses_handle_generation() {
+        let svc = byte_service();
+        let mut s = Session::new();
+        let (out, _) = run(&mut s, &svc, b"set k 0 0 5\r\nhello\r\ngets k\r\n");
+        assert!(out.starts_with(b"STORED\r\nVALUE k 0 5 "), "{:?}", String::from_utf8_lossy(&out));
+        let token = gets_token(&out[8..]);
+
+        // The slab handle is the token: a matching cas stores, and the
+        // store re-stamps the generation, so replaying the same token
+        // answers EXISTS even though the old bytes are long gone.
+        let wire = format!("cas k 0 0 5 {token}\r\nworld\r\ncas k 0 0 5 {token}\r\nagain\r\n");
+        let (out, _) = run(&mut s, &svc, wire.as_bytes());
+        assert_eq!(out, b"STORED\r\nEXISTS\r\n".to_vec());
+
+        // The fresh token from a new gets works again.
+        let (out, _) = run(&mut s, &svc, b"gets k\r\n");
+        assert!(out.starts_with(b"VALUE k 0 5 "));
+        let fresh = gets_token(&out);
+        assert_ne!(fresh, token, "overwrite must re-stamp the version token");
+        let wire = format!("cas k 0 0 2 {fresh}\r\nhi\r\nget k\r\n");
+        let (out, _) = run(&mut s, &svc, wire.as_bytes());
+        assert_eq!(out, b"STORED\r\nVALUE k 0 2\r\nhi\r\nEND\r\n".to_vec());
+
+        let (out, _) = run(&mut s, &svc, b"cas missing 0 0 1 9\r\nx\r\n");
+        assert_eq!(out, b"NOT_FOUND\r\n".to_vec());
         svc.shutdown();
     }
 

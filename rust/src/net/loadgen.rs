@@ -342,6 +342,34 @@ fn worker(
     Ok((stats, reservoir))
 }
 
+/// Dial `addr` and fetch the server's `stats` pairs (memcached text
+/// `STAT name value` lines until `END`). Used by `kway loadgen --json`
+/// to snapshot the server-side syscall ledger around a run, so the
+/// bench rows can report a measured `syscalls_per_op` and the serving
+/// backend instead of client-side guesses.
+pub fn fetch_stats(addr: &str) -> Result<Vec<(String, String)>> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).context("setting read timeout")?;
+    stream.write_all(b"stats\r\n").context("sending stats")?;
+    let mut reader = BufReader::new(stream);
+    let mut pairs = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).context("reading stats line")? == 0 {
+            bail!("connection closed mid-stats");
+        }
+        let line = line.trim_end();
+        if line == "END" {
+            return Ok(pairs);
+        }
+        match line.strip_prefix("STAT ").and_then(|r| r.split_once(' ')) {
+            Some((name, value)) => pairs.push((name.to_string(), value.to_string())),
+            None => bail!("unexpected stats line {line:?}"),
+        }
+    }
+}
+
 /// Dial one client connection.
 fn connect(cfg: &LoadgenConfig) -> Result<ClientConn> {
     let stream = TcpStream::connect(&cfg.addr)

@@ -1,8 +1,8 @@
 //! Memcached text-protocol codec.
 //!
 //! Supported subset (DESIGN.md §Network front end): `get`/`gets`
-//! (multi-key), `set`, `add`, `delete`, `touch`, `version`, `quit`,
-//! all with `noreply` where the protocol defines it. `cas`/`incr`/
+//! (multi-key), `set`, `add`, `cas`, `delete`, `touch`, `version`,
+//! `quit`, all with `noreply` where the protocol defines it. `incr`/
 //! `decr`/`append`/`prepend` answer `ERROR` like any unknown command.
 //!
 //! The decoder is *stateless across calls*: a storage command is two
@@ -24,10 +24,12 @@
 //! Deviations from memcached, documented here and in DESIGN.md:
 //! `exptime` is always relative seconds (no unix-timestamp
 //! reinterpretation past 30 days); flags are accepted but not stored
-//! (echoed as `0`); the `gets` cas token is the value itself on a word
-//! cache and `xxh64(bytes)` on a byte-value cache (values are
-//! immutable once stored, so value-equality is exactly cas-equality
-//! either way).
+//! (echoed as `0`); the `gets` cas token is the entry's stored word —
+//! on a byte-value cache that word is the generation-stamped slab
+//! handle (every overwrite or eviction re-stamps it, so stale tokens
+//! answer `EXISTS`), on a word cache it is the value itself (immutable
+//! words: value-equality is exactly version-equality). The decoder
+//! only frames `cas`; the token comparison lives in the executor.
 
 use super::{
     exptime_to_ttl, parse_value, Command, FatalProtocolError, WireKey, MAX_KEY_LEN, MAX_LINE_LEN,
@@ -73,8 +75,13 @@ impl MemcachedDecoder {
 
         let cmd = match verb {
             b"get" | b"gets" => decode_get(verb == b"gets", &rest),
-            b"set" | b"add" => {
-                return decode_storage(verb == b"add", &rest, consumed, buf);
+            b"set" | b"add" | b"cas" => {
+                let kind = match verb {
+                    b"set" => StorageVerb::Set,
+                    b"add" => StorageVerb::Add,
+                    _ => StorageVerb::Cas,
+                };
+                return decode_storage(kind, &rest, consumed, buf);
             }
             b"delete" => decode_delete(&rest),
             b"touch" => decode_touch(&rest),
@@ -132,22 +139,42 @@ fn decode_touch(rest: &[&[u8]]) -> Command {
     }
 }
 
-/// `set|add <key> <flags> <exptime> <bytes> [noreply]` plus its data
-/// block. The byte count frames the block, so it must parse even when
-/// the rest of the header is bad; if it doesn't, the stream is lost.
+/// Which storage verb a header line carried — they share framing but
+/// differ in arity (`cas` has a token argument) and in the command
+/// they decode to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StorageVerb {
+    Set,
+    Add,
+    Cas,
+}
+
+/// `set|add <key> <flags> <exptime> <bytes> [noreply]` or
+/// `cas <key> <flags> <exptime> <bytes> <token> [noreply]` plus its
+/// data block. The byte count frames the block, so it must parse even
+/// when the rest of the header is bad; if it doesn't, the stream is
+/// lost.
 fn decode_storage(
-    add_only: bool,
+    kind: StorageVerb,
     rest: &[&[u8]],
     header_len: usize,
     buf: &[u8],
 ) -> Result<Option<(Command, usize)>, FatalProtocolError> {
     let noreply = rest.last() == Some(&&b"noreply"[..]);
     let args = if noreply { &rest[..rest.len() - 1] } else { rest };
-    let [key, _flags, exptime, bytes] = args else {
-        // No trustworthy byte count → cannot skip the data block.
-        return Err(FatalProtocolError(
-            "malformed storage command (cannot re-frame data block)".into(),
-        ));
+    let (key, exptime, bytes, token_arg) = match (kind, args) {
+        (StorageVerb::Set | StorageVerb::Add, [key, _flags, exptime, bytes]) => {
+            (key, exptime, bytes, None)
+        }
+        (StorageVerb::Cas, [key, _flags, exptime, bytes, token]) => {
+            (key, exptime, bytes, Some(token))
+        }
+        _ => {
+            // No trustworthy byte count → cannot skip the data block.
+            return Err(FatalProtocolError(
+                "malformed storage command (cannot re-frame data block)".into(),
+            ));
+        }
     };
     let Some(nbytes) = parse_value(bytes).map(|n| n as usize) else {
         return Err(FatalProtocolError("unparseable byte count in storage command".into()));
@@ -175,12 +202,24 @@ fn decode_storage(
     let cmd = if key.len() > MAX_KEY_LEN {
         Command::Bad { line: "CLIENT_ERROR key too long".into() }
     } else if let Some(exp) = parse_i64(exptime) {
-        Command::Write {
-            key: WireKey::from_bytes(key),
-            value: data.to_vec(),
-            ttl: exptime_to_ttl(exp),
-            add_only,
-            noreply,
+        match kind {
+            StorageVerb::Set | StorageVerb::Add => Command::Write {
+                key: WireKey::from_bytes(key),
+                value: data.to_vec(),
+                ttl: exptime_to_ttl(exp),
+                add_only: kind == StorageVerb::Add,
+                noreply,
+            },
+            StorageVerb::Cas => match token_arg.and_then(|t| parse_value(t)) {
+                Some(token) => Command::Cas {
+                    key: WireKey::from_bytes(key),
+                    value: data.to_vec(),
+                    ttl: exptime_to_ttl(exp),
+                    token,
+                    noreply,
+                },
+                None => Command::Bad { line: "CLIENT_ERROR invalid cas token".into() },
+            },
         }
     } else {
         Command::Bad { line: "CLIENT_ERROR invalid exptime argument".into() }
@@ -211,16 +250,17 @@ pub fn encode_value(out: &mut Vec<u8>, key_text: &[u8], value: u64, cas: bool) {
 
 /// Append a `VALUE` response block for one byte-value hit. The data
 /// block is length-framed and written verbatim — CRLF, NUL, anything
-/// goes. `cas` echoes `xxh64(value)` as the cas token (values are
-/// immutable once stored, so byte-equality is exactly cas-equality).
-pub fn encode_value_bytes(out: &mut Vec<u8>, key_text: &[u8], value: &[u8], cas: bool) {
+/// goes. `token` is the cas token to echo (the entry's stored word —
+/// its generation-stamped slab handle; see module docs), already
+/// fetched by the caller so the value and token ride the same fused
+/// batch.
+pub fn encode_value_bytes(out: &mut Vec<u8>, key_text: &[u8], value: &[u8], token: Option<u64>) {
     out.extend_from_slice(b"VALUE ");
     out.extend_from_slice(key_text);
     out.extend_from_slice(b" 0 ");
     out.extend_from_slice(value.len().to_string().as_bytes());
-    if cas {
+    if let Some(token) = token {
         out.push(b' ');
-        let token = crate::util::hash::xxh64(value, 0xCA5);
         out.extend_from_slice(token.to_string().as_bytes());
     }
     out.extend_from_slice(b"\r\n");
@@ -470,18 +510,53 @@ mod tests {
     #[test]
     fn byte_value_encoder_is_length_framed() {
         let mut out = Vec::new();
-        encode_value_bytes(&mut out, b"k", b"x\r\ny\0", false);
+        encode_value_bytes(&mut out, b"k", b"x\r\ny\0", None);
         assert_eq!(out, b"VALUE k 0 5\r\nx\r\ny\0\r\n");
 
-        // cas token is a function of the bytes alone.
-        let mut a = Vec::new();
-        let mut b = Vec::new();
-        encode_value_bytes(&mut a, b"k1", b"same", true);
-        encode_value_bytes(&mut b, b"k2", b"same", true);
-        let tok = |buf: &[u8]| {
-            let line = buf.split(|&c| c == b'\n').next().unwrap();
-            line.rsplit(|&c| c == b' ').next().unwrap().to_vec()
-        };
-        assert_eq!(tok(&a), tok(&b));
+        // The cas token is caller-supplied and echoed verbatim.
+        let mut out = Vec::new();
+        encode_value_bytes(&mut out, b"k1", b"same", Some(77));
+        assert_eq!(out, b"VALUE k1 0 4 77\r\nsame\r\n");
+    }
+
+    #[test]
+    fn cas_decodes_with_token_and_noreply() {
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"cas 5 0 30 2 91\r\n42\r\ncas 6 0 0 1 7 noreply\r\n9\r\n");
+        assert_eq!(
+            cmds[0],
+            Command::Cas {
+                key: WireKey::from_bytes(b"5"),
+                value: b"42".to_vec(),
+                ttl: Some(Duration::from_secs(30)),
+                token: 91,
+                noreply: false,
+            }
+        );
+        assert_eq!(
+            cmds[1],
+            Command::Cas {
+                key: WireKey::from_bytes(b"6"),
+                value: b"9".to_vec(),
+                ttl: None,
+                token: 7,
+                noreply: true,
+            }
+        );
+    }
+
+    #[test]
+    fn cas_bad_token_reframes_via_byte_count() {
+        // The token parses after framing: a bad one costs the command,
+        // not the connection.
+        let mut dec = MemcachedDecoder::new();
+        let cmds = decode_all(&mut dec, b"cas 1 0 0 3 nope\r\nxyz\r\nversion\r\n");
+        assert!(matches!(&cmds[0], Command::Bad { line } if line.contains("cas token")));
+        assert!(matches!(&cmds[1], Command::Version));
+
+        // A cas missing its token has no trustworthy byte count (the
+        // 4-arg form would misread `bytes` as the token): fatal.
+        let mut dec = MemcachedDecoder::new();
+        assert!(dec.decode(b"cas 1 0 0 3\r\n").is_err());
     }
 }

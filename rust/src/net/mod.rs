@@ -9,7 +9,7 @@
 //! line):
 //!
 //! * **memcached text** — `get`/`gets` (multi-key), `set`, `add`,
-//!   `delete`, `touch`, `version`, `quit`, with `noreply`;
+//!   `cas`, `delete`, `touch`, `version`, `quit`, with `noreply`;
 //! * **RESP** (the redis serialization protocol, arrays-of-bulk-strings
 //!   subset) — `GET`, `SET [EX s|PX ms]`, `MGET`, `MSET`, `DEL`,
 //!   `EXPIRE`, `PING`, `QUIT`.
@@ -23,15 +23,21 @@
 //! path, admission, TTL and resize. Responses are queued per connection
 //! and flushed with vectored `writev` ([`buf::WriteQueue`]).
 //!
-//! The event loop ([`server`]) runs on raw-syscall epoll ([`poll`], in
-//! the style of [`crate::util::affinity`] — the offline build has no
-//! `libc`/`mio`), one poller per io thread, connections handed out
-//! round-robin by a non-blocking acceptor. [`poll::Poller`] is the
-//! backend seam: an io_uring flavour can slot in behind the same
-//! five-call surface without touching the connection layer. Off
-//! linux/x86_64 the server honestly reports itself unsupported; the
-//! codecs, buffers and the load generator ([`loadgen`]) are pure
-//! `std::net` and run everywhere.
+//! The event loop ([`server`]) has two backends behind one seam
+//! (`--backend epoll|uring|auto`, [`server::BackendChoice`]): raw-
+//! syscall **epoll** readiness mode ([`poll`], in the style of
+//! [`crate::util::affinity`] — the offline build has no `libc`/`mio`),
+//! one poller per io thread, connections handed out round-robin by a
+//! non-blocking acceptor; and raw-syscall **io_uring** completion mode
+//! ([`uring`]), where each tick submits batched `recv`/`writev` SQEs
+//! (plus a multishot `accept` on the acceptor) and harvests CQEs, so N
+//! ready connections cost one `io_uring_enter` instead of ~2N+1
+//! syscalls. Both backends drive the *same* [`Connection`] session
+//! core, which is what keeps them byte-identical on the wire. `auto`
+//! probes at startup and falls back to epoll on kernels without
+//! io_uring. Off linux/x86_64 the server honestly reports itself
+//! unsupported; the codecs, buffers and the load generator
+//! ([`loadgen`]) are pure `std::net` and run everywhere.
 //!
 //! Wire keys and values map onto the crate's `u64`-keyed caches as
 //! follows (DESIGN.md §Network front end): a key that is plain ASCII
@@ -55,10 +61,11 @@ pub mod memcached;
 pub mod poll;
 pub mod resp;
 pub mod server;
+pub mod uring;
 
 pub use conn::Connection;
 pub use loadgen::{LoadgenConfig, LoadgenResult, WireProto};
-pub use server::{Server, ServerConfig};
+pub use server::{BackendChoice, Server, ServerConfig};
 
 use std::time::Duration;
 
@@ -149,6 +156,24 @@ pub enum Command {
         /// modify-write; executes unfused).
         add_only: bool,
         /// memcached `noreply`: suppress the response line.
+        noreply: bool,
+    },
+    /// memcached `cas`: store only if the entry's version token still
+    /// matches the one a prior `gets` returned — the entry's stored
+    /// word (a generation-stamped slab handle on a byte-value cache,
+    /// the value itself on a word cache). Read-modify-write; executes
+    /// unfused, best-effort under concurrency like `add`/`touch`.
+    Cas {
+        /// The key to conditionally store under.
+        key: WireKey,
+        /// The raw replacement payload (binary-safe; same executor
+        /// rules as [`Command::Write`]).
+        value: Vec<u8>,
+        /// Entry TTL; `None` defers to the service default.
+        ttl: Option<Duration>,
+        /// The version token from `gets` to compare against.
+        token: u64,
+        /// memcached `noreply`.
         noreply: bool,
     },
     /// RESP `MSET`: unconditional stores of several pairs (one fused

@@ -1,26 +1,36 @@
-//! The TCP server: acceptor + N epoll io threads over one
-//! [`CacheService`].
+//! The TCP server: acceptor + N io threads over one [`CacheService`],
+//! with two event-loop backends behind one seam.
 //!
 //! Threading model (DESIGN.md §Network front end): one acceptor thread
-//! runs a non-blocking `accept` loop and deals accepted sockets
-//! round-robin to `io_threads` event-loop threads over channels; each
-//! io thread owns a [`Poller`] and its connections outright, so there
-//! is no cross-thread connection state, no locks on the hot path, and
-//! a connection's requests stay ordered trivially. Cache-side
-//! concurrency comes from [`CacheService`]'s own worker shards — the
-//! io threads only decode, fuse, and encode.
+//! deals accepted sockets round-robin to `io_threads` event-loop
+//! threads over channels; each io thread owns its event source and its
+//! connections outright, so there is no cross-thread connection state,
+//! no locks on the hot path, and a connection's requests stay ordered
+//! trivially. Cache-side concurrency comes from [`CacheService`]'s own
+//! worker shards — the io threads only decode, fuse, and encode.
 //!
-//! Level-triggered readiness: a connection that still has buffered
-//! request bytes after a read-cycle cap keeps its fd readable, so the
-//! next `epoll_wait` re-delivers it — no starvation bookkeeping. Write
-//! interest is registered only while a connection has queued response
-//! bytes (the common case — responses fit the socket buffer — never
-//! touches `epoll_ctl`).
+//! **epoll (readiness mode)**: level-triggered `epoll_wait`, then
+//! `read`/`writev` per ready connection — a connection that still has
+//! buffered request bytes after a read-cycle cap keeps its fd
+//! readable, so the next wait re-delivers it. Write interest is
+//! registered only while a connection has queued response bytes. Cost:
+//! ~2N+1 syscalls for N ready connections per tick.
+//!
+//! **io_uring (completion mode)**: each tick arms batched `recv` /
+//! `writev` SQEs for every connection that needs one and harvests
+//! whatever completed — one `io_uring_enter` per tick regardless of N.
+//! The acceptor runs a multishot `accept` on its own ring (downgrading
+//! to one-shot re-arm on kernels that refuse multishot). Connection
+//! teardown (error, eviction, sweep) goes through `ASYNC_CANCEL` so an
+//! fd is never closed with SQEs still in flight. Both backends drive
+//! the same [`Connection`] session core byte-for-byte;
+//! [`BackendChoice::Auto`] probes at startup and falls back to epoll.
 //!
 //! [`CacheService`]: crate::coordinator::CacheService
 
 use super::conn::Connection;
 use super::poll::Poller;
+use super::uring;
 use crate::coordinator::CacheService;
 use crate::fault::FaultPlan;
 use crate::util::rng::Rng;
@@ -36,6 +46,54 @@ use std::time::{Duration, Instant};
 /// quarter second — coarse on purpose, timeouts here are seconds-scale
 /// overload guards, not precision timers).
 const SWEEP_TICKS: u32 = 12;
+
+/// SQ/CQ entries per io-thread ring. 256 SQEs comfortably covers one
+/// tick's arming pass (2 SQEs per connection) for the connection
+/// counts the harness drives; the arming passes retry on a full SQ, so
+/// this is a batching knob, not a correctness bound.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+const URING_IO_ENTRIES: u32 = 256;
+
+/// Entries for the acceptor's ring: one multishot accept (or one-shot
+/// re-arms) is all that ever lives here.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+const URING_ACCEPT_ENTRIES: u32 = 64;
+
+/// Which event loop drives the io threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Readiness mode: raw-syscall epoll ([`super::poll`]). Works on
+    /// any Linux; the default for library users.
+    Epoll,
+    /// Completion mode: raw-syscall io_uring ([`super::uring`]).
+    /// [`Server::start`] fails fast with `Unsupported` when the kernel
+    /// lacks the required ops.
+    Uring,
+    /// Probe io_uring at startup, fall back to epoll when the kernel
+    /// refuses — never an error. The `kway serve` default.
+    Auto,
+}
+
+impl BackendChoice {
+    /// Parse a `--backend` argument.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "epoll" => Some(Self::Epoll),
+            "uring" | "io_uring" => Some(Self::Uring),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    /// The canonical CLI / stats spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Epoll => "epoll",
+            Self::Uring => "uring",
+            Self::Auto => "auto",
+        }
+    }
+}
 
 /// Server tuning knobs. The guard fields all default to *off* (`0` /
 /// `None`), so a default-configured server behaves exactly like the
@@ -72,6 +130,10 @@ pub struct ServerConfig {
     /// Fault plan for the io-thread injection points (`io_stall`);
     /// inert unless armed, absent in production configs.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Event-loop backend. Defaults to [`BackendChoice::Epoll`] (the
+    /// conservative choice for library users and tests); `kway serve`
+    /// passes [`BackendChoice::Auto`].
+    pub backend: BackendChoice,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +145,7 @@ impl Default for ServerConfig {
             idle_timeout: None,
             request_deadline: None,
             faults: None,
+            backend: BackendChoice::Epoll,
         }
     }
 }
@@ -94,27 +157,46 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
     accepted: Arc<AtomicU64>,
+    backend: BackendChoice,
 }
 
 impl Server {
     /// Start serving `listener`'s accepted connections against
     /// `service`. Fails fast (before accepting anything) if the
-    /// platform has no poller backend or thread spawn fails.
+    /// platform has no event-loop backend — including an explicit
+    /// `--backend uring` on a kernel without io_uring — or thread
+    /// spawn fails. [`BackendChoice::Auto`] probes io_uring here and
+    /// silently falls back to epoll.
     pub fn start(
         listener: TcpListener,
         service: Arc<CacheService>,
         cfg: ServerConfig,
     ) -> io::Result<Server> {
+        let backend = match cfg.backend {
+            BackendChoice::Epoll => BackendChoice::Epoll,
+            BackendChoice::Uring => {
+                if !uring::supported() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::Unsupported,
+                        "io_uring backend unavailable on this kernel/platform \
+                         (use --backend epoll or auto)",
+                    ));
+                }
+                BackendChoice::Uring
+            }
+            BackendChoice::Auto => {
+                if uring::supported() {
+                    BackendChoice::Uring
+                } else {
+                    BackendChoice::Epoll
+                }
+            }
+        };
+
         let io_threads = cfg.io_threads.max(1);
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-
-        // Build every poller up front so an unsupported platform (or
-        // fd exhaustion) errors here, not inside a spawned thread.
-        let mut pollers = Vec::with_capacity(io_threads);
-        for _ in 0..io_threads {
-            pollers.push(Poller::new()?);
-        }
+        service.metrics().set_io_backend(backend.name());
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let accepted = Arc::new(AtomicU64::new(0));
@@ -122,37 +204,94 @@ impl Server {
         let mut threads = Vec::with_capacity(io_threads + 1);
         let mut senders = Vec::with_capacity(io_threads);
 
-        for (i, poller) in pollers.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel::<Connection>();
-            senders.push(tx);
-            let service = Arc::clone(&service);
-            let shutdown = Arc::clone(&shutdown);
-            let cfg = cfg.clone();
-            let live = Arc::clone(&live);
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("kway-io-{i}"))
-                    .spawn(move || io_loop(poller, rx, service, shutdown, cfg, live, i as u64))?,
-            );
+        match backend {
+            BackendChoice::Epoll => {
+                // Build every poller up front so an unsupported platform
+                // (or fd exhaustion) errors here, not inside a thread.
+                let mut pollers = Vec::with_capacity(io_threads);
+                for _ in 0..io_threads {
+                    pollers.push(Poller::new()?);
+                }
+                for (i, poller) in pollers.into_iter().enumerate() {
+                    let (tx, rx) = mpsc::channel::<Connection>();
+                    senders.push(tx);
+                    let service = Arc::clone(&service);
+                    let shutdown = Arc::clone(&shutdown);
+                    let cfg = cfg.clone();
+                    let live = Arc::clone(&live);
+                    threads.push(std::thread::Builder::new().name(format!("kway-io-{i}")).spawn(
+                        move || io_loop(poller, rx, service, shutdown, cfg, live, i as u64),
+                    )?);
+                }
+                let shutdown = Arc::clone(&shutdown);
+                let accepted = Arc::clone(&accepted);
+                let max_conns = cfg.max_conns;
+                threads.push(
+                    std::thread::Builder::new().name("kway-accept".into()).spawn(move || {
+                        accept_loop(listener, senders, shutdown, accepted, service, max_conns, live)
+                    })?,
+                );
+            }
+            BackendChoice::Uring => {
+                #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+                {
+                    // Rings up front, same fail-fast rationale as pollers.
+                    let mut rings = Vec::with_capacity(io_threads);
+                    for _ in 0..io_threads {
+                        rings.push(uring::Ring::new(URING_IO_ENTRIES)?);
+                    }
+                    let accept_ring = uring::Ring::new(URING_ACCEPT_ENTRIES)?;
+                    for (i, ring) in rings.into_iter().enumerate() {
+                        let (tx, rx) = mpsc::channel::<Connection>();
+                        senders.push(tx);
+                        let service = Arc::clone(&service);
+                        let shutdown = Arc::clone(&shutdown);
+                        let cfg = cfg.clone();
+                        let live = Arc::clone(&live);
+                        threads.push(
+                            std::thread::Builder::new().name(format!("kway-io-{i}")).spawn(
+                                move || {
+                                    uring_io_loop(ring, rx, service, shutdown, cfg, live, i as u64)
+                                },
+                            )?,
+                        );
+                    }
+                    let shutdown = Arc::clone(&shutdown);
+                    let accepted = Arc::clone(&accepted);
+                    let max_conns = cfg.max_conns;
+                    threads.push(
+                        std::thread::Builder::new().name("kway-accept".into()).spawn(move || {
+                            uring_accept_loop(
+                                accept_ring,
+                                listener,
+                                senders,
+                                shutdown,
+                                accepted,
+                                service,
+                                max_conns,
+                                live,
+                            )
+                        })?,
+                    );
+                }
+                #[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+                unreachable!("uring resolved on a platform where the probe cannot succeed");
+            }
+            BackendChoice::Auto => unreachable!("auto was resolved above"),
         }
 
-        {
-            let shutdown = Arc::clone(&shutdown);
-            let accepted = Arc::clone(&accepted);
-            let max_conns = cfg.max_conns;
-            threads.push(
-                std::thread::Builder::new().name("kway-accept".into()).spawn(move || {
-                    accept_loop(listener, senders, shutdown, accepted, service, max_conns, live)
-                })?,
-            );
-        }
-
-        Ok(Server { local_addr, shutdown, threads, accepted })
+        Ok(Server { local_addr, shutdown, threads, accepted, backend })
     }
 
     /// The bound address (resolves port 0 binds).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// The backend the server resolved to (`Auto` never survives
+    /// [`Server::start`]).
+    pub fn backend(&self) -> BackendChoice {
+        self.backend
     }
 
     /// Connections accepted so far.
@@ -261,6 +400,10 @@ fn io_loop(
     let mut rng = Rng::new(0xC4A0_5EED ^ seed);
     let mut ticks: u32 = 0;
     let sweeping = cfg.idle_timeout.is_some() || cfg.request_deadline.is_some();
+    // Readiness-mode syscall ledger: one per epoll_wait plus whatever
+    // each connection's read/writev cycle spent, flushed to the shared
+    // metrics once per tick (the counter feeds `syscalls_per_op`).
+    let mut syscalls: u64 = 0;
 
     while !shutdown.load(Ordering::Relaxed) {
         // Adopt newly accepted connections.
@@ -290,6 +433,7 @@ fn io_loop(
             }
         }
 
+        syscalls += 1;
         if poller.wait(&mut events, 20).is_err() {
             // A broken poller cannot recover; drop the thread's
             // connections and exit rather than spin.
@@ -311,6 +455,7 @@ fn io_loop(
             };
             let readable = ev.readable || ev.closed;
             let status = slot.conn.handle(readable, &service);
+            syscalls += slot.conn.take_syscalls();
             slot.last_activity = Instant::now();
             slot.partial_since = if slot.conn.has_buffered_request() {
                 slot.partial_since.or(Some(slot.last_activity))
@@ -336,6 +481,11 @@ fn io_loop(
                     slot.want_write = status.want_write;
                 }
             }
+        }
+
+        if syscalls > 0 {
+            service.metrics().io_syscalls.fetch_add(syscalls, Ordering::Relaxed);
+            syscalls = 0;
         }
 
         ticks = ticks.wrapping_add(1);
@@ -367,6 +517,314 @@ fn io_loop(
     }
 }
 
+/// Max response chunks batched into one completion-mode writev SQE.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+const URING_WRITE_IOVECS: usize = 32;
+
+/// Completion-mode acceptor: one multishot `accept` SQE serves every
+/// incoming connection until the kernel retires it (`CQE_F_MORE`
+/// absent), with a one-shot re-arm downgrade for kernels that refuse
+/// multishot (`EINVAL`). Accepted fds get the same nodelay/nonblocking
+/// + max-conns treatment as the readiness-mode acceptor.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+fn uring_accept_loop(
+    mut ring: uring::Ring,
+    listener: TcpListener,
+    senders: Vec<mpsc::Sender<Connection>>,
+    shutdown: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    service: Arc<CacheService>,
+    max_conns: usize,
+    live: Arc<AtomicUsize>,
+) {
+    use std::os::fd::{AsRawFd, FromRawFd};
+    const EINVAL: i32 = -22;
+
+    let lfd = listener.as_raw_fd();
+    let mut multishot = true;
+    let mut armed = false;
+    let mut cqes: Vec<uring::Cqe> = Vec::new();
+    let mut next = 0usize;
+
+    while !shutdown.load(Ordering::Relaxed) {
+        if !armed {
+            armed = ring.push_accept(lfd, multishot, 0);
+        }
+        if ring.submit_and_wait(1, 50).is_err() || ring.harvest(&mut cqes).is_err() {
+            break;
+        }
+        for cqe in cqes.drain(..) {
+            if cqe.user_data != 0 {
+                continue;
+            }
+            if !multishot || cqe.flags & uring::CQE_F_MORE == 0 {
+                armed = false;
+            }
+            if cqe.res == EINVAL && multishot {
+                // Kernel predates multishot accept: re-arm one-shot.
+                multishot = false;
+                armed = false;
+                continue;
+            }
+            if cqe.res < 0 {
+                continue; // transient accept failure; loop re-arms
+            }
+            // The CQE result is a fresh connected fd; from here the
+            // treatment matches `accept_loop` exactly.
+            let mut stream = unsafe { std::net::TcpStream::from_raw_fd(cqe.res) };
+            let _ = stream.set_nonblocking(true);
+            let _ = stream.set_nodelay(true);
+            accepted.fetch_add(1, Ordering::Relaxed);
+            if max_conns > 0 && live.load(Ordering::Relaxed) >= max_conns {
+                let _ = stream.write_all(b"SERVER_ERROR too many connections\r\n");
+                service.metrics().rejected_conns.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            live.fetch_add(1, Ordering::Relaxed);
+            if senders[next % senders.len()].send(Connection::new(stream)).is_err() {
+                return; // io thread gone: shutting down
+            }
+            next = next.wrapping_add(1);
+        }
+    }
+}
+
+/// A completion-mode connection slot. The slot index rides in each
+/// SQE's `user_data` (`token << 2 | kind`), so a CQE routes straight
+/// back here. `recv_buf` and `iovecs` are what the *kernel* reads and
+/// writes asynchronously: their heap storage is stable across `Vec`
+/// growth of the slot table (only the `Vec` headers move), and each is
+/// re-armed/rebuilt only while its operation is not in flight.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+struct USlot {
+    conn: Connection,
+    fd: i32,
+    /// Target of the in-flight `recv` SQE.
+    recv_buf: Vec<u8>,
+    /// iovec array of the in-flight `writev` SQE, pointing into the
+    /// connection's write queue.
+    iovecs: Vec<uring::IoVec>,
+    recv_inflight: bool,
+    write_inflight: bool,
+    /// Tear down once in-flight SQEs retire (io error, slow-client
+    /// eviction, idle/deadline sweep).
+    dead: bool,
+    /// Cancels for the in-flight ops were submitted (avoid re-spamming
+    /// `ASYNC_CANCEL` every tick while they drain).
+    cancel_sent: bool,
+    last_activity: Instant,
+    partial_since: Option<Instant>,
+}
+
+/// One completion-mode io thread. Per tick: adopt new connections, arm
+/// a `recv` for every connection without one and a `writev` for every
+/// connection with queued output, then **one** `io_uring_enter`
+/// submits the whole batch and waits (≤ 20ms) for completions, which
+/// are fed back through the same session core as readiness mode. This
+/// is the tentpole's syscall claim: N ready connections per tick cost
+/// one syscall, not ~2N+1.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn uring_io_loop(
+    mut ring: uring::Ring,
+    rx: mpsc::Receiver<Connection>,
+    service: Arc<CacheService>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ServerConfig,
+    live: Arc<AtomicUsize>,
+    seed: u64,
+) {
+    const RECV_BUF: usize = 16 * 1024;
+    const KIND_RECV: u64 = 0;
+    const KIND_WRITE: u64 = 1;
+    const KIND_CANCEL: u64 = 2;
+
+    let mut slots: Vec<Option<USlot>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut cqes: Vec<uring::Cqe> = Vec::new();
+    // Per-thread deterministic rng for the io_stall injection point.
+    let mut rng = Rng::new(0xC4A0_5EED ^ seed);
+    let mut ticks: u32 = 0;
+    let sweeping = cfg.idle_timeout.is_some() || cfg.request_deadline.is_some();
+
+    while !shutdown.load(Ordering::Relaxed) {
+        // Adopt newly accepted connections.
+        while let Ok(conn) = rx.try_recv() {
+            let fd = conn.raw_fd();
+            let slot = USlot {
+                conn,
+                fd,
+                recv_buf: vec![0u8; RECV_BUF],
+                iovecs: Vec::new(),
+                recv_inflight: false,
+                write_inflight: false,
+                dead: false,
+                cancel_sent: false,
+                last_activity: Instant::now(),
+                partial_since: None,
+            };
+            match free.pop() {
+                Some(i) => slots[i] = Some(slot),
+                None => slots.push(Some(slot)),
+            }
+        }
+
+        // Arming pass. A full SQ leaves `*_inflight` false and the
+        // next tick retries — backpressure, not loss.
+        for (token, s) in slots.iter_mut().enumerate() {
+            let Some(slot) = s else { continue };
+            let tok = token as u64;
+            if slot.dead || slot.conn.done() {
+                // Teardown: never close an fd with SQEs still in
+                // flight — cancel them and free the slot once both
+                // CQEs have retired.
+                if (slot.recv_inflight || slot.write_inflight) && !slot.cancel_sent {
+                    let mut sent = true;
+                    if slot.recv_inflight {
+                        sent &= ring.push_cancel(tok << 2 | KIND_RECV, tok << 2 | KIND_CANCEL);
+                    }
+                    if slot.write_inflight {
+                        sent &= ring.push_cancel(tok << 2 | KIND_WRITE, tok << 2 | KIND_CANCEL);
+                    }
+                    slot.cancel_sent = sent;
+                }
+                if !slot.recv_inflight && !slot.write_inflight {
+                    *s = None;
+                    free.push(token);
+                    live.fetch_sub(1, Ordering::Relaxed);
+                }
+                continue;
+            }
+            if !slot.recv_inflight && !slot.conn.closing() {
+                slot.recv_inflight =
+                    ring.push_recv(slot.fd, &mut slot.recv_buf, tok << 2 | KIND_RECV);
+            }
+            if !slot.write_inflight && slot.conn.has_output() {
+                slot.conn.output_iovecs(&mut slot.iovecs, URING_WRITE_IOVECS);
+                slot.write_inflight =
+                    ring.push_writev(slot.fd, &slot.iovecs, tok << 2 | KIND_WRITE);
+            }
+        }
+
+        // Injected scheduling hiccup before this tick's submit (inert
+        // unless a fault plan is armed; see `kway::fault`).
+        if let Some(faults) = &cfg.faults {
+            if let Some(stall) = faults.io_stall_for(&mut rng) {
+                std::thread::sleep(stall);
+            }
+        }
+
+        // The tick's one syscall.
+        if ring.submit_and_wait(1, 20).is_err() || ring.harvest(&mut cqes).is_err() {
+            break;
+        }
+
+        for cqe in cqes.drain(..) {
+            let token = (cqe.user_data >> 2) as usize;
+            let kind = cqe.user_data & 0b11;
+            if kind == KIND_CANCEL {
+                continue; // the ASYNC_CANCEL op's own completion
+            }
+            let Some(slot) = slots.get_mut(token).and_then(|s| s.as_mut()) else {
+                continue; // slot already freed (both CQEs had retired)
+            };
+            slot.last_activity = Instant::now();
+            match kind {
+                KIND_RECV => {
+                    slot.recv_inflight = false;
+                    if cqe.res > 0 {
+                        let n = cqe.res as usize;
+                        let _ = slot.conn.ingest(&slot.recv_buf[..n], &service);
+                    } else if cqe.res == 0 {
+                        slot.conn.note_peer_closed();
+                    } else if cqe.res != uring::ECANCELED {
+                        slot.dead = true; // io error (reset, …)
+                    }
+                }
+                _ => {
+                    slot.write_inflight = false;
+                    if cqe.res >= 0 {
+                        slot.conn.advance_output(cqe.res as usize);
+                    } else if cqe.res != uring::ECANCELED {
+                        slot.dead = true;
+                    }
+                }
+            }
+            slot.partial_since = if slot.conn.has_buffered_request() {
+                slot.partial_since.or(Some(slot.last_activity))
+            } else {
+                None
+            };
+            // Slow-client eviction, same rule as readiness mode.
+            if !slot.dead && cfg.max_wq_bytes > 0 && slot.conn.queued_bytes() > cfg.max_wq_bytes {
+                service.metrics().evicted_slow.fetch_add(1, Ordering::Relaxed);
+                slot.dead = true;
+            }
+        }
+
+        service.metrics().io_syscalls.fetch_add(ring.take_syscalls(), Ordering::Relaxed);
+
+        ticks = ticks.wrapping_add(1);
+        if sweeping && ticks % SWEEP_TICKS == 0 {
+            let now = Instant::now();
+            for slot in slots.iter_mut().flatten() {
+                if slot.dead {
+                    continue;
+                }
+                let idle = cfg
+                    .idle_timeout
+                    .is_some_and(|t| now.duration_since(slot.last_activity) > t);
+                let stalled = cfg.request_deadline.is_some_and(|t| {
+                    slot.partial_since.is_some_and(|since| now.duration_since(since) > t)
+                });
+                if idle || stalled {
+                    slot.dead = true; // the arming pass cancels + frees
+                }
+            }
+        }
+    }
+
+    // The kernel may still be reading `iovecs`/write-queue chunks and
+    // writing `recv_buf`s: cancel everything and drain the CQEs before
+    // those buffers are freed.
+    for (token, slot) in slots.iter().enumerate() {
+        let Some(slot) = slot else { continue };
+        let tok = token as u64;
+        if slot.recv_inflight {
+            let _ = ring.push_cancel(tok << 2 | KIND_RECV, tok << 2 | KIND_CANCEL);
+        }
+        if slot.write_inflight {
+            let _ = ring.push_cancel(tok << 2 | KIND_WRITE, tok << 2 | KIND_CANCEL);
+        }
+    }
+    for _ in 0..64 {
+        if !slots.iter().flatten().any(|s| s.recv_inflight || s.write_inflight) {
+            break;
+        }
+        if ring.submit_and_wait(1, 20).is_err() || ring.harvest(&mut cqes).is_err() {
+            break;
+        }
+        for cqe in cqes.drain(..) {
+            let token = (cqe.user_data >> 2) as usize;
+            let Some(slot) = slots.get_mut(token).and_then(|s| s.as_mut()) else { continue };
+            match cqe.user_data & 0b11 {
+                KIND_RECV => slot.recv_inflight = false,
+                KIND_WRITE => slot.write_inflight = false,
+                _ => {}
+            }
+        }
+    }
+    for slot in slots.drain(..).flatten() {
+        live.fetch_sub(1, Ordering::Relaxed);
+        if slot.recv_inflight || slot.write_inflight {
+            // Safety valve (drain gave up): leak the buffers the kernel
+            // may still touch rather than free them. The fd leaks with
+            // them; the process is shutting the server down anyway.
+            std::mem::forget(slot);
+        }
+    }
+}
+
 #[cfg(test)]
 #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
 mod tests {
@@ -387,6 +845,26 @@ mod tests {
         let server =
             Server::start(listener, Arc::clone(&service), ServerConfig::default()).unwrap();
         (server, service)
+    }
+
+    #[test]
+    fn backend_choice_parses_and_names() {
+        assert_eq!(BackendChoice::parse("epoll"), Some(BackendChoice::Epoll));
+        assert_eq!(BackendChoice::parse("uring"), Some(BackendChoice::Uring));
+        assert_eq!(BackendChoice::parse("io_uring"), Some(BackendChoice::Uring));
+        assert_eq!(BackendChoice::parse("auto"), Some(BackendChoice::Auto));
+        assert_eq!(BackendChoice::parse("kqueue"), None);
+        assert_eq!(BackendChoice::parse(""), None);
+        assert_eq!(BackendChoice::Epoll.name(), "epoll");
+        assert_eq!(BackendChoice::Uring.name(), "uring");
+        assert_eq!(BackendChoice::Auto.name(), "auto");
+    }
+
+    #[test]
+    fn default_config_stays_on_epoll() {
+        // Library users and existing tests get the conservative backend
+        // unless they opt in; only the CLI defaults to auto.
+        assert_eq!(ServerConfig::default().backend, BackendChoice::Epoll);
     }
 
     #[test]

@@ -415,14 +415,16 @@ pub fn check_hotpath_schema(doc: &Json) -> Result<()> {
 }
 
 /// Schema tag of the wire-serving artifacts (`BENCH_serve*.json`): the
-/// connections × pipeline-depth × threads sweep emitted by
+/// backend × connections × pipeline-depth × threads sweep emitted by
 /// `cargo bench --bench serve -- --json` and by `kway loadgen --json`
-/// (DESIGN.md §Network front end). One row per (proto, connections,
-/// pipeline, threads) point; the pipeline axis is the tentpole claim —
-/// deep pipelines amortize syscalls AND widen the scatter/gather batches
-/// handed to the cache workers, so pipeline=16 must beat pipeline=1 at
-/// equal connections.
-pub const SERVE_SCHEMA: &str = "kway-serve-v1";
+/// (DESIGN.md §Network front end). One row per (proto, backend,
+/// connections, pipeline, threads) point. v2 adds the event-loop
+/// `backend` and a measured `syscalls_per_op` per row — the io_uring
+/// completion-mode claim is that uring rows show fewer syscalls/op
+/// than epoll rows at equal pipeline depth, on top of v1's claim that
+/// deep pipelines amortize syscalls AND widen the scatter/gather
+/// batches handed to the cache workers.
+pub const SERVE_SCHEMA: &str = "kway-serve-v2";
 
 /// Validate a wire-serving document against [`SERVE_SCHEMA`]; writers
 /// run it before touching disk, like [`check_bench_schema`].
@@ -449,15 +451,17 @@ pub fn check_serve_schema(doc: &Json) -> Result<()> {
     for (i, row) in results.iter().enumerate() {
         let rfield =
             |key: &str| row.get(key).ok_or_else(|| anyhow!("results[{i}]: missing {key:?}"));
-        if rfield("proto")?.as_str().is_none() {
-            bail!("results[{i}]: proto must be a string");
+        for key in ["proto", "backend"] {
+            if rfield(key)?.as_str().is_none() {
+                bail!("results[{i}]: {key:?} must be a string");
+            }
         }
         for key in ["connections", "pipeline", "threads", "ops", "p50_ns", "p99_ns", "errors"] {
             if rfield(key)?.as_i64().is_none() {
                 bail!("results[{i}]: {key:?} must be an integer");
             }
         }
-        for key in ["mops", "hit_ratio"] {
+        for key in ["mops", "hit_ratio", "syscalls_per_op"] {
             if rfield(key)?.as_f64().is_none() {
                 bail!("results[{i}]: {key:?} must be numeric");
             }
@@ -762,22 +766,25 @@ mod tests {
             r#"{{"schema":"{schema}","addr":"127.0.0.1:11211",
                 "duration_ms":1000,"keyspace":65536,"seed":42,
                 "pinned":false,"provenance":"measured",
-                "results":[{{"proto":"memcached","connections":8,
-                  "pipeline":16,"threads":2,"ops":100000,"mops":1.5,
-                  "hit_ratio":0.92,"p50_ns":800,"p99_ns":9000,
-                  "errors":0}}]}}"#
+                "results":[{{"proto":"memcached","backend":"uring",
+                  "connections":8,"pipeline":16,"threads":2,
+                  "ops":100000,"mops":1.5,"hit_ratio":0.92,
+                  "p50_ns":800,"p99_ns":9000,"errors":0,
+                  "syscalls_per_op":0.21}}]}}"#
         ))
         .unwrap()
     }
 
     #[test]
-    fn serve_schema_v1_accepts_and_rejects() {
-        assert_eq!(SERVE_SCHEMA, "kway-serve-v1", "schema bumps must update this check");
-        check_serve_schema(&serve_doc("kway-serve-v1")).unwrap();
-        assert!(check_serve_schema(&serve_doc("kway-serve-v0")).is_err());
+    fn serve_schema_v2_accepts_and_rejects() {
+        assert_eq!(SERVE_SCHEMA, "kway-serve-v2", "schema bumps must update this check");
+        check_serve_schema(&serve_doc("kway-serve-v2")).unwrap();
+        // v1 documents predate the backend axis and are rejected.
+        assert!(check_serve_schema(&serve_doc("kway-serve-v1")).is_err());
         // Every row figure is load-bearing: dropping any one is rejected.
         for key in [
             "proto",
+            "backend",
             "connections",
             "pipeline",
             "threads",
@@ -787,8 +794,9 @@ mod tests {
             "p50_ns",
             "p99_ns",
             "errors",
+            "syscalls_per_op",
         ] {
-            let mut doc = serve_doc("kway-serve-v1");
+            let mut doc = serve_doc("kway-serve-v2");
             if let Json::Object(fields) = &mut doc {
                 let results = fields.iter_mut().find(|(k, _)| k == "results").map(|(_, v)| v);
                 if let Some(Json::Array(rows)) = results {
@@ -801,7 +809,7 @@ mod tests {
         }
         // Top-level provenance and the pinned boolean are required.
         for key in ["provenance", "pinned", "addr"] {
-            let mut doc = serve_doc("kway-serve-v1");
+            let mut doc = serve_doc("kway-serve-v2");
             if let Json::Object(fields) = &mut doc {
                 fields.retain(|(k, _)| k != key);
             }

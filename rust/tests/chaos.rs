@@ -44,6 +44,8 @@ mod torture {
     }
 
     /// Read `stats` output into (name, value) pairs, consuming `END`.
+    /// Non-integer stats (`io_backend`, `syscalls_per_op`) are skipped —
+    /// the chaos assertions only consume counters.
     #[cfg(feature = "fault-inject")]
     fn read_stats(reader: &mut BufReader<TcpStream>) -> Vec<(String, u64)> {
         let mut pairs = Vec::new();
@@ -57,8 +59,9 @@ mod torture {
             let mut parts = line.splitn(3, ' ');
             assert_eq!(parts.next(), Some("STAT"), "unexpected stats line {line:?}");
             let name = parts.next().unwrap().to_string();
-            let value: u64 = parts.next().unwrap().parse().unwrap();
-            pairs.push((name, value));
+            if let Ok(value) = parts.next().unwrap().parse::<u64>() {
+                pairs.push((name, value));
+            }
         }
     }
 
@@ -87,6 +90,7 @@ mod torture {
                 idle_timeout: Some(Duration::from_secs(30)),
                 request_deadline: Some(Duration::from_secs(30)),
                 faults: Some(plan.clone()),
+                ..Default::default()
             },
         )
         .unwrap();

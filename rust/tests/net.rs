@@ -8,9 +8,16 @@
 //! cases (split reads, frames straddling buffers, malformed commands)
 //! live in the `net::memcached` / `net::resp` unit tests.
 //!
-//! The epoll backend is Linux/x86_64 only, so the server-spawning tests
-//! are gated on that target; elsewhere this file checks that starting
-//! the server reports a clean `Unsupported` error instead.
+//! Every loopback test runs once per event-loop backend — epoll
+//! readiness mode and io_uring completion mode — through
+//! [`each_backend`](loopback::each_backend), so the two paths are held
+//! to byte-identical wire behaviour. On kernels without io_uring the
+//! uring pass is skipped with an explicit notice, never silently.
+//!
+//! The event-loop backends are Linux/x86_64 only, so the
+//! server-spawning tests are gated on that target; elsewhere this file
+//! checks that starting the server reports a clean `Unsupported` error
+//! instead.
 //!
 //! [`Server`]: kway::net::Server
 //! [`CacheService`]: kway::coordinator::CacheService
@@ -54,14 +61,30 @@ mod unsupported {
 mod loopback {
     use super::*;
     use kway::net::loadgen::{self, LoadgenConfig, WireProto};
-    use kway::net::{Server, ServerConfig};
+    use kway::net::{BackendChoice, Server, ServerConfig};
     use std::io::{BufRead, BufReader, Read, Write};
     use std::net::{TcpListener, TcpStream};
 
-    fn start_server(service: Arc<CacheService>) -> Server {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        Server::start(listener, service, ServerConfig { io_threads: 2, ..Default::default() })
-            .unwrap()
+    /// Run `test` against a fresh serving stack once per event-loop
+    /// backend. The epoll pass always runs; the io_uring pass is
+    /// skipped with a notice when the kernel lacks io_uring — an
+    /// explicit skip, never a silent green.
+    pub fn each_backend(make_service: impl Fn() -> Arc<CacheService>, test: impl Fn(&Server)) {
+        for backend in [BackendChoice::Epoll, BackendChoice::Uring] {
+            if backend == BackendChoice::Uring && !kway::net::uring::supported() {
+                eprintln!("skipping uring backend pass: io_uring is unavailable on this kernel");
+                continue;
+            }
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let server = Server::start(
+                listener,
+                make_service(),
+                ServerConfig { io_threads: 2, backend, ..Default::default() },
+            )
+            .unwrap();
+            test(&server);
+            server.stop();
+        }
     }
 
     fn connect(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
@@ -152,6 +175,26 @@ mod loopback {
         data
     }
 
+    /// Read one `gets` response, checking the payload round-trips and
+    /// returning the cas token from the `VALUE <key> <flags> <len>
+    /// <token>` header.
+    fn read_gets_token(reader: &mut BufReader<TcpStream>, key: &str, want: &[u8]) -> u64 {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim_end_matches(['\r', '\n']);
+        let mut parts = header.split(' ');
+        assert_eq!(parts.next(), Some("VALUE"), "bad header {header:?}");
+        assert_eq!(parts.next(), Some(key), "bad header {header:?}");
+        let _flags = parts.next().expect("flags field");
+        let len: usize = parts.next().expect("length field").parse().unwrap();
+        let token: u64 = parts.next().expect("cas token field").parse().unwrap();
+        let mut data = vec![0u8; len + 2];
+        reader.read_exact(&mut data).unwrap();
+        assert_eq!(&data[..len], want, "gets payload must round-trip");
+        expect_lines(reader, &["END"]);
+        token
+    }
+
     /// Read one RESP bulk-string reply, length-driven via the `$len`
     /// prefix.
     fn read_resp_bulk(reader: &mut BufReader<TcpStream>) -> Vec<u8> {
@@ -172,16 +215,27 @@ mod loopback {
 
     #[test]
     fn memcached_full_command_set() {
-        let server = start_server(start_service(None));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(None), memcached_full_command_set_on);
+    }
+
+    fn memcached_full_command_set_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         s.write_all(b"set 7 0 0 2\r\n42\r\n").unwrap();
         expect_lines(&mut r, &["STORED"]);
         s.write_all(b"get 7\r\n").unwrap();
         expect_lines(&mut r, &["VALUE 7 0 2", "42", "END"]);
-        // gets: the cas token is the value itself (documented deviation).
+        // gets: on a word cache the cas token is the stored word itself
+        // (documented deviation).
         s.write_all(b"gets 7\r\n").unwrap();
         expect_lines(&mut r, &["VALUE 7 0 2 42", "42", "END"]);
+        // cas: the live token stores, a stale one reports EXISTS.
+        s.write_all(b"cas 7 0 0 2 42\r\n43\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"cas 7 0 0 2 42\r\n44\r\n").unwrap();
+        expect_lines(&mut r, &["EXISTS"]);
+        s.write_all(b"get 7\r\n").unwrap();
+        expect_lines(&mut r, &["VALUE 7 0 2", "43", "END"]);
         // add: refused on a present key, stored on an absent one.
         s.write_all(b"add 7 0 0 1\r\n9\r\n").unwrap();
         expect_lines(&mut r, &["NOT_STORED"]);
@@ -200,14 +254,15 @@ mod loopback {
         expect_lines(&mut r, &["STORED"]);
         s.write_all(b"get user:alice\r\n").unwrap();
         expect_lines(&mut r, &["VALUE user:alice 0 4", "1234", "END"]);
-
-        server.stop();
     }
 
     #[test]
     fn memcached_pipelined_multiget_is_order_preserving() {
-        let server = start_server(start_service(None));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(None), pipelined_multiget_on);
+    }
+
+    fn pipelined_multiget_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         for k in 1..=6u64 {
             s.write_all(format!("set {k} 0 0 2\r\n1{k}\r\n").as_bytes()).unwrap();
@@ -248,14 +303,15 @@ mod loopback {
         expect_lines(&mut r, &["STORED"]);
         s.write_all(b"get 9\r\n").unwrap();
         expect_lines(&mut r, &["VALUE 9 0 2", "19", "END"]);
-
-        server.stop();
     }
 
     #[test]
     fn memcached_service_ttl_expires_over_the_wire() {
-        let server = start_server(start_service(Some(Duration::from_millis(50))));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(Some(Duration::from_millis(50))), service_ttl_on);
+    }
+
+    fn service_ttl_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         s.write_all(b"set 3 0 0 1\r\n7\r\n").unwrap();
         expect_lines(&mut r, &["STORED"]);
@@ -264,14 +320,15 @@ mod loopback {
         std::thread::sleep(Duration::from_millis(90));
         s.write_all(b"get 3\r\n").unwrap();
         expect_lines(&mut r, &["END"]);
-
-        server.stop();
     }
 
     #[test]
     fn resp_full_command_set() {
-        let server = start_server(start_service(None));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(None), resp_full_command_set_on);
+    }
+
+    fn resp_full_command_set_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         s.write_all(&resp(&["PING"])).unwrap();
         expect_lines(&mut r, &["+PONG"]);
@@ -299,15 +356,16 @@ mod loopback {
         std::thread::sleep(Duration::from_millis(80));
         s.write_all(&resp(&["GET", "8"])).unwrap();
         expect_lines(&mut r, &["$-1"]);
-
-        server.stop();
     }
 
     #[test]
     fn both_protocols_share_one_port() {
-        let server = start_server(start_service(None));
-        let (mut mc, mut mc_r) = connect(&server);
-        let (mut rd, mut rd_r) = connect(&server);
+        each_backend(|| start_service(None), shared_port_on);
+    }
+
+    fn shared_port_on(server: &Server) {
+        let (mut mc, mut mc_r) = connect(server);
+        let (mut rd, mut rd_r) = connect(server);
 
         mc.write_all(b"set 11 0 0 2\r\n66\r\n").unwrap();
         expect_lines(&mut mc_r, &["STORED"]);
@@ -318,14 +376,15 @@ mod loopback {
         expect_lines(&mut rd_r, &["+OK"]);
         mc.write_all(b"get 12\r\n").unwrap();
         expect_lines(&mut mc_r, &["VALUE 12 0 2", "77", "END"]);
-
-        server.stop();
     }
 
     #[test]
     fn recoverable_errors_keep_the_connection() {
-        let server = start_server(start_service(None));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(None), recoverable_errors_on);
+    }
+
+    fn recoverable_errors_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         // Unknown verb: ERROR, then the connection keeps serving.
         s.write_all(b"frobnicate 1 2 3\r\n").unwrap();
@@ -338,14 +397,15 @@ mod loopback {
         assert!(line.starts_with("CLIENT_ERROR"), "got {line:?}");
         s.write_all(b"set 2 0 0 1\r\n5\r\nget 2\r\n").unwrap();
         expect_lines(&mut r, &["STORED", "VALUE 2 0 1", "5", "END"]);
-
-        server.stop();
     }
 
     #[test]
     fn fatal_protocol_error_answers_then_closes() {
-        let server = start_server(start_service(None));
-        let (mut s, mut r) = connect(&server);
+        each_backend(|| start_service(None), fatal_error_on);
+    }
+
+    fn fatal_error_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         // An unparseable byte count cannot be re-framed: the decoder
         // cannot know where the data block ends, so the server answers
@@ -357,14 +417,15 @@ mod loopback {
         let mut rest = Vec::new();
         r.read_to_end(&mut rest).unwrap();
         assert!(rest.is_empty(), "connection must be closed after a fatal error");
-
-        server.stop();
     }
 
     #[test]
     fn memcached_binary_payloads_are_length_framed() {
-        let server = start_server(start_byte_service());
-        let (mut s, mut r) = connect(&server);
+        each_backend(start_byte_service, binary_payloads_on);
+    }
+
+    fn binary_payloads_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         // Payloads chosen to break any CRLF-scanning decoder: embedded
         // line endings, NULs, and memcached's own framing vocabulary.
@@ -389,14 +450,15 @@ mod loopback {
         let mut version = String::new();
         r.read_line(&mut version).unwrap();
         assert!(version.starts_with("VERSION"), "got {version:?}");
-
-        server.stop();
     }
 
     #[test]
     fn resp_binary_payloads_round_trip() {
-        let server = start_server(start_byte_service());
-        let (mut s, mut r) = connect(&server);
+        each_backend(start_byte_service, resp_binary_payloads_on);
+    }
+
+    fn resp_binary_payloads_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
 
         let hostile: [&[u8]; 3] = [b"\r\n\r\n", b"\0binary\0", b"*2\r\n$3\r\nGET\r\n"];
         for (i, payload) in hostile.iter().enumerate() {
@@ -413,15 +475,16 @@ mod loopback {
         expect_lines(&mut r, &["$0", ""]);
         s.write_all(&resp(&["GET", "nosuch"])).unwrap();
         expect_lines(&mut r, &["$-1"]);
-
-        server.stop();
     }
 
     #[test]
     fn megabyte_blob_round_trips_both_protocols() {
-        let server = start_server(start_byte_service());
-        let (mut mc, mut mc_r) = connect(&server);
-        let (mut rd, mut rd_r) = connect(&server);
+        each_backend(start_byte_service, megabyte_blob_on);
+    }
+
+    fn megabyte_blob_on(server: &Server) {
+        let (mut mc, mut mc_r) = connect(server);
+        let (mut rd, mut rd_r) = connect(server);
 
         let payload = blob(0xB10B, kway::net::MAX_VALUE_LEN);
         assert!(payload.windows(2).any(|w| w == b"\r\n"), "blob must contain CRLF");
@@ -460,21 +523,92 @@ mod loopback {
         let mut rest = Vec::new();
         mc_r.read_to_end(&mut rest).unwrap();
         assert!(rest.is_empty(), "oversize count is fatal: connection must close");
-
-        server.stop();
     }
 
     #[test]
     fn loadgen_smoke_both_protocols() {
-        let server = start_server(start_service(None));
-        let addr = server.local_addr().to_string();
-        for proto in [WireProto::Memcached, WireProto::Resp] {
-            let result = loadgen::run(&LoadgenConfig::smoke(&addr, proto)).unwrap();
-            assert!(result.ops > 0, "{}: no requests completed", proto.name());
-            assert_eq!(result.errors, 0, "{}: wire errors", proto.name());
-            assert!(result.sets > 0 && result.gets > 0);
-            assert!(result.p99_ns >= result.p50_ns);
+        each_backend(|| start_service(None), |server| {
+            let addr = server.local_addr().to_string();
+            for proto in [WireProto::Memcached, WireProto::Resp] {
+                let result = loadgen::run(&LoadgenConfig::smoke(&addr, proto)).unwrap();
+                assert!(result.ops > 0, "{}: no requests completed", proto.name());
+                assert_eq!(result.errors, 0, "{}: wire errors", proto.name());
+                assert!(result.sets > 0 && result.gets > 0);
+                assert!(result.p99_ns >= result.p50_ns);
+            }
+        });
+    }
+
+    /// cas on a byte cache: the token `gets` hands out is the entry's
+    /// generation-stamped slab handle, so replacing the value rotates
+    /// it and a stale token loses with EXISTS.
+    #[test]
+    fn memcached_cas_over_the_wire() {
+        each_backend(start_byte_service, cas_over_the_wire_on);
+    }
+
+    fn cas_over_the_wire_on(server: &Server) {
+        let (mut s, mut r) = connect(server);
+        s.write_all(b"set k 0 0 5\r\nhello\r\n").unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"gets k\r\n").unwrap();
+        let token = read_gets_token(&mut r, "k", b"hello");
+        // The live token wins and the store is visible.
+        s.write_all(format!("cas k 0 0 5 {token}\r\nworld\r\n").as_bytes()).unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get k\r\n").unwrap();
+        assert_eq!(read_mc_value(&mut r, "k"), b"world");
+        // The replaced entry carries a fresh token: the old one loses.
+        s.write_all(format!("cas k 0 0 2 {token}\r\nxx\r\n").as_bytes()).unwrap();
+        expect_lines(&mut r, &["EXISTS"]);
+        s.write_all(format!("cas nosuch 0 0 2 {token}\r\nxx\r\n").as_bytes()).unwrap();
+        expect_lines(&mut r, &["NOT_FOUND"]);
+        s.write_all(b"gets k\r\n").unwrap();
+        let token2 = read_gets_token(&mut r, "k", b"world");
+        assert_ne!(token, token2, "replacing the value must rotate the cas token");
+        s.write_all(format!("cas k 0 0 2 {token2}\r\nhi\r\n").as_bytes()).unwrap();
+        expect_lines(&mut r, &["STORED"]);
+        s.write_all(b"get k\r\n").unwrap();
+        assert_eq!(read_mc_value(&mut r, "k"), b"hi");
+    }
+
+    /// `--backend auto` always resolves to a concrete backend and
+    /// serves; which one depends on the running kernel.
+    #[test]
+    fn auto_backend_resolves_and_serves() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = Server::start(
+            listener,
+            start_service(None),
+            ServerConfig { io_threads: 1, backend: BackendChoice::Auto, ..Default::default() },
+        )
+        .unwrap();
+        assert!(matches!(server.backend(), BackendChoice::Epoll | BackendChoice::Uring));
+        if kway::net::uring::supported() {
+            assert_eq!(server.backend(), BackendChoice::Uring, "auto must prefer uring");
         }
+        let (mut s, mut r) = connect(&server);
+        s.write_all(b"set 1 0 0 1\r\n5\r\nget 1\r\n").unwrap();
+        expect_lines(&mut r, &["STORED", "VALUE 1 0 1", "5", "END"]);
         server.stop();
+    }
+
+    /// An explicit `--backend uring` on a kernel without io_uring must
+    /// fail loudly instead of silently falling back; only observable
+    /// where the probe actually fails.
+    #[test]
+    fn explicit_uring_without_kernel_support_fails_fast() {
+        if kway::net::uring::supported() {
+            eprintln!("skipping: io_uring is available, the explicit-uring failure can't fire");
+            return;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = Server::start(
+            listener,
+            start_service(None),
+            ServerConfig { backend: BackendChoice::Uring, ..Default::default() },
+        )
+        .expect_err("explicit uring must not silently fall back");
+        assert_eq!(err.kind(), std::io::ErrorKind::Unsupported);
     }
 }
